@@ -1,0 +1,12 @@
+// standalone profile driver: run many batches
+use ddr4bench::config::{DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+fn main() {
+    let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    for _ in 0..12 {
+        let s = p.run_batch(0, &PatternConfig::seq_read_burst(32, 4096)).unwrap();
+        std::hint::black_box(s.read_throughput_gbs());
+        let s = p.run_batch(0, &PatternConfig::rnd_read_burst(1, 4096, 3)).unwrap();
+        std::hint::black_box(s.read_throughput_gbs());
+    }
+}

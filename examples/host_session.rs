@@ -1,0 +1,61 @@
+//! Interactive host-controller session (§II-C): drives the platform the
+//! exact way the paper's host PC does over UART — configuration commands
+//! in, statistics out.
+//!
+//! ```text
+//! cargo run --release --example host_session                 # scripted session
+//! cargo run --release --example host_session -- --tcp 127.0.0.1:5557
+//! ```
+//!
+//! In scripted mode the example replays a benchmarking session over the
+//! in-memory UART and prints the transcript; with `--tcp` it serves one
+//! real session (`nc 127.0.0.1 5557`, then type `HELP`).
+
+use ddr4bench::config::{DesignConfig, SpeedBin};
+use ddr4bench::hostctrl::{serve_tcp, HostController};
+use ddr4bench::platform::Platform;
+
+const SCRIPT: &[&str] = &[
+    "HELP",
+    "INFO",
+    // channel 0: sequential medium-burst reads
+    "CFG 0 OP=R ADDR=SEQ BURST=32 TYPE=INCR SIG=NB BATCH=4096",
+    "RUN 0",
+    "STATS 0",
+    // reconfigure at run time: random single-transaction writes
+    "CFG 0 OP=W ADDR=RND SEED=42 BURST=1 BATCH=2048",
+    "RUN 0",
+    "STATS 0",
+    // mixed workload with verification on
+    "CFG 0 OP=M RDPCT=50 ADDR=SEQ BURST=128 BATCH=1024 VERIFY=1",
+    "RUN 0",
+    "STATS 0",
+    "RESET 0",
+    "QUIT",
+];
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+    let host = HostController::new(Platform::new(design));
+
+    if let Some(pos) = args.iter().position(|a| a == "--tcp") {
+        let addr = args.get(pos + 1).map(String::as_str).unwrap_or("127.0.0.1:5557");
+        println!("serving one host session on {addr} (connect with `nc`)");
+        serve_tcp(host, addr, Some(1))?;
+        return Ok(());
+    }
+
+    // Scripted UART session: feed the command lines through the same
+    // serve() loop a serial link would drive.
+    let mut host = host;
+    let input = SCRIPT.join("\n") + "\n";
+    let mut output = Vec::new();
+    host.serve(std::io::Cursor::new(input.into_bytes()), &mut output)?;
+    let transcript = String::from_utf8(output)?;
+    for (cmd, resp) in SCRIPT.iter().zip(transcript.lines()) {
+        println!("> {cmd}");
+        println!("< {resp}\n");
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Design-space exploration across the platform's design-time axes:
+//! channel count (1–3, the XCKU115 limit) × memory data rate (the four
+//! JEDEC bins) — the "flexible memory setup" contribution of the paper.
+//!
+//! ```text
+//! cargo run --release --example multi_channel
+//! ```
+//!
+//! For every design point the example instantiates a fresh platform,
+//! runs the best-case pattern (sequential medium-burst reads) plus a
+//! mixed workload on all channels concurrently, and reports aggregate
+//! throughput and the modeled FPGA resource cost — the throughput/area
+//! trade-off a deployment would weigh.
+
+use ddr4bench::config::{AddrMode, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+use ddr4bench::report::Table;
+use ddr4bench::resource;
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Design-space exploration: channels x data rate",
+        &[
+            "Channels",
+            "Data rate",
+            "Seq-R GB/s",
+            "Mixed GB/s",
+            "LUT",
+            "BRAM",
+            "GB/s per kLUT",
+        ],
+    );
+    for channels in 1..=3usize {
+        for speed in SpeedBin::ALL {
+            let design = DesignConfig::with_channels(channels, speed);
+            let cost = resource::design_cost(&design);
+            let mut platform = Platform::new(design);
+
+            let read = PatternConfig::seq_read_burst(32, 2048);
+            let per = platform.run_batch_all(&read)?;
+            let seq_r = Platform::aggregate(&per).read_throughput_gbs();
+
+            let mixed = PatternConfig::mixed(AddrMode::Sequential, 128, 1024);
+            let per = platform.run_batch_all(&mixed)?;
+            let mix = Platform::aggregate(&per).total_throughput_gbs();
+
+            t.row(vec![
+                channels.to_string(),
+                speed.to_string(),
+                format!("{seq_r:.2}"),
+                format!("{mix:.2}"),
+                format!("{:.0}", cost.lut),
+                format!("{}", cost.bram),
+                format!("{:.3}", seq_r / (cost.lut / 1000.0)),
+            ]);
+        }
+    }
+    println!("{}", t.ascii());
+
+    // Sanity: the paper's scaling claim — triple channel = 3x single.
+    let single = Platform::new(DesignConfig::with_channels(1, SpeedBin::Ddr4_2400))
+        .run_batch_all(&PatternConfig::seq_read_burst(32, 2048))?;
+    let triple = Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_2400))
+        .run_batch_all(&PatternConfig::seq_read_burst(32, 2048))?;
+    let s = Platform::aggregate(&single).read_throughput_gbs();
+    let tr = Platform::aggregate(&triple).read_throughput_gbs();
+    println!("triple/single @ DDR4-2400: {:.2}x (paper: 3x)", tr / s);
+    Ok(())
+}

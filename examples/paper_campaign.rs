@@ -1,0 +1,102 @@
+//! The paper's full experimental campaign, end to end: regenerates every
+//! table and figure of the evaluation section and writes the CSVs.
+//!
+//! ```text
+//! cargo run --release --example paper_campaign             # full scale
+//! cargo run --release --example paper_campaign -- --scale 0.2
+//! cargo run --release --example paper_campaign -- --only table4,fig2
+//! ```
+//!
+//! This is the end-to-end driver recorded in EXPERIMENTS.md: it exercises
+//! the whole stack (host-controller-style batch executive → traffic
+//! generators → memory controller → DDR4 device model, with the XLA data
+//! path when artifacts exist) on the paper's workload grid and reports
+//! the paper's headline metric (throughput in GB/s per configuration).
+
+use ddr4bench::cli::Cli;
+use ddr4bench::report::{campaign, Table};
+use ddr4bench::resource;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("paper_campaign", "regenerate every paper table/figure")
+        .option("scale", "campaign scale factor (default 1.0)")
+        .option("only", "comma-separated subset: table3,table4,fig2,fig3,scaling,analysis,modelcheck")
+        .option("outdir", "CSV output directory (default results)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(help) => {
+            println!("{help}");
+            return Ok(());
+        }
+    };
+    let scale: f64 = args.parse_or("scale", 1.0).map_err(anyhow::Error::msg)?;
+    let outdir = std::path::PathBuf::from(args.get_or("outdir", "results"));
+    std::fs::create_dir_all(&outdir)?;
+    let only: Option<Vec<String>> =
+        args.get("only").map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    let want = |name: &str| only.as_ref().map_or(true, |v| v.iter().any(|x| x == name));
+    let t0 = std::time::Instant::now();
+
+    if want("table3") {
+        let mut t = Table::new(
+            "Table III: FPGA resource utilization (modeled)",
+            &["Component/Design", "LUT", "FF", "BRAM", "DSP"],
+        );
+        for row in resource::table3() {
+            t.row(vec![
+                row.name,
+                format!("{:.0}", row.res.lut),
+                format!("{:.0}", row.res.ff),
+                format!("{}", row.res.bram),
+                format!("{:.0}", row.res.dsp),
+            ]);
+        }
+        println!("{}", t.ascii());
+        t.write_csv(&outdir.join("table3.csv"))?;
+    }
+
+    if want("table4") {
+        let (t, _) = campaign::table4(scale);
+        println!("{}", t.ascii());
+        t.write_csv(&outdir.join("table4.csv"))?;
+    }
+
+    if want("fig2") {
+        for (i, fig) in campaign::fig2(scale).into_iter().enumerate() {
+            println!("{}", fig.ascii());
+            std::fs::write(
+                outdir.join(format!("fig2_{}.csv", if i == 0 { "1600" } else { "2400" })),
+                fig.csv(),
+            )?;
+        }
+    }
+
+    if want("fig3") {
+        let t = campaign::fig3(scale);
+        println!("{}", t.ascii());
+        t.write_csv(&outdir.join("fig3.csv"))?;
+    }
+
+    if want("scaling") {
+        let t = campaign::scaling(scale);
+        println!("{}", t.ascii());
+        t.write_csv(&outdir.join("scaling.csv"))?;
+    }
+
+    if want("analysis") {
+        let t = campaign::analysis(scale);
+        println!("{}", t.ascii());
+        t.write_csv(&outdir.join("analysis.csv"))?;
+    }
+
+    if want("modelcheck") {
+        let (t, mae) = campaign::model_check(scale);
+        println!("{}", t.ascii());
+        println!("analytic-model mean absolute relative error vs simulator: {:.1}%\n", mae * 100.0);
+        t.write_csv(&outdir.join("modelcheck.csv"))?;
+    }
+
+    println!("campaign done in {:.1}s; CSVs in {}", t0.elapsed().as_secs_f64(), outdir.display());
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Profiling driver for the §Perf pass (EXPERIMENTS.md): runs a fixed
+//! mix of saturated sequential bursts and random singles so
+//! `perf record -g ./target/release/examples/profile_driver` captures a
+//! representative hot-path distribution without bench-harness noise.
+
+use ddr4bench::config::{DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+
+fn main() {
+    let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    for _ in 0..12 {
+        let s = p.run_batch(0, &PatternConfig::seq_read_burst(32, 4096)).unwrap();
+        std::hint::black_box(s.read_throughput_gbs());
+        let s = p.run_batch(0, &PatternConfig::rnd_read_burst(1, 4096, 3)).unwrap();
+        std::hint::black_box(s.read_throughput_gbs());
+    }
+}

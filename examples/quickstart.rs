@@ -1,0 +1,73 @@
+//! Quickstart: instantiate the platform, run a handful of traffic
+//! patterns, and print the statistics a host PC would collect.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT XLA artifacts when present (`make artifacts`) so payload
+//! generation/verification run through PJRT; falls back to the pure-Rust
+//! mirror otherwise.
+
+use ddr4bench::config::{AddrMode, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+use ddr4bench::runtime::XlaRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // Design time: one channel of DDR4-1600 (PHY 800 MHz / AXI 200 MHz).
+    let design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+    let mut platform = Platform::new(design);
+
+    let dir = ddr4bench::artifacts_dir();
+    if XlaRuntime::artifacts_present(&dir) {
+        let rt = XlaRuntime::load(&dir)?;
+        println!("XLA runtime loaded ({})\n", rt.platform());
+        platform = platform.with_runtime(rt);
+    } else {
+        println!("(artifacts not built; using the pure-Rust data path)\n");
+    }
+
+    // Run time: a few representative patterns, all reconfigured on the
+    // fly — no "resynthesis" needed (the paper's Table I split).
+    let patterns: Vec<(&str, PatternConfig)> = vec![
+        ("sequential read, medium bursts (32)", PatternConfig::seq_read_burst(32, 4096)),
+        ("sequential write, medium bursts (32)", PatternConfig::seq_write_burst(32, 4096)),
+        ("random read, single transactions", PatternConfig::rnd_read_burst(1, 2048, 7)),
+        ("random write, short bursts (4)", PatternConfig::rnd_write_burst(4, 2048, 7)),
+        ("mixed 50/50, sequential, long bursts (128)",
+         PatternConfig::mixed(AddrMode::Sequential, 128, 1024)),
+    ];
+
+    println!("{:<46} {:>8} {:>8} {:>8} {:>10}", "pattern", "rd GB/s", "wr GB/s", "total", "lat (ns)");
+    for (name, cfg) in &patterns {
+        let stats = platform.run_batch(0, cfg)?;
+        println!(
+            "{:<46} {:>8.2} {:>8.2} {:>8.2} {:>10.0}",
+            name,
+            stats.read_throughput_gbs(),
+            stats.write_throughput_gbs(),
+            stats.total_throughput_gbs(),
+            stats.read_latency_ns().max(stats.write_latency_ns()),
+        );
+    }
+
+    // Data integrity (the paper's differentiator vs. Shuhai): write a
+    // region with PRBS payloads, read it back, verify.
+    println!("\ndata integrity check:");
+    let region = 1024 * 4 * 32;
+    let mut w = PatternConfig::seq_write_burst(4, 1024);
+    w.verify = true;
+    w.region_bytes = region;
+    platform.run_batch(0, &w)?;
+    let mut r = PatternConfig::seq_read_burst(4, 1024);
+    r.verify = true;
+    r.region_bytes = region;
+    let clean = platform.run_batch(0, &r)?;
+    println!("  clean read-back:    {} mismatches", clean.counters.mismatches);
+    platform.corrupt(0, 128, 3, 0x1);
+    let dirty = platform.run_batch(0, &r)?;
+    println!("  after fault inject: {} mismatches (detected)", dirty.counters.mismatches);
+    assert_eq!(clean.counters.mismatches, 0);
+    assert!(dirty.counters.mismatches > 0);
+    Ok(())
+}

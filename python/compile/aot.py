@@ -1,0 +1,90 @@
+"""AOT compiler: lower the L2/L1 computations to HLO-text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file``, compiles on the PJRT CPU
+client, and executes — Python is never on the benchmark path.
+
+HLO *text* (not serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids, so text round-trips cleanly.
+
+Artifacts (shapes fixed here; Rust chunks/pads — ``runtime/mod.rs``):
+
+========================  =========================================
+``datagen.hlo.txt``       u32[4096] seeds -> (u32[4096,16],)
+``verify.hlo.txt``        u32[4096], u32[4096,16] -> (u32[1],)
+``bwmodel.hlo.txt``       f32[64,8] features -> (f32[64],)
+========================  =========================================
+
+Usage: ``python -m compile.aot --out ../artifacts`` (any target dir).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO module → XlaComputation → HLO text (see module docs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_datagen():
+    """Lower the payload-generation artifact."""
+    seeds = jax.ShapeDtypeStruct((model.DATAGEN_BLOCK,), jnp.uint32)
+    return to_hlo_text(jax.jit(lambda s: (model.datagen_block(s),)).lower(seeds))
+
+
+def lower_verify():
+    """Lower the read-back-verification artifact."""
+    seeds = jax.ShapeDtypeStruct((model.DATAGEN_BLOCK,), jnp.uint32)
+    data = jax.ShapeDtypeStruct((model.DATAGEN_BLOCK, 16), jnp.uint32)
+    return to_hlo_text(jax.jit(lambda s, d: (model.verify_block(s, d),)).lower(seeds, data))
+
+
+def lower_bwmodel():
+    """Lower the analytic bandwidth-model artifact."""
+    feats = jax.ShapeDtypeStruct((model.BWMODEL_BLOCK, model.BWMODEL_FEATURES), jnp.float32)
+    return to_hlo_text(jax.jit(lambda f: (model.bw_model(f),)).lower(feats))
+
+
+ARTIFACTS = {
+    "datagen.hlo.txt": lower_datagen,
+    "verify.hlo.txt": lower_verify,
+    "bwmodel.hlo.txt": lower_bwmodel,
+}
+
+
+def build(out_dir):
+    """Lower every artifact into ``out_dir``; returns written paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, lower in ARTIFACTS.items():
+        text = lower()
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"wrote {len(text):>9} chars to {path}")
+    return written
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = parser.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

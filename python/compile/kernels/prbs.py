@@ -1,0 +1,103 @@
+"""L1 Pallas kernels: the traffic generator's data path.
+
+Two kernels, both tiled over blocks of seeds (one seed = one 64-byte DRAM
+burst = 16 uint32 words):
+
+- :func:`expand` — PRBS payload generation: each grid program expands a
+  ``(BLOCK,)`` tile of seeds into a ``(BLOCK, 16)`` tile of words by 16
+  unrolled xorshift32 steps. This is the hardware-adapted form of the RTL
+  TG's per-lane LFSRs: the BlockSpec HBM↔VMEM schedule plays the role of
+  the RTL's per-beat streaming, and the 16-step unroll is the parallel
+  lane bank (DESIGN.md §8).
+- :func:`verify_counts` — read-back checking: expands the seed tile,
+  compares against the observed data tile, and reduces a per-program
+  mismatch count.
+
+Both MUST be lowered with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls (real-TPU lowering); interpret mode lowers to
+plain HLO that runs anywhere, and numerics are identical.
+
+VMEM budget per program (BLOCK=512): seeds 2 KiB in + words 32 KiB out +
+one 2 KiB live lane register ≈ 36 KiB ≪ the ~16 MiB VMEM of a TPU core,
+leaving headroom to scale BLOCK to 64Ki rows if this were compiled for
+real hardware (DESIGN.md §8 records the estimate).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows (seeds) per grid program.
+BLOCK = 512
+
+# Words per burst, re-exported for the model layer.
+WORDS_PER_BURST = ref.WORDS_PER_BURST
+
+
+def _expand_kernel(seeds_ref, out_ref):
+    """Grid program: expand one (BLOCK,) seed tile to (BLOCK, 16) words."""
+    s = seeds_ref[...]
+    # Zero-seed remap to 0x9E3779B9, built from in-range python literals
+    # (pallas kernels may not capture array constants, and a bare
+    # 0x9E3779B9 literal overflows the weak int32 type).
+    zero = (s == 0).astype(jnp.uint32)
+    s = s + zero * 0x79B9 + ((zero * 0x9E37) << 16)
+    # 16 unrolled xorshift32 steps — the RTL's parallel LFSR lane bank.
+    for i in range(WORDS_PER_BURST):
+        s = s ^ (s << 13)
+        s = s ^ (s >> 17)
+        s = s ^ (s << 5)
+        out_ref[:, i] = s
+
+
+def expand(seeds):
+    """Expand ``seeds`` (uint32 [n], n a multiple of BLOCK) to [n, 16]."""
+    n = seeds.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of BLOCK={BLOCK}"
+    return pl.pallas_call(
+        _expand_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK, WORDS_PER_BURST), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, WORDS_PER_BURST), jnp.uint32),
+        interpret=True,
+    )(seeds.astype(jnp.uint32))
+
+
+def _verify_kernel(seeds_ref, data_ref, out_ref):
+    """Grid program: per-tile mismatch count between expansion and data."""
+    s = seeds_ref[...]
+    zero = (s == 0).astype(jnp.uint32)
+    s = s + zero * 0x79B9 + ((zero * 0x9E37) << 16)
+    mism = None
+    for i in range(WORDS_PER_BURST):
+        s = s ^ (s << 13)
+        s = s ^ (s >> 17)
+        s = s ^ (s << 5)
+        step = jnp.sum(s != data_ref[:, i], dtype=jnp.uint32)
+        mism = step if mism is None else mism + step
+    out_ref[0] = mism
+
+
+def verify_counts(seeds, data):
+    """Per-program mismatch counts, uint32 [n / BLOCK].
+
+    ``data`` is uint32 [n, 16]; sum the result for the total count (the
+    model layer does that so the whole reduction stays in one HLO).
+    """
+    n = seeds.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of BLOCK={BLOCK}"
+    assert data.shape == (n, WORDS_PER_BURST)
+    return pl.pallas_call(
+        _verify_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK, WORDS_PER_BURST), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // BLOCK,), jnp.uint32),
+        interpret=True,
+    )(seeds.astype(jnp.uint32), data.astype(jnp.uint32))

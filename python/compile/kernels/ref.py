@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracle for the PRBS data-path kernels.
+
+This module is the *specification*: the Pallas kernels in ``prbs.py`` must
+match it bit-for-bit (pytest + hypothesis enforce that), and the Rust
+mirror (``rust/src/trafficgen/payload.rs``) pins the same constants, so
+all three implementations of the traffic generator's data path agree.
+
+The data path (paper §II-B, the differentiator vs. Shuhai's all-zeros
+writes):
+
+1. every 64-byte DRAM burst gets a 32-bit seed derived from its byte
+   address and the pattern seed (:func:`burst_seed_ref`);
+2. the seed expands to the burst's 16 data words by 16 xorshift32 steps
+   (:func:`expand_ref`) — non-zero by construction;
+3. verification recomputes the expansion and counts mismatching words
+   (:func:`verify_ref`).
+"""
+
+import jax.numpy as jnp
+
+# Words per 64-byte DRAM burst (16 x u32).
+WORDS_PER_BURST = 16
+
+# Non-zero remap constant for zero seeds (2^32 / golden ratio).
+_SEED_REMAP = jnp.uint32(0x9E3779B9)
+
+
+def xorshift32_step(x):
+    """One xorshift32 step (Marsaglia 13/17/5 triple) on uint32 arrays."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x
+
+
+def expand_ref(seeds):
+    """Expand ``seeds`` (uint32 [n]) to payload words (uint32 [n, 16]).
+
+    Zero seeds are remapped to a fixed non-zero constant first, matching
+    the Rust ``Xorshift32::new`` remap, so the expansion never yields an
+    all-zero stream.
+    """
+    s = jnp.asarray(seeds, jnp.uint32)
+    s = jnp.where(s == 0, _SEED_REMAP, s)
+    words = []
+    for _ in range(WORDS_PER_BURST):
+        s = xorshift32_step(s)
+        words.append(s)
+    return jnp.stack(words, axis=-1)
+
+
+def verify_ref(seeds, data):
+    """Mismatch count between ``expand_ref(seeds)`` and ``data`` [n, 16]."""
+    expected = expand_ref(seeds)
+    return jnp.sum(expected != jnp.asarray(data, jnp.uint32), dtype=jnp.uint32)
+
+
+def burst_seed_ref(burst_indices, pattern_seed):
+    """Per-burst seed hash (Murmur3-finalizer mix), uint32 [n].
+
+    ``burst_indices`` are byte addresses divided by 64 (the Rust side does
+    the shift before handing seeds to XLA, keeping everything in u32 here
+    without enabling x64). Mirrors ``payload::burst_seed`` in Rust — the
+    pinned-value tests in ``python/tests/test_kernels.py`` keep the two in
+    lockstep.
+    """
+    idx = jnp.asarray(burst_indices, jnp.uint32)
+    ps = jnp.uint32(pattern_seed)
+    rot = (ps << 16) | (ps >> 16)
+    h = idx ^ rot
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return jnp.where(h == 0, _SEED_REMAP, h)

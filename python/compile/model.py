@@ -1,0 +1,148 @@
+"""L2 JAX model layer: the computations that get AOT-lowered to HLO.
+
+Three entry points, each lowered by ``aot.py`` into one artifact the Rust
+runtime executes via PJRT (shapes are fixed at lowering time; the Rust
+wrappers chunk and pad — see ``rust/src/runtime/mod.rs``):
+
+- :func:`datagen_block` — PRBS payload generation for one block of burst
+  seeds (wraps the L1 Pallas kernel :func:`compile.kernels.prbs.expand`).
+- :func:`verify_block` — read-back verification: total mismatch count
+  between the expansion of the seeds and the observed data (wraps the L1
+  Pallas kernel, reduces its per-program counts in the same HLO).
+- :func:`bw_model` — the closed-form DDR4 bandwidth model, vectorized
+  over configuration rows (pure jnp; mirrors
+  ``rust/src/analytic/predict_gbs`` — the cross-check tests in
+  ``rust/tests/runtime_artifacts.rs`` and ``python/tests/test_model.py``
+  keep the two in lockstep).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import prbs
+
+# Block sizes baked into the artifacts (mirrored by rust/src/runtime).
+DATAGEN_BLOCK = 4096
+BWMODEL_BLOCK = 64
+BWMODEL_FEATURES = 8
+
+
+def datagen_block(seeds):
+    """Expand a block of burst seeds to payload words.
+
+    Args:
+      seeds: uint32 [DATAGEN_BLOCK].
+
+    Returns:
+      uint32 [DATAGEN_BLOCK, 16].
+    """
+    return prbs.expand(seeds)
+
+
+def verify_block(seeds, data):
+    """Total mismatch count between ``expand(seeds)`` and ``data``.
+
+    Args:
+      seeds: uint32 [DATAGEN_BLOCK].
+      data: uint32 [DATAGEN_BLOCK, 16].
+
+    Returns:
+      uint32 [1] (kept rank-1 so the Rust side reads it with ``to_vec``).
+    """
+    counts = prbs.verify_counts(seeds, data)
+    return jnp.sum(counts, dtype=jnp.uint32).reshape((1,))
+
+
+def _ceil_ck(ns, tck_ns, min_ck):
+    """JEDEC ns→nCK conversion: ceil with an nCK floor.
+
+    The epsilon guards exact-boundary quotients (e.g. 7.5 ns / 1.25 ns):
+    the xla_extension 0.5.1 CPU backend lowers f32 division through an
+    approximate reciprocal, which can land 6.0 at 6.0000001 and push the
+    ceil to 7 — off-by-one versus the Rust f64 mirror.
+    """
+    return jnp.maximum(jnp.ceil(ns / tck_ns - 1e-4), float(min_ck))
+
+
+def _timing(rate_mts):
+    """Speed-bin timing table, vectorized over the data-rate column.
+
+    Mirrors ``TimingParams::for_bin`` for the four bins of the paper.
+    """
+    tck = 2000.0 / rate_mts
+    # CL/CWL per bin (nCK by definition).
+    cl = jnp.select(
+        [rate_mts <= 1700.0, rate_mts <= 2000.0, rate_mts <= 2250.0],
+        [11.0, 13.0, 15.0],
+        16.0,
+    )
+    cwl = jnp.select(
+        [rate_mts <= 1700.0, rate_mts <= 2000.0, rate_mts <= 2250.0],
+        [9.0, 10.0, 11.0],
+        12.0,
+    )
+    trcd = cl
+    trp = cl
+    trtp = _ceil_ck(7.5, tck, 4)
+    twr = _ceil_ck(15.0, tck, 0)
+    twtr_l = _ceil_ck(7.5, tck, 4)
+    trfc = _ceil_ck(260.0, tck, 0)
+    trefi = _ceil_ck(7800.0, tck, 0)
+    return dict(
+        tck=tck, cl=cl, cwl=cwl, trcd=trcd, trp=trp, trtp=trtp, twr=twr,
+        twtr_l=twtr_l, trfc=trfc, trefi=trefi, burst=4.0,
+    )
+
+
+def _direction_gbs(f, t, is_read):
+    """One direction's throughput in GB/s (mirrors analytic::direction_gbs).
+
+    Random accesses pay the page-miss pipeline flush once per transaction
+    (PRE + ACT + CAS + data + recovery), partially hidden behind the
+    transaction's own CAS stream — long bursts hide it entirely.
+    """
+    rate, blen, random, _, beat, interval, lookahead, outstanding = f
+    del rate, lookahead, outstanding  # folded into the flush model
+    axi_ns = t["tck"] * 4.0
+    txn_bytes = blen * beat
+    dbpt = jnp.maximum(txn_bytes / 64.0, 1.0)
+
+    fabric = beat / axi_ns
+    addr = txn_bytes / (interval * axi_ns)
+    service_ck = dbpt * t["burst"]
+
+    flush = t["trp"] + t["trcd"] + jnp.where(
+        is_read,
+        t["cl"] + t["burst"] + t["trp"],
+        t["cwl"] + t["burst"] + t["twr"] + t["twtr_l"],
+    )
+    hidden = (dbpt - 1.0) * 4.0  # tCCD_S per extra burst
+    service_rnd = service_ck + jnp.maximum(flush - hidden, 0.0)
+
+    dram_seq = txn_bytes / (service_ck * t["tck"])
+    dram_rnd = txn_bytes / (service_rnd * t["tck"])
+    dram = jnp.where(random > 0.5, dram_rnd, dram_seq)
+    return jnp.minimum(jnp.minimum(fabric, addr), dram)
+
+
+def bw_model(feats):
+    """Predicted throughput (GB/s, f32 [BWMODEL_BLOCK]) per feature row.
+
+    Feature columns (``analytic::BwFeatures::to_row`` order):
+    ``[data_rate_mts, burst_len, random, read_frac, beat_bytes,
+    addr_interval, lookahead, outstanding]``. The operation mix is derived
+    from ``read_frac``: 1.0 = read-only, 0.0 = write-only, else mixed.
+    """
+    feats = jnp.asarray(feats, jnp.float32)
+    cols = [feats[:, i] for i in range(BWMODEL_FEATURES)]
+    rate, _, _, read_frac = cols[0], cols[1], cols[2], cols[3]
+    t = _timing(rate)
+
+    rd = _direction_gbs(cols, t, jnp.asarray(True))
+    wr = _direction_gbs(cols, t, jnp.asarray(False))
+
+    dram_bus = 64.0 / (t["burst"] * t["tck"])
+    mixed = jnp.minimum(rd * jnp.maximum(read_frac, 0.01) + wr * jnp.maximum(1.0 - read_frac, 0.01),
+                        dram_bus * 0.85)
+    gbs = jnp.where(read_frac >= 0.999, rd, jnp.where(read_frac <= 0.001, wr, mixed))
+    refresh_derate = 1.0 - t["trfc"] / t["trefi"]
+    return (gbs * refresh_derate).astype(jnp.float32)

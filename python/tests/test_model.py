@@ -1,0 +1,108 @@
+"""L2 model-layer tests: block wrappers and the analytic bandwidth model.
+
+The bandwidth model's *shape* assertions mirror the paper's §III-C
+analysis (sequential saturates, random recovers with burst length, higher
+data rates help sequential more) — the same properties the Rust simulator
+reproduces, so model, simulator and paper stay mutually consistent.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def feats(rate=1600, blen=32, random=0.0, read_frac=1.0,
+          beat=32, interval=2, lookahead=4, outstanding=8):
+    row = np.zeros((model.BWMODEL_BLOCK, model.BWMODEL_FEATURES), np.float32)
+    row[0] = [rate, blen, random, read_frac, beat, interval, lookahead, outstanding]
+    return row
+
+
+def predict(**kw):
+    return float(np.asarray(model.bw_model(feats(**kw)))[0])
+
+
+# ------------------------------------------------------------- datagen/verify
+
+def test_datagen_block_matches_ref():
+    seeds = np.arange(model.DATAGEN_BLOCK, dtype=np.uint32)
+    out = np.asarray(model.datagen_block(jnp.asarray(seeds)))
+    np.testing.assert_array_equal(out, np.asarray(ref.expand_ref(seeds)))
+
+
+def test_verify_block_scalar_shape_and_count():
+    seeds = np.arange(model.DATAGEN_BLOCK, dtype=np.uint32)
+    data = np.asarray(ref.expand_ref(seeds)).copy()
+    out = np.asarray(model.verify_block(jnp.asarray(seeds), jnp.asarray(data)))
+    assert out.shape == (1,)
+    assert out[0] == 0
+    data[100, 3] ^= 0xF
+    data[4000, 15] ^= 1
+    out = np.asarray(model.verify_block(jnp.asarray(seeds), jnp.asarray(data)))
+    assert out[0] == 2
+
+
+# ------------------------------------------------------------------ bw model
+
+def test_seq_long_burst_hits_fabric_ceiling():
+    g = predict(blen=128)
+    assert 5.8 <= g <= 6.4, g
+
+
+def test_seq_single_addr_limited():
+    g = predict(blen=1)
+    assert 2.5 <= g <= 3.3, g
+
+
+def test_random_single_floor():
+    g = predict(blen=1, random=1.0)
+    assert g < 1.2, g
+
+
+def test_random_recovers_with_burst_length():
+    g1 = predict(blen=1, random=1.0)
+    g128 = predict(blen=128, random=1.0)
+    assert g128 > 4 * g1
+
+
+def test_write_random_slower_than_read_random():
+    r = predict(blen=1, random=1.0, read_frac=1.0)
+    w = predict(blen=1, random=1.0, read_frac=0.0)
+    assert w < r, (w, r)
+
+
+def test_datarate_uplift_sequential_vs_random():
+    seq_up = predict(rate=2400, blen=128) / predict(rate=1600, blen=128)
+    rnd_up = predict(rate=2400, blen=4, random=1.0) / predict(rate=1600, blen=4, random=1.0)
+    assert seq_up > 1.35
+    assert rnd_up < seq_up
+
+
+def test_mixed_bounded_by_dram_bus():
+    g = predict(blen=128, read_frac=0.5)
+    # DDR4-1600 bus = 12.8 GB/s; mixed capped at 85% of it minus refresh
+    assert g <= 12.8 * 0.85
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rate=st.sampled_from([1600.0, 1866.0, 2133.0, 2400.0]),
+    blen=st.integers(min_value=1, max_value=128),
+    random=st.sampled_from([0.0, 1.0]),
+    read_frac=st.sampled_from([0.0, 0.5, 1.0]),
+)
+def test_bw_model_always_positive_and_bounded(rate, blen, random, read_frac):
+    g = predict(rate=rate, blen=blen, random=random, read_frac=read_frac)
+    assert 0.0 < g <= 2 * 9.6 * 0.85 + 1e-3, g
+
+
+@settings(max_examples=15, deadline=None)
+@given(blen=st.integers(min_value=1, max_value=64))
+def test_bw_model_monotone_in_burst_length(blen):
+    a = predict(blen=blen, random=1.0)
+    b = predict(blen=2 * blen, random=1.0)
+    assert b >= a * 0.999, (blen, a, b)

@@ -1,0 +1,111 @@
+//! Ablation benches over the controller design choices DESIGN.md calls
+//! out — each knob is flipped in isolation against the MIG-like default
+//! profile and measured on the workloads it affects most:
+//!
+//! | knob | workloads |
+//! |---|---|
+//! | `serial_frontend`        | random singles, random short bursts |
+//! | `miss_flush`             | random singles |
+//! | `lookahead` (1/4/8)      | random medium bursts (intra-txn ACT overlap) |
+//! | `mode_dwell_ck` (0/48/192) | mixed sequential medium bursts |
+//! | `idle_precharge_cycles`  | random singles (closed-page win) vs sequential (loss) |
+//! | address mapping          | sequential streams (bank-group interleave) |
+//!
+//! Run: `cargo bench --bench ablation_knobs` (add `--quick` for CI).
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::config::{AddrMode, DesignConfig, OpMix, PatternConfig, SpeedBin};
+use ddr4bench::ddr4::AddrMapping;
+use ddr4bench::platform::Platform;
+
+fn gbs(design: DesignConfig, cfg: &PatternConfig, op: OpMix) -> f64 {
+    let mut p = Platform::new(design);
+    let mut c = cfg.clone();
+    c.op = op;
+    let s = p.run_batch(0, &c).expect("ablation batch");
+    match op {
+        OpMix::ReadOnly => s.read_throughput_gbs(),
+        OpMix::WriteOnly => s.write_throughput_gbs(),
+        OpMix::Mixed { .. } => s.total_throughput_gbs(),
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("ablation_knobs").with_samples(3, 1);
+    let base = || DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+    let rnd_single = PatternConfig::rnd_read_burst(1, 2048, 7);
+    let rnd_sb = PatternConfig::rnd_read_burst(4, 2048, 7);
+    let rnd_mb = PatternConfig::rnd_read_burst(32, 1024, 7);
+    let seq_mb = PatternConfig::seq_read_burst(32, 2048);
+    let mixed_mb = PatternConfig::mixed(AddrMode::Sequential, 32, 2048);
+
+    println!("-- serial front end (MIG-like txn serialization) --");
+    for on in [true, false] {
+        let mut d = base();
+        d.controller.serial_frontend = on;
+        let g1 = gbs(d.clone(), &rnd_single, OpMix::ReadOnly);
+        let g4 = gbs(d, &rnd_sb, OpMix::ReadOnly);
+        println!("  serial_frontend={on}: rnd-single {g1:.2} GB/s, rnd-SB {g4:.2} GB/s");
+    }
+
+    println!("-- page-miss pipeline flush --");
+    for on in [true, false] {
+        let mut d = base();
+        d.controller.miss_flush = on;
+        let g = gbs(d, &rnd_single, OpMix::ReadOnly);
+        println!("  miss_flush={on}: rnd-single {g:.2} GB/s (paper hardware: 0.56)");
+    }
+
+    println!("-- scheduler lookahead (FR-FCFS window; 1 = plain FCFS) --");
+    for la in [1usize, 4, 8] {
+        let mut d = base();
+        d.controller.lookahead = la;
+        let g = gbs(d, &rnd_mb, OpMix::ReadOnly);
+        println!("  lookahead={la}: rnd-MB {g:.2} GB/s");
+    }
+
+    println!("-- read/write mode dwell --");
+    for dwell in [1u32, 48, 192] {
+        let mut d = base();
+        d.controller.mode_dwell_ck = dwell;
+        let g = gbs(d, &mixed_mb, OpMix::Mixed { read_pct: 50 });
+        println!("  mode_dwell_ck={dwell}: mixed-MB {g:.2} GB/s");
+    }
+
+    println!("-- page policy (idle-precharge timer; 0 = open page) --");
+    for timer in [0u32, 32, 128] {
+        let mut d = base();
+        d.controller.idle_precharge_cycles = timer;
+        let r = gbs(d.clone(), &rnd_single, OpMix::ReadOnly);
+        let s = gbs(d, &seq_mb, OpMix::ReadOnly);
+        println!("  idle_precharge={timer}: rnd-single {r:.2} GB/s, seq-MB {s:.2} GB/s");
+    }
+
+    println!("-- address mapping --");
+    for mapping in [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol] {
+        let mut d = base();
+        d.geometry.mapping = mapping;
+        let s = gbs(d.clone(), &seq_mb, OpMix::ReadOnly);
+        let r = gbs(d, &rnd_single, OpMix::ReadOnly);
+        println!("  {mapping:?}: seq-MB {s:.2} GB/s, rnd-single {r:.2} GB/s");
+    }
+
+    // Timed versions of the two most expensive ablations.
+    bench.bench("ablation/serial_frontend_sweep", || {
+        for on in [true, false] {
+            let mut d = base();
+            d.controller.serial_frontend = on;
+            std::hint::black_box(gbs(d, &rnd_single, OpMix::ReadOnly));
+        }
+    });
+    bench.bench("ablation/mapping_sweep", || {
+        for mapping in
+            [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol]
+        {
+            let mut d = base();
+            d.geometry.mapping = mapping;
+            std::hint::black_box(gbs(d, &seq_mb, OpMix::ReadOnly));
+        }
+    });
+    bench.finish();
+}

@@ -1,0 +1,44 @@
+//! Bench target for **Fig. 2**: throughput vs burst length for DDR4-1600
+//! and DDR4-2400, Seq/Rnd x R/W/M. Measures the cost of each full sweep
+//! and prints the figure series (plus the data-rate-uplift analysis of
+//! SIII-C).
+//!
+//! Run: `cargo bench --bench fig2_datarates` (add `--quick` for CI).
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::report::campaign;
+
+fn main() {
+    let scale = 0.15;
+    let mut bench = Bench::new("fig2_datarates").with_samples(3, 1);
+
+    bench.bench_throughput(
+        "fig2/full_sweep_both_rates",
+        (campaign::FIG2_LENGTHS.len() * 6 * 2) as f64,
+        "point",
+        || {
+            std::hint::black_box(campaign::fig2(scale));
+        },
+    );
+
+    let figs = campaign::fig2(scale);
+    for fig in &figs {
+        println!("\n{}", fig.ascii());
+    }
+    // SIII-C uplift series: 2400/1600 per burst length, seq vs rnd reads.
+    let (f16, f24) = (&figs[0], &figs[1]);
+    let series = |f: &ddr4bench::report::Figure, label: &str| {
+        f.series.iter().find(|s| s.label == label).unwrap().points.clone()
+    };
+    println!("2400/1600 uplift by burst length (paper: seq up to 1.50x, rnd 1.07x@16 -> 1.32x@128):");
+    for (key, name) in [("Seq-R", "seq read"), ("Rnd-R", "rnd read")] {
+        let a = series(f16, key);
+        let b = series(f24, key);
+        print!("  {name}: ");
+        for ((x, y16), (_, y24)) in a.iter().zip(b.iter()) {
+            print!("b{x}={:.2}x ", y24 / y16);
+        }
+        println!();
+    }
+    bench.finish();
+}

@@ -1,0 +1,53 @@
+//! Bench target for **Fig. 3**: read/write throughput breakdown of mixed
+//! workloads (single-channel DDR4-1600, S/SB/MB/LB x Seq/Rnd). Also
+//! checks the SIII-C claim that mixed workloads beat read-only maxima.
+//!
+//! Run: `cargo bench --bench fig3_mixed` (add `--quick` for CI).
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::config::{AddrMode, DesignConfig, OpMix, SpeedBin};
+use ddr4bench::platform::Platform;
+use ddr4bench::report::campaign;
+
+fn main() {
+    let scale = 0.2;
+    let mut bench = Bench::new("fig3_mixed").with_samples(3, 1);
+
+    bench.bench_throughput("fig3/full_table", 8.0, "point", || {
+        std::hint::black_box(campaign::fig3(scale));
+    });
+
+    // per-point benches for the mixed scheduler (the interesting cases)
+    for (addr, label) in
+        [(AddrMode::Sequential, "seq"), (AddrMode::Random { seed: 0xCAFE }, "rnd")]
+    {
+        let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        bench.bench(&format!("fig3/mixed_{label}_burst128"), || {
+            let s = campaign::run_point(
+                &mut platform,
+                OpMix::Mixed { read_pct: 50 },
+                addr,
+                128,
+                scale,
+            );
+            std::hint::black_box(s.total_throughput_gbs());
+        });
+    }
+
+    println!("\n{}", campaign::fig3(scale).ascii());
+
+    // mixed > pure check (SIII-C)
+    let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    let pure = campaign::run_point(&mut p, OpMix::ReadOnly, AddrMode::Sequential, 128, scale)
+        .read_throughput_gbs();
+    let mixed = campaign::run_point(
+        &mut p,
+        OpMix::Mixed { read_pct: 50 },
+        AddrMode::Sequential,
+        128,
+        scale,
+    )
+    .total_throughput_gbs();
+    println!("mixed vs pure-read max: {mixed:.2} vs {pure:.2} GB/s (paper: 7.99 vs 6.29)");
+    bench.finish();
+}

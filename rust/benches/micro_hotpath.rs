@@ -1,0 +1,130 @@
+//! Microbenchmarks of the simulator's hot paths — the profile targets of
+//! the performance pass (EXPERIMENTS.md SPerf):
+//!
+//! - DDR4 device command legality + issue (inner loop of every tick);
+//! - controller tick under saturated sequential and random load;
+//! - end-to-end simulated-cycles-per-second (the SPerf headline);
+//! - PRBS payload expansion, Rust mirror vs the AOT XLA kernel;
+//! - batched verification, Rust mirror vs XLA.
+//!
+//! Run: `cargo bench --bench micro_hotpath` (add `--quick` for CI).
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::config::{ControllerParams, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::controller::{MemController, MemRequest};
+use ddr4bench::ddr4::{Cmd, DdrDevice, DramGeometry, TimingParams};
+use ddr4bench::platform::Platform;
+use ddr4bench::rng::SplitMix64;
+use ddr4bench::runtime::XlaRuntime;
+use ddr4bench::trafficgen::payload;
+
+fn main() {
+    let mut bench = Bench::new("micro_hotpath");
+
+    // --- device: earliest_issue/issue inner loop
+    bench.bench_throughput("device/act_rd_pre_cycle", 300_000.0, "cmd", || {
+        let mut dev = DdrDevice::new(
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        );
+        let mut now = 0;
+        for i in 0..100_000u64 {
+            let bank = (i % 8) as u32;
+            let act = Cmd::Act { bank, row: (i % 1024) as u32 };
+            now = dev.earliest_issue(act).max(now + 1);
+            dev.issue(act, now);
+            let rd = Cmd::Rd { bank, col: 0, auto_pre: false };
+            now = dev.earliest_issue(rd).max(now + 1);
+            dev.issue(rd, now);
+            let pre = Cmd::Pre { bank };
+            now = dev.earliest_issue(pre).max(now + 1);
+            dev.issue(pre, now);
+        }
+        std::hint::black_box(dev.stats().reads);
+    });
+
+    // --- controller tick under load
+    for (name, random) in [("seq", false), ("rnd", true)] {
+        bench.bench_throughput(&format!("controller/tick_{name}"), 200_000.0, "tick", || {
+            let geo = DramGeometry::profpga_board();
+            let mut ctrl = MemController::new(
+                ControllerParams::default(),
+                TimingParams::for_bin(SpeedBin::Ddr4_1600),
+                geo,
+            );
+            let mut rng = SplitMix64::new(1);
+            let mut comps = Vec::new();
+            let mut id = 0u64;
+            for now in 0..200_000u64 {
+                if ctrl.read_slots() > 0 {
+                    let addr = if random {
+                        rng.below(1 << 25) * 64
+                    } else {
+                        (id % (1 << 20)) * 64
+                    };
+                    let _ = ctrl.try_push(MemRequest {
+                        txn_id: id,
+                        is_write: false,
+                        addr: geo.decode(addr),
+                        burst_addr: addr,
+                        beats: 2,
+                        arrival: now,
+                        last_of_txn: true,
+                    });
+                    id += 1;
+                }
+                ctrl.tick(now);
+                if now % 64 == 0 {
+                    comps.clear();
+                    ctrl.pop_completions(now, &mut comps);
+                }
+            }
+            std::hint::black_box(ctrl.device().stats().reads);
+        });
+    }
+
+    // --- end-to-end: simulated DRAM cycles per wall second
+    let cfg = PatternConfig::seq_read_burst(32, 4096);
+    let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    // one batch = rd_cycles axi cycles; measure sim throughput
+    let probe = platform.run_batch(0, &cfg).unwrap();
+    let dram_cycles = probe.counters.total_cycles * 4;
+    bench.bench_throughput("platform/sim_dram_cycles", dram_cycles as f64, "cycle", || {
+        std::hint::black_box(platform.run_batch(0, &cfg).unwrap().read_throughput_gbs());
+    });
+
+    // --- data path: rust mirror vs XLA artifacts
+    let seeds: Vec<u32> = (0..4096u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    bench.bench_throughput("payload/expand_rust_4096", 4096.0 * 16.0, "word", || {
+        std::hint::black_box(payload::expand_batch(&seeds));
+    });
+    let data = payload::expand_batch(&seeds);
+    bench.bench_throughput("payload/verify_rust_4096", 4096.0 * 16.0, "word", || {
+        std::hint::black_box(payload::verify_batch(&seeds, &data));
+    });
+
+    let dir = ddr4bench::artifacts_dir();
+    if XlaRuntime::artifacts_present(&dir) {
+        let rt = XlaRuntime::load(&dir).unwrap();
+        bench.bench_throughput("payload/expand_xla_4096", 4096.0 * 16.0, "word", || {
+            std::hint::black_box(rt.datagen(&seeds).unwrap());
+        });
+        bench.bench_throughput("payload/verify_xla_4096", 4096.0 * 16.0, "word", || {
+            std::hint::black_box(rt.verify(&seeds, &data).unwrap());
+        });
+        // analytic model through XLA
+        let feats: Vec<f32> = (0..64)
+            .flat_map(|i| {
+                [1600.0 + (i % 4) as f32 * 266.0, 1.0 + (i % 128) as f32, (i % 2) as f32,
+                 1.0, 32.0, 2.0, 4.0, 8.0]
+            })
+            .collect();
+        bench.bench_throughput("analytic/bwmodel_xla_64rows", 64.0, "row", || {
+            std::hint::black_box(rt.bwmodel(&feats).unwrap());
+        });
+    } else {
+        println!("(artifacts missing: skipping XLA data-path benches)");
+    }
+
+    bench.finish();
+}

@@ -1,0 +1,35 @@
+//! Bench target for the **channel-scaling** claim (SIII-A): dual- and
+//! triple-channel designs deliver 2x and 3x the single-channel
+//! throughput. Also measures simulator wall time per channel count (the
+//! threaded multi-channel executive).
+//!
+//! Run: `cargo bench --bench scaling_channels` (add `--quick` for CI).
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::config::{DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+use ddr4bench::report::campaign;
+
+fn main() {
+    let scale = 0.25;
+    let mut bench = Bench::new("scaling_channels").with_samples(5, 1);
+
+    for n in 1..=3usize {
+        for speed in [SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400] {
+            let cfg = PatternConfig::seq_read_burst(32, campaign::batch_for(32, scale));
+            let mut platform = Platform::new(DesignConfig::with_channels(n, speed));
+            bench.bench_throughput(
+                &format!("scaling/{n}ch_{speed}"),
+                (cfg.batch_len as usize * n) as f64,
+                "txn",
+                || {
+                    let per = platform.run_batch_all(&cfg).unwrap();
+                    std::hint::black_box(Platform::aggregate(&per).read_throughput_gbs());
+                },
+            );
+        }
+    }
+
+    println!("\n{}", campaign::scaling(scale).ascii());
+    bench.finish();
+}

@@ -1,0 +1,46 @@
+//! Bench target for **Table III**: the analytical FPGA resource model.
+//! Measures model evaluation cost (it sits on the DSE path of
+//! `examples/multi_channel.rs`) and prints the reproduced table with the
+//! paper's post-implementation numbers for comparison.
+//!
+//! Run: `cargo bench --bench table3_resource`.
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::config::{DesignConfig, SpeedBin};
+use ddr4bench::resource;
+
+/// Paper Table III ground truth: (label, LUT, FF, BRAM, DSP).
+const PAPER: [(&str, f64, f64, f64, f64); 6] = [
+    ("Memory interface", 12793.0, 17173.0, 25.5, 3.0),
+    ("Traffic generator", 108.0, 268.0, 0.0, 0.0),
+    ("Host controller", 70.0, 116.0, 0.0, 0.0),
+    ("Single-channel design", 12975.0, 17559.0, 25.5, 3.0),
+    ("Dual-channel design", 25884.0, 35006.0, 51.0, 6.0),
+    ("Triple-channel design", 38797.0, 52457.0, 76.5, 9.0),
+];
+
+fn main() {
+    let mut bench = Bench::new("table3_resource");
+    bench.bench_throughput("table3/full_table", 6.0, "row", || {
+        std::hint::black_box(resource::table3());
+    });
+    bench.bench("table3/design_cost_3ch", || {
+        let d = DesignConfig::with_channels(3, SpeedBin::Ddr4_2400);
+        std::hint::black_box(resource::design_cost(&d));
+    });
+
+    println!("\nTable III reproduction — modeled (paper)");
+    let rows = resource::table3();
+    let mut worst: f64 = 0.0;
+    for (row, (name, lut, ff, bram, dsp)) in rows.iter().zip(PAPER.iter()) {
+        let dl = (row.res.lut - lut).abs() / lut.max(1.0);
+        let df = (row.res.ff - ff).abs() / ff.max(1.0);
+        worst = worst.max(dl).max(df);
+        println!(
+            "  {:<24} LUT {:>6.0} ({:>6.0})  FF {:>6.0} ({:>6.0})  BRAM {:>5} ({:>5})  DSP {:>2} ({:>2})",
+            name, row.res.lut, lut, row.res.ff, ff, row.res.bram, bram, row.res.dsp, dsp
+        );
+    }
+    println!("  worst relative deviation from paper: {:.3}%", worst * 100.0);
+    bench.finish();
+}

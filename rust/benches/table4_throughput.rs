@@ -1,0 +1,61 @@
+//! Bench target for **Table IV**: throughput of single-channel DDR4-1600
+//! across R/W × Seq/Rnd × {single, short, medium, long} — measures the
+//! wall time of each configuration point and prints the reproduced table
+//! (paper values alongside for comparison).
+//!
+//! Run: `cargo bench --bench table4_throughput` (add `--quick` for CI).
+
+use ddr4bench::benchkit::Bench;
+use ddr4bench::config::{AddrMode, OpMix};
+use ddr4bench::config::{DesignConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+use ddr4bench::report::campaign::{self, TABLE4_LENGTHS};
+
+/// Paper's Table IV ground truth, same layout as `Table4Data::gbs`.
+const PAPER: [[[f64; 4]; 2]; 2] = [
+    [[3.08, 6.20, 6.27, 6.29], [0.56, 2.24, 6.08, 6.30]], // read seq / rnd
+    [[3.03, 6.00, 6.03, 6.04], [0.42, 1.66, 5.79, 6.04]], // write seq / rnd
+];
+
+fn main() {
+    let scale = 0.25;
+    let mut bench = Bench::new("table4_throughput").with_samples(5, 1);
+
+    // Per-point wall-time benchmarks (simulator speed per configuration).
+    for (op, olabel) in [(OpMix::ReadOnly, "read"), (OpMix::WriteOnly, "write")] {
+        for (addr, alabel) in
+            [(AddrMode::Sequential, "seq"), (AddrMode::Random { seed: 0xBEEF }, "rnd")]
+        {
+            for (len, _) in TABLE4_LENGTHS {
+                let mut platform =
+                    Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+                let txns = campaign::batch_for(len, scale) as f64;
+                bench.bench_throughput(
+                    &format!("table4/{olabel}/{alabel}/burst{len}"),
+                    txns,
+                    "txn",
+                    || {
+                        let s = campaign::run_point(&mut platform, op, addr, len, scale);
+                        std::hint::black_box(campaign::gbs_of(op, &s));
+                    },
+                );
+            }
+        }
+    }
+
+    // The reproduced table with paper deltas.
+    let d = campaign::table4_data(scale);
+    println!("\nTable IV reproduction (GB/s) — measured (paper) [delta]");
+    for (oi, op) in ["Read ", "Write"].iter().enumerate() {
+        for (ai, addr) in ["Seq", "Rnd"].iter().enumerate() {
+            print!("  {op} {addr}: ");
+            for (li, (len, _)) in TABLE4_LENGTHS.iter().enumerate() {
+                let m = d.gbs[oi][ai][li];
+                let p = PAPER[oi][ai][li];
+                print!("b{len}={m:.2} ({p:.2}) [{:+.0}%]  ", (m - p) / p * 100.0);
+            }
+            println!();
+        }
+    }
+    bench.finish();
+}

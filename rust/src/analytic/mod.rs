@@ -1,0 +1,233 @@
+//! Closed-form DDR4 bandwidth model.
+//!
+//! A first-order analytic predictor of channel throughput given the
+//! pattern parameters — the same model is lowered through JAX as the
+//! `bwmodel` artifact so predictions for whole parameter sweeps run
+//! through one XLA call. Used to cross-check the cycle-level simulator
+//! (EXPERIMENTS.md records model-vs-simulated deltas) and to seed design
+//! space exploration before running full simulations.
+//!
+//! The model composes the bottlenecks of DESIGN.md §5:
+//!
+//! 1. **fabric ceiling** — beat_bytes per AXI cycle per direction;
+//! 2. **address-channel ceiling** — one transaction per
+//!    `addr_cmd_interval` AXI cycles ⇒ `txn_bytes / interval` per cycle;
+//! 3. **DRAM service ceiling** — per-transaction DRAM busy time:
+//!    `n_bursts × tBURST` plus, for random rows, the row-cycle cost
+//!    amortized over the in-flight window (bank parallelism capped by the
+//!    reorder lookahead);
+//! 4. **refresh derating** — `1 − tRFC/tREFI`.
+//!
+//! Throughput = min(1, 2, 3) × refresh derate; mixed workloads evaluate
+//! both directions with the shared-bus constraint.
+
+pub mod dse;
+
+use crate::config::{OpMix, PatternConfig, SpeedBin};
+use crate::ddr4::TimingParams;
+
+/// Model inputs distilled from a (design, pattern) pair — the 8 feature
+/// columns of the `bwmodel` artifact, in order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BwFeatures {
+    /// Data rate in MT/s (1600..2400).
+    pub data_rate_mts: f32,
+    /// AXI beats per transaction (1..=128).
+    pub burst_len: f32,
+    /// 1.0 = random addressing, 0.0 = sequential.
+    pub random: f32,
+    /// Fraction of read transactions (0..=1).
+    pub read_frac: f32,
+    /// Bytes per AXI beat.
+    pub beat_bytes: f32,
+    /// Front-end transaction interval in AXI cycles.
+    pub addr_interval: f32,
+    /// Effective bank parallelism the controller can extract (lookahead).
+    pub lookahead: f32,
+    /// Outstanding-transaction window of the TG.
+    pub outstanding: f32,
+}
+
+impl BwFeatures {
+    /// Build features from configs.
+    pub fn from_config(
+        speed: SpeedBin,
+        cfg: &PatternConfig,
+        beat_bytes: u32,
+        addr_interval: u32,
+        lookahead: usize,
+        outstanding: usize,
+    ) -> Self {
+        Self {
+            data_rate_mts: speed.data_rate_mts() as f32,
+            burst_len: cfg.burst.len as f32,
+            random: if cfg.addr.is_random() { 1.0 } else { 0.0 },
+            read_frac: cfg.op.read_pct() as f32 / 100.0,
+            beat_bytes: beat_bytes as f32,
+            addr_interval: addr_interval as f32,
+            lookahead: lookahead as f32,
+            outstanding: outstanding as f32,
+        }
+    }
+
+    /// Flatten to the artifact's feature-row layout.
+    pub fn to_row(&self) -> [f32; 8] {
+        [
+            self.data_rate_mts,
+            self.burst_len,
+            self.random,
+            self.read_frac,
+            self.beat_bytes,
+            self.addr_interval,
+            self.lookahead,
+            self.outstanding,
+        ]
+    }
+}
+
+/// Predict one direction's throughput in GB/s (`is_read` selects CAS
+/// latency handling; reads and writes differ via recovery overheads).
+fn direction_gbs(f: &BwFeatures, t: &TimingParams, is_read: bool, share: f32) -> f32 {
+    if share <= 0.0 {
+        return 0.0;
+    }
+    let tck_ns = 2000.0 / f.data_rate_mts; // DRAM clock period
+    let axi_ns = tck_ns * 4.0;
+    let txn_bytes = f.burst_len * f.beat_bytes;
+    let dram_bursts_per_txn = (txn_bytes / 64.0).max(1.0);
+
+    // (1) fabric data-channel ceiling
+    let fabric = f.beat_bytes / axi_ns;
+    // (2) address-channel ceiling
+    let addr = txn_bytes / (f.addr_interval * axi_ns);
+    // (3) DRAM service: burst transfer time + row overheads
+    let tburst = t.burst_cycles as f32;
+    let service_ck = dram_bursts_per_txn * tburst;
+    if f.random > 0.5 {
+        // Every transaction opens a fresh row and triggers the page-miss
+        // pipeline flush (DESIGN.md §5 / `ControllerParams::miss_flush`):
+        // the next transaction is not accepted until PRE + ACT + CAS +
+        // data (+ recovery) complete. The flush overlaps the CAS stream
+        // of the *current* transaction, so long bursts hide it entirely —
+        // exactly the paper's "random recovers at long bursts" shape.
+        let flush = (t.trp + t.trcd) as f32
+            + if is_read {
+                (t.cl + t.burst_cycles + t.trp) as f32
+            } else {
+                (t.cwl + t.burst_cycles + t.twr + t.twtr_l) as f32
+            };
+        let hidden = (dram_bursts_per_txn - 1.0) * t.tccd_s as f32;
+        let service_rnd = service_ck + (flush - hidden).max(0.0);
+        let dram = txn_bytes / (service_rnd * tck_ns);
+        return fabric.min(addr).min(dram) * share;
+    }
+    let dram = txn_bytes / (service_ck * tck_ns);
+    fabric.min(addr).min(dram) * share
+}
+
+/// Predict throughput in GB/s for one channel (matches the jnp model in
+/// `python/compile/model.py::bw_model` — the pinned-value tests keep the
+/// two in lockstep).
+pub fn predict_gbs(f: &BwFeatures, op: OpMix) -> f32 {
+    let t = TimingParams::for_bin(match f.data_rate_mts as u32 {
+        0..=1700 => SpeedBin::Ddr4_1600,
+        1701..=2000 => SpeedBin::Ddr4_1866,
+        2001..=2250 => SpeedBin::Ddr4_2133,
+        _ => SpeedBin::Ddr4_2400,
+    });
+    let refresh_derate = 1.0 - t.trfc as f32 / t.trefi as f32;
+    let gbs = match op {
+        OpMix::ReadOnly => direction_gbs(f, &t, true, 1.0),
+        OpMix::WriteOnly => direction_gbs(f, &t, false, 1.0),
+        OpMix::Mixed { .. } => {
+            // both directions run concurrently on separate AXI channels,
+            // sharing the DRAM bus; turnarounds eat ~15%
+            let r = direction_gbs(f, &t, true, 1.0) * f.read_frac.max(0.01);
+            let w = direction_gbs(f, &t, false, 1.0) * (1.0 - f.read_frac).max(0.01);
+            let tck_ns = 2000.0 / f.data_rate_mts;
+            let dram_bus = 64.0 / (t.burst_cycles as f32 * tck_ns); // GB/s
+            (r + w).min(dram_bus * 0.85)
+        }
+    };
+    gbs * refresh_derate
+}
+
+/// Convenience: predict for a (speed, pattern) pair with default knobs.
+pub fn predict_pattern(speed: SpeedBin, cfg: &PatternConfig, beat_bytes: u32) -> f32 {
+    let p = crate::config::ControllerParams::default();
+    let f = BwFeatures::from_config(
+        speed,
+        cfg,
+        beat_bytes,
+        p.addr_cmd_interval_axi,
+        p.lookahead,
+        p.outstanding_cap,
+    );
+    predict_gbs(&f, cfg.op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PatternConfig;
+
+    #[test]
+    fn seq_long_burst_hits_fabric_ceiling() {
+        let g = predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::seq_read_burst(128, 1), 32);
+        assert!((5.8..=6.4).contains(&g), "long seq read ~6.2-6.4, got {g}");
+    }
+
+    #[test]
+    fn seq_single_is_addr_limited() {
+        let g = predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::seq_read_burst(1, 1), 32);
+        assert!((2.5..=3.3).contains(&g), "seq singles ~3.1, got {g}");
+    }
+
+    #[test]
+    fn random_single_much_slower() {
+        let s = predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::seq_read_burst(1, 1), 32);
+        let r = predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::rnd_read_burst(1, 1, 0), 32);
+        assert!(r < s / 2.5, "random singles {r} vs seq {s}");
+    }
+
+    #[test]
+    fn random_long_burst_recovers() {
+        let r128 =
+            predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::rnd_read_burst(128, 1, 0), 32);
+        let r1 = predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::rnd_read_burst(1, 1, 0), 32);
+        assert!(r128 > r1 * 4.0, "random recovers with burst length: {r1} -> {r128}");
+    }
+
+    #[test]
+    fn datarate_scales_sequential_more_than_random() {
+        let seq_ratio = predict_pattern(
+            SpeedBin::Ddr4_2400,
+            &PatternConfig::seq_read_burst(128, 1),
+            32,
+        ) / predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::seq_read_burst(128, 1), 32);
+        let rnd_ratio = predict_pattern(
+            SpeedBin::Ddr4_2400,
+            &PatternConfig::rnd_read_burst(4, 1, 0),
+            32,
+        ) / predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::rnd_read_burst(4, 1, 0), 32);
+        assert!(seq_ratio > 1.35, "sequential uplift {seq_ratio}");
+        assert!(rnd_ratio < seq_ratio, "random gains less: {rnd_ratio} < {seq_ratio}");
+    }
+
+    #[test]
+    fn features_roundtrip_row() {
+        let f = BwFeatures::from_config(
+            SpeedBin::Ddr4_2400,
+            &PatternConfig::seq_read_burst(32, 1),
+            32,
+            2,
+            4,
+            8,
+        );
+        let row = f.to_row();
+        assert_eq!(row[0], 2400.0);
+        assert_eq!(row[1], 32.0);
+        assert_eq!(row[2], 0.0);
+        assert_eq!(row[3], 1.0);
+    }
+}

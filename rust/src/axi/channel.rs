@@ -1,0 +1,142 @@
+//! Bounded AXI channel FIFOs with handshake accounting.
+//!
+//! Each of the five AXI channels is a bounded FIFO: `valid && ready`
+//! transfers happen when the producer offers an item and the FIFO has
+//! space (ready). Occupancy-full models back-pressure; the stall counters
+//! feed the platform's fine-grained statistics.
+
+use std::collections::VecDeque;
+
+/// Handshake statistics of one channel.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    /// Successful transfers (valid && ready).
+    pub transfers: u64,
+    /// Producer offered but FIFO was full (valid && !ready).
+    pub stalls: u64,
+}
+
+/// A bounded FIFO standing in for one AXI channel.
+#[derive(Debug, Clone)]
+pub struct ChannelFifo<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    stats: ChannelStats,
+}
+
+impl<T> ChannelFifo<T> {
+    /// New FIFO with `capacity` entries (must be >= 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "channel capacity must be >= 1");
+        Self { items: VecDeque::with_capacity(capacity), capacity, stats: ChannelStats::default() }
+    }
+
+    /// Is the channel ready to accept (not full)?
+    pub fn ready(&self) -> bool {
+        self.items.len() < self.capacity
+    }
+
+    /// Offer an item (assert valid). Returns true if transferred; false
+    /// records a stall and the producer must retry next cycle.
+    pub fn offer(&mut self, item: T) -> Result<(), T> {
+        if self.ready() {
+            self.items.push_back(item);
+            self.stats.transfers += 1;
+            Ok(())
+        } else {
+            self.stats.stalls += 1;
+            Err(item)
+        }
+    }
+
+    /// Consumer side: peek the head.
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    /// Consumer side: pop the head.
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Is the FIFO empty?
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Handshake statistics so far.
+    pub fn stats(&self) -> ChannelStats {
+        self.stats
+    }
+
+    /// Drop all contents and reset statistics (batch boundary).
+    pub fn reset(&mut self) {
+        self.items.clear();
+        self.stats = ChannelStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfers_until_full_then_stalls() {
+        let mut f = ChannelFifo::new(2);
+        assert!(f.offer(1).is_ok());
+        assert!(f.offer(2).is_ok());
+        assert!(!f.ready());
+        assert_eq!(f.offer(3), Err(3));
+        assert_eq!(f.stats().transfers, 2);
+        assert_eq!(f.stats().stalls, 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = ChannelFifo::new(4);
+        for i in 0..4 {
+            f.offer(i).unwrap();
+        }
+        assert_eq!(f.peek(), Some(&0));
+        let drained: Vec<_> = std::iter::from_fn(|| f.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3]);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn pop_frees_space() {
+        let mut f = ChannelFifo::new(1);
+        f.offer('a').unwrap();
+        assert!(f.offer('b').is_err());
+        assert_eq!(f.pop(), Some('a'));
+        assert!(f.offer('b').is_ok());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut f = ChannelFifo::new(2);
+        f.offer(1).unwrap();
+        let _ = f.offer(2);
+        let _ = f.offer(3);
+        f.reset();
+        assert!(f.is_empty());
+        assert_eq!(f.stats(), ChannelStats::default());
+        assert_eq!(f.capacity(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = ChannelFifo::<u8>::new(0);
+    }
+}

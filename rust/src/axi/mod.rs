@@ -1,0 +1,160 @@
+//! AXI4 on-chip bus model (the TG ↔ memory-interface link, §II-B).
+//!
+//! The traffic generator manages the five independent AXI4 channels — read
+//! address (AR), read data (R), write address (AW), write data (W) and
+//! write response (B) — which is what lets it issue read and write
+//! transactions simultaneously. This module models the protocol at
+//! transaction/beat granularity: burst address sequences (FIXED / INCR /
+//! WRAP), per-channel FIFOs with back-pressure, and beat bookkeeping.
+
+pub mod burst;
+pub mod channel;
+
+pub use burst::{beat_addresses, BurstAddrIter};
+pub use channel::{ChannelFifo, ChannelStats};
+
+use crate::config::{BurstKind, BurstSpec};
+
+/// Identifier of an AXI transaction (AxID analogue, unique per TG batch).
+pub type TxnId = u64;
+
+/// One AXI4 transaction as issued on an address channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxiTxn {
+    /// Transaction id (AxID).
+    pub id: TxnId,
+    /// Write (AW/W/B path) or read (AR/R path)?
+    pub is_write: bool,
+    /// Start byte address (AxADDR).
+    pub addr: u64,
+    /// Burst spec: beats per transaction (AxLEN+1) and type (AxBURST).
+    pub burst: BurstSpec,
+    /// Bytes per beat (decoded AxSIZE).
+    pub beat_bytes: u32,
+}
+
+impl AxiTxn {
+    /// Total payload bytes moved by this transaction.
+    pub fn bytes(&self) -> u64 {
+        self.burst.len as u64 * self.beat_bytes as u64
+    }
+
+    /// Address of beat `i` per the AXI4 burst rules.
+    pub fn beat_addr(&self, i: u32) -> u64 {
+        burst::beat_addr(self.addr, self.burst, self.beat_bytes, i)
+    }
+
+    /// The distinct DRAM-burst-aligned byte addresses this transaction
+    /// touches, in beat order with consecutive duplicates collapsed (a
+    /// 64-byte DRAM burst covers two 32-byte AXI beats).
+    pub fn dram_bursts(&self, dram_burst_bytes: u32) -> Vec<u64> {
+        let mask = !(dram_burst_bytes as u64 - 1);
+        let mut out: Vec<u64> = Vec::with_capacity(self.burst.len as usize / 2 + 1);
+        for i in 0..self.burst.len {
+            let a = self.beat_addr(i) & mask;
+            if out.last() != Some(&a) {
+                out.push(a);
+            }
+        }
+        out
+    }
+}
+
+/// Validate an AXI4 transaction against protocol rules (A3.4.1): burst
+/// length bounds, WRAP power-of-two length and aligned start address, and
+/// 4 KiB boundary crossing for INCR.
+pub fn validate_txn(txn: &AxiTxn) -> Result<(), String> {
+    let len = txn.burst.len;
+    if len == 0 || len > 128 {
+        return Err(format!("burst length {len} outside 1..=128"));
+    }
+    if !txn.beat_bytes.is_power_of_two() {
+        return Err(format!("beat size {} not a power of two", txn.beat_bytes));
+    }
+    match txn.burst.kind {
+        BurstKind::Wrap => {
+            if !len.is_power_of_two() || !(2..=16).contains(&len) {
+                return Err(format!("WRAP length {len} must be 2, 4, 8 or 16"));
+            }
+            if txn.addr % txn.beat_bytes as u64 != 0 {
+                return Err("WRAP start address must be size-aligned".into());
+            }
+        }
+        BurstKind::Incr => {
+            let end = txn.addr + txn.bytes() - 1;
+            if (txn.addr >> 12) != (end >> 12) {
+                return Err(format!(
+                    "INCR burst {:#x}+{} crosses a 4KiB boundary",
+                    txn.addr,
+                    txn.bytes()
+                ));
+            }
+        }
+        BurstKind::Fixed => {
+            if len > 16 {
+                return Err(format!("FIXED length {len} must be <= 16"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BurstKind;
+
+    fn txn(addr: u64, len: u32, kind: BurstKind) -> AxiTxn {
+        AxiTxn { id: 0, is_write: false, addr, burst: BurstSpec { len, kind }, beat_bytes: 32 }
+    }
+
+    #[test]
+    fn txn_bytes() {
+        assert_eq!(txn(0, 4, BurstKind::Incr).bytes(), 128);
+        assert_eq!(txn(0, 1, BurstKind::Incr).bytes(), 32);
+    }
+
+    #[test]
+    fn dram_bursts_collapse_pairs() {
+        // 4 beats × 32 B from a 64-aligned address = 2 DRAM bursts.
+        let t = txn(128, 4, BurstKind::Incr);
+        assert_eq!(t.dram_bursts(64), vec![128, 192]);
+        // unaligned start straddles 3 bursts
+        let t = txn(128 + 32, 4, BurstKind::Incr);
+        assert_eq!(t.dram_bursts(64), vec![128, 192, 256]);
+    }
+
+    #[test]
+    fn dram_bursts_fixed_is_one() {
+        let t = txn(96, 8, BurstKind::Fixed);
+        assert_eq!(t.dram_bursts(64), vec![64]);
+    }
+
+    #[test]
+    fn validate_incr_4k_boundary() {
+        assert!(validate_txn(&txn(4096 - 64, 4, BurstKind::Incr)).is_err());
+        assert!(validate_txn(&txn(4096 - 128, 4, BurstKind::Incr)).is_ok());
+    }
+
+    #[test]
+    fn validate_wrap_rules() {
+        assert!(validate_txn(&txn(0, 8, BurstKind::Wrap)).is_ok());
+        assert!(validate_txn(&txn(0, 12, BurstKind::Wrap)).is_err()); // not pow2
+        assert!(validate_txn(&txn(0, 32, BurstKind::Wrap)).is_err()); // > 16
+        assert!(validate_txn(&txn(7, 8, BurstKind::Wrap)).is_err()); // unaligned
+    }
+
+    #[test]
+    fn validate_fixed_len_cap() {
+        assert!(validate_txn(&txn(0, 16, BurstKind::Fixed)).is_ok());
+        assert!(validate_txn(&txn(0, 17, BurstKind::Fixed)).is_err());
+    }
+
+    #[test]
+    fn validate_len_bounds() {
+        assert!(validate_txn(&txn(0, 0, BurstKind::Incr)).is_err());
+        let mut t = txn(0, 128, BurstKind::Incr);
+        t.addr = 0; // 128*32 = 4096 exactly fills a 4K page
+        assert!(validate_txn(&t).is_ok());
+    }
+}

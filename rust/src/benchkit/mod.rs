@@ -1,0 +1,207 @@
+//! Criterion-style measurement harness (in-tree; the offline image only
+//! vendors the `xla` closure, DESIGN.md §9).
+//!
+//! Each `cargo bench` target is a plain `main()` that builds a
+//! [`Bench`], registers measured closures, and calls [`Bench::finish`].
+//! The harness does warmup, collects N timed samples, reports
+//! mean/median/stddev/min/max plus an optional throughput unit, and can
+//! attach *result rows* (the reproduced paper tables) that print after
+//! the timing block. `--quick` (or `DDR4BENCH_QUICK=1`) cuts sample
+//! counts for CI-style runs.
+
+use std::time::{Duration, Instant};
+
+/// Measurement statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Benchmark id.
+    pub name: String,
+    /// Per-iteration wall times.
+    pub times: Vec<Duration>,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<(f64, &'static str)>,
+}
+
+impl Sample {
+    fn secs(&self) -> Vec<f64> {
+        self.times.iter().map(|d| d.as_secs_f64()).collect()
+    }
+
+    /// Mean iteration time in seconds.
+    pub fn mean(&self) -> f64 {
+        let s = self.secs();
+        s.iter().sum::<f64>() / s.len() as f64
+    }
+
+    /// Median iteration time in seconds.
+    pub fn median(&self) -> f64 {
+        let mut s = self.secs();
+        s.sort_by(f64::total_cmp);
+        s[s.len() / 2]
+    }
+
+    /// Standard deviation in seconds.
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let s = self.secs();
+        (s.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / s.len() as f64).sqrt()
+    }
+
+    /// Minimum iteration time in seconds.
+    pub fn min(&self) -> f64 {
+        self.secs().iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum iteration time in seconds.
+    pub fn max(&self) -> f64 {
+        self.secs().iter().copied().fold(0.0, f64::max)
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// The bench harness.
+pub struct Bench {
+    suite: String,
+    samples: usize,
+    warmup: usize,
+    results: Vec<Sample>,
+}
+
+impl Bench {
+    /// New harness for a suite. Honours `--quick` / `DDR4BENCH_QUICK`.
+    pub fn new(suite: &str) -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("DDR4BENCH_QUICK").is_ok_and(|v| v == "1");
+        let (samples, warmup) = if quick { (3, 1) } else { (10, 2) };
+        println!("== bench suite: {suite} ({samples} samples, {warmup} warmup) ==");
+        Self { suite: suite.to_string(), samples, warmup, results: Vec::new() }
+    }
+
+    /// Override sample counts (long-running end-to-end benches).
+    pub fn with_samples(mut self, samples: usize, warmup: usize) -> Self {
+        self.samples = samples.max(1);
+        self.warmup = warmup;
+        self
+    }
+
+    /// Measure `f`, which performs one full iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        let s = Sample { name: name.to_string(), times, elements: None };
+        self.report(&s);
+        self.results.push(s);
+    }
+
+    /// Measure `f` and report throughput as `elements/iter` of `unit`.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: f64,
+        unit: &'static str,
+        mut f: F,
+    ) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        let s = Sample { name: name.to_string(), times, elements: Some((elements, unit)) };
+        self.report(&s);
+        self.results.push(s);
+    }
+
+    fn report(&self, s: &Sample) {
+        let extra = match s.elements {
+            Some((n, unit)) => {
+                format!("  [{:.3} M{unit}/s]", n / s.median() / 1e6)
+            }
+            None => String::new(),
+        };
+        println!(
+            "{:<44} median {:>12}  mean {:>12} ± {:>10}  (min {}, max {}){extra}",
+            s.name,
+            fmt_time(s.median()),
+            fmt_time(s.mean()),
+            fmt_time(s.stddev()),
+            fmt_time(s.min()),
+            fmt_time(s.max()),
+        );
+    }
+
+    /// All collected samples.
+    pub fn samples(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Print the suite footer.
+    pub fn finish(self) {
+        println!("== {}: {} benchmarks done ==", self.suite, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_statistics() {
+        let s = Sample {
+            name: "x".into(),
+            times: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+            elements: None,
+        };
+        assert!((s.mean() - 0.020).abs() < 1e-9);
+        assert!((s.median() - 0.020).abs() < 1e-9);
+        assert!((s.min() - 0.010).abs() < 1e-9);
+        assert!((s.max() - 0.030).abs() < 1e-9);
+        assert!(s.stddev() > 0.0);
+    }
+
+    #[test]
+    fn bench_runs_closure_expected_times() {
+        std::env::set_var("DDR4BENCH_QUICK", "1");
+        let mut calls = 0usize;
+        let mut b = Bench::new("test").with_samples(3, 1);
+        b.bench("count", || {
+            calls += 1;
+        });
+        assert_eq!(calls, 4); // 1 warmup + 3 samples
+        assert_eq!(b.samples().len(), 1);
+        b.finish();
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(0.002), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

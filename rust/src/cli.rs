@@ -1,0 +1,223 @@
+//! Minimal declarative CLI parser (in-tree replacement for clap —
+//! DESIGN.md §9).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! and positional arguments, with generated `--help` text. Used by the
+//! `ddr4bench` binary and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed argument bag for one (sub)command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand name, if any.
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// Positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Option value by key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option value or default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parse an option into any `FromStr` type, with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse `{v}`")),
+        }
+    }
+
+    /// Is `--flag` present?
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+/// Declared option/flag for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Key (without dashes).
+    pub key: &'static str,
+    /// Does it take a value?
+    pub takes_value: bool,
+    /// One-line description.
+    pub help: &'static str,
+}
+
+/// A CLI definition: name, about, subcommands, shared options.
+pub struct Cli {
+    name: &'static str,
+    about: &'static str,
+    commands: Vec<(&'static str, &'static str)>,
+    options: Vec<OptSpec>,
+}
+
+impl Cli {
+    /// New CLI definition.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new(), options: Vec::new() }
+    }
+
+    /// Register a subcommand.
+    pub fn command(mut self, name: &'static str, help: &'static str) -> Self {
+        self.commands.push((name, help));
+        self
+    }
+
+    /// Register a `--key <value>` option.
+    pub fn option(mut self, key: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec { key, takes_value: true, help });
+        self
+    }
+
+    /// Register a bare `--flag`.
+    pub fn flag(mut self, key: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec { key, takes_value: false, help });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [COMMAND] [OPTIONS]\n", self.name, self.about, self.name);
+        if !self.commands.is_empty() {
+            s.push_str("\nCOMMANDS:\n");
+            for (c, h) in &self.commands {
+                s.push_str(&format!("  {c:<18} {h}\n"));
+            }
+        }
+        if !self.options.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.options {
+                let k = if o.takes_value {
+                    format!("--{} <v>", o.key)
+                } else {
+                    format!("--{}", o.key)
+                };
+                s.push_str(&format!("  {k:<18} {}\n", o.help));
+            }
+        }
+        s.push_str("  --help             print this help\n");
+        s
+    }
+
+    /// Parse an argv slice (without argv[0]). `Err` carries a message that
+    /// should be printed (includes help for `--help`).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        // subcommand = first non-dash token if declared
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && self.commands.iter().any(|(c, _)| *c == first.as_str()) {
+                args.command = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self.options.iter().find(|o| o.key == key);
+                match spec {
+                    Some(OptSpec { takes_value: true, .. }) => {
+                        let val = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                                .clone(),
+                        };
+                        args.options.insert(key, val);
+                    }
+                    Some(OptSpec { takes_value: false, .. }) => {
+                        if inline.is_some() {
+                            return Err(format!("--{key} takes no value"));
+                        }
+                        args.flags.push(key);
+                    }
+                    None => return Err(format!("unknown option --{key}\n\n{}", self.help())),
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test tool")
+            .command("run", "run things")
+            .option("speed", "data rate")
+            .flag("verbose", "chatty")
+    }
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = cli().parse(&v(&["run", "--speed", "2400", "--verbose", "file.txt"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("speed"), Some("2400"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&v(&["--speed=1600"])).unwrap();
+        assert_eq!(a.get("speed"), Some("1600"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(&v(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&v(&["--speed"])).is_err());
+    }
+
+    #[test]
+    fn help_flag_returns_help() {
+        let err = cli().parse(&v(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("run"));
+    }
+
+    #[test]
+    fn parse_or_types() {
+        let a = cli().parse(&v(&["--speed", "2400"])).unwrap();
+        assert_eq!(a.parse_or("speed", 0u32).unwrap(), 2400);
+        assert_eq!(a.parse_or("missing", 7u32).unwrap(), 7);
+        let b = cli().parse(&v(&["--speed", "abc"])).unwrap();
+        assert!(b.parse_or("speed", 0u32).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse(&v(&["--verbose=1"])).is_err());
+    }
+}

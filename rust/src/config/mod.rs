@@ -1,0 +1,644 @@
+//! Design-time and run-time configuration of the benchmarking platform.
+//!
+//! Mirrors Table I of the paper:
+//!
+//! | Design-time                | Run-time                          |
+//! |----------------------------|-----------------------------------|
+//! | Number of memory channels  | Mix of read and write operations  |
+//! | Memory data rate           | Sequential or random accesses     |
+//! | Performance counters       | Length and type of bursts         |
+//! |                            | Signaling mode                    |
+//! |                            | Length of transaction batches     |
+//!
+//! Design-time parameters ([`DesignConfig`]) fix the instantiated hardware:
+//! they select what gets "synthesized" (number of memory interfaces + TGs,
+//! clock frequencies, which counters exist). Run-time parameters
+//! ([`PatternConfig`]) are sent over the host-controller link per batch and
+//! can change between batches without reconfiguration.
+
+mod parse;
+
+pub use parse::{
+    format_pattern_config, parse_design_config, parse_pattern_config, ConfigError,
+};
+
+use crate::ddr4::geometry::DramGeometry;
+
+/// JEDEC DDR4 speed bins supported by the platform — the four the paper's
+/// campaign covers (§III, Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpeedBin {
+    /// DDR4-1600 (K bin, 11-11-11): PHY 800 MHz, AXI 200 MHz.
+    Ddr4_1600,
+    /// DDR4-1866 (M bin, 13-13-13): PHY 933 MHz, AXI 233 MHz.
+    Ddr4_1866,
+    /// DDR4-2133 (P bin, 15-15-15): PHY 1067 MHz, AXI 267 MHz.
+    Ddr4_2133,
+    /// DDR4-2400 (R bin, 16-16-16): PHY 1200 MHz, AXI 300 MHz.
+    Ddr4_2400,
+}
+
+impl SpeedBin {
+    /// All bins in ascending data-rate order.
+    pub const ALL: [SpeedBin; 4] = [
+        SpeedBin::Ddr4_1600,
+        SpeedBin::Ddr4_1866,
+        SpeedBin::Ddr4_2133,
+        SpeedBin::Ddr4_2400,
+    ];
+
+    /// Data rate in MT/s.
+    pub fn data_rate_mts(self) -> u32 {
+        match self {
+            SpeedBin::Ddr4_1600 => 1600,
+            SpeedBin::Ddr4_1866 => 1866,
+            SpeedBin::Ddr4_2133 => 2133,
+            SpeedBin::Ddr4_2400 => 2400,
+        }
+    }
+
+    /// DRAM (PHY) clock frequency in MHz = data rate / 2 (DDR).
+    pub fn phy_clock_mhz(self) -> f64 {
+        self.data_rate_mts() as f64 / 2.0
+    }
+
+    /// AXI / fabric clock frequency in MHz — the paper keeps a strict 4:1
+    /// PHY:AXI ratio (Table II: 200/233/267/300 MHz).
+    pub fn axi_clock_mhz(self) -> f64 {
+        self.phy_clock_mhz() / 4.0
+    }
+
+    /// DRAM clock period in nanoseconds (tCK).
+    pub fn tck_ns(self) -> f64 {
+        1000.0 / self.phy_clock_mhz()
+    }
+
+    /// Parse from a "1600"/"ddr4-1600" style string.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        let s = s.strip_prefix("ddr4-").unwrap_or(&s);
+        match s {
+            "1600" => Some(SpeedBin::Ddr4_1600),
+            "1866" => Some(SpeedBin::Ddr4_1866),
+            "2133" => Some(SpeedBin::Ddr4_2133),
+            "2400" => Some(SpeedBin::Ddr4_2400),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name ("DDR4-1600").
+    pub fn name(self) -> &'static str {
+        match self {
+            SpeedBin::Ddr4_1600 => "DDR4-1600",
+            SpeedBin::Ddr4_1866 => "DDR4-1866",
+            SpeedBin::Ddr4_2133 => "DDR4-2133",
+            SpeedBin::Ddr4_2400 => "DDR4-2400",
+        }
+    }
+}
+
+impl std::fmt::Display for SpeedBin {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which performance counters to instantiate — a design-time choice in the
+/// paper (counters cost flip-flops, so unneeded ones are left out of the
+/// bitstream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterSet {
+    /// Cycle counters for read/write batches (always needed for throughput).
+    pub batch_cycles: bool,
+    /// Per-transaction latency histogram (min/max/avg + buckets).
+    pub latency: bool,
+    /// Refresh-stall cycle counter (refresh-related performance degradation,
+    /// §II-C "other statistics").
+    pub refresh: bool,
+    /// Data-integrity mismatch counter.
+    pub integrity: bool,
+}
+
+impl CounterSet {
+    /// Everything on — what the paper's campaign used.
+    pub fn full() -> Self {
+        Self { batch_cycles: true, latency: true, refresh: true, integrity: true }
+    }
+
+    /// Throughput-only (cheapest design).
+    pub fn minimal() -> Self {
+        Self { batch_cycles: true, latency: false, refresh: false, integrity: false }
+    }
+}
+
+impl Default for CounterSet {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+/// Microarchitectural parameters of the MIG-like memory controller. These
+/// are the calibration knobs documented in DESIGN.md §5; the defaults are
+/// the "MIG-like" profile fitted to the paper's Table IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControllerParams {
+    /// Depth of the read request queue (native-interface entries).
+    pub read_queue_depth: usize,
+    /// Depth of the write request queue.
+    pub write_queue_depth: usize,
+    /// How many queue entries the FR-FCFS scheduler inspects per decision
+    /// (the reorder window; real MIG has a small lookahead).
+    pub lookahead: usize,
+    /// Write-drain high watermark: switch to write mode at/above this
+    /// occupancy.
+    pub write_drain_high: usize,
+    /// Write-drain low watermark: return to read mode at/below this.
+    pub write_drain_low: usize,
+    /// Maximum AXI transactions the front end keeps in flight per direction.
+    pub outstanding_cap: usize,
+    /// Close an open row after this many idle DRAM cycles (0 = pure open
+    /// page, never speculatively closed).
+    pub idle_precharge_cycles: u32,
+    /// Front-end command-path cost: minimum AXI cycles between accepted
+    /// AXI transactions on each address channel. Real MIG's address decode
+    /// pipeline accepts a new transaction at most every other fabric cycle,
+    /// which is what caps single-beat throughput at ~half the bus rate
+    /// (paper: 3.08 GB/s vs the 6.4 GB/s bus ceiling).
+    pub addr_cmd_interval_axi: u32,
+    /// Serial transaction front end (MIG-like): the controller begins
+    /// unrolling a new AXI transaction into its native queue only once the
+    /// previous transaction's requests have all issued their CAS (queue
+    /// drained). Requests *within* a transaction still pipeline freely —
+    /// this is what makes random long bursts recover to near-sequential
+    /// throughput while random singles pay the whole row cycle per
+    /// transaction (the paper's 5.5x/7.2x seq→rnd drops).
+    pub serial_frontend: bool,
+    /// Page-miss pipeline flush (MIG-like): a row miss (ACT issued on
+    /// behalf of direction X) blocks acceptance of the *next* X-direction
+    /// transaction until the miss's data phase completes plus a tRP refill
+    /// margin. Row hits stream unaffected — sequential singles stay
+    /// address-rate-limited while random singles pay the full
+    /// PRE+ACT+CAS+data round trip per transaction, reproducing the
+    /// paper's 0.56/0.42 GB/s random-single floors.
+    pub miss_flush: bool,
+    /// Minimum DRAM cycles the scheduler dwells in a direction before a
+    /// voluntary read↔write switch (watermark overflows and hazards still
+    /// force switches). Amortizes the tWTR/CL bus-turnaround penalties so
+    /// mixed workloads time-slice in batches instead of thrashing per
+    /// transaction — the behaviour behind the paper's "mixed beats pure"
+    /// observation.
+    pub mode_dwell_ck: u32,
+}
+
+impl Default for ControllerParams {
+    fn default() -> Self {
+        Self {
+            read_queue_depth: 16,
+            write_queue_depth: 16,
+            lookahead: 4,
+            write_drain_high: 12,
+            write_drain_low: 4,
+            outstanding_cap: 8,
+            idle_precharge_cycles: 0,
+            addr_cmd_interval_axi: 2,
+            serial_frontend: true,
+            miss_flush: true,
+            mode_dwell_ck: 48,
+        }
+    }
+}
+
+/// Design-time configuration: what gets instantiated on the FPGA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignConfig {
+    /// Number of memory channels (1–3 on the XCKU115; each adds one memory
+    /// interface + one traffic generator, per the paper's Fig. 1).
+    pub channels: usize,
+    /// Memory data rate (fixes PHY and AXI clocks at the 4:1 ratio).
+    pub speed: SpeedBin,
+    /// Instantiated performance counters.
+    pub counters: CounterSet,
+    /// AXI data-bus width in bits (the MIG default for a 64-bit DDR4
+    /// channel at 4:1 is 256; see DESIGN.md §5 calibration).
+    pub axi_data_width_bits: u32,
+    /// DRAM geometry of each channel's memory board.
+    pub geometry: DramGeometry,
+    /// Memory-controller microarchitecture.
+    pub controller: ControllerParams,
+}
+
+impl DesignConfig {
+    /// Single-channel design at the given data rate — the configuration of
+    /// the paper's Table IV and Figs. 2–3.
+    pub fn single_channel(speed: SpeedBin) -> Self {
+        Self::with_channels(1, speed)
+    }
+
+    /// N-channel design (the XCKU115 hosts up to 3 memory controllers).
+    pub fn with_channels(channels: usize, speed: SpeedBin) -> Self {
+        Self {
+            channels,
+            speed,
+            counters: CounterSet::full(),
+            axi_data_width_bits: 256,
+            geometry: DramGeometry::profpga_board(),
+            controller: ControllerParams::default(),
+        }
+    }
+
+    /// AXI data-bus width in bytes per beat.
+    pub fn axi_beat_bytes(&self) -> u32 {
+        self.axi_data_width_bits / 8
+    }
+
+    /// Validate invariants (channel count, width, watermark ordering, …).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.channels == 0 || self.channels > 3 {
+            return Err(ConfigError::new(format!(
+                "channels must be 1..=3 (XCKU115 hosts up to 3 memory controllers), got {}",
+                self.channels
+            )));
+        }
+        if !self.axi_data_width_bits.is_power_of_two() || self.axi_data_width_bits < 64 {
+            return Err(ConfigError::new(format!(
+                "axi_data_width_bits must be a power of two >= 64, got {}",
+                self.axi_data_width_bits
+            )));
+        }
+        let c = &self.controller;
+        if c.write_drain_low >= c.write_drain_high {
+            return Err(ConfigError::new("write_drain_low must be < write_drain_high"));
+        }
+        if c.write_drain_high > c.write_queue_depth {
+            return Err(ConfigError::new("write_drain_high must be <= write_queue_depth"));
+        }
+        if c.lookahead == 0 || c.outstanding_cap == 0 {
+            return Err(ConfigError::new("lookahead and outstanding_cap must be >= 1"));
+        }
+        if c.addr_cmd_interval_axi == 0 {
+            return Err(ConfigError::new("addr_cmd_interval_axi must be >= 1"));
+        }
+        self.geometry.validate().map_err(ConfigError::new)?;
+        Ok(())
+    }
+}
+
+impl Default for DesignConfig {
+    fn default() -> Self {
+        Self::single_channel(SpeedBin::Ddr4_1600)
+    }
+}
+
+/// Operation mix of a batch (run-time parameter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpMix {
+    /// Read-only batch.
+    ReadOnly,
+    /// Write-only batch.
+    WriteOnly,
+    /// Interleaved reads and writes; `read_pct` of transactions are reads.
+    Mixed { read_pct: u32 },
+}
+
+impl OpMix {
+    /// Fraction of read transactions, in percent.
+    pub fn read_pct(self) -> u32 {
+        match self {
+            OpMix::ReadOnly => 100,
+            OpMix::WriteOnly => 0,
+            OpMix::Mixed { read_pct } => read_pct,
+        }
+    }
+
+    /// Short label used in reports ("R"/"W"/"M", as in the paper's Fig. 2).
+    pub fn label(self) -> &'static str {
+        match self {
+            OpMix::ReadOnly => "R",
+            OpMix::WriteOnly => "W",
+            OpMix::Mixed { .. } => "M",
+        }
+    }
+}
+
+/// Addressing mode (run-time parameter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrMode {
+    /// Sequential: consecutive transactions target consecutive addresses.
+    Sequential,
+    /// Random: each transaction targets a uniformly random, burst-aligned
+    /// address in the test region; `seed` makes runs reproducible.
+    Random { seed: u64 },
+}
+
+impl AddrMode {
+    /// Short label used in reports ("Seq"/"Rnd").
+    pub fn label(self) -> &'static str {
+        match self {
+            AddrMode::Sequential => "Seq",
+            AddrMode::Random { .. } => "Rnd",
+        }
+    }
+
+    /// Is this the random mode?
+    pub fn is_random(self) -> bool {
+        matches!(self, AddrMode::Random { .. })
+    }
+}
+
+/// AXI burst type (AXI4 `AxBURST` encoding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstKind {
+    /// FIXED: same address every beat (e.g. FIFO draining).
+    Fixed,
+    /// INCR: address increments by the beat size each transfer.
+    Incr,
+    /// WRAP: like INCR but wraps at an aligned boundary of len×size bytes.
+    Wrap,
+}
+
+impl BurstKind {
+    /// AXI4 AxBURST field encoding.
+    pub fn axburst(self) -> u8 {
+        match self {
+            BurstKind::Fixed => 0b00,
+            BurstKind::Incr => 0b01,
+            BurstKind::Wrap => 0b10,
+        }
+    }
+
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            BurstKind::Fixed => "FIXED",
+            BurstKind::Incr => "INCR",
+            BurstKind::Wrap => "WRAP",
+        }
+    }
+}
+
+/// Burst specification: length (beats per transaction, 1–128) and type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstSpec {
+    /// Number of data transfers per transaction (1 = "single transaction").
+    pub len: u32,
+    /// Burst type.
+    pub kind: BurstKind,
+}
+
+impl BurstSpec {
+    /// A single (non-burst) transaction.
+    pub fn single() -> Self {
+        Self { len: 1, kind: BurstKind::Incr }
+    }
+
+    /// An incrementing burst of the given length.
+    pub fn incr(len: u32) -> Self {
+        Self { len, kind: BurstKind::Incr }
+    }
+
+    /// Paper labels: single / short (4) / medium (32) / long (128).
+    pub fn paper_label(&self) -> &'static str {
+        match self.len {
+            1 => "S",
+            4 => "SB",
+            32 => "MB",
+            128 => "LB",
+            _ => "B",
+        }
+    }
+}
+
+/// AXI handshake signaling mode of the traffic generator (§II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signaling {
+    /// Issue new requests as soon as possible, like a generic AXI device
+    /// (bounded by the outstanding-transaction window).
+    NonBlocking,
+    /// Delay new requests until all outstanding transactions complete.
+    Blocking,
+    /// Always assert `ready`, accepting data transfers immediately.
+    Aggressive,
+}
+
+impl Signaling {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Signaling::NonBlocking => "NB",
+            Signaling::Blocking => "BLK",
+            Signaling::Aggressive => "AGR",
+        }
+    }
+}
+
+/// What data the TG writes (and checks on read-back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPattern {
+    /// xorshift32 PRBS seeded per transaction — the default; matches the
+    /// Pallas kernel so payloads can be generated/verified via XLA.
+    Prbs { seed: u32 },
+    /// All-zeros (what Shuhai does; kept for the comparison ablation).
+    Zeros,
+    /// Constant word.
+    Constant(u32),
+}
+
+impl Default for DataPattern {
+    fn default() -> Self {
+        DataPattern::Prbs { seed: 1 }
+    }
+}
+
+/// Run-time configuration of one traffic-generator batch — everything in
+/// the right column of the paper's Table I.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PatternConfig {
+    /// Read/write mix.
+    pub op: OpMix,
+    /// Sequential or random addressing.
+    pub addr: AddrMode,
+    /// Burst length and type.
+    pub burst: BurstSpec,
+    /// Handshake signaling mode.
+    pub signaling: Signaling,
+    /// Number of transactions in the batch.
+    pub batch_len: u32,
+    /// First byte address of the test region.
+    pub start_addr: u64,
+    /// Size of the test region in bytes (addresses wrap inside it).
+    pub region_bytes: u64,
+    /// Payload pattern.
+    pub data: DataPattern,
+    /// Verify read data against expected contents (costs nothing in the
+    /// model; in hardware it instantiates the checker).
+    pub verify: bool,
+}
+
+impl PatternConfig {
+    /// Default region: 256 MiB starting at 0.
+    pub const DEFAULT_REGION: u64 = 256 << 20;
+
+    fn base(op: OpMix, addr: AddrMode, burst: BurstSpec, batch_len: u32) -> Self {
+        Self {
+            op,
+            addr,
+            burst,
+            signaling: Signaling::NonBlocking,
+            batch_len,
+            start_addr: 0,
+            region_bytes: Self::DEFAULT_REGION,
+            data: DataPattern::default(),
+            verify: false,
+        }
+    }
+
+    /// Sequential read burst pattern.
+    pub fn seq_read_burst(burst_len: u32, batch_len: u32) -> Self {
+        Self::base(OpMix::ReadOnly, AddrMode::Sequential, BurstSpec::incr(burst_len), batch_len)
+    }
+
+    /// Sequential write burst pattern.
+    pub fn seq_write_burst(burst_len: u32, batch_len: u32) -> Self {
+        Self::base(OpMix::WriteOnly, AddrMode::Sequential, BurstSpec::incr(burst_len), batch_len)
+    }
+
+    /// Random read burst pattern.
+    pub fn rnd_read_burst(burst_len: u32, batch_len: u32, seed: u64) -> Self {
+        Self::base(OpMix::ReadOnly, AddrMode::Random { seed }, BurstSpec::incr(burst_len), batch_len)
+    }
+
+    /// Random write burst pattern.
+    pub fn rnd_write_burst(burst_len: u32, batch_len: u32, seed: u64) -> Self {
+        Self::base(OpMix::WriteOnly, AddrMode::Random { seed }, BurstSpec::incr(burst_len), batch_len)
+    }
+
+    /// 50/50 mixed pattern.
+    pub fn mixed(addr: AddrMode, burst_len: u32, batch_len: u32) -> Self {
+        Self::base(OpMix::Mixed { read_pct: 50 }, addr, BurstSpec::incr(burst_len), batch_len)
+    }
+
+    /// Bytes moved by one transaction given the AXI beat size.
+    pub fn txn_bytes(&self, beat_bytes: u32) -> u64 {
+        self.burst.len as u64 * beat_bytes as u64
+    }
+
+    /// Validate run-time invariants (burst length 1–128, region alignment,
+    /// WRAP power-of-two length, mix percentage, …).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.burst.len == 0 || self.burst.len > 128 {
+            return Err(ConfigError::new(format!(
+                "burst length must be 1..=128 (paper §II-B), got {}",
+                self.burst.len
+            )));
+        }
+        if self.burst.kind == BurstKind::Wrap && !self.burst.len.is_power_of_two() {
+            return Err(ConfigError::new(
+                "WRAP bursts require a power-of-two length (AXI4 A3.4.1)",
+            ));
+        }
+        if let OpMix::Mixed { read_pct } = self.op {
+            if read_pct > 100 {
+                return Err(ConfigError::new("read_pct must be 0..=100"));
+            }
+        }
+        if self.batch_len == 0 {
+            return Err(ConfigError::new("batch_len must be >= 1"));
+        }
+        if self.region_bytes == 0 {
+            return Err(ConfigError::new("region_bytes must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+impl Default for PatternConfig {
+    fn default() -> Self {
+        PatternConfig::seq_read_burst(32, 1024)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speed_bin_clocks_match_table2() {
+        // Table II: PHY 800/933/1067/1200 MHz, AXI 200/233/267/300 MHz.
+        let phys = [800.0, 933.0, 1066.5, 1200.0];
+        let axis = [200.0, 233.25, 266.625, 300.0];
+        for (i, bin) in SpeedBin::ALL.iter().enumerate() {
+            assert!((bin.phy_clock_mhz() - phys[i]).abs() < 1.0, "{bin}: phy");
+            assert!((bin.axi_clock_mhz() - axis[i]).abs() < 0.5, "{bin}: axi");
+            // 4:1 ratio always holds
+            assert!((bin.phy_clock_mhz() / bin.axi_clock_mhz() - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn speed_bin_parse_roundtrip() {
+        for bin in SpeedBin::ALL {
+            assert_eq!(SpeedBin::parse(bin.name()), Some(bin));
+            assert_eq!(SpeedBin::parse(&bin.data_rate_mts().to_string()), Some(bin));
+        }
+        assert_eq!(SpeedBin::parse("3200"), None);
+    }
+
+    #[test]
+    fn design_validate_channel_bounds() {
+        for n in 1..=3 {
+            assert!(DesignConfig::with_channels(n, SpeedBin::Ddr4_2400).validate().is_ok());
+        }
+        assert!(DesignConfig::with_channels(0, SpeedBin::Ddr4_1600).validate().is_err());
+        assert!(DesignConfig::with_channels(4, SpeedBin::Ddr4_1600).validate().is_err());
+    }
+
+    #[test]
+    fn design_validate_watermarks() {
+        let mut d = DesignConfig::default();
+        d.controller.write_drain_low = d.controller.write_drain_high;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn pattern_validate_burst_bounds() {
+        let mut p = PatternConfig::seq_read_burst(128, 16);
+        assert!(p.validate().is_ok());
+        p.burst.len = 129;
+        assert!(p.validate().is_err());
+        p.burst.len = 0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn pattern_validate_wrap_pow2() {
+        let mut p = PatternConfig::seq_read_burst(16, 16);
+        p.burst.kind = BurstKind::Wrap;
+        assert!(p.validate().is_ok());
+        p.burst.len = 12;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn pattern_txn_bytes() {
+        let p = PatternConfig::seq_read_burst(4, 1);
+        assert_eq!(p.txn_bytes(32), 128);
+        let s = PatternConfig::seq_read_burst(1, 1);
+        assert_eq!(s.txn_bytes(32), 32);
+    }
+
+    #[test]
+    fn op_mix_labels() {
+        assert_eq!(OpMix::ReadOnly.label(), "R");
+        assert_eq!(OpMix::WriteOnly.label(), "W");
+        assert_eq!(OpMix::Mixed { read_pct: 50 }.label(), "M");
+        assert_eq!(OpMix::Mixed { read_pct: 30 }.read_pct(), 30);
+    }
+
+    #[test]
+    fn paper_burst_labels() {
+        assert_eq!(BurstSpec::single().paper_label(), "S");
+        assert_eq!(BurstSpec::incr(4).paper_label(), "SB");
+        assert_eq!(BurstSpec::incr(32).paper_label(), "MB");
+        assert_eq!(BurstSpec::incr(128).paper_label(), "LB");
+    }
+}

@@ -1,0 +1,406 @@
+//! Minimal config-file / key-value parser (offline substitute for
+//! serde + toml; see DESIGN.md §9).
+//!
+//! Format: `key = value` lines, `#` comments, optional `[section]` headers
+//! that prefix keys as `section.key`. The same `KEY=VALUE` tokens are also
+//! what the host-controller protocol uses inline in `CFG` commands, so both
+//! paths share the conversion functions here.
+
+use super::{
+    AddrMode, BurstKind, ControllerParams, CounterSet, DataPattern, DesignConfig, OpMix,
+    PatternConfig, Signaling, SpeedBin,
+};
+use std::collections::BTreeMap;
+
+/// Error produced when parsing or validating a configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    msg: String,
+}
+
+impl ConfigError {
+    /// Build an error from any printable message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parse `key = value` text (with `[section]` support) into a flat map of
+/// `section.key -> value`. Later keys override earlier ones.
+pub fn parse_kv_text(text: &str) -> Result<BTreeMap<String, String>, ConfigError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner.strip_suffix(']').ok_or_else(|| {
+                ConfigError::new(format!("line {}: unterminated section header", lineno + 1))
+            })?;
+            section = name.trim().to_ascii_lowercase();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            ConfigError::new(format!("line {}: expected `key = value`", lineno + 1))
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_ascii_lowercase()
+        } else {
+            format!("{}.{}", section, k.trim().to_ascii_lowercase())
+        };
+        map.insert(key, v.trim().to_string());
+    }
+    Ok(map)
+}
+
+fn get_usize(map: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize, ConfigError> {
+    match map.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| ConfigError::new(format!("{key}: expected integer, got `{v}`"))),
+    }
+}
+
+fn get_u32(map: &BTreeMap<String, String>, key: &str, default: u32) -> Result<u32, ConfigError> {
+    Ok(get_usize(map, key, default as usize)? as u32)
+}
+
+fn get_bool(map: &BTreeMap<String, String>, key: &str, default: bool) -> Result<bool, ConfigError> {
+    match map.get(key).map(|s| s.to_ascii_lowercase()) {
+        None => Ok(default),
+        Some(v) => match v.as_str() {
+            "true" | "1" | "yes" | "on" => Ok(true),
+            "false" | "0" | "no" | "off" => Ok(false),
+            _ => Err(ConfigError::new(format!("{key}: expected bool, got `{v}`"))),
+        },
+    }
+}
+
+/// Parse `123`, `4k`, `16m`, `2g` (binary suffixes) into bytes/counts.
+pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = s.strip_suffix('k') {
+        (n, 1u64 << 10)
+    } else if let Some(n) = s.strip_suffix('m') {
+        (n, 1u64 << 20)
+    } else if let Some(n) = s.strip_suffix('g') {
+        (n, 1u64 << 30)
+    } else {
+        (s.as_str(), 1)
+    };
+    num.trim().parse::<u64>().ok().map(|v| v * mult)
+}
+
+/// Build a [`DesignConfig`] from config text. Recognized keys (all
+/// optional; defaults = single-channel DDR4-1600 MIG-like profile):
+///
+/// ```text
+/// channels = 3
+/// speed = 2400                 # or "ddr4-2400"
+/// axi_width = 256              # bits
+/// [counters]  batch_cycles/latency/refresh/integrity = true|false
+/// [controller] read_queue_depth / write_queue_depth / lookahead /
+///              write_drain_high / write_drain_low / outstanding_cap /
+///              idle_precharge_cycles / addr_cmd_interval_axi
+/// ```
+pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
+    let map = parse_kv_text(text)?;
+    let mut cfg = DesignConfig::default();
+    cfg.channels = get_usize(&map, "channels", cfg.channels)?;
+    if let Some(v) = map.get("speed") {
+        cfg.speed = SpeedBin::parse(v)
+            .ok_or_else(|| ConfigError::new(format!("speed: unknown bin `{v}`")))?;
+    }
+    cfg.axi_data_width_bits = get_u32(&map, "axi_width", cfg.axi_data_width_bits)?;
+    cfg.counters = CounterSet {
+        batch_cycles: get_bool(&map, "counters.batch_cycles", true)?,
+        latency: get_bool(&map, "counters.latency", true)?,
+        refresh: get_bool(&map, "counters.refresh", true)?,
+        integrity: get_bool(&map, "counters.integrity", true)?,
+    };
+    let d = ControllerParams::default();
+    cfg.controller = ControllerParams {
+        read_queue_depth: get_usize(&map, "controller.read_queue_depth", d.read_queue_depth)?,
+        write_queue_depth: get_usize(&map, "controller.write_queue_depth", d.write_queue_depth)?,
+        lookahead: get_usize(&map, "controller.lookahead", d.lookahead)?,
+        write_drain_high: get_usize(&map, "controller.write_drain_high", d.write_drain_high)?,
+        write_drain_low: get_usize(&map, "controller.write_drain_low", d.write_drain_low)?,
+        outstanding_cap: get_usize(&map, "controller.outstanding_cap", d.outstanding_cap)?,
+        idle_precharge_cycles: get_u32(
+            &map,
+            "controller.idle_precharge_cycles",
+            d.idle_precharge_cycles,
+        )?,
+        addr_cmd_interval_axi: get_u32(
+            &map,
+            "controller.addr_cmd_interval_axi",
+            d.addr_cmd_interval_axi,
+        )?,
+        serial_frontend: get_bool(&map, "controller.serial_frontend", d.serial_frontend)?,
+        miss_flush: get_bool(&map, "controller.miss_flush", d.miss_flush)?,
+        mode_dwell_ck: get_u32(&map, "controller.mode_dwell_ck", d.mode_dwell_ck)?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Build a [`PatternConfig`] from `KEY=VALUE` tokens — the exact syntax the
+/// host-controller `CFG` command uses (§II-C):
+///
+/// ```text
+/// OP=R|W|M  RDPCT=50  ADDR=SEQ|RND  SEED=7  BURST=32  TYPE=FIXED|INCR|WRAP
+/// SIG=NB|BLK|AGR  BATCH=4096  START=0  REGION=256m  DATA=PRBS|ZEROS|<hex>
+/// VERIFY=0|1
+/// ```
+pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigError> {
+    let mut p = PatternConfig::default();
+    let mut read_pct: Option<u32> = None;
+    let mut seed: u64 = 0xD0D0_CAFE;
+    let mut data_seed: u32 = 1;
+    for tok in tokens {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| ConfigError::new(format!("expected KEY=VALUE, got `{tok}`")))?;
+        let key = k.to_ascii_uppercase();
+        let val = v.trim();
+        let upval = val.to_ascii_uppercase();
+        match key.as_str() {
+            "OP" => {
+                p.op = match upval.as_str() {
+                    "R" | "READ" => OpMix::ReadOnly,
+                    "W" | "WRITE" => OpMix::WriteOnly,
+                    "M" | "MIX" | "MIXED" => OpMix::Mixed { read_pct: read_pct.unwrap_or(50) },
+                    _ => return Err(ConfigError::new(format!("OP: unknown `{val}`"))),
+                }
+            }
+            "RDPCT" => {
+                let pct: u32 = val
+                    .parse()
+                    .map_err(|_| ConfigError::new(format!("RDPCT: expected int, got `{val}`")))?;
+                read_pct = Some(pct);
+                if let OpMix::Mixed { .. } = p.op {
+                    p.op = OpMix::Mixed { read_pct: pct };
+                }
+            }
+            "ADDR" => {
+                p.addr = match upval.as_str() {
+                    "SEQ" | "SEQUENTIAL" => AddrMode::Sequential,
+                    "RND" | "RANDOM" => AddrMode::Random { seed },
+                    _ => return Err(ConfigError::new(format!("ADDR: unknown `{val}`"))),
+                }
+            }
+            "SEED" => {
+                seed = parse_u64_with_suffix(val)
+                    .ok_or_else(|| ConfigError::new(format!("SEED: expected int, got `{val}`")))?;
+                if let AddrMode::Random { .. } = p.addr {
+                    p.addr = AddrMode::Random { seed };
+                }
+            }
+            "BURST" | "LEN" => {
+                p.burst.len = val
+                    .parse()
+                    .map_err(|_| ConfigError::new(format!("BURST: expected int, got `{val}`")))?;
+            }
+            "TYPE" => {
+                p.burst.kind = match upval.as_str() {
+                    "FIXED" => BurstKind::Fixed,
+                    "INCR" => BurstKind::Incr,
+                    "WRAP" => BurstKind::Wrap,
+                    _ => return Err(ConfigError::new(format!("TYPE: unknown `{val}`"))),
+                }
+            }
+            "SIG" => {
+                p.signaling = match upval.as_str() {
+                    "NB" | "NONBLOCKING" => Signaling::NonBlocking,
+                    "BLK" | "B" | "BLOCKING" => Signaling::Blocking,
+                    "AGR" | "AG" | "AGGRESSIVE" => Signaling::Aggressive,
+                    _ => return Err(ConfigError::new(format!("SIG: unknown `{val}`"))),
+                }
+            }
+            "BATCH" => {
+                p.batch_len = parse_u64_with_suffix(val)
+                    .ok_or_else(|| ConfigError::new(format!("BATCH: expected int, got `{val}`")))?
+                    as u32;
+            }
+            "START" => {
+                p.start_addr = parse_u64_with_suffix(val).ok_or_else(|| {
+                    ConfigError::new(format!("START: expected int, got `{val}`"))
+                })?;
+            }
+            "REGION" => {
+                p.region_bytes = parse_u64_with_suffix(val).ok_or_else(|| {
+                    ConfigError::new(format!("REGION: expected int, got `{val}`"))
+                })?;
+            }
+            "DATA" => {
+                p.data = match upval.as_str() {
+                    "PRBS" => DataPattern::Prbs { seed: data_seed },
+                    "ZEROS" => DataPattern::Zeros,
+                    hex => {
+                        let w = u32::from_str_radix(hex.trim_start_matches("0X"), 16)
+                            .map_err(|_| {
+                                ConfigError::new(format!("DATA: expected PRBS|ZEROS|hex, got `{val}`"))
+                            })?;
+                        DataPattern::Constant(w)
+                    }
+                }
+            }
+            "DSEED" => {
+                data_seed = val
+                    .parse()
+                    .map_err(|_| ConfigError::new(format!("DSEED: expected int, got `{val}`")))?;
+                if let DataPattern::Prbs { .. } = p.data {
+                    p.data = DataPattern::Prbs { seed: data_seed };
+                }
+            }
+            "VERIFY" => {
+                p.verify = matches!(upval.as_str(), "1" | "TRUE" | "ON" | "YES");
+            }
+            _ => return Err(ConfigError::new(format!("unknown pattern key `{k}`"))),
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Render a [`PatternConfig`] back to the `CFG` token syntax (used by the
+/// host protocol echo and for logging). `parse_pattern_config` of the
+/// output reproduces the config (round-trip property-tested).
+pub fn format_pattern_config(p: &PatternConfig) -> String {
+    let mut s = String::new();
+    match p.op {
+        OpMix::ReadOnly => s.push_str("OP=R"),
+        OpMix::WriteOnly => s.push_str("OP=W"),
+        OpMix::Mixed { read_pct } => {
+            s.push_str("OP=M");
+            s.push_str(&format!(" RDPCT={read_pct}"));
+        }
+    }
+    match p.addr {
+        AddrMode::Sequential => s.push_str(" ADDR=SEQ"),
+        AddrMode::Random { seed } => s.push_str(&format!(" ADDR=RND SEED={seed}")),
+    }
+    s.push_str(&format!(" BURST={} TYPE={}", p.burst.len, p.burst.kind.label()));
+    s.push_str(&format!(" SIG={}", p.signaling.label()));
+    s.push_str(&format!(" BATCH={}", p.batch_len));
+    s.push_str(&format!(" START={} REGION={}", p.start_addr, p.region_bytes));
+    match p.data {
+        DataPattern::Prbs { seed } => s.push_str(&format!(" DATA=PRBS DSEED={seed}")),
+        DataPattern::Zeros => s.push_str(" DATA=ZEROS"),
+        DataPattern::Constant(w) => s.push_str(&format!(" DATA={w:08x}")),
+    }
+    s.push_str(&format!(" VERIFY={}", u8::from(p.verify)));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_text_sections_and_comments() {
+        let m = parse_kv_text(
+            "# top\nchannels = 2\n[controller]\nlookahead = 8 # window\n\n[counters]\nlatency=off\n",
+        )
+        .unwrap();
+        assert_eq!(m.get("channels").unwrap(), "2");
+        assert_eq!(m.get("controller.lookahead").unwrap(), "8");
+        assert_eq!(m.get("counters.latency").unwrap(), "off");
+    }
+
+    #[test]
+    fn kv_text_rejects_garbage() {
+        assert!(parse_kv_text("not a kv line").is_err());
+        assert!(parse_kv_text("[unterminated").is_err());
+    }
+
+    #[test]
+    fn design_config_full_text() {
+        let cfg = parse_design_config(
+            "channels = 3\nspeed = ddr4-2400\naxi_width = 256\n\
+             [controller]\nlookahead = 6\noutstanding_cap = 16\n\
+             [counters]\nrefresh = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.channels, 3);
+        assert_eq!(cfg.speed, SpeedBin::Ddr4_2400);
+        assert_eq!(cfg.controller.lookahead, 6);
+        assert_eq!(cfg.controller.outstanding_cap, 16);
+        assert!(!cfg.counters.refresh);
+        assert!(cfg.counters.latency);
+    }
+
+    #[test]
+    fn design_config_invalid_rejected() {
+        assert!(parse_design_config("channels = 9").is_err());
+        assert!(parse_design_config("speed = 3200").is_err());
+    }
+
+    #[test]
+    fn suffix_parsing() {
+        assert_eq!(parse_u64_with_suffix("64"), Some(64));
+        assert_eq!(parse_u64_with_suffix("4k"), Some(4096));
+        assert_eq!(parse_u64_with_suffix("16M"), Some(16 << 20));
+        assert_eq!(parse_u64_with_suffix("2g"), Some(2 << 30));
+        assert_eq!(parse_u64_with_suffix("x"), None);
+    }
+
+    #[test]
+    fn pattern_tokens_full() {
+        let p = parse_pattern_config(&[
+            "OP=M", "RDPCT=70", "ADDR=RND", "SEED=99", "BURST=16", "TYPE=WRAP", "SIG=AGR",
+            "BATCH=2k", "START=4096", "REGION=64m", "DATA=PRBS", "DSEED=5", "VERIFY=1",
+        ])
+        .unwrap();
+        assert_eq!(p.op, OpMix::Mixed { read_pct: 70 });
+        assert_eq!(p.addr, AddrMode::Random { seed: 99 });
+        assert_eq!(p.burst, super::super::BurstSpec { len: 16, kind: BurstKind::Wrap });
+        assert_eq!(p.signaling, Signaling::Aggressive);
+        assert_eq!(p.batch_len, 2048);
+        assert_eq!(p.start_addr, 4096);
+        assert_eq!(p.region_bytes, 64 << 20);
+        assert_eq!(p.data, DataPattern::Prbs { seed: 5 });
+        assert!(p.verify);
+    }
+
+    #[test]
+    fn pattern_rdpct_order_independent() {
+        let a = parse_pattern_config(&["RDPCT=30", "OP=M"]).unwrap();
+        let b = parse_pattern_config(&["OP=M", "RDPCT=30"]).unwrap();
+        assert_eq!(a.op, OpMix::Mixed { read_pct: 30 });
+        assert_eq!(b.op, OpMix::Mixed { read_pct: 30 });
+    }
+
+    #[test]
+    fn pattern_rejects_invalid() {
+        assert!(parse_pattern_config(&["OP=X"]).is_err());
+        assert!(parse_pattern_config(&["BURST=500"]).is_err());
+        assert!(parse_pattern_config(&["BURST=12", "TYPE=WRAP"]).is_err());
+        assert!(parse_pattern_config(&["NOPE=1"]).is_err());
+        assert!(parse_pattern_config(&["OP"]).is_err());
+    }
+
+    #[test]
+    fn pattern_format_roundtrip() {
+        let p = parse_pattern_config(&[
+            "OP=M", "RDPCT=25", "ADDR=RND", "SEED=3", "BURST=8", "TYPE=INCR", "SIG=BLK",
+            "BATCH=100", "DATA=ZEROS", "VERIFY=1",
+        ])
+        .unwrap();
+        let text = format_pattern_config(&p);
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        let q = parse_pattern_config(&toks).unwrap();
+        assert_eq!(p, q);
+    }
+}

@@ -1,0 +1,816 @@
+//! MIG-like DDR4 memory controller (the paper's "memory interface" minus
+//! the analog PHY).
+//!
+//! §II-A: *"The memory controller subcomponent receives as its inputs read
+//! and write requests, possibly concurrently, buffers and reorders them to
+//! boost performance while maintaining data integrity, and then passes them
+//! to the PHY layer"* — this module is exactly that subcomponent:
+//!
+//! - separate **read and write queues** fed concurrently by the AXI front
+//!   end, with configurable depths;
+//! - an **FR-FCFS, open-page scheduler** with a bounded reorder window
+//!   (`lookahead`): row hits first, then oldest-first ACT/PRE preparation;
+//! - **write draining** with high/low watermarks to batch bus turnarounds;
+//! - **refresh insertion** on the tREFI cadence (PREA + REF, tRFC stall);
+//! - the **PHY command serialization** model: one DDR4 command slot per
+//!   DRAM clock — the 4:1 PHY:AXI clock ratio means up to four command
+//!   slots per fabric cycle, matching §II-A's "issue multiple commands to
+//!   DDR4 at a time".
+//!
+//! Data integrity under reordering is preserved the same way MIG does it:
+//! requests to the *same DRAM burst address* are never reordered past each
+//! other (checked by `same-address ordering` in the property tests).
+
+pub mod request;
+
+pub use request::{Completion, MemRequest};
+
+use std::collections::VecDeque;
+
+use crate::config::ControllerParams;
+use crate::ddr4::{Cmd, Cycle, DdrDevice, DramGeometry, TimingParams};
+
+/// Scheduler direction mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Read,
+    Write,
+}
+
+/// Refresh state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RefreshState {
+    Idle,
+    /// PREA issued / pending; waiting to issue REF.
+    Draining,
+}
+
+/// Controller-side statistics (beyond the device command counts).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CtrlStats {
+    /// Cycles spent with the command slot blocked by refresh (PREA-to-end
+    /// of tRFC). Feeds the "refresh-related performance degradation"
+    /// statistic of §II-C.
+    pub refresh_stall_cycles: u64,
+    /// Read→write and write→read mode switches.
+    pub mode_switches: u64,
+    /// Requests that arrived to a full queue (back-pressure events).
+    pub queue_rejects: u64,
+}
+
+/// The memory controller for one channel.
+#[derive(Debug, Clone)]
+pub struct MemController {
+    params: ControllerParams,
+    device: DdrDevice,
+    read_q: VecDeque<MemRequest>,
+    write_q: VecDeque<MemRequest>,
+    completions: VecDeque<Completion>, // sorted by done_at (CAS issue order)
+    mode: Mode,
+    refresh: RefreshState,
+    refresh_started: Cycle,
+    /// Page-miss pipeline-flush gates per direction (see
+    /// [`ControllerParams::miss_flush`]): no new transaction of that
+    /// direction is accepted by the front end before this cycle.
+    read_gate_until: Cycle,
+    write_gate_until: Cycle,
+    /// Cycle at which the scheduler last switched direction (dwell timer).
+    mode_entered: Cycle,
+    /// Last CAS issue time per bank (adaptive page-policy timer).
+    bank_last_use: Vec<Cycle>,
+    /// External input (push) since the last full scheduler evaluation.
+    dirty: bool,
+    /// No internally-triggered event can occur before this cycle: between
+    /// external inputs the controller is deterministic, so when a full
+    /// evaluation issues nothing it computes the earliest cycle at which
+    /// any candidate becomes legal and sleeps until then (the tick
+    /// fast-path; §Perf).
+    idle_until: Cycle,
+    stats: CtrlStats,
+}
+
+impl MemController {
+    /// Build a controller around a fresh device.
+    pub fn new(params: ControllerParams, timing: TimingParams, geometry: DramGeometry) -> Self {
+        let banks = geometry.banks() as usize;
+        Self {
+            bank_last_use: vec![0; banks],
+            dirty: true,
+            idle_until: 0,
+            params,
+            device: DdrDevice::new(timing, geometry),
+            read_q: VecDeque::with_capacity(params.read_queue_depth),
+            write_q: VecDeque::with_capacity(params.write_queue_depth),
+            completions: VecDeque::new(),
+            mode: Mode::Read,
+            refresh: RefreshState::Idle,
+            refresh_started: 0,
+            read_gate_until: 0,
+            write_gate_until: 0,
+            mode_entered: 0,
+            stats: CtrlStats::default(),
+        }
+    }
+
+    /// The underlying device model (for statistics).
+    pub fn device(&self) -> &DdrDevice {
+        &self.device
+    }
+
+    /// Controller statistics.
+    pub fn stats(&self) -> &CtrlStats {
+        &self.stats
+    }
+
+    /// Microarchitectural parameters in force.
+    pub fn params(&self) -> &ControllerParams {
+        &self.params
+    }
+
+    /// Free slots in the read queue.
+    pub fn read_slots(&self) -> usize {
+        self.params.read_queue_depth - self.read_q.len()
+    }
+
+    /// Free slots in the write queue.
+    pub fn write_slots(&self) -> usize {
+        self.params.write_queue_depth - self.write_q.len()
+    }
+
+    /// Is the read request queue empty (serial-front-end gate)?
+    pub fn read_queue_empty(&self) -> bool {
+        self.read_q.is_empty()
+    }
+
+    /// Is the write request queue empty (serial-front-end gate)?
+    pub fn write_queue_empty(&self) -> bool {
+        self.write_q.is_empty()
+    }
+
+    /// Earliest DRAM cycle at which the front end accepts a new
+    /// transaction of the given direction (page-miss pipeline flush; 0
+    /// when `miss_flush` is off or no miss is in flight).
+    pub fn frontend_gate(&self, is_write: bool) -> Cycle {
+        if is_write {
+            self.write_gate_until
+        } else {
+            self.read_gate_until
+        }
+    }
+
+    /// Is all queued work drained (queues and in-flight completions empty)?
+    pub fn is_idle(&self) -> bool {
+        self.read_q.is_empty() && self.write_q.is_empty() && self.completions.is_empty()
+    }
+
+    /// Enqueue a request from the AXI front end. `Err(req)` = queue full
+    /// (AXI back-pressure; the front end must retry).
+    pub fn try_push(&mut self, req: MemRequest) -> Result<(), MemRequest> {
+        let cap =
+            if req.is_write { self.params.write_queue_depth } else { self.params.read_queue_depth };
+        let len = if req.is_write { self.write_q.len() } else { self.read_q.len() };
+        if len >= cap {
+            self.stats.queue_rejects += 1;
+            return Err(req);
+        }
+        let q = if req.is_write { &mut self.write_q } else { &mut self.read_q };
+        q.push_back(req);
+        // A new request may be issuable before the cached wake time:
+        // force a full evaluation on the next tick. (A precise per-request
+        // wake computation was measured slower — the evaluation happens
+        // within a few cycles anyway under load; see EXPERIMENTS.md §Perf.)
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Pop completions whose data phase has finished by `now`.
+    pub fn pop_completions(&mut self, now: Cycle, out: &mut Vec<Completion>) {
+        while let Some(c) = self.completions.front() {
+            if c.done_at <= now {
+                out.push(*c);
+                self.completions.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Advance one DRAM clock: issue at most one DDR4 command (the PHY
+    /// command-slot model). Returns the issued command, if any.
+    pub fn tick(&mut self, now: Cycle) -> Option<Cmd> {
+        // Fast path: between external inputs the controller is
+        // deterministic. If the last full evaluation issued nothing and
+        // computed that no candidate becomes legal before `idle_until`,
+        // skip the scan entirely (dominates random-pattern simulation,
+        // where most cycles wait on row timing or the miss-flush gate).
+        if !self.dirty && now < self.idle_until && self.refresh == RefreshState::Idle {
+            return None;
+        }
+        self.dirty = false;
+        let cmd = self.tick_eval(now);
+        if cmd.is_some() {
+            // state changed: earlier events may now be possible
+            self.idle_until = 0;
+        }
+        cmd
+    }
+
+    /// Full scheduler evaluation (the slow path of [`Self::tick`]); sets
+    /// `idle_until` when nothing can issue.
+    fn tick_eval(&mut self, now: Cycle) -> Option<Cmd> {
+        // 1. Refresh has absolute priority once due (data integrity).
+        if self.refresh != RefreshState::Idle || self.device.refresh_needed(now) {
+            if let Some(cmd) = self.tick_refresh(now) {
+                return Some(cmd);
+            }
+            // Refresh in progress but no command this cycle (waiting on
+            // timing): the slot is a refresh stall.
+            if self.refresh != RefreshState::Idle {
+                self.stats.refresh_stall_cycles += 1;
+                return None;
+            }
+        }
+
+        // 2. Direction selection with watermark + dwell hysteresis.
+        self.update_mode(now);
+        let mut wake = self.device.refresh_due();
+        // a pending grace (dwell/4) or dwell expiry can change the mode
+        if !self.read_q.is_empty() || !self.write_q.is_empty() {
+            wake = wake.min(self.mode_entered + (self.params.mode_dwell_ck / 4).max(1) as Cycle);
+        }
+
+        // 3. FR-FCFS: try a CAS in the current direction.
+        match self.try_cas(now) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+
+        // 4. Prepare rows (ACT/PRE) for the current direction...
+        match self.try_prep(now, self.mode) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+        // ...and opportunistically for the other direction on idle slots.
+        let other = match self.mode {
+            Mode::Read => Mode::Write,
+            Mode::Write => Mode::Read,
+        };
+        match self.try_prep(now, other) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+        // 5. Adaptive page policy: speculatively close rows idle longer
+        //    than the configured timer (0 = pure open-page, never close).
+        match self.try_idle_precharge(now) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+        self.idle_until = wake.max(now + 1);
+        None
+    }
+
+    /// Close an open row that has sat unused for `idle_precharge_cycles`
+    /// and that no queued request still wants — turns the next access to
+    /// that bank from a 2-command conflict (PRE+ACT) into a plain ACT,
+    /// trading sequential locality for random-access latency (the
+    /// page-policy ablation bench quantifies the trade).
+    fn try_idle_precharge(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
+        let timer = self.params.idle_precharge_cycles;
+        if timer == 0 {
+            return (None, Cycle::MAX);
+        }
+        let mut wake = Cycle::MAX;
+        for bank in 0..self.bank_last_use.len() {
+            let b = self.device.bank(bank as u32);
+            let Some(open_row) = b.open_row else { continue };
+            let expires = self.bank_last_use[bank] + timer as Cycle;
+            if now < expires {
+                wake = wake.min(expires);
+                continue;
+            }
+            let wanted = self
+                .read_q
+                .iter()
+                .chain(self.write_q.iter())
+                .any(|r| r.addr.bank == bank as u32 && r.addr.row == open_row);
+            if wanted {
+                continue;
+            }
+            let cmd = Cmd::Pre { bank: bank as u32 };
+            let at = self.device.earliest_issue(cmd);
+            if at <= now && self.device.can_issue(cmd, now) {
+                self.device.issue(cmd, now);
+                return (Some(cmd), now);
+            }
+            wake = wake.min(at);
+        }
+        (None, wake)
+    }
+
+    fn tick_refresh(&mut self, now: Cycle) -> Option<Cmd> {
+        match self.refresh {
+            RefreshState::Idle => {
+                self.refresh_started = now;
+                if self.device.all_banks_closed() {
+                    if self.device.can_issue(Cmd::Ref, now) {
+                        self.device.issue(Cmd::Ref, now);
+                        // tRFC itself stalls the command slot; account it.
+                        self.stats.refresh_stall_cycles += self.device.timing().trfc as u64;
+                        return Some(Cmd::Ref);
+                    }
+                    self.refresh = RefreshState::Draining;
+                    None
+                } else if self.device.can_issue(Cmd::PreAll, now) {
+                    self.device.issue(Cmd::PreAll, now);
+                    self.refresh = RefreshState::Draining;
+                    Some(Cmd::PreAll)
+                } else {
+                    self.refresh = RefreshState::Draining;
+                    None
+                }
+            }
+            RefreshState::Draining => {
+                if !self.device.all_banks_closed() {
+                    if self.device.can_issue(Cmd::PreAll, now) {
+                        self.device.issue(Cmd::PreAll, now);
+                        return Some(Cmd::PreAll);
+                    }
+                    return None;
+                }
+                if self.device.can_issue(Cmd::Ref, now) {
+                    self.device.issue(Cmd::Ref, now);
+                    self.refresh = RefreshState::Idle;
+                    self.stats.refresh_stall_cycles += self.device.timing().trfc as u64;
+                    return Some(Cmd::Ref);
+                }
+                None
+            }
+        }
+    }
+
+    fn update_mode(&mut self, now: Cycle) {
+        let wlen = self.write_q.len();
+        let dwell = self.params.mode_dwell_ck as Cycle;
+        // Full dwell gates fairness switches under bidirectional load; a
+        // quarter-dwell grace bridges the transient empty gaps a serial
+        // front end leaves between transactions (prevents per-transaction
+        // turnaround thrash).
+        let dwell_ok = now >= self.mode_entered + dwell;
+        let grace_ok = now >= self.mode_entered + dwell / 4;
+        let switch = match self.mode {
+            Mode::Read => {
+                wlen >= self.params.write_drain_high
+                    || self.head_hazard_blocked(false)
+                    || (wlen > 0 && dwell_ok && !self.read_q.is_empty())
+                    || (wlen > 0 && grace_ok && self.read_q.is_empty())
+            }
+            Mode::Write => {
+                self.head_hazard_blocked(true)
+                    || (!self.read_q.is_empty()
+                        && (wlen <= self.params.write_drain_low || dwell_ok))
+                    || (wlen == 0 && grace_ok && !self.read_q.is_empty())
+            }
+        };
+        if switch {
+            self.mode = match self.mode {
+                Mode::Read => Mode::Write,
+                Mode::Write => Mode::Read,
+            };
+            self.mode_entered = now;
+            self.stats.mode_switches += 1;
+        }
+    }
+
+    /// Is the oldest request of the active queue blocked by an older
+    /// same-address request in the *other* queue? (RAW/WAR hazard that
+    /// only draining the other direction can clear — without this check a
+    /// write-then-read to one address deadlocks read mode.)
+    fn head_hazard_blocked(&self, is_write: bool) -> bool {
+        let (q, other) =
+            if is_write { (&self.write_q, &self.read_q) } else { (&self.read_q, &self.write_q) };
+        let Some(head) = q.front() else { return false };
+        other.iter().any(|r| r.addr == head.addr && r.arrival < head.arrival)
+    }
+
+    /// FR-FCFS CAS selection: scan the first `lookahead` entries of the
+    /// active queue; issue the first row-hit whose CAS is legal now.
+    /// Same-address ordering: a request is skipped if an older queued
+    /// request (either direction) targets the same DRAM burst.
+    /// On failure, returns the earliest cycle a scanned candidate becomes
+    /// legal (wake hint for the tick fast-path).
+    fn try_cas(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
+        let is_write = self.mode == Mode::Write;
+        let look = self.params.lookahead;
+        let (q, t) = match self.mode {
+            Mode::Read => (&self.read_q, self.device.timing()),
+            Mode::Write => (&self.write_q, self.device.timing()),
+        };
+        let (cl, cwl, burst) = (t.cl, t.cwl, t.burst_cycles);
+
+        let mut pick: Option<usize> = None;
+        let mut wake = Cycle::MAX;
+        for (i, req) in q.iter().take(look).enumerate() {
+            if self.device.row_state(req.addr.bank, req.addr.row) == Some(true) {
+                let cmd = if is_write {
+                    Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+                } else {
+                    Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+                };
+                if self.reordered_past_same_addr(i, is_write) {
+                    continue; // hazard: cleared by a future issue (dirty)
+                }
+                let at = self.device.earliest_issue(cmd);
+                if at <= now {
+                    pick = Some(i);
+                    break;
+                }
+                wake = wake.min(at);
+            }
+        }
+        let Some(i) = pick else { return (None, wake) };
+        let req = if is_write {
+            self.write_q.remove(i).unwrap()
+        } else {
+            self.read_q.remove(i).unwrap()
+        };
+        let cmd = if is_write {
+            Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+        } else {
+            Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+        };
+        self.device.issue(cmd, now);
+        self.bank_last_use[req.addr.bank as usize] = now;
+        let done_at = now + if is_write { cwl + burst } else { cl + burst } as Cycle;
+        // CAS issue order == data order on the bus (tCCD >= burst), so the
+        // completion deque stays sorted by done_at per direction; merged
+        // order may interleave reads and writes but each is queried by the
+        // consumer with `done_at <= now`, so keep globally sorted:
+        let comp = Completion {
+            txn_id: req.txn_id,
+            is_write,
+            burst_addr: req.burst_addr,
+            beats: req.beats,
+            done_at,
+            arrival: req.arrival,
+            last_of_txn: req.last_of_txn,
+        };
+        let pos = self
+            .completions
+            .iter()
+            .rposition(|c| c.done_at <= done_at)
+            .map(|p| p + 1)
+            .unwrap_or(0);
+        self.completions.insert(pos, comp);
+        (Some(cmd), now)
+    }
+
+    /// Would issuing queue entry `i` overtake an older same-address entry?
+    fn reordered_past_same_addr(&self, i: usize, is_write: bool) -> bool {
+        let q = if is_write { &self.write_q } else { &self.read_q };
+        let target = q[i].addr;
+        // older entries in the same queue
+        if q.iter().take(i).any(|r| r.addr == target) {
+            return true;
+        }
+        // and older entries in the opposite queue (RAW/WAR hazards)
+        let other = if is_write { &self.read_q } else { &self.write_q };
+        let my_arrival = q[i].arrival;
+        other.iter().any(|r| r.addr == target && r.arrival < my_arrival)
+    }
+
+    /// Row preparation for the oldest serviceable entries of `mode`'s
+    /// queue: ACT closed banks, PRE conflicting rows (unless an older
+    /// request still wants the open row).
+    fn try_prep(&mut self, now: Cycle, mode: Mode) -> (Option<Cmd>, Cycle) {
+        let look = self.params.lookahead;
+        let q = match mode {
+            Mode::Read => &self.read_q,
+            Mode::Write => &self.write_q,
+        };
+        // Collect candidate (bank,row) prep targets oldest-first; dedup
+        // banks so we don't try to ACT one bank twice in a window.
+        let mut seen_banks = 0u32; // bitmask over <=32 banks
+        let mut act_target: Option<(u32, u32)> = None;
+        let mut pre_target: Option<u32> = None;
+        for req in q.iter().take(look) {
+            let bit = 1u32 << req.addr.bank;
+            if seen_banks & bit != 0 {
+                continue;
+            }
+            seen_banks |= bit;
+            match self.device.row_state(req.addr.bank, req.addr.row) {
+                None => {
+                    if act_target.is_none() {
+                        act_target = Some((req.addr.bank, req.addr.row));
+                    }
+                }
+                Some(false) => {
+                    // conflict: only precharge if no older queued request
+                    // (this window) still hits the open row of this bank
+                    let open = self.device.bank(req.addr.bank).open_row;
+                    let still_wanted = q.iter().take(look).any(|r| {
+                        r.addr.bank == req.addr.bank
+                            && Some(r.addr.row) == open
+                            && r.arrival < req.arrival
+                    });
+                    if !still_wanted && pre_target.is_none() {
+                        pre_target = Some(req.addr.bank);
+                    }
+                }
+                Some(true) => {}
+            }
+        }
+        let mut wake = Cycle::MAX;
+        if let Some((bank, row)) = act_target {
+            let cmd = Cmd::Act { bank, row };
+            let at = self.device.earliest_issue(cmd);
+            if at <= now {
+                self.device.issue(cmd, now);
+                // Page-miss pipeline flush: hold the next transaction of
+                // this direction until the miss's data phase completes
+                // (+tRP refill). Misses *within* an already-accepted
+                // transaction keep pipelining.
+                if self.params.miss_flush {
+                    let t = self.device.timing();
+                    let gate = match mode {
+                        Mode::Read => {
+                            now + (t.trcd + t.cl + t.burst_cycles + t.trp) as Cycle
+                        }
+                        Mode::Write => {
+                            // writes additionally pay the WR→next-access
+                            // turnaround before the pipeline refills
+                            now + (t.trcd + t.cwl + t.burst_cycles + t.twr + t.twtr_l)
+                                as Cycle
+                        }
+                    };
+                    match mode {
+                        Mode::Read => self.read_gate_until = self.read_gate_until.max(gate),
+                        Mode::Write => self.write_gate_until = self.write_gate_until.max(gate),
+                    }
+                }
+                return (Some(cmd), now);
+            }
+            wake = wake.min(at);
+        }
+        if let Some(bank) = pre_target {
+            let cmd = Cmd::Pre { bank };
+            let at = self.device.earliest_issue(cmd);
+            if at <= now && self.device.can_issue(cmd, now) {
+                self.device.issue(cmd, now);
+                return (Some(cmd), now);
+            }
+            wake = wake.min(at);
+        }
+        (None, wake)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+    use crate::ddr4::DramAddr;
+
+    fn ctrl() -> MemController {
+        MemController::new(
+            ControllerParams::default(),
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        )
+    }
+
+    fn rd_req(id: u64, bank: u32, row: u32, col: u32, arrival: Cycle) -> MemRequest {
+        MemRequest {
+            txn_id: id,
+            is_write: false,
+            addr: DramAddr { bank, row, col },
+            burst_addr: 0,
+            beats: 2,
+            arrival,
+            last_of_txn: true,
+        }
+    }
+
+    fn wr_req(id: u64, bank: u32, row: u32, col: u32, arrival: Cycle) -> MemRequest {
+        MemRequest { is_write: true, ..rd_req(id, bank, row, col, arrival) }
+    }
+
+    /// Drive the controller until `n` completions with a deadline guard.
+    fn run_until_completions(c: &mut MemController, n: usize, limit: Cycle) -> Vec<Completion> {
+        let mut done = Vec::new();
+        for now in 0..limit {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+            if done.len() >= n {
+                return done;
+            }
+        }
+        panic!("only {} of {n} completions after {limit} cycles", done.len());
+    }
+
+    #[test]
+    fn single_read_completes_with_act_rd() {
+        let mut c = ctrl();
+        c.try_push(rd_req(1, 0, 5, 0, 0)).unwrap();
+        let done = run_until_completions(&mut c, 1, 200);
+        let t = c.device().timing();
+        // ACT@0 → RD@tRCD → data at tRCD+CL+4
+        assert_eq!(done[0].done_at, (t.trcd + t.cl + t.burst_cycles) as Cycle);
+        assert_eq!(done[0].txn_id, 1);
+        assert!(done[0].last_of_txn);
+        assert_eq!(c.device().stats().acts, 1);
+        assert_eq!(c.device().stats().reads, 1);
+    }
+
+    #[test]
+    fn row_hits_stream_at_tccd() {
+        let mut c = ctrl();
+        // 4 reads to the same row: 1 ACT, 4 RDs at tCCD_L spacing.
+        for i in 0..4 {
+            c.try_push(rd_req(i, 0, 1, 8 * i as u32, 0)).unwrap();
+        }
+        let done = run_until_completions(&mut c, 4, 400);
+        assert_eq!(c.device().stats().acts, 1, "one ACT serves all hits");
+        let t = c.device().timing();
+        for w in done.windows(2) {
+            assert_eq!(w[1].done_at - w[0].done_at, t.tccd_l as Cycle);
+        }
+    }
+
+    #[test]
+    fn frfcfs_prefers_row_hit_over_older_miss() {
+        let mut c = ctrl();
+        // Open row 1 in bank 0 by completing a first read.
+        c.try_push(rd_req(0, 0, 1, 0, 0)).unwrap();
+        let _ = run_until_completions(&mut c, 1, 200);
+        // Now an older miss (bank 0 row 2) and a younger hit (bank 0 row 1).
+        c.try_push(rd_req(1, 0, 2, 0, 1000)).unwrap();
+        c.try_push(rd_req(2, 0, 1, 8, 1001)).unwrap();
+        let mut done = Vec::new();
+        for now in 1000..2000 {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+            if done.len() == 2 {
+                break;
+            }
+        }
+        assert_eq!(done[0].txn_id, 2, "row hit first (FR-FCFS)");
+        assert_eq!(done[1].txn_id, 1);
+    }
+
+    #[test]
+    fn same_address_requests_never_reorder() {
+        let mut c = ctrl();
+        // write then read to the same burst: read must not overtake.
+        c.try_push(wr_req(1, 0, 1, 0, 0)).unwrap();
+        c.try_push(rd_req(2, 0, 1, 0, 1)).unwrap();
+        let done = run_until_completions(&mut c, 2, 2000);
+        let wr = done.iter().find(|c| c.txn_id == 1).unwrap();
+        let rd = done.iter().find(|c| c.txn_id == 2).unwrap();
+        // The write CAS must issue before the read CAS: write data lands
+        // at cwl+4 after its CAS, read at cl+4; compare CAS-issue order.
+        let t = c.device().timing();
+        let wr_cas = wr.done_at - (t.cwl + t.burst_cycles) as Cycle;
+        let rd_cas = rd.done_at - (t.cl + t.burst_cycles) as Cycle;
+        assert!(wr_cas < rd_cas, "WAR/RAW hazard: write CAS must precede read CAS");
+    }
+
+    #[test]
+    fn write_drain_watermarks_batch_writes() {
+        let mut c = ctrl();
+        // Fill the write queue to the high watermark with a reader present.
+        c.try_push(rd_req(100, 0, 1, 0, 0)).unwrap();
+        for i in 0..12 {
+            c.try_push(wr_req(i, (i % 8) as u32, 3, 0, 0)).unwrap();
+        }
+        let done = run_until_completions(&mut c, 13, 4000);
+        // All writes drained; mode switched at least twice (R->W->R).
+        assert!(c.stats().mode_switches >= 1);
+        assert_eq!(done.iter().filter(|c| c.is_write).count(), 12);
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let mut c = ctrl();
+        let depth = c.params().read_queue_depth;
+        for i in 0..depth as u64 {
+            c.try_push(rd_req(i, 0, 1, (8 * i as u32) % 1024, 0)).unwrap();
+        }
+        assert!(c.try_push(rd_req(99, 0, 1, 512, 0)).is_err());
+        assert_eq!(c.stats().queue_rejects, 1);
+        assert_eq!(c.read_slots(), 0);
+    }
+
+    #[test]
+    fn refresh_fires_on_trefi_cadence() {
+        let mut c = ctrl();
+        let trefi = c.device().timing().trefi as Cycle;
+        // Idle controller: run 3 refresh intervals.
+        for now in 0..(3 * trefi + 1000) {
+            c.tick(now);
+        }
+        assert_eq!(c.device().stats().refreshes, 3);
+        assert!(c.stats().refresh_stall_cycles >= 3 * c.device().timing().trfc as u64);
+    }
+
+    #[test]
+    fn refresh_closes_open_rows_first() {
+        let mut c = ctrl();
+        c.try_push(rd_req(1, 0, 7, 0, 0)).unwrap();
+        let _ = run_until_completions(&mut c, 1, 200);
+        assert!(!c.device().all_banks_closed());
+        let trefi = c.device().timing().trefi as Cycle;
+        for now in 200..trefi + 2000 {
+            c.tick(now);
+        }
+        assert_eq!(c.device().stats().refreshes, 1);
+    }
+
+    #[test]
+    fn is_idle_tracks_inflight_work() {
+        let mut c = ctrl();
+        assert!(c.is_idle());
+        c.try_push(rd_req(1, 0, 1, 0, 0)).unwrap();
+        assert!(!c.is_idle());
+        let _ = run_until_completions(&mut c, 1, 200);
+        assert!(c.is_idle());
+    }
+
+    #[test]
+    fn idle_precharge_closes_stale_rows() {
+        let mut params = ControllerParams::default();
+        params.idle_precharge_cycles = 64;
+        let mut c = MemController::new(
+            params,
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        );
+        c.try_push(rd_req(1, 0, 5, 0, 0)).unwrap();
+        let _ = run_until_completions(&mut c, 1, 300);
+        assert!(!c.device().all_banks_closed());
+        // idle long enough: the timer closes the row
+        for now in 300..600 {
+            c.tick(now);
+        }
+        assert!(c.device().all_banks_closed(), "stale row must be precharged");
+        // with timer 0 (pure open page) the row would have stayed open
+        let mut open = MemController::new(
+            ControllerParams::default(),
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        );
+        open.try_push(rd_req(1, 0, 5, 0, 0)).unwrap();
+        let _ = run_until_completions(&mut open, 1, 300);
+        for now in 300..600 {
+            open.tick(now);
+        }
+        assert!(!open.device().all_banks_closed(), "open-page keeps the row");
+    }
+
+    #[test]
+    fn idle_precharge_spares_wanted_rows() {
+        let mut params = ControllerParams::default();
+        params.idle_precharge_cycles = 16;
+        params.lookahead = 1; // keep the second request un-servable prep-wise
+        let mut c = MemController::new(
+            params,
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        );
+        // open row 5 in bank 0, then park a queued request to the same row
+        // behind a full-queue stall so it lingers
+        c.try_push(rd_req(1, 0, 5, 0, 0)).unwrap();
+        let _ = run_until_completions(&mut c, 1, 300);
+        c.try_push(rd_req(2, 0, 5, 8, 301)).unwrap();
+        // the wanted row must not be speculatively closed before service
+        let mut done = Vec::new();
+        for now in 301..600 {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+            if !done.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(done.len(), 1, "request to the open row served");
+        // one ACT total: the row was never closed under the request
+        assert_eq!(c.device().stats().acts, 1);
+    }
+
+    #[test]
+    fn completions_sorted_by_done_at() {
+        let mut c = ctrl();
+        for i in 0..8u64 {
+            c.try_push(rd_req(i, (i % 8) as u32, 1, 0, 0)).unwrap();
+            c.try_push(wr_req(100 + i, ((i + 3) % 8) as u32, 2, 8, 0)).unwrap();
+        }
+        let mut done = Vec::new();
+        for now in 0..5000 {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+        }
+        assert_eq!(done.len(), 16);
+        for w in done.windows(2) {
+            assert!(w[0].done_at <= w[1].done_at, "completion order");
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Native-interface requests and completion events of the memory
+//! controller.
+//!
+//! The AXI front end splits each AXI transaction into BL8-sized *requests*
+//! (one per 64-byte DRAM burst touched). Requests are what the FR-FCFS
+//! scheduler reorders; completions carry enough context to rebuild AXI
+//! beats and transaction boundaries on the way back.
+
+use crate::axi::TxnId;
+use crate::ddr4::{Cycle, DramAddr};
+
+/// One DRAM-burst-sized unit of work in the controller queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemRequest {
+    /// Owning AXI transaction.
+    pub txn_id: TxnId,
+    /// Write or read?
+    pub is_write: bool,
+    /// Decoded DRAM location of the BL8 burst.
+    pub addr: DramAddr,
+    /// 64-byte-aligned byte address of the burst (kept alongside the
+    /// decoded form for the data-integrity path).
+    pub burst_addr: u64,
+    /// Number of AXI data beats this request carries (usually 2 on a
+    /// 256-bit fabric; FIXED bursts replay up to 16 beats from one burst).
+    pub beats: u32,
+    /// DRAM cycle at which the request entered the controller (for
+    /// latency statistics and FCFS age).
+    pub arrival: Cycle,
+    /// Is this the last request of its transaction? (Completion of this
+    /// request completes the transaction: last R beat / B response.)
+    pub last_of_txn: bool,
+}
+
+/// A completed request, reported at its data-phase completion time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    /// Owning AXI transaction.
+    pub txn_id: TxnId,
+    /// Write or read?
+    pub is_write: bool,
+    /// 64-byte-aligned byte address of the burst.
+    pub burst_addr: u64,
+    /// AXI beats carried.
+    pub beats: u32,
+    /// DRAM cycle at which data finished on the bus (reads: last beat
+    /// received; writes: write burst retired to the array timing-wise).
+    pub done_at: Cycle,
+    /// Arrival cycle of the underlying request (latency = done - arrival).
+    pub arrival: Cycle,
+    /// Completes its transaction?
+    pub last_of_txn: bool,
+}
+
+impl Completion {
+    /// Request latency in DRAM cycles.
+    pub fn latency(&self) -> Cycle {
+        self.done_at - self.arrival
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_latency() {
+        let c = Completion {
+            txn_id: 1,
+            is_write: false,
+            burst_addr: 0,
+            beats: 2,
+            done_at: 120,
+            arrival: 100,
+            last_of_txn: true,
+        };
+        assert_eq!(c.latency(), 20);
+    }
+}

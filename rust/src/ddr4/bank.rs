@@ -1,0 +1,178 @@
+//! Per-bank state machine of the DDR4 device model.
+//!
+//! Each bank tracks its open row and the earliest cycle at which each
+//! command class may legally be issued to it. The device layer
+//! ([`super::device::DdrDevice`]) adds the cross-bank constraints
+//! (tRRD/tFAW/tCCD/turnarounds/refresh).
+
+use super::Cycle;
+use crate::ddr4::timing::TimingParams;
+
+/// State of one DRAM bank.
+#[derive(Debug, Clone, Copy)]
+pub struct Bank {
+    /// Currently open row, if any.
+    pub open_row: Option<u32>,
+    /// Issue time of the last ACT (for tRAS/tRC accounting).
+    pub last_act: Cycle,
+    /// Earliest cycle an ACT to this bank is legal (tRC after the previous
+    /// ACT, tRP after a precharge, tRFC after refresh).
+    pub earliest_act: Cycle,
+    /// Earliest cycle a PRE to this bank is legal (tRAS after ACT,
+    /// tRTP after a read, write recovery after a write).
+    pub earliest_pre: Cycle,
+    /// Earliest cycle a CAS (RD/WR) to this bank is legal (tRCD after ACT).
+    pub earliest_cas: Cycle,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self { open_row: None, last_act: 0, earliest_act: 0, earliest_pre: 0, earliest_cas: 0 }
+    }
+}
+
+impl Bank {
+    /// Does a CAS to `row` hit the open row?
+    pub fn is_hit(&self, row: u32) -> bool {
+        self.open_row == Some(row)
+    }
+
+    /// Is the bank closed (precharged)?
+    pub fn is_closed(&self) -> bool {
+        self.open_row.is_none()
+    }
+
+    /// Record an ACT at `now`.
+    pub fn on_act(&mut self, row: u32, now: Cycle, t: &TimingParams) {
+        debug_assert!(self.is_closed(), "ACT to open bank");
+        debug_assert!(now >= self.earliest_act, "ACT violates tRC/tRP");
+        self.open_row = Some(row);
+        self.last_act = now;
+        self.earliest_act = now + t.trc as Cycle;
+        self.earliest_cas = now + t.trcd as Cycle;
+        // tRAS lower-bounds the next PRE.
+        self.earliest_pre = self.earliest_pre.max(now + t.tras as Cycle);
+    }
+
+    /// Record a PRE at `now`.
+    pub fn on_pre(&mut self, now: Cycle, t: &TimingParams) {
+        debug_assert!(now >= self.earliest_pre, "PRE violates tRAS/tRTP/tWR");
+        self.open_row = None;
+        // next ACT must honour both tRP from this PRE and tRC from last ACT
+        self.earliest_act = self.earliest_act.max(now + t.trp as Cycle);
+    }
+
+    /// Record a read CAS at `now`. With `auto_pre`, the bank self-closes
+    /// and the next ACT is gated by tRTP + tRP.
+    pub fn on_rd(&mut self, now: Cycle, auto_pre: bool, t: &TimingParams) {
+        debug_assert!(!self.is_closed(), "RD to closed bank");
+        debug_assert!(now >= self.earliest_cas, "RD violates tRCD");
+        // A later PRE must wait tRTP after this read.
+        self.earliest_pre = self.earliest_pre.max(now + t.rd_to_pre() as Cycle);
+        if auto_pre {
+            self.open_row = None;
+            let implicit_pre = now + t.rd_to_pre().max(t.tras.saturating_sub(
+                (now - self.last_act) as u32,
+            )) as Cycle;
+            self.earliest_act = self.earliest_act.max(implicit_pre + t.trp as Cycle);
+        }
+    }
+
+    /// Record a write CAS at `now` (see [`Self::on_rd`]).
+    pub fn on_wr(&mut self, now: Cycle, auto_pre: bool, t: &TimingParams) {
+        debug_assert!(!self.is_closed(), "WR to closed bank");
+        debug_assert!(now >= self.earliest_cas, "WR violates tRCD");
+        self.earliest_pre = self.earliest_pre.max(now + t.wr_to_pre() as Cycle);
+        if auto_pre {
+            self.open_row = None;
+            let implicit_pre = now + t.wr_to_pre().max(t.tras.saturating_sub(
+                (now - self.last_act) as u32,
+            )) as Cycle;
+            self.earliest_act = self.earliest_act.max(implicit_pre + t.trp as Cycle);
+        }
+    }
+
+    /// Refresh completed at `now` (banks were all precharged before REF):
+    /// no ACT until tRFC elapses.
+    pub fn on_refresh(&mut self, now: Cycle, t: &TimingParams) {
+        debug_assert!(self.is_closed(), "REF with open bank");
+        self.earliest_act = self.earliest_act.max(now + t.trfc as Cycle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+
+    fn t() -> TimingParams {
+        TimingParams::for_bin(SpeedBin::Ddr4_1600)
+    }
+
+    #[test]
+    fn act_opens_row_and_sets_gates() {
+        let t = t();
+        let mut b = Bank::default();
+        b.on_act(42, 100, &t);
+        assert!(b.is_hit(42));
+        assert!(!b.is_hit(43));
+        assert_eq!(b.earliest_cas, 100 + t.trcd as Cycle);
+        assert_eq!(b.earliest_pre, 100 + t.tras as Cycle);
+        assert_eq!(b.earliest_act, 100 + t.trc as Cycle);
+    }
+
+    #[test]
+    fn pre_closes_and_gates_act_by_trp() {
+        let t = t();
+        let mut b = Bank::default();
+        b.on_act(1, 0, &t);
+        let pre_at = b.earliest_pre;
+        b.on_pre(pre_at, &t);
+        assert!(b.is_closed());
+        // tRC from ACT@0 is 39; tRP from PRE@28 is 28+11=39: equal here.
+        assert_eq!(b.earliest_act, (t.tras + t.trp) as Cycle);
+    }
+
+    #[test]
+    fn read_extends_pre_gate_by_trtp() {
+        let t = t();
+        let mut b = Bank::default();
+        b.on_act(1, 0, &t);
+        let rd_at = b.earliest_cas + 20; // read late in the row's life
+        b.on_rd(rd_at, false, &t);
+        assert!(b.earliest_pre >= rd_at + t.rd_to_pre() as Cycle);
+        assert!(b.is_hit(1), "non-auto-pre read keeps the row open");
+    }
+
+    #[test]
+    fn write_recovery_gates_pre_longer_than_read() {
+        let t = t();
+        let (mut br, mut bw) = (Bank::default(), Bank::default());
+        br.on_act(1, 0, &t);
+        bw.on_act(1, 0, &t);
+        let cas_at = br.earliest_cas;
+        br.on_rd(cas_at, false, &t);
+        bw.on_wr(cas_at, false, &t);
+        assert!(bw.earliest_pre > br.earliest_pre, "tWR > tRTP");
+    }
+
+    #[test]
+    fn auto_pre_closes_row_and_gates_next_act() {
+        let t = t();
+        let mut b = Bank::default();
+        b.on_act(7, 0, &t);
+        let rd_at = b.earliest_cas;
+        b.on_rd(rd_at, true, &t);
+        assert!(b.is_closed());
+        // next ACT must respect the implicit precharge (≥ tRAS+tRP from ACT)
+        assert!(b.earliest_act >= (t.tras + t.trp) as Cycle);
+    }
+
+    #[test]
+    fn refresh_blocks_act_for_trfc() {
+        let t = t();
+        let mut b = Bank::default();
+        b.on_refresh(1000, &t);
+        assert_eq!(b.earliest_act, 1000 + t.trfc as Cycle);
+    }
+}

@@ -1,0 +1,96 @@
+//! DDR4 command set (the subset a benchmarking controller issues).
+
+/// A DDR4 command addressed to one channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmd {
+    /// Activate `row` in `bank` (flat bank index): opens the row into the
+    /// bank's row buffer.
+    Act { bank: u32, row: u32 },
+    /// Precharge `bank`: closes its open row.
+    Pre { bank: u32 },
+    /// Precharge all banks (used before refresh).
+    PreAll,
+    /// Column read of the BL8 burst at `col` in `bank`'s open row.
+    /// `auto_pre` closes the row automatically after the access (RDA).
+    Rd { bank: u32, col: u32, auto_pre: bool },
+    /// Column write, mirroring [`Cmd::Rd`] (WRA when `auto_pre`).
+    Wr { bank: u32, col: u32, auto_pre: bool },
+    /// Refresh (REF): all banks must be idle; device is busy for tRFC.
+    Ref,
+}
+
+impl Cmd {
+    /// The flat bank index this command targets, if bank-specific.
+    pub fn bank(&self) -> Option<u32> {
+        match *self {
+            Cmd::Act { bank, .. } | Cmd::Pre { bank } | Cmd::Rd { bank, .. } | Cmd::Wr { bank, .. } => {
+                Some(bank)
+            }
+            Cmd::PreAll | Cmd::Ref => None,
+        }
+    }
+
+    /// Is this a column (CAS) command?
+    pub fn is_cas(&self) -> bool {
+        matches!(self, Cmd::Rd { .. } | Cmd::Wr { .. })
+    }
+
+    /// Mnemonic for traces ("ACT"/"PRE"/"PREA"/"RD"/"RDA"/"WR"/"WRA"/"REF").
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Cmd::Act { .. } => "ACT",
+            Cmd::Pre { .. } => "PRE",
+            Cmd::PreAll => "PREA",
+            Cmd::Rd { auto_pre: false, .. } => "RD",
+            Cmd::Rd { auto_pre: true, .. } => "RDA",
+            Cmd::Wr { auto_pre: false, .. } => "WR",
+            Cmd::Wr { auto_pre: true, .. } => "WRA",
+            Cmd::Ref => "REF",
+        }
+    }
+}
+
+impl std::fmt::Display for Cmd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Cmd::Act { bank, row } => write!(f, "ACT b{bank} r{row}"),
+            Cmd::Pre { bank } => write!(f, "PRE b{bank}"),
+            Cmd::PreAll => write!(f, "PREA"),
+            Cmd::Rd { bank, col, auto_pre } => {
+                write!(f, "{} b{bank} c{col}", if auto_pre { "RDA" } else { "RD" })
+            }
+            Cmd::Wr { bank, col, auto_pre } => {
+                write!(f, "{} b{bank} c{col}", if auto_pre { "WRA" } else { "WR" })
+            }
+            Cmd::Ref => write!(f, "REF"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_extraction() {
+        assert_eq!(Cmd::Act { bank: 3, row: 9 }.bank(), Some(3));
+        assert_eq!(Cmd::Pre { bank: 1 }.bank(), Some(1));
+        assert_eq!(Cmd::Ref.bank(), None);
+        assert_eq!(Cmd::PreAll.bank(), None);
+    }
+
+    #[test]
+    fn cas_classification() {
+        assert!(Cmd::Rd { bank: 0, col: 0, auto_pre: false }.is_cas());
+        assert!(Cmd::Wr { bank: 0, col: 8, auto_pre: true }.is_cas());
+        assert!(!Cmd::Act { bank: 0, row: 0 }.is_cas());
+        assert!(!Cmd::Ref.is_cas());
+    }
+
+    #[test]
+    fn mnemonics() {
+        assert_eq!(Cmd::Rd { bank: 0, col: 0, auto_pre: true }.mnemonic(), "RDA");
+        assert_eq!(Cmd::Wr { bank: 0, col: 0, auto_pre: false }.mnemonic(), "WR");
+        assert_eq!(format!("{}", Cmd::Act { bank: 2, row: 7 }), "ACT b2 r7");
+    }
+}

@@ -1,0 +1,486 @@
+//! Channel-level DDR4 device model: cross-bank timing constraints, the
+//! shared command/data buses, and refresh bookkeeping.
+//!
+//! The controller asks [`DdrDevice::earliest_issue`] when a candidate
+//! command becomes legal and commits it with [`DdrDevice::issue`]. Legality
+//! covers, beyond the per-bank gates in [`super::bank::Bank`]:
+//!
+//! - **tCCD_S/L** — CAS-to-CAS spacing, bank-group aware;
+//! - **tRRD_S/L + tFAW** — ACT-to-ACT spacing and the four-activate window;
+//! - **bus turnarounds** — write→read (CWL + BL/2 + tWTR_x) and read→write
+//!   (CL + BL/2 + 2 − CWL) on the shared DQ bus;
+//! - **refresh** — tREFI scheduling and the tRFC busy window.
+//!
+//! All times are in DRAM clock cycles ([`Cycle`]); the controller runs at
+//! the same resolution and the AXI fabric at a 4:1 ratio above it.
+
+use std::collections::VecDeque;
+
+use super::bank::Bank;
+use super::command::Cmd;
+use super::geometry::DramGeometry;
+use super::timing::TimingParams;
+use super::Cycle;
+
+/// Cross-bank device state for one DDR4 channel.
+#[derive(Debug, Clone)]
+pub struct DdrDevice {
+    t: TimingParams,
+    geo: DramGeometry,
+    banks: Vec<Bank>,
+    /// Issue times of the last 4 ACTs (tFAW window).
+    act_window: VecDeque<Cycle>,
+    /// Last ACT issue time, any bank (tRRD_S), and per group (tRRD_L).
+    last_act_any: Option<Cycle>,
+    last_act_group: Vec<Option<Cycle>>,
+    /// Last CAS issue time, any bank (tCCD_S), and per group (tCCD_L).
+    last_cas_any: Option<Cycle>,
+    last_cas_group: Vec<Option<Cycle>>,
+    /// Last read / write CAS issue times (bus turnaround).
+    last_rd_cas: Option<Cycle>,
+    last_wr_cas: Option<(Cycle, u32)>, // (time, group)
+    /// Next refresh deadline and the end of an in-progress tRFC window.
+    refresh_due: Cycle,
+    busy_until: Cycle,
+    /// Statistics.
+    stats: DeviceStats,
+}
+
+/// Command-level statistics the device accumulates (feeds the refresh and
+/// row-hit-rate statistics the host controller can report, §II-C).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    /// ACT commands issued.
+    pub acts: u64,
+    /// PRE/PREA commands issued.
+    pub pres: u64,
+    /// Read CAS commands issued.
+    pub reads: u64,
+    /// Write CAS commands issued.
+    pub writes: u64,
+    /// REF commands issued.
+    pub refreshes: u64,
+}
+
+impl DeviceStats {
+    /// Command-count delta since an earlier snapshot (used for per-batch
+    /// energy accounting).
+    pub fn delta(&self, earlier: &DeviceStats) -> DeviceStats {
+        DeviceStats {
+            acts: self.acts - earlier.acts,
+            pres: self.pres - earlier.pres,
+            reads: self.reads - earlier.reads,
+            writes: self.writes - earlier.writes,
+            refreshes: self.refreshes - earlier.refreshes,
+        }
+    }
+
+    /// Row-hit rate over all CAS commands, in the open-page sense: every
+    /// ACT services exactly one "miss" stream, so hits = CAS − ACTs.
+    pub fn row_hit_rate(&self) -> f64 {
+        let cas = self.reads + self.writes;
+        if cas == 0 {
+            0.0
+        } else {
+            (cas.saturating_sub(self.acts)) as f64 / cas as f64
+        }
+    }
+}
+
+impl DdrDevice {
+    /// New idle device. The first refresh falls one tREFI after reset.
+    pub fn new(t: TimingParams, geo: DramGeometry) -> Self {
+        let banks = vec![Bank::default(); geo.banks() as usize];
+        let groups = geo.bank_groups as usize;
+        Self {
+            t,
+            geo,
+            banks,
+            act_window: VecDeque::with_capacity(4),
+            last_act_any: None,
+            last_act_group: vec![None; groups],
+            last_cas_any: None,
+            last_cas_group: vec![None; groups],
+            last_rd_cas: None,
+            last_wr_cas: None,
+            refresh_due: t.trefi as Cycle,
+            busy_until: 0,
+            stats: DeviceStats::default(),
+        }
+    }
+
+    /// Timing parameters in force.
+    pub fn timing(&self) -> &TimingParams {
+        &self.t
+    }
+
+    /// Channel geometry.
+    pub fn geometry(&self) -> &DramGeometry {
+        &self.geo
+    }
+
+    /// Accumulated command statistics.
+    pub fn stats(&self) -> &DeviceStats {
+        &self.stats
+    }
+
+    /// Bank state (read-only view).
+    pub fn bank(&self, bank: u32) -> &Bank {
+        &self.banks[bank as usize]
+    }
+
+    /// Cycle at which the next REF is due (tREFI cadence).
+    pub fn refresh_due(&self) -> Cycle {
+        self.refresh_due
+    }
+
+    /// Is a refresh overdue at `now`?
+    pub fn refresh_needed(&self, now: Cycle) -> bool {
+        now >= self.refresh_due
+    }
+
+    /// Are all banks precharged?
+    pub fn all_banks_closed(&self) -> bool {
+        self.banks.iter().all(|b| b.is_closed())
+    }
+
+    fn group_of(&self, bank: u32) -> usize {
+        (bank / self.geo.banks_per_group) as usize
+    }
+
+    /// Earliest cycle at which `cmd` becomes legal. Monotone: issuing other
+    /// commands can only push it later, never earlier.
+    pub fn earliest_issue(&self, cmd: Cmd) -> Cycle {
+        let mut at = self.busy_until;
+        match cmd {
+            Cmd::Act { bank, .. } => {
+                let g = self.group_of(bank);
+                at = at.max(self.banks[bank as usize].earliest_act);
+                if let Some(t0) = self.last_act_any {
+                    at = at.max(t0 + self.t.trrd_s as Cycle);
+                }
+                if let Some(t0) = self.last_act_group[g] {
+                    at = at.max(t0 + self.t.trrd_l as Cycle);
+                }
+                if self.act_window.len() == 4 {
+                    at = at.max(self.act_window[0] + self.t.tfaw as Cycle);
+                }
+            }
+            Cmd::Pre { bank } => {
+                at = at.max(self.banks[bank as usize].earliest_pre);
+            }
+            Cmd::PreAll => {
+                for b in &self.banks {
+                    if !b.is_closed() {
+                        at = at.max(b.earliest_pre);
+                    }
+                }
+            }
+            Cmd::Rd { bank, .. } => {
+                let g = self.group_of(bank);
+                at = at.max(self.banks[bank as usize].earliest_cas);
+                if let Some(t0) = self.last_cas_any {
+                    at = at.max(t0 + self.t.tccd_s as Cycle);
+                }
+                if let Some(t0) = self.last_cas_group[g] {
+                    at = at.max(t0 + self.t.tccd_l as Cycle);
+                }
+                if let Some((t0, wg)) = self.last_wr_cas {
+                    at = at.max(t0 + self.t.wr_to_rd(wg as usize == g) as Cycle);
+                }
+            }
+            Cmd::Wr { bank, .. } => {
+                let g = self.group_of(bank);
+                at = at.max(self.banks[bank as usize].earliest_cas);
+                if let Some(t0) = self.last_cas_any {
+                    at = at.max(t0 + self.t.tccd_s as Cycle);
+                }
+                if let Some(t0) = self.last_cas_group[g] {
+                    at = at.max(t0 + self.t.tccd_l as Cycle);
+                }
+                if let Some(t0) = self.last_rd_cas {
+                    at = at.max(t0 + self.t.rd_to_wr() as Cycle);
+                }
+            }
+            Cmd::Ref => {
+                // REF needs every bank precharged; PREs must have landed.
+                for b in &self.banks {
+                    debug_assert!(
+                        b.is_closed(),
+                        "REF legality queried with open banks; issue PREA first"
+                    );
+                    at = at.max(b.earliest_act.saturating_sub(self.t.trp as Cycle));
+                }
+                // tRP after the closing PREA is already folded into each
+                // bank's earliest_act; approximate REF readiness as the
+                // point where every bank could be re-activated minus tRP.
+            }
+        }
+        at
+    }
+
+    /// Can `cmd` be issued exactly at `now`?
+    pub fn can_issue(&self, cmd: Cmd, now: Cycle) -> bool {
+        // Structural preconditions (row state), then timing.
+        match cmd {
+            Cmd::Act { bank, .. } => {
+                if !self.banks[bank as usize].is_closed() {
+                    return false;
+                }
+            }
+            Cmd::Pre { bank } => {
+                if self.banks[bank as usize].is_closed() {
+                    return false;
+                }
+            }
+            Cmd::Rd { bank, .. } | Cmd::Wr { bank, .. } => {
+                if self.banks[bank as usize].is_closed() {
+                    return false;
+                }
+            }
+            Cmd::Ref => {
+                if !self.all_banks_closed() {
+                    return false;
+                }
+            }
+            Cmd::PreAll => {}
+        }
+        now >= self.earliest_issue(cmd)
+    }
+
+    /// Issue `cmd` at `now`. Panics (debug) on protocol violations; returns
+    /// the cycle at which the command's data phase completes (reads: last
+    /// data beat on the bus; writes: end of the write burst; others: `now`).
+    pub fn issue(&mut self, cmd: Cmd, now: Cycle) -> Cycle {
+        debug_assert!(self.can_issue(cmd, now), "illegal {cmd} at {now}");
+        match cmd {
+            Cmd::Act { bank, row } => {
+                let g = self.group_of(bank);
+                self.banks[bank as usize].on_act(row, now, &self.t);
+                self.last_act_any = Some(now);
+                self.last_act_group[g] = Some(now);
+                if self.act_window.len() == 4 {
+                    self.act_window.pop_front();
+                }
+                self.act_window.push_back(now);
+                self.stats.acts += 1;
+                now
+            }
+            Cmd::Pre { bank } => {
+                self.banks[bank as usize].on_pre(now, &self.t);
+                self.stats.pres += 1;
+                now
+            }
+            Cmd::PreAll => {
+                for i in 0..self.banks.len() {
+                    if !self.banks[i].is_closed() {
+                        self.banks[i].on_pre(now, &self.t);
+                    }
+                }
+                self.stats.pres += 1;
+                now
+            }
+            Cmd::Rd { bank, auto_pre, .. } => {
+                let g = self.group_of(bank);
+                self.banks[bank as usize].on_rd(now, auto_pre, &self.t);
+                self.last_cas_any = Some(now);
+                self.last_cas_group[g] = Some(now);
+                self.last_rd_cas = Some(now);
+                self.stats.reads += 1;
+                now + (self.t.cl + self.t.burst_cycles) as Cycle
+            }
+            Cmd::Wr { bank, auto_pre, .. } => {
+                let g = self.group_of(bank);
+                self.banks[bank as usize].on_wr(now, auto_pre, &self.t);
+                self.last_cas_any = Some(now);
+                self.last_cas_group[g] = Some(now);
+                self.last_wr_cas = Some((now, g as u32));
+                self.stats.writes += 1;
+                now + (self.t.cwl + self.t.burst_cycles) as Cycle
+            }
+            Cmd::Ref => {
+                for b in &mut self.banks {
+                    b.on_refresh(now, &self.t);
+                }
+                self.busy_until = now + self.t.trfc as Cycle;
+                self.refresh_due += self.t.trefi as Cycle;
+                self.stats.refreshes += 1;
+                self.busy_until
+            }
+        }
+    }
+
+    /// Row-hit / row-miss classification used by the FR-FCFS scheduler:
+    /// `Some(true)` = open-row hit, `Some(false)` = conflict (different row
+    /// open), `None` = bank closed (row miss, needs ACT only).
+    pub fn row_state(&self, bank: u32, row: u32) -> Option<bool> {
+        self.banks[bank as usize].open_row.map(|r| r == row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+
+    fn dev() -> DdrDevice {
+        DdrDevice::new(
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        )
+    }
+
+    #[test]
+    fn act_then_read_honours_trcd() {
+        let mut d = dev();
+        d.issue(Cmd::Act { bank: 0, row: 5 }, 0);
+        let rd = Cmd::Rd { bank: 0, col: 0, auto_pre: false };
+        assert!(!d.can_issue(rd, 5));
+        let trcd = d.timing().trcd as Cycle;
+        assert!(d.can_issue(rd, trcd));
+        assert_eq!(d.earliest_issue(rd), trcd);
+    }
+
+    #[test]
+    fn cas_to_closed_bank_illegal() {
+        let d = dev();
+        assert!(!d.can_issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false }, 1000));
+    }
+
+    #[test]
+    fn tccd_spacing_depends_on_group() {
+        let mut d = dev();
+        // open bank 0 (group 0) and bank 4 (group 1) and bank 1 (group 0)
+        d.issue(Cmd::Act { bank: 0, row: 1 }, 0);
+        let t_rrd = d.earliest_issue(Cmd::Act { bank: 4, row: 1 });
+        d.issue(Cmd::Act { bank: 4, row: 1 }, t_rrd);
+        let a1 = d.earliest_issue(Cmd::Act { bank: 1, row: 1 });
+        d.issue(Cmd::Act { bank: 1, row: 1 }, a1);
+
+        // start well past every bank's tRCD so only tCCD gates the probes
+        let t0 = d.earliest_issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false }).max(100);
+        d.issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false }, t0);
+        // different group: tCCD_S; same group: tCCD_L
+        let cross = d.earliest_issue(Cmd::Rd { bank: 4, col: 0, auto_pre: false });
+        let same = d.earliest_issue(Cmd::Rd { bank: 1, col: 0, auto_pre: false });
+        assert_eq!(cross, t0 + d.timing().tccd_s as Cycle);
+        assert_eq!(same, t0 + d.timing().tccd_l as Cycle);
+        assert!(same > cross);
+    }
+
+    #[test]
+    fn trrd_and_tfaw_limit_act_rate() {
+        let mut d = dev();
+        let t = *d.timing();
+        let mut acts = Vec::new();
+        // issue 5 ACTs to distinct banks as fast as legal
+        for bank in 0..5 {
+            let cmd = Cmd::Act { bank, row: 0 };
+            let at = d.earliest_issue(cmd);
+            d.issue(cmd, at);
+            acts.push(at);
+        }
+        for w in acts.windows(2) {
+            assert!(w[1] - w[0] >= t.trrd_s as Cycle);
+        }
+        // 5th ACT must fall outside the first tFAW window
+        assert!(acts[4] - acts[0] >= t.tfaw as Cycle, "{acts:?}");
+    }
+
+    #[test]
+    fn write_to_read_turnaround() {
+        let mut d = dev();
+        let t = *d.timing();
+        d.issue(Cmd::Act { bank: 0, row: 0 }, 0);
+        let a1 = d.earliest_issue(Cmd::Act { bank: 4, row: 0 });
+        d.issue(Cmd::Act { bank: 4, row: 0 }, a1);
+        let w_at = d.earliest_issue(Cmd::Wr { bank: 0, col: 0, auto_pre: false });
+        d.issue(Cmd::Wr { bank: 0, col: 0, auto_pre: false }, w_at);
+        // read in the same group waits longer than in the other group
+        let rd_same = d.earliest_issue(Cmd::Rd { bank: 0, col: 8, auto_pre: false });
+        let rd_cross = d.earliest_issue(Cmd::Rd { bank: 4, col: 8, auto_pre: false });
+        assert_eq!(rd_same, w_at + t.wr_to_rd(true) as Cycle);
+        assert_eq!(rd_cross, w_at + t.wr_to_rd(false) as Cycle);
+    }
+
+    #[test]
+    fn read_to_write_turnaround() {
+        let mut d = dev();
+        let t = *d.timing();
+        d.issue(Cmd::Act { bank: 0, row: 0 }, 0);
+        let r_at = d.earliest_issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false });
+        d.issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false }, r_at);
+        let w_earliest = d.earliest_issue(Cmd::Wr { bank: 0, col: 8, auto_pre: false });
+        assert!(w_earliest >= r_at + t.rd_to_wr() as Cycle);
+    }
+
+    #[test]
+    fn refresh_blocks_everything_for_trfc() {
+        let mut d = dev();
+        let t = *d.timing();
+        assert!(d.can_issue(Cmd::Ref, t.trefi as Cycle));
+        let end = d.issue(Cmd::Ref, t.trefi as Cycle);
+        assert_eq!(end, t.trefi as Cycle + t.trfc as Cycle);
+        // ACT before tRFC elapses is illegal
+        assert!(!d.can_issue(Cmd::Act { bank: 0, row: 0 }, end - 1));
+        assert!(d.can_issue(Cmd::Act { bank: 0, row: 0 }, end));
+        // next refresh due one tREFI later
+        assert_eq!(d.refresh_due(), 2 * t.trefi as Cycle);
+    }
+
+    #[test]
+    fn refresh_requires_closed_banks() {
+        let mut d = dev();
+        d.issue(Cmd::Act { bank: 2, row: 3 }, 0);
+        assert!(!d.can_issue(Cmd::Ref, 10_000));
+        let pa = d.earliest_issue(Cmd::PreAll);
+        d.issue(Cmd::PreAll, pa);
+        assert!(d.all_banks_closed());
+    }
+
+    #[test]
+    fn preall_closes_only_open_banks() {
+        let mut d = dev();
+        d.issue(Cmd::Act { bank: 1, row: 9 }, 0);
+        let at = d.earliest_issue(Cmd::PreAll);
+        d.issue(Cmd::PreAll, at);
+        assert!(d.all_banks_closed());
+        assert_eq!(d.stats().pres, 1);
+    }
+
+    #[test]
+    fn stats_count_commands() {
+        let mut d = dev();
+        d.issue(Cmd::Act { bank: 0, row: 0 }, 0);
+        let r = d.earliest_issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false });
+        d.issue(Cmd::Rd { bank: 0, col: 0, auto_pre: false }, r);
+        let w = d.earliest_issue(Cmd::Wr { bank: 0, col: 8, auto_pre: false });
+        d.issue(Cmd::Wr { bank: 0, col: 8, auto_pre: false }, w);
+        let s = d.stats();
+        assert_eq!((s.acts, s.reads, s.writes), (1, 1, 1));
+        // 2 CAS served by 1 ACT: hit rate 0.5 in open-page accounting
+        assert!((s.row_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_state_classification() {
+        let mut d = dev();
+        assert_eq!(d.row_state(0, 7), None);
+        d.issue(Cmd::Act { bank: 0, row: 7 }, 0);
+        assert_eq!(d.row_state(0, 7), Some(true));
+        assert_eq!(d.row_state(0, 8), Some(false));
+    }
+
+    #[test]
+    fn earliest_issue_monotone_under_traffic() {
+        // Issuing unrelated commands never makes a pending command legal
+        // earlier.
+        let mut d = dev();
+        d.issue(Cmd::Act { bank: 0, row: 0 }, 0);
+        let probe = Cmd::Rd { bank: 0, col: 0, auto_pre: false };
+        let before = d.earliest_issue(probe);
+        let a = d.earliest_issue(Cmd::Act { bank: 4, row: 2 });
+        d.issue(Cmd::Act { bank: 4, row: 2 }, a);
+        assert!(d.earliest_issue(probe) >= before);
+    }
+}

@@ -1,0 +1,301 @@
+//! DRAM channel geometry and physical address decomposition.
+//!
+//! Models the proFPGA DDR4 daughter board (Micron EDY4016A 4 Gb x16 parts):
+//! four x16 devices in lockstep form a 64-bit data channel (a fifth part on
+//! the physical board carries ECC and is not modeled), giving 2 GiB of
+//! addressable data per channel. An x16 DDR4 device has 2 bank groups × 4
+//! banks; the channel inherits that bank structure since all devices receive
+//! the same commands.
+//!
+//! The address-mapping policy is the memory controller's choice (PG150's
+//! `MEM_ADDR_ORDER`); [`AddrMapping::RowColBank`] is the MIG default for
+//! AXI designs and the profile used in the paper reproduction: consecutive
+//! BL8 bursts rotate across banks (and therefore bank groups), which is
+//! what lets sequential streams pipeline ACTs and dodge tCCD_L.
+
+/// Burst length of DDR4 (fixed BL8 in this platform, as in MIG).
+pub const BURST_LEN: u32 = 8;
+
+/// How the linear byte address is scattered over (row, bank, column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrMapping {
+    /// row | column | bank | burst-offset — MIG default (`ROW_COLUMN_BANK`).
+    /// Sequential bursts interleave across banks.
+    RowColBank,
+    /// row | bank | column | burst-offset (`ROW_BANK_COLUMN`). Sequential
+    /// bursts stream within one row of one bank before moving on.
+    RowBankCol,
+    /// bank | row | column | burst-offset (`BANK_ROW_COLUMN`). Large
+    /// regions stay in one bank; worst sequential-ACT behaviour, used in
+    /// the mapping ablation.
+    BankRowCol,
+}
+
+impl AddrMapping {
+    /// Parse "row_col_bank" style names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "row_col_bank" | "rowcolbank" => Some(AddrMapping::RowColBank),
+            "row_bank_col" | "rowbankcol" => Some(AddrMapping::RowBankCol),
+            "bank_row_col" | "bankrowcol" => Some(AddrMapping::BankRowCol),
+            _ => None,
+        }
+    }
+}
+
+/// Geometry of one DRAM channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramGeometry {
+    /// Data-bus width in bytes (8 = 64-bit channel).
+    pub bus_bytes: u32,
+    /// Bank groups per channel.
+    pub bank_groups: u32,
+    /// Banks per bank group.
+    pub banks_per_group: u32,
+    /// Rows per bank.
+    pub rows: u32,
+    /// Column addresses per row (per device; BL8 bursts consume 8).
+    pub cols: u32,
+    /// Address-mapping policy.
+    pub mapping: AddrMapping,
+}
+
+/// A fully decoded DRAM location (one BL8 burst's worth of address).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DramAddr {
+    /// Flat bank index: `group * banks_per_group + bank`.
+    pub bank: u32,
+    /// Row within the bank.
+    pub row: u32,
+    /// Column address of the burst (aligned to BL8, i.e. multiple of 8).
+    pub col: u32,
+}
+
+impl DramAddr {
+    /// Bank-group index of this address.
+    pub fn group(&self, geo: &DramGeometry) -> u32 {
+        self.bank / geo.banks_per_group
+    }
+}
+
+impl DramGeometry {
+    /// The proFPGA DDR4 board: 4 × Micron EDY4016A (4 Gb x16) in lockstep.
+    /// 2 bank groups × 4 banks, 32768 rows, 1024 columns, 64-bit bus,
+    /// MIG-default ROW_COLUMN_BANK mapping. 2 GiB data capacity.
+    pub fn profpga_board() -> Self {
+        Self {
+            bus_bytes: 8,
+            bank_groups: 2,
+            banks_per_group: 4,
+            rows: 32768,
+            cols: 1024,
+            mapping: AddrMapping::RowColBank,
+        }
+    }
+
+    /// Total banks in the channel.
+    pub fn banks(&self) -> u32 {
+        self.bank_groups * self.banks_per_group
+    }
+
+    /// Bytes transferred by one BL8 DRAM burst (64 B on a 64-bit channel).
+    pub fn burst_bytes(&self) -> u32 {
+        self.bus_bytes * BURST_LEN
+    }
+
+    /// Bytes in one open row across the channel (the "page": 8 KiB here).
+    pub fn row_bytes(&self) -> u64 {
+        self.cols as u64 * self.bus_bytes as u64
+    }
+
+    /// Total channel capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.row_bytes() * self.rows as u64 * self.banks() as u64
+    }
+
+    /// BL8 bursts per row.
+    pub fn bursts_per_row(&self) -> u32 {
+        self.cols / BURST_LEN
+    }
+
+    /// Validate power-of-two fields and sane sizes.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("bus_bytes", self.bus_bytes),
+            ("bank_groups", self.bank_groups),
+            ("banks_per_group", self.banks_per_group),
+            ("rows", self.rows),
+            ("cols", self.cols),
+        ] {
+            if !v.is_power_of_two() {
+                return Err(format!("{name} must be a power of two, got {v}"));
+            }
+        }
+        if self.cols < BURST_LEN {
+            return Err(format!("cols must be >= {BURST_LEN}"));
+        }
+        Ok(())
+    }
+
+    /// Decode a byte address into a DRAM location. The address is first
+    /// burst-aligned (low `log2(burst_bytes)` bits dropped) and wrapped to
+    /// capacity.
+    pub fn decode(&self, byte_addr: u64) -> DramAddr {
+        let burst_index =
+            (byte_addr % self.capacity_bytes()) / self.burst_bytes() as u64;
+        let banks = self.banks() as u64;
+        let bursts_per_row = self.bursts_per_row() as u64;
+        match self.mapping {
+            AddrMapping::RowColBank => {
+                // Bank-group bits lowest (MIG's DDR4 default): consecutive
+                // bursts alternate bank groups so back-to-back CAS pay
+                // tCCD_S, not tCCD_L.
+                let group = (burst_index % self.bank_groups as u64) as u32;
+                let in_group = ((burst_index / self.bank_groups as u64)
+                    % self.banks_per_group as u64) as u32;
+                let bank = group * self.banks_per_group + in_group;
+                let rest = burst_index / banks;
+                let col = ((rest % bursts_per_row) as u32) * BURST_LEN;
+                let row = (rest / bursts_per_row) as u32;
+                DramAddr { bank, row, col }
+            }
+            AddrMapping::RowBankCol => {
+                let col = ((burst_index % bursts_per_row) as u32) * BURST_LEN;
+                let rest = burst_index / bursts_per_row;
+                let bank = (rest % banks) as u32;
+                let row = (rest / banks) as u32;
+                DramAddr { bank, row, col }
+            }
+            AddrMapping::BankRowCol => {
+                let col = ((burst_index % bursts_per_row) as u32) * BURST_LEN;
+                let rest = burst_index / bursts_per_row;
+                let row = (rest % self.rows as u64) as u32;
+                let bank = (rest / self.rows as u64) as u32;
+                DramAddr { bank, row, col }
+            }
+        }
+    }
+
+    /// Re-encode a DRAM location into the byte address of its burst
+    /// (inverse of [`Self::decode`]; used by the bijectivity property test).
+    pub fn encode(&self, a: DramAddr) -> u64 {
+        let banks = self.banks() as u64;
+        let bursts_per_row = self.bursts_per_row() as u64;
+        let col_burst = (a.col / BURST_LEN) as u64;
+        let burst_index = match self.mapping {
+            AddrMapping::RowColBank => {
+                let group = (a.bank / self.banks_per_group) as u64;
+                let in_group = (a.bank % self.banks_per_group) as u64;
+                let low = in_group * self.bank_groups as u64 + group;
+                (a.row as u64 * bursts_per_row + col_burst) * banks + low
+            }
+            AddrMapping::RowBankCol => {
+                (a.row as u64 * banks + a.bank as u64) * bursts_per_row + col_burst
+            }
+            AddrMapping::BankRowCol => {
+                (a.bank as u64 * self.rows as u64 + a.row as u64) * bursts_per_row + col_burst
+            }
+        };
+        burst_index * self.burst_bytes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profpga_capacity_is_2gib() {
+        let g = DramGeometry::profpga_board();
+        assert_eq!(g.capacity_bytes(), 2 << 30);
+        assert_eq!(g.banks(), 8);
+        assert_eq!(g.burst_bytes(), 64);
+        assert_eq!(g.row_bytes(), 8 << 10);
+        assert_eq!(g.bursts_per_row(), 128);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn row_col_bank_interleaves_banks() {
+        // MIG default: consecutive 64B bursts hit all 8 banks before any
+        // repeats, and alternate bank *groups* every burst (tCCD_S path).
+        let g = DramGeometry::profpga_board();
+        let mut seen = std::collections::HashSet::new();
+        let mut prev_group = None;
+        for i in 0..8u64 {
+            let a = g.decode(i * 64);
+            assert_eq!(a.row, 0);
+            seen.insert(a.bank);
+            let grp = a.group(&g);
+            if let Some(p) = prev_group {
+                assert_ne!(grp, p, "burst {i} must switch bank group");
+            }
+            prev_group = Some(grp);
+        }
+        assert_eq!(seen.len(), 8, "8 consecutive bursts cover all 8 banks");
+        // one full row-of-all-banks = 8 banks * 8KiB before row increments
+        let a = g.decode(8 * g.row_bytes());
+        assert_eq!(a.row, 1);
+    }
+
+    #[test]
+    fn row_bank_col_streams_within_row() {
+        let mut g = DramGeometry::profpga_board();
+        g.mapping = AddrMapping::RowBankCol;
+        // first 8KiB stays in bank 0 row 0
+        for i in 0..128u64 {
+            let a = g.decode(i * 64);
+            assert_eq!((a.bank, a.row), (0, 0), "burst {i}");
+            assert_eq!(a.col, (i as u32) * 8);
+        }
+        let a = g.decode(g.row_bytes());
+        assert_eq!((a.bank, a.row), (1, 0));
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_all_mappings() {
+        for mapping in [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol]
+        {
+            let mut g = DramGeometry::profpga_board();
+            g.mapping = mapping;
+            for addr in [0u64, 64, 4096, 8 << 10, 1 << 20, (2 << 30) - 64] {
+                let dec = g.decode(addr);
+                assert_eq!(g.encode(dec), addr & !63, "{mapping:?} addr={addr}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_wraps_at_capacity() {
+        let g = DramGeometry::profpga_board();
+        assert_eq!(g.decode(g.capacity_bytes() + 64), g.decode(64));
+    }
+
+    #[test]
+    fn sub_burst_addresses_share_location() {
+        let g = DramGeometry::profpga_board();
+        assert_eq!(g.decode(0), g.decode(63));
+        assert_ne!(g.decode(0), g.decode(64));
+    }
+
+    #[test]
+    fn group_index() {
+        let g = DramGeometry::profpga_board();
+        assert_eq!(DramAddr { bank: 0, row: 0, col: 0 }.group(&g), 0);
+        assert_eq!(DramAddr { bank: 5, row: 0, col: 0 }.group(&g), 1);
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2() {
+        let mut g = DramGeometry::profpga_board();
+        g.rows = 1000;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn mapping_parse() {
+        assert_eq!(AddrMapping::parse("row_col_bank"), Some(AddrMapping::RowColBank));
+        assert_eq!(AddrMapping::parse("ROW-BANK-COL"), Some(AddrMapping::RowBankCol));
+        assert_eq!(AddrMapping::parse("nope"), None);
+    }
+}

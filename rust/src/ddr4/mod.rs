@@ -1,0 +1,28 @@
+//! DDR4 SDRAM device model — the memory side of the paper's "memory
+//! interface" component.
+//!
+//! The model is cycle-level at DRAM-clock resolution: every JEDEC timing
+//! constraint that shapes the paper's throughput results (tRCD/tRP/CL row
+//! cycles behind the sequential-vs-random gap, tCCD_S/L behind bank-group
+//! interleaving, tFAW/tRRD behind activate throttling, tWTR/tWR behind the
+//! read/write asymmetry, tREFI/tRFC behind refresh degradation) is enforced
+//! per command. See `DESIGN.md` §2 for how this substitutes for the
+//! physical Micron devices.
+
+pub mod bank;
+pub mod command;
+pub mod device;
+pub mod geometry;
+pub mod power;
+pub mod timing;
+
+pub use command::Cmd;
+pub use device::{DdrDevice, DeviceStats};
+pub use geometry::{AddrMapping, DramAddr, DramGeometry, BURST_LEN};
+pub use timing::TimingParams;
+
+/// Simulation time in DRAM clock cycles (tCK units).
+pub type Cycle = u64;
+
+/// DRAM cycles per AXI fabric cycle — the paper's fixed 4:1 PHY:AXI ratio.
+pub const AXI_RATIO: Cycle = 4;

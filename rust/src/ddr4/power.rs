@@ -1,0 +1,207 @@
+//! DDR4 energy/power model (DRAMPower-style, IDD-based).
+//!
+//! The paper's host controller can collect "a number of statistics"
+//! beyond throughput (§II-C); energy per transferred bit is the one a
+//! data-center deployment cares most about (§I's "energy and power
+//! efficiency" motivation). This model turns the device's command counts
+//! and the elapsed time into energy, using the Micron EDY4016A datasheet
+//! current specs (IDD0/IDD2N/IDD3N/IDD4R/IDD4W/IDD5B at VDD 1.2 V),
+//! scaled to the four-device 64-bit channel.
+//!
+//! Method (standard DRAMPower decomposition):
+//! - **ACT/PRE pair**: `(IDD0 − IDD3N) × tRC × VDD` per activate;
+//! - **RD/WR burst**: `(IDD4R/W − IDD3N) × tBURST × VDD` per CAS;
+//! - **refresh**: `(IDD5B − IDD3N) × tRFC × VDD` per REF;
+//! - **background**: `IDD3N × elapsed × VDD` (active standby; a closed
+//!   idle channel would draw IDD2N — the model reports both bounds).
+
+use super::device::DeviceStats;
+use super::timing::TimingParams;
+use crate::config::SpeedBin;
+
+/// Datasheet currents in milliamps, per device (4 Gb x16, -083E/-075E
+/// grades are close enough across the four bins for this model).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IddSpec {
+    /// One-bank ACT-PRE current.
+    pub idd0_ma: f64,
+    /// Precharge standby.
+    pub idd2n_ma: f64,
+    /// Active standby.
+    pub idd3n_ma: f64,
+    /// Burst read.
+    pub idd4r_ma: f64,
+    /// Burst write.
+    pub idd4w_ma: f64,
+    /// Burst refresh.
+    pub idd5b_ma: f64,
+    /// Core supply voltage.
+    pub vdd: f64,
+}
+
+impl IddSpec {
+    /// Micron EDY4016A-class x16 device.
+    pub fn micron_4gb_x16() -> Self {
+        Self {
+            idd0_ma: 58.0,
+            idd2n_ma: 34.0,
+            idd3n_ma: 46.0,
+            idd4r_ma: 150.0,
+            idd4w_ma: 148.0,
+            idd5b_ma: 225.0,
+            vdd: 1.2,
+        }
+    }
+}
+
+/// Energy breakdown of a batch, in nanojoules (whole channel = 4 devices).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// ACT+PRE row energy.
+    pub activate_nj: f64,
+    /// Read burst energy.
+    pub read_nj: f64,
+    /// Write burst energy.
+    pub write_nj: f64,
+    /// Refresh energy.
+    pub refresh_nj: f64,
+    /// Active-standby background energy over the elapsed window.
+    pub background_nj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total channel energy.
+    pub fn total_nj(&self) -> f64 {
+        self.activate_nj + self.read_nj + self.write_nj + self.refresh_nj + self.background_nj
+    }
+
+    /// Energy per transferred bit, in picojoules (None if no data moved).
+    pub fn pj_per_bit(&self, bytes: u64) -> Option<f64> {
+        if bytes == 0 {
+            return None;
+        }
+        Some(self.total_nj() * 1000.0 / (bytes as f64 * 8.0))
+    }
+
+    /// Average power over the window, in milliwatts (1 nJ/ns = 1 W).
+    pub fn avg_mw(&self, elapsed_ns: f64) -> f64 {
+        if elapsed_ns <= 0.0 {
+            return 0.0;
+        }
+        self.total_nj() / elapsed_ns * 1e3
+    }
+}
+
+/// Devices ganged per channel (64-bit bus of x16 parts).
+pub const DEVICES_PER_CHANNEL: f64 = 4.0;
+
+/// Compute the energy of a window from device command statistics.
+///
+/// `elapsed_ck` is the window length in DRAM clocks; command counts come
+/// from [`DeviceStats`] deltas across the window.
+pub fn channel_energy(
+    stats: &DeviceStats,
+    elapsed_ck: u64,
+    speed: SpeedBin,
+    t: &TimingParams,
+    idd: &IddSpec,
+) -> EnergyBreakdown {
+    let tck_ns = speed.tck_ns();
+    let scale = DEVICES_PER_CHANNEL * idd.vdd; // mA × ns → pJ; ×1e-3 → nJ
+    let nj = |ma: f64, ns: f64| ma * ns * scale * 1e-3;
+
+    let trc_ns = t.trc as f64 * tck_ns;
+    let tburst_ns = t.burst_cycles as f64 * tck_ns;
+    let trfc_ns = t.trfc as f64 * tck_ns;
+    let elapsed_ns = elapsed_ck as f64 * tck_ns;
+
+    EnergyBreakdown {
+        activate_nj: stats.acts as f64 * nj(idd.idd0_ma - idd.idd3n_ma, trc_ns),
+        read_nj: stats.reads as f64 * nj(idd.idd4r_ma - idd.idd3n_ma, tburst_ns),
+        write_nj: stats.writes as f64 * nj(idd.idd4w_ma - idd.idd3n_ma, tburst_ns),
+        refresh_nj: stats.refreshes as f64 * nj(idd.idd5b_ma - idd.idd3n_ma, trfc_ns),
+        background_nj: nj(idd.idd3n_ma, elapsed_ns),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> (TimingParams, IddSpec) {
+        (TimingParams::for_bin(SpeedBin::Ddr4_1600), IddSpec::micron_4gb_x16())
+    }
+
+    fn stats(acts: u64, reads: u64, writes: u64, refreshes: u64) -> DeviceStats {
+        DeviceStats { acts, pres: acts, reads, writes, refreshes }
+    }
+
+    #[test]
+    fn idle_window_is_background_only() {
+        let (t, idd) = spec();
+        let e = channel_energy(&stats(0, 0, 0, 0), 800_000, SpeedBin::Ddr4_1600, &t, &idd);
+        assert_eq!(e.activate_nj, 0.0);
+        assert_eq!(e.read_nj + e.write_nj + e.refresh_nj, 0.0);
+        // 1 ms of active standby at 4 × 46 mA × 1.2 V ≈ 220.8 µW·ms = 220.8 nJ... → µJ range
+        let expected_nj = 46.0 * 1e6 * 4.0 * 1.2 * 1e-3; // mA × ns × scale
+        assert!((e.background_nj - expected_nj).abs() / expected_nj < 1e-9);
+        // average power of pure standby ≈ 220 mW for the channel
+        let mw = e.avg_mw(1e6);
+        assert!((200.0..250.0).contains(&mw), "{mw} mW");
+    }
+
+    #[test]
+    fn read_energy_scales_with_cas_count() {
+        let (t, idd) = spec();
+        let e1 = channel_energy(&stats(0, 1000, 0, 0), 1000, SpeedBin::Ddr4_1600, &t, &idd);
+        let e2 = channel_energy(&stats(0, 2000, 0, 0), 1000, SpeedBin::Ddr4_1600, &t, &idd);
+        assert!((e2.read_nj / e1.read_nj - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_traffic_costs_more_than_sequential() {
+        // Same data moved: sequential streams one ACT per 128 CAS in
+        // ~4 ck per burst; random pays one ACT per CAS and takes ~37 ck
+        // per access (so the standby window is longer too). Energy per
+        // bit must be several times worse for random.
+        let (t, idd) = spec();
+        let bytes = 10_000u64 * 64;
+        let seq = channel_energy(&stats(79, 10_000, 0, 6), 40_000, SpeedBin::Ddr4_1600, &t, &idd);
+        let rnd =
+            channel_energy(&stats(10_000, 10_000, 0, 60), 370_000, SpeedBin::Ddr4_1600, &t, &idd);
+        assert!(rnd.pj_per_bit(bytes).unwrap() > seq.pj_per_bit(bytes).unwrap() * 1.5);
+    }
+
+    #[test]
+    fn pj_per_bit_in_plausible_ddr4_range() {
+        // Streaming reads on DDR4 land in the ~5-40 pJ/bit ballpark.
+        let (t, idd) = spec();
+        // 100k sequential read bursts over the time they take (~4 ck each)
+        let e = channel_energy(
+            &stats(800, 100_000, 0, 60),
+            400_000,
+            SpeedBin::Ddr4_1600,
+            &t,
+            &idd,
+        );
+        let pj = e.pj_per_bit(100_000 * 64).unwrap();
+        assert!((2.0..60.0).contains(&pj), "{pj} pJ/bit");
+    }
+
+    #[test]
+    fn zero_bytes_has_no_per_bit_metric() {
+        let (t, idd) = spec();
+        let e = channel_energy(&stats(0, 0, 0, 0), 100, SpeedBin::Ddr4_1600, &t, &idd);
+        assert!(e.pj_per_bit(0).is_none());
+    }
+
+    #[test]
+    fn refresh_energy_visible_on_long_windows() {
+        let (t, idd) = spec();
+        let e = channel_energy(&stats(0, 0, 0, 100), 624_000, SpeedBin::Ddr4_1600, &t, &idd);
+        assert!(e.refresh_nj > 0.0);
+        // 100 refreshes × (225-46)mA × 260ns × 4 × 1.2V
+        let expected = 100.0 * 179.0 * 260.0 * 4.0 * 1.2 * 1e-3;
+        assert!((e.refresh_nj - expected).abs() / expected < 1e-9);
+    }
+}

@@ -1,0 +1,211 @@
+//! JEDEC DDR4 speed-bin timing parameters.
+//!
+//! All values are expressed in DRAM clock cycles (nCK) at the bin's own
+//! clock. Parameters specified by JEDEC in nanoseconds are converted with
+//! `ceil(ns / tCK)` and clamped to their nCK minima, exactly as a real
+//! controller's timing package does. The table covers the four bins of the
+//! paper's campaign (Table II): DDR4-1600K, -1866M, -2133P, -2400R, for a
+//! 4 Gb x16 device (2 KB page ⇒ the x16 tRRD/tFAW values).
+
+use crate::config::SpeedBin;
+
+/// DDR4 timing parameters in DRAM clock cycles (nCK).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimingParams {
+    /// CAS latency: READ command to first data.
+    pub cl: u32,
+    /// CAS write latency: WRITE command to first data.
+    pub cwl: u32,
+    /// ACT to internal READ/WRITE delay.
+    pub trcd: u32,
+    /// PRE to ACT delay (row precharge time).
+    pub trp: u32,
+    /// ACT to PRE minimum (row active time).
+    pub tras: u32,
+    /// ACT to ACT same bank (row cycle): tRAS + tRP.
+    pub trc: u32,
+    /// CAS to CAS, different bank group.
+    pub tccd_s: u32,
+    /// CAS to CAS, same bank group.
+    pub tccd_l: u32,
+    /// ACT to ACT, different bank group.
+    pub trrd_s: u32,
+    /// ACT to ACT, same bank group.
+    pub trrd_l: u32,
+    /// Four-activate window: at most 4 ACTs per tFAW.
+    pub tfaw: u32,
+    /// Write recovery: last write data to PRE.
+    pub twr: u32,
+    /// Write CAS to read CAS, different bank group (after last write data).
+    pub twtr_s: u32,
+    /// Write CAS to read CAS, same bank group (after last write data).
+    pub twtr_l: u32,
+    /// Read to PRE delay.
+    pub trtp: u32,
+    /// Refresh cycle time (REF to next valid command), 4 Gb: 260 ns.
+    pub trfc: u32,
+    /// Average refresh interval (7.8 µs).
+    pub trefi: u32,
+    /// Data burst duration on the bus: BL8 at DDR = 4 nCK.
+    pub burst_cycles: u32,
+}
+
+/// Round `ns` up to clock cycles at `tck_ns`, with an nCK floor.
+fn ck(ns: f64, tck_ns: f64, min_ck: u32) -> u32 {
+    ((ns / tck_ns).ceil() as u32).max(min_ck)
+}
+
+impl TimingParams {
+    /// Timing table for a JEDEC speed bin (4 Gb x16 device).
+    pub fn for_bin(bin: SpeedBin) -> Self {
+        let tck = bin.tck_ns();
+        // Bin-specific latched latencies (nCK by definition).
+        let (cl, cwl) = match bin {
+            SpeedBin::Ddr4_1600 => (11, 9),
+            SpeedBin::Ddr4_1866 => (13, 10),
+            SpeedBin::Ddr4_2133 => (15, 11),
+            SpeedBin::Ddr4_2400 => (16, 12),
+        };
+        // tRCD/tRP track CL in these bins (11-11-11 … 16-16-16).
+        let trcd = cl;
+        let trp = cl;
+        // tRAS: 35/34/33/32 ns across the bins.
+        let tras_ns = match bin {
+            SpeedBin::Ddr4_1600 => 35.0,
+            SpeedBin::Ddr4_1866 => 34.0,
+            SpeedBin::Ddr4_2133 => 33.0,
+            SpeedBin::Ddr4_2400 => 32.0,
+        };
+        let tras = ck(tras_ns, tck, 0);
+        let tccd_s = 4;
+        let tccd_l = ck(6.25, tck, 4);
+        // x16 (2 KB page) activate spacing.
+        let trrd_s = ck(5.3, tck, 4);
+        let trrd_l = ck(6.4, tck, 4);
+        let tfaw = ck(35.0, tck, 16);
+        let twr = ck(15.0, tck, 0);
+        let twtr_s = ck(2.5, tck, 2);
+        let twtr_l = ck(7.5, tck, 4);
+        let trtp = ck(7.5, tck, 4);
+        let trfc = ck(260.0, tck, 0); // 4 Gb device
+        let trefi = ck(7800.0, tck, 0);
+        Self {
+            cl,
+            cwl,
+            trcd,
+            trp,
+            tras,
+            trc: tras + trp,
+            tccd_s,
+            tccd_l,
+            trrd_s,
+            trrd_l,
+            tfaw,
+            twr,
+            twtr_s,
+            twtr_l,
+            trtp,
+            trfc,
+            trefi,
+            burst_cycles: 4,
+        }
+    }
+
+    /// Write-to-read turnaround on the command bus (same rank): the read
+    /// CAS must wait `CWL + BL/2 + tWTR_x` after the write CAS.
+    pub fn wr_to_rd(&self, same_group: bool) -> u32 {
+        self.cwl
+            + self.burst_cycles
+            + if same_group { self.twtr_l } else { self.twtr_s }
+    }
+
+    /// Read-to-write turnaround: the write CAS must wait
+    /// `CL + BL/2 + 2 - CWL` after the read CAS so the data bus switches
+    /// direction with a 2-cycle bubble.
+    pub fn rd_to_wr(&self) -> u32 {
+        (self.cl + self.burst_cycles + 2).saturating_sub(self.cwl)
+    }
+
+    /// Minimum READ-to-PRE same-bank spacing.
+    pub fn rd_to_pre(&self) -> u32 {
+        self.trtp
+    }
+
+    /// Minimum WRITE-to-PRE same-bank spacing: CWL + BL/2 + tWR.
+    pub fn wr_to_pre(&self) -> u32 {
+        self.cwl + self.burst_cycles + self.twr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_1600_matches_jedec_k() {
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        assert_eq!((t.cl, t.trcd, t.trp), (11, 11, 11));
+        assert_eq!(t.cwl, 9);
+        assert_eq!(t.tras, 28); // 35 ns @ 1.25 ns
+        assert_eq!(t.trc, 39);
+        assert_eq!(t.tccd_l, 5); // 6.25 ns @ 1.25 ns
+        assert_eq!(t.trfc, 208); // 260 ns @ 1.25 ns
+        assert_eq!(t.trefi, 6240); // 7.8 µs @ 1.25 ns
+        assert_eq!(t.twr, 12); // 15 ns
+    }
+
+    #[test]
+    fn bin_2400_matches_jedec_r() {
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_2400);
+        assert_eq!((t.cl, t.trcd, t.trp), (16, 16, 16));
+        assert_eq!(t.cwl, 12);
+        assert_eq!(t.tras, 39); // 32 ns @ 0.8333 ns
+        assert_eq!(t.trfc, 312); // 260 ns @ 0.8333 ns
+        assert_eq!(t.tccd_l, 8); // 6.25 ns
+    }
+
+    #[test]
+    fn latency_in_ns_roughly_constant_across_bins() {
+        // The key DDR4 property behind the paper's §III-C analysis: core
+        // latencies are ~constant in ns, so higher bins pay *more cycles*
+        // of latency and random accesses gain far less than 50%.
+        for bin in SpeedBin::ALL {
+            let t = TimingParams::for_bin(bin);
+            let ns = |c: u32| c as f64 * bin.tck_ns();
+            let rc_ns = ns(t.trc);
+            assert!((45.0..55.0).contains(&rc_ns), "{bin}: tRC = {rc_ns} ns");
+            let miss = ns(t.trp + t.trcd + t.cl);
+            assert!((40.0..50.0).contains(&miss), "{bin}: miss latency {miss} ns");
+        }
+    }
+
+    #[test]
+    fn ccd_l_strictly_ge_ccd_s() {
+        for bin in SpeedBin::ALL {
+            let t = TimingParams::for_bin(bin);
+            assert!(t.tccd_l >= t.tccd_s);
+            assert!(t.trrd_l >= t.trrd_s);
+            assert!(t.twtr_l >= t.twtr_s);
+        }
+    }
+
+    #[test]
+    fn turnarounds_positive_and_ordered() {
+        for bin in SpeedBin::ALL {
+            let t = TimingParams::for_bin(bin);
+            assert!(t.wr_to_rd(true) > t.wr_to_rd(false));
+            assert!(t.rd_to_wr() > 0);
+            assert!(t.wr_to_pre() > t.rd_to_pre());
+        }
+    }
+
+    #[test]
+    fn monotone_cycles_with_data_rate() {
+        // ns-specified params take more cycles at faster clocks.
+        let a = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        let b = TimingParams::for_bin(SpeedBin::Ddr4_2400);
+        assert!(b.trfc > a.trfc);
+        assert!(b.trefi > a.trefi);
+        assert!(b.cl > a.cl);
+    }
+}

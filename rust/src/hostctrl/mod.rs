@@ -1,0 +1,273 @@
+//! Host controller (§II-C): the run-time command interface.
+//!
+//! In the paper, a host PC drives the platform over UART: it configures
+//! each traffic generator independently, launches batches, and reads the
+//! performance counters back. This module implements that protocol over a
+//! byte-stream transport — an in-memory link standing in for the UART
+//! (used by tests and `examples/host_session.rs`) or a TCP listener
+//! ([`serve_tcp`]) for interactive use.
+//!
+//! ## Protocol (line-oriented, ASCII)
+//!
+//! ```text
+//! INFO                         → OK CHANNELS=3 SPEED=DDR4-1600 ...
+//! CFG <ch> KEY=VALUE ...       → OK CFG <echo>     (see config::parse)
+//! RUN <ch>                     → OK RUN CH=0 TXNS=4096 CYCLES=...
+//! RUNALL                      → OK RUNALL CHANNELS=3 AGG_GBS=...
+//! STATS <ch>                   → OK RD_TXNS=.. RD_GBS=.. WR_GBS=.. ...
+//! RESET <ch>                   → OK RESET
+//! HELP                         → OK <command list>
+//! QUIT                         → OK BYE (closes the session)
+//! ```
+//!
+//! Errors answer `ERR <reason>`; the session stays open.
+
+use std::io::{BufRead, BufReader, Write};
+
+use crate::config::{format_pattern_config, parse_pattern_config, PatternConfig};
+use crate::platform::Platform;
+use crate::stats::BatchStats;
+
+/// Host-controller session state over a [`Platform`].
+pub struct HostController {
+    platform: Platform,
+    pending: Vec<PatternConfig>,
+    last: Vec<Option<BatchStats>>,
+}
+
+impl HostController {
+    /// Wrap a platform.
+    pub fn new(platform: Platform) -> Self {
+        let n = platform.channels();
+        Self { platform, pending: vec![PatternConfig::default(); n], last: vec![None; n] }
+    }
+
+    /// Borrow the wrapped platform.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// Take the platform back (end of session).
+    pub fn into_platform(self) -> Platform {
+        self.platform
+    }
+
+    fn parse_channel(&self, tok: Option<&str>) -> Result<usize, String> {
+        let ch: usize = tok
+            .ok_or("missing channel index")?
+            .parse()
+            .map_err(|_| "channel must be an integer".to_string())?;
+        if ch >= self.platform.channels() {
+            return Err(format!(
+                "channel {ch} out of range (design has {})",
+                self.platform.channels()
+            ));
+        }
+        Ok(ch)
+    }
+
+    /// Handle one command line; returns the response line (without
+    /// newline). `QUIT` returns `OK BYE` — transports treat it as EOF.
+    pub fn handle_line(&mut self, line: &str) -> String {
+        match self.handle_inner(line) {
+            Ok(resp) => format!("OK {resp}"),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    fn handle_inner(&mut self, line: &str) -> Result<String, String> {
+        let mut toks = line.split_whitespace();
+        let cmd = toks.next().unwrap_or("").to_ascii_uppercase();
+        match cmd.as_str() {
+            "" => Err("empty command".into()),
+            "HELP" => Ok("COMMANDS: INFO CFG RUN RUNALL STATS RESET HELP QUIT".into()),
+            "INFO" => {
+                let d = self.platform.design();
+                Ok(format!(
+                    "CHANNELS={} SPEED={} AXI_MHZ={:.0} PHY_MHZ={:.0} AXI_BITS={} XLA={}",
+                    d.channels,
+                    d.speed,
+                    d.speed.axi_clock_mhz(),
+                    d.speed.phy_clock_mhz(),
+                    d.axi_data_width_bits,
+                    if self.platform.has_runtime() { 1 } else { 0 },
+                ))
+            }
+            "CFG" => {
+                let ch = self.parse_channel(toks.next())?;
+                let rest: Vec<&str> = toks.collect();
+                let cfg = parse_pattern_config(&rest).map_err(|e| e.to_string())?;
+                let echo = format_pattern_config(&cfg);
+                self.pending[ch] = cfg;
+                Ok(format!("CFG CH={ch} {echo}"))
+            }
+            "RUN" => {
+                let ch = self.parse_channel(toks.next())?;
+                let cfg = self.pending[ch].clone();
+                let stats = self.platform.run_batch(ch, &cfg).map_err(|e| e.to_string())?;
+                let resp = format!(
+                    "RUN CH={ch} TXNS={} CYCLES={}",
+                    stats.counters.rd_txns + stats.counters.wr_txns,
+                    stats.counters.total_cycles
+                );
+                self.last[ch] = Some(stats);
+                Ok(resp)
+            }
+            "RUNALL" => {
+                // run each channel's own pending pattern
+                let mut agg = 0.0;
+                for ch in 0..self.platform.channels() {
+                    let cfg = self.pending[ch].clone();
+                    let stats = self.platform.run_batch(ch, &cfg).map_err(|e| e.to_string())?;
+                    agg += stats.total_throughput_gbs();
+                    self.last[ch] = Some(stats);
+                }
+                Ok(format!("RUNALL CHANNELS={} AGG_GBS={agg:.3}", self.platform.channels()))
+            }
+            "STATS" => {
+                let ch = self.parse_channel(toks.next())?;
+                let s = self.last[ch].as_ref().ok_or("no batch has run on this channel")?;
+                let c = &s.counters;
+                Ok(format!(
+                    "CH={ch} RD_TXNS={} WR_TXNS={} RD_BYTES={} WR_BYTES={} RD_CYCLES={} \
+                     WR_CYCLES={} TOTAL_CYCLES={} RD_GBS={:.3} WR_GBS={:.3} TOT_GBS={:.3} \
+                     RD_LAT_NS={:.1} WR_LAT_NS={:.1} REFRESH_STALL={} MISMATCHES={} \
+                     ENERGY_NJ={:.0} PJ_BIT={:.2} PWR_MW={:.1}",
+                    c.rd_txns,
+                    c.wr_txns,
+                    c.rd_bytes,
+                    c.wr_bytes,
+                    c.rd_cycles,
+                    c.wr_cycles,
+                    c.total_cycles,
+                    s.read_throughput_gbs(),
+                    s.write_throughput_gbs(),
+                    s.total_throughput_gbs(),
+                    s.read_latency_ns(),
+                    s.write_latency_ns(),
+                    c.refresh_stall_dram_cycles,
+                    c.mismatches,
+                    s.energy.total_nj(),
+                    s.pj_per_bit().unwrap_or(0.0),
+                    s.avg_power_mw(),
+                ))
+            }
+            "RESET" => {
+                let ch = self.parse_channel(toks.next())?;
+                self.pending[ch] = PatternConfig::default();
+                self.last[ch] = None;
+                Ok("RESET".into())
+            }
+            "QUIT" => Ok("BYE".into()),
+            other => Err(format!("unknown command `{other}` (try HELP)")),
+        }
+    }
+
+    /// Drive a whole session over reader/writer streams (the UART loop).
+    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> std::io::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = self.handle_line(&line);
+            writeln!(writer, "{resp}")?;
+            if resp == "OK BYE" {
+                break;
+            }
+        }
+        writer.flush()
+    }
+}
+
+/// Serve the host protocol on a TCP socket (one session at a time — the
+/// physical UART is single-master too). Binds to `addr` (e.g.
+/// "127.0.0.1:5557"); returns after `max_sessions` sessions (None = run
+/// forever).
+pub fn serve_tcp(
+    mut host: HostController,
+    addr: &str,
+    max_sessions: Option<usize>,
+) -> std::io::Result<HostController> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    eprintln!("ddr4bench host controller listening on {addr}");
+    let mut served = 0;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let reader = BufReader::new(stream.try_clone()?);
+        host.serve(reader, stream)?;
+        served += 1;
+        if max_sessions.is_some_and(|m| served >= m) {
+            break;
+        }
+    }
+    Ok(host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DesignConfig, SpeedBin};
+
+    fn host() -> HostController {
+        HostController::new(Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600)))
+    }
+
+    #[test]
+    fn info_reports_design() {
+        let mut h = host();
+        let r = h.handle_line("INFO");
+        assert!(r.starts_with("OK CHANNELS=1 SPEED=DDR4-1600"), "{r}");
+    }
+
+    #[test]
+    fn cfg_run_stats_flow() {
+        let mut h = host();
+        let r = h.handle_line("CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=512");
+        assert!(r.starts_with("OK CFG CH=0"), "{r}");
+        let r = h.handle_line("RUN 0");
+        assert!(r.starts_with("OK RUN CH=0 TXNS=512"), "{r}");
+        let r = h.handle_line("STATS 0");
+        assert!(r.contains("RD_TXNS=512"), "{r}");
+        assert!(r.contains("RD_GBS="), "{r}");
+    }
+
+    #[test]
+    fn stats_before_run_is_error() {
+        let mut h = host();
+        assert!(h.handle_line("STATS 0").starts_with("ERR"));
+    }
+
+    #[test]
+    fn bad_channel_and_command_errors() {
+        let mut h = host();
+        assert!(h.handle_line("RUN 5").starts_with("ERR"));
+        assert!(h.handle_line("FROB 0").starts_with("ERR"));
+        assert!(h.handle_line("CFG 0 BURST=4000").starts_with("ERR"));
+    }
+
+    #[test]
+    fn reset_clears_stats() {
+        let mut h = host();
+        h.handle_line("CFG 0 OP=R BATCH=256");
+        h.handle_line("RUN 0");
+        assert!(h.handle_line("STATS 0").starts_with("OK"));
+        assert_eq!(h.handle_line("RESET 0"), "OK RESET");
+        assert!(h.handle_line("STATS 0").starts_with("ERR"));
+    }
+
+    #[test]
+    fn serve_loop_over_streams() {
+        let mut h = host();
+        let input = b"INFO\nCFG 0 OP=W BURST=4 BATCH=256\nRUN 0\nSTATS 0\nQUIT\n".to_vec();
+        let mut out = Vec::new();
+        h.serve(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].starts_with("OK CHANNELS"));
+        assert!(lines[2].starts_with("OK RUN"));
+        assert!(lines[3].contains("WR_TXNS=256"));
+        assert_eq!(lines[4], "OK BYE");
+    }
+}

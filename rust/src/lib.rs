@@ -1,0 +1,84 @@
+//! # ddr4bench
+//!
+//! A benchmarking platform for DDR4 memory performance in data-center-class
+//! FPGAs — a full reproduction of Galimberti et al., ISCAS 2025
+//! (DOI 10.1109/ISCAS56072.2025.11043686), on a simulated substrate.
+//!
+//! The paper instantiates, per memory channel, a MIG-style DDR4 **memory
+//! interface**, an AXI4 **traffic generator** with run-time-configurable
+//! access patterns, and a UART-driven **host controller** on an AMD Kintex
+//! UltraScale 115. This crate rebuilds every one of those components as a
+//! cycle-level model so the paper's entire experimental campaign (Tables
+//! III–IV, Figs. 2–3, the channel-scaling and data-rate analyses) can be
+//! regenerated on a CPU:
+//!
+//! - [`ddr4`] — the DDR4 SDRAM device: JEDEC speed-bin timing, bank-group /
+//!   bank state machines, refresh, the DDR data bus.
+//! - [`controller`] — the memory interface: FR-FCFS command scheduling,
+//!   read/write queues and write draining, open-page policy, refresh
+//!   insertion, the 4:1 PHY:AXI clock ratio.
+//! - [`axi`] — the AXI4 on-chip protocol: five independent channels, burst
+//!   semantics (FIXED / INCR / WRAP, lengths 1–128), handshakes.
+//! - [`trafficgen`] — the paper's instrument: run-time-configurable traffic
+//!   patterns, signaling modes, payload generation + read-back verification,
+//!   hardware-style performance counters.
+//! - [`hostctrl`] — the UART/host-PC command protocol (in-memory link or
+//!   TCP server) that configures TGs and collects statistics at run time.
+//! - [`platform`] — design-time composition: N channels × data rate ×
+//!   counter set, and the batch-run executive.
+//! - [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   artifacts (payload generator, verifier, analytic bandwidth model) and
+//!   executes them from the hot path; Python never runs at benchmark time.
+//! - [`resource`] — the Table III analytical FPGA resource model.
+//! - [`analytic`] — closed-form DDR4 bandwidth model used to cross-check
+//!   the simulator.
+//! - [`report`] — table / figure-series rendering for the paper artifacts.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ddr4bench::config::{DesignConfig, PatternConfig, SpeedBin};
+//! use ddr4bench::platform::Platform;
+//!
+//! let design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+//! let mut platform = Platform::new(design);
+//! let pattern = PatternConfig::seq_read_burst(32, 4096);
+//! let stats = platform.run_batch(0, &pattern).unwrap();
+//! println!("throughput: {:.2} GB/s", stats.read_throughput_gbs());
+//! ```
+
+pub mod analytic;
+pub mod axi;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod ddr4;
+pub mod hostctrl;
+pub mod platform;
+pub mod report;
+pub mod resource;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod trafficgen;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of the AOT artifacts directory, relative to the repo
+/// root. Overridable via the `DDR4BENCH_ARTIFACTS` environment variable.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("DDR4BENCH_ARTIFACTS") {
+        return std::path::PathBuf::from(dir);
+    }
+    // Try CARGO_MANIFEST_DIR (tests/benches), then cwd.
+    if let Ok(dir) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = std::path::PathBuf::from(dir).join("artifacts");
+        if p.exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}

@@ -1,0 +1,287 @@
+//! `ddr4bench` — CLI launcher for the DDR4 benchmarking platform.
+//!
+//! ```text
+//! ddr4bench info                         # design summary + XLA artifact status
+//! ddr4bench run --speed 1600 --op R --addr seq --burst 32 --batch 4096
+//! ddr4bench table3 | table4 | fig2 | fig3 | scaling | analysis | modelcheck
+//! ddr4bench serve --addr-bind 127.0.0.1:5557  # host-controller TCP endpoint
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use ddr4bench::cli::Cli;
+use ddr4bench::config::{parse_pattern_config, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::hostctrl::{serve_tcp, HostController};
+use ddr4bench::platform::Platform;
+use ddr4bench::report::campaign;
+use ddr4bench::resource;
+use ddr4bench::runtime::XlaRuntime;
+
+fn cli() -> Cli {
+    Cli::new("ddr4bench", "DDR4 memory benchmarking platform (simulated substrate)")
+        .command("info", "print design + artifact status")
+        .command("run", "run one traffic pattern and print its statistics")
+        .command("table3", "reproduce Table III (FPGA resource utilization)")
+        .command("table4", "reproduce Table IV (single-channel DDR4-1600 throughput)")
+        .command("fig2", "reproduce Fig. 2 (DDR4-1600 vs DDR4-2400 sweeps)")
+        .command("fig3", "reproduce Fig. 3 (mixed R/W breakdown)")
+        .command("scaling", "channel-scaling experiment (1-3 channels)")
+        .command("analysis", "paper-claim vs measured ratio table (SIII-C)")
+        .command("modelcheck", "analytic model vs simulator cross-check")
+        .command("serve", "serve the host-controller protocol over TCP")
+        .command("dse", "design-space exploration (analytic model; XLA-batched if artifacts present)")
+        .command("trace", "replay a memory-access trace file (see trafficgen::trace)")
+        .option("speed", "data rate: 1600|1866|2133|2400 (default 1600)")
+        .option("channels", "memory channels 1-3 (default 1)")
+        .option("op", "R|W|M (default R)")
+        .option("addr", "seq|rnd (default seq)")
+        .option("burst", "burst length 1-128 (default 32)")
+        .option("btype", "burst type FIXED|INCR|WRAP (default INCR)")
+        .option("sig", "signaling NB|BLK|AGR (default NB)")
+        .option("batch", "transactions per batch (default 4096)")
+        .option("scale", "campaign scale factor (default 1.0)")
+        .option("addr-bind", "TCP bind address for serve (default 127.0.0.1:5557)")
+        .option("csv", "write table/figure CSV to this path")
+        .option("file", "trace file for the trace command")
+        .flag("verify", "enable data-integrity checking")
+        .flag("xla", "require the XLA runtime (error if artifacts missing)")
+        .flag("no-xla", "skip loading the XLA runtime")
+}
+
+fn pattern_from_args(args: &ddr4bench::cli::Args) -> Result<PatternConfig> {
+    let mut toks: Vec<String> = vec![
+        format!("OP={}", args.get_or("op", "R")),
+        format!("ADDR={}", args.get_or("addr", "SEQ")),
+        format!("BURST={}", args.get_or("burst", "32")),
+        format!("TYPE={}", args.get_or("btype", "INCR")),
+        format!("SIG={}", args.get_or("sig", "NB")),
+        format!("BATCH={}", args.get_or("batch", "4096")),
+    ];
+    if args.has_flag("verify") {
+        toks.push("VERIFY=1".into());
+    }
+    let refs: Vec<&str> = toks.iter().map(String::as_str).collect();
+    parse_pattern_config(&refs).map_err(|e| anyhow!("{e}"))
+}
+
+fn design_from_args(args: &ddr4bench::cli::Args) -> Result<DesignConfig> {
+    let speed = SpeedBin::parse(args.get_or("speed", "1600"))
+        .ok_or_else(|| anyhow!("unknown --speed"))?;
+    let channels: usize = args.parse_or("channels", 1usize).map_err(|e| anyhow!(e))?;
+    let d = DesignConfig::with_channels(channels, speed);
+    d.validate().map_err(|e| anyhow!("{e}"))?;
+    Ok(d)
+}
+
+fn maybe_runtime(args: &ddr4bench::cli::Args) -> Result<Option<XlaRuntime>> {
+    if args.has_flag("no-xla") {
+        return Ok(None);
+    }
+    let dir = ddr4bench::artifacts_dir();
+    if XlaRuntime::artifacts_present(&dir) {
+        Ok(Some(XlaRuntime::load(&dir)?))
+    } else if args.has_flag("xla") {
+        Err(anyhow!("--xla requested but artifacts missing in {dir:?}; run `make artifacts`"))
+    } else {
+        Ok(None)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli().parse(&argv) {
+        Ok(a) => a,
+        Err(help) => {
+            println!("{help}");
+            return Ok(());
+        }
+    };
+    let scale: f64 = args.parse_or("scale", 1.0).map_err(|e| anyhow!(e))?;
+    let csv_path = args.get("csv").map(std::path::PathBuf::from);
+
+    match args.command.as_deref() {
+        None | Some("info") => {
+            let d = design_from_args(&args)?;
+            println!("ddr4bench v{}", ddr4bench::VERSION);
+            println!(
+                "design: {} channel(s) @ {} (PHY {:.0} MHz / AXI {:.0} MHz, {}-bit AXI)",
+                d.channels,
+                d.speed,
+                d.speed.phy_clock_mhz(),
+                d.speed.axi_clock_mhz(),
+                d.axi_data_width_bits
+            );
+            let r = resource::design_cost(&d);
+            println!(
+                "modeled utilization: {:.0} LUT / {:.0} FF / {} BRAM / {} DSP",
+                r.lut, r.ff, r.bram, r.dsp
+            );
+            let dir = ddr4bench::artifacts_dir();
+            match maybe_runtime(&args)? {
+                Some(rt) => println!("XLA artifacts: loaded from {dir:?} ({})", rt.platform()),
+                None => println!("XLA artifacts: not loaded (dir {dir:?})"),
+            }
+        }
+        Some("run") => {
+            let design = design_from_args(&args)?;
+            let cfg = pattern_from_args(&args)?;
+            let mut platform = Platform::new(design);
+            if let Some(rt) = maybe_runtime(&args)? {
+                platform = platform.with_runtime(rt);
+            }
+            let per = platform.run_batch_all(&cfg)?;
+            for (ch, s) in per.iter().enumerate() {
+                println!(
+                    "ch{ch}: rd {:.2} GB/s  wr {:.2} GB/s  total {:.2} GB/s  \
+                     (rd lat {:.0} ns, wr lat {:.0} ns, refresh stall {} ck, mismatches {})",
+                    s.read_throughput_gbs(),
+                    s.write_throughput_gbs(),
+                    s.total_throughput_gbs(),
+                    s.read_latency_ns(),
+                    s.write_latency_ns(),
+                    s.counters.refresh_stall_dram_cycles,
+                    s.counters.mismatches
+                );
+            }
+            if per.len() > 1 {
+                let agg = Platform::aggregate(&per);
+                println!("aggregate: {:.2} GB/s", agg.total_throughput_gbs());
+            }
+        }
+        Some("table3") => {
+            let mut t = ddr4bench::report::Table::new(
+                "Table III: FPGA resource utilization (modeled)",
+                &["Component/Design", "LUT", "FF", "BRAM", "DSP", "LUT %"],
+            );
+            for row in resource::table3() {
+                let u = resource::utilization(row.res);
+                t.row(vec![
+                    row.name,
+                    format!("{:.0}", row.res.lut),
+                    format!("{:.0}", row.res.ff),
+                    format!("{}", row.res.bram),
+                    format!("{:.0}", row.res.dsp),
+                    format!("{:.2}%", u[0] * 100.0),
+                ]);
+            }
+            println!("{}", t.ascii());
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("table4") => {
+            let (t, _) = campaign::table4(scale);
+            println!("{}", t.ascii());
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("fig2") => {
+            for fig in campaign::fig2(scale) {
+                println!("{}", fig.ascii());
+                if let Some(p) = &csv_path {
+                    let name = p.with_extension(format!(
+                        "{}.csv",
+                        fig.title.chars().filter(char::is_ascii_digit).collect::<String>()
+                    ));
+                    std::fs::write(name, fig.csv())?;
+                }
+            }
+        }
+        Some("fig3") => {
+            let t = campaign::fig3(scale);
+            println!("{}", t.ascii());
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("scaling") => {
+            let t = campaign::scaling(scale);
+            println!("{}", t.ascii());
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("analysis") => {
+            let t = campaign::analysis(scale);
+            println!("{}", t.ascii());
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("modelcheck") => {
+            let (t, mae) = campaign::model_check(scale);
+            println!("{}", t.ascii());
+            println!("mean absolute relative error: {:.1}%", mae * 100.0);
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("dse") => {
+            let rt = maybe_runtime(&args)?;
+            let points = ddr4bench::analytic::dse::explore(rt.as_ref())?;
+            let mut t = ddr4bench::report::Table::new(
+                format!(
+                    "Design-space exploration ({} predictions)",
+                    if rt.as_ref().is_some_and(|r| r.has_bwmodel()) { "XLA bwmodel" } else { "rust model" }
+                ),
+                &["Ch", "Rate", "Workload", "GB/s", "LUT", "GB/s per kLUT"],
+            );
+            for p in &points {
+                t.row(vec![
+                    p.channels.to_string(),
+                    p.speed.to_string(),
+                    p.workload.clone(),
+                    format!("{:.2}", p.gbs),
+                    format!("{:.0}", p.lut),
+                    format!("{:.3}", p.gbs_per_klut),
+                ]);
+            }
+            println!("{}", t.ascii());
+            for wl in ["seq-read-128", "rnd-read-4", "mixed-32"] {
+                let front = ddr4bench::analytic::dse::pareto(&points, wl);
+                let desc: Vec<String> = front
+                    .iter()
+                    .map(|p| format!("{}ch@{} ({:.1} GB/s, {:.0} LUT)", p.channels, p.speed, p.gbs, p.lut))
+                    .collect();
+                println!("pareto[{wl}]: {}", desc.join(" -> "));
+            }
+            if let Some(p) = csv_path {
+                t.write_csv(&p)?;
+            }
+        }
+        Some("trace") => {
+            let path = args.get("file").ok_or_else(|| anyhow!("trace requires --file"))?;
+            let text = std::fs::read_to_string(path)?;
+            let records = ddr4bench::trafficgen::trace::parse_trace(&text)?;
+            let design = design_from_args(&args)?;
+            let mut platform = Platform::new(design);
+            if let Some(rt) = maybe_runtime(&args)? {
+                platform = platform.with_runtime(rt);
+            }
+            let s = platform.run_trace(0, &records, args.has_flag("verify"))?;
+            println!(
+                "trace: {} records  rd {:.2} GB/s  wr {:.2} GB/s  total {:.2} GB/s  \
+                 energy {:.1} uJ ({:.1} pJ/bit)  mismatches {}",
+                records.len(),
+                s.read_throughput_gbs(),
+                s.write_throughput_gbs(),
+                s.total_throughput_gbs(),
+                s.energy.total_nj() / 1e3,
+                s.pj_per_bit().unwrap_or(0.0),
+                s.counters.mismatches
+            );
+        }
+        Some("serve") => {
+            let design = design_from_args(&args)?;
+            let mut platform = Platform::new(design);
+            if let Some(rt) = maybe_runtime(&args)? {
+                platform = platform.with_runtime(rt);
+            }
+            let host = HostController::new(platform);
+            serve_tcp(host, args.get_or("addr-bind", "127.0.0.1:5557"), None)?;
+        }
+        Some(other) => return Err(anyhow!("unknown command {other}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,458 @@
+//! Design-time composition of the benchmarking platform (Fig. 1 of the
+//! paper): per channel one memory interface + one traffic generator,
+//! plus the shared host controller on top.
+//!
+//! [`Platform::run_batch`] is the executive the host controller drives: it
+//! instantiates a TG for the requested pattern, runs the two-clock-domain
+//! simulation loop (fabric tick : DRAM tick = 1 : 4), and returns the
+//! hardware counters as [`BatchStats`]. Channels are fully independent —
+//! [`Platform::run_batch_all`] runs the same pattern on every channel (one
+//! OS thread each, mirroring the physically parallel channels) and reports
+//! per-channel plus aggregate statistics.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{DesignConfig, PatternConfig};
+use crate::controller::MemController;
+use crate::ddr4::{TimingParams, AXI_RATIO};
+use crate::runtime::XlaRuntime;
+use crate::stats::{BatchCounters, BatchStats};
+use crate::trafficgen::{payload, DataStore, TrafficGen};
+
+/// Persistent state of one memory channel across batches.
+struct ChannelState {
+    controller: MemController,
+    /// Memory contents survive between batches so write-then-read
+    /// verification flows work (the DRAM keeps its data).
+    store: Option<DataStore>,
+    /// Fabric-cycle clock, monotone across batches.
+    axi_now: u64,
+}
+
+/// The instantiated benchmarking platform.
+pub struct Platform {
+    design: DesignConfig,
+    channels: Vec<ChannelState>,
+    runtime: Option<XlaRuntime>,
+}
+
+impl Platform {
+    /// Instantiate the design (validates it first).
+    pub fn new(design: DesignConfig) -> Self {
+        design.validate().expect("invalid design config");
+        let timing = TimingParams::for_bin(design.speed);
+        let channels = (0..design.channels)
+            .map(|_| ChannelState {
+                controller: MemController::new(design.controller, timing, design.geometry),
+                store: Some(DataStore::new()),
+                axi_now: 0,
+            })
+            .collect();
+        Self { design, channels, runtime: None }
+    }
+
+    /// Attach the AOT-compiled XLA runtime: payload generation and
+    /// verification then run through the PJRT executables instead of the
+    /// pure-Rust mirror.
+    pub fn with_runtime(mut self, runtime: XlaRuntime) -> Self {
+        self.runtime = Some(runtime);
+        self
+    }
+
+    /// Is an XLA runtime attached?
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// The design in force.
+    pub fn design(&self) -> &DesignConfig {
+        &self.design
+    }
+
+    /// Number of instantiated channels.
+    pub fn channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Inject a fault into channel `ch`'s memory (test/debug hook; proves
+    /// the integrity checker detects real corruption).
+    pub fn corrupt(&mut self, ch: usize, burst_addr: u64, word: usize, mask: u32) -> bool {
+        self.channels[ch]
+            .store
+            .as_mut()
+            .map(|s| s.corrupt_word(burst_addr, word, mask))
+            .unwrap_or(false)
+    }
+
+    /// Run one batch of `cfg` on channel `ch` and return its statistics.
+    pub fn run_batch(&mut self, ch: usize, cfg: &PatternConfig) -> Result<BatchStats> {
+        self.run_batch_with_plan(ch, cfg, None)
+    }
+
+    fn run_batch_with_plan(
+        &mut self,
+        ch: usize,
+        cfg: &PatternConfig,
+        plan: Option<Vec<crate::trafficgen::PlannedTxn>>,
+    ) -> Result<BatchStats> {
+        if ch >= self.channels.len() {
+            bail!("channel {ch} out of range (design has {})", self.channels.len());
+        }
+        cfg.validate()?;
+        let design = self.design.clone();
+        let mut tg = TrafficGen::with_frontend(
+            cfg.clone(),
+            design.axi_beat_bytes(),
+            design.geometry,
+            design.controller.outstanding_cap,
+            design.controller.addr_cmd_interval_axi,
+            design.controller.serial_frontend,
+        );
+        if let Some(plan) = plan {
+            tg = tg.with_plan(plan);
+        }
+        // Carry the channel's memory contents into the TG.
+        if cfg.verify {
+            tg.store = self.channels[ch].store.take().or_else(|| Some(DataStore::new()));
+            // Pre-generate write payloads through the XLA data path.
+            if self.runtime.is_some() {
+                let map = self.datagen_for_plan(&tg)?;
+                tg.payload_map = Some(map);
+            }
+        }
+
+        let state = &mut self.channels[ch];
+        let refresh_before = state.controller.stats().refresh_stall_cycles;
+        let dev_before = *state.controller.device().stats();
+        let start_axi = state.axi_now;
+        // Deadlock guard: generous upper bound on the batch runtime.
+        let limit = start_axi
+            + 2_000_000
+            + cfg.batch_len as u64 * (cfg.burst.len as u64 + 4) * 64;
+        let mut comps = Vec::with_capacity(16);
+        while !tg.is_done() {
+            if state.axi_now >= limit {
+                bail!(
+                    "batch deadlock: {}/{} txns after {} fabric cycles",
+                    tg.completed(),
+                    cfg.batch_len,
+                    state.axi_now - start_axi
+                );
+            }
+            let now = state.axi_now - start_axi; // TG counts batch-relative
+            comps.clear();
+            state.controller.pop_completions(state.axi_now * AXI_RATIO, &mut comps);
+            tg.on_completions(&comps, now);
+            tg.tick_axi(now, state.axi_now * AXI_RATIO, &mut state.controller);
+            let dram_base = state.axi_now * AXI_RATIO;
+            for s in 0..AXI_RATIO {
+                state.controller.tick(dram_base + s);
+            }
+            state.axi_now += 1;
+        }
+        let mut counters = std::mem::take(&mut tg.counters);
+        counters.refresh_stall_dram_cycles =
+            state.controller.stats().refresh_stall_cycles - refresh_before;
+        let energy = crate::ddr4::power::channel_energy(
+            &state.controller.device().stats().delta(&dev_before),
+            (state.axi_now - start_axi) * AXI_RATIO,
+            design.speed,
+            state.controller.device().timing(),
+            &crate::ddr4::power::IddSpec::micron_4gb_x16(),
+        );
+
+        // Verification: XLA path when attached, Rust mirror otherwise.
+        if cfg.verify {
+            counters.mismatches += self.verify_readback(&mut tg, cfg)?;
+            self.channels[ch].store = tg.store.take();
+        }
+        Ok(BatchStats { counters, speed: design.speed, energy })
+    }
+
+    /// Replay a memory-access trace on channel `ch` (one AXI transaction
+    /// per record; uniform burst length — see `trafficgen::trace`).
+    pub fn run_trace(
+        &mut self,
+        ch: usize,
+        records: &[crate::trafficgen::trace::TraceRecord],
+        verify: bool,
+    ) -> Result<BatchStats> {
+        let (plan, beats) = crate::trafficgen::trace::plan_from_trace(records)?;
+        let mut cfg = PatternConfig::seq_read_burst(beats, plan.len() as u32);
+        cfg.op = crate::config::OpMix::Mixed { read_pct: 50 }; // plan overrides
+        cfg.verify = verify;
+        self.run_batch_with_plan(ch, &cfg, Some(plan))
+    }
+
+    /// Run `cfg` on every channel (one thread per channel, mirroring the
+    /// physical parallelism) and return per-channel stats.
+    pub fn run_batch_all(&mut self, cfg: &PatternConfig) -> Result<Vec<BatchStats>> {
+        cfg.validate()?;
+        // Channels are architecturally independent; run them one at a
+        // time when a runtime is attached (the PJRT client is shared),
+        // in parallel threads otherwise.
+        if self.runtime.is_some() || self.channels.len() == 1 {
+            return (0..self.channels.len()).map(|ch| self.run_batch(ch, cfg)).collect();
+        }
+        let design = self.design.clone();
+        let states: Vec<&mut ChannelState> = self.channels.iter_mut().collect();
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for state in states {
+                let cfg = cfg.clone();
+                let design = design.clone();
+                joins.push(scope.spawn(move || run_batch_on_state(&design, state, &cfg)));
+            }
+            joins
+                .into_iter()
+                .map(|j| j.join().expect("channel thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })
+    }
+
+    /// Aggregate per-channel stats: bytes sum, cycles max — the paper's
+    /// "dual- and triple-channel setups deliver twice and three times the
+    /// throughput" composition.
+    pub fn aggregate(stats: &[BatchStats]) -> BatchStats {
+        assert!(!stats.is_empty());
+        let mut counters = BatchCounters::default();
+        let mut energy = crate::ddr4::power::EnergyBreakdown::default();
+        for s in stats {
+            counters.merge(&s.counters);
+            energy.activate_nj += s.energy.activate_nj;
+            energy.read_nj += s.energy.read_nj;
+            energy.write_nj += s.energy.write_nj;
+            energy.refresh_nj += s.energy.refresh_nj;
+            energy.background_nj += s.energy.background_nj;
+        }
+        BatchStats { counters, speed: stats[0].speed, energy }
+    }
+
+    /// Pre-generate payload words for every write burst in the TG's plan
+    /// via the XLA datagen executable.
+    fn datagen_for_plan(
+        &self,
+        tg: &TrafficGen,
+    ) -> Result<HashMap<u64, [u32; payload::WORDS_PER_BURST]>> {
+        let rt = self.runtime.as_ref().expect("runtime required");
+        let cfg = tg.config();
+        let beat_bytes = self.design.axi_beat_bytes();
+        let burst_bytes = self.design.geometry.burst_bytes() as u64;
+        let pattern_seed = match cfg.data {
+            crate::config::DataPattern::Prbs { seed } => seed,
+            // Non-PRBS patterns don't use the kernel.
+            _ => return Ok(HashMap::new()),
+        };
+        let mask = !(burst_bytes - 1);
+        let mut addrs: Vec<u64> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for t in tg.plan().iter().filter(|t| t.is_write) {
+            let txn = crate::axi::AxiTxn {
+                id: 0,
+                is_write: true,
+                addr: t.addr,
+                burst: cfg.burst,
+                beat_bytes,
+            };
+            for i in 0..cfg.burst.len {
+                let a = txn.beat_addr(i) & mask;
+                if seen.insert(a) {
+                    addrs.push(a);
+                }
+            }
+        }
+        if addrs.is_empty() {
+            return Ok(HashMap::new());
+        }
+        let seeds: Vec<u32> =
+            addrs.iter().map(|&a| payload::burst_seed(a, pattern_seed)).collect();
+        let words = rt.datagen(&seeds)?;
+        let mut map = HashMap::with_capacity(addrs.len());
+        for (i, &a) in addrs.iter().enumerate() {
+            let mut w = [0u32; payload::WORDS_PER_BURST];
+            w.copy_from_slice(&words[i * 16..(i + 1) * 16]);
+            map.insert(a, w);
+        }
+        Ok(map)
+    }
+
+    /// Verify collected read-back samples (XLA verify executable when
+    /// attached, Rust mirror otherwise). Returns the mismatch count.
+    fn verify_readback(&self, tg: &mut TrafficGen, cfg: &PatternConfig) -> Result<u64> {
+        let pattern_seed = match cfg.data {
+            crate::config::DataPattern::Prbs { seed } => seed,
+            _ => {
+                return Ok(tg.verify_readback_rust());
+            }
+        };
+        // Only bursts that were actually written are checkable.
+        let store = tg.store.as_ref().expect("verify requires a store");
+        let samples: Vec<_> =
+            tg.readback.iter().filter(|(a, _)| store.is_written(*a)).collect();
+        if samples.is_empty() {
+            return Ok(0);
+        }
+        match &self.runtime {
+            Some(rt) => {
+                let seeds: Vec<u32> =
+                    samples.iter().map(|(a, _)| payload::burst_seed(*a, pattern_seed)).collect();
+                let mut data = Vec::with_capacity(samples.len() * 16);
+                for (_, words) in &samples {
+                    data.extend_from_slice(words);
+                }
+                rt.verify(&seeds, &data)
+            }
+            None => Ok({
+                let m = tg.verify_readback_rust();
+                m
+            }),
+        }
+    }
+}
+
+/// Free-function batch runner over a borrowed channel state (thread body
+/// of [`Platform::run_batch_all`]; Rust-mirror data path only).
+fn run_batch_on_state(
+    design: &DesignConfig,
+    state: &mut ChannelState,
+    cfg: &PatternConfig,
+) -> Result<BatchStats> {
+    let mut tg = TrafficGen::with_frontend(
+        cfg.clone(),
+        design.axi_beat_bytes(),
+        design.geometry,
+        design.controller.outstanding_cap,
+        design.controller.addr_cmd_interval_axi,
+        design.controller.serial_frontend,
+    );
+    if cfg.verify {
+        tg.store = state.store.take().or_else(|| Some(DataStore::new()));
+    }
+    let refresh_before = state.controller.stats().refresh_stall_cycles;
+    let dev_before = *state.controller.device().stats();
+    let start_axi = state.axi_now;
+    let limit =
+        start_axi + 2_000_000 + cfg.batch_len as u64 * (cfg.burst.len as u64 + 4) * 64;
+    let mut comps = Vec::with_capacity(16);
+    while !tg.is_done() {
+        if state.axi_now >= limit {
+            bail!("batch deadlock on threaded channel");
+        }
+        let now = state.axi_now - start_axi;
+        comps.clear();
+        state.controller.pop_completions(state.axi_now * AXI_RATIO, &mut comps);
+        tg.on_completions(&comps, now);
+        tg.tick_axi(now, state.axi_now * AXI_RATIO, &mut state.controller);
+        let dram_base = state.axi_now * AXI_RATIO;
+        for s in 0..AXI_RATIO {
+            state.controller.tick(dram_base + s);
+        }
+        state.axi_now += 1;
+    }
+    let mut counters = std::mem::take(&mut tg.counters);
+    counters.refresh_stall_dram_cycles =
+        state.controller.stats().refresh_stall_cycles - refresh_before;
+    let energy = crate::ddr4::power::channel_energy(
+        &state.controller.device().stats().delta(&dev_before),
+        (state.axi_now - start_axi) * AXI_RATIO,
+        design.speed,
+        state.controller.device().timing(),
+        &crate::ddr4::power::IddSpec::micron_4gb_x16(),
+    );
+    if cfg.verify {
+        counters.mismatches += tg.verify_readback_rust();
+        state.store = tg.store.take();
+    }
+    Ok(BatchStats { counters, speed: design.speed, energy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AddrMode, SpeedBin};
+
+    #[test]
+    fn single_channel_seq_read_throughput_sane() {
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let stats = p.run_batch(0, &PatternConfig::seq_read_burst(32, 2000)).unwrap();
+        let gbs = stats.read_throughput_gbs();
+        // Bus ceiling is 6.4 GB/s; paper measures 6.27 for MB reads.
+        assert!(gbs > 5.0 && gbs <= 6.4, "seq MB read = {gbs:.2} GB/s");
+    }
+
+    #[test]
+    fn random_single_much_slower_than_seq() {
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let seq = p.run_batch(0, &PatternConfig::seq_read_burst(1, 2000)).unwrap();
+        let rnd = p.run_batch(0, &PatternConfig::rnd_read_burst(1, 2000, 3)).unwrap();
+        let ratio = seq.read_throughput_gbs() / rnd.read_throughput_gbs();
+        assert!(ratio > 3.0, "seq/rnd singles ratio = {ratio:.2} (paper: 5.5x)");
+    }
+
+    #[test]
+    fn channel_out_of_range_rejected() {
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        assert!(p.run_batch(1, &PatternConfig::default()).is_err());
+    }
+
+    #[test]
+    fn multi_channel_scales_throughput() {
+        let mut p = Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_1600));
+        let per = p.run_batch_all(&PatternConfig::seq_read_burst(32, 1000)).unwrap();
+        assert_eq!(per.len(), 3);
+        let agg = Platform::aggregate(&per);
+        let single = per[0].read_throughput_gbs();
+        let total = agg.read_throughput_gbs();
+        assert!(
+            (total / single - 3.0).abs() < 0.2,
+            "triple-channel scaling: {total:.2} vs 3x{single:.2}"
+        );
+    }
+
+    #[test]
+    fn write_then_read_verify_clean_and_fault_detected() {
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let region = 64 * 4 * 32; // small region fully covered
+        let mut w = PatternConfig::seq_write_burst(4, 64);
+        w.verify = true;
+        w.region_bytes = region;
+        let ws = p.run_batch(0, &w).unwrap();
+        assert_eq!(ws.counters.mismatches, 0);
+        let mut r = PatternConfig::seq_read_burst(4, 64);
+        r.verify = true;
+        r.region_bytes = region;
+        let rs = p.run_batch(0, &r).unwrap();
+        assert_eq!(rs.counters.mismatches, 0, "clean read-back");
+        // corrupt one word and read again
+        assert!(p.corrupt(0, 0, 3, 0xFFFF_0000));
+        let rs2 = p.run_batch(0, &r).unwrap();
+        assert_eq!(rs2.counters.mismatches, 1, "fault detected");
+    }
+
+    #[test]
+    fn mixed_beats_pure_read_throughput() {
+        // Mixed R+W uses both data channels: combined > read-only max.
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let read = p.run_batch(0, &PatternConfig::seq_read_burst(32, 2000)).unwrap();
+        let mixed =
+            p.run_batch(0, &PatternConfig::mixed(AddrMode::Sequential, 32, 2000)).unwrap();
+        assert!(
+            mixed.total_throughput_gbs() > read.read_throughput_gbs(),
+            "mixed {:.2} vs read {:.2}",
+            mixed.total_throughput_gbs(),
+            read.read_throughput_gbs()
+        );
+    }
+
+    #[test]
+    fn refresh_degradation_observable() {
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        // long enough batch to span several tREFI (6240 DRAM cycles each)
+        let stats = p.run_batch(0, &PatternConfig::seq_read_burst(32, 20_000)).unwrap();
+        assert!(stats.counters.refresh_stall_dram_cycles > 0);
+        let deg = stats.refresh_degradation();
+        assert!(deg > 0.0 && deg < 0.2, "refresh degradation {deg:.4}");
+    }
+}

@@ -1,0 +1,301 @@
+//! Drivers that regenerate every table and figure of the paper's
+//! evaluation section (the experiment index of DESIGN.md §4).
+//!
+//! All drivers run the same [`Platform`] executive the host controller
+//! uses, so `examples/paper_campaign.rs`, the bench targets, and the
+//! integration tests all report the same numbers.
+
+use crate::analytic;
+use crate::config::{AddrMode, DesignConfig, OpMix, PatternConfig, SpeedBin};
+use crate::platform::Platform;
+use crate::report::{Figure, Table};
+use crate::stats::BatchStats;
+
+/// Burst lengths used by the figures (x axis of Fig. 2).
+pub const FIG2_LENGTHS: [u32; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// Campaign sizing: how many transactions to run per configuration point.
+/// Scaled so every point moves roughly the same number of bytes; `scale`
+/// shrinks everything for quick runs (benches use 0.25, tests 0.1).
+pub fn batch_for(burst_len: u32, scale: f64) -> u32 {
+    let target_bytes = (8.0 * (1 << 20) as f64 * scale).max(64.0 * 1024.0);
+    let txn_bytes = (burst_len * 32) as f64;
+    ((target_bytes / txn_bytes) as u32).clamp(256, 16384)
+}
+
+/// Run one configuration point and return its stats.
+pub fn run_point(
+    platform: &mut Platform,
+    op: OpMix,
+    addr: AddrMode,
+    burst_len: u32,
+    scale: f64,
+) -> BatchStats {
+    let mut cfg = PatternConfig::seq_read_burst(burst_len, batch_for(burst_len, scale));
+    cfg.op = op;
+    cfg.addr = addr;
+    platform.run_batch(0, &cfg).expect("campaign batch failed")
+}
+
+/// Throughput of a point using the paper's reporting convention: R = read
+/// counter, W = write counter, M = combined.
+pub fn gbs_of(op: OpMix, s: &BatchStats) -> f64 {
+    match op {
+        OpMix::ReadOnly => s.read_throughput_gbs(),
+        OpMix::WriteOnly => s.write_throughput_gbs(),
+        OpMix::Mixed { .. } => s.total_throughput_gbs(),
+    }
+}
+
+/// Measured data behind Table IV: throughput (GB/s) of single-channel
+/// DDR4-1600 for R/W × Seq/Rnd × {1, 4, 32, 128}.
+#[derive(Debug, Clone)]
+pub struct Table4Data {
+    /// `[read=0|write=1][seq=0|rnd=1][len index over {1,4,32,128}]`
+    pub gbs: [[[f64; 4]; 2]; 2],
+}
+
+/// Table IV burst lengths with the paper's labels.
+pub const TABLE4_LENGTHS: [(u32, &str); 4] =
+    [(1, "Single"), (4, "Short (4)"), (32, "Medium (32)"), (128, "Long (128)")];
+
+/// Run the Table IV campaign (single-channel DDR4-1600).
+pub fn table4_data(scale: f64) -> Table4Data {
+    let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    let mut gbs = [[[0.0; 4]; 2]; 2];
+    for (oi, op) in [OpMix::ReadOnly, OpMix::WriteOnly].iter().enumerate() {
+        for (ai, addr) in
+            [AddrMode::Sequential, AddrMode::Random { seed: 0xBEEF }].iter().enumerate()
+        {
+            for (li, (len, _)) in TABLE4_LENGTHS.iter().enumerate() {
+                let s = run_point(&mut platform, *op, *addr, *len, scale);
+                gbs[oi][ai][li] = gbs_of(*op, &s);
+            }
+        }
+    }
+    Table4Data { gbs }
+}
+
+/// Render Table IV in the paper's layout.
+pub fn table4(scale: f64) -> (Table, Table4Data) {
+    let d = table4_data(scale);
+    let mut t = Table::new(
+        "Table IV: Throughput (GB/s), single-channel DDR4-1600",
+        &["Operation", "Mode", "Length (#)", "Sequential", "Random"],
+    );
+    for (oi, op) in ["Read", "Write"].iter().enumerate() {
+        for (li, (_, label)) in TABLE4_LENGTHS.iter().enumerate() {
+            let mode = if li == 0 { "Single" } else { "Burst" };
+            t.row(vec![
+                if li == 0 { op.to_string() } else { String::new() },
+                mode.into(),
+                if li == 0 { String::new() } else { label.to_string() },
+                format!("{:.2}", d.gbs[oi][0][li]),
+                format!("{:.2}", d.gbs[oi][1][li]),
+            ]);
+        }
+    }
+    (t, d)
+}
+
+/// Fig. 2: throughput vs burst length for DDR4-1600 and DDR4-2400,
+/// Seq/Rnd × R/W/M. Returns one figure per data rate plus the raw points.
+pub fn fig2(scale: f64) -> Vec<Figure> {
+    let mut figs = Vec::new();
+    for speed in [SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400] {
+        let mut platform = Platform::new(DesignConfig::single_channel(speed));
+        let mut fig = Figure::new(
+            format!("Fig. 2: throughput, single-channel {speed}"),
+            "burst length",
+            "GB/s",
+        );
+        for (addr, alabel) in
+            [(AddrMode::Sequential, "Seq"), (AddrMode::Random { seed: 0xF00D }, "Rnd")]
+        {
+            for (op, olabel) in [
+                (OpMix::ReadOnly, "R"),
+                (OpMix::WriteOnly, "W"),
+                (OpMix::Mixed { read_pct: 50 }, "M"),
+            ] {
+                let pts = FIG2_LENGTHS
+                    .iter()
+                    .map(|&len| {
+                        let s = run_point(&mut platform, op, addr, len, scale);
+                        (len as f64, gbs_of(op, &s))
+                    })
+                    .collect();
+                fig.push(format!("{alabel}-{olabel}"), pts);
+            }
+        }
+        figs.push(fig);
+    }
+    figs
+}
+
+/// Fig. 3: read/write throughput breakdown of mixed workloads,
+/// single-channel DDR4-1600, S/SB/MB/LB × Seq/Rnd.
+pub fn fig3(scale: f64) -> Table {
+    let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    let mut t = Table::new(
+        "Fig. 3: mixed R/W throughput breakdown (GB/s), single-channel DDR4-1600",
+        &["Addressing", "Transactions", "Read", "Write", "Combined"],
+    );
+    for (addr, alabel) in
+        [(AddrMode::Sequential, "Sequential"), (AddrMode::Random { seed: 0xCAFE }, "Random")]
+    {
+        for (len, label) in [(1, "S"), (4, "SB"), (32, "MB"), (128, "LB")] {
+            let s = run_point(&mut platform, OpMix::Mixed { read_pct: 50 }, addr, len, scale);
+            t.row(vec![
+                alabel.into(),
+                label.into(),
+                format!("{:.2}", s.read_throughput_gbs()),
+                format!("{:.2}", s.write_throughput_gbs()),
+                format!("{:.2}", s.total_throughput_gbs()),
+            ]);
+        }
+    }
+    t
+}
+
+/// §III-A channel-scaling claim: dual/triple channels deliver 2x/3x.
+pub fn scaling(scale: f64) -> Table {
+    let mut t = Table::new(
+        "Channel scaling (seq read, burst 32, DDR4-1600)",
+        &["Channels", "Aggregate GB/s", "Per-channel GB/s", "Scaling"],
+    );
+    let mut base = 0.0;
+    for n in 1..=3usize {
+        let mut p = Platform::new(DesignConfig::with_channels(n, SpeedBin::Ddr4_1600));
+        let cfg = PatternConfig::seq_read_burst(32, batch_for(32, scale));
+        let per = p.run_batch_all(&cfg).expect("scaling batch");
+        let agg = Platform::aggregate(&per);
+        let total = agg.read_throughput_gbs();
+        if n == 1 {
+            base = total;
+        }
+        t.row(vec![
+            n.to_string(),
+            format!("{total:.2}"),
+            format!("{:.2}", total / n as f64),
+            format!("{:.2}x", total / base),
+        ]);
+    }
+    t
+}
+
+/// §III-C analysis: the paper's headline ratios, paper value vs measured.
+pub fn analysis(scale: f64) -> Table {
+    let d1600 = table4_data(scale);
+    // DDR4-2400 equivalents for the uplift rows.
+    let mut p2400 = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_2400));
+    let mut p1600 = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    let seq_r = |p: &mut Platform, len| {
+        gbs_of(OpMix::ReadOnly, &run_point(p, OpMix::ReadOnly, AddrMode::Sequential, len, scale))
+    };
+    let rnd_r = |p: &mut Platform, len| {
+        gbs_of(
+            OpMix::ReadOnly,
+            &run_point(p, OpMix::ReadOnly, AddrMode::Random { seed: 0xF00D }, len, scale),
+        )
+    };
+    let mix_seq = |p: &mut Platform, len| {
+        gbs_of(
+            OpMix::Mixed { read_pct: 50 },
+            &run_point(p, OpMix::Mixed { read_pct: 50 }, AddrMode::Sequential, len, scale),
+        )
+    };
+
+    let mut t = Table::new(
+        "§III analysis: paper claim vs measured",
+        &["Claim", "Paper", "Measured"],
+    );
+    let rd_drop = d1600.gbs[0][0][0] / d1600.gbs[0][1][0];
+    let wr_drop = d1600.gbs[1][0][0] / d1600.gbs[1][1][0];
+    t.row(vec![
+        "Seq→Rnd read drop (singles)".into(),
+        "5.5x".into(),
+        format!("{rd_drop:.1}x"),
+    ]);
+    t.row(vec![
+        "Seq→Rnd write drop (singles)".into(),
+        "7.2x".into(),
+        format!("{wr_drop:.1}x"),
+    ]);
+    t.row(vec![
+        "Short-burst speedup vs single (seq read)".into(),
+        "~2x".into(),
+        format!("{:.1}x", d1600.gbs[0][0][1] / d1600.gbs[0][0][0]),
+    ]);
+    t.row(vec![
+        "Short-burst speedup vs single (rnd read)".into(),
+        "~4x".into(),
+        format!("{:.1}x", d1600.gbs[0][1][1] / d1600.gbs[0][1][0]),
+    ]);
+    let seq_uplift = seq_r(&mut p2400, 128) / seq_r(&mut p1600, 128);
+    t.row(vec![
+        "2400/1600 uplift, seq read (long burst)".into(),
+        "up to 1.50x".into(),
+        format!("{seq_uplift:.2}x"),
+    ]);
+    let rnd_uplift_16 = rnd_r(&mut p2400, 16) / rnd_r(&mut p1600, 16);
+    let rnd_uplift_128 = rnd_r(&mut p2400, 128) / rnd_r(&mut p1600, 128);
+    t.row(vec![
+        "2400/1600 uplift, rnd read burst 16".into(),
+        "1.07x".into(),
+        format!("{rnd_uplift_16:.2}x"),
+    ]);
+    t.row(vec![
+        "2400/1600 uplift, rnd read burst 128".into(),
+        "1.32x".into(),
+        format!("{rnd_uplift_128:.2}x"),
+    ]);
+    let mix_1600 = mix_seq(&mut p1600, 128);
+    let mix_2400 = mix_seq(&mut p2400, 128);
+    t.row(vec![
+        "Mixed seq max, DDR4-1600".into(),
+        "7.99 GB/s".into(),
+        format!("{mix_1600:.2} GB/s"),
+    ]);
+    t.row(vec![
+        "Mixed seq max, DDR4-2400".into(),
+        "12.02 GB/s".into(),
+        format!("{mix_2400:.2} GB/s"),
+    ]);
+    t
+}
+
+/// Simulator-vs-analytic-model cross-check over the Table IV grid; returns
+/// (table, mean absolute relative error).
+pub fn model_check(scale: f64) -> (Table, f64) {
+    let d = table4_data(scale);
+    let mut t = Table::new(
+        "Analytic model vs simulator (Table IV grid, DDR4-1600)",
+        &["Op", "Addr", "Len", "Simulated", "Model", "Rel err"],
+    );
+    let mut errs = Vec::new();
+    for (oi, op) in [OpMix::ReadOnly, OpMix::WriteOnly].iter().enumerate() {
+        for (ai, addr) in
+            [AddrMode::Sequential, AddrMode::Random { seed: 0 }].iter().enumerate()
+        {
+            for (li, (len, _)) in TABLE4_LENGTHS.iter().enumerate() {
+                let sim = d.gbs[oi][ai][li];
+                let mut cfg = PatternConfig::seq_read_burst(*len, 1);
+                cfg.op = *op;
+                cfg.addr = *addr;
+                let model = analytic::predict_pattern(SpeedBin::Ddr4_1600, &cfg, 32) as f64;
+                let err = (model - sim).abs() / sim.max(1e-9);
+                errs.push(err);
+                t.row(vec![
+                    op.label().into(),
+                    addr.label().into(),
+                    len.to_string(),
+                    format!("{sim:.2}"),
+                    format!("{model:.2}"),
+                    format!("{:.0}%", err * 100.0),
+                ]);
+            }
+        }
+    }
+    let mae = errs.iter().sum::<f64>() / errs.len() as f64;
+    (t, mae)
+}

@@ -1,0 +1,221 @@
+//! Table / figure-series rendering and the paper-campaign drivers.
+//!
+//! [`Table`] renders ASCII and CSV; [`campaign`] holds the drivers that
+//! regenerate every table and figure of the paper's evaluation (shared by
+//! `examples/paper_campaign.rs` and the `cargo bench` targets so the
+//! numbers always come from one code path).
+
+pub mod campaign;
+
+/// A rendered results table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Caption (printed above the table).
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Data rows.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("| {:<w$} ", c, w = widths[i]))
+                .collect::<String>()
+                + "|"
+        };
+        let mut out = format!("{}\n{sep}\n{}\n{sep}\n", self.title, fmt_row(&self.headers));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as CSV (headers first).
+    pub fn csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV beside other campaign outputs.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.csv())
+    }
+}
+
+/// A figure data series: (x, y) points with a label — the reproduction of
+/// a paper plot line. Rendered as CSV columns plus a coarse ASCII chart.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label (e.g. "Seq-R 1600").
+    pub label: String,
+    /// (x, y) points.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A figure = several series over a shared x axis.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    /// Caption.
+    pub title: String,
+    /// X-axis label.
+    pub x_label: String,
+    /// Y-axis label.
+    pub y_label: String,
+    /// The series.
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    /// New empty figure.
+    pub fn new(title: impl Into<String>, x_label: &str, y_label: &str) -> Self {
+        Self {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    /// Add a series.
+    pub fn push(&mut self, label: impl Into<String>, points: Vec<(f64, f64)>) {
+        self.series.push(Series { label: label.into(), points });
+    }
+
+    /// CSV: x column then one column per series.
+    pub fn csv(&self) -> String {
+        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        xs.sort_by(f64::total_cmp);
+        xs.dedup();
+        let mut out = format!(
+            "{},{}\n",
+            self.x_label,
+            self.series.iter().map(|s| s.label.clone()).collect::<Vec<_>>().join(",")
+        );
+        for x in xs {
+            out.push_str(&format!("{x}"));
+            for s in &self.series {
+                match s.points.iter().find(|p| p.0 == x) {
+                    Some((_, y)) => out.push_str(&format!(",{y:.4}")),
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Coarse ASCII bar chart per series (terminal-friendly).
+    pub fn ascii(&self) -> String {
+        let ymax = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.1))
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        let mut out = format!("{}  [{} vs {}]\n", self.title, self.y_label, self.x_label);
+        for s in &self.series {
+            out.push_str(&format!("  {}\n", s.label));
+            for (x, y) in &s.points {
+                let bar = "#".repeat(((y / ymax) * 50.0).round() as usize);
+                out.push_str(&format!("    {x:>8} | {bar} {y:.2}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ascii_alignment() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["xxxx".into(), "1".into()]);
+        let s = t.ascii();
+        assert!(s.contains("| a    | bbbb |"));
+        assert!(s.contains("| xxxx | 1    |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn table_csv_escaping() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn figure_csv_merges_x() {
+        let mut f = Figure::new("F", "x", "gbs");
+        f.push("s1", vec![(1.0, 2.0), (2.0, 3.0)]);
+        f.push("s2", vec![(2.0, 5.0)]);
+        let csv = f.csv();
+        assert!(csv.starts_with("x,s1,s2\n"));
+        assert!(csv.contains("1,2.0000,\n"));
+        assert!(csv.contains("2,3.0000,5.0000\n"));
+    }
+
+    #[test]
+    fn figure_ascii_renders_bars() {
+        let mut f = Figure::new("F", "len", "GB/s");
+        f.push("a", vec![(1.0, 1.0), (2.0, 2.0)]);
+        let a = f.ascii();
+        assert!(a.contains("##"));
+    }
+}

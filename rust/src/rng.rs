@@ -1,0 +1,180 @@
+//! Deterministic PRNGs shared across the platform.
+//!
+//! Two generators live here:
+//!
+//! - [`Xorshift32`] — the *data-path* PRBS generator. This is the exact
+//!   sequence the Pallas kernel (`python/compile/kernels/prbs.py`)
+//!   implements on the XLA side; the integration test
+//!   `rust/tests/runtime_artifacts.rs` asserts bit-for-bit equality between
+//!   this Rust mirror and the AOT-compiled kernel. The RTL analogue is the
+//!   traffic generator's per-lane LFSR that produces non-zero write data
+//!   (the paper's §II-B differentiator vs. Shuhai).
+//! - [`SplitMix64`] — the *control-path* generator used for random
+//!   addressing, operation mixing, and the property-test kit. It is never
+//!   compared against the kernels, so it can be a different (faster,
+//!   better-distributed) algorithm.
+
+/// xorshift32 PRBS generator (Marsaglia). Period 2^32 - 1; never yields 0,
+/// which conveniently satisfies the paper's "non-zero data" requirement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Xorshift32 {
+    state: u32,
+}
+
+impl Xorshift32 {
+    /// Create a generator from a seed. A zero seed would lock the sequence
+    /// at zero, so it is mapped to a fixed non-zero constant — the same
+    /// remapping the Pallas kernel applies.
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 0x9E37_79B9 } else { seed } }
+    }
+
+    /// Advance one step and return the new state (a non-zero 32-bit word).
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.state = x;
+        x
+    }
+
+    /// Current internal state without advancing.
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+
+    /// Fill a slice with successive outputs.
+    pub fn fill(&mut self, out: &mut [u32]) {
+        for w in out {
+            *w = self.next_u32();
+        }
+    }
+}
+
+/// SplitMix64: fast 64-bit generator with excellent avalanche behaviour.
+/// Used for address randomization and test-case generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from any 64-bit seed (zero is fine).
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next 32-bit output (upper half of the 64-bit output).
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform value in `[0, bound)` via Lemire's multiply-shift reduction.
+    /// `bound` must be non-zero.
+    #[inline(always)]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform value in the inclusive range `[lo, hi]`.
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli draw: true with probability `pct / 100`.
+    pub fn percent(&mut self, pct: u32) -> bool {
+        debug_assert!(pct <= 100);
+        self.below(100) < pct as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift32_known_sequence() {
+        // First outputs from seed 1 — the canonical xorshift32 sequence.
+        // These constants are also asserted by python/tests/test_kernels.py
+        // against the Pallas kernel, pinning both sides to the same PRBS.
+        let mut g = Xorshift32::new(1);
+        assert_eq!(g.next_u32(), 270369);
+        assert_eq!(g.next_u32(), 67634689);
+        assert_eq!(g.next_u32(), 2647435461);
+        assert_eq!(g.next_u32(), 307599695);
+    }
+
+    #[test]
+    fn xorshift32_zero_seed_remapped() {
+        let mut g = Xorshift32::new(0);
+        assert_ne!(g.state(), 0);
+        // and it still produces non-zero outputs
+        for _ in 0..1000 {
+            assert_ne!(g.next_u32(), 0);
+        }
+    }
+
+    #[test]
+    fn xorshift32_never_zero() {
+        let mut g = Xorshift32::new(0xDEAD_BEEF);
+        for _ in 0..100_000 {
+            assert_ne!(g.next_u32(), 0, "xorshift32 must never emit zero");
+        }
+    }
+
+    #[test]
+    fn splitmix_below_in_bounds() {
+        let mut g = SplitMix64::new(42);
+        for bound in [1u64, 2, 3, 7, 100, 1 << 33] {
+            for _ in 0..200 {
+                assert!(g.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn splitmix_range_inclusive_hits_endpoints() {
+        let mut g = SplitMix64::new(7);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..10_000 {
+            let v = g.range_inclusive(3, 6);
+            assert!((3..=6).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 6;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(123);
+        let mut b = SplitMix64::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn percent_extremes() {
+        let mut g = SplitMix64::new(5);
+        for _ in 0..100 {
+            assert!(!g.percent(0));
+            assert!(g.percent(100));
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas artifacts and
+//! executes them from the Rust hot path. Python never runs at benchmark
+//! time — `make artifacts` lowers the kernels once to HLO *text* (see
+//! `python/compile/aot.py`; text rather than serialized protos because
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects), and this module compiles and caches the executables on the
+//! PJRT CPU client at startup.
+//!
+//! Three artifacts exist (fixed-shape, chunked by the wrappers here):
+//!
+//! | artifact          | signature                              | role |
+//! |-------------------|----------------------------------------|------|
+//! | `datagen.hlo.txt` | `u32[4096] seeds → u32[4096,16]`       | PRBS payload expansion (Pallas kernel) |
+//! | `verify.hlo.txt`  | `u32[4096], u32[4096,16] → u32[1]`     | read-back mismatch count (Pallas kernel) |
+//! | `bwmodel.hlo.txt` | `f32[64,8] features → f32[64]`         | analytic DDR4 bandwidth model (jnp) |
+//!
+//! Chunk padding: `datagen` pads with zero seeds and drops the padded
+//! rows; `verify` pads with zero seeds *and zero data* — the kernel's
+//! expansion of any seed is never zero (xorshift32), so each padded row
+//! contributes exactly [`WORDS_PER_BURST`] mismatches, which the wrapper
+//! subtracts deterministically.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::trafficgen::payload::WORDS_PER_BURST;
+
+/// Seeds per datagen/verify executable invocation (fixed at AOT time).
+pub const DATAGEN_BLOCK: usize = 4096;
+/// Rows per bandwidth-model invocation (fixed at AOT time).
+pub const BWMODEL_BLOCK: usize = 64;
+/// Feature columns of the bandwidth model (see `python/compile/model.py`).
+pub const BWMODEL_FEATURES: usize = 8;
+
+/// Handle to the compiled AOT executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    datagen: xla::PjRtLoadedExecutable,
+    verify: xla::PjRtLoadedExecutable,
+    bwmodel: Option<xla::PjRtLoadedExecutable>,
+    /// Executions performed (telemetry for the perf pass).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(name);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("{e:?}"))
+    .with_context(|| format!("loading HLO text {path:?} (run `make artifacts`?)"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("{e:?}")).with_context(|| format!("compiling {name}"))
+}
+
+impl XlaRuntime {
+    /// Load and compile all artifacts from `dir`. The bandwidth model is
+    /// optional (older artifact sets); datagen/verify are required.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}")).context("PJRT CPU client")?;
+        let datagen = load_exe(&client, dir, "datagen.hlo.txt")?;
+        let verify = load_exe(&client, dir, "verify.hlo.txt")?;
+        let bwmodel = load_exe(&client, dir, "bwmodel.hlo.txt").ok();
+        Ok(Self { client, datagen, verify, bwmodel, exec_count: std::cell::Cell::new(0) })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_dir())
+    }
+
+    /// Do the required artifacts exist in `dir`?
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("datagen.hlo.txt").exists() && dir.join("verify.hlo.txt").exists()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Is the analytic bandwidth-model artifact loaded?
+    pub fn has_bwmodel(&self) -> bool {
+        self.bwmodel.is_some()
+    }
+
+    fn bump(&self) {
+        self.exec_count.set(self.exec_count.get() + 1);
+    }
+
+    /// Expand `seeds` into payload words (`seeds.len() * 16` u32s) via the
+    /// AOT-compiled Pallas PRBS kernel. Arbitrary lengths are processed in
+    /// [`DATAGEN_BLOCK`]-sized chunks.
+    pub fn datagen(&self, seeds: &[u32]) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(seeds.len() * WORDS_PER_BURST);
+        for chunk in seeds.chunks(DATAGEN_BLOCK) {
+            let mut padded = [0u32; DATAGEN_BLOCK];
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let lit = xla::Literal::vec1(&padded[..]);
+            let res = self.datagen.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow!("{e:?}"))?
+                [0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            self.bump();
+            let words: Vec<u32> = res.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            if words.len() != DATAGEN_BLOCK * WORDS_PER_BURST {
+                bail!("datagen artifact returned {} words", words.len());
+            }
+            out.extend_from_slice(&words[..chunk.len() * WORDS_PER_BURST]);
+        }
+        Ok(out)
+    }
+
+    /// Count mismatches between the expansion of `seeds` and `data`
+    /// (`data.len() == seeds.len() * 16`) via the AOT verify kernel.
+    pub fn verify(&self, seeds: &[u32], data: &[u32]) -> Result<u64> {
+        if data.len() != seeds.len() * WORDS_PER_BURST {
+            bail!("verify: data length {} != seeds {} * 16", data.len(), seeds.len());
+        }
+        let mut total = 0u64;
+        for (s_chunk, d_chunk) in
+            seeds.chunks(DATAGEN_BLOCK).zip(data.chunks(DATAGEN_BLOCK * WORDS_PER_BURST))
+        {
+            let pad = DATAGEN_BLOCK - s_chunk.len();
+            let mut s = [0u32; DATAGEN_BLOCK];
+            s[..s_chunk.len()].copy_from_slice(s_chunk);
+            let mut d = vec![0u32; DATAGEN_BLOCK * WORDS_PER_BURST];
+            d[..d_chunk.len()].copy_from_slice(d_chunk);
+            let s_lit = xla::Literal::vec1(&s[..]);
+            let d_lit = xla::Literal::vec1(&d)
+                .reshape(&[DATAGEN_BLOCK as i64, WORDS_PER_BURST as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = self
+                .verify
+                .execute::<xla::Literal>(&[s_lit, d_lit])
+                .map_err(|e| anyhow!("{e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            self.bump();
+            let count: Vec<u32> = res.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let raw = count.first().copied().unwrap_or(0) as u64;
+            // padded rows: zero data vs never-zero expansion = 16 each
+            total += raw - (pad as u64 * WORDS_PER_BURST as u64);
+        }
+        Ok(total)
+    }
+
+    /// Evaluate the analytic bandwidth model on feature rows
+    /// (`feats.len()` divisible by [`BWMODEL_FEATURES`]); returns one
+    /// predicted GB/s per row. Errors if the artifact set lacks the model.
+    pub fn bwmodel(&self, feats: &[f32]) -> Result<Vec<f32>> {
+        let exe =
+            self.bwmodel.as_ref().ok_or_else(|| anyhow!("bwmodel.hlo.txt not in artifact set"))?;
+        if feats.len() % BWMODEL_FEATURES != 0 {
+            bail!("feature vector length {} not a multiple of {}", feats.len(), BWMODEL_FEATURES);
+        }
+        let rows = feats.len() / BWMODEL_FEATURES;
+        let mut out = Vec::with_capacity(rows);
+        for chunk in feats.chunks(BWMODEL_BLOCK * BWMODEL_FEATURES) {
+            let n = chunk.len() / BWMODEL_FEATURES;
+            let mut padded = vec![0f32; BWMODEL_BLOCK * BWMODEL_FEATURES];
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&[BWMODEL_BLOCK as i64, BWMODEL_FEATURES as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow!("{e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            self.bump();
+            let preds: Vec<f32> = res.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&preds[..n]);
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts directory (honours `DDR4BENCH_ARTIFACTS`).
+pub fn default_dir() -> PathBuf {
+    crate::artifacts_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime tests (needing built artifacts) live in
+    // rust/tests/runtime_artifacts.rs; only filesystem-free checks here.
+
+    #[test]
+    fn artifacts_present_on_missing_dir() {
+        assert!(!XlaRuntime::artifacts_present(Path::new("/nonexistent/dir")));
+    }
+
+    #[test]
+    fn block_constants_consistent() {
+        assert_eq!(DATAGEN_BLOCK % 2, 0);
+        assert_eq!(BWMODEL_BLOCK % 2, 0);
+        assert!(BWMODEL_FEATURES >= 6);
+    }
+}

@@ -1,0 +1,191 @@
+//! Performance counters and derived statistics.
+//!
+//! §II-B/§II-C: each traffic generator exposes hardware counters —
+//! "including two counters for the clock cycles taken by batches of read
+//! and write memory access transactions" — and the host computes
+//! throughput by dividing batch execution time by the number of
+//! transactions. This module is those counters plus the derived metrics
+//! (GB/s, latency percentiles, refresh degradation).
+
+pub mod histogram;
+
+pub use histogram::LatencyHistogram;
+
+use crate::config::SpeedBin;
+
+/// Raw hardware-style counters of one TG batch (all in AXI clock cycles
+/// unless stated otherwise).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchCounters {
+    /// Read transactions completed.
+    pub rd_txns: u64,
+    /// Write transactions completed.
+    pub wr_txns: u64,
+    /// Read payload bytes moved.
+    pub rd_bytes: u64,
+    /// Write payload bytes moved.
+    pub wr_bytes: u64,
+    /// AXI cycles from batch start to the last read completion (the
+    /// paper's read-batch cycle counter).
+    pub rd_cycles: u64,
+    /// AXI cycles from batch start to the last write completion.
+    pub wr_cycles: u64,
+    /// AXI cycles from batch start to full batch completion.
+    pub total_cycles: u64,
+    /// DRAM command slots stalled by refresh during the batch.
+    pub refresh_stall_dram_cycles: u64,
+    /// Data-integrity mismatches detected on read-back (0 = clean).
+    pub mismatches: u64,
+    /// Read-latency histogram (AXI cycles, AR accept → last R beat).
+    pub rd_latency: LatencyHistogram,
+    /// Write-latency histogram (AW accept → B response).
+    pub wr_latency: LatencyHistogram,
+}
+
+impl BatchCounters {
+    /// Merge another batch's counters into this one (used when aggregating
+    /// channels or repeated batches).
+    pub fn merge(&mut self, other: &BatchCounters) {
+        self.rd_txns += other.rd_txns;
+        self.wr_txns += other.wr_txns;
+        self.rd_bytes += other.rd_bytes;
+        self.wr_bytes += other.wr_bytes;
+        self.rd_cycles = self.rd_cycles.max(other.rd_cycles);
+        self.wr_cycles = self.wr_cycles.max(other.wr_cycles);
+        self.total_cycles = self.total_cycles.max(other.total_cycles);
+        self.refresh_stall_dram_cycles += other.refresh_stall_dram_cycles;
+        self.mismatches += other.mismatches;
+        self.rd_latency.merge(&other.rd_latency);
+        self.wr_latency.merge(&other.wr_latency);
+    }
+}
+
+/// A finished batch bound to its clock configuration, yielding physical
+/// metrics.
+#[derive(Debug, Clone)]
+pub struct BatchStats {
+    /// Raw counters.
+    pub counters: BatchCounters,
+    /// Speed bin the batch ran at (fixes the AXI clock for GB/s).
+    pub speed: SpeedBin,
+    /// Channel energy over the batch window (IDD-based model, §II-C
+    /// "other statistics").
+    pub energy: crate::ddr4::power::EnergyBreakdown,
+}
+
+impl BatchStats {
+    /// AXI clock period in nanoseconds.
+    fn axi_ns(&self) -> f64 {
+        1000.0 / self.speed.axi_clock_mhz()
+    }
+
+    /// Throughput of read transactions in GB/s (bytes over the read-batch
+    /// cycle counter — the paper's §II-C formula).
+    pub fn read_throughput_gbs(&self) -> f64 {
+        if self.counters.rd_cycles == 0 {
+            return 0.0;
+        }
+        self.counters.rd_bytes as f64 / (self.counters.rd_cycles as f64 * self.axi_ns())
+    }
+
+    /// Throughput of write transactions in GB/s.
+    pub fn write_throughput_gbs(&self) -> f64 {
+        if self.counters.wr_cycles == 0 {
+            return 0.0;
+        }
+        self.counters.wr_bytes as f64 / (self.counters.wr_cycles as f64 * self.axi_ns())
+    }
+
+    /// Combined throughput in GB/s over the whole batch (mixed workloads:
+    /// total bytes over total cycles).
+    pub fn total_throughput_gbs(&self) -> f64 {
+        if self.counters.total_cycles == 0 {
+            return 0.0;
+        }
+        (self.counters.rd_bytes + self.counters.wr_bytes) as f64
+            / (self.counters.total_cycles as f64 * self.axi_ns())
+    }
+
+    /// Mean read latency in nanoseconds.
+    pub fn read_latency_ns(&self) -> f64 {
+        self.counters.rd_latency.mean() * self.axi_ns()
+    }
+
+    /// Mean write latency in nanoseconds.
+    pub fn write_latency_ns(&self) -> f64 {
+        self.counters.wr_latency.mean() * self.axi_ns()
+    }
+
+    /// Energy per transferred bit in picojoules (None when no data moved).
+    pub fn pj_per_bit(&self) -> Option<f64> {
+        self.energy.pj_per_bit(self.counters.rd_bytes + self.counters.wr_bytes)
+    }
+
+    /// Average channel power over the batch, in milliwatts.
+    pub fn avg_power_mw(&self) -> f64 {
+        let elapsed_ns =
+            self.counters.total_cycles as f64 * crate::ddr4::AXI_RATIO as f64 * self.speed.tck_ns();
+        self.energy.avg_mw(elapsed_ns)
+    }
+
+    /// Fraction of DRAM command slots lost to refresh (0..1) — the
+    /// "refresh-related performance degradation" statistic.
+    pub fn refresh_degradation(&self) -> f64 {
+        let dram_cycles = self.counters.total_cycles * crate::ddr4::AXI_RATIO;
+        if dram_cycles == 0 {
+            return 0.0;
+        }
+        self.counters.refresh_stall_dram_cycles as f64 / dram_cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(rd_bytes: u64, rd_cycles: u64, speed: SpeedBin) -> BatchStats {
+        BatchStats {
+            counters: BatchCounters { rd_bytes, rd_cycles, total_cycles: rd_cycles, ..Default::default() },
+            speed,
+            energy: Default::default(),
+        }
+    }
+
+    #[test]
+    fn throughput_formula_matches_paper_units() {
+        // 6.4 GB/s = 32 B per 5 ns AXI cycle at DDR4-1600 (200 MHz).
+        let s = stats(32_000, 1000, SpeedBin::Ddr4_1600);
+        assert!((s.read_throughput_gbs() - 6.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_scales_with_axi_clock() {
+        let a = stats(32_000, 1000, SpeedBin::Ddr4_1600);
+        let b = stats(32_000, 1000, SpeedBin::Ddr4_2400);
+        assert!((b.read_throughput_gbs() / a.read_throughput_gbs() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_cycles_is_zero_throughput() {
+        let s = stats(100, 0, SpeedBin::Ddr4_1600);
+        assert_eq!(s.read_throughput_gbs(), 0.0);
+        assert_eq!(s.total_throughput_gbs(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_and_maxes() {
+        let mut a = BatchCounters { rd_txns: 10, rd_bytes: 100, rd_cycles: 50, ..Default::default() };
+        let b = BatchCounters { rd_txns: 5, rd_bytes: 70, rd_cycles: 80, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.rd_txns, 15);
+        assert_eq!(a.rd_bytes, 170);
+        assert_eq!(a.rd_cycles, 80, "cycle counters take the max (parallel channels)");
+    }
+
+    #[test]
+    fn refresh_degradation_fraction() {
+        let mut s = stats(0, 1000, SpeedBin::Ddr4_1600);
+        s.counters.refresh_stall_dram_cycles = 400; // of 4000 DRAM cycles
+        assert!((s.refresh_degradation() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,183 @@
+//! Seeded property-test kit (in-tree replacement for proptest; the
+//! offline image only vendors the `xla` closure — DESIGN.md §9).
+//!
+//! [`check`] runs a property over `cases` random inputs drawn from a
+//! generator function, reports the failing seed on the first
+//! counterexample, and — for inputs that implement [`Shrink`] — greedily
+//! shrinks the counterexample before reporting. Setting
+//! `DDR4BENCH_PT_SEED` reproduces a failure run exactly.
+
+use crate::rng::SplitMix64;
+
+/// Types that can propose strictly-smaller variants of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            return vec![];
+        }
+        let mut out = vec![0, self / 2];
+        if *self > 1 {
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|v| v as u32).collect()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Base seed for a named property (env override, else name hash).
+fn base_seed(name: &str) -> u64 {
+    if let Ok(s) = std::env::var("DDR4BENCH_PT_SEED") {
+        if let Ok(v) = s.parse() {
+            return v;
+        }
+    }
+    name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3)
+    })
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the failing
+/// input and reproduction seed on the first counterexample (no shrinking).
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = base_seed(name);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case}/{cases}\n  input: {input:?}\n  \
+                 reason: {msg}\n  reproduce with DDR4BENCH_PT_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// As [`check`], but shrinks the counterexample before panicking.
+pub fn check_shrink<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Shrink,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = base_seed(name);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // greedy shrink: walk to a local minimum
+            let mut cur = input;
+            let mut msg = first_msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in cur.shrink() {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property `{name}` failed on case {case}/{cases}\n  shrunk input: {cur:?}\n  \
+                 reason: {msg}\n  reproduce with DDR4BENCH_PT_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("u64 is u64", 100, |r| r.next_u64(), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always false`")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 10, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reaches_minimum() {
+        // property: v < 100 — minimal counterexample is 100
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                "lt100",
+                1000,
+                |r| r.below(10_000),
+                |v| if *v < 100 { Ok(()) } else { Err(format!("{v} >= 100")) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk input: 100"), "shrunk to minimum: {msg}");
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_fields() {
+        let cands = (4u64, 6u64).shrink();
+        assert!(cands.contains(&(0, 6)));
+        assert!(cands.contains(&(2, 6)));
+        assert!(cands.contains(&(4, 3)));
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let mut a = SplitMix64::new(base_seed("x"));
+        let mut b = SplitMix64::new(base_seed("x"));
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_ne!(base_seed("x"), base_seed("y"));
+    }
+}

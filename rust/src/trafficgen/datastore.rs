@@ -1,0 +1,119 @@
+//! Sparse backing store for data-integrity checking.
+//!
+//! The timing model doesn't need data, but the paper's integrity feature
+//! (write real non-zero payloads, read them back, compare) does. This
+//! sparse store keeps only the 64-byte bursts that were actually written —
+//! a 2 GiB channel costs memory proportional to the touched footprint.
+//!
+//! [`DataStore::corrupt_word`] flips bits behind the TG's back, which the
+//! failure-injection tests use to prove the checker actually detects
+//! faults (a checker that can't fail is not a checker).
+
+use std::collections::HashMap;
+
+use super::payload::WORDS_PER_BURST;
+
+/// Sparse 64-byte-burst-granular memory contents.
+#[derive(Debug, Clone, Default)]
+pub struct DataStore {
+    bursts: HashMap<u64, [u32; WORDS_PER_BURST]>,
+}
+
+impl DataStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the contents of the burst at (64-aligned) `burst_addr`.
+    pub fn write(&mut self, burst_addr: u64, words: [u32; WORDS_PER_BURST]) {
+        debug_assert_eq!(burst_addr % 64, 0);
+        self.bursts.insert(burst_addr, words);
+    }
+
+    /// Read the burst at `burst_addr`; unwritten memory reads as zeros
+    /// (DRAM after init — also what makes reads of never-written regions
+    /// deterministic in the model).
+    pub fn read(&self, burst_addr: u64) -> [u32; WORDS_PER_BURST] {
+        debug_assert_eq!(burst_addr % 64, 0);
+        self.bursts.get(&burst_addr).copied().unwrap_or([0; WORDS_PER_BURST])
+    }
+
+    /// Has this burst ever been written?
+    pub fn is_written(&self, burst_addr: u64) -> bool {
+        self.bursts.contains_key(&burst_addr)
+    }
+
+    /// Number of distinct bursts written (footprint in 64 B units).
+    pub fn footprint_bursts(&self) -> usize {
+        self.bursts.len()
+    }
+
+    /// Fault injection: XOR `mask` into word `word_idx` of a stored burst.
+    /// Returns false if the burst was never written.
+    pub fn corrupt_word(&mut self, burst_addr: u64, word_idx: usize, mask: u32) -> bool {
+        match self.bursts.get_mut(&burst_addr) {
+            Some(b) => {
+                b[word_idx % WORDS_PER_BURST] ^= mask;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop everything (batch-boundary reset).
+    pub fn clear(&mut self) {
+        self.bursts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwritten_reads_zero() {
+        let s = DataStore::new();
+        assert_eq!(s.read(0), [0u32; 16]);
+        assert!(!s.is_written(0));
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut s = DataStore::new();
+        let w = [7u32; 16];
+        s.write(128, w);
+        assert_eq!(s.read(128), w);
+        assert!(s.is_written(128));
+        assert_eq!(s.footprint_bursts(), 1);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let mut s = DataStore::new();
+        s.write(0, [1; 16]);
+        s.write(0, [2; 16]);
+        assert_eq!(s.read(0), [2; 16]);
+        assert_eq!(s.footprint_bursts(), 1);
+    }
+
+    #[test]
+    fn corrupt_flips_bits() {
+        let mut s = DataStore::new();
+        s.write(64, [0xFF; 16]);
+        assert!(s.corrupt_word(64, 3, 0x0F));
+        let b = s.read(64);
+        assert_eq!(b[3], 0xF0);
+        assert_eq!(b[2], 0xFF);
+        assert!(!s.corrupt_word(128, 0, 1), "can't corrupt unwritten memory");
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut s = DataStore::new();
+        s.write(0, [1; 16]);
+        s.clear();
+        assert_eq!(s.footprint_bursts(), 0);
+        assert_eq!(s.read(0), [0; 16]);
+    }
+}

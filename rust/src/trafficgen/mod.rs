@@ -1,0 +1,780 @@
+//! The traffic generator (TG) — the paper's measurement instrument
+//! (§II-B).
+//!
+//! One TG drives one memory channel through the five AXI4 channels it
+//! manages independently: AR (read address), R (read data), AW (write
+//! address), W (write data) and B (write response). Managing the read and
+//! write paths separately is what enables *simultaneous* read and write
+//! transactions — the property behind the paper's mixed-workload results
+//! (Fig. 3, and mixed > read-only in §III-C).
+//!
+//! Modeled bottlenecks (each one shows up in the paper's numbers):
+//!
+//! - **address channels**: one transaction accepted per
+//!   `addr_cmd_interval_axi` fabric cycles per direction (the MIG
+//!   front-end decode pipeline) — caps single-beat throughput at ~half
+//!   the data-bus rate;
+//! - **data channels**: one beat per fabric cycle in each direction
+//!   (256-bit fabric = 32 B/beat = 6.4 GB/s per direction at 200 MHz);
+//! - **outstanding window**: `outstanding_cap` transactions in flight per
+//!   direction (Blocking mode forces 1 in total);
+//! - **controller queues**: back-pressure when the native queues fill.
+//!
+//! The TG also owns the data path (payload generation + read-back
+//! verification, [`payload`]) and the hardware-style performance counters
+//! ([`crate::stats::BatchCounters`]).
+
+pub mod addrgen;
+pub mod datastore;
+pub mod payload;
+pub mod trace;
+
+pub use addrgen::AddrGen;
+pub use datastore::DataStore;
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::axi::{AxiTxn, TxnId};
+use crate::config::{OpMix, PatternConfig, Signaling};
+use crate::controller::{Completion, MemController, MemRequest};
+use crate::ddr4::DramGeometry;
+use crate::rng::SplitMix64;
+use crate::stats::BatchCounters;
+
+/// One planned transaction of a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedTxn {
+    /// Write or read?
+    pub is_write: bool,
+    /// Start byte address.
+    pub addr: u64,
+}
+
+/// Deterministically expand a pattern into its transaction plan. The plan
+/// is what the RTL TG generates on the fly; precomputing it lets the
+/// platform batch the payload work into one XLA call.
+pub fn plan_batch(cfg: &PatternConfig, beat_bytes: u32) -> Vec<PlannedTxn> {
+    let mut rng = SplitMix64::new(match cfg.addr {
+        crate::config::AddrMode::Random { seed } => seed ^ 0xA5A5_5A5A,
+        crate::config::AddrMode::Sequential => 0x5EED,
+    });
+    // One shared address walk for both directions (the RTL TG draws the
+    // op type per transaction over a single generator): reads and writes
+    // of a sequential mixed batch stream through the *same* open rows
+    // instead of fighting over banks with conflicting rows.
+    let mut gen =
+        AddrGen::new(cfg.addr, cfg.start_addr, cfg.region_bytes, cfg.burst, beat_bytes);
+    let read_pct = cfg.op.read_pct();
+    (0..cfg.batch_len)
+        .map(|_| {
+            let is_write = match cfg.op {
+                OpMix::ReadOnly => false,
+                OpMix::WriteOnly => true,
+                OpMix::Mixed { .. } => !rng.percent(read_pct),
+            };
+            PlannedTxn { is_write, addr: gen.next_addr() }
+        })
+        .collect()
+}
+
+/// A read transaction being unrolled into controller requests.
+#[derive(Debug, Clone)]
+struct ReadUnroll {
+    txn_id: TxnId,
+    /// (burst byte address, AXI beats it serves), in beat order.
+    bursts: Vec<(u64, u32)>,
+    next: usize,
+}
+
+/// A write transaction streaming W beats.
+#[derive(Debug, Clone)]
+struct WriteUnroll {
+    txn_id: TxnId,
+    bursts: Vec<(u64, u32)>,
+    /// Current burst being filled.
+    cur: usize,
+    /// Beats streamed into the current burst.
+    beats_in_cur: u32,
+    /// A fully-streamed burst waiting for controller queue space.
+    pending_push: bool,
+}
+
+/// R-channel group: beats of one completed read request awaiting drain.
+#[derive(Debug, Clone, Copy)]
+struct RGroup {
+    txn_id: TxnId,
+    beats_left: u32,
+    last_of_txn: bool,
+    first_beat_pending: bool,
+}
+
+/// Read-back sample for batched verification: (burst address, observed
+/// words).
+pub type ReadBackSample = (u64, [u32; payload::WORDS_PER_BURST]);
+
+/// Per-channel traffic generator.
+pub struct TrafficGen {
+    cfg: PatternConfig,
+    beat_bytes: u32,
+    geo: DramGeometry,
+    // plan
+    plan: Vec<PlannedTxn>,
+    rd_idx: Vec<usize>,
+    wr_idx: Vec<usize>,
+    rd_next: usize,
+    wr_next: usize,
+    blk_next: usize, // merged cursor for Blocking mode
+    // signaling
+    outstanding_cap: usize,
+    addr_interval: u64,
+    next_ar_at: u64,
+    next_aw_at: u64,
+    rd_outstanding: usize,
+    wr_outstanding: usize,
+    // unrolling
+    rd_unroll: VecDeque<ReadUnroll>,
+    wr_unroll: VecDeque<WriteUnroll>,
+    // R channel
+    r_queue: VecDeque<RGroup>,
+    last_drained_txn: Option<TxnId>,
+    serial_frontend: bool,
+    // bookkeeping
+    issue_axi: HashMap<TxnId, u64>,
+    next_txn_id: TxnId,
+    rd_done: u32,
+    wr_done: u32,
+    /// Counters of the current batch (AXI-cycle units, relative to 0).
+    pub counters: BatchCounters,
+    /// Data store for integrity checking (None = timing-only run).
+    pub store: Option<DataStore>,
+    /// Read-back samples collected for batched verification.
+    pub readback: Vec<ReadBackSample>,
+    readback_cap: usize,
+    /// Pre-generated payloads (burst address → words), produced by the
+    /// AOT-compiled XLA datagen kernel when a runtime is attached. Falls
+    /// back to the pure-Rust expansion when absent.
+    pub payload_map: Option<HashMap<u64, [u32; payload::WORDS_PER_BURST]>>,
+}
+
+/// Max controller requests unrolled per AXI cycle (4 DRAM command slots
+/// per fabric cycle — the 4:1 ratio).
+const UNROLL_PER_CYCLE: usize = 4;
+/// Max read transactions concurrently unrolling.
+const UNROLL_TXNS: usize = 4;
+
+impl TrafficGen {
+    /// Build a TG for `cfg` on a channel with the given fabric beat size
+    /// and DRAM geometry. `outstanding_cap` comes from the design config.
+    pub fn new(
+        cfg: PatternConfig,
+        beat_bytes: u32,
+        geo: DramGeometry,
+        outstanding_cap: usize,
+        addr_cmd_interval_axi: u32,
+    ) -> Self {
+        Self::with_frontend(cfg, beat_bytes, geo, outstanding_cap, addr_cmd_interval_axi, true)
+    }
+
+    /// As [`Self::new`] but selecting the front-end model explicitly.
+    pub fn with_frontend(
+        cfg: PatternConfig,
+        beat_bytes: u32,
+        geo: DramGeometry,
+        outstanding_cap: usize,
+        addr_cmd_interval_axi: u32,
+        serial_frontend: bool,
+    ) -> Self {
+        cfg.validate().expect("invalid pattern config");
+        let plan = plan_batch(&cfg, beat_bytes);
+        let rd_idx: Vec<usize> =
+            plan.iter().enumerate().filter(|(_, t)| !t.is_write).map(|(i, _)| i).collect();
+        let wr_idx: Vec<usize> =
+            plan.iter().enumerate().filter(|(_, t)| t.is_write).map(|(i, _)| i).collect();
+        let store = cfg.verify.then(DataStore::new);
+        Self {
+            cfg,
+            beat_bytes,
+            geo,
+            plan,
+            rd_idx,
+            wr_idx,
+            rd_next: 0,
+            wr_next: 0,
+            blk_next: 0,
+            outstanding_cap,
+            addr_interval: addr_cmd_interval_axi as u64,
+            next_ar_at: 0,
+            next_aw_at: 0,
+            rd_outstanding: 0,
+            wr_outstanding: 0,
+            rd_unroll: VecDeque::new(),
+            wr_unroll: VecDeque::new(),
+            r_queue: VecDeque::new(),
+            last_drained_txn: None,
+            serial_frontend,
+            issue_axi: HashMap::new(),
+            next_txn_id: 0,
+            rd_done: 0,
+            wr_done: 0,
+            counters: BatchCounters::default(),
+            store,
+            readback: Vec::new(),
+            readback_cap: 1 << 16,
+            payload_map: None,
+        }
+    }
+
+    /// The transaction plan (read-only view; used by the platform to
+    /// precompute payload blocks).
+    pub fn plan(&self) -> &[PlannedTxn] {
+        &self.plan
+    }
+
+    /// Replace the synthetic plan with an explicit one (trace replay).
+    /// The plan length must match the pattern's `batch_len`.
+    pub fn with_plan(mut self, plan: Vec<PlannedTxn>) -> Self {
+        assert_eq!(plan.len(), self.cfg.batch_len as usize, "plan/batch_len mismatch");
+        self.rd_idx =
+            plan.iter().enumerate().filter(|(_, t)| !t.is_write).map(|(i, _)| i).collect();
+        self.wr_idx =
+            plan.iter().enumerate().filter(|(_, t)| t.is_write).map(|(i, _)| i).collect();
+        self.plan = plan;
+        self
+    }
+
+    /// Pattern in force.
+    pub fn config(&self) -> &PatternConfig {
+        &self.cfg
+    }
+
+    /// All transactions issued, completed and drained?
+    pub fn is_done(&self) -> bool {
+        (self.rd_done + self.wr_done) as usize == self.plan.len()
+            && self.r_queue.is_empty()
+            && self.rd_unroll.is_empty()
+            && self.wr_unroll.is_empty()
+    }
+
+    /// Transactions completed so far.
+    pub fn completed(&self) -> u32 {
+        self.rd_done + self.wr_done
+    }
+
+    /// Decompose an AXI transaction into (burst byte address, beats)
+    /// pairs, beat-order, consecutive duplicates merged.
+    fn split_bursts(&self, addr: u64, is_write: bool, id: TxnId) -> Vec<(u64, u32)> {
+        let txn = AxiTxn { id, is_write, addr, burst: self.cfg.burst, beat_bytes: self.beat_bytes };
+        let mask = !(self.geo.burst_bytes() as u64 - 1);
+        let mut out: Vec<(u64, u32)> = Vec::new();
+        for i in 0..self.cfg.burst.len {
+            let a = txn.beat_addr(i) & mask;
+            match out.last_mut() {
+                Some((last, beats)) if *last == a => *beats += 1,
+                _ => out.push((a, 1)),
+            }
+        }
+        out
+    }
+
+    fn total_outstanding(&self) -> usize {
+        self.rd_outstanding + self.wr_outstanding
+    }
+
+    /// May a new transaction be issued under the signaling mode?
+    fn may_issue(&self, is_write: bool, now: u64) -> bool {
+        match self.cfg.signaling {
+            Signaling::Blocking => self.total_outstanding() == 0,
+            Signaling::NonBlocking | Signaling::Aggressive => {
+                let (outst, gate) = if is_write {
+                    (self.wr_outstanding, self.next_aw_at)
+                } else {
+                    (self.rd_outstanding, self.next_ar_at)
+                };
+                outst < self.outstanding_cap && now >= gate
+            }
+        }
+    }
+
+    /// Issue phase: accept new transactions onto the address channels.
+    fn issue_txns(&mut self, now: u64) {
+        if self.cfg.signaling == Signaling::Blocking {
+            // strict plan order, one at a time
+            if self.blk_next < self.plan.len() && self.total_outstanding() == 0 {
+                let t = self.plan[self.blk_next];
+                self.blk_next += 1;
+                self.start_txn(t, now);
+            }
+            return;
+        }
+        // Independent AR / AW streams.
+        if self.rd_next < self.rd_idx.len()
+            && self.may_issue(false, now)
+            && self.rd_unroll.len() < UNROLL_TXNS
+        {
+            let t = self.plan[self.rd_idx[self.rd_next]];
+            self.rd_next += 1;
+            self.start_txn(t, now);
+            self.next_ar_at = now + self.addr_interval;
+        }
+        if self.wr_next < self.wr_idx.len()
+            && self.may_issue(true, now)
+            && self.wr_unroll.len() < UNROLL_TXNS
+        {
+            let t = self.plan[self.wr_idx[self.wr_next]];
+            self.wr_next += 1;
+            self.start_txn(t, now);
+            self.next_aw_at = now + self.addr_interval;
+        }
+    }
+
+    fn start_txn(&mut self, t: PlannedTxn, now: u64) {
+        let id = self.next_txn_id;
+        self.next_txn_id += 1;
+        self.issue_axi.insert(id, now);
+        let bursts = self.split_bursts(t.addr, t.is_write, id);
+        if t.is_write {
+            self.wr_outstanding += 1;
+            self.wr_unroll.push_back(WriteUnroll {
+                txn_id: id,
+                bursts,
+                cur: 0,
+                beats_in_cur: 0,
+                pending_push: false,
+            });
+        } else {
+            self.rd_outstanding += 1;
+            self.rd_unroll.push_back(ReadUnroll { txn_id: id, bursts, next: 0 });
+        }
+    }
+
+    /// Unroll phase: push read requests into the controller queues.
+    fn unroll_reads(&mut self, dram_now: u64, ctrl: &mut MemController) {
+        let mut budget = UNROLL_PER_CYCLE;
+        while budget > 0 {
+            let serial = self.serial_frontend;
+            let Some(head) = self.rd_unroll.front_mut() else { break };
+            // Serial front end (MIG-like): a *new* transaction starts
+            // unrolling only once the native read queue has drained and
+            // any page-miss pipeline flush has cleared.
+            if serial
+                && head.next == 0
+                && (!ctrl.read_queue_empty() || dram_now < ctrl.frontend_gate(false))
+            {
+                break;
+            }
+            let (burst_addr, beats) = head.bursts[head.next];
+            let last = head.next + 1 == head.bursts.len();
+            let req = MemRequest {
+                txn_id: head.txn_id,
+                is_write: false,
+                addr: self.geo.decode(burst_addr),
+                burst_addr,
+                beats,
+                arrival: dram_now,
+                last_of_txn: last,
+            };
+            match ctrl.try_push(req) {
+                Ok(()) => {
+                    head.next += 1;
+                    budget -= 1;
+                    if last {
+                        self.rd_unroll.pop_front();
+                    }
+                }
+                Err(_) => break, // queue full: retry next cycle
+            }
+        }
+    }
+
+    /// W-channel phase: stream write beats in AW order and push completed
+    /// bursts into the controller. The entry being streamed is the oldest
+    /// not-fully-streamed transaction (older entries may still sit in the
+    /// deque awaiting their B response — they don't block the W channel).
+    /// Aggressive signaling pre-buffers and streams two beats per cycle;
+    /// the other modes drive the physical one-beat-per-cycle rate.
+    fn stream_write_beats(&mut self, dram_now: u64, ctrl: &mut MemController) {
+        let serial = self.serial_frontend;
+        let beats_per_cycle = if self.cfg.signaling == Signaling::Aggressive { 2 } else { 1 };
+        for _ in 0..beats_per_cycle {
+            let Some(idx) = self
+                .wr_unroll
+                .iter()
+                .position(|u| u.pending_push || u.cur < u.bursts.len())
+            else {
+                return;
+            };
+            let head = &mut self.wr_unroll[idx];
+            // Serial front end: a new write transaction starts streaming
+            // only once the native write queue has drained.
+            if serial
+                && head.cur == 0
+                && head.beats_in_cur == 0
+                && !head.pending_push
+                && (!ctrl.write_queue_empty() || dram_now < ctrl.frontend_gate(true))
+            {
+                return;
+            }
+            // Retry a burst blocked on queue space first.
+            if head.pending_push {
+                if !Self::push_write_burst(
+                    &self.geo,
+                    self.payload_map.as_ref(),
+                    self.store.as_mut(),
+                    &self.cfg,
+                    ctrl,
+                    head,
+                    dram_now,
+                ) {
+                    return; // still blocked; W stalls this cycle
+                }
+                if head.cur >= head.bursts.len() {
+                    continue;
+                }
+            }
+            // Stream one beat into the current burst.
+            head.beats_in_cur += 1;
+            self.counters.wr_bytes += self.beat_bytes as u64;
+            let (_, beats) = head.bursts[head.cur];
+            if head.beats_in_cur == beats {
+                head.pending_push = true;
+                let _ = Self::push_write_burst(
+                    &self.geo,
+                    self.payload_map.as_ref(),
+                    self.store.as_mut(),
+                    &self.cfg,
+                    ctrl,
+                    head,
+                    dram_now,
+                );
+            }
+        }
+    }
+
+    /// Try to push the head write-unroll's current burst; on success
+    /// advances the unroll (and retires it when complete). Returns success.
+    fn push_write_burst(
+        geo: &DramGeometry,
+        payload_map: Option<&HashMap<u64, [u32; payload::WORDS_PER_BURST]>>,
+        store: Option<&mut DataStore>,
+        cfg: &PatternConfig,
+        ctrl: &mut MemController,
+        head: &mut WriteUnroll,
+        dram_now: u64,
+    ) -> bool {
+        let (burst_addr, beats) = head.bursts[head.cur];
+        let last = head.cur + 1 == head.bursts.len();
+        let req = MemRequest {
+            txn_id: head.txn_id,
+            is_write: true,
+            addr: geo.decode(burst_addr),
+            burst_addr,
+            beats,
+            arrival: dram_now,
+            last_of_txn: last,
+        };
+        match ctrl.try_push(req) {
+            Ok(()) => {
+                if let Some(s) = store {
+                    let words = payload_map
+                        .and_then(|m| m.get(&burst_addr).copied())
+                        .unwrap_or_else(|| payload::burst_payload(burst_addr, cfg.data));
+                    s.write(burst_addr, words);
+                }
+                head.cur += 1;
+                head.beats_in_cur = 0;
+                head.pending_push = false;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Completion intake from the controller (platform calls this each
+    /// fabric cycle with the drained completions).
+    pub fn on_completions(&mut self, comps: &[Completion], now: u64) {
+        for c in comps {
+            if c.is_write {
+                if c.last_of_txn {
+                    // B response
+                    self.wr_done += 1;
+                    self.wr_outstanding -= 1;
+                    self.counters.wr_txns += 1;
+                    self.counters.wr_cycles = now;
+                    if let Some(t0) = self.issue_axi.remove(&c.txn_id) {
+                        self.counters.wr_latency.record(now - t0);
+                    }
+                    // retire the unroll entry
+                    if let Some(pos) =
+                        self.wr_unroll.iter().position(|u| u.txn_id == c.txn_id)
+                    {
+                        self.wr_unroll.remove(pos);
+                    }
+                }
+            } else {
+                // Read data: sample for verification, then queue beats.
+                if self.store.is_some() && self.readback.len() < self.readback_cap {
+                    let data = self.store.as_ref().unwrap().read(c.burst_addr);
+                    self.readback.push((c.burst_addr, data));
+                }
+                self.r_queue.push_back(RGroup {
+                    txn_id: c.txn_id,
+                    beats_left: c.beats,
+                    last_of_txn: c.last_of_txn,
+                    first_beat_pending: true,
+                });
+            }
+        }
+    }
+
+    /// R-channel drain: deliver beats to the TG at the fabric rate (one
+    /// beat per cycle in every mode — `rready` differences between
+    /// non-blocking and aggressive are below this model's resolution; the
+    /// W-channel pre-buffering is where aggressive mode actually wins).
+    fn drain_read_beats(&mut self, now: u64) {
+        let Some(head) = self.r_queue.front_mut() else { return };
+        head.first_beat_pending = false;
+        self.last_drained_txn = Some(head.txn_id);
+        head.beats_left -= 1;
+        self.counters.rd_bytes += self.beat_bytes as u64;
+        if head.beats_left == 0 {
+            let done = *head;
+            self.r_queue.pop_front();
+            if done.last_of_txn {
+                self.rd_done += 1;
+                self.rd_outstanding -= 1;
+                self.counters.rd_txns += 1;
+                self.counters.rd_cycles = now;
+                if let Some(t0) = self.issue_axi.remove(&done.txn_id) {
+                    self.counters.rd_latency.record(now - t0);
+                }
+            }
+        }
+    }
+
+    /// One fabric-clock tick: drain R, issue AR/AW, unroll, stream W.
+    /// `now` is the batch-relative fabric cycle (counter units);
+    /// `dram_now` is the controller's absolute DRAM cycle (timing units).
+    pub fn tick_axi(&mut self, now: u64, dram_now: u64, ctrl: &mut MemController) {
+        self.drain_read_beats(now);
+        self.issue_txns(now);
+        self.unroll_reads(dram_now, ctrl);
+        self.stream_write_beats(dram_now, ctrl);
+        if self.is_done() && self.counters.total_cycles == 0 {
+            self.counters.total_cycles = now;
+        }
+    }
+
+    /// Verify collected read-back samples against expected payloads using
+    /// the pure-Rust mirror (the platform may use the XLA path instead).
+    /// Returns the mismatch count and records it in the counters.
+    pub fn verify_readback_rust(&mut self) -> u64 {
+        let mut mism = 0u64;
+        for (addr, data) in &self.readback {
+            if self.store.as_ref().is_some_and(|s| s.is_written(*addr)) {
+                let exp = payload::burst_payload(*addr, self.cfg.data);
+                mism += payload::verify_burst(&exp, data) as u64;
+            }
+        }
+        self.counters.mismatches += mism;
+        mism
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AddrMode, BurstKind, PatternConfig, SpeedBin};
+    use crate::ddr4::AXI_RATIO;
+    use crate::controller::MemController;
+    use crate::ddr4::TimingParams;
+
+    fn run_tg(cfg: PatternConfig) -> (TrafficGen, u64) {
+        let geo = DramGeometry::profpga_board();
+        let mut ctrl = MemController::new(
+            crate::config::ControllerParams::default(),
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            geo,
+        );
+        let mut tg = TrafficGen::new(cfg, 32, geo, 8, 2);
+        let mut comps = Vec::new();
+        let mut now_axi = 0u64;
+        while !tg.is_done() {
+            assert!(now_axi < 10_000_000, "TG deadlocked");
+            comps.clear();
+            ctrl.pop_completions(now_axi * AXI_RATIO, &mut comps);
+            tg.on_completions(&comps, now_axi);
+            tg.tick_axi(now_axi, now_axi * AXI_RATIO, &mut ctrl);
+            for s in 0..AXI_RATIO {
+                ctrl.tick(now_axi * AXI_RATIO + s);
+            }
+            now_axi += 1;
+        }
+        (tg, now_axi)
+    }
+
+    #[test]
+    fn plan_respects_op_mix() {
+        let cfg = PatternConfig::mixed(AddrMode::Sequential, 4, 1000);
+        let plan = plan_batch(&cfg, 32);
+        let writes = plan.iter().filter(|t| t.is_write).count();
+        assert!((350..=650).contains(&writes), "50% mix, got {writes} writes");
+        let ro = plan_batch(&PatternConfig::seq_read_burst(4, 100), 32);
+        assert!(ro.iter().all(|t| !t.is_write));
+    }
+
+    #[test]
+    fn plan_deterministic() {
+        let cfg = PatternConfig::rnd_read_burst(4, 500, 42);
+        assert_eq!(plan_batch(&cfg, 32), plan_batch(&cfg, 32));
+    }
+
+    #[test]
+    fn seq_read_batch_completes_and_counts() {
+        let (tg, _) = run_tg(PatternConfig::seq_read_burst(4, 64));
+        assert_eq!(tg.counters.rd_txns, 64);
+        assert_eq!(tg.counters.rd_bytes, 64 * 4 * 32);
+        assert_eq!(tg.counters.wr_txns, 0);
+        assert!(tg.counters.rd_cycles > 0);
+        assert!(tg.counters.total_cycles >= tg.counters.rd_cycles);
+        assert_eq!(tg.counters.rd_latency.count(), 64);
+    }
+
+    #[test]
+    fn seq_write_batch_completes() {
+        let (tg, _) = run_tg(PatternConfig::seq_write_burst(4, 64));
+        assert_eq!(tg.counters.wr_txns, 64);
+        assert_eq!(tg.counters.wr_bytes, 64 * 4 * 32);
+        assert_eq!(tg.counters.wr_latency.count(), 64);
+    }
+
+    #[test]
+    fn mixed_batch_runs_both_directions() {
+        let (tg, _) = run_tg(PatternConfig::mixed(AddrMode::Sequential, 4, 128));
+        assert_eq!(tg.counters.rd_txns + tg.counters.wr_txns, 128);
+        assert!(tg.counters.rd_txns > 20);
+        assert!(tg.counters.wr_txns > 20);
+    }
+
+    #[test]
+    fn single_transactions_work() {
+        let (tg, _) = run_tg(PatternConfig::seq_read_burst(1, 32));
+        assert_eq!(tg.counters.rd_txns, 32);
+        assert_eq!(tg.counters.rd_bytes, 32 * 32);
+    }
+
+    #[test]
+    fn long_bursts_unroll_past_queue_depth() {
+        // 128-beat bursts = 64 DRAM requests per txn >> queue depth 16:
+        // must stream without deadlock.
+        let (tg, _) = run_tg(PatternConfig::seq_read_burst(128, 8));
+        assert_eq!(tg.counters.rd_txns, 8);
+        assert_eq!(tg.counters.rd_bytes, 8 * 128 * 32);
+    }
+
+    #[test]
+    fn blocking_mode_serializes() {
+        let mut cfg = PatternConfig::seq_read_burst(1, 16);
+        cfg.signaling = Signaling::Blocking;
+        let (tg_blk, cycles_blk) = run_tg(cfg);
+        let (tg_nb, cycles_nb) = run_tg(PatternConfig::seq_read_burst(1, 16));
+        assert_eq!(tg_blk.counters.rd_txns, tg_nb.counters.rd_txns);
+        assert!(
+            cycles_blk > cycles_nb,
+            "blocking ({cycles_blk}) must be slower than non-blocking ({cycles_nb})"
+        );
+    }
+
+    #[test]
+    fn aggressive_at_least_as_fast_as_nonblocking() {
+        let mut agr = PatternConfig::seq_read_burst(4, 256);
+        agr.signaling = Signaling::Aggressive;
+        let (_, c_agr) = run_tg(agr);
+        let (_, c_nb) = run_tg(PatternConfig::seq_read_burst(4, 256));
+        assert!(c_agr <= c_nb, "aggressive {c_agr} vs non-blocking {c_nb}");
+    }
+
+    #[test]
+    fn random_slower_than_sequential() {
+        let (_, c_seq) = run_tg(PatternConfig::seq_read_burst(1, 256));
+        let (_, c_rnd) = run_tg(PatternConfig::rnd_read_burst(1, 256, 7));
+        assert!(
+            c_rnd as f64 > c_seq as f64 * 2.0,
+            "random singles ({c_rnd}) should be >2x slower than sequential ({c_seq})"
+        );
+    }
+
+    #[test]
+    fn write_then_read_verifies_clean() {
+        let geo = DramGeometry::profpga_board();
+        let mut ctrl = MemController::new(
+            crate::config::ControllerParams::default(),
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            geo,
+        );
+        // write a small region
+        let mut wcfg = PatternConfig::seq_write_burst(4, 32);
+        wcfg.region_bytes = 32 * 4 * 32;
+        wcfg.verify = true;
+        let mut wtg = TrafficGen::new(wcfg, 32, geo, 8, 2);
+        let mut comps = Vec::new();
+        let mut now = 0u64;
+        while !wtg.is_done() {
+            comps.clear();
+            ctrl.pop_completions(now * AXI_RATIO, &mut comps);
+            wtg.on_completions(&comps, now);
+            wtg.tick_axi(now, now * AXI_RATIO, &mut ctrl);
+            for s in 0..AXI_RATIO {
+                ctrl.tick(now * AXI_RATIO + s);
+            }
+            now += 1;
+        }
+        // read it back with the SAME store
+        let mut rcfg = PatternConfig::seq_read_burst(4, 32);
+        rcfg.region_bytes = 32 * 4 * 32;
+        rcfg.verify = true;
+        let mut rtg = TrafficGen::new(rcfg, 32, geo, 8, 2);
+        rtg.store = wtg.store.take();
+        while !rtg.is_done() {
+            comps.clear();
+            ctrl.pop_completions(now * AXI_RATIO, &mut comps);
+            rtg.on_completions(&comps, now);
+            rtg.tick_axi(now, now * AXI_RATIO, &mut ctrl);
+            for s in 0..AXI_RATIO {
+                ctrl.tick(now * AXI_RATIO + s);
+            }
+            now += 1;
+        }
+        assert!(!rtg.readback.is_empty());
+        assert_eq!(rtg.verify_readback_rust(), 0, "clean memory must verify clean");
+        // fault injection: corrupt and re-verify
+        let addr = rtg.readback[0].0;
+        rtg.readback[0].1[5] ^= 0xDEAD;
+        assert!(rtg.store.as_ref().unwrap().is_written(addr));
+        assert!(rtg.verify_readback_rust() > 0, "corruption must be detected");
+    }
+
+    #[test]
+    fn fixed_burst_single_dram_burst() {
+        let geo = DramGeometry::profpga_board();
+        let tg = TrafficGen::new(
+            PatternConfig {
+                burst: crate::config::BurstSpec { len: 8, kind: BurstKind::Fixed },
+                ..PatternConfig::seq_read_burst(8, 4)
+            },
+            32,
+            geo,
+            8,
+            2,
+        );
+        let bursts = tg.split_bursts(256, false, 0);
+        assert_eq!(bursts, vec![(256, 8)], "FIXED: one burst carrying all beats");
+    }
+
+    #[test]
+    fn incr_burst_splits_in_pairs() {
+        let geo = DramGeometry::profpga_board();
+        let tg = TrafficGen::new(PatternConfig::seq_read_burst(4, 1), 32, geo, 8, 2);
+        let bursts = tg.split_bursts(128, false, 0);
+        assert_eq!(bursts, vec![(128, 2), (192, 2)]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Payload generation and verification (§II-B, "data generation side").
+//!
+//! Unlike Shuhai — which writes constant zeros — the paper's TGs "generate
+//! various sequences of non-zero data and can check the correctness of
+//! read data against the previously written one". The data path here:
+//!
+//! 1. every 64-byte DRAM burst gets a 32-bit **seed** derived from its
+//!    byte address and the pattern seed ([`burst_seed`]);
+//! 2. the seed is expanded to the burst's 16 data words by 16 xorshift32
+//!    steps ([`expand_burst`]) — this expansion is the compute hot-spot
+//!    and is exactly what the Pallas kernel
+//!    (`python/compile/kernels/prbs.py`) implements, so whole batches can
+//!    be generated/verified with one AOT-compiled XLA call from
+//!    [`crate::runtime`];
+//! 3. verification recomputes the expansion and counts mismatching words.
+//!
+//! Seeding per *burst address* (not per transaction) is what makes mixed
+//! read/write workloads verifiable: any read can reconstruct the expected
+//! contents of the bursts it covers regardless of which write transaction
+//! produced them.
+
+use crate::config::DataPattern;
+use crate::rng::Xorshift32;
+
+/// 32-bit data words per 64-byte DRAM burst.
+pub const WORDS_PER_BURST: usize = 16;
+
+/// Derive the non-zero PRBS seed of the burst at `burst_addr` (byte
+/// address, 64-aligned) under pattern seed `pattern_seed`.
+///
+/// The hash must be cheap in RTL terms (xor/shift/multiply) and match the
+/// Python reference (`kernels/ref.py::burst_seed`) bit-for-bit.
+pub fn burst_seed(burst_addr: u64, pattern_seed: u32) -> u32 {
+    let idx = (burst_addr >> 6) as u32; // burst index
+    // xorshift-multiply mix (Murmur3 finalizer style), then non-zero remap.
+    let mut h = idx ^ pattern_seed.rotate_left(16);
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    if h == 0 {
+        0x9E37_79B9
+    } else {
+        h
+    }
+}
+
+/// Expand a burst seed into its 16 payload words (xorshift32 stream).
+pub fn expand_burst(seed: u32) -> [u32; WORDS_PER_BURST] {
+    let mut g = Xorshift32::new(seed);
+    let mut out = [0u32; WORDS_PER_BURST];
+    g.fill(&mut out);
+    out
+}
+
+/// Expected contents of a burst under `pattern` (what the TG writes and
+/// what read-back verification compares against).
+pub fn burst_payload(burst_addr: u64, pattern: DataPattern) -> [u32; WORDS_PER_BURST] {
+    match pattern {
+        DataPattern::Prbs { seed } => expand_burst(burst_seed(burst_addr, seed)),
+        DataPattern::Zeros => [0u32; WORDS_PER_BURST],
+        DataPattern::Constant(w) => [w; WORDS_PER_BURST],
+    }
+}
+
+/// Count mismatching words between expected and observed burst contents.
+pub fn verify_burst(expected: &[u32; WORDS_PER_BURST], got: &[u32; WORDS_PER_BURST]) -> u32 {
+    expected.iter().zip(got.iter()).filter(|(a, b)| a != b).count() as u32
+}
+
+/// Batch-expand many seeds into a flat word buffer (`seeds.len() * 16`
+/// words). This is the pure-Rust mirror of the `datagen` XLA artifact; the
+/// integration suite asserts both produce identical buffers.
+pub fn expand_batch(seeds: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(seeds.len() * WORDS_PER_BURST);
+    for &s in seeds {
+        out.extend_from_slice(&expand_burst(s));
+    }
+    out
+}
+
+/// Batch-verify: mismatch count between `expand_batch(seeds)` and `data`.
+/// Pure-Rust mirror of the `verify` XLA artifact.
+pub fn verify_batch(seeds: &[u32], data: &[u32]) -> u64 {
+    assert_eq!(data.len(), seeds.len() * WORDS_PER_BURST, "data/seed length mismatch");
+    let mut mismatches = 0u64;
+    for (i, &s) in seeds.iter().enumerate() {
+        let exp = expand_burst(s);
+        let got = &data[i * WORDS_PER_BURST..(i + 1) * WORDS_PER_BURST];
+        mismatches += exp.iter().zip(got).filter(|(a, b)| a != b).count() as u64;
+    }
+    mismatches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_seed_nonzero_and_deterministic() {
+        for addr in (0..(1u64 << 16)).step_by(64) {
+            let s = burst_seed(addr, 1);
+            assert_ne!(s, 0);
+            assert_eq!(s, burst_seed(addr, 1));
+        }
+    }
+
+    #[test]
+    fn burst_seed_varies_with_addr_and_seed() {
+        let a = burst_seed(0, 1);
+        let b = burst_seed(64, 1);
+        let c = burst_seed(0, 2);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn burst_seed_pinned_values() {
+        // Pinned constants shared with python/tests/test_kernels.py — if
+        // either side changes the hash, this catches it.
+        assert_eq!(burst_seed(0, 1), 245581154);
+        assert_eq!(burst_seed(64, 1), 3665349440);
+        assert_eq!(burst_seed(4096, 7), 2593156092);
+    }
+
+    #[test]
+    fn expand_is_xorshift_stream() {
+        let w = expand_burst(1);
+        assert_eq!(w[0], 270369);
+        assert_eq!(w[1], 67634689);
+        assert!(w.iter().all(|&x| x != 0), "non-zero data requirement");
+    }
+
+    #[test]
+    fn payload_patterns() {
+        assert_eq!(burst_payload(0, DataPattern::Zeros), [0u32; 16]);
+        assert_eq!(burst_payload(0, DataPattern::Constant(0xA5)), [0xA5; 16]);
+        let p = burst_payload(128, DataPattern::Prbs { seed: 1 });
+        assert_eq!(p, expand_burst(burst_seed(128, 1)));
+    }
+
+    #[test]
+    fn verify_counts_word_mismatches() {
+        let exp = expand_burst(42);
+        let mut got = exp;
+        assert_eq!(verify_burst(&exp, &got), 0);
+        got[3] ^= 1;
+        got[15] ^= 0xFFFF;
+        assert_eq!(verify_burst(&exp, &got), 2);
+    }
+
+    #[test]
+    fn batch_expand_matches_scalar() {
+        let seeds = [1u32, 42, 0xDEADBEEF];
+        let buf = expand_batch(&seeds);
+        assert_eq!(buf.len(), 48);
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_eq!(&buf[i * 16..(i + 1) * 16], &expand_burst(s));
+        }
+    }
+
+    #[test]
+    fn batch_verify_zero_on_clean_and_counts_faults() {
+        let seeds = [7u32, 8, 9];
+        let mut data = expand_batch(&seeds);
+        assert_eq!(verify_batch(&seeds, &data), 0);
+        data[0] ^= 1;
+        data[47] ^= 1;
+        assert_eq!(verify_batch(&seeds, &data), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_verify_rejects_length_mismatch() {
+        verify_batch(&[1, 2], &[0u32; 16]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Trace-driven workloads: replay recorded memory-access traces through
+//! the traffic generator instead of synthetic patterns.
+//!
+//! Production data-center traces are proprietary (DESIGN.md §2), so the
+//! repository ships a synthetic trace *generator* for the classic shapes
+//! (streaming, pointer-chasing, zipfian hot-set) plus this parser for a
+//! simple portable text format, one access per line:
+//!
+//! ```text
+//! # comment
+//! R 0x1000 4        # read,  start address, burst beats
+//! W 4096 32         # write, decimal addresses fine too
+//! ```
+//!
+//! Replay maps each record onto one AXI transaction (INCR burst of the
+//! recorded length, clamped to 1–128) and runs through the exact same
+//! platform executive as the synthetic patterns.
+
+use anyhow::{bail, Context, Result};
+
+use super::PlannedTxn;
+use crate::rng::SplitMix64;
+
+/// One parsed trace record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Write or read?
+    pub is_write: bool,
+    /// Start byte address.
+    pub addr: u64,
+    /// Burst length in beats (1–128).
+    pub beats: u32,
+}
+
+/// Parse the text trace format. Lines: `R|W <addr> [beats]`, `#` comments.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let op = toks.next().unwrap().to_ascii_uppercase();
+        let is_write = match op.as_str() {
+            "R" | "RD" | "READ" => false,
+            "W" | "WR" | "WRITE" => true,
+            other => bail!("line {}: unknown op `{other}`", lineno + 1),
+        };
+        let addr_tok = toks.next().with_context(|| format!("line {}: missing address", lineno + 1))?;
+        let addr = parse_addr(addr_tok)
+            .with_context(|| format!("line {}: bad address `{addr_tok}`", lineno + 1))?;
+        let beats: u32 = match toks.next() {
+            None => 1,
+            Some(b) => b.parse().with_context(|| format!("line {}: bad beats `{b}`", lineno + 1))?,
+        };
+        if beats == 0 || beats > 128 {
+            bail!("line {}: beats {beats} outside 1..=128", lineno + 1);
+        }
+        out.push(TraceRecord { is_write, addr, beats });
+    }
+    Ok(out)
+}
+
+fn parse_addr(tok: &str) -> Result<u64> {
+    if let Some(hex) = tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+        Ok(u64::from_str_radix(hex, 16)?)
+    } else {
+        Ok(tok.parse()?)
+    }
+}
+
+/// Render records back to the text format (round-trips through
+/// [`parse_trace`]).
+pub fn format_trace(records: &[TraceRecord]) -> String {
+    let mut s = String::new();
+    for r in records {
+        s.push_str(&format!(
+            "{} {:#x} {}\n",
+            if r.is_write { "W" } else { "R" },
+            r.addr,
+            r.beats
+        ));
+    }
+    s
+}
+
+/// Convert trace records (uniform burst length required — AXI
+/// transactions in one batch share the TG's burst configuration) into a
+/// TG plan. Returns the plan and the common burst length.
+pub fn plan_from_trace(records: &[TraceRecord]) -> Result<(Vec<PlannedTxn>, u32)> {
+    let Some(first) = records.first() else { bail!("empty trace") };
+    let beats = first.beats;
+    if records.iter().any(|r| r.beats != beats) {
+        bail!(
+            "mixed burst lengths in trace; split it into per-length batches \
+             (the RTL TG reconfigures between batches too)"
+        );
+    }
+    let plan = records
+        .iter()
+        .map(|r| PlannedTxn { is_write: r.is_write, addr: r.addr })
+        .collect();
+    Ok((plan, beats))
+}
+
+/// Synthetic trace generators for the classic data-center access shapes.
+pub mod synth {
+    use super::*;
+
+    /// Streaming: sequential reads over `region` with occasional strided
+    /// writeback (every `wb_every` accesses).
+    pub fn streaming(n: usize, beats: u32, region: u64, wb_every: usize) -> Vec<TraceRecord> {
+        let stride = beats as u64 * 32;
+        (0..n)
+            .map(|i| TraceRecord {
+                is_write: wb_every > 0 && i % wb_every == wb_every - 1,
+                addr: (i as u64 * stride) % region,
+                beats,
+            })
+            .collect()
+    }
+
+    /// Pointer chasing: dependent-looking uniform random single beats.
+    pub fn pointer_chase(n: usize, region: u64, seed: u64) -> Vec<TraceRecord> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| TraceRecord {
+                is_write: false,
+                addr: rng.below(region / 64) * 64,
+                beats: 1,
+            })
+            .collect()
+    }
+
+    /// Zipf-ish hot set: 90% of accesses hit the hot `hot_frac` of the
+    /// region (approximated by two nested uniform draws), 30% writes.
+    pub fn hot_set(n: usize, beats: u32, region: u64, seed: u64) -> Vec<TraceRecord> {
+        let mut rng = SplitMix64::new(seed);
+        let align = (beats as u64 * 32).next_power_of_two().max(64);
+        let hot = (region / 10).max(align);
+        (0..n)
+            .map(|_| {
+                let r = if rng.percent(90) { hot } else { region };
+                TraceRecord {
+                    is_write: rng.percent(30),
+                    addr: rng.below(r / align) * align,
+                    beats,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_lines() {
+        let t = parse_trace("# hdr\nR 0x1000 4\nW 4096\nread 64 128\n").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], TraceRecord { is_write: false, addr: 0x1000, beats: 4 });
+        assert_eq!(t[1], TraceRecord { is_write: true, addr: 4096, beats: 1 });
+        assert_eq!(t[2].beats, 128);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_trace("X 0 1").is_err());
+        assert!(parse_trace("R zz 1").is_err());
+        assert!(parse_trace("R 0 200").is_err());
+        assert!(parse_trace("R").is_err());
+    }
+
+    #[test]
+    fn format_roundtrip() {
+        let t = synth::hot_set(200, 4, 1 << 20, 9);
+        let parsed = parse_trace(&format_trace(&t)).unwrap();
+        assert_eq!(t, parsed);
+    }
+
+    #[test]
+    fn plan_from_uniform_trace() {
+        let t = synth::streaming(100, 8, 1 << 20, 4);
+        let (plan, beats) = plan_from_trace(&t).unwrap();
+        assert_eq!(beats, 8);
+        assert_eq!(plan.len(), 100);
+        assert_eq!(plan.iter().filter(|p| p.is_write).count(), 25);
+    }
+
+    #[test]
+    fn plan_rejects_mixed_lengths() {
+        let t = vec![
+            TraceRecord { is_write: false, addr: 0, beats: 4 },
+            TraceRecord { is_write: false, addr: 64, beats: 8 },
+        ];
+        assert!(plan_from_trace(&t).is_err());
+    }
+
+    #[test]
+    fn synth_shapes_sane() {
+        let s = synth::streaming(64, 4, 1 << 16, 0);
+        assert!(s.iter().all(|r| !r.is_write));
+        let p = synth::pointer_chase(64, 1 << 20, 1);
+        assert!(p.iter().all(|r| r.beats == 1 && r.addr % 64 == 0));
+        let h = synth::hot_set(1000, 4, 1 << 24, 2);
+        let writes = h.iter().filter(|r| r.is_write).count();
+        assert!((200..400).contains(&writes), "~30% writes, got {writes}");
+        // hot set: most accesses within the first 10% of the region
+        let hot = h.iter().filter(|r| r.addr < (1 << 24) / 10).count();
+        assert!(hot > 700, "hot-set concentration {hot}/1000");
+    }
+}

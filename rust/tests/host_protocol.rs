@@ -1,0 +1,154 @@
+//! Host-controller protocol integration tests: full sessions over the
+//! in-memory UART and over a real TCP socket, multi-channel independent
+//! configuration (§II-C: "configuring independently each instantiated
+//! traffic generator"), and statistics consistency between the protocol
+//! and the underlying counters.
+
+use std::io::{BufRead, BufReader, Write};
+
+use ddr4bench::config::{DesignConfig, SpeedBin};
+use ddr4bench::hostctrl::{serve_tcp, HostController};
+use ddr4bench::platform::Platform;
+
+fn host(channels: usize) -> HostController {
+    HostController::new(Platform::new(DesignConfig::with_channels(
+        channels,
+        SpeedBin::Ddr4_1600,
+    )))
+}
+
+fn get_field<'a>(resp: &'a str, key: &str) -> &'a str {
+    resp.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")[..]))
+        .unwrap_or_else(|| panic!("no {key} in `{resp}`"))
+}
+
+#[test]
+fn independent_per_channel_configuration() {
+    let mut h = host(3);
+    // three different patterns on three channels
+    assert!(h.handle_line("CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=512").starts_with("OK"));
+    assert!(h.handle_line("CFG 1 OP=W ADDR=RND SEED=1 BURST=1 BATCH=256").starts_with("OK"));
+    assert!(h.handle_line("CFG 2 OP=M RDPCT=75 ADDR=SEQ BURST=128 BATCH=128").starts_with("OK"));
+    let r = h.handle_line("RUNALL");
+    assert!(r.starts_with("OK RUNALL CHANNELS=3"), "{r}");
+    // per-channel stats reflect their own patterns
+    let s0 = h.handle_line("STATS 0");
+    let s1 = h.handle_line("STATS 1");
+    let s2 = h.handle_line("STATS 2");
+    assert_eq!(get_field(&s0, "RD_TXNS"), "512");
+    assert_eq!(get_field(&s0, "WR_TXNS"), "0");
+    assert_eq!(get_field(&s1, "WR_TXNS"), "256");
+    assert_eq!(get_field(&s1, "RD_TXNS"), "0");
+    let rd2: u64 = get_field(&s2, "RD_TXNS").parse().unwrap();
+    let wr2: u64 = get_field(&s2, "WR_TXNS").parse().unwrap();
+    assert_eq!(rd2 + wr2, 128);
+    assert!(rd2 > wr2, "75% reads: {rd2} vs {wr2}");
+}
+
+#[test]
+fn throughput_via_protocol_matches_direct_run() {
+    // The host-reported RD_GBS must equal what a direct Platform run of
+    // the same pattern measures (same executive underneath).
+    let mut h = host(1);
+    h.handle_line("CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=2048");
+    h.handle_line("RUN 0");
+    let via_protocol: f64 = get_field(&h.handle_line("STATS 0"), "RD_GBS").parse().unwrap();
+
+    let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    let direct = p
+        .run_batch(0, &ddr4bench::config::PatternConfig::seq_read_burst(32, 2048))
+        .unwrap()
+        .read_throughput_gbs();
+    assert!(
+        (via_protocol - direct).abs() < 0.05,
+        "protocol {via_protocol:.3} vs direct {direct:.3}"
+    );
+}
+
+#[test]
+fn verify_flow_reports_mismatches_over_protocol() {
+    let mut h = host(1);
+    h.handle_line("CFG 0 OP=W ADDR=SEQ BURST=4 BATCH=64 REGION=8k VERIFY=1");
+    assert!(h.handle_line("RUN 0").starts_with("OK"));
+    h.handle_line("CFG 0 OP=R ADDR=SEQ BURST=4 BATCH=64 REGION=8k VERIFY=1");
+    assert!(h.handle_line("RUN 0").starts_with("OK"));
+    let s = h.handle_line("STATS 0");
+    assert_eq!(get_field(&s, "MISMATCHES"), "0");
+}
+
+#[test]
+fn malformed_commands_answer_err_and_keep_session() {
+    let mut h = host(1);
+    for bad in [
+        "",
+        "CFG",
+        "CFG 0 BURST=way_too_much",
+        "CFG 0 BURST=200",
+        "RUN x",
+        "RUN 9",
+        "STATS 0", // nothing ran yet
+        "NONSENSE",
+    ] {
+        assert!(h.handle_line(bad).starts_with("ERR"), "`{bad}` should ERR");
+    }
+    // session still alive and functional
+    h.handle_line("CFG 0 OP=R BATCH=64");
+    assert!(h.handle_line("RUN 0").starts_with("OK"));
+}
+
+#[test]
+fn uart_stream_session_transcript() {
+    let mut h = host(1);
+    let script = "INFO\nCFG 0 OP=R BURST=8 BATCH=128\nRUN 0\nSTATS 0\nQUIT\nRUN 0\n";
+    let mut out = Vec::new();
+    h.serve(std::io::Cursor::new(script.as_bytes().to_vec()), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // session ends at QUIT: the trailing RUN never executes
+    assert_eq!(lines.len(), 5, "{lines:?}");
+    assert_eq!(lines[4], "OK BYE");
+}
+
+#[test]
+fn tcp_server_serves_a_real_socket_session() {
+    // The platform (and its PJRT handles) is not Send, so the server runs
+    // on this thread — as on the FPGA, where the host controller is the
+    // single master — and the *client* runs in a helper thread.
+    let listener_host = host(1);
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let client = std::thread::spawn(move || {
+        let mut stream = loop {
+            match std::net::TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+            }
+        };
+        stream.write_all(b"INFO\nCFG 0 OP=W BURST=4 BATCH=128\nRUN 0\nSTATS 0\nQUIT\n").unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().map_while(Result::ok).collect();
+        lines
+    });
+    let host_back = serve_tcp(listener_host, &addr.to_string(), Some(1)).unwrap();
+    let lines = client.join().unwrap();
+    assert_eq!(lines.len(), 5, "{lines:?}");
+    assert!(lines[0].starts_with("OK CHANNELS=1"));
+    assert!(lines[2].starts_with("OK RUN CH=0 TXNS=128"));
+    assert!(lines[3].contains("WR_TXNS=128"));
+    assert_eq!(lines[4], "OK BYE");
+    assert_eq!(host_back.platform().channels(), 1);
+}
+
+#[test]
+fn reset_isolates_channels() {
+    let mut h = host(2);
+    h.handle_line("CFG 0 OP=R BATCH=64");
+    h.handle_line("CFG 1 OP=R BATCH=64");
+    h.handle_line("RUN 0");
+    h.handle_line("RUN 1");
+    assert_eq!(h.handle_line("RESET 0"), "OK RESET");
+    assert!(h.handle_line("STATS 0").starts_with("ERR"), "channel 0 cleared");
+    assert!(h.handle_line("STATS 1").starts_with("OK"), "channel 1 untouched");
+}

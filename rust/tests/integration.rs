@@ -1,0 +1,284 @@
+//! Cross-module integration tests: the full platform (TG → controller →
+//! device) under every run-time configuration axis of the paper's
+//! Table I, plus the paper's qualitative claims as assertions.
+//!
+//! These run without the XLA artifacts (pure-Rust data path); the
+//! artifact-dependent paths live in `runtime_artifacts.rs`.
+
+use ddr4bench::config::{
+    AddrMode, BurstKind, BurstSpec, DesignConfig, OpMix, PatternConfig, Signaling, SpeedBin,
+};
+use ddr4bench::platform::Platform;
+use ddr4bench::report::campaign;
+
+fn platform_1600() -> Platform {
+    Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600))
+}
+
+fn run(platform: &mut Platform, cfg: &PatternConfig) -> ddr4bench::stats::BatchStats {
+    platform.run_batch(0, cfg).expect("batch")
+}
+
+// ------------------------------------------------ full configuration grid
+
+#[test]
+fn every_pattern_axis_combination_completes() {
+    // The whole Table I run-time space (coarse grid): op × addressing ×
+    // burst type × length class × signaling. Every combination must
+    // complete with conserved counters.
+    let mut platform = platform_1600();
+    for op in [OpMix::ReadOnly, OpMix::WriteOnly, OpMix::Mixed { read_pct: 50 }] {
+        for addr in [AddrMode::Sequential, AddrMode::Random { seed: 3 }] {
+            for kind in [BurstKind::Fixed, BurstKind::Incr, BurstKind::Wrap] {
+                for len in [1u32, 4, 16] {
+                    if kind == BurstKind::Wrap && len < 2 {
+                        continue;
+                    }
+                    for sig in
+                        [Signaling::NonBlocking, Signaling::Blocking, Signaling::Aggressive]
+                    {
+                        let mut cfg = PatternConfig::seq_read_burst(len, 64);
+                        cfg.op = op;
+                        cfg.addr = addr;
+                        cfg.burst = BurstSpec { len, kind };
+                        cfg.signaling = sig;
+                        let stats = run(&mut platform, &cfg);
+                        assert_eq!(
+                            stats.counters.rd_txns + stats.counters.wr_txns,
+                            64,
+                            "{op:?}/{addr:?}/{kind:?}/{len}/{sig:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_speed_bins_run_and_order_correctly() {
+    // Faster bins must never be slower on sequential streams.
+    let mut last = 0.0;
+    for speed in SpeedBin::ALL {
+        let mut p = Platform::new(DesignConfig::single_channel(speed));
+        let s = p.run_batch(0, &PatternConfig::seq_read_burst(32, 1024)).unwrap();
+        let gbs = s.read_throughput_gbs();
+        assert!(gbs > last, "{speed}: {gbs:.2} <= previous {last:.2}");
+        last = gbs;
+    }
+}
+
+// ------------------------------------------------------ paper-shape claims
+
+#[test]
+fn paper_shape_table4_holds() {
+    // The headline shapes of Table IV at reduced scale (exact values in
+    // EXPERIMENTS.md): seq ≫ rnd for singles; short bursts ≈2x singles
+    // (seq) and ≈3-4x (rnd); random recovers by medium bursts; reads ≥
+    // writes sequentially.
+    let d = campaign::table4_data(0.05);
+    let (rd, wr) = (d.gbs[0], d.gbs[1]);
+    // seq singles ~3, rnd singles ~0.5
+    assert!(rd[0][0] / rd[1][0] > 4.0, "read seq/rnd singles {:.2}/{:.2}", rd[0][0], rd[1][0]);
+    assert!(wr[0][0] / wr[1][0] > 4.0, "write seq/rnd singles");
+    // short burst speedup
+    let sb = rd[0][1] / rd[0][0];
+    assert!((1.6..=2.6).contains(&sb), "seq SB speedup {sb:.2} (paper ~2x)");
+    let sb_rnd = rd[1][1] / rd[1][0];
+    assert!(sb_rnd > 2.5, "rnd SB speedup {sb_rnd:.2} (paper ~4x)");
+    // random recovery at medium bursts
+    assert!(rd[1][2] > 0.9 * rd[0][2], "rnd MB recovers to ~seq");
+    // sequential reads >= writes
+    for li in 0..4 {
+        assert!(rd[0][li] >= wr[0][li] * 0.98, "read >= write at len idx {li}");
+    }
+}
+
+#[test]
+fn refresh_disabled_vs_enabled_ablation() {
+    // Ablation: the refresh machinery costs visible throughput on long
+    // batches (the §II-C "refresh-related performance degradation").
+    let mut with = platform_1600();
+    let s = with.run_batch(0, &PatternConfig::rnd_read_burst(1, 3000, 5)).unwrap();
+    assert!(s.counters.refresh_stall_dram_cycles > 0, "refresh must fire on long batches");
+    assert!(s.refresh_degradation() > 0.0);
+}
+
+#[test]
+fn blocking_signaling_degrades_most_on_reads() {
+    let mut p = platform_1600();
+    let mut blk = PatternConfig::seq_read_burst(4, 512);
+    blk.signaling = Signaling::Blocking;
+    let b = run(&mut p, &blk).read_throughput_gbs();
+    let nb = run(&mut p, &PatternConfig::seq_read_burst(4, 512)).read_throughput_gbs();
+    assert!(b < nb, "blocking {b:.2} must be slower than non-blocking {nb:.2}");
+}
+
+#[test]
+fn fixed_bursts_hit_single_dram_burst() {
+    // FIXED bursts replay one DRAM burst: DRAM-side work stays constant
+    // while AXI moves len× the data — device read count shows it.
+    let mut p = platform_1600();
+    let mut cfg = PatternConfig::seq_read_burst(8, 256);
+    cfg.burst.kind = BurstKind::Fixed;
+    let s = run(&mut p, &cfg);
+    assert_eq!(s.counters.rd_bytes, 256 * 8 * 32, "AXI bytes count replayed beats");
+}
+
+#[test]
+fn wrap_equals_incr_throughput_when_aligned() {
+    let mut p = platform_1600();
+    let mut wrap = PatternConfig::seq_read_burst(8, 512);
+    wrap.burst.kind = BurstKind::Wrap;
+    let w = run(&mut p, &wrap).read_throughput_gbs();
+    let i = run(&mut p, &PatternConfig::seq_read_burst(8, 512)).read_throughput_gbs();
+    assert!((w - i).abs() / i < 0.05, "aligned WRAP {w:.2} ≈ INCR {i:.2}");
+}
+
+// ------------------------------------------------- multi-batch statefulness
+
+#[test]
+fn memory_contents_persist_across_batches() {
+    let mut p = platform_1600();
+    let region = 256 * 64;
+    let mut w = PatternConfig::seq_write_burst(2, 256);
+    w.verify = true;
+    w.region_bytes = region;
+    run(&mut p, &w);
+    // three read passes, all clean
+    let mut r = PatternConfig::seq_read_burst(2, 256);
+    r.verify = true;
+    r.region_bytes = region;
+    for pass in 0..3 {
+        let s = run(&mut p, &r);
+        assert_eq!(s.counters.mismatches, 0, "pass {pass}");
+    }
+}
+
+#[test]
+fn unwritten_memory_not_counted_as_mismatch() {
+    let mut p = platform_1600();
+    let mut r = PatternConfig::rnd_read_burst(4, 128, 9);
+    r.verify = true;
+    let s = run(&mut p, &r);
+    assert_eq!(s.counters.mismatches, 0, "reads of never-written bursts are not checkable");
+}
+
+#[test]
+fn refresh_phase_continues_across_batches() {
+    // The device's tREFI cadence is platform-lifetime, not per-batch:
+    // many short batches must still accumulate refresh stalls.
+    let mut p = platform_1600();
+    let mut total = 0;
+    for _ in 0..40 {
+        let s = run(&mut p, &PatternConfig::seq_read_burst(8, 128));
+        total += s.counters.refresh_stall_dram_cycles;
+    }
+    assert!(total > 0, "refresh must fire across batch boundaries");
+}
+
+// ------------------------------------------------------------ multi-channel
+
+#[test]
+fn channels_are_independent() {
+    let mut p = Platform::new(DesignConfig::with_channels(2, SpeedBin::Ddr4_1600));
+    // write+verify on channel 0 only; channel 1 unwritten
+    let region = 128 * 64;
+    let mut w = PatternConfig::seq_write_burst(2, 128);
+    w.verify = true;
+    w.region_bytes = region;
+    p.run_batch(0, &w).unwrap();
+    let mut r = PatternConfig::seq_read_burst(2, 128);
+    r.verify = true;
+    r.region_bytes = region;
+    // channel 0 verifies written data; channel 1 has nothing checkable
+    assert_eq!(p.run_batch(0, &r).unwrap().counters.mismatches, 0);
+    assert_eq!(p.run_batch(1, &r).unwrap().counters.mismatches, 0);
+    // fault on channel 0 must not affect channel 1
+    assert!(p.corrupt(0, 0, 0, 1));
+    assert_eq!(p.run_batch(0, &r).unwrap().counters.mismatches, 1);
+    assert_eq!(p.run_batch(1, &r).unwrap().counters.mismatches, 0);
+}
+
+#[test]
+fn aggregate_scaling_within_tolerance_all_speeds() {
+    for speed in [SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400] {
+        let cfg = PatternConfig::seq_read_burst(32, 512);
+        let s1 = {
+            let mut p = Platform::new(DesignConfig::with_channels(1, speed));
+            Platform::aggregate(&p.run_batch_all(&cfg).unwrap()).read_throughput_gbs()
+        };
+        let s3 = {
+            let mut p = Platform::new(DesignConfig::with_channels(3, speed));
+            Platform::aggregate(&p.run_batch_all(&cfg).unwrap()).read_throughput_gbs()
+        };
+        let ratio = s3 / s1;
+        assert!((2.85..=3.15).contains(&ratio), "{speed}: triple/single = {ratio:.2}");
+    }
+}
+
+// ------------------------------------------------------------- trace replay
+
+#[test]
+fn trace_replay_matches_equivalent_pattern() {
+    use ddr4bench::trafficgen::trace;
+    // A pure-sequential-read trace must match the synthetic pattern's
+    // throughput (same executive underneath).
+    let records = trace::synth::streaming(1024, 32, 256 << 20, 0);
+    let mut p = platform_1600();
+    let traced = p.run_trace(0, &records, false).unwrap();
+    let synthetic = p.run_batch(0, &PatternConfig::seq_read_burst(32, 1024)).unwrap();
+    let (a, b) = (traced.read_throughput_gbs(), synthetic.read_throughput_gbs());
+    assert!((a - b).abs() / b < 0.05, "trace {a:.2} vs pattern {b:.2}");
+}
+
+#[test]
+fn trace_shapes_order_as_expected() {
+    use ddr4bench::trafficgen::trace;
+    let mut p = platform_1600();
+    let stream = p
+        .run_trace(0, &trace::synth::streaming(1024, 32, 64 << 20, 0), false)
+        .unwrap()
+        .total_throughput_gbs();
+    let chase = p
+        .run_trace(0, &trace::synth::pointer_chase(1024, 1 << 30, 1), false)
+        .unwrap()
+        .total_throughput_gbs();
+    let hot = p
+        .run_trace(0, &trace::synth::hot_set(1024, 4, 1 << 30, 2), false)
+        .unwrap()
+        .total_throughput_gbs();
+    assert!(stream > hot, "streaming {stream:.2} > hot-set {hot:.2}");
+    assert!(hot > chase, "hot-set {hot:.2} > pointer-chase {chase:.2}");
+}
+
+// ------------------------------------------------------------------- energy
+
+#[test]
+fn energy_stats_populated_and_ordered() {
+    let mut p = platform_1600();
+    let seq = run(&mut p, &PatternConfig::seq_read_burst(32, 2048));
+    let rnd = run(&mut p, &PatternConfig::rnd_read_burst(1, 2048, 3));
+    assert!(seq.energy.total_nj() > 0.0);
+    assert!(seq.pj_per_bit().unwrap() > 0.0);
+    // random traffic costs more energy per bit (row cycles + standby time)
+    assert!(
+        rnd.pj_per_bit().unwrap() > 2.0 * seq.pj_per_bit().unwrap(),
+        "rnd {:.1} vs seq {:.1} pJ/bit",
+        rnd.pj_per_bit().unwrap(),
+        seq.pj_per_bit().unwrap()
+    );
+    // plausible DDR4 channel power range under load
+    let mw = seq.avg_power_mw();
+    assert!((100.0..3000.0).contains(&mw), "{mw:.0} mW");
+}
+
+// ----------------------------------------------------------------- analytic
+
+#[test]
+fn analytic_model_tracks_simulator_shape() {
+    // Model vs simulator on the Table IV grid: every point within 2x and
+    // mean relative error bounded (exact numbers in EXPERIMENTS.md).
+    let (_, mae) = campaign::model_check(0.05);
+    assert!(mae < 0.5, "model MAE vs simulator = {:.2}", mae);
+}

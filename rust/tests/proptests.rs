@@ -1,0 +1,444 @@
+//! Property-based tests over the platform's core invariants, using the
+//! in-tree seeded property kit (`ddr4bench::testkit`; reproduce failures
+//! with `DDR4BENCH_PT_SEED=<seed>`).
+//!
+//! Invariants (DESIGN.md §7):
+//! - address mapping is bijective for every mapping policy;
+//! - AXI WRAP bursts stay inside their container and visit each slot once;
+//! - the DDR4 device never admits a timing-illegal command under random
+//!   command streams (`can_issue` ⊢ `earliest_issue`);
+//! - FR-FCFS never loses or duplicates requests (conservation), and
+//!   same-address requests never reorder;
+//! - batch counters conserve: issued = completed, bytes = txns × size;
+//! - pattern configs round-trip through the host-protocol CFG syntax;
+//! - PRBS expansion is deterministic and never produces a zero word.
+
+use ddr4bench::config::{
+    format_pattern_config, parse_pattern_config, AddrMode, BurstKind, BurstSpec,
+    ControllerParams, DataPattern, DesignConfig, OpMix, PatternConfig, Signaling, SpeedBin,
+};
+use ddr4bench::controller::{MemController, MemRequest};
+use ddr4bench::ddr4::{AddrMapping, Cmd, DdrDevice, DramGeometry, TimingParams};
+use ddr4bench::platform::Platform;
+use ddr4bench::rng::SplitMix64;
+use ddr4bench::testkit::{check, check_shrink};
+use ddr4bench::trafficgen::payload;
+
+#[test]
+fn prop_address_mapping_bijective() {
+    for mapping in [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol] {
+        let mut geo = DramGeometry::profpga_board();
+        geo.mapping = mapping;
+        check(
+            &format!("addr mapping bijective {mapping:?}"),
+            5000,
+            |rng| rng.below(geo.capacity_bytes()),
+            |&addr| {
+                let dec = geo.decode(addr);
+                let enc = geo.encode(dec);
+                if enc != addr & !63 {
+                    return Err(format!("{addr:#x} -> {dec:?} -> {enc:#x}"));
+                }
+                if dec.bank >= geo.banks() || dec.row >= geo.rows || dec.col >= geo.cols {
+                    return Err(format!("decoded fields out of range: {dec:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_distinct_bursts_decode_distinct() {
+    let geo = DramGeometry::profpga_board();
+    check(
+        "distinct bursts decode to distinct locations",
+        3000,
+        |rng| (rng.below(1 << 26) * 64, rng.below(1 << 26) * 64),
+        |&(a, b)| {
+            if a != b && geo.decode(a) == geo.decode(b) {
+                return Err(format!("{a:#x} and {b:#x} collide at {:?}", geo.decode(a)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wrap_burst_in_container_each_slot_once() {
+    check(
+        "WRAP bursts visit each container slot once",
+        2000,
+        |rng| {
+            let len = [2u32, 4, 8, 16][rng.below(4) as usize];
+            let beat = 32u32;
+            let addr = rng.below(1 << 30) & !(beat as u64 - 1);
+            (addr, len)
+        },
+        |&(addr, len)| {
+            let spec = BurstSpec { len, kind: BurstKind::Wrap };
+            let addrs = ddr4bench::axi::beat_addresses(addr, spec, 32);
+            let container = len as u64 * 32;
+            let base = addr / container * container;
+            let mut seen = std::collections::HashSet::new();
+            for a in &addrs {
+                if *a < base || *a >= base + container {
+                    return Err(format!("beat {a:#x} escapes container [{base:#x}, +{container})"));
+                }
+                if !seen.insert(*a) {
+                    return Err(format!("slot {a:#x} visited twice"));
+                }
+            }
+            if seen.len() != len as usize {
+                return Err("not all slots visited".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_device_never_admits_illegal_command() {
+    // Random command streams issued at exactly earliest_issue: every
+    // accepted command must satisfy can_issue, and issuing at
+    // earliest-1 must be rejected (when > current time floor).
+    check(
+        "device timing legality",
+        60,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = SplitMix64::new(seed);
+            let mut dev = DdrDevice::new(
+                TimingParams::for_bin(SpeedBin::Ddr4_2400),
+                DramGeometry::profpga_board(),
+            );
+            let mut now = 0u64;
+            for step in 0..400 {
+                let bank = rng.below(8) as u32;
+                let cmd = match rng.below(4) {
+                    0 => Cmd::Act { bank, row: rng.below(1024) as u32 },
+                    1 => Cmd::Pre { bank },
+                    2 => Cmd::Rd { bank, col: (rng.below(128) * 8) as u32, auto_pre: false },
+                    _ => Cmd::Wr { bank, col: (rng.below(128) * 8) as u32, auto_pre: false },
+                };
+                // structural feasibility first
+                let open = dev.bank(bank).open_row.is_some();
+                let feasible = match cmd {
+                    Cmd::Act { .. } => !open,
+                    Cmd::Pre { .. } | Cmd::Rd { .. } | Cmd::Wr { .. } => open,
+                    _ => true,
+                };
+                if !feasible {
+                    continue;
+                }
+                let at = dev.earliest_issue(cmd).max(now);
+                if !dev.can_issue(cmd, at) {
+                    return Err(format!("step {step}: {cmd} illegal at its earliest {at}"));
+                }
+                let early = dev.earliest_issue(cmd);
+                if early > now && dev.can_issue(cmd, early - 1) {
+                    return Err(format!("step {step}: {cmd} admitted before earliest"));
+                }
+                dev.issue(cmd, at);
+                now = at;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_controller_conserves_requests() {
+    check(
+        "controller conservation",
+        40,
+        |rng| (rng.next_u64(), 1 + rng.below(60)),
+        |&(seed, n)| {
+            let geo = DramGeometry::profpga_board();
+            let mut ctrl = MemController::new(
+                ControllerParams::default(),
+                TimingParams::for_bin(SpeedBin::Ddr4_1600),
+                geo,
+            );
+            let mut rng = SplitMix64::new(seed);
+            let mut pushed = 0u64;
+            let mut done: Vec<ddr4bench::controller::Completion> = Vec::new();
+            let mut now = 0u64;
+            while pushed < n || done.len() < n as usize {
+                if pushed < n {
+                    let is_write = rng.percent(40);
+                    let addr = rng.below(1 << 24) * 64;
+                    let req = MemRequest {
+                        txn_id: pushed,
+                        is_write,
+                        addr: geo.decode(addr),
+                        burst_addr: addr,
+                        beats: 2,
+                        arrival: now,
+                        last_of_txn: true,
+                    };
+                    if ctrl.try_push(req).is_ok() {
+                        pushed += 1;
+                    }
+                }
+                ctrl.tick(now);
+                ctrl.pop_completions(now, &mut done);
+                now += 1;
+                if now > 1_000_000 {
+                    return Err(format!("stalled: {} of {n} completed", done.len()));
+                }
+            }
+            // conservation: every pushed id completes exactly once
+            let mut ids: Vec<u64> = done.iter().map(|c| c.txn_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != n as usize {
+                return Err(format!("{} unique completions for {n} requests", ids.len()));
+            }
+            // and completions are time-ordered
+            for w in done.windows(2) {
+                if w[0].done_at > w[1].done_at {
+                    return Err("completions out of order".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_same_address_never_reorders() {
+    check(
+        "same-address ordering under mixed traffic",
+        30,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let geo = DramGeometry::profpga_board();
+            let mut ctrl = MemController::new(
+                ControllerParams::default(),
+                TimingParams::for_bin(SpeedBin::Ddr4_1600),
+                geo,
+            );
+            let mut rng = SplitMix64::new(seed);
+            // small address pool to force collisions
+            let pool: Vec<u64> = (0..4).map(|i| i * 64).collect();
+            let mut seq = Vec::new(); // (id, addr, is_write) in push order
+            let mut done = Vec::new();
+            let mut now = 0u64;
+            let mut pushed = 0u64;
+            let total = 24;
+            while pushed < total || done.len() < total as usize {
+                if pushed < total {
+                    let addr = pool[rng.below(pool.len() as u64) as usize];
+                    let is_write = rng.percent(50);
+                    let req = MemRequest {
+                        txn_id: pushed,
+                        is_write,
+                        addr: geo.decode(addr),
+                        burst_addr: addr,
+                        beats: 2,
+                        arrival: now,
+                        last_of_txn: true,
+                    };
+                    if ctrl.try_push(req).is_ok() {
+                        seq.push((pushed, addr, is_write));
+                        pushed += 1;
+                    }
+                }
+                ctrl.tick(now);
+                ctrl.pop_completions(now, &mut done);
+                now += 1;
+                if now > 2_000_000 {
+                    return Err("stall".into());
+                }
+            }
+            // For each address: the CAS (≈ done_at) order of its requests
+            // must match push order.
+            for addr in &pool {
+                let pushed_ids: Vec<u64> =
+                    seq.iter().filter(|(_, a, _)| a == addr).map(|(i, _, _)| *i).collect();
+                let mut completed: Vec<(u64, u64)> = done
+                    .iter()
+                    .filter(|c| c.burst_addr == *addr)
+                    .map(|c| (c.done_at, c.txn_id))
+                    .collect();
+                completed.sort_unstable();
+                let completed_ids: Vec<u64> = completed.iter().map(|&(_, id)| id).collect();
+                // write data lands CWL+4 after CAS vs CL+4 for reads, so
+                // compare CAS-equivalent times: reconstruct via latency
+                // classes is overkill — done_at order equals CAS order
+                // within same-address groups because CAS spacing >= tCCD
+                // exceeds the CL-CWL skew only when mixed... use a
+                // relaxed check: no *later-pushed* request may complete
+                // more than the read/write skew earlier.
+                if completed_ids != pushed_ids {
+                    // allow adjacent swaps only when the earlier is a
+                    // write and later a read completing >= skew apart
+                    return Err(format!(
+                        "addr {addr:#x}: push order {pushed_ids:?} vs completion {completed_ids:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch_counters_conserve() {
+    check(
+        "batch counter conservation",
+        12,
+        |rng| {
+            let burst = 1 << rng.below(8); // 1..=128
+            let batch = 16 + rng.below(200) as u32;
+            let random = rng.percent(50);
+            let op = match rng.below(3) {
+                0 => OpMix::ReadOnly,
+                1 => OpMix::WriteOnly,
+                _ => OpMix::Mixed { read_pct: 25 + rng.below(51) as u32 },
+            };
+            let sig = match rng.below(3) {
+                0 => Signaling::NonBlocking,
+                1 => Signaling::Blocking,
+                _ => Signaling::Aggressive,
+            };
+            (burst as u32, batch, random, op.read_pct(), matches!(sig, Signaling::Blocking))
+        },
+        |&(burst, batch, random, read_pct, blocking)| {
+            let op = match read_pct {
+                100 => OpMix::ReadOnly,
+                0 => OpMix::WriteOnly,
+                p => OpMix::Mixed { read_pct: p },
+            };
+            let mut cfg = PatternConfig::seq_read_burst(burst, batch);
+            cfg.op = op;
+            if random {
+                cfg.addr = AddrMode::Random { seed: 77 };
+            }
+            if blocking {
+                cfg.signaling = Signaling::Blocking;
+            }
+            let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+            let stats = platform.run_batch(0, &cfg).map_err(|e| e.to_string())?;
+            let c = &stats.counters;
+            if c.rd_txns + c.wr_txns != batch as u64 {
+                return Err(format!("txns {} + {} != {batch}", c.rd_txns, c.wr_txns));
+            }
+            let txn_bytes = burst as u64 * 32;
+            if c.rd_bytes != c.rd_txns * txn_bytes || c.wr_bytes != c.wr_txns * txn_bytes {
+                return Err("byte counters inconsistent with txn counts".into());
+            }
+            if c.rd_latency.count() != c.rd_txns || c.wr_latency.count() != c.wr_txns {
+                return Err("latency sample count != txn count".into());
+            }
+            if c.total_cycles < c.rd_cycles.max(c.wr_cycles) {
+                return Err("total_cycles < per-direction cycles".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pattern_config_roundtrip() {
+    check(
+        "CFG syntax round-trip",
+        300,
+        |rng| {
+            let mut cfg = PatternConfig::seq_read_burst(1 + rng.below(128) as u32, 1 + rng.below(10_000) as u32);
+            cfg.op = match rng.below(3) {
+                0 => OpMix::ReadOnly,
+                1 => OpMix::WriteOnly,
+                _ => OpMix::Mixed { read_pct: rng.below(101) as u32 },
+            };
+            if rng.percent(50) {
+                cfg.addr = AddrMode::Random { seed: rng.next_u64() >> 1 };
+            }
+            cfg.burst.kind = match rng.below(3) {
+                0 => BurstKind::Fixed,
+                1 => BurstKind::Incr,
+                _ => BurstKind::Wrap,
+            };
+            if cfg.burst.kind == BurstKind::Wrap {
+                cfg.burst.len = 1 << rng.below(5); // keep pow2 (1..16)
+                cfg.burst.len = cfg.burst.len.max(2);
+            }
+            if cfg.burst.kind == BurstKind::Fixed {
+                cfg.burst.len = cfg.burst.len.min(16);
+            }
+            cfg.signaling = match rng.below(3) {
+                0 => Signaling::NonBlocking,
+                1 => Signaling::Blocking,
+                _ => Signaling::Aggressive,
+            };
+            cfg.start_addr = rng.below(1 << 30);
+            cfg.region_bytes = 1 + rng.below(1 << 30);
+            cfg.data = match rng.below(3) {
+                0 => DataPattern::Prbs { seed: rng.next_u32() },
+                1 => DataPattern::Zeros,
+                _ => DataPattern::Constant(rng.next_u32()),
+            };
+            cfg.verify = rng.percent(50);
+            cfg
+        },
+        |cfg| {
+            if cfg.validate().is_err() {
+                return Ok(()); // only valid configs must round-trip
+            }
+            let text = format_pattern_config(cfg);
+            let toks: Vec<&str> = text.split_whitespace().collect();
+            let parsed = parse_pattern_config(&toks).map_err(|e| e.to_string())?;
+            if &parsed != cfg {
+                return Err(format!("{cfg:?} -> `{text}` -> {parsed:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_prbs_deterministic_and_nonzero() {
+    check_shrink(
+        "PRBS expansion deterministic + nonzero",
+        2000,
+        |rng| rng.next_u32(),
+        |&seed| {
+            let a = payload::expand_burst(seed);
+            let b = payload::expand_burst(seed);
+            if a != b {
+                return Err("non-deterministic".into());
+            }
+            if a.iter().any(|&w| w == 0) {
+                return Err(format!("zero word from seed {seed}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_verify_counts_exact_faults() {
+    check(
+        "verify counts exactly the planted faults",
+        200,
+        |rng| (rng.next_u64(), rng.below(50) as usize),
+        |&(seed, nfaults)| {
+            let mut rng = SplitMix64::new(seed);
+            let seeds: Vec<u32> = (0..64).map(|_| rng.next_u32()).collect();
+            let mut data = payload::expand_batch(&seeds);
+            let mut positions = std::collections::HashSet::new();
+            while positions.len() < nfaults {
+                positions.insert(rng.below(data.len() as u64) as usize);
+            }
+            for &p in &positions {
+                data[p] ^= 1 + (rng.next_u32() >> 1);
+            }
+            let got = payload::verify_batch(&seeds, &data);
+            if got != nfaults as u64 {
+                return Err(format!("planted {nfaults}, counted {got}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,156 @@
+//! Integration tests for the PJRT runtime bridge: load the AOT artifacts
+//! (built by `make artifacts`), execute them, and assert bit-exact
+//! agreement with the pure-Rust mirrors — the contract that lets the TG
+//! data path run through XLA.
+//!
+//! These tests require `artifacts/` to exist; they fail with a pointed
+//! message otherwise (run `make artifacts`).
+
+use ddr4bench::analytic::{predict_gbs, BwFeatures};
+use ddr4bench::config::{DesignConfig, OpMix, PatternConfig, SpeedBin};
+use ddr4bench::platform::Platform;
+use ddr4bench::rng::SplitMix64;
+use ddr4bench::runtime::{XlaRuntime, BWMODEL_FEATURES, DATAGEN_BLOCK};
+use ddr4bench::trafficgen::payload;
+
+fn runtime() -> XlaRuntime {
+    let dir = ddr4bench::artifacts_dir();
+    assert!(
+        XlaRuntime::artifacts_present(&dir),
+        "artifacts missing in {dir:?} — run `make artifacts` first"
+    );
+    XlaRuntime::load(&dir).expect("loading artifacts")
+}
+
+#[test]
+fn datagen_matches_rust_mirror_exact_block() {
+    let rt = runtime();
+    let seeds: Vec<u32> = (0..DATAGEN_BLOCK as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    let xla = rt.datagen(&seeds).unwrap();
+    let rust = payload::expand_batch(&seeds);
+    assert_eq!(xla.len(), rust.len());
+    assert_eq!(xla, rust, "XLA datagen must be bit-identical to the Rust xorshift mirror");
+}
+
+#[test]
+fn datagen_handles_partial_and_multi_blocks() {
+    let rt = runtime();
+    for n in [1usize, 7, 100, DATAGEN_BLOCK - 1, DATAGEN_BLOCK + 1, 2 * DATAGEN_BLOCK + 13] {
+        let seeds: Vec<u32> = (0..n as u32).map(|i| i ^ 0xABCD_1234).collect();
+        let xla = rt.datagen(&seeds).unwrap();
+        assert_eq!(xla, payload::expand_batch(&seeds), "n={n}");
+    }
+}
+
+#[test]
+fn datagen_zero_seed_remap_matches() {
+    let rt = runtime();
+    let seeds = vec![0u32, 1, 0, 0xFFFF_FFFF];
+    let xla = rt.datagen(&seeds).unwrap();
+    assert_eq!(xla, payload::expand_batch(&seeds));
+    // zero seeds expand to the remapped golden-ratio stream, never zeros
+    assert!(xla.iter().all(|&w| w != 0));
+}
+
+#[test]
+fn verify_zero_mismatches_on_clean_data() {
+    let rt = runtime();
+    let seeds: Vec<u32> = (1..=1000u32).collect();
+    let data = payload::expand_batch(&seeds);
+    assert_eq!(rt.verify(&seeds, &data).unwrap(), 0);
+}
+
+#[test]
+fn verify_counts_planted_faults() {
+    let rt = runtime();
+    let mut rng = SplitMix64::new(99);
+    let seeds: Vec<u32> = (0..5000u32).map(|i| i.wrapping_mul(7919)).collect();
+    let mut data = payload::expand_batch(&seeds);
+    // plant faults at distinct positions
+    let mut positions = std::collections::HashSet::new();
+    while positions.len() < 37 {
+        positions.insert(rng.below(data.len() as u64) as usize);
+    }
+    for &p in &positions {
+        data[p] ^= 1 + (rng.next_u32() & 0xFFFF);
+    }
+    assert_eq!(rt.verify(&seeds, &data).unwrap(), 37);
+    // rust mirror agrees
+    assert_eq!(payload::verify_batch(&seeds, &data), 37);
+}
+
+#[test]
+fn verify_partial_block_padding_correct() {
+    let rt = runtime();
+    // padding rows must contribute exactly zero to the reported count
+    for n in [1usize, 3, 511, 4097] {
+        let seeds: Vec<u32> = (0..n as u32).map(|i| i + 17).collect();
+        let data = payload::expand_batch(&seeds);
+        assert_eq!(rt.verify(&seeds, &data).unwrap(), 0, "n={n}");
+    }
+}
+
+#[test]
+fn bwmodel_matches_rust_analytic() {
+    let rt = runtime();
+    assert!(rt.has_bwmodel(), "bwmodel artifact missing");
+    // grid over the paper's configuration space
+    let mut feats = Vec::new();
+    let mut expected = Vec::new();
+    for speed in [SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400] {
+        for len in [1u32, 4, 32, 128] {
+            for (random, read_frac) in [(false, 1.0f32), (true, 1.0), (false, 0.0), (true, 0.5)] {
+                let mut cfg = PatternConfig::seq_read_burst(len, 1);
+                cfg.addr = if random {
+                    ddr4bench::config::AddrMode::Random { seed: 0 }
+                } else {
+                    ddr4bench::config::AddrMode::Sequential
+                };
+                let op = if read_frac >= 0.999 {
+                    OpMix::ReadOnly
+                } else if read_frac <= 0.001 {
+                    OpMix::WriteOnly
+                } else {
+                    OpMix::Mixed { read_pct: (read_frac * 100.0) as u32 }
+                };
+                cfg.op = op;
+                let f = BwFeatures::from_config(speed, &cfg, 32, 2, 4, 8);
+                feats.extend_from_slice(&f.to_row());
+                expected.push(predict_gbs(&f, op));
+            }
+        }
+    }
+    let preds = rt.bwmodel(&feats).unwrap();
+    assert_eq!(preds.len(), expected.len());
+    assert_eq!(preds.len() * BWMODEL_FEATURES, feats.len());
+    for (i, (p, e)) in preds.iter().zip(expected.iter()).enumerate() {
+        let rel = (p - e).abs() / e.max(1e-6);
+        assert!(rel < 0.02, "row {i}: XLA {p} vs rust {e} (rel {rel:.4})");
+    }
+}
+
+#[test]
+fn platform_with_runtime_verifies_through_xla() {
+    // End-to-end: write-then-read with the XLA data path on, clean memory
+    // verifies clean, injected fault is detected — all three layers
+    // composing.
+    let rt = runtime();
+    let mut platform =
+        Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600)).with_runtime(rt);
+    let region = 128 * 4 * 32;
+    let mut w = PatternConfig::seq_write_burst(4, 128);
+    w.verify = true;
+    w.region_bytes = region;
+    let ws = platform.run_batch(0, &w).unwrap();
+    assert_eq!(ws.counters.mismatches, 0);
+
+    let mut r = PatternConfig::seq_read_burst(4, 128);
+    r.verify = true;
+    r.region_bytes = region;
+    let rs = platform.run_batch(0, &r).unwrap();
+    assert_eq!(rs.counters.mismatches, 0, "clean read-back through XLA verify");
+
+    assert!(platform.corrupt(0, 64, 7, 0xDEAD_0000));
+    let rs2 = platform.run_batch(0, &r).unwrap();
+    assert_eq!(rs2.counters.mismatches, 1, "XLA verify detects the injected fault");
+}
