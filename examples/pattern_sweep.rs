@@ -1,0 +1,66 @@
+//! Access-pattern engine showcase + parallel campaign sweep.
+//!
+//! Part 1 runs each of the engine's address modes on one platform and
+//! prints the throughput ladder they produce (sequential fastest, the
+//! dependent pointer chase slowest). Part 2 hands the full Fig. 2
+//! data-rate grid (2 speeds × 2 channel counts × 3 adversarial patterns
+//! = 12 jobs) to the work-stealing sweep executive and prints its
+//! summary table.
+//!
+//! ```text
+//! cargo run --release --example pattern_sweep
+//! cargo run --release --example pattern_sweep -- --write  # also emit sweep-out/
+//! ```
+
+use ddr4bench::config::{AddrMode, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::platform::sweep::{run_sweep, summary_table, write_artifacts, SweepSpec};
+use ddr4bench::platform::Platform;
+
+fn main() -> anyhow::Result<()> {
+    // --- part 1: the pattern ladder on a single DDR4-1600 channel -------
+    let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    let batch = 1024;
+    let patterns: Vec<(&str, PatternConfig)> = vec![
+        ("sequential singles", PatternConfig::seq_read_burst(1, batch)),
+        ("strided (one row, 64 KiB)", PatternConfig::strided_read(64 << 10, 1, batch)),
+        ("uniform random", PatternConfig::rnd_read_burst(1, batch, 0xF00D)),
+        ("bank conflict", PatternConfig::bank_conflict_read(1, batch, 1)),
+        ("pointer chase (dependent)", PatternConfig::pointer_chase_read(4 << 20, batch, 7)),
+        ("phased seq->rnd", {
+            let mut p = PatternConfig::seq_read_burst(1, batch);
+            p.addr = AddrMode::Phased(vec![
+                (AddrMode::Sequential, 256),
+                (AddrMode::Random { seed: 0xF00D }, 256),
+            ]);
+            p
+        }),
+    ];
+    println!("pattern ladder (single-channel DDR4-1600, single-beat reads):");
+    for (name, cfg) in &patterns {
+        let s = platform.run_batch(0, cfg)?;
+        println!(
+            "  {name:<28} {:>6.2} GB/s  (mean latency {:>6.0} ns)",
+            s.read_throughput_gbs(),
+            s.read_latency_ns()
+        );
+    }
+
+    // --- part 2: the parallel campaign sweep ----------------------------
+    let spec = SweepSpec::paper_grid();
+    let jobs = spec.expand();
+    println!(
+        "\nsweep: {} jobs ({:?} x {:?} channels x {} patterns)",
+        jobs.len(),
+        spec.speeds.iter().map(|s| s.data_rate_mts()).collect::<Vec<_>>(),
+        spec.channels,
+        spec.patterns.len()
+    );
+    let outcomes = run_sweep(jobs, 4)?;
+    println!("{}", summary_table(&outcomes).ascii());
+
+    if std::env::args().any(|a| a == "--write") {
+        let summary = write_artifacts(&outcomes, std::path::Path::new("sweep-out"))?;
+        println!("artifacts written; summary at {}", summary.display());
+    }
+    Ok(())
+}

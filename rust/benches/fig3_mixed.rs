@@ -26,7 +26,7 @@ fn main() {
             let s = campaign::run_point(
                 &mut platform,
                 OpMix::Mixed { read_pct: 50 },
-                addr,
+                &addr,
                 128,
                 scale,
             );
@@ -38,12 +38,12 @@ fn main() {
 
     // mixed > pure check (SIII-C)
     let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
-    let pure = campaign::run_point(&mut p, OpMix::ReadOnly, AddrMode::Sequential, 128, scale)
+    let pure = campaign::run_point(&mut p, OpMix::ReadOnly, &AddrMode::Sequential, 128, scale)
         .read_throughput_gbs();
     let mixed = campaign::run_point(
         &mut p,
         OpMix::Mixed { read_pct: 50 },
-        AddrMode::Sequential,
+        &AddrMode::Sequential,
         128,
         scale,
     )

@@ -35,7 +35,7 @@ fn main() {
                     txns,
                     "txn",
                     || {
-                        let s = campaign::run_point(&mut platform, op, addr, len, scale);
+                        let s = campaign::run_point(&mut platform, op, &addr, len, scale);
                         std::hint::black_box(campaign::gbs_of(op, &s));
                     },
                 );

@@ -61,7 +61,10 @@ impl BwFeatures {
         Self {
             data_rate_mts: speed.data_rate_mts() as f32,
             burst_len: cfg.burst.len as f32,
-            random: if cfg.addr.is_random() { 1.0 } else { 0.0 },
+            // Bank conflicts and pointer chases defeat the row buffer the
+            // same way uniform random does; the model folds them into the
+            // row-miss service time.
+            random: if cfg.addr.row_hostile() { 1.0 } else { 0.0 },
             read_frac: cfg.op.read_pct() as f32 / 100.0,
             beat_bytes: beat_bytes as f32,
             addr_interval: addr_interval as f32,

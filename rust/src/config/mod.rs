@@ -19,7 +19,8 @@
 mod parse;
 
 pub use parse::{
-    format_pattern_config, parse_design_config, parse_pattern_config, ConfigError,
+    format_pattern_config, parse_design_config, parse_kv_text, parse_pattern_config,
+    parse_u64_with_suffix, ConfigError,
 };
 
 use crate::ddr4::geometry::DramGeometry;
@@ -320,28 +321,147 @@ impl OpMix {
     }
 }
 
-/// Addressing mode (run-time parameter).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Addressing mode (run-time parameter) — the access-pattern engine.
+///
+/// The first two variants are the paper's Table I; the rest extend the
+/// engine with the pattern families that actually expose controller
+/// behaviour (strided walks, adversarial bank conflicts, dependent
+/// pointer chases, and multi-phase compositions). All of them are
+/// selectable at run time through the config-file/CLI syntax and the
+/// host-controller `CFG` command (see [`parse_pattern_config`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AddrMode {
     /// Sequential: consecutive transactions target consecutive addresses.
     Sequential,
     /// Random: each transaction targets a uniformly random, burst-aligned
     /// address in the test region; `seed` makes runs reproducible.
     Random { seed: u64 },
+    /// Strided: each transaction advances `stride` bytes (rounded up to
+    /// the transaction alignment), wrapping inside the test region.
+    /// Strides at or beyond the DRAM row span turn every access into a
+    /// row miss while staying perfectly predictable.
+    Strided { stride: u64 },
+    /// Bank conflict: an adversarial stream derived from the DRAM
+    /// geometry — successive transactions hit the *same* bank in
+    /// *different* rows, defeating both bank-level parallelism and the
+    /// row buffer (the worst case for an open-page controller).
+    BankConflict { seed: u64 },
+    /// Pointer chase: a dependent, graph-like walk over a `working_set`-
+    /// byte region. Each address is derived from the previous one via a
+    /// full-period permutation, so the chase visits every slot of the
+    /// working set exactly once per cycle. Pair with
+    /// [`Signaling::Blocking`] to model true load-to-load dependence.
+    PointerChase { seed: u64, working_set: u64 },
+    /// Phased: run each inner mode for its transaction count, cycling
+    /// through the list (e.g. a sequential warm-up phase followed by a
+    /// random steady state). One level deep: phases cannot nest.
+    Phased(Vec<(AddrMode, u32)>),
 }
 
 impl AddrMode {
-    /// Short label used in reports ("Seq"/"Rnd").
-    pub fn label(self) -> &'static str {
+    /// Smallest test region on which the bank-conflict stream can honour
+    /// its row-miss guarantee: two same-bank row windows, i.e.
+    /// `2 × banks × row_bytes` = 2 × 8 × 8 KiB = 128 KiB on the modeled
+    /// proFPGA board. Smaller regions would silently degenerate to one
+    /// repeated (row-hit) address, so [`PatternConfig::validate`] rejects
+    /// them instead.
+    pub const BANK_CONFLICT_MIN_REGION: u64 = 128 << 10;
+
+    /// Does this mode (or any phase of it) use bank-conflict addressing?
+    pub fn uses_bank_conflict(&self) -> bool {
         match self {
-            AddrMode::Sequential => "Seq",
-            AddrMode::Random { .. } => "Rnd",
+            AddrMode::BankConflict { .. } => true,
+            AddrMode::Phased(phases) => phases.iter().any(|(m, _)| m.uses_bank_conflict()),
+            _ => false,
         }
     }
 
-    /// Is this the random mode?
-    pub fn is_random(self) -> bool {
+    /// Short label used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AddrMode::Sequential => "Seq",
+            AddrMode::Random { .. } => "Rnd",
+            AddrMode::Strided { .. } => "Strd",
+            AddrMode::BankConflict { .. } => "Bank",
+            AddrMode::PointerChase { .. } => "Chase",
+            AddrMode::Phased(_) => "Phase",
+        }
+    }
+
+    /// Is this the uniformly-random mode?
+    pub fn is_random(&self) -> bool {
         matches!(self, AddrMode::Random { .. })
+    }
+
+    /// Does the mode defeat row-buffer locality? Used by the analytic
+    /// bandwidth model to pick the row-miss service time: random, bank
+    /// conflicts and pointer chases always do; strides do once they skip
+    /// a full DRAM row (8 KiB on the modeled board); phased patterns do
+    /// if any phase does.
+    pub fn row_hostile(&self) -> bool {
+        match self {
+            AddrMode::Sequential => false,
+            AddrMode::Random { .. }
+            | AddrMode::BankConflict { .. }
+            | AddrMode::PointerChase { .. } => true,
+            AddrMode::Strided { stride } => *stride >= 8192,
+            AddrMode::Phased(phases) => phases.iter().any(|(m, _)| m.row_hostile()),
+        }
+    }
+
+    /// Seed for the op-mix RNG of the transaction planner. Preserves the
+    /// historical values for `Sequential`/`Random` so existing plans stay
+    /// bit-identical.
+    pub fn plan_seed(&self) -> u64 {
+        match self {
+            AddrMode::Sequential => 0x5EED,
+            AddrMode::Random { seed } => seed ^ 0xA5A5_5A5A,
+            AddrMode::Strided { stride } => 0x57A1_DE00 ^ stride.rotate_left(17),
+            AddrMode::BankConflict { seed } => seed ^ 0x00BA_4C0F,
+            AddrMode::PointerChase { seed, working_set } => {
+                seed ^ working_set.rotate_left(32) ^ 0xC4A5E
+            }
+            AddrMode::Phased(phases) => phases
+                .iter()
+                .fold(0x0F_A5ED, |h, (m, n)| h.rotate_left(7) ^ m.plan_seed() ^ *n as u64),
+        }
+    }
+
+    /// Validate mode-specific invariants (positive stride/working set,
+    /// non-empty single-level phases with non-zero counts).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        match self {
+            AddrMode::Sequential | AddrMode::Random { .. } | AddrMode::BankConflict { .. } => {
+                Ok(())
+            }
+            AddrMode::Strided { stride } => {
+                if *stride == 0 {
+                    return Err(ConfigError::new("strided mode requires stride > 0"));
+                }
+                Ok(())
+            }
+            AddrMode::PointerChase { working_set, .. } => {
+                if *working_set == 0 {
+                    return Err(ConfigError::new("pointer chase requires working_set > 0"));
+                }
+                Ok(())
+            }
+            AddrMode::Phased(phases) => {
+                if phases.is_empty() {
+                    return Err(ConfigError::new("phased mode requires at least one phase"));
+                }
+                for (mode, txns) in phases {
+                    if *txns == 0 {
+                        return Err(ConfigError::new("phase transaction counts must be >= 1"));
+                    }
+                    if matches!(mode, AddrMode::Phased(_)) {
+                        return Err(ConfigError::new("phases cannot nest"));
+                    }
+                    mode.validate()?;
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -517,6 +637,40 @@ impl PatternConfig {
         Self::base(OpMix::Mixed { read_pct: 50 }, addr, BurstSpec::incr(burst_len), batch_len)
     }
 
+    /// Strided read pattern (`stride` bytes between transaction starts).
+    pub fn strided_read(stride: u64, burst_len: u32, batch_len: u32) -> Self {
+        Self::base(
+            OpMix::ReadOnly,
+            AddrMode::Strided { stride },
+            BurstSpec::incr(burst_len),
+            batch_len,
+        )
+    }
+
+    /// Adversarial same-bank row-miss read pattern.
+    pub fn bank_conflict_read(burst_len: u32, batch_len: u32, seed: u64) -> Self {
+        Self::base(
+            OpMix::ReadOnly,
+            AddrMode::BankConflict { seed },
+            BurstSpec::incr(burst_len),
+            batch_len,
+        )
+    }
+
+    /// Dependent pointer-chase read pattern over `working_set` bytes
+    /// (blocking signaling, so each access waits for the previous one —
+    /// the load-to-load dependence of a real chase).
+    pub fn pointer_chase_read(working_set: u64, batch_len: u32, seed: u64) -> Self {
+        let mut p = Self::base(
+            OpMix::ReadOnly,
+            AddrMode::PointerChase { seed, working_set },
+            BurstSpec::single(),
+            batch_len,
+        );
+        p.signaling = Signaling::Blocking;
+        p
+    }
+
     /// Bytes moved by one transaction given the AXI beat size.
     pub fn txn_bytes(&self, beat_bytes: u32) -> u64 {
         self.burst.len as u64 * beat_bytes as u64
@@ -546,6 +700,16 @@ impl PatternConfig {
         }
         if self.region_bytes == 0 {
             return Err(ConfigError::new("region_bytes must be > 0"));
+        }
+        self.addr.validate()?;
+        if self.addr.uses_bank_conflict()
+            && self.region_bytes < AddrMode::BANK_CONFLICT_MIN_REGION
+        {
+            return Err(ConfigError::new(format!(
+                "bank-conflict mode needs region_bytes >= {} (2 x banks x row_bytes), got {}",
+                AddrMode::BANK_CONFLICT_MIN_REGION,
+                self.region_bytes
+            )));
         }
         Ok(())
     }
@@ -640,5 +804,81 @@ mod tests {
         assert_eq!(BurstSpec::incr(4).paper_label(), "SB");
         assert_eq!(BurstSpec::incr(32).paper_label(), "MB");
         assert_eq!(BurstSpec::incr(128).paper_label(), "LB");
+    }
+
+    #[test]
+    fn addr_mode_labels_and_row_hostility() {
+        assert_eq!(AddrMode::Sequential.label(), "Seq");
+        assert_eq!(AddrMode::Strided { stride: 64 }.label(), "Strd");
+        assert_eq!(AddrMode::BankConflict { seed: 0 }.label(), "Bank");
+        assert_eq!(AddrMode::PointerChase { seed: 0, working_set: 64 }.label(), "Chase");
+        assert_eq!(AddrMode::Phased(vec![(AddrMode::Sequential, 1)]).label(), "Phase");
+        assert!(!AddrMode::Sequential.row_hostile());
+        assert!(!AddrMode::Strided { stride: 64 }.row_hostile());
+        assert!(AddrMode::Strided { stride: 8192 }.row_hostile());
+        assert!(AddrMode::BankConflict { seed: 0 }.row_hostile());
+        assert!(AddrMode::PointerChase { seed: 0, working_set: 64 }.row_hostile());
+        assert!(AddrMode::Phased(vec![
+            (AddrMode::Sequential, 8),
+            (AddrMode::Random { seed: 1 }, 8)
+        ])
+        .row_hostile());
+    }
+
+    #[test]
+    fn addr_mode_validation_rules() {
+        let mut p = PatternConfig::strided_read(4096, 4, 16);
+        assert!(p.validate().is_ok());
+        p.addr = AddrMode::Strided { stride: 0 };
+        assert!(p.validate().is_err());
+        p.addr = AddrMode::PointerChase { seed: 1, working_set: 0 };
+        assert!(p.validate().is_err());
+        p.addr = AddrMode::Phased(vec![]);
+        assert!(p.validate().is_err());
+        p.addr = AddrMode::Phased(vec![(AddrMode::Sequential, 0)]);
+        assert!(p.validate().is_err());
+        p.addr = AddrMode::Phased(vec![(AddrMode::Phased(vec![(AddrMode::Sequential, 1)]), 4)]);
+        assert!(p.validate().is_err());
+        p.addr = AddrMode::Phased(vec![
+            (AddrMode::Sequential, 32),
+            (AddrMode::BankConflict { seed: 2 }, 32),
+        ]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn bank_conflict_requires_room_for_two_rows() {
+        let mut p = PatternConfig::bank_conflict_read(1, 64, 1);
+        assert!(p.validate().is_ok(), "default 256 MiB region is fine");
+        p.region_bytes = AddrMode::BANK_CONFLICT_MIN_REGION;
+        assert!(p.validate().is_ok(), "exactly two row windows is the floor");
+        p.region_bytes = AddrMode::BANK_CONFLICT_MIN_REGION - 1;
+        assert!(p.validate().is_err(), "too small to guarantee row misses");
+        // the check sees through phases too
+        p.addr = AddrMode::Phased(vec![
+            (AddrMode::Sequential, 8),
+            (AddrMode::BankConflict { seed: 0 }, 8),
+        ]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn plan_seed_stable_for_paper_modes() {
+        // Historical constants: changing them would silently re-plan every
+        // existing Seq/Rnd campaign.
+        assert_eq!(AddrMode::Sequential.plan_seed(), 0x5EED);
+        assert_eq!(AddrMode::Random { seed: 0 }.plan_seed(), 0xA5A5_5A5A);
+        // distinct modes get distinct mix streams
+        let a = AddrMode::Strided { stride: 4096 }.plan_seed();
+        let b = AddrMode::BankConflict { seed: 0 }.plan_seed();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn pointer_chase_preset_is_blocking_single() {
+        let p = PatternConfig::pointer_chase_read(1 << 20, 256, 7);
+        assert_eq!(p.signaling, Signaling::Blocking);
+        assert_eq!(p.burst.len, 1);
+        assert!(p.validate().is_ok());
     }
 }

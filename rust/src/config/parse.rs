@@ -88,6 +88,7 @@ fn get_bool(map: &BTreeMap<String, String>, key: &str, default: bool) -> Result<
 }
 
 /// Parse `123`, `4k`, `16m`, `2g` (binary suffixes) into bytes/counts.
+/// Values whose suffixed product exceeds `u64::MAX` parse as `None`.
 pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
     let s = s.trim().to_ascii_lowercase();
     let (num, mult) = if let Some(n) = s.strip_suffix('k') {
@@ -99,7 +100,7 @@ pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
     } else {
         (s.as_str(), 1)
     };
-    num.trim().parse::<u64>().ok().map(|v| v * mult)
+    num.trim().parse::<u64>().ok().and_then(|v| v.checked_mul(mult))
 }
 
 /// Build a [`DesignConfig`] from config text. Recognized keys (all
@@ -159,15 +160,25 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
 /// host-controller `CFG` command uses (§II-C):
 ///
 /// ```text
-/// OP=R|W|M  RDPCT=50  ADDR=SEQ|RND  SEED=7  BURST=32  TYPE=FIXED|INCR|WRAP
-/// SIG=NB|BLK|AGR  BATCH=4096  START=0  REGION=256m  DATA=PRBS|ZEROS|<hex>
-/// VERIFY=0|1
+/// OP=R|W|M  RDPCT=50  ADDR=SEQ|RND|STRIDE|BANK|CHASE|PHASED  SEED=7
+/// STRIDE=8k  WSET=1m  PHASES=SEQ@512,RND@512  BURST=32
+/// TYPE=FIXED|INCR|WRAP  SIG=NB|BLK|AGR  BATCH=4096  START=0  REGION=256m
+/// DATA=PRBS|ZEROS|<hex>  VERIFY=0|1
 /// ```
+///
+/// Pattern parameters are order-independent: `SEED`, `STRIDE` and `WSET`
+/// apply to whichever `ADDR` mode is selected (and to every phase of
+/// `ADDR=PHASED`, whose `PHASES` list is comma-separated `MODE@TXNS`
+/// entries using the same mode names, `PHASED` itself excluded).
 pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigError> {
     let mut p = PatternConfig::default();
     let mut read_pct: Option<u32> = None;
     let mut seed: u64 = 0xD0D0_CAFE;
     let mut data_seed: u32 = 1;
+    let mut stride: u64 = 4096;
+    let mut wset: u64 = 1 << 20;
+    let mut addr_kind: Option<String> = None;
+    let mut phases_spec: Option<String> = None;
     for tok in tokens {
         let (k, v) = tok
             .split_once('=')
@@ -193,19 +204,24 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
                     p.op = OpMix::Mixed { read_pct: pct };
                 }
             }
-            "ADDR" => {
-                p.addr = match upval.as_str() {
-                    "SEQ" | "SEQUENTIAL" => AddrMode::Sequential,
-                    "RND" | "RANDOM" => AddrMode::Random { seed },
-                    _ => return Err(ConfigError::new(format!("ADDR: unknown `{val}`"))),
-                }
-            }
+            // Mode-name validation happens once, in `build_addr_mode`.
+            "ADDR" => addr_kind = Some(upval.clone()),
             "SEED" => {
                 seed = parse_u64_with_suffix(val)
                     .ok_or_else(|| ConfigError::new(format!("SEED: expected int, got `{val}`")))?;
-                if let AddrMode::Random { .. } = p.addr {
-                    p.addr = AddrMode::Random { seed };
-                }
+            }
+            "STRIDE" => {
+                stride = parse_u64_with_suffix(val).ok_or_else(|| {
+                    ConfigError::new(format!("STRIDE: expected bytes, got `{val}`"))
+                })?;
+            }
+            "WSET" => {
+                wset = parse_u64_with_suffix(val).ok_or_else(|| {
+                    ConfigError::new(format!("WSET: expected bytes, got `{val}`"))
+                })?;
+            }
+            "PHASES" => {
+                phases_spec = Some(val.to_string());
             }
             "BURST" | "LEN" => {
                 p.burst.len = val
@@ -270,13 +286,130 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
             _ => return Err(ConfigError::new(format!("unknown pattern key `{k}`"))),
         }
     }
+    if let Some(kind) = &addr_kind {
+        if phases_spec.is_some() && kind != "PHASED" {
+            return Err(ConfigError::new(format!(
+                "PHASES requires ADDR=PHASED, not ADDR={kind}"
+            )));
+        }
+        p.addr = build_addr_mode(kind, seed, stride, wset, phases_spec.as_deref())?;
+    } else if phases_spec.is_some() {
+        return Err(ConfigError::new("PHASES requires ADDR=PHASED"));
+    }
     p.validate()?;
     Ok(p)
 }
 
+/// Construct an [`AddrMode`] from its (uppercased) syntax name and the
+/// shared pattern parameters.
+fn build_addr_mode(
+    kind: &str,
+    seed: u64,
+    stride: u64,
+    wset: u64,
+    phases: Option<&str>,
+) -> Result<AddrMode, ConfigError> {
+    Ok(match kind {
+        "SEQ" | "SEQUENTIAL" => AddrMode::Sequential,
+        "RND" | "RANDOM" => AddrMode::Random { seed },
+        "STRIDE" | "STRIDED" => AddrMode::Strided { stride },
+        "BANK" | "BANKCONFLICT" => AddrMode::BankConflict { seed },
+        "CHASE" | "POINTERCHASE" => AddrMode::PointerChase { seed, working_set: wset },
+        "PHASED" => {
+            let spec = phases
+                .ok_or_else(|| ConfigError::new("ADDR=PHASED requires PHASES=MODE@TXNS,.."))?;
+            let mut list = Vec::new();
+            for part in spec.split(',') {
+                let (m, n) = part.split_once('@').ok_or_else(|| {
+                    ConfigError::new(format!("PHASES: expected MODE@TXNS, got `{part}`"))
+                })?;
+                let sub = m.trim().to_ascii_uppercase();
+                if sub == "PHASED" {
+                    return Err(ConfigError::new("PHASES: phases cannot nest"));
+                }
+                let txns = parse_u64_with_suffix(n).ok_or_else(|| {
+                    ConfigError::new(format!("PHASES: bad transaction count `{n}`"))
+                })?;
+                if txns == 0 || txns > u32::MAX as u64 {
+                    return Err(ConfigError::new(format!(
+                        "PHASES: transaction count `{n}` out of range 1..={}",
+                        u32::MAX
+                    )));
+                }
+                list.push((build_addr_mode(&sub, seed, stride, wset, None)?, txns as u32));
+            }
+            AddrMode::Phased(list)
+        }
+        other => return Err(ConfigError::new(format!("ADDR: unknown `{other}`"))),
+    })
+}
+
+/// The syntax name of an address mode (phase-list entries use the same
+/// names).
+fn addr_kind_name(mode: &AddrMode) -> &'static str {
+    match mode {
+        AddrMode::Sequential => "SEQ",
+        AddrMode::Random { .. } => "RND",
+        AddrMode::Strided { .. } => "STRIDE",
+        AddrMode::BankConflict { .. } => "BANK",
+        AddrMode::PointerChase { .. } => "CHASE",
+        AddrMode::Phased(_) => "PHASED",
+    }
+}
+
+/// Append the `ADDR=..` (and parameter) tokens for `mode` to `s`. For
+/// `Phased`, the shared `SEED`/`STRIDE`/`WSET` values are taken from the
+/// first phase that uses each — the host syntax shares one value of each
+/// parameter across phases, so phased configs whose phases disagree on a
+/// parameter cannot be represented exactly and format to the first
+/// phase's value.
+fn format_addr_mode(s: &mut String, mode: &AddrMode) {
+    match mode {
+        AddrMode::Sequential => s.push_str(" ADDR=SEQ"),
+        AddrMode::Random { seed } => s.push_str(&format!(" ADDR=RND SEED={seed}")),
+        AddrMode::Strided { stride } => s.push_str(&format!(" ADDR=STRIDE STRIDE={stride}")),
+        AddrMode::BankConflict { seed } => s.push_str(&format!(" ADDR=BANK SEED={seed}")),
+        AddrMode::PointerChase { seed, working_set } => {
+            s.push_str(&format!(" ADDR=CHASE SEED={seed} WSET={working_set}"));
+        }
+        AddrMode::Phased(phases) => {
+            let list: Vec<String> = phases
+                .iter()
+                .map(|(m, n)| format!("{}@{}", addr_kind_name(m), n))
+                .collect();
+            s.push_str(&format!(" ADDR=PHASED PHASES={}", list.join(",")));
+            let seed = phases.iter().find_map(|(m, _)| match m {
+                AddrMode::Random { seed }
+                | AddrMode::BankConflict { seed }
+                | AddrMode::PointerChase { seed, .. } => Some(*seed),
+                _ => None,
+            });
+            if let Some(seed) = seed {
+                s.push_str(&format!(" SEED={seed}"));
+            }
+            let stride = phases.iter().find_map(|(m, _)| match m {
+                AddrMode::Strided { stride } => Some(*stride),
+                _ => None,
+            });
+            if let Some(stride) = stride {
+                s.push_str(&format!(" STRIDE={stride}"));
+            }
+            let wset = phases.iter().find_map(|(m, _)| match m {
+                AddrMode::PointerChase { working_set, .. } => Some(*working_set),
+                _ => None,
+            });
+            if let Some(wset) = wset {
+                s.push_str(&format!(" WSET={wset}"));
+            }
+        }
+    }
+}
+
 /// Render a [`PatternConfig`] back to the `CFG` token syntax (used by the
 /// host protocol echo and for logging). `parse_pattern_config` of the
-/// output reproduces the config (round-trip property-tested).
+/// output reproduces the config (round-trip property-tested; the one
+/// exception is `Phased` whose phases disagree on a shared parameter —
+/// see [`format_addr_mode`]).
 pub fn format_pattern_config(p: &PatternConfig) -> String {
     let mut s = String::new();
     match p.op {
@@ -287,10 +420,7 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
             s.push_str(&format!(" RDPCT={read_pct}"));
         }
     }
-    match p.addr {
-        AddrMode::Sequential => s.push_str(" ADDR=SEQ"),
-        AddrMode::Random { seed } => s.push_str(&format!(" ADDR=RND SEED={seed}")),
-    }
+    format_addr_mode(&mut s, &p.addr);
     s.push_str(&format!(" BURST={} TYPE={}", p.burst.len, p.burst.kind.label()));
     s.push_str(&format!(" SIG={}", p.signaling.label()));
     s.push_str(&format!(" BATCH={}", p.batch_len));
@@ -354,6 +484,10 @@ mod tests {
         assert_eq!(parse_u64_with_suffix("16M"), Some(16 << 20));
         assert_eq!(parse_u64_with_suffix("2g"), Some(2 << 30));
         assert_eq!(parse_u64_with_suffix("x"), None);
+        // suffixed overflow must be rejected, not wrapped
+        assert_eq!(parse_u64_with_suffix(&u64::MAX.to_string()), Some(u64::MAX));
+        assert_eq!(parse_u64_with_suffix("18446744073709551615k"), None);
+        assert_eq!(parse_u64_with_suffix("18014398509481985g"), None);
     }
 
     #[test]
@@ -389,6 +523,85 @@ mod tests {
         assert!(parse_pattern_config(&["BURST=12", "TYPE=WRAP"]).is_err());
         assert!(parse_pattern_config(&["NOPE=1"]).is_err());
         assert!(parse_pattern_config(&["OP"]).is_err());
+    }
+
+    #[test]
+    fn pattern_new_modes_parse() {
+        let p = parse_pattern_config(&["ADDR=STRIDE", "STRIDE=8k"]).unwrap();
+        assert_eq!(p.addr, AddrMode::Strided { stride: 8192 });
+        // order-independent: STRIDE may come first
+        let p = parse_pattern_config(&["STRIDE=8k", "ADDR=STRIDED"]).unwrap();
+        assert_eq!(p.addr, AddrMode::Strided { stride: 8192 });
+        let p = parse_pattern_config(&["ADDR=BANK", "SEED=5"]).unwrap();
+        assert_eq!(p.addr, AddrMode::BankConflict { seed: 5 });
+        let p = parse_pattern_config(&["ADDR=CHASE", "SEED=9", "WSET=2m"]).unwrap();
+        assert_eq!(p.addr, AddrMode::PointerChase { seed: 9, working_set: 2 << 20 });
+        // defaults: stride 4096, wset 1 MiB, shared seed default
+        let p = parse_pattern_config(&["ADDR=STRIDE"]).unwrap();
+        assert_eq!(p.addr, AddrMode::Strided { stride: 4096 });
+        let p = parse_pattern_config(&["ADDR=CHASE"]).unwrap();
+        assert_eq!(p.addr, AddrMode::PointerChase { seed: 0xD0D0_CAFE, working_set: 1 << 20 });
+    }
+
+    #[test]
+    fn pattern_phased_parses_and_shares_params() {
+        let p = parse_pattern_config(&[
+            "ADDR=PHASED",
+            "PHASES=SEQ@512,RND@256,STRIDE@2k",
+            "SEED=3",
+            "STRIDE=64k",
+        ])
+        .unwrap();
+        assert_eq!(
+            p.addr,
+            AddrMode::Phased(vec![
+                (AddrMode::Sequential, 512),
+                (AddrMode::Random { seed: 3 }, 256),
+                (AddrMode::Strided { stride: 64 << 10 }, 2048),
+            ])
+        );
+    }
+
+    #[test]
+    fn pattern_phased_rejects_bad_specs() {
+        assert!(parse_pattern_config(&["ADDR=PHASED"]).is_err(), "PHASES required");
+        assert!(parse_pattern_config(&["ADDR=PHASED", "PHASES=SEQ"]).is_err(), "missing @txns");
+        assert!(
+            parse_pattern_config(&["ADDR=PHASED", "PHASES=SEQ@0"]).is_err(),
+            "zero-count phase"
+        );
+        assert!(
+            parse_pattern_config(&["ADDR=PHASED", "PHASES=PHASED@4"]).is_err(),
+            "nested phases"
+        );
+        assert!(
+            parse_pattern_config(&["ADDR=PHASED", "PHASES=SEQ@8g"]).is_err(),
+            "count beyond u32 range"
+        );
+        assert!(parse_pattern_config(&["PHASES=SEQ@4"]).is_err(), "PHASES without ADDR=PHASED");
+        assert!(
+            parse_pattern_config(&["ADDR=STRIDE", "PHASES=SEQ@4"]).is_err(),
+            "PHASES with a non-phased ADDR mode"
+        );
+        assert!(parse_pattern_config(&["ADDR=NOPE"]).is_err(), "unknown mode name");
+        assert!(parse_pattern_config(&["ADDR=STRIDE", "STRIDE=0"]).is_err(), "zero stride");
+        assert!(parse_pattern_config(&["ADDR=CHASE", "WSET=0"]).is_err(), "zero working set");
+    }
+
+    #[test]
+    fn pattern_new_modes_format_roundtrip() {
+        for toks in [
+            &["ADDR=STRIDE", "STRIDE=65536"][..],
+            &["ADDR=BANK", "SEED=11"][..],
+            &["ADDR=CHASE", "SEED=4", "WSET=1m"][..],
+            &["ADDR=PHASED", "PHASES=SEQ@128,BANK@64,CHASE@32", "SEED=8", "WSET=64k"][..],
+        ] {
+            let p = parse_pattern_config(toks).unwrap();
+            let text = format_pattern_config(&p);
+            let toks2: Vec<&str> = text.split_whitespace().collect();
+            let q = parse_pattern_config(&toks2).unwrap();
+            assert_eq!(p, q, "round-trip through `{text}`");
+        }
     }
 
     #[test]

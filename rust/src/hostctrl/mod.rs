@@ -15,10 +15,18 @@
 //! RUN <ch>                     → OK RUN CH=0 TXNS=4096 CYCLES=...
 //! RUNALL                      → OK RUNALL CHANNELS=3 AGG_GBS=...
 //! STATS <ch>                   → OK RD_TXNS=.. RD_GBS=.. WR_GBS=.. ...
+//! PATTERNS                     → OK PATTERNS SEQ RND STRIDE BANK ...
 //! RESET <ch>                   → OK RESET
 //! HELP                         → OK <command list>
 //! QUIT                         → OK BYE (closes the session)
 //! ```
+//!
+//! The whole access-pattern engine is reachable at run time through
+//! `CFG`: `ADDR=SEQ|RND|STRIDE|BANK|CHASE|PHASED` with `SEED=`,
+//! `STRIDE=`, `WSET=` and `PHASES=` parameters — exactly the syntax of
+//! [`parse_pattern_config`], so host sessions can reconfigure a live
+//! platform onto strided, bank-conflict, pointer-chase or phased traffic
+//! between batches without reinstantiation.
 //!
 //! Errors answer `ERR <reason>`; the session stays open.
 
@@ -80,7 +88,11 @@ impl HostController {
         let cmd = toks.next().unwrap_or("").to_ascii_uppercase();
         match cmd.as_str() {
             "" => Err("empty command".into()),
-            "HELP" => Ok("COMMANDS: INFO CFG RUN RUNALL STATS RESET HELP QUIT".into()),
+            "HELP" => Ok("COMMANDS: INFO CFG RUN RUNALL STATS PATTERNS RESET HELP QUIT".into()),
+            "PATTERNS" => {
+                // run-time selectable address modes of the pattern engine
+                Ok("PATTERNS SEQ RND STRIDE BANK CHASE PHASED".into())
+            }
             "INFO" => {
                 let d = self.platform.design();
                 Ok(format!(
@@ -254,6 +266,35 @@ mod tests {
         assert!(h.handle_line("STATS 0").starts_with("OK"));
         assert_eq!(h.handle_line("RESET 0"), "OK RESET");
         assert!(h.handle_line("STATS 0").starts_with("ERR"));
+    }
+
+    #[test]
+    fn patterns_command_lists_engine_modes() {
+        let mut h = host();
+        let r = h.handle_line("PATTERNS");
+        for mode in ["SEQ", "RND", "STRIDE", "BANK", "CHASE", "PHASED"] {
+            assert!(r.contains(mode), "{r}");
+        }
+        assert!(h.handle_line("HELP").contains("PATTERNS"));
+    }
+
+    #[test]
+    fn new_pattern_modes_configurable_over_protocol() {
+        let mut h = host();
+        for cfg in [
+            "CFG 0 OP=R ADDR=STRIDE STRIDE=64k BURST=4 BATCH=64",
+            "CFG 0 OP=R ADDR=BANK SEED=2 BURST=1 BATCH=64",
+            "CFG 0 OP=R ADDR=CHASE SEED=9 WSET=64k SIG=BLK BURST=1 BATCH=64",
+            "CFG 0 OP=R ADDR=PHASED PHASES=SEQ@32,RND@32 BATCH=64",
+        ] {
+            let r = h.handle_line(cfg);
+            assert!(r.starts_with("OK CFG CH=0"), "`{cfg}` -> {r}");
+            let r = h.handle_line("RUN 0");
+            assert!(r.starts_with("OK RUN CH=0 TXNS=64"), "`{cfg}` -> {r}");
+        }
+        // echo carries the mode so a host can read back what it set
+        let r = h.handle_line("CFG 0 ADDR=BANK SEED=77");
+        assert!(r.contains("ADDR=BANK") && r.contains("SEED=77"), "{r}");
     }
 
     #[test]

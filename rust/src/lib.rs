@@ -19,13 +19,20 @@
 //!   insertion, the 4:1 PHY:AXI clock ratio.
 //! - [`axi`] — the AXI4 on-chip protocol: five independent channels, burst
 //!   semantics (FIXED / INCR / WRAP, lengths 1–128), handshakes.
-//! - [`trafficgen`] — the paper's instrument: run-time-configurable traffic
-//!   patterns, signaling modes, payload generation + read-back verification,
-//!   hardware-style performance counters.
+//! - [`trafficgen`] — the paper's instrument: the run-time access-pattern
+//!   engine (sequential, random, strided, bank-conflict, pointer-chase and
+//!   phased addressing — see [`config::AddrMode`]), signaling modes,
+//!   payload generation + read-back verification, hardware-style
+//!   performance counters.
 //! - [`hostctrl`] — the UART/host-PC command protocol (in-memory link or
-//!   TCP server) that configures TGs and collects statistics at run time.
+//!   TCP server) that configures TGs and collects statistics at run time;
+//!   every pattern-engine mode is selectable live through `CFG`.
 //! - [`platform`] — design-time composition: N channels × data rate ×
-//!   counter set, and the batch-run executive.
+//!   counter set, the batch-run executive, and the
+//!   [`platform::sweep`] campaign executive that expands cartesian
+//!   (speed × channels × pattern) grids into deduplicated job lists and
+//!   runs them on a work-stealing thread pool, emitting per-job JSON/CSV
+//!   artifacts.
 //! - [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   artifacts (payload generator, verifier, analytic bandwidth model) and
 //!   executes them from the hot path; Python never runs at benchmark time.
@@ -45,6 +52,16 @@
 //! let pattern = PatternConfig::seq_read_burst(32, 4096);
 //! let stats = platform.run_batch(0, &pattern).unwrap();
 //! println!("throughput: {:.2} GB/s", stats.read_throughput_gbs());
+//! ```
+//!
+//! Whole campaigns run through the sweep executive (also reachable from
+//! the CLI as `ddr4bench sweep`):
+//!
+//! ```no_run
+//! use ddr4bench::platform::sweep::{run_sweep, SweepSpec};
+//!
+//! let outcomes = run_sweep(SweepSpec::paper_grid().expand(), 4).unwrap();
+//! assert_eq!(outcomes.len(), 12); // 2 speeds x 2 channel counts x 3 patterns
 //! ```
 
 pub mod analytic;

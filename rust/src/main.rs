@@ -3,6 +3,9 @@
 //! ```text
 //! ddr4bench info                         # design summary + XLA artifact status
 //! ddr4bench run --speed 1600 --op R --addr seq --burst 32 --batch 4096
+//! ddr4bench run --addr chase --wset 4m --sig BLK --burst 1   # pattern engine
+//! ddr4bench sweep --speeds 1600,2400 --channels 1,2 \
+//!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
 //! ddr4bench table3 | table4 | fig2 | fig3 | scaling | analysis | modelcheck
 //! ddr4bench serve --addr-bind 127.0.0.1:5557  # host-controller TCP endpoint
 //! ```
@@ -12,7 +15,7 @@ use anyhow::{anyhow, Result};
 use ddr4bench::cli::Cli;
 use ddr4bench::config::{parse_pattern_config, DesignConfig, PatternConfig, SpeedBin};
 use ddr4bench::hostctrl::{serve_tcp, HostController};
-use ddr4bench::platform::Platform;
+use ddr4bench::platform::{sweep, Platform};
 use ddr4bench::report::campaign;
 use ddr4bench::resource;
 use ddr4bench::runtime::XlaRuntime;
@@ -31,10 +34,15 @@ fn cli() -> Cli {
         .command("serve", "serve the host-controller protocol over TCP")
         .command("dse", "design-space exploration (analytic model; XLA-batched if artifacts present)")
         .command("trace", "replay a memory-access trace file (see trafficgen::trace)")
+        .command("sweep", "run a parallel campaign sweep (speeds x channels x patterns)")
         .option("speed", "data rate: 1600|1866|2133|2400 (default 1600)")
-        .option("channels", "memory channels 1-3 (default 1)")
+        .option("channels", "memory channels 1-3 (default 1); comma list for sweep")
         .option("op", "R|W|M (default R)")
-        .option("addr", "seq|rnd (default seq)")
+        .option("addr", "seq|rnd|stride|bank|chase|phased (default seq)")
+        .option("seed", "pattern seed for rnd/bank/chase")
+        .option("stride", "stride bytes for --addr stride (default 4096; suffixes k/m/g)")
+        .option("wset", "working-set bytes for --addr chase (default 1m)")
+        .option("phases", "phase list for --addr phased, e.g. SEQ@512,RND@512")
         .option("burst", "burst length 1-128 (default 32)")
         .option("btype", "burst type FIXED|INCR|WRAP (default INCR)")
         .option("sig", "signaling NB|BLK|AGR (default NB)")
@@ -43,6 +51,11 @@ fn cli() -> Cli {
         .option("addr-bind", "TCP bind address for serve (default 127.0.0.1:5557)")
         .option("csv", "write table/figure CSV to this path")
         .option("file", "trace file for the trace command")
+        .option("speeds", "sweep: comma list of data rates (default 1600,2400)")
+        .option("patterns", "sweep: comma list of presets (seq,rnd,strided,bank,chase,phased)")
+        .option("spec", "sweep: read the sweep spec from this config file")
+        .option("jobs", "sweep: worker threads (default: available parallelism)")
+        .option("out", "sweep: write per-job JSON/CSV artifacts + BENCH_sweep.json here")
         .flag("verify", "enable data-integrity checking")
         .flag("xla", "require the XLA runtime (error if artifacts missing)")
         .flag("no-xla", "skip loading the XLA runtime")
@@ -57,6 +70,14 @@ fn pattern_from_args(args: &ddr4bench::cli::Args) -> Result<PatternConfig> {
         format!("SIG={}", args.get_or("sig", "NB")),
         format!("BATCH={}", args.get_or("batch", "4096")),
     ];
+    // pattern-engine parameters (order-independent in the token syntax)
+    for (opt, key) in
+        [("seed", "SEED"), ("stride", "STRIDE"), ("wset", "WSET"), ("phases", "PHASES")]
+    {
+        if let Some(v) = args.get(opt) {
+            toks.push(format!("{key}={v}"));
+        }
+    }
     if args.has_flag("verify") {
         toks.push("VERIFY=1".into());
     }
@@ -71,6 +92,32 @@ fn design_from_args(args: &ddr4bench::cli::Args) -> Result<DesignConfig> {
     let d = DesignConfig::with_channels(channels, speed);
     d.validate().map_err(|e| anyhow!("{e}"))?;
     Ok(d)
+}
+
+fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec> {
+    // Base = the spec file when given, else the paper grid; explicit
+    // --speeds/--channels/--patterns then override the base's axes.
+    let mut spec = if let Some(path) = args.get("spec") {
+        let text = std::fs::read_to_string(path)?;
+        sweep::SweepSpec::parse(&text)?
+    } else {
+        sweep::SweepSpec::paper_grid()
+    };
+    if let Some(v) = args.get("speeds") {
+        spec.speeds = sweep::parse_speed_list(v)?;
+    }
+    if let Some(v) = args.get("channels") {
+        spec.channels = sweep::parse_channel_list(v)?;
+    }
+    if let Some(v) = args.get("patterns") {
+        spec.patterns = v
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|name| sweep::preset(name).ok_or_else(|| anyhow!("unknown pattern `{name}`")))
+            .collect::<Result<_>>()?;
+    }
+    Ok(spec)
 }
 
 fn maybe_runtime(args: &ddr4bench::cli::Args) -> Result<Option<XlaRuntime>> {
@@ -271,6 +318,40 @@ fn main() -> Result<()> {
                 s.pj_per_bit().unwrap_or(0.0),
                 s.counters.mismatches
             );
+        }
+        Some("sweep") => {
+            let spec = sweep_spec_from_args(&args)?;
+            let jobs = spec.expand();
+            let workers = match args.get("jobs") {
+                Some(v) => v.parse().map_err(|_| anyhow!("--jobs: bad integer `{v}`"))?,
+                None => {
+                    // each job itself runs one thread per channel, so
+                    // scale the default pool down to avoid oversubscription
+                    let par =
+                        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+                    let max_ch = spec.channels.iter().copied().max().unwrap_or(1);
+                    (par / max_ch).max(1)
+                }
+            };
+            println!(
+                "sweep: {} jobs ({} speeds x {} channel counts x {} patterns) on {} workers",
+                jobs.len(),
+                spec.speeds.len(),
+                spec.channels.len(),
+                spec.patterns.len(),
+                workers.min(jobs.len().max(1))
+            );
+            let outcomes = sweep::run_sweep(jobs, workers)?;
+            println!("{}", sweep::summary_table(&outcomes).ascii());
+            if let Some(dir) = args.get("out") {
+                let summary = sweep::write_artifacts(&outcomes, std::path::Path::new(dir))?;
+                println!(
+                    "wrote {} JSON + {} CSV artifacts and {}",
+                    outcomes.len(),
+                    outcomes.len(),
+                    summary.display()
+                );
+            }
         }
         Some("serve") => {
             let design = design_from_args(&args)?;

@@ -8,7 +8,13 @@
 //! hardware counters as [`BatchStats`]. Channels are fully independent —
 //! [`Platform::run_batch_all`] runs the same pattern on every channel (one
 //! OS thread each, mirroring the physically parallel channels) and reports
-//! per-channel plus aggregate statistics.
+//! per-channel plus aggregate statistics. Whole *campaigns* — cartesian
+//! (speed × channels × pattern) grids — run through the [`sweep`]
+//! executive's work-stealing pool, one platform instance per job.
+
+pub mod sweep;
+
+pub use sweep::{SweepJob, SweepOutcome, SweepSpec};
 
 use std::collections::HashMap;
 

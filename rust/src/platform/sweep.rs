@@ -1,0 +1,575 @@
+//! Campaign sweep executive: expand a cartesian sweep specification
+//! (speed bins × channel counts × traffic patterns) into a deduplicated
+//! job list and execute it on a work-stealing thread pool, one isolated
+//! [`Platform`] per job, emitting per-job JSON/CSV artifacts plus a
+//! machine-readable summary (`BENCH_sweep.json` schema).
+//!
+//! This is the scale/speed/scenario-diversity executive the ROADMAP asks
+//! for: where [`Platform::run_batch_all`] parallelizes the *channels of
+//! one design*, the sweep executive parallelizes *whole designs* — every
+//! (speed, channels, pattern) point of a campaign runs concurrently,
+//! bounded only by worker count.
+//!
+//! ```no_run
+//! use ddr4bench::platform::sweep::{run_sweep, SweepSpec};
+//!
+//! let jobs = SweepSpec::paper_grid().expand();
+//! let outcomes = run_sweep(jobs, 4).unwrap();
+//! for o in &outcomes {
+//!     println!("{}: {:.2} GB/s", o.job.label, o.agg.total_throughput_gbs());
+//! }
+//! ```
+
+use std::collections::{HashSet, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{parse_kv_text, parse_pattern_config, DesignConfig, PatternConfig, SpeedBin};
+use crate::platform::Platform;
+use crate::report::Table;
+use crate::stats::BatchStats;
+
+/// Schema identifier stamped into every sweep artifact.
+pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v1";
+
+/// A cartesian sweep specification.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Speed bins to sweep.
+    pub speeds: Vec<SpeedBin>,
+    /// Channel counts to sweep (1..=3 on the XCKU115).
+    pub channels: Vec<usize>,
+    /// Labeled traffic patterns to sweep.
+    pub patterns: Vec<(String, PatternConfig)>,
+}
+
+/// Named pattern preset, by the names the CLI accepts
+/// (`--patterns seq,rnd,strided,bank,chase,phased`). Aliases map onto the
+/// canonical label so `strided,stride` dedups to one job, not two.
+pub fn preset(name: &str) -> Option<(String, PatternConfig)> {
+    let (label, cfg) = match name.to_ascii_lowercase().as_str() {
+        "seq" => ("seq", PatternConfig::seq_read_burst(32, 4096)),
+        "rnd" => ("rnd", PatternConfig::rnd_read_burst(1, 2048, 0xF00D)),
+        "strided" | "stride" => ("strided", PatternConfig::strided_read(64 << 10, 4, 2048)),
+        "bank" | "bankconflict" => ("bank", PatternConfig::bank_conflict_read(1, 1024, 1)),
+        "chase" | "pointerchase" => {
+            ("chase", PatternConfig::pointer_chase_read(4 << 20, 1024, 7))
+        }
+        "phased" => ("phased", {
+            let mut p = PatternConfig::seq_read_burst(4, 2048);
+            p.addr = crate::config::AddrMode::Phased(vec![
+                (crate::config::AddrMode::Sequential, 512),
+                (crate::config::AddrMode::Random { seed: 0xF00D }, 512),
+            ]);
+            p
+        }),
+        _ => return None,
+    };
+    Some((label.to_string(), cfg))
+}
+
+impl SweepSpec {
+    /// The default campaign: the Fig. 2 data-rate grid (DDR4-1600 and
+    /// DDR4-2400) × {1, 2} channels × the three adversarial patterns —
+    /// 12 jobs.
+    pub fn paper_grid() -> Self {
+        Self {
+            speeds: vec![SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400],
+            channels: vec![1, 2],
+            patterns: ["strided", "bank", "chase"]
+                .iter()
+                .map(|n| preset(n).expect("builtin preset"))
+                .collect(),
+        }
+    }
+
+    /// Parse a sweep spec from config text:
+    ///
+    /// ```text
+    /// speeds = 1600, 2400
+    /// channels = 1, 2
+    /// [patterns]
+    /// strided = OP=R ADDR=STRIDE STRIDE=64k BURST=4 BATCH=2048
+    /// chase   = OP=R ADDR=CHASE SEED=7 WSET=4m SIG=BLK BATCH=1024 BURST=1
+    /// ```
+    ///
+    /// Omitted sections fall back to the [`Self::paper_grid`] values.
+    pub fn parse(text: &str) -> Result<Self> {
+        let map = parse_kv_text(text).map_err(|e| anyhow!("{e}"))?;
+        for key in map.keys() {
+            if key != "speeds" && key != "channels" && !key.starts_with("patterns.") {
+                bail!(
+                    "unknown sweep spec key `{key}` \
+                     (expected `speeds`, `channels`, or `[patterns]` entries)"
+                );
+            }
+        }
+        let mut spec = Self::paper_grid();
+        if let Some(v) = map.get("speeds") {
+            spec.speeds = parse_speed_list(v)?;
+        }
+        if let Some(v) = map.get("channels") {
+            spec.channels = parse_channel_list(v)?;
+        }
+        let patterns: Vec<(String, PatternConfig)> = map
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix("patterns.").map(|label| (label.to_string(), v.as_str()))
+            })
+            .map(|(label, tokens)| {
+                let toks: Vec<&str> = tokens.split_whitespace().collect();
+                let cfg = parse_pattern_config(&toks)
+                    .map_err(|e| anyhow!("pattern `{label}`: {e}"))?;
+                Ok((label, cfg))
+            })
+            .collect::<Result<_>>()?;
+        if !patterns.is_empty() {
+            spec.patterns = patterns;
+        }
+        Ok(spec)
+    }
+
+    /// Expand the cartesian product into a deduplicated, deterministic
+    /// job list (duplicate (speed, channels, label) points collapse).
+    pub fn expand(&self) -> Vec<SweepJob> {
+        let mut seen: HashSet<(u32, usize, String)> = HashSet::new();
+        let mut jobs = Vec::new();
+        for &speed in &self.speeds {
+            for &channels in &self.channels {
+                for (label, cfg) in &self.patterns {
+                    if !seen.insert((speed.data_rate_mts(), channels, label.clone())) {
+                        continue;
+                    }
+                    jobs.push(SweepJob {
+                        id: jobs.len(),
+                        speed,
+                        channels,
+                        label: label.clone(),
+                        cfg: cfg.clone(),
+                    });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+/// Parse "1600, 2400" style speed lists.
+pub fn parse_speed_list(s: &str) -> Result<Vec<SpeedBin>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| SpeedBin::parse(t).ok_or_else(|| anyhow!("unknown speed bin `{t}`")))
+        .collect()
+}
+
+/// Parse "1, 2, 3" style channel lists.
+pub fn parse_channel_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let n: usize = t.parse().map_err(|_| anyhow!("bad channel count `{t}`"))?;
+            if !(1..=3).contains(&n) {
+                bail!("channel count must be 1..=3, got {n}");
+            }
+            Ok(n)
+        })
+        .collect()
+}
+
+/// One expanded sweep job.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    /// Stable index in the expanded job list.
+    pub id: usize,
+    /// Data rate of the design.
+    pub speed: SpeedBin,
+    /// Channel count of the design.
+    pub channels: usize,
+    /// Pattern label (artifact naming).
+    pub label: String,
+    /// The traffic pattern to run.
+    pub cfg: PatternConfig,
+}
+
+/// A completed sweep job with its measurements.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// The job that ran.
+    pub job: SweepJob,
+    /// Per-channel statistics.
+    pub per_channel: Vec<BatchStats>,
+    /// Channel-aggregated statistics.
+    pub agg: BatchStats,
+    /// Wall-clock job duration in milliseconds.
+    pub wall_ms: f64,
+}
+
+fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
+    let t0 = std::time::Instant::now();
+    let design = DesignConfig::with_channels(job.channels, job.speed);
+    design.validate().map_err(|e| anyhow!("{e}"))?;
+    let mut platform = Platform::new(design);
+    let per_channel = platform.run_batch_all(&job.cfg)?;
+    let agg = Platform::aggregate(&per_channel);
+    Ok(SweepOutcome {
+        job: job.clone(),
+        per_channel,
+        agg,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Execute `jobs` on a work-stealing pool of `workers` threads. Each
+/// worker owns a deque seeded round-robin; an idle worker first drains
+/// its own queue from the front, then steals from the back of a victim's.
+/// Results are returned in job-id order; any job failure fails the sweep
+/// (after the pool drains).
+pub fn run_sweep(jobs: Vec<SweepJob>, workers: usize) -> Result<Vec<SweepOutcome>> {
+    if jobs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, jobs.len());
+    let queues: Vec<Mutex<VecDeque<SweepJob>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, job) in jobs.into_iter().enumerate() {
+        queues[i % workers].lock().unwrap().push_back(job);
+    }
+    let results: Mutex<Vec<SweepOutcome>> = Mutex::new(Vec::new());
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let queues = &queues;
+            let results = &results;
+            let errors = &errors;
+            scope.spawn(move || loop {
+                // Take from the own queue first; the guard must drop
+                // before stealing so two stealers can never hold-and-wait
+                // on each other's locks.
+                let own = queues[w].lock().unwrap().pop_front();
+                let job = match own {
+                    Some(job) => Some(job),
+                    None => (0..queues.len())
+                        .filter(|&q| q != w)
+                        .find_map(|q| queues[q].lock().unwrap().pop_back()),
+                };
+                let Some(job) = job else { break };
+                match run_job(&job) {
+                    Ok(outcome) => results.lock().unwrap().push(outcome),
+                    Err(e) => errors
+                        .lock()
+                        .unwrap()
+                        .push(format!("job {} ({}): {e}", job.id, job.label)),
+                }
+            });
+        }
+    });
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        bail!("{} sweep job(s) failed: {}", errors.len(), errors.join("; "));
+    }
+    let mut outcomes = results.into_inner().unwrap();
+    outcomes.sort_by_key(|o| o.job.id);
+    Ok(outcomes)
+}
+
+/// Make a user-supplied pattern label safe as a file-name component:
+/// anything outside `[A-Za-z0-9._-]` becomes `_` (so path separators and
+/// `..` tricks from spec files cannot escape the artifact directory).
+fn sanitize_label(label: &str) -> String {
+    let safe: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect();
+    if safe.chars().all(|c| c == '.') {
+        "pattern".to_string()
+    } else {
+        safe
+    }
+}
+
+/// Minimal CSV field escaping (quotes fields containing `,` or `"`).
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one outcome as a self-describing JSON object.
+pub fn job_json(o: &SweepOutcome) -> String {
+    let per_channel: Vec<String> = o
+        .per_channel
+        .iter()
+        .map(|s| format!("{:.6}", s.total_throughput_gbs()))
+        .collect();
+    format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"{schema}\",\n",
+            "  \"id\": {id},\n",
+            "  \"speed\": \"{speed}\",\n",
+            "  \"data_rate_mts\": {rate},\n",
+            "  \"channels\": {channels},\n",
+            "  \"pattern\": \"{label}\",\n",
+            "  \"cfg\": \"{cfg}\",\n",
+            "  \"rd_gbs\": {rd:.6},\n",
+            "  \"wr_gbs\": {wr:.6},\n",
+            "  \"total_gbs\": {tot:.6},\n",
+            "  \"rd_lat_ns\": {rdlat:.3},\n",
+            "  \"wr_lat_ns\": {wrlat:.3},\n",
+            "  \"refresh_stall_ck\": {refresh},\n",
+            "  \"mismatches\": {mism},\n",
+            "  \"energy_nj\": {energy:.3},\n",
+            "  \"pj_per_bit\": {pjb:.4},\n",
+            "  \"wall_ms\": {wall:.3},\n",
+            "  \"per_channel_total_gbs\": [{per}]\n",
+            "}}"
+        ),
+        schema = SWEEP_SCHEMA,
+        id = o.job.id,
+        speed = o.job.speed,
+        rate = o.job.speed.data_rate_mts(),
+        channels = o.job.channels,
+        label = json_escape(&o.job.label),
+        cfg = json_escape(&crate::config::format_pattern_config(&o.job.cfg)),
+        rd = o.agg.read_throughput_gbs(),
+        wr = o.agg.write_throughput_gbs(),
+        tot = o.agg.total_throughput_gbs(),
+        rdlat = o.agg.read_latency_ns(),
+        wrlat = o.agg.write_latency_ns(),
+        refresh = o.agg.counters.refresh_stall_dram_cycles,
+        mism = o.agg.counters.mismatches,
+        energy = o.agg.energy.total_nj(),
+        pjb = o.agg.pj_per_bit().unwrap_or(0.0),
+        wall = o.wall_ms,
+        per = per_channel.join(", "),
+    )
+}
+
+/// Render one outcome as a single-row CSV (header + row).
+pub fn job_csv(o: &SweepOutcome) -> String {
+    format!(
+        "id,speed,data_rate_mts,channels,pattern,rd_gbs,wr_gbs,total_gbs,rd_lat_ns,wr_lat_ns,\
+         refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
+         {},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{},{},{:.3},{:.4},{:.3}\n",
+        o.job.id,
+        o.job.speed,
+        o.job.speed.data_rate_mts(),
+        o.job.channels,
+        csv_escape(&o.job.label),
+        o.agg.read_throughput_gbs(),
+        o.agg.write_throughput_gbs(),
+        o.agg.total_throughput_gbs(),
+        o.agg.read_latency_ns(),
+        o.agg.write_latency_ns(),
+        o.agg.counters.refresh_stall_dram_cycles,
+        o.agg.counters.mismatches,
+        o.agg.energy.total_nj(),
+        o.agg.pj_per_bit().unwrap_or(0.0),
+        o.wall_ms,
+    )
+}
+
+/// Render the whole-campaign summary JSON (the `BENCH_sweep.json` format).
+pub fn summary_json(outcomes: &[SweepOutcome], source: &str) -> String {
+    let jobs: Vec<String> = outcomes
+        .iter()
+        .map(|o| {
+            let body: String =
+                job_json(o).lines().map(|l| format!("    {l}\n")).collect::<String>();
+            body.trim_end().to_string()
+        })
+        .collect();
+    format!(
+        "{{\n  \"schema\": \"{}\",\n  \"source\": \"{}\",\n  \"jobs\": [\n{}\n  ]\n}}\n",
+        SWEEP_SCHEMA,
+        json_escape(source),
+        jobs.join(",\n"),
+    )
+}
+
+/// Write per-job JSON + CSV artifacts and the campaign summary into
+/// `dir` (created if missing). Returns the summary path.
+pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    for o in outcomes {
+        let stem = format!(
+            "{:03}_{}_{}ch_{}",
+            o.job.id,
+            o.job.speed.data_rate_mts(),
+            o.job.channels,
+            sanitize_label(&o.job.label)
+        );
+        std::fs::write(dir.join(format!("{stem}.json")), job_json(o))?;
+        std::fs::write(dir.join(format!("{stem}.csv")), job_csv(o))?;
+    }
+    let summary = dir.join("BENCH_sweep.json");
+    std::fs::write(&summary, summary_json(outcomes, "ddr4bench sweep executive (simulator)"))?;
+    Ok(summary)
+}
+
+/// Human-readable summary table of a finished sweep.
+pub fn summary_table(outcomes: &[SweepOutcome]) -> Table {
+    let mut t = Table::new(
+        "Campaign sweep summary",
+        &["Job", "Rate", "Ch", "Pattern", "RD GB/s", "WR GB/s", "Total GB/s", "Wall ms"],
+    );
+    for o in outcomes {
+        t.row(vec![
+            o.job.id.to_string(),
+            o.job.speed.to_string(),
+            o.job.channels.to_string(),
+            o.job.label.clone(),
+            format!("{:.2}", o.agg.read_throughput_gbs()),
+            format!("{:.2}", o.agg.write_throughput_gbs()),
+            format!("{:.2}", o.agg.total_throughput_gbs()),
+            format!("{:.1}", o.wall_ms),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_expands_to_12_unique_jobs() {
+        let jobs = SweepSpec::paper_grid().expand();
+        assert_eq!(jobs.len(), 12, "2 speeds x 2 channel counts x 3 patterns");
+        let keys: HashSet<_> =
+            jobs.iter().map(|j| (j.speed.data_rate_mts(), j.channels, j.label.clone())).collect();
+        assert_eq!(keys.len(), 12, "all unique");
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i, "ids are dense and ordered");
+            assert!(j.cfg.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn expand_dedups_repeated_axes() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600, SpeedBin::Ddr4_1600];
+        spec.channels = vec![1, 1];
+        assert_eq!(spec.expand().len(), 3, "duplicates collapse");
+    }
+
+    #[test]
+    fn spec_parse_overrides_and_defaults() {
+        let spec = SweepSpec::parse(
+            "speeds = 1866\nchannels = 3\n[patterns]\nmine = OP=W ADDR=BANK SEED=2 BATCH=64\n",
+        )
+        .unwrap();
+        assert_eq!(spec.speeds, vec![SpeedBin::Ddr4_1866]);
+        assert_eq!(spec.channels, vec![3]);
+        assert_eq!(spec.patterns.len(), 1);
+        assert_eq!(spec.patterns[0].0, "mine");
+        let jobs = spec.expand();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].label, "mine");
+    }
+
+    #[test]
+    fn spec_parse_rejects_bad_axes() {
+        assert!(SweepSpec::parse("speeds = 9999\n").is_err());
+        assert!(SweepSpec::parse("channels = 4\n").is_err());
+        assert!(SweepSpec::parse("[patterns]\nx = ADDR=NOPE\n").is_err());
+        // typo'd keys must fail loudly, not silently run the default grid
+        assert!(SweepSpec::parse("speed = 1866\n").is_err());
+        assert!(SweepSpec::parse("[pattern]\nx = OP=R\n").is_err());
+    }
+
+    #[test]
+    fn presets_cover_all_pattern_names() {
+        for name in ["seq", "rnd", "strided", "bank", "chase", "phased"] {
+            let (label, cfg) = preset(name).unwrap();
+            assert_eq!(label, name);
+            assert!(cfg.validate().is_ok(), "{name}");
+        }
+        assert!(preset("nope").is_none());
+        // aliases canonicalize, so alias pairs dedup to one job
+        assert_eq!(preset("stride").unwrap().0, "strided");
+        assert_eq!(preset("bankconflict").unwrap().0, "bank");
+        assert_eq!(preset("pointerchase").unwrap().0, "chase");
+    }
+
+    #[test]
+    fn small_sweep_runs_in_parallel_and_orders_results() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        // shrink the presets so the unit test stays fast
+        for (_, cfg) in &mut spec.patterns {
+            cfg.batch_len = 64;
+        }
+        let jobs = spec.expand();
+        let n = jobs.len();
+        let outcomes = run_sweep(jobs, 4).unwrap();
+        assert_eq!(outcomes.len(), n);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.job.id, i, "results sorted by job id");
+            let c = &o.agg.counters;
+            assert_eq!(c.rd_txns + c.wr_txns, 64, "{}: counters conserve", o.job.label);
+            assert!(o.agg.total_throughput_gbs() > 0.0);
+            assert!(o.wall_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn json_and_csv_artifacts_well_formed() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("bank").unwrap()];
+        spec.patterns[0].1.batch_len = 32;
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        let j = job_json(&outcomes[0]);
+        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v1\""));
+        assert!(j.contains("\"pattern\": \"bank\""));
+        assert!(j.contains("\"total_gbs\""));
+        let c = job_csv(&outcomes[0]);
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].split(',').count(), lines[1].split(',').count());
+        let s = summary_json(&outcomes, "test");
+        assert!(s.contains("\"jobs\": ["));
+        assert!(s.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn json_escape_controls_and_quotes() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn labels_sanitized_for_files_and_escaped_for_csv() {
+        assert_eq!(sanitize_label("chase"), "chase");
+        assert_eq!(sanitize_label("../../etc/evil"), ".._.._etc_evil");
+        assert_eq!(sanitize_label("a b/c"), "a_b_c");
+        assert_eq!(sanitize_label(".."), "pattern");
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("q\"q"), "\"q\"\"q\"");
+    }
+}

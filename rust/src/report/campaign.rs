@@ -27,13 +27,13 @@ pub fn batch_for(burst_len: u32, scale: f64) -> u32 {
 pub fn run_point(
     platform: &mut Platform,
     op: OpMix,
-    addr: AddrMode,
+    addr: &AddrMode,
     burst_len: u32,
     scale: f64,
 ) -> BatchStats {
     let mut cfg = PatternConfig::seq_read_burst(burst_len, batch_for(burst_len, scale));
     cfg.op = op;
-    cfg.addr = addr;
+    cfg.addr = addr.clone();
     platform.run_batch(0, &cfg).expect("campaign batch failed")
 }
 
@@ -68,7 +68,7 @@ pub fn table4_data(scale: f64) -> Table4Data {
             [AddrMode::Sequential, AddrMode::Random { seed: 0xBEEF }].iter().enumerate()
         {
             for (li, (len, _)) in TABLE4_LENGTHS.iter().enumerate() {
-                let s = run_point(&mut platform, *op, *addr, *len, scale);
+                let s = run_point(&mut platform, *op, addr, *len, scale);
                 gbs[oi][ai][li] = gbs_of(*op, &s);
             }
         }
@@ -120,7 +120,7 @@ pub fn fig2(scale: f64) -> Vec<Figure> {
                 let pts = FIG2_LENGTHS
                     .iter()
                     .map(|&len| {
-                        let s = run_point(&mut platform, op, addr, len, scale);
+                        let s = run_point(&mut platform, op, &addr, len, scale);
                         (len as f64, gbs_of(op, &s))
                     })
                     .collect();
@@ -144,7 +144,7 @@ pub fn fig3(scale: f64) -> Table {
         [(AddrMode::Sequential, "Sequential"), (AddrMode::Random { seed: 0xCAFE }, "Random")]
     {
         for (len, label) in [(1, "S"), (4, "SB"), (32, "MB"), (128, "LB")] {
-            let s = run_point(&mut platform, OpMix::Mixed { read_pct: 50 }, addr, len, scale);
+            let s = run_point(&mut platform, OpMix::Mixed { read_pct: 50 }, &addr, len, scale);
             t.row(vec![
                 alabel.into(),
                 label.into(),
@@ -190,18 +190,18 @@ pub fn analysis(scale: f64) -> Table {
     let mut p2400 = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_2400));
     let mut p1600 = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
     let seq_r = |p: &mut Platform, len| {
-        gbs_of(OpMix::ReadOnly, &run_point(p, OpMix::ReadOnly, AddrMode::Sequential, len, scale))
+        gbs_of(OpMix::ReadOnly, &run_point(p, OpMix::ReadOnly, &AddrMode::Sequential, len, scale))
     };
     let rnd_r = |p: &mut Platform, len| {
         gbs_of(
             OpMix::ReadOnly,
-            &run_point(p, OpMix::ReadOnly, AddrMode::Random { seed: 0xF00D }, len, scale),
+            &run_point(p, OpMix::ReadOnly, &AddrMode::Random { seed: 0xF00D }, len, scale),
         )
     };
     let mix_seq = |p: &mut Platform, len| {
         gbs_of(
             OpMix::Mixed { read_pct: 50 },
-            &run_point(p, OpMix::Mixed { read_pct: 50 }, AddrMode::Sequential, len, scale),
+            &run_point(p, OpMix::Mixed { read_pct: 50 }, &AddrMode::Sequential, len, scale),
         )
     };
 
@@ -281,7 +281,7 @@ pub fn model_check(scale: f64) -> (Table, f64) {
                 let sim = d.gbs[oi][ai][li];
                 let mut cfg = PatternConfig::seq_read_burst(*len, 1);
                 cfg.op = *op;
-                cfg.addr = *addr;
+                cfg.addr = addr.clone();
                 let model = analytic::predict_pattern(SpeedBin::Ddr4_1600, &cfg, 32) as f64;
                 let err = (model - sim).abs() / sim.max(1e-9);
                 errs.push(err);

@@ -1,19 +1,38 @@
 //! Address generation for the traffic generator (§II-B, "address
-//! generation side").
+//! generation side") — the run-time access-pattern engine.
 //!
-//! Two modes, selected at run time:
+//! Modes, selected at run time (see [`AddrMode`]):
 //!
 //! - **Sequential** — consecutive transactions target consecutive,
 //!   transaction-sized strides of the test region, wrapping at its end.
 //! - **Random** — each transaction targets a uniformly random, aligned
 //!   offset of the region (reproducible via the pattern seed).
+//! - **Strided** — each transaction advances a fixed byte stride
+//!   (rounded up to the transaction alignment), wrapping in the region.
+//! - **BankConflict** — successive transactions hit the *same* DRAM bank
+//!   in *different* rows. The stride between consecutive addresses is
+//!   derived from the channel geometry (`banks x row_bytes`), which under
+//!   every supported address mapping keeps the low (bank-selecting)
+//!   address bits fixed while advancing the row — a guaranteed row miss
+//!   with zero bank-level parallelism.
+//! - **PointerChase** — a dependent walk over a working set: slot
+//!   `s_{n+1} = (a * s_n + c) mod m` with `m` a power of two, `a ≡ 1
+//!   (mod 4)` and `c` odd, which by Hull–Dobell has full period `m` — the
+//!   chase visits every slot of the working set exactly once per cycle.
+//! - **Phased** — runs each inner mode for its transaction count,
+//!   cycling through the phase list.
 //!
 //! Addresses are aligned to the transaction span rounded up to a power of
 //! two, which (a) keeps INCR bursts inside a 4 KiB page as AXI requires,
 //! and (b) burst-aligns every access the way the RTL generator does.
 
 use crate::config::{AddrMode, BurstKind, BurstSpec};
+use crate::ddr4::geometry::DramGeometry;
 use crate::rng::SplitMix64;
+
+/// Full-period LCG multiplier for the pointer chase (`mod 4 == 1`, so the
+/// Hull–Dobell conditions hold for every power-of-two modulus).
+const CHASE_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// Deterministic per-direction address source.
 #[derive(Debug, Clone)]
@@ -26,8 +45,39 @@ pub struct AddrGen {
 
 #[derive(Debug, Clone)]
 enum Kind {
-    Seq { next_off: u64 },
-    Rnd { rng: SplitMix64 },
+    Seq {
+        next_off: u64,
+    },
+    Rnd {
+        rng: SplitMix64,
+    },
+    Strided {
+        next_off: u64,
+        /// Stride in alignment slots (>= 1).
+        step: u64,
+    },
+    Bank {
+        /// Aligned byte offset inside the first row window (seed-derived;
+        /// selects which bank the conflict stream pins).
+        base: u64,
+        /// Byte distance between same-bank consecutive-row addresses.
+        stride: u64,
+        /// Distinct rows reachable inside the region.
+        rows: u64,
+        next_row: u64,
+    },
+    Chase {
+        cur: u64,
+        /// Odd increment of the full-period LCG.
+        inc: u64,
+        /// `slots - 1` for the power-of-two slot count.
+        mask: u64,
+    },
+    Phased {
+        gens: Vec<(AddrGen, u32)>,
+        idx: usize,
+        left: u32,
+    },
 }
 
 /// Alignment for a transaction: its byte span rounded up to a power of two
@@ -41,13 +91,64 @@ pub fn txn_alignment(burst: BurstSpec, beat_bytes: u32) -> u64 {
 }
 
 impl AddrGen {
-    /// Build an address generator for one direction of a pattern.
-    pub fn new(mode: AddrMode, start: u64, region: u64, burst: BurstSpec, beat_bytes: u32) -> Self {
+    /// Build an address generator for one direction of a pattern. The
+    /// DRAM geometry parameterizes the bank-conflict mode (other modes
+    /// ignore it).
+    pub fn new(
+        mode: &AddrMode,
+        start: u64,
+        region: u64,
+        burst: BurstSpec,
+        beat_bytes: u32,
+        geo: &DramGeometry,
+    ) -> Self {
         let align = txn_alignment(burst, beat_bytes);
         let region = region.max(align); // at least one slot
         let kind = match mode {
             AddrMode::Sequential => Kind::Seq { next_off: 0 },
-            AddrMode::Random { seed } => Kind::Rnd { rng: SplitMix64::new(seed) },
+            AddrMode::Random { seed } => Kind::Rnd { rng: SplitMix64::new(*seed) },
+            AddrMode::Strided { stride } => {
+                // div_ceil: round the byte stride up to whole alignment
+                // slots without overflowing on huge strides.
+                let step = stride.div_ceil(align).max(1);
+                Kind::Strided { next_off: 0, step }
+            }
+            AddrMode::BankConflict { seed } => {
+                // Same bank bits, next row: the geometry-derived stride.
+                let stride = (geo.banks() as u64 * geo.row_bytes()).max(align);
+                let rows = (region / stride).max(1);
+                // Seed picks the aligned base slot (and thereby the bank).
+                let base_slots = (region.min(stride) / align).max(1);
+                let base = (SplitMix64::new(*seed).below(base_slots)) * align;
+                Kind::Bank { base, stride, rows, next_row: 0 }
+            }
+            AddrMode::PointerChase { seed, working_set } => {
+                let ws_slots = ((*working_set).min(region) / align).max(1);
+                // largest power of two <= ws_slots
+                let slots = (ws_slots + 1).next_power_of_two() / 2;
+                let mask = slots - 1;
+                Kind::Chase {
+                    cur: (seed >> 8) & mask,
+                    inc: (seed | 1) & mask.max(1),
+                    mask,
+                }
+            }
+            AddrMode::Phased(phases) => {
+                // `PatternConfig::validate` rejects empty lists and zero
+                // counts at the config boundary; as a plain constructor
+                // this clamps instead of panicking (empty -> sequential,
+                // zero-count phases -> one transaction).
+                let gens: Vec<(AddrGen, u32)> = phases
+                    .iter()
+                    .map(|(m, n)| {
+                        (AddrGen::new(m, start, region, burst, beat_bytes, geo), (*n).max(1))
+                    })
+                    .collect();
+                match gens.first().map(|(_, n)| *n) {
+                    Some(left) => Kind::Phased { gens, idx: 0, left },
+                    None => Kind::Seq { next_off: 0 },
+                }
+            }
         };
         Self { start: start & !(align - 1), region, align, kind }
     }
@@ -59,21 +160,54 @@ impl AddrGen {
 
     /// Next transaction start address.
     pub fn next_addr(&mut self) -> u64 {
-        let slots = self.slots();
-        let slot = match &mut self.kind {
+        let slots = self.region / self.align;
+        let (start, align) = (self.start, self.align);
+        match &mut self.kind {
             Kind::Seq { next_off } => {
                 let s = *next_off;
-                *next_off = (*next_off + 1) % slots;
-                s
+                *next_off = (s + 1) % slots;
+                start + s * align
             }
-            Kind::Rnd { rng } => rng.below(slots),
-        };
-        self.start + slot * self.align
+            Kind::Rnd { rng } => start + rng.below(slots) * align,
+            Kind::Strided { next_off, step } => {
+                let s = *next_off;
+                *next_off = (s + *step) % slots;
+                start + s * align
+            }
+            Kind::Bank { base, stride, rows, next_row } => {
+                let r = *next_row;
+                *next_row = (r + 1) % *rows;
+                start + *base + r * *stride
+            }
+            Kind::Chase { cur, inc, mask } => {
+                let s = *cur;
+                *cur = cur.wrapping_mul(CHASE_MUL).wrapping_add(*inc) & *mask;
+                start + s * align
+            }
+            Kind::Phased { gens, idx, left } => {
+                let addr = gens[*idx].0.next_addr();
+                *left -= 1;
+                if *left == 0 {
+                    *idx = (*idx + 1) % gens.len();
+                    *left = gens[*idx].1;
+                }
+                addr
+            }
+        }
     }
 
     /// Alignment in force (bytes).
     pub fn alignment(&self) -> u64 {
         self.align
+    }
+
+    /// For the pointer-chase mode: the (power-of-two) number of distinct
+    /// slots the chase cycles through. `None` for other modes.
+    pub fn chase_slots(&self) -> Option<u64> {
+        match &self.kind {
+            Kind::Chase { mask, .. } => Some(mask + 1),
+            _ => None,
+        }
     }
 }
 
@@ -84,6 +218,14 @@ mod tests {
 
     fn incr(len: u32) -> BurstSpec {
         BurstSpec { len, kind: BurstKind::Incr }
+    }
+
+    fn geo() -> DramGeometry {
+        DramGeometry::profpga_board()
+    }
+
+    fn gen(mode: AddrMode, start: u64, region: u64, len: u32) -> AddrGen {
+        AddrGen::new(&mode, start, region, incr(len), 32, &geo())
     }
 
     #[test]
@@ -98,7 +240,7 @@ mod tests {
 
     #[test]
     fn sequential_strides_and_wraps() {
-        let mut g = AddrGen::new(AddrMode::Sequential, 0, 256, incr(1), 32);
+        let mut g = gen(AddrMode::Sequential, 0, 256, 1);
         // 4 slots of 64 B
         let a: Vec<u64> = (0..6).map(|_| g.next_addr()).collect();
         assert_eq!(a, vec![0, 64, 128, 192, 0, 64]);
@@ -106,14 +248,14 @@ mod tests {
 
     #[test]
     fn sequential_honours_start() {
-        let mut g = AddrGen::new(AddrMode::Sequential, 1 << 20, 256, incr(1), 32);
+        let mut g = gen(AddrMode::Sequential, 1 << 20, 256, 1);
         assert_eq!(g.next_addr(), 1 << 20);
         assert_eq!(g.next_addr(), (1 << 20) + 64);
     }
 
     #[test]
     fn random_stays_aligned_and_in_region() {
-        let mut g = AddrGen::new(AddrMode::Random { seed: 9 }, 4096, 1 << 20, incr(4), 32);
+        let mut g = gen(AddrMode::Random { seed: 9 }, 4096, 1 << 20, 4);
         for _ in 0..10_000 {
             let a = g.next_addr();
             assert_eq!(a % 128, 0, "alignment");
@@ -123,19 +265,19 @@ mod tests {
 
     #[test]
     fn random_reproducible_by_seed() {
-        let mut a = AddrGen::new(AddrMode::Random { seed: 5 }, 0, 1 << 20, incr(1), 32);
-        let mut b = AddrGen::new(AddrMode::Random { seed: 5 }, 0, 1 << 20, incr(1), 32);
+        let mut a = gen(AddrMode::Random { seed: 5 }, 0, 1 << 20, 1);
+        let mut b = gen(AddrMode::Random { seed: 5 }, 0, 1 << 20, 1);
         for _ in 0..100 {
             assert_eq!(a.next_addr(), b.next_addr());
         }
-        let mut c = AddrGen::new(AddrMode::Random { seed: 6 }, 0, 1 << 20, incr(1), 32);
+        let mut c = gen(AddrMode::Random { seed: 6 }, 0, 1 << 20, 1);
         let same = (0..100).all(|_| a.next_addr() == c.next_addr());
         assert!(!same, "different seeds should diverge");
     }
 
     #[test]
     fn random_covers_many_slots() {
-        let mut g = AddrGen::new(AddrMode::Random { seed: 1 }, 0, 1 << 16, incr(1), 32);
+        let mut g = gen(AddrMode::Random { seed: 1 }, 0, 1 << 16, 1);
         let mut seen = std::collections::HashSet::new();
         for _ in 0..4096 {
             seen.insert(g.next_addr());
@@ -146,9 +288,140 @@ mod tests {
 
     #[test]
     fn tiny_region_clamps_to_one_slot() {
-        let mut g = AddrGen::new(AddrMode::Sequential, 0, 32, incr(1), 32);
+        let mut g = gen(AddrMode::Sequential, 0, 32, 1);
         assert_eq!(g.slots(), 1);
         assert_eq!(g.next_addr(), 0);
         assert_eq!(g.next_addr(), 0);
+    }
+
+    #[test]
+    fn strided_advances_by_stride_and_wraps() {
+        // 4 KiB stride over a 16 KiB region, 64 B slots: offsets 0, 4096,
+        // 8192, 12288, then wrap to 0.
+        let mut g = gen(AddrMode::Strided { stride: 4096 }, 0, 16 << 10, 1);
+        let a: Vec<u64> = (0..5).map(|_| g.next_addr()).collect();
+        assert_eq!(a, vec![0, 4096, 8192, 12288, 0]);
+    }
+
+    #[test]
+    fn strided_survives_huge_stride() {
+        // u64::MAX stride must neither overflow nor panic; it just walks
+        // some in-region cycle.
+        let mut g = gen(AddrMode::Strided { stride: u64::MAX }, 0, 1 << 20, 1);
+        for _ in 0..16 {
+            let a = g.next_addr();
+            assert!(a < 1 << 20);
+            assert_eq!(a % 64, 0);
+        }
+    }
+
+    #[test]
+    fn strided_rounds_stride_up_to_alignment() {
+        // stride 100 with 64 B alignment -> 2 slots = 128 B
+        let mut g = gen(AddrMode::Strided { stride: 100 }, 0, 1 << 10, 1);
+        assert_eq!(g.next_addr(), 0);
+        assert_eq!(g.next_addr(), 128);
+    }
+
+    #[test]
+    fn bank_conflict_same_bank_new_row_every_txn() {
+        let geometry = geo();
+        let mut g = gen(AddrMode::BankConflict { seed: 7 }, 0, 64 << 20, 1);
+        let addrs: Vec<u64> = (0..64).map(|_| g.next_addr()).collect();
+        let first = geometry.decode(addrs[0]);
+        for w in addrs.windows(2) {
+            let (a, b) = (geometry.decode(w[0]), geometry.decode(w[1]));
+            assert_eq!(a.bank, first.bank, "stream stays on one bank");
+            assert_eq!(b.bank, first.bank);
+            assert_ne!(a.row, b.row, "every transaction opens a new row");
+        }
+        for &a in &addrs {
+            assert!(a < 64 << 20, "inside region");
+            assert_eq!(a % 64, 0, "burst aligned");
+        }
+    }
+
+    #[test]
+    fn bank_conflict_seed_selects_different_banks() {
+        let geometry = geo();
+        let banks: std::collections::HashSet<u32> = (0..32)
+            .map(|seed| {
+                let mut g = gen(AddrMode::BankConflict { seed }, 0, 64 << 20, 1);
+                geometry.decode(g.next_addr()).bank
+            })
+            .collect();
+        assert!(banks.len() > 1, "seeds should reach more than one bank");
+    }
+
+    #[test]
+    fn pointer_chase_visits_whole_working_set() {
+        // 64 KiB working set, 64 B slots -> 1024 slots (power of two).
+        let ws = 64 << 10;
+        let mut g = gen(AddrMode::PointerChase { seed: 42, working_set: ws }, 0, 1 << 20, 1);
+        let slots = g.chase_slots().unwrap();
+        assert_eq!(slots, 1024);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..slots {
+            let a = g.next_addr();
+            assert!(a < ws, "chase stays inside the working set");
+            assert_eq!(a % 64, 0);
+            assert!(seen.insert(a), "full-period chase never revisits early");
+        }
+        assert_eq!(seen.len() as u64, slots, "every slot visited once per cycle");
+    }
+
+    #[test]
+    fn pointer_chase_non_pow2_working_set_rounds_down() {
+        // 3000 slots -> 2048
+        let g = gen(AddrMode::PointerChase { seed: 1, working_set: 3000 * 64 }, 0, 1 << 30, 1);
+        assert_eq!(g.chase_slots(), Some(2048));
+    }
+
+    #[test]
+    fn pointer_chase_deterministic_per_seed() {
+        let mk = |seed| gen(AddrMode::PointerChase { seed, working_set: 1 << 16 }, 0, 1 << 20, 1);
+        let (mut a, mut b, mut c) = (mk(3), mk(3), mk(4));
+        let mut diverged = false;
+        for _ in 0..200 {
+            let (x, y) = (a.next_addr(), b.next_addr());
+            assert_eq!(x, y);
+            diverged |= x != c.next_addr();
+        }
+        assert!(diverged, "different seeds should give different chases");
+    }
+
+    #[test]
+    fn degenerate_phased_lists_clamp_instead_of_panicking() {
+        // invalid at the config boundary, but the bare constructor must
+        // stay total: empty list behaves sequentially, zero counts as 1
+        let mut empty = gen(AddrMode::Phased(vec![]), 0, 1 << 10, 1);
+        assert_eq!(empty.next_addr(), 0);
+        assert_eq!(empty.next_addr(), 64);
+        let mut zero = gen(
+            AddrMode::Phased(vec![
+                (AddrMode::Sequential, 0),
+                (AddrMode::Strided { stride: 128 }, 1),
+            ]),
+            0,
+            1 << 10,
+            1,
+        );
+        for _ in 0..8 {
+            let a = zero.next_addr();
+            assert!(a < 1 << 10);
+        }
+    }
+
+    #[test]
+    fn phased_concatenates_inner_streams() {
+        let mode = AddrMode::Phased(vec![
+            (AddrMode::Sequential, 3),
+            (AddrMode::Strided { stride: 128 }, 2),
+        ]);
+        let mut g = gen(mode, 0, 1 << 10, 1);
+        let got: Vec<u64> = (0..7).map(|_| g.next_addr()).collect();
+        // 3 sequential (0,64,128), 2 strided (0,128), then back to the
+        // sequential phase where it left off (192, 256).
+        assert_eq!(got, vec![0, 64, 128, 0, 128, 192, 256]);
     }
 }

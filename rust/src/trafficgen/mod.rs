@@ -52,18 +52,16 @@ pub struct PlannedTxn {
 
 /// Deterministically expand a pattern into its transaction plan. The plan
 /// is what the RTL TG generates on the fly; precomputing it lets the
-/// platform batch the payload work into one XLA call.
-pub fn plan_batch(cfg: &PatternConfig, beat_bytes: u32) -> Vec<PlannedTxn> {
-    let mut rng = SplitMix64::new(match cfg.addr {
-        crate::config::AddrMode::Random { seed } => seed ^ 0xA5A5_5A5A,
-        crate::config::AddrMode::Sequential => 0x5EED,
-    });
+/// platform batch the payload work into one XLA call. The DRAM geometry
+/// parameterizes the bank-conflict address mode.
+pub fn plan_batch(cfg: &PatternConfig, beat_bytes: u32, geo: &DramGeometry) -> Vec<PlannedTxn> {
+    let mut rng = SplitMix64::new(cfg.addr.plan_seed());
     // One shared address walk for both directions (the RTL TG draws the
     // op type per transaction over a single generator): reads and writes
     // of a sequential mixed batch stream through the *same* open rows
     // instead of fighting over banks with conflicting rows.
     let mut gen =
-        AddrGen::new(cfg.addr, cfg.start_addr, cfg.region_bytes, cfg.burst, beat_bytes);
+        AddrGen::new(&cfg.addr, cfg.start_addr, cfg.region_bytes, cfg.burst, beat_bytes, geo);
     let read_pct = cfg.op.read_pct();
     (0..cfg.batch_len)
         .map(|_| {
@@ -185,7 +183,7 @@ impl TrafficGen {
         serial_frontend: bool,
     ) -> Self {
         cfg.validate().expect("invalid pattern config");
-        let plan = plan_batch(&cfg, beat_bytes);
+        let plan = plan_batch(&cfg, beat_bytes, &geo);
         let rd_idx: Vec<usize> =
             plan.iter().enumerate().filter(|(_, t)| !t.is_write).map(|(i, _)| i).collect();
         let wr_idx: Vec<usize> =
@@ -614,18 +612,44 @@ mod tests {
 
     #[test]
     fn plan_respects_op_mix() {
+        let geo = DramGeometry::profpga_board();
         let cfg = PatternConfig::mixed(AddrMode::Sequential, 4, 1000);
-        let plan = plan_batch(&cfg, 32);
+        let plan = plan_batch(&cfg, 32, &geo);
         let writes = plan.iter().filter(|t| t.is_write).count();
         assert!((350..=650).contains(&writes), "50% mix, got {writes} writes");
-        let ro = plan_batch(&PatternConfig::seq_read_burst(4, 100), 32);
+        let ro = plan_batch(&PatternConfig::seq_read_burst(4, 100), 32, &geo);
         assert!(ro.iter().all(|t| !t.is_write));
     }
 
     #[test]
     fn plan_deterministic() {
+        let geo = DramGeometry::profpga_board();
         let cfg = PatternConfig::rnd_read_burst(4, 500, 42);
-        assert_eq!(plan_batch(&cfg, 32), plan_batch(&cfg, 32));
+        assert_eq!(plan_batch(&cfg, 32, &geo), plan_batch(&cfg, 32, &geo));
+    }
+
+    #[test]
+    fn plan_covers_new_addr_modes() {
+        let geo = DramGeometry::profpga_board();
+        for addr in [
+            AddrMode::Strided { stride: 64 << 10 },
+            AddrMode::BankConflict { seed: 5 },
+            AddrMode::PointerChase { seed: 5, working_set: 1 << 20 },
+            AddrMode::Phased(vec![
+                (AddrMode::Sequential, 32),
+                (AddrMode::Random { seed: 2 }, 32),
+            ]),
+        ] {
+            let mut cfg = PatternConfig::seq_read_burst(1, 128);
+            cfg.addr = addr.clone();
+            let plan = plan_batch(&cfg, 32, &geo);
+            assert_eq!(plan.len(), 128, "{addr:?}");
+            assert_eq!(plan, plan_batch(&cfg, 32, &geo), "{addr:?} deterministic");
+            for t in &plan {
+                assert!(t.addr < cfg.region_bytes, "{addr:?}: in region");
+                assert_eq!(t.addr % 64, 0, "{addr:?}: burst aligned");
+            }
+        }
     }
 
     #[test]

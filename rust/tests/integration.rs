@@ -23,12 +23,20 @@ fn run(platform: &mut Platform, cfg: &PatternConfig) -> ddr4bench::stats::BatchS
 
 #[test]
 fn every_pattern_axis_combination_completes() {
-    // The whole Table I run-time space (coarse grid): op × addressing ×
-    // burst type × length class × signaling. Every combination must
-    // complete with conserved counters.
+    // The whole Table I run-time space (coarse grid) plus the extended
+    // pattern engine: op × addressing × burst type × length class ×
+    // signaling. Every combination must complete with conserved counters.
     let mut platform = platform_1600();
+    let addr_modes = [
+        AddrMode::Sequential,
+        AddrMode::Random { seed: 3 },
+        AddrMode::Strided { stride: 64 << 10 },
+        AddrMode::BankConflict { seed: 3 },
+        AddrMode::PointerChase { seed: 3, working_set: 1 << 20 },
+        AddrMode::Phased(vec![(AddrMode::Sequential, 16), (AddrMode::Random { seed: 3 }, 16)]),
+    ];
     for op in [OpMix::ReadOnly, OpMix::WriteOnly, OpMix::Mixed { read_pct: 50 }] {
-        for addr in [AddrMode::Sequential, AddrMode::Random { seed: 3 }] {
+        for addr in &addr_modes {
             for kind in [BurstKind::Fixed, BurstKind::Incr, BurstKind::Wrap] {
                 for len in [1u32, 4, 16] {
                     if kind == BurstKind::Wrap && len < 2 {
@@ -39,7 +47,7 @@ fn every_pattern_axis_combination_completes() {
                     {
                         let mut cfg = PatternConfig::seq_read_burst(len, 64);
                         cfg.op = op;
-                        cfg.addr = addr;
+                        cfg.addr = addr.clone();
                         cfg.burst = BurstSpec { len, kind };
                         cfg.signaling = sig;
                         let stats = run(&mut platform, &cfg);
@@ -53,6 +61,83 @@ fn every_pattern_axis_combination_completes() {
             }
         }
     }
+}
+
+// ------------------------------------------------- pattern-engine ordering
+
+#[test]
+fn row_miss_stride_slower_than_sequential() {
+    // A full-row stride turns every transaction into a row miss while the
+    // transaction stream stays perfectly predictable: it must land well
+    // below the sequential stream and in the neighbourhood of random.
+    let mut p = platform_1600();
+    let seq = run(&mut p, &PatternConfig::seq_read_burst(1, 1024)).read_throughput_gbs();
+    let strided =
+        run(&mut p, &PatternConfig::strided_read(64 << 10, 1, 1024)).read_throughput_gbs();
+    assert!(
+        strided < seq / 2.0,
+        "row-miss stride {strided:.2} GB/s should be far below sequential {seq:.2} GB/s"
+    );
+}
+
+#[test]
+fn small_stride_behaves_like_sequential() {
+    // A one-slot stride IS the sequential walk.
+    let mut p = platform_1600();
+    let seq = run(&mut p, &PatternConfig::seq_read_burst(4, 512)).read_throughput_gbs();
+    let strided = run(&mut p, &PatternConfig::strided_read(128, 4, 512)).read_throughput_gbs();
+    assert!(
+        (strided - seq).abs() / seq < 0.05,
+        "128 B stride {strided:.2} ~= sequential {seq:.2}"
+    );
+}
+
+#[test]
+fn bank_conflict_no_faster_than_random() {
+    // Same-bank row misses can't exploit bank parallelism: the adversarial
+    // stream must not beat uniform random (which spreads over all banks).
+    let mut p = platform_1600();
+    let rnd = run(&mut p, &PatternConfig::rnd_read_burst(1, 1024, 9)).read_throughput_gbs();
+    let bank = run(&mut p, &PatternConfig::bank_conflict_read(1, 1024, 9)).read_throughput_gbs();
+    assert!(
+        bank <= rnd * 1.05,
+        "bank-conflict {bank:.2} GB/s must not beat random {rnd:.2} GB/s"
+    );
+}
+
+#[test]
+fn pointer_chase_never_beats_random_and_pays_latency() {
+    // Dependent single-beat accesses (blocking signaling) pay at least the
+    // full row-miss cadence per transaction: the chase can never beat
+    // independent random traffic and sits far below the sequential stream.
+    let mut p = platform_1600();
+    let seq = run(&mut p, &PatternConfig::seq_read_burst(1, 512)).read_throughput_gbs();
+    let rnd = run(&mut p, &PatternConfig::rnd_read_burst(1, 512, 5)).read_throughput_gbs();
+    let chase =
+        run(&mut p, &PatternConfig::pointer_chase_read(4 << 20, 512, 5)).read_throughput_gbs();
+    assert!(
+        chase <= rnd * 1.001,
+        "dependent chase {chase:.2} GB/s must not beat independent random {rnd:.2} GB/s"
+    );
+    assert!(chase < seq / 2.0, "chase {chase:.2} far below sequential {seq:.2}");
+    assert!(chase > 0.0, "chase still makes progress");
+}
+
+#[test]
+fn phased_pattern_sits_between_its_phases() {
+    let mut p = platform_1600();
+    let seq = run(&mut p, &PatternConfig::seq_read_burst(1, 1024)).read_throughput_gbs();
+    let rnd = run(&mut p, &PatternConfig::rnd_read_burst(1, 1024, 7)).read_throughput_gbs();
+    let mut cfg = PatternConfig::seq_read_burst(1, 1024);
+    cfg.addr = AddrMode::Phased(vec![
+        (AddrMode::Sequential, 256),
+        (AddrMode::Random { seed: 7 }, 256),
+    ]);
+    let phased = run(&mut p, &cfg).read_throughput_gbs();
+    assert!(
+        phased < seq && phased > rnd * 0.9,
+        "phased {phased:.2} between rnd {rnd:.2} and seq {seq:.2}"
+    );
 }
 
 #[test]

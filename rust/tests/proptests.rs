@@ -340,6 +340,219 @@ fn prop_batch_counters_conserve() {
     );
 }
 
+// --------------------------------------------------- pattern-engine modes
+
+/// Draw one of the engine's address modes (all variants, random params).
+fn gen_addr_mode(rng: &mut SplitMix64) -> AddrMode {
+    match rng.below(6) {
+        0 => AddrMode::Sequential,
+        1 => AddrMode::Random { seed: rng.next_u64() >> 1 },
+        2 => AddrMode::Strided { stride: 64 + rng.below(1 << 20) },
+        3 => AddrMode::BankConflict { seed: rng.next_u64() >> 1 },
+        4 => AddrMode::PointerChase {
+            seed: rng.next_u64() >> 1,
+            working_set: 4096 + rng.below(8 << 20),
+        },
+        _ => {
+            let n = 1 + rng.below(3);
+            let phases = (0..n)
+                .map(|_| {
+                    let inner = match rng.below(3) {
+                        0 => AddrMode::Sequential,
+                        1 => AddrMode::Random { seed: 11 },
+                        _ => AddrMode::Strided { stride: 4096 },
+                    };
+                    (inner, 1 + rng.below(64) as u32)
+                })
+                .collect();
+            AddrMode::Phased(phases)
+        }
+    }
+}
+
+#[test]
+fn prop_every_mode_burst_aligned_and_in_region() {
+    // The engine's core contract: whatever the mode, every generated
+    // address is aligned to the transaction span and inside the region.
+    let geo = DramGeometry::profpga_board();
+    check(
+        "all addr modes: aligned, in-region",
+        300,
+        |rng| {
+            let mode = gen_addr_mode(rng);
+            let burst = 1u32 << rng.below(8); // 1..=128
+            let start = rng.below(1 << 28) & !63;
+            let region = (1u64 << (17 + rng.below(10))).max(4096); // 128 KiB..64 MiB
+            (mode, burst, start, region)
+        },
+        |(mode, burst, start, region)| {
+            let mut cfg = PatternConfig::seq_read_burst(*burst, 1);
+            cfg.addr = mode.clone();
+            cfg.validate().map_err(|e| e.to_string())?;
+            let spec = BurstSpec { len: *burst, kind: BurstKind::Incr };
+            let mut g =
+                ddr4bench::trafficgen::AddrGen::new(mode, *start, *region, spec, 32, &geo);
+            let align = g.alignment();
+            for i in 0..512 {
+                let a = g.next_addr();
+                if a % align != 0 {
+                    return Err(format!("addr {i} = {a:#x} not {align}-aligned"));
+                }
+                if a < (*start & !(align - 1))
+                    || a >= (*start & !(align - 1)) + (*region).max(align)
+                {
+                    return Err(format!("addr {i} = {a:#x} escapes region"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_same_seed_same_stream() {
+    // Determinism across every mode: identical parameters => identical
+    // address streams (the reproducibility contract of the paper's
+    // run-time configuration).
+    let geo = DramGeometry::profpga_board();
+    check(
+        "all addr modes: same seed => same stream",
+        200,
+        |rng| (gen_addr_mode(rng), 1u32 << rng.below(6)),
+        |(mode, burst)| {
+            let spec = BurstSpec { len: *burst, kind: BurstKind::Incr };
+            let mut a =
+                ddr4bench::trafficgen::AddrGen::new(mode, 0, 16 << 20, spec, 32, &geo);
+            let mut b =
+                ddr4bench::trafficgen::AddrGen::new(mode, 0, 16 << 20, spec, 32, &geo);
+            for i in 0..256 {
+                let (x, y) = (a.next_addr(), b.next_addr());
+                if x != y {
+                    return Err(format!("step {i}: {x:#x} != {y:#x}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pointer_chase_visits_whole_working_set() {
+    // Full-period chase: over one cycle the chase touches every slot of
+    // its (power-of-two) working set exactly once.
+    let geo = DramGeometry::profpga_board();
+    check(
+        "pointer chase is a full-cycle permutation",
+        80,
+        |rng| {
+            let slots_pow = 4 + rng.below(8); // 16..=2048 slots of 64 B
+            (rng.next_u64() >> 1, 1u64 << slots_pow)
+        },
+        |&(seed, slots)| {
+            let ws = slots * 64;
+            let mode = AddrMode::PointerChase { seed, working_set: ws };
+            let spec = BurstSpec { len: 1, kind: BurstKind::Incr };
+            let mut g = ddr4bench::trafficgen::AddrGen::new(&mode, 0, 1 << 30, spec, 32, &geo);
+            if g.chase_slots() != Some(slots) {
+                return Err(format!("expected {slots} slots, got {:?}", g.chase_slots()));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..slots {
+                let a = g.next_addr();
+                if a >= ws {
+                    return Err(format!("addr {a:#x} outside working set {ws:#x}"));
+                }
+                if !seen.insert(a) {
+                    return Err(format!("slot {a:#x} revisited at step {i} of {slots}"));
+                }
+            }
+            if seen.len() as u64 != slots {
+                return Err(format!("visited {} of {slots} slots", seen.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bank_conflict_pins_bank_and_walks_rows() {
+    let geo = DramGeometry::profpga_board();
+    check(
+        "bank conflict: constant bank, fresh row each txn",
+        100,
+        |rng| rng.next_u64() >> 1,
+        |&seed| {
+            let mode = AddrMode::BankConflict { seed };
+            let spec = BurstSpec { len: 1, kind: BurstKind::Incr };
+            let mut g = ddr4bench::trafficgen::AddrGen::new(&mode, 0, 256 << 20, spec, 32, &geo);
+            let mut prev: Option<ddr4bench::ddr4::DramAddr> = None;
+            for _ in 0..128 {
+                let d = geo.decode(g.next_addr());
+                if let Some(p) = prev {
+                    if d.bank != p.bank {
+                        return Err(format!("bank drifted {} -> {}", p.bank, d.bank));
+                    }
+                    if d.row == p.row {
+                        return Err(format!("row {} repeated back-to-back", d.row));
+                    }
+                }
+                prev = Some(d);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_phased_is_exact_concatenation() {
+    // A phased walk replays its component generators' streams verbatim,
+    // switching after exactly the configured transaction counts.
+    let geo = DramGeometry::profpga_board();
+    check(
+        "phased = interleaved component streams",
+        100,
+        |rng| {
+            let a = 1 + rng.below(32) as u32;
+            let b = 1 + rng.below(32) as u32;
+            (rng.next_u64() >> 1, a, b)
+        },
+        |&(seed, na, nb)| {
+            let spec = BurstSpec { len: 1, kind: BurstKind::Incr };
+            let region = 1 << 20;
+            let phased = AddrMode::Phased(vec![
+                (AddrMode::Sequential, na),
+                (AddrMode::Random { seed }, nb),
+            ]);
+            let mut g = ddr4bench::trafficgen::AddrGen::new(&phased, 0, region, spec, 32, &geo);
+            let mut seq =
+                ddr4bench::trafficgen::AddrGen::new(&AddrMode::Sequential, 0, region, spec, 32, &geo);
+            let mut rnd = ddr4bench::trafficgen::AddrGen::new(
+                &AddrMode::Random { seed },
+                0,
+                region,
+                spec,
+                32,
+                &geo,
+            );
+            for round in 0..3 {
+                for i in 0..na {
+                    let (x, y) = (g.next_addr(), seq.next_addr());
+                    if x != y {
+                        return Err(format!("round {round} seq[{i}]: {x:#x} != {y:#x}"));
+                    }
+                }
+                for i in 0..nb {
+                    let (x, y) = (g.next_addr(), rnd.next_addr());
+                    if x != y {
+                        return Err(format!("round {round} rnd[{i}]: {x:#x} != {y:#x}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_pattern_config_roundtrip() {
     check(

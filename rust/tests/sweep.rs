@@ -1,0 +1,139 @@
+//! End-to-end tests of the campaign sweep executive: cartesian expansion,
+//! parallel execution on the work-stealing pool, artifact emission, and
+//! consistency with direct `Platform` runs.
+
+use std::collections::HashSet;
+
+use ddr4bench::config::{PatternConfig, SpeedBin};
+use ddr4bench::platform::sweep::{
+    job_csv, job_json, preset, run_sweep, summary_json, write_artifacts, SweepSpec,
+};
+use ddr4bench::platform::Platform;
+
+/// A small spec (fast enough for CI) that still exercises two speeds, two
+/// channel counts and all three adversarial patterns = 12 jobs.
+fn small_grid() -> SweepSpec {
+    let mut spec = SweepSpec::paper_grid();
+    for (_, cfg) in &mut spec.patterns {
+        cfg.batch_len = 64;
+    }
+    spec
+}
+
+#[test]
+fn twelve_job_grid_runs_in_parallel() {
+    let jobs = small_grid().expand();
+    assert_eq!(jobs.len(), 12);
+    let outcomes = run_sweep(jobs, 4).unwrap();
+    assert_eq!(outcomes.len(), 12);
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.job.id, i);
+        let c = &o.agg.counters;
+        assert_eq!(
+            c.rd_txns + c.wr_txns,
+            64 * o.job.channels as u64,
+            "job {i} ({}) conserves transactions across {} channel(s)",
+            o.job.label,
+            o.job.channels
+        );
+        assert!(o.agg.total_throughput_gbs() > 0.0, "job {i} moved data");
+    }
+    // the grid really covers the cartesian product
+    let speeds: HashSet<u32> = outcomes.iter().map(|o| o.job.speed.data_rate_mts()).collect();
+    let channels: HashSet<usize> = outcomes.iter().map(|o| o.job.channels).collect();
+    let labels: HashSet<&str> = outcomes.iter().map(|o| o.job.label.as_str()).collect();
+    assert_eq!(speeds, HashSet::from([1600, 2400]));
+    assert_eq!(channels, HashSet::from([1, 2]));
+    assert_eq!(labels, HashSet::from(["strided", "bank", "chase"]));
+}
+
+#[test]
+fn sweep_matches_direct_platform_run() {
+    // The executive adds orchestration, not measurement: a sweep job's
+    // numbers equal a direct run of the same (design, pattern) point.
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1];
+    spec.patterns = vec![("strided".into(), PatternConfig::strided_read(64 << 10, 4, 256))];
+    let outcomes = run_sweep(spec.expand(), 2).unwrap();
+    assert_eq!(outcomes.len(), 1);
+
+    let mut p = Platform::new(ddr4bench::config::DesignConfig::single_channel(
+        SpeedBin::Ddr4_1600,
+    ));
+    let direct = p.run_batch(0, &PatternConfig::strided_read(64 << 10, 4, 256)).unwrap();
+    let (a, b) = (outcomes[0].agg.read_throughput_gbs(), direct.read_throughput_gbs());
+    assert!((a - b).abs() / b < 1e-9, "sweep {a} vs direct {b}");
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    let serial = run_sweep(spec.expand(), 1).unwrap();
+    let parallel = run_sweep(spec.expand(), 8).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.job.id, p.job.id);
+        assert_eq!(s.agg.counters.rd_txns, p.agg.counters.rd_txns);
+        assert_eq!(s.agg.counters.rd_bytes, p.agg.counters.rd_bytes);
+        assert_eq!(s.agg.counters.total_cycles, p.agg.counters.total_cycles);
+    }
+}
+
+#[test]
+fn artifacts_written_one_json_and_csv_per_job() {
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_2400];
+    spec.channels = vec![1];
+    let outcomes = run_sweep(spec.expand(), 3).unwrap();
+    let dir = std::env::temp_dir().join(format!("ddr4bench_sweep_test_{}", std::process::id()));
+    let summary = write_artifacts(&outcomes, &dir).unwrap();
+    assert!(summary.ends_with("BENCH_sweep.json"));
+    let summary_text = std::fs::read_to_string(&summary).unwrap();
+    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v1\""));
+    let mut jsons = 0;
+    let mut csvs = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("json") if path != summary => {
+                jsons += 1;
+                let text = std::fs::read_to_string(&path).unwrap();
+                assert!(text.contains("\"total_gbs\""), "{path:?}");
+            }
+            Some("csv") => {
+                csvs += 1;
+                let text = std::fs::read_to_string(&path).unwrap();
+                assert_eq!(text.lines().count(), 2, "{path:?}: header + one row");
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(jsons, outcomes.len(), "one JSON per job");
+    assert_eq!(csvs, outcomes.len(), "one CSV per job");
+    // summary embeds every job
+    for o in &outcomes {
+        assert!(summary_text.contains(&format!("\"id\": {}", o.job.id)));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn summary_and_job_renderers_agree() {
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1];
+    spec.patterns = vec![preset("bank").unwrap()];
+    spec.patterns[0].1.batch_len = 32;
+    let outcomes = run_sweep(spec.expand(), 1).unwrap();
+    let j = job_json(&outcomes[0]);
+    let s = summary_json(&outcomes, "test-run");
+    assert!(s.contains("\"source\": \"test-run\""));
+    // every key of the job object appears in the summary's embedded copy
+    for key in ["\"pattern\"", "\"rd_gbs\"", "\"wall_ms\"", "\"per_channel_total_gbs\""] {
+        assert!(j.contains(key) && s.contains(key), "{key}");
+    }
+    let c = job_csv(&outcomes[0]);
+    assert!(c.starts_with("id,speed,"));
+}

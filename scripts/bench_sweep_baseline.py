@@ -1,0 +1,113 @@
+"""Generate the committed ``BENCH_sweep.json`` baseline from the analytic
+bandwidth model.
+
+The canonical generator for this file is the simulator-backed sweep
+executive::
+
+    cargo run --release -- sweep --speeds 1600,2400 --channels 1,2 \
+        --patterns strided,bank,chase --jobs 4 --out sweep-out
+
+This script exists for environments without a Rust toolchain: it walks
+the same 12-job grid (the Fig. 2 data rates x {1, 2} channels x the
+three adversarial patterns) through ``python/compile/model.py``'s
+``bw_model`` — the jnp twin of ``rust/src/analytic`` — and emits the
+same ``ddr4bench.sweep.v1`` schema with ``"source"`` marking the values
+as analytic predictions rather than simulator measurements. Fields the
+model cannot predict (latency, wall time, refresh, energy) are null.
+
+Run from the repo root: ``python3 scripts/bench_sweep_baseline.py``
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+import numpy as np  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# (label, burst_len, row_hostile, cfg echo) — mirrors sweep::preset() in
+# rust/src/platform/sweep.rs; read_frac is 1.0 (read-only presets).
+PATTERNS = [
+    (
+        "strided",
+        4.0,
+        1.0,  # 64 KiB stride >= row span -> row-miss service time
+        "OP=R ADDR=STRIDE STRIDE=65536 BURST=4 TYPE=INCR SIG=NB BATCH=2048",
+    ),
+    ("bank", 1.0, 1.0, "OP=R ADDR=BANK SEED=1 BURST=1 TYPE=INCR SIG=NB BATCH=1024"),
+    (
+        "chase",
+        1.0,
+        1.0,
+        "OP=R ADDR=CHASE SEED=7 WSET=4194304 BURST=1 TYPE=INCR SIG=BLK BATCH=1024",
+    ),
+]
+SPEEDS = [1600, 2400]
+CHANNELS = [1, 2]
+
+# BwFeatures order: rate, burst_len, random, read_frac, beat_bytes,
+# addr_interval, lookahead, outstanding (ControllerParams defaults).
+def feature_row(rate, blen, hostile):
+    return [rate, blen, hostile, 1.0, 32.0, 2.0, 4.0, 8.0]
+
+
+def main():
+    rows, meta = [], []
+    job_id = 0
+    for rate in SPEEDS:
+        for ch in CHANNELS:
+            for label, blen, hostile, cfg in PATTERNS:
+                rows.append(feature_row(rate, blen, hostile))
+                meta.append((job_id, rate, ch, label, cfg))
+                job_id += 1
+    feats = np.zeros((model.BWMODEL_BLOCK, model.BWMODEL_FEATURES), np.float32)
+    feats[: len(rows)] = np.asarray(rows, np.float32)
+    preds = np.asarray(model.bw_model(feats))[: len(rows)]
+
+    jobs = []
+    for (jid, rate, ch, label, cfg), per_channel in zip(meta, preds):
+        total = float(per_channel) * ch
+        jobs.append(
+            {
+                "schema": "ddr4bench.sweep.v1",
+                "id": jid,
+                "speed": f"DDR4-{rate}",
+                "data_rate_mts": rate,
+                "channels": ch,
+                "pattern": label,
+                "cfg": cfg,
+                "rd_gbs": round(total, 6),
+                "wr_gbs": 0.0,
+                "total_gbs": round(total, 6),
+                "rd_lat_ns": None,
+                "wr_lat_ns": None,
+                "refresh_stall_ck": None,
+                "mismatches": None,
+                "energy_nj": None,
+                "pj_per_bit": None,
+                "wall_ms": None,
+                "per_channel_total_gbs": [round(float(per_channel), 6)] * ch,
+            }
+        )
+    doc = {
+        "schema": "ddr4bench.sweep.v1",
+        "source": (
+            "analytic-model baseline (python/compile/model.py bw_model); "
+            "regenerate with the simulator: cargo run --release -- sweep "
+            "--speeds 1600,2400 --channels 1,2 --patterns strided,bank,chase "
+            "--jobs 4 --out sweep-out"
+        ),
+        "jobs": jobs,
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(out)} ({len(jobs)} jobs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+//! Offline shim for the subset of [`anyhow`](https://docs.rs/anyhow) that
+//! `ddr4bench` uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Error values carry a rendered message only (no backtraces, no
+//! downcasting). Like the real crate, [`Error`] deliberately does *not*
+//! implement `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion that makes `?` work.
+
+use std::fmt;
+
+/// A rendered error message, convertible from any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a pre-rendered message.
+    pub fn from_msg(msg: String) -> Self {
+        Self { msg }
+    }
+
+    /// Build an error from anything displayable.
+    pub fn from_display(e: &dyn fmt::Display) -> Self {
+        Self { msg: e.to_string() }
+    }
+
+    /// Prepend context, anyhow-style (`context: original`).
+    pub fn wrap(self, context: impl fmt::Display) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::from_msg(format!($msg $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_display(&$err)
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the error/`None` case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error/`None` case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from_msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::from_msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::from_msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn macros_format_and_wrap() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        let s = String::from("plain");
+        let e2 = anyhow!(s);
+        assert_eq!(format!("{e2:?}"), "plain");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading").unwrap_err();
+        assert_eq!(e.to_string(), "loading: boom");
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(3u32).context("ok").unwrap(), 3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Inert stand-in for the PJRT/XLA bindings (`xla` crate) used by
+//! `rust/src/runtime`. It mirrors the API surface that module calls so the
+//! crate compiles and runs everywhere without the native XLA closure;
+//! every entry point that would touch PJRT returns [`XlaError`] instead.
+//!
+//! `XlaRuntime::load` therefore always fails in this configuration, which
+//! the rest of the codebase already treats as "no runtime attached" (the
+//! pure-Rust data path). Point the `xla` path dependency at the real
+//! bindings to light the AOT-artifact path back up; `rust/src/runtime`
+//! compiles unchanged against either.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT support is not compiled in (offline stub; see vendor/README.md)";
+
+/// Error type of the stub: every operation fails with this.
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn unavailable() -> Self {
+        Self { msg: UNAVAILABLE.to_string() }
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Stub result alias matching the real crate's fallible signatures.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Host-side literal (tensor) handle.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice (stub: shape is not retained).
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+
+    /// Unwrap a single-element tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+
+    /// Copy the literal's elements out as a vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Device-side buffer returned by executions.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable())
+    }
+
+    /// PJRT platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given input literals.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_and_uniformly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let err = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(err.contains("not compiled in"), "{err}");
+    }
+}
