@@ -20,7 +20,7 @@ use ddr4bench::resource;
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new("paper_campaign", "regenerate every paper table/figure")
         .option("scale", "campaign scale factor (default 1.0)")
-        .option("only", "comma-separated subset: table3,table4,fig2,fig3,scaling,analysis,modelcheck")
+        .option("only", "comma subset: table3,table4,fig2,fig3,scaling,analysis,modelcheck")
         .option("outdir", "CSV output directory (default results)");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli.parse(&argv) {

@@ -38,7 +38,10 @@ fn main() -> anyhow::Result<()> {
          PatternConfig::mixed(AddrMode::Sequential, 128, 1024)),
     ];
 
-    println!("{:<46} {:>8} {:>8} {:>8} {:>10}", "pattern", "rd GB/s", "wr GB/s", "total", "lat (ns)");
+    println!(
+        "{:<46} {:>8} {:>8} {:>8} {:>10}",
+        "pattern", "rd GB/s", "wr GB/s", "total", "lat (ns)"
+    );
     for (name, cfg) in &patterns {
         let stats = platform.run_batch(0, cfg)?;
         println!(

@@ -15,7 +15,7 @@
 
 use ddr4bench::benchkit::Bench;
 use ddr4bench::config::{AddrMode, DesignConfig, OpMix, PatternConfig, SpeedBin};
-use ddr4bench::ddr4::AddrMapping;
+use ddr4bench::ddr4::MappingPolicy;
 use ddr4bench::platform::Platform;
 
 fn gbs(design: DesignConfig, cfg: &PatternConfig, op: OpMix) -> f64 {
@@ -82,12 +82,12 @@ fn main() {
     }
 
     println!("-- address mapping --");
-    for mapping in [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol] {
+    for mapping in MappingPolicy::builtins() {
         let mut d = base();
         d.geometry.mapping = mapping;
         let s = gbs(d.clone(), &seq_mb, OpMix::ReadOnly);
         let r = gbs(d, &rnd_single, OpMix::ReadOnly);
-        println!("  {mapping:?}: seq-MB {s:.2} GB/s, rnd-single {r:.2} GB/s");
+        println!("  {mapping}: seq-MB {s:.2} GB/s, rnd-single {r:.2} GB/s");
     }
 
     // Timed versions of the two most expensive ablations.
@@ -99,9 +99,7 @@ fn main() {
         }
     });
     bench.bench("ablation/mapping_sweep", || {
-        for mapping in
-            [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol]
-        {
+        for mapping in MappingPolicy::builtins() {
             let mut d = base();
             d.geometry.mapping = mapping;
             std::hint::black_box(gbs(d, &seq_mb, OpMix::ReadOnly));

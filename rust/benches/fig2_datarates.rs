@@ -30,7 +30,7 @@ fn main() {
     let series = |f: &ddr4bench::report::Figure, label: &str| {
         f.series.iter().find(|s| s.label == label).unwrap().points.clone()
     };
-    println!("2400/1600 uplift by burst length (paper: seq up to 1.50x, rnd 1.07x@16 -> 1.32x@128):");
+    println!("2400/1600 uplift by burst length (paper: seq to 1.50x, rnd 1.07x@16 -> 1.32x@128):");
     for (key, name) in [("Seq-R", "seq read"), ("Rnd-R", "rnd read")] {
         let a = series(f16, key);
         let b = series(f24, key);

@@ -37,7 +37,10 @@ fn main() {
         let df = (row.res.ff - ff).abs() / ff.max(1.0);
         worst = worst.max(dl).max(df);
         println!(
-            "  {:<24} LUT {:>6.0} ({:>6.0})  FF {:>6.0} ({:>6.0})  BRAM {:>5} ({:>5})  DSP {:>2} ({:>2})",
+            concat!(
+                "  {:<24} LUT {:>6.0} ({:>6.0})  FF {:>6.0} ({:>6.0})  ",
+                "BRAM {:>5} ({:>5})  DSP {:>2} ({:>2})"
+            ),
             name, row.res.lut, lut, row.res.ff, ff, row.res.bram, bram, row.res.dsp, dsp
         );
     }

@@ -133,7 +133,11 @@ mod tests {
         let find = |ch: usize| {
             points
                 .iter()
-                .find(|p| p.channels == ch && p.speed == SpeedBin::Ddr4_2400 && p.workload == "seq-read-128")
+                .find(|p| {
+                    p.channels == ch
+                        && p.speed == SpeedBin::Ddr4_2400
+                        && p.workload == "seq-read-128"
+                })
                 .unwrap()
                 .gbs
         };

@@ -24,7 +24,7 @@
 pub mod dse;
 
 use crate::config::{OpMix, PatternConfig, SpeedBin};
-use crate::ddr4::TimingParams;
+use crate::ddr4::{DramGeometry, TimingParams};
 
 /// Model inputs distilled from a (design, pattern) pair — the 8 feature
 /// columns of the `bwmodel` artifact, in order.
@@ -169,6 +169,51 @@ pub fn predict_pattern(speed: SpeedBin, cfg: &PatternConfig, beat_bytes: u32) ->
     predict_gbs(&f, cfg.op)
 }
 
+/// Throughput derate for the active address-mapping policy — the
+/// mapping-aware half of the row-miss accounting.
+///
+/// Row-hostile patterns already pay the full row-cycle cost inside
+/// [`predict_gbs`], and bank-interleaved mappings (sequential bank
+/// rotation ≥ 2) overlap their per-row ACT/PRE with the other banks'
+/// CAS streams, so both cases derate by 1.0 — which keeps the 8-feature
+/// `bwmodel` XLA artifact (and its pinned-value parity tests) untouched.
+/// Row-major mappings (`row_bank_col`, `bank_row_col`) confine a
+/// sequential stream to a single bank: every row boundary exposes the
+/// whole PRE + ACT + CAS turnaround, amortized over the stream's row
+/// visit — a full row for page-mode orders, a single burst for
+/// row-thrash orders like `CoBaBgRo` where the row field sits below the
+/// column field.
+pub fn mapping_derate(geo: &DramGeometry, cfg: &PatternConfig, speed: SpeedBin) -> f32 {
+    if cfg.addr.row_hostile() {
+        return 1.0;
+    }
+    let sizes = geo.field_sizes();
+    let rotation = geo.mapping.seq_bank_rotation(&sizes);
+    if rotation >= 2 {
+        return 1.0;
+    }
+    let t = TimingParams::for_bin(speed);
+    let reopen = (t.trp + t.trcd + t.cl) as f32;
+    let per_visit = geo.mapping.seq_row_visit_bursts(&sizes) as f32 * t.burst_cycles as f32;
+    per_visit / (per_visit + reopen)
+}
+
+/// Predict throughput for a (speed, pattern) pair under an explicit
+/// geometry: the pattern's `MAP=` override (when set) re-maps the
+/// geometry before the mapping derate is applied.
+pub fn predict_pattern_mapped(
+    speed: SpeedBin,
+    cfg: &PatternConfig,
+    beat_bytes: u32,
+    geo: &DramGeometry,
+) -> f32 {
+    let mut g = *geo;
+    if let Some(m) = cfg.mapping {
+        g.mapping = m;
+    }
+    predict_pattern(speed, cfg, beat_bytes) * mapping_derate(&g, cfg, speed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +260,35 @@ mod tests {
         ) / predict_pattern(SpeedBin::Ddr4_1600, &PatternConfig::rnd_read_burst(4, 1, 0), 32);
         assert!(seq_ratio > 1.35, "sequential uplift {seq_ratio}");
         assert!(rnd_ratio < seq_ratio, "random gains less: {rnd_ratio} < {seq_ratio}");
+    }
+
+    #[test]
+    fn mapping_derate_penalizes_row_major_sequential_only() {
+        use crate::ddr4::MappingPolicy;
+        let geo = crate::ddr4::DramGeometry::profpga_board();
+        let seq = PatternConfig::seq_read_burst(32, 1);
+        let rnd = PatternConfig::rnd_read_burst(32, 1, 0);
+        // bank-interleaved default and XOR hash: no derate
+        assert_eq!(mapping_derate(&geo, &seq, SpeedBin::Ddr4_1600), 1.0);
+        let mut g = geo;
+        g.mapping = MappingPolicy::xor_hash();
+        assert_eq!(mapping_derate(&g, &seq, SpeedBin::Ddr4_1600), 1.0);
+        // row-major: sequential pays the amortized row reopen
+        g.mapping = MappingPolicy::row_bank_col();
+        let d = mapping_derate(&g, &seq, SpeedBin::Ddr4_1600);
+        assert!(d < 1.0 && d > 0.5, "row-major seq derate {d}");
+        // a row-thrash order (new row every burst, same bank) is far worse
+        g.mapping = MappingPolicy::parse("CoBaBgRo").unwrap();
+        let thrash = mapping_derate(&g, &seq, SpeedBin::Ddr4_1600);
+        assert!(thrash < 0.5 && thrash < d, "thrash derate {thrash} vs row-major {d}");
+        // row-hostile traffic already pays full row misses: no derate
+        assert_eq!(mapping_derate(&g, &rnd, SpeedBin::Ddr4_1600), 1.0);
+        // and the mapped predictor composes base model x derate
+        let base = predict_pattern(SpeedBin::Ddr4_1600, &seq, 32);
+        let mut cfg = seq.clone();
+        cfg.mapping = Some(MappingPolicy::row_bank_col());
+        let mapped = predict_pattern_mapped(SpeedBin::Ddr4_1600, &cfg, 32, &geo);
+        assert!(mapped < base, "mapped {mapped} vs base {base}");
     }
 
     #[test]

@@ -90,7 +90,10 @@ impl Cli {
 
     /// Render help text.
     pub fn help(&self) -> String {
-        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [COMMAND] [OPTIONS]\n", self.name, self.about, self.name);
+        let mut s = format!(
+            "{} — {}\n\nUSAGE:\n  {} [COMMAND] [OPTIONS]\n",
+            self.name, self.about, self.name
+        );
         if !self.commands.is_empty() {
             s.push_str("\nCOMMANDS:\n");
             for (c, h) in &self.commands {

@@ -19,11 +19,12 @@
 mod parse;
 
 pub use parse::{
-    format_pattern_config, parse_design_config, parse_kv_text, parse_pattern_config,
-    parse_u64_with_suffix, ConfigError,
+    format_pattern_config, parse_controller_tokens, parse_design_config, parse_kv_text,
+    parse_pattern_config, parse_u64_with_suffix, ConfigError,
 };
 
 use crate::ddr4::geometry::DramGeometry;
+use crate::ddr4::mapping::MappingPolicy;
 
 /// JEDEC DDR4 speed bins supported by the platform — the four the paper's
 /// campaign covers (§III, Table II).
@@ -592,6 +593,11 @@ pub struct PatternConfig {
     /// Verify read data against expected contents (costs nothing in the
     /// model; in hardware it instantiates the checker).
     pub verify: bool,
+    /// Address-mapping policy override for this batch (`MAP=` token).
+    /// `None` runs under the design geometry's policy; `Some` re-maps the
+    /// channel at run time — both the traffic generator's decode and the
+    /// geometry-derived adversarial streams follow it.
+    pub mapping: Option<MappingPolicy>,
 }
 
 impl PatternConfig {
@@ -609,6 +615,7 @@ impl PatternConfig {
             region_bytes: Self::DEFAULT_REGION,
             data: DataPattern::default(),
             verify: false,
+            mapping: None,
         }
     }
 
@@ -624,12 +631,14 @@ impl PatternConfig {
 
     /// Random read burst pattern.
     pub fn rnd_read_burst(burst_len: u32, batch_len: u32, seed: u64) -> Self {
-        Self::base(OpMix::ReadOnly, AddrMode::Random { seed }, BurstSpec::incr(burst_len), batch_len)
+        let addr = AddrMode::Random { seed };
+        Self::base(OpMix::ReadOnly, addr, BurstSpec::incr(burst_len), batch_len)
     }
 
     /// Random write burst pattern.
     pub fn rnd_write_burst(burst_len: u32, batch_len: u32, seed: u64) -> Self {
-        Self::base(OpMix::WriteOnly, AddrMode::Random { seed }, BurstSpec::incr(burst_len), batch_len)
+        let addr = AddrMode::Random { seed };
+        Self::base(OpMix::WriteOnly, addr, BurstSpec::incr(burst_len), batch_len)
     }
 
     /// 50/50 mixed pattern.
@@ -759,7 +768,8 @@ mod tests {
     #[test]
     fn design_validate_watermarks() {
         let mut d = DesignConfig::default();
-        d.controller.write_drain_low = d.controller.write_drain_high;
+        let high = d.controller.write_drain_high;
+        d.controller.write_drain_low = high;
         assert!(d.validate().is_err());
     }
 

@@ -10,6 +10,7 @@ use super::{
     AddrMode, BurstKind, ControllerParams, CounterSet, DataPattern, DesignConfig, OpMix,
     PatternConfig, Signaling, SpeedBin,
 };
+use crate::ddr4::mapping::MappingPolicy;
 use std::collections::BTreeMap;
 
 /// Error produced when parsing or validating a configuration.
@@ -63,7 +64,11 @@ pub fn parse_kv_text(text: &str) -> Result<BTreeMap<String, String>, ConfigError
     Ok(map)
 }
 
-fn get_usize(map: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize, ConfigError> {
+fn get_usize(
+    map: &BTreeMap<String, String>,
+    key: &str,
+    default: usize,
+) -> Result<usize, ConfigError> {
     match map.get(key) {
         None => Ok(default),
         Some(v) => v
@@ -110,6 +115,7 @@ pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
 /// channels = 3
 /// speed = 2400                 # or "ddr4-2400"
 /// axi_width = 256              # bits
+/// mapping = row_col_bank       # address-mapping policy (or e.g. RoBaBgCo)
 /// [counters]  batch_cycles/latency/refresh/integrity = true|false
 /// [controller] read_queue_depth / write_queue_depth / lookahead /
 ///              write_drain_high / write_drain_low / outstanding_cap /
@@ -118,10 +124,14 @@ pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
 pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
     let map = parse_kv_text(text)?;
     let mut cfg = DesignConfig::default();
-    cfg.channels = get_usize(&map, "channels", cfg.channels)?;
     if let Some(v) = map.get("speed") {
         cfg.speed = SpeedBin::parse(v)
             .ok_or_else(|| ConfigError::new(format!("speed: unknown bin `{v}`")))?;
+    }
+    cfg.channels = get_usize(&map, "channels", cfg.channels)?;
+    if let Some(v) = map.get("mapping") {
+        cfg.geometry.mapping = MappingPolicy::parse(v)
+            .ok_or_else(|| ConfigError::new(format!("mapping: unknown policy `{v}`")))?;
     }
     cfg.axi_data_width_bits = get_u32(&map, "axi_width", cfg.axi_data_width_bits)?;
     cfg.counters = CounterSet {
@@ -164,6 +174,7 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
 /// STRIDE=8k  WSET=1m  PHASES=SEQ@512,RND@512  BURST=32
 /// TYPE=FIXED|INCR|WRAP  SIG=NB|BLK|AGR  BATCH=4096  START=0  REGION=256m
 /// DATA=PRBS|ZEROS|<hex>  VERIFY=0|1
+/// MAP=row_col_bank|row_bank_col|bank_row_col|xor_hash|<order, e.g. RoBaBgCo>
 /// ```
 ///
 /// Pattern parameters are order-independent: `SEED`, `STRIDE` and `WSET`
@@ -266,7 +277,9 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
                     hex => {
                         let w = u32::from_str_radix(hex.trim_start_matches("0X"), 16)
                             .map_err(|_| {
-                                ConfigError::new(format!("DATA: expected PRBS|ZEROS|hex, got `{val}`"))
+                                ConfigError::new(format!(
+                                    "DATA: expected PRBS|ZEROS|hex, got `{val}`"
+                                ))
                             })?;
                         DataPattern::Constant(w)
                     }
@@ -282,6 +295,11 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
             }
             "VERIFY" => {
                 p.verify = matches!(upval.as_str(), "1" | "TRUE" | "ON" | "YES");
+            }
+            "MAP" => {
+                p.mapping = Some(MappingPolicy::parse(val).ok_or_else(|| {
+                    ConfigError::new(format!("MAP: unknown mapping policy `{val}`"))
+                })?);
             }
             _ => return Err(ConfigError::new(format!("unknown pattern key `{k}`"))),
         }
@@ -431,7 +449,66 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
         DataPattern::Constant(w) => s.push_str(&format!(" DATA={w:08x}")),
     }
     s.push_str(&format!(" VERIFY={}", u8::from(p.verify)));
+    if let Some(m) = &p.mapping {
+        s.push_str(&format!(" MAP={}", m.name()));
+    }
     s
+}
+
+/// Apply `KEY=VALUE` controller-knob tokens on top of `base` — the syntax
+/// of the sweep spec's `[knobs]` section and the CLI `--knobs` axis.
+/// Recognized keys (short aliases in parentheses): `lookahead` (`la`),
+/// `read_queue_depth` (`rq`), `write_queue_depth` (`wq`),
+/// `write_drain_high` (`whi`), `write_drain_low` (`wlo`),
+/// `outstanding_cap` (`cap`), `idle_precharge_cycles` (`idle_pre`),
+/// `addr_cmd_interval_axi` (`addr_interval`), `serial_frontend`,
+/// `miss_flush`, `mode_dwell_ck` (`dwell`).
+pub fn parse_controller_tokens(
+    base: ControllerParams,
+    tokens: &[&str],
+) -> Result<ControllerParams, ConfigError> {
+    let mut p = base;
+    for tok in tokens {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| ConfigError::new(format!("knob: expected KEY=VALUE, got `{tok}`")))?;
+        let key = k.trim().to_ascii_lowercase();
+        let val = v.trim();
+        let as_usize = || -> Result<usize, ConfigError> {
+            val.parse()
+                .map_err(|_| ConfigError::new(format!("knob {key}: expected int, got `{val}`")))
+        };
+        let as_u32 = || -> Result<u32, ConfigError> {
+            val.parse()
+                .map_err(|_| ConfigError::new(format!("knob {key}: expected int, got `{val}`")))
+        };
+        let as_bool = || -> Result<bool, ConfigError> {
+            match val.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                _ => Err(ConfigError::new(format!("knob {key}: expected bool, got `{val}`"))),
+            }
+        };
+        match key.as_str() {
+            "lookahead" | "la" => p.lookahead = as_usize()?,
+            "read_queue_depth" | "rq" => p.read_queue_depth = as_usize()?,
+            "write_queue_depth" | "wq" => p.write_queue_depth = as_usize()?,
+            "write_drain_high" | "whi" => p.write_drain_high = as_usize()?,
+            "write_drain_low" | "wlo" => p.write_drain_low = as_usize()?,
+            "outstanding_cap" | "cap" => p.outstanding_cap = as_usize()?,
+            "idle_precharge_cycles" | "idle_pre" => p.idle_precharge_cycles = as_u32()?,
+            "addr_cmd_interval_axi" | "addr_interval" => p.addr_cmd_interval_axi = as_u32()?,
+            "serial_frontend" => p.serial_frontend = as_bool()?,
+            "miss_flush" => p.miss_flush = as_bool()?,
+            "mode_dwell_ck" | "dwell" => p.mode_dwell_ck = as_u32()?,
+            other => return Err(ConfigError::new(format!("unknown controller knob `{other}`"))),
+        }
+    }
+    Ok(p)
 }
 
 #[cfg(test)]
@@ -602,6 +679,46 @@ mod tests {
             let q = parse_pattern_config(&toks2).unwrap();
             assert_eq!(p, q, "round-trip through `{text}`");
         }
+    }
+
+    #[test]
+    fn map_token_parses_and_roundtrips() {
+        let p = parse_pattern_config(&["ADDR=SEQ", "MAP=row_bank_col"]).unwrap();
+        assert_eq!(p.mapping, Some(MappingPolicy::row_bank_col()));
+        let p = parse_pattern_config(&["MAP=XOR"]).unwrap();
+        assert_eq!(p.mapping, Some(MappingPolicy::xor_hash()));
+        let p = parse_pattern_config(&["MAP=RoBaBgCo"]).unwrap();
+        assert_eq!(p.mapping, Some(MappingPolicy::parse("RoBaBgCo").unwrap()));
+        assert!(parse_pattern_config(&["MAP=frobnicate"]).is_err());
+        // MAP= survives the format/parse round trip
+        for map in ["row_col_bank", "bank_row_col", "xor_hash", "XorRoBaBgCo"] {
+            let p = parse_pattern_config(&["ADDR=BANK", "SEED=5", &format!("MAP={map}")]).unwrap();
+            let text = format_pattern_config(&p);
+            assert!(text.contains("MAP="), "{text}");
+            let toks: Vec<&str> = text.split_whitespace().collect();
+            assert_eq!(parse_pattern_config(&toks).unwrap(), p, "`{text}`");
+        }
+    }
+
+    #[test]
+    fn design_config_mapping_key() {
+        let cfg = parse_design_config("mapping = bank_row_col\n").unwrap();
+        assert_eq!(cfg.geometry.mapping, MappingPolicy::bank_row_col());
+        assert!(parse_design_config("mapping = nope\n").is_err());
+    }
+
+    #[test]
+    fn controller_knob_tokens() {
+        let d = ControllerParams::default();
+        let p = parse_controller_tokens(d, &["lookahead=8", "wq=32", "serial_frontend=off"])
+            .unwrap();
+        assert_eq!(p.lookahead, 8);
+        assert_eq!(p.write_queue_depth, 32);
+        assert!(!p.serial_frontend);
+        assert_eq!(p.read_queue_depth, d.read_queue_depth, "untouched knobs keep defaults");
+        assert!(parse_controller_tokens(d, &["nope=1"]).is_err());
+        assert!(parse_controller_tokens(d, &["lookahead=abc"]).is_err());
+        assert!(parse_controller_tokens(d, &["lookahead"]).is_err());
     }
 
     #[test]

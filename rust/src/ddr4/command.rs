@@ -23,7 +23,10 @@ impl Cmd {
     /// The flat bank index this command targets, if bank-specific.
     pub fn bank(&self) -> Option<u32> {
         match *self {
-            Cmd::Act { bank, .. } | Cmd::Pre { bank } | Cmd::Rd { bank, .. } | Cmd::Wr { bank, .. } => {
+            Cmd::Act { bank, .. }
+            | Cmd::Pre { bank }
+            | Cmd::Rd { bank, .. }
+            | Cmd::Wr { bank, .. } => {
                 Some(bank)
             }
             Cmd::PreAll | Cmd::Ref => None,

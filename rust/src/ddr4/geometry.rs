@@ -7,41 +7,18 @@
 //! banks; the channel inherits that bank structure since all devices receive
 //! the same commands.
 //!
-//! The address-mapping policy is the memory controller's choice (PG150's
-//! `MEM_ADDR_ORDER`); [`AddrMapping::RowColBank`] is the MIG default for
-//! AXI designs and the profile used in the paper reproduction: consecutive
-//! BL8 bursts rotate across banks (and therefore bank groups), which is
-//! what lets sequential streams pipeline ACTs and dodge tCCD_L.
+//! How a linear address is scattered over (row, bank group, bank, column)
+//! is delegated to the runtime-selectable [`MappingPolicy`] engine in
+//! [`super::mapping`] (PG150's `MEM_ADDR_ORDER` in hardware);
+//! [`MappingPolicy::row_col_bank`] is the MIG default for AXI designs and
+//! the profile used in the paper reproduction: consecutive BL8 bursts
+//! rotate across banks (and therefore bank groups), which is what lets
+//! sequential streams pipeline ACTs and dodge tCCD_L.
+
+use super::mapping::{DramCoord, FieldSizes, MappingPolicy};
 
 /// Burst length of DDR4 (fixed BL8 in this platform, as in MIG).
 pub const BURST_LEN: u32 = 8;
-
-/// How the linear byte address is scattered over (row, bank, column).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AddrMapping {
-    /// row | column | bank | burst-offset — MIG default (`ROW_COLUMN_BANK`).
-    /// Sequential bursts interleave across banks.
-    RowColBank,
-    /// row | bank | column | burst-offset (`ROW_BANK_COLUMN`). Sequential
-    /// bursts stream within one row of one bank before moving on.
-    RowBankCol,
-    /// bank | row | column | burst-offset (`BANK_ROW_COLUMN`). Large
-    /// regions stay in one bank; worst sequential-ACT behaviour, used in
-    /// the mapping ablation.
-    BankRowCol,
-}
-
-impl AddrMapping {
-    /// Parse "row_col_bank" style names.
-    pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().replace('-', "_").as_str() {
-            "row_col_bank" | "rowcolbank" => Some(AddrMapping::RowColBank),
-            "row_bank_col" | "rowbankcol" => Some(AddrMapping::RowBankCol),
-            "bank_row_col" | "bankrowcol" => Some(AddrMapping::BankRowCol),
-            _ => None,
-        }
-    }
-}
 
 /// Geometry of one DRAM channel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,7 +34,7 @@ pub struct DramGeometry {
     /// Column addresses per row (per device; BL8 bursts consume 8).
     pub cols: u32,
     /// Address-mapping policy.
-    pub mapping: AddrMapping,
+    pub mapping: MappingPolicy,
 }
 
 /// A fully decoded DRAM location (one BL8 burst's worth of address).
@@ -89,7 +66,7 @@ impl DramGeometry {
             banks_per_group: 4,
             rows: 32768,
             cols: 1024,
-            mapping: AddrMapping::RowColBank,
+            mapping: MappingPolicy::row_col_bank(),
         }
     }
 
@@ -118,6 +95,22 @@ impl DramGeometry {
         self.cols / BURST_LEN
     }
 
+    /// The radix of each coordinate field, for the mapping engine.
+    pub fn field_sizes(&self) -> FieldSizes {
+        FieldSizes {
+            rows: self.rows as u64,
+            groups: self.bank_groups as u64,
+            banks_per_group: self.banks_per_group as u64,
+            col_bursts: self.bursts_per_row() as u64,
+        }
+    }
+
+    /// Bytes between consecutive rows of the same bank under the active
+    /// mapping policy (the bank-conflict generator's adversarial stride).
+    pub fn row_step_bytes(&self) -> u64 {
+        self.mapping.row_step_bursts(&self.field_sizes()) * self.burst_bytes() as u64
+    }
+
     /// Validate power-of-two fields and sane sizes.
     pub fn validate(&self) -> Result<(), String> {
         for (name, v) in [
@@ -137,66 +130,30 @@ impl DramGeometry {
         Ok(())
     }
 
-    /// Decode a byte address into a DRAM location. The address is first
-    /// burst-aligned (low `log2(burst_bytes)` bits dropped) and wrapped to
-    /// capacity.
-    pub fn decode(&self, byte_addr: u64) -> DramAddr {
-        let burst_index =
-            (byte_addr % self.capacity_bytes()) / self.burst_bytes() as u64;
-        let banks = self.banks() as u64;
-        let bursts_per_row = self.bursts_per_row() as u64;
-        match self.mapping {
-            AddrMapping::RowColBank => {
-                // Bank-group bits lowest (MIG's DDR4 default): consecutive
-                // bursts alternate bank groups so back-to-back CAS pay
-                // tCCD_S, not tCCD_L.
-                let group = (burst_index % self.bank_groups as u64) as u32;
-                let in_group = ((burst_index / self.bank_groups as u64)
-                    % self.banks_per_group as u64) as u32;
-                let bank = group * self.banks_per_group + in_group;
-                let rest = burst_index / banks;
-                let col = ((rest % bursts_per_row) as u32) * BURST_LEN;
-                let row = (rest / bursts_per_row) as u32;
-                DramAddr { bank, row, col }
-            }
-            AddrMapping::RowBankCol => {
-                let col = ((burst_index % bursts_per_row) as u32) * BURST_LEN;
-                let rest = burst_index / bursts_per_row;
-                let bank = (rest % banks) as u32;
-                let row = (rest / banks) as u32;
-                DramAddr { bank, row, col }
-            }
-            AddrMapping::BankRowCol => {
-                let col = ((burst_index % bursts_per_row) as u32) * BURST_LEN;
-                let rest = burst_index / bursts_per_row;
-                let row = (rest % self.rows as u64) as u32;
-                let bank = (rest / self.rows as u64) as u32;
-                DramAddr { bank, row, col }
-            }
-        }
+    /// Decode a byte address into a structured DRAM coordinate. The
+    /// address is first burst-aligned (low `log2(burst_bytes)` bits
+    /// dropped) and wrapped to capacity.
+    pub fn decode_coord(&self, byte_addr: u64) -> DramCoord {
+        let burst_index = (byte_addr % self.capacity_bytes()) / self.burst_bytes() as u64;
+        self.mapping.decode_burst(burst_index, &self.field_sizes())
     }
 
-    /// Re-encode a DRAM location into the byte address of its burst
-    /// (inverse of [`Self::decode`]; used by the bijectivity property test).
+    /// Decode a byte address into a flat-bank DRAM location.
+    pub fn decode(&self, byte_addr: u64) -> DramAddr {
+        self.decode_coord(byte_addr).to_flat(self.banks_per_group)
+    }
+
+    /// Re-encode a DRAM coordinate into the byte address of its burst
+    /// (inverse of [`Self::decode_coord`]; bijectivity is property-tested
+    /// for every mapping policy).
+    pub fn encode_coord(&self, c: DramCoord) -> u64 {
+        self.mapping.encode_burst(c, &self.field_sizes()) * self.burst_bytes() as u64
+    }
+
+    /// Re-encode a flat-bank DRAM location into its byte address
+    /// (inverse of [`Self::decode`]).
     pub fn encode(&self, a: DramAddr) -> u64 {
-        let banks = self.banks() as u64;
-        let bursts_per_row = self.bursts_per_row() as u64;
-        let col_burst = (a.col / BURST_LEN) as u64;
-        let burst_index = match self.mapping {
-            AddrMapping::RowColBank => {
-                let group = (a.bank / self.banks_per_group) as u64;
-                let in_group = (a.bank % self.banks_per_group) as u64;
-                let low = in_group * self.bank_groups as u64 + group;
-                (a.row as u64 * bursts_per_row + col_burst) * banks + low
-            }
-            AddrMapping::RowBankCol => {
-                (a.row as u64 * banks + a.bank as u64) * bursts_per_row + col_burst
-            }
-            AddrMapping::BankRowCol => {
-                (a.bank as u64 * self.rows as u64 + a.row as u64) * bursts_per_row + col_burst
-            }
-        };
-        burst_index * self.burst_bytes() as u64
+        self.encode_coord(DramCoord::from_flat(a, self.banks_per_group))
     }
 }
 
@@ -241,7 +198,7 @@ mod tests {
     #[test]
     fn row_bank_col_streams_within_row() {
         let mut g = DramGeometry::profpga_board();
-        g.mapping = AddrMapping::RowBankCol;
+        g.mapping = MappingPolicy::row_bank_col();
         // first 8KiB stays in bank 0 row 0
         for i in 0..128u64 {
             let a = g.decode(i * 64);
@@ -253,14 +210,31 @@ mod tests {
     }
 
     #[test]
+    fn xor_hash_pins_no_bank_to_a_row_stride() {
+        // The stride that pins one bank under the MIG order fans out
+        // across banks when the XOR hash folds the row into the bank.
+        let mut g = DramGeometry::profpga_board();
+        g.mapping = MappingPolicy::xor_hash();
+        let step = g.row_step_bytes();
+        let banks: std::collections::HashSet<u32> =
+            (0..8u64).map(|r| g.decode(r * step).bank).collect();
+        assert_eq!(banks.len(), 8, "XOR hash spreads the row stride over all banks");
+    }
+
+    #[test]
     fn decode_encode_roundtrip_all_mappings() {
-        for mapping in [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol]
-        {
+        let mut policies = MappingPolicy::builtins().to_vec();
+        policies.push(MappingPolicy::parse("RoBaBgCo").unwrap());
+        policies.push(MappingPolicy::parse("XorRoBaBgCo").unwrap());
+        for mapping in policies {
             let mut g = DramGeometry::profpga_board();
             g.mapping = mapping;
             for addr in [0u64, 64, 4096, 8 << 10, 1 << 20, (2 << 30) - 64] {
                 let dec = g.decode(addr);
-                assert_eq!(g.encode(dec), addr & !63, "{mapping:?} addr={addr}");
+                assert_eq!(g.encode(dec), addr & !63, "{mapping} addr={addr}");
+                let coord = g.decode_coord(addr);
+                assert_eq!(coord.to_flat(g.banks_per_group), dec);
+                assert_eq!(g.encode_coord(coord), addr & !63);
             }
         }
     }
@@ -293,9 +267,12 @@ mod tests {
     }
 
     #[test]
-    fn mapping_parse() {
-        assert_eq!(AddrMapping::parse("row_col_bank"), Some(AddrMapping::RowColBank));
-        assert_eq!(AddrMapping::parse("ROW-BANK-COL"), Some(AddrMapping::RowBankCol));
-        assert_eq!(AddrMapping::parse("nope"), None);
+    fn row_step_bytes_per_policy() {
+        let mut g = DramGeometry::profpga_board();
+        // Ro is the MSB field: one row step spans all banks' rows (64 KiB)
+        assert_eq!(g.row_step_bytes(), 8 * g.row_bytes());
+        g.mapping = MappingPolicy::bank_row_col();
+        // Ro sits directly above Co: one row step is one row (8 KiB)
+        assert_eq!(g.row_step_bytes(), g.row_bytes());
     }
 }

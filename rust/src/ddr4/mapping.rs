@@ -1,0 +1,501 @@
+//! Runtime-configurable DRAM address-mapping policy engine.
+//!
+//! How a linear byte address is split into bank-group / bank / row /
+//! column bits is the memory controller's choice (PG150's
+//! `MEM_ADDR_ORDER` in hardware), and it is one of the strongest levers
+//! on row-hit rate and bank-level parallelism: bank-interleaved orders
+//! pipeline ACTs across banks and dodge tCCD_L, row-major orders maximize
+//! open-page streaks, and permutation (XOR) hashes break pathological
+//! stride-to-bank resonance. This module makes that choice a *run-time*
+//! parameter of the platform.
+//!
+//! A [`MappingPolicy`] is an MSB→LSB interleave order of the four address
+//! [`Field`]s (row `Ro`, bank group `Bg`, bank `Ba`, column `Co`),
+//! optionally composed with an XOR bank hash that folds the low row bits
+//! into the bank index. Every policy implements a bijective
+//! `decode(addr) -> DramCoord` / `encode(coord) -> addr` pair over the
+//! channel geometry (property-tested in `rust/tests/proptests.rs`).
+//!
+//! Built-in policies (all reachable via `MAP=<name>` in the config-file /
+//! CLI / host-protocol token syntax, plus arbitrary custom orders like
+//! `MAP=RoBaBgCo`):
+//!
+//! | name           | order (MSB→LSB) | behaviour                         |
+//! |----------------|-----------------|-----------------------------------|
+//! | `row_col_bank` | Ro Co Ba Bg     | MIG default; bursts rotate banks  |
+//! | `row_bank_col` | Ro Bg Ba Co     | open-page row-major streaming     |
+//! | `bank_row_col` | Bg Ba Ro Co     | bank-interleaved large regions    |
+//! | `xor_hash`     | Ro Co Ba Bg ⊕   | permutation-style XOR bank hash   |
+
+use super::geometry::{DramAddr, BURST_LEN};
+
+/// One field of the DRAM coordinate. The discriminants index the
+/// scratch arrays of the mixed-radix decode/encode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Field {
+    /// Row within a bank (`Ro`).
+    Row = 0,
+    /// Bank group (`Bg`).
+    Group = 1,
+    /// Bank within its group (`Ba`).
+    Bank = 2,
+    /// Column, in BL8-burst units (`Co`).
+    Col = 3,
+}
+
+impl Field {
+    /// All fields, in discriminant order.
+    pub const ALL: [Field; 4] = [Field::Row, Field::Group, Field::Bank, Field::Col];
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Two-letter token used in custom bit-order strings.
+    pub fn token(self) -> &'static str {
+        match self {
+            Field::Row => "Ro",
+            Field::Group => "Bg",
+            Field::Bank => "Ba",
+            Field::Col => "Co",
+        }
+    }
+
+    /// Number of distinct values of this field under the given sizes.
+    fn size(self, s: &FieldSizes) -> u64 {
+        match self {
+            Field::Row => s.rows,
+            Field::Group => s.groups,
+            Field::Bank => s.banks_per_group,
+            Field::Col => s.col_bursts,
+        }
+    }
+}
+
+/// The radix of each coordinate field — derived from a
+/// [`DramGeometry`](super::geometry::DramGeometry) via
+/// [`field_sizes`](super::geometry::DramGeometry::field_sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FieldSizes {
+    /// Rows per bank.
+    pub rows: u64,
+    /// Bank groups per channel.
+    pub groups: u64,
+    /// Banks per bank group.
+    pub banks_per_group: u64,
+    /// BL8 bursts per row (columns / 8).
+    pub col_bursts: u64,
+}
+
+impl FieldSizes {
+    /// Total banks in the channel.
+    pub fn banks(&self) -> u64 {
+        self.groups * self.banks_per_group
+    }
+}
+
+/// A fully decomposed DRAM location: the structured form of
+/// [`DramAddr`], with the bank group split out from the flat bank index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DramCoord {
+    /// Bank-group index.
+    pub group: u32,
+    /// Bank index *within its group*.
+    pub bank: u32,
+    /// Row within the bank.
+    pub row: u32,
+    /// Column address of the burst (aligned to BL8, i.e. multiple of 8).
+    pub col: u32,
+}
+
+impl DramCoord {
+    /// Flat bank index (`group * banks_per_group + bank`).
+    pub fn flat_bank(&self, banks_per_group: u32) -> u32 {
+        self.group * banks_per_group + self.bank
+    }
+
+    /// Build from a flat-bank [`DramAddr`].
+    pub fn from_flat(a: DramAddr, banks_per_group: u32) -> Self {
+        Self {
+            group: a.bank / banks_per_group,
+            bank: a.bank % banks_per_group,
+            row: a.row,
+            col: a.col,
+        }
+    }
+
+    /// Collapse to the flat-bank [`DramAddr`] the controller queues use.
+    pub fn to_flat(self, banks_per_group: u32) -> DramAddr {
+        DramAddr { bank: self.flat_bank(banks_per_group), row: self.row, col: self.col }
+    }
+}
+
+/// A runtime-selectable address-mapping policy: an MSB→LSB order of the
+/// four coordinate fields, optionally composed with an XOR bank hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MappingPolicy {
+    /// Field interleave order, most-significant first.
+    order: [Field; 4],
+    /// Fold the low row bits into the (flat) bank index with XOR. The
+    /// fold is its own inverse, so the policy stays bijective.
+    xor_hash: bool,
+}
+
+impl MappingPolicy {
+    /// MIG's DDR4 default `ROW_COLUMN_BANK` (Ro Co Ba Bg): consecutive
+    /// bursts alternate bank groups (tCCD_S path) and rotate all banks.
+    pub fn row_col_bank() -> Self {
+        Self { order: [Field::Row, Field::Col, Field::Bank, Field::Group], xor_hash: false }
+    }
+
+    /// `ROW_BANK_COLUMN` (Ro Bg Ba Co): sequential streams stay inside
+    /// one row of one bank before moving on (open-page row-major).
+    pub fn row_bank_col() -> Self {
+        Self { order: [Field::Row, Field::Group, Field::Bank, Field::Col], xor_hash: false }
+    }
+
+    /// `BANK_ROW_COLUMN` (Bg Ba Ro Co): large address regions stay in a
+    /// single bank; worst sequential-ACT behaviour, used in ablations.
+    pub fn bank_row_col() -> Self {
+        Self { order: [Field::Group, Field::Bank, Field::Row, Field::Col], xor_hash: false }
+    }
+
+    /// Permutation-style XOR bank hash over the MIG base order: the low
+    /// row bits are XOR-folded into the bank index, so strided streams
+    /// that would resonate onto one bank get spread across all of them.
+    pub fn xor_hash() -> Self {
+        Self { order: [Field::Row, Field::Col, Field::Bank, Field::Group], xor_hash: true }
+    }
+
+    /// A custom field order (MSB→LSB), optionally XOR-hashed. The XOR
+    /// fold swizzles the bank bits with the *row* bits, so it is only
+    /// constructible when the row field is more significant than both
+    /// bank fields — folding upward would smear one bank's rows across
+    /// the whole address space.
+    pub fn custom(order: [Field; 4], xor_hash: bool) -> Option<Self> {
+        let mut seen = [false; 4];
+        for f in order {
+            if seen[f.idx()] {
+                return None;
+            }
+            seen[f.idx()] = true;
+        }
+        if xor_hash {
+            let at = |f: Field| order.iter().position(|o| *o == f).unwrap();
+            if at(Field::Row) > at(Field::Group) || at(Field::Row) > at(Field::Bank) {
+                return None;
+            }
+        }
+        Some(Self { order, xor_hash })
+    }
+
+    /// The field interleave order in force (MSB→LSB).
+    pub fn order(&self) -> [Field; 4] {
+        self.order
+    }
+
+    /// Is the XOR bank hash enabled?
+    pub fn is_xor_hashed(&self) -> bool {
+        self.xor_hash
+    }
+
+    /// Parse a policy name: a built-in (`row_col_bank`, `row_bank_col`,
+    /// `bank_row_col`, `xor_hash`) or a custom bit-order string such as
+    /// `RoBaBgCo` / `ba-ro-co` (a bare `Ba` without `Bg` means the flat
+    /// bank, i.e. `Bg` immediately above `Ba`), optionally prefixed with
+    /// `xor` to enable the bank hash. Case- and separator-insensitive.
+    pub fn parse(s: &str) -> Option<Self> {
+        let norm: String =
+            s.chars().filter(char::is_ascii_alphanumeric).collect::<String>().to_ascii_lowercase();
+        match norm.as_str() {
+            "rowcolbank" | "rocobabg" | "mig" | "default" => return Some(Self::row_col_bank()),
+            "rowbankcol" | "robgbaco" | "openpage" => return Some(Self::row_bank_col()),
+            "bankrowcol" | "bgbaroco" => return Some(Self::bank_row_col()),
+            "xor" | "xorhash" | "xorbankhash" | "permute" => return Some(Self::xor_hash()),
+            _ => {}
+        }
+        match norm.strip_prefix("xor") {
+            Some(rest) if !rest.is_empty() => Self::parse_order(rest, true),
+            _ => Self::parse_order(&norm, false),
+        }
+    }
+
+    /// Parse a lowercase run of 2-letter field tokens into an order.
+    fn parse_order(norm: &str, xor_hash: bool) -> Option<Self> {
+        if norm.len() % 2 != 0 {
+            return None;
+        }
+        let mut fields = Vec::with_capacity(4);
+        for chunk in norm.as_bytes().chunks(2) {
+            let f = match chunk {
+                b"ro" => Field::Row,
+                b"bg" => Field::Group,
+                b"ba" => Field::Bank,
+                b"co" => Field::Col,
+                _ => return None,
+            };
+            if fields.contains(&f) {
+                return None;
+            }
+            fields.push(f);
+        }
+        // A 3-token order with a bare `Ba` treats it as the flat bank:
+        // the group field slots in directly above the bank field.
+        if fields.len() == 3 && fields.contains(&Field::Bank) && !fields.contains(&Field::Group) {
+            let at = fields.iter().position(|f| *f == Field::Bank).unwrap();
+            fields.insert(at, Field::Group);
+        }
+        if fields.len() != 4 {
+            return None;
+        }
+        Self::custom([fields[0], fields[1], fields[2], fields[3]], xor_hash)
+    }
+
+    /// Canonical name: the built-in name when the policy matches one,
+    /// otherwise the bit-order string (`RoBaBgCo`, `XorBaRoCo`, …).
+    /// `MappingPolicy::parse` of the result reproduces the policy.
+    pub fn name(&self) -> String {
+        if *self == Self::row_col_bank() {
+            return "row_col_bank".into();
+        }
+        if *self == Self::row_bank_col() {
+            return "row_bank_col".into();
+        }
+        if *self == Self::bank_row_col() {
+            return "bank_row_col".into();
+        }
+        if *self == Self::xor_hash() {
+            return "xor_hash".into();
+        }
+        let mut s = String::with_capacity(11);
+        if self.xor_hash {
+            s.push_str("Xor");
+        }
+        for f in self.order {
+            s.push_str(f.token());
+        }
+        s
+    }
+
+    /// All built-in policies (the `MAPPINGS` host-protocol listing).
+    pub fn builtins() -> [MappingPolicy; 4] {
+        [Self::row_col_bank(), Self::row_bank_col(), Self::bank_row_col(), Self::xor_hash()]
+    }
+
+    /// Decode a BL8 burst index into a DRAM coordinate (mixed-radix digit
+    /// extraction in field order, then the optional XOR bank fold).
+    pub fn decode_burst(&self, burst_index: u64, s: &FieldSizes) -> DramCoord {
+        let mut rest = burst_index;
+        let mut vals = [0u64; 4];
+        for f in self.order.iter().rev() {
+            let size = f.size(s).max(1);
+            vals[f.idx()] = rest % size;
+            rest /= size;
+        }
+        let row = vals[Field::Row.idx()];
+        let mut group = vals[Field::Group.idx()];
+        let mut bank = vals[Field::Bank.idx()];
+        if self.xor_hash {
+            let flat = (group * s.banks_per_group + bank) ^ (row & (s.banks() - 1));
+            group = flat / s.banks_per_group;
+            bank = flat % s.banks_per_group;
+        }
+        DramCoord {
+            group: group as u32,
+            bank: bank as u32,
+            row: row as u32,
+            col: (vals[Field::Col.idx()] as u32) * BURST_LEN,
+        }
+    }
+
+    /// Re-encode a DRAM coordinate into its BL8 burst index — the exact
+    /// inverse of [`Self::decode_burst`] (the XOR fold is self-inverse).
+    pub fn encode_burst(&self, c: DramCoord, s: &FieldSizes) -> u64 {
+        let mut group = c.group as u64;
+        let mut bank = c.bank as u64;
+        if self.xor_hash {
+            let flat = (group * s.banks_per_group + bank) ^ (c.row as u64 & (s.banks() - 1));
+            group = flat / s.banks_per_group;
+            bank = flat % s.banks_per_group;
+        }
+        let mut vals = [0u64; 4];
+        vals[Field::Row.idx()] = c.row as u64;
+        vals[Field::Group.idx()] = group;
+        vals[Field::Bank.idx()] = bank;
+        vals[Field::Col.idx()] = (c.col / BURST_LEN) as u64;
+        let mut idx = 0u64;
+        for f in self.order {
+            idx = idx * f.size(s).max(1) + vals[f.idx()];
+        }
+        idx
+    }
+
+    /// Bursts between consecutive rows of the same bank: the product of
+    /// the field sizes below `Ro` in the interleave order. The
+    /// bank-conflict generator derives its adversarial stride from this.
+    pub fn row_step_bursts(&self, s: &FieldSizes) -> u64 {
+        let at = self.order.iter().position(|f| *f == Field::Row).unwrap();
+        self.order[at + 1..].iter().map(|f| f.size(s).max(1)).product()
+    }
+
+    /// How many distinct banks a sequential burst stream rotates across
+    /// before reusing one: the product of the bank/group field sizes that
+    /// sit below *both* the column and the row fields (a bank field above
+    /// either only changes once that field exhausts, so it contributes no
+    /// rotation — 1 for row-major orders, where the whole row streams
+    /// from a single bank). The XOR hash always spreads a sequential
+    /// stream across every bank. Feeds the analytic model's row-miss
+    /// accounting.
+    pub fn seq_bank_rotation(&self, s: &FieldSizes) -> u64 {
+        if self.xor_hash {
+            return s.banks();
+        }
+        let at = |f: Field| self.order.iter().position(|o| *o == f).unwrap();
+        let below = at(Field::Col).max(at(Field::Row));
+        self.order[below + 1..]
+            .iter()
+            .filter(|f| matches!(f, Field::Group | Field::Bank))
+            .map(|f| f.size(s).max(1))
+            .product()
+    }
+
+    /// Consecutive bursts a sequential stream spends in one row of one
+    /// bank before that row closes: the full row when the column field
+    /// sits below the row field (normal page-mode orders), a single
+    /// burst when the row field is less significant than the column —
+    /// the pathological row-thrash orders like `CoBaBgRo`. Sets the
+    /// amortization window of the analytic model's row-reopen cost.
+    pub fn seq_row_visit_bursts(&self, s: &FieldSizes) -> u64 {
+        let at = |f: Field| self.order.iter().position(|o| *o == f).unwrap();
+        if at(Field::Col) > at(Field::Row) {
+            s.col_bursts.max(1)
+        } else {
+            1
+        }
+    }
+}
+
+impl std::fmt::Display for MappingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+impl Default for MappingPolicy {
+    fn default() -> Self {
+        Self::row_col_bank()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes() -> FieldSizes {
+        // the proFPGA board: 2 groups x 4 banks, 32768 rows, 128 bursts
+        FieldSizes { rows: 32768, groups: 2, banks_per_group: 4, col_bursts: 128 }
+    }
+
+    #[test]
+    fn builtin_names_roundtrip_through_parse() {
+        for p in MappingPolicy::builtins() {
+            assert_eq!(MappingPolicy::parse(&p.name()), Some(p), "{}", p.name());
+        }
+        // legacy geometry names still resolve
+        assert_eq!(MappingPolicy::parse("row-col-bank"), Some(MappingPolicy::row_col_bank()));
+        assert_eq!(MappingPolicy::parse("ROW_BANK_COL"), Some(MappingPolicy::row_bank_col()));
+        assert_eq!(MappingPolicy::parse("XOR"), Some(MappingPolicy::xor_hash()));
+    }
+
+    #[test]
+    fn custom_orders_parse_and_roundtrip() {
+        let p = MappingPolicy::parse("RoBaBgCo").unwrap();
+        assert_eq!(p.order(), [Field::Row, Field::Bank, Field::Group, Field::Col]);
+        assert_eq!(MappingPolicy::parse(&p.name()), Some(p));
+        // 3-token orders expand the bare bank to the flat bank
+        assert_eq!(MappingPolicy::parse("BaRoCo"), Some(MappingPolicy::bank_row_col()));
+        assert_eq!(MappingPolicy::parse("ro-ba-co"), Some(MappingPolicy::row_bank_col()));
+        // xor prefix composes with custom orders whose row sits on top
+        let x = MappingPolicy::parse("xor_RoBaBgCo").unwrap();
+        assert!(x.is_xor_hashed());
+        assert_eq!(MappingPolicy::parse(&x.name()), Some(x));
+        // …but not with bank bits above the row bits (nothing to fold)
+        assert_eq!(MappingPolicy::parse("xor_BaRoCo"), None);
+    }
+
+    #[test]
+    fn bad_orders_rejected() {
+        for bad in ["nope", "RoRoBaCo", "RoBa", "RoBgBa", "RoBgBaCoCo", "xor"] {
+            let p = MappingPolicy::parse(bad);
+            // "xor" alone is the builtin hash; everything else must fail
+            if bad == "xor" {
+                assert_eq!(p, Some(MappingPolicy::xor_hash()));
+            } else {
+                assert_eq!(p, None, "`{bad}` should not parse");
+            }
+        }
+        assert!(MappingPolicy::custom([Field::Row; 4], false).is_none());
+    }
+
+    #[test]
+    fn decode_encode_bijective_for_every_builtin_and_a_custom() {
+        let s = sizes();
+        let total = s.rows * s.groups * s.banks_per_group * s.col_bursts;
+        let mut policies = MappingPolicy::builtins().to_vec();
+        policies.push(MappingPolicy::parse("XorRoBaBgCo").unwrap());
+        for p in policies {
+            for idx in [0u64, 1, 7, 127, 128, 1 << 12, total / 2, total - 1] {
+                let c = p.decode_burst(idx, &s);
+                assert_eq!(p.encode_burst(c, &s), idx, "{} idx={idx}", p.name());
+                assert!(c.group < 2 && c.bank < 4 && c.row < 32768 && c.col < 1024);
+            }
+        }
+    }
+
+    #[test]
+    fn xor_hash_spreads_rows_of_one_burst_column_across_banks() {
+        let s = sizes();
+        let p = MappingPolicy::xor_hash();
+        let step = p.row_step_bursts(&s); // advance the row field by one
+        let banks: std::collections::HashSet<u32> = (0..8u64)
+            .map(|r| {
+                let c = p.decode_burst(r * step, &s);
+                c.flat_bank(s.banks_per_group as u32)
+            })
+            .collect();
+        assert_eq!(banks.len(), 8, "row-stride stream must fan out over all banks");
+    }
+
+    #[test]
+    fn row_step_and_rotation_match_policy_shape() {
+        let s = sizes();
+        // Ro is MSB for both row-major policies: stride spans all banks
+        assert_eq!(MappingPolicy::row_col_bank().row_step_bursts(&s), 128 * 8);
+        assert_eq!(MappingPolicy::row_bank_col().row_step_bursts(&s), 128 * 8);
+        // bank-interleaved: the row field sits directly above the column
+        assert_eq!(MappingPolicy::bank_row_col().row_step_bursts(&s), 128);
+        // sequential bank rotation: all 8 under MIG/XOR, none row-major
+        assert_eq!(MappingPolicy::row_col_bank().seq_bank_rotation(&s), 8);
+        assert_eq!(MappingPolicy::xor_hash().seq_bank_rotation(&s), 8);
+        assert_eq!(MappingPolicy::row_bank_col().seq_bank_rotation(&s), 1);
+        assert_eq!(MappingPolicy::bank_row_col().seq_bank_rotation(&s), 1);
+        // bank fields above the row field contribute no rotation: the
+        // row-thrash order CoBaBgRo reuses its bank on every burst…
+        let thrash = MappingPolicy::parse("CoBaBgRo").unwrap();
+        assert_eq!(thrash.seq_bank_rotation(&s), 1);
+        assert_eq!(thrash.seq_row_visit_bursts(&s), 1, "new row every burst");
+        // …while CoRoBaBg genuinely rotates all banks between row steps
+        assert_eq!(MappingPolicy::parse("CoRoBaBg").unwrap().seq_bank_rotation(&s), 8);
+        // page-mode orders stream a whole row per visit
+        assert_eq!(MappingPolicy::row_bank_col().seq_row_visit_bursts(&s), 128);
+        assert_eq!(MappingPolicy::bank_row_col().seq_row_visit_bursts(&s), 128);
+    }
+
+    #[test]
+    fn coord_flat_conversions_roundtrip() {
+        let c = DramCoord { group: 1, bank: 3, row: 42, col: 64 };
+        let flat = c.to_flat(4);
+        assert_eq!(flat.bank, 7);
+        assert_eq!(DramCoord::from_flat(flat, 4), c);
+    }
+}

@@ -13,12 +13,14 @@ pub mod bank;
 pub mod command;
 pub mod device;
 pub mod geometry;
+pub mod mapping;
 pub mod power;
 pub mod timing;
 
 pub use command::Cmd;
 pub use device::{DdrDevice, DeviceStats};
-pub use geometry::{AddrMapping, DramAddr, DramGeometry, BURST_LEN};
+pub use geometry::{DramAddr, DramGeometry, BURST_LEN};
+pub use mapping::{DramCoord, Field, FieldSizes, MappingPolicy};
 pub use timing::TimingParams;
 
 /// Simulation time in DRAM clock cycles (tCK units).

@@ -16,6 +16,7 @@
 //! RUNALL                      → OK RUNALL CHANNELS=3 AGG_GBS=...
 //! STATS <ch>                   → OK RD_TXNS=.. RD_GBS=.. WR_GBS=.. ...
 //! PATTERNS                     → OK PATTERNS SEQ RND STRIDE BANK ...
+//! MAPPINGS                     → OK MAPPINGS ROW_COL_BANK ... (MAP= names)
 //! RESET <ch>                   → OK RESET
 //! HELP                         → OK <command list>
 //! QUIT                         → OK BYE (closes the session)
@@ -26,7 +27,9 @@
 //! `STRIDE=`, `WSET=` and `PHASES=` parameters — exactly the syntax of
 //! [`parse_pattern_config`], so host sessions can reconfigure a live
 //! platform onto strided, bank-conflict, pointer-chase or phased traffic
-//! between batches without reinstantiation.
+//! between batches without reinstantiation. The same goes for the
+//! address-mapping engine: `MAP=<policy>` re-maps the channel for the
+//! batches that follow (see [`crate::ddr4::MappingPolicy`]).
 //!
 //! Errors answer `ERR <reason>`; the session stays open.
 
@@ -88,10 +91,21 @@ impl HostController {
         let cmd = toks.next().unwrap_or("").to_ascii_uppercase();
         match cmd.as_str() {
             "" => Err("empty command".into()),
-            "HELP" => Ok("COMMANDS: INFO CFG RUN RUNALL STATS PATTERNS RESET HELP QUIT".into()),
+            "HELP" => {
+                Ok("COMMANDS: INFO CFG RUN RUNALL STATS PATTERNS MAPPINGS RESET HELP QUIT".into())
+            }
             "PATTERNS" => {
                 // run-time selectable address modes of the pattern engine
                 Ok("PATTERNS SEQ RND STRIDE BANK CHASE PHASED".into())
+            }
+            "MAPPINGS" => {
+                // run-time selectable address-mapping policies (MAP= token);
+                // custom bit orders like MAP=RoBaBgCo are also accepted
+                let names: Vec<String> = crate::ddr4::MappingPolicy::builtins()
+                    .iter()
+                    .map(|m| m.name().to_ascii_uppercase())
+                    .collect();
+                Ok(format!("MAPPINGS {} CUSTOM", names.join(" ")))
             }
             "INFO" => {
                 let d = self.platform.design();
@@ -276,6 +290,26 @@ mod tests {
             assert!(r.contains(mode), "{r}");
         }
         assert!(h.handle_line("HELP").contains("PATTERNS"));
+    }
+
+    #[test]
+    fn mappings_command_and_map_token_reconfigure_live() {
+        let mut h = host();
+        let r = h.handle_line("MAPPINGS");
+        for name in ["ROW_COL_BANK", "ROW_BANK_COL", "BANK_ROW_COL", "XOR_HASH", "CUSTOM"] {
+            assert!(r.contains(name), "{r}");
+        }
+        assert!(h.handle_line("HELP").contains("MAPPINGS"));
+        // every built-in policy (and a custom order) is selectable live
+        for map in ["row_col_bank", "row_bank_col", "bank_row_col", "xor_hash", "RoBaBgCo"] {
+            let cfg = format!("CFG 0 OP=R ADDR=BANK SEED=1 BURST=1 BATCH=64 MAP={map}");
+            let r = h.handle_line(&cfg);
+            assert!(r.starts_with("OK CFG CH=0"), "`{cfg}` -> {r}");
+            assert!(r.contains("MAP="), "echo carries the policy: {r}");
+            let r = h.handle_line("RUN 0");
+            assert!(r.starts_with("OK RUN CH=0 TXNS=64"), "`{cfg}` -> {r}");
+        }
+        assert!(h.handle_line("CFG 0 MAP=frobnicate").starts_with("ERR"));
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! regenerated on a CPU:
 //!
 //! - [`ddr4`] — the DDR4 SDRAM device: JEDEC speed-bin timing, bank-group /
-//!   bank state machines, refresh, the DDR data bus.
+//!   bank state machines, refresh, the DDR data bus, and the
+//!   runtime-configurable address-mapping engine ([`ddr4::mapping`]:
+//!   bit-interleave orders, XOR bank hash, custom `MAP=` bit-order
+//!   strings — all bijective and property-tested).
 //! - [`controller`] — the memory interface: FR-FCFS command scheduling,
 //!   read/write queues and write draining, open-page policy, refresh
 //!   insertion, the 4:1 PHY:AXI clock ratio.
@@ -30,16 +33,18 @@
 //! - [`platform`] — design-time composition: N channels × data rate ×
 //!   counter set, the batch-run executive, and the
 //!   [`platform::sweep`] campaign executive that expands cartesian
-//!   (speed × channels × pattern) grids into deduplicated job lists and
-//!   runs them on a work-stealing thread pool, emitting per-job JSON/CSV
-//!   artifacts.
+//!   (speed × channels × mapping × controller-knob × pattern) grids into
+//!   deduplicated job lists and runs them on a work-stealing thread pool,
+//!   emitting per-job JSON/CSV artifacts.
 //! - [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   artifacts (payload generator, verifier, analytic bandwidth model) and
 //!   executes them from the hot path; Python never runs at benchmark time.
 //! - [`resource`] — the Table III analytical FPGA resource model.
 //! - [`analytic`] — closed-form DDR4 bandwidth model used to cross-check
 //!   the simulator.
-//! - [`report`] — table / figure-series rendering for the paper artifacts.
+//! - [`report`] — table / figure-series rendering for the paper artifacts,
+//!   plus [`report::compare`]: cross-sweep delta reports over
+//!   `BENCH_sweep.json` files (`ddr4bench compare`).
 //!
 //! ## Quickstart
 //!

@@ -4,8 +4,11 @@
 //! ddr4bench info                         # design summary + XLA artifact status
 //! ddr4bench run --speed 1600 --op R --addr seq --burst 32 --batch 4096
 //! ddr4bench run --addr chase --wset 4m --sig BLK --burst 1   # pattern engine
+//! ddr4bench run --addr bank --map xor_hash           # address-mapping engine
 //! ddr4bench sweep --speeds 1600,2400 --channels 1,2 \
 //!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
+//! ddr4bench sweep --maps row_col_bank,xor_hash --knobs lookahead=1,lookahead=8
+//! ddr4bench compare a/BENCH_sweep.json b/BENCH_sweep.json   # cross-sweep deltas
 //! ddr4bench table3 | table4 | fig2 | fig3 | scaling | analysis | modelcheck
 //! ddr4bench serve --addr-bind 127.0.0.1:5557  # host-controller TCP endpoint
 //! ```
@@ -16,7 +19,7 @@ use ddr4bench::cli::Cli;
 use ddr4bench::config::{parse_pattern_config, DesignConfig, PatternConfig, SpeedBin};
 use ddr4bench::hostctrl::{serve_tcp, HostController};
 use ddr4bench::platform::{sweep, Platform};
-use ddr4bench::report::campaign;
+use ddr4bench::report::{campaign, compare};
 use ddr4bench::resource;
 use ddr4bench::runtime::XlaRuntime;
 
@@ -32,9 +35,10 @@ fn cli() -> Cli {
         .command("analysis", "paper-claim vs measured ratio table (SIII-C)")
         .command("modelcheck", "analytic model vs simulator cross-check")
         .command("serve", "serve the host-controller protocol over TCP")
-        .command("dse", "design-space exploration (analytic model; XLA-batched if artifacts present)")
+        .command("dse", "design-space exploration (analytic model; XLA-batched if present)")
         .command("trace", "replay a memory-access trace file (see trafficgen::trace)")
-        .command("sweep", "run a parallel campaign sweep (speeds x channels x patterns)")
+        .command("sweep", "parallel campaign sweep (speeds x channels x maps x knobs x patterns)")
+        .command("compare", "cross-sweep delta report from two or more BENCH_sweep.json files")
         .option("speed", "data rate: 1600|1866|2133|2400 (default 1600)")
         .option("channels", "memory channels 1-3 (default 1); comma list for sweep")
         .option("op", "R|W|M (default R)")
@@ -43,6 +47,7 @@ fn cli() -> Cli {
         .option("stride", "stride bytes for --addr stride (default 4096; suffixes k/m/g)")
         .option("wset", "working-set bytes for --addr chase (default 1m)")
         .option("phases", "phase list for --addr phased, e.g. SEQ@512,RND@512")
+        .option("map", "address mapping: row_col_bank|row_bank_col|bank_row_col|xor_hash|RoBaBgCo")
         .option("burst", "burst length 1-128 (default 32)")
         .option("btype", "burst type FIXED|INCR|WRAP (default INCR)")
         .option("sig", "signaling NB|BLK|AGR (default NB)")
@@ -53,9 +58,13 @@ fn cli() -> Cli {
         .option("file", "trace file for the trace command")
         .option("speeds", "sweep: comma list of data rates (default 1600,2400)")
         .option("patterns", "sweep: comma list of presets (seq,rnd,strided,bank,chase,phased)")
+        .option("maps", "sweep: comma list of address-mapping policies")
+        .option("knobs", "sweep: controller-knob variants, e.g. lookahead=1,lookahead=8+wq=32")
         .option("spec", "sweep: read the sweep spec from this config file")
         .option("jobs", "sweep: worker threads (default: available parallelism)")
         .option("out", "sweep: write per-job JSON/CSV artifacts + BENCH_sweep.json here")
+        .option("threshold", "compare: regression threshold in percent (default 2.0)")
+        .flag("strict", "compare: exit non-zero when regressions exceed the threshold")
         .flag("verify", "enable data-integrity checking")
         .flag("xla", "require the XLA runtime (error if artifacts missing)")
         .flag("no-xla", "skip loading the XLA runtime")
@@ -71,9 +80,13 @@ fn pattern_from_args(args: &ddr4bench::cli::Args) -> Result<PatternConfig> {
         format!("BATCH={}", args.get_or("batch", "4096")),
     ];
     // pattern-engine parameters (order-independent in the token syntax)
-    for (opt, key) in
-        [("seed", "SEED"), ("stride", "STRIDE"), ("wset", "WSET"), ("phases", "PHASES")]
-    {
+    for (opt, key) in [
+        ("seed", "SEED"),
+        ("stride", "STRIDE"),
+        ("wset", "WSET"),
+        ("phases", "PHASES"),
+        ("map", "MAP"),
+    ] {
         if let Some(v) = args.get(opt) {
             toks.push(format!("{key}={v}"));
         }
@@ -116,6 +129,12 @@ fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec>
             .filter(|t| !t.is_empty())
             .map(|name| sweep::preset(name).ok_or_else(|| anyhow!("unknown pattern `{name}`")))
             .collect::<Result<_>>()?;
+    }
+    if let Some(v) = args.get("maps") {
+        spec.mappings = sweep::parse_mapping_list(v)?;
+    }
+    if let Some(v) = args.get("knobs") {
+        spec.knobs = sweep::parse_knob_list(v)?;
     }
     Ok(spec)
 }
@@ -270,7 +289,11 @@ fn main() -> Result<()> {
             let mut t = ddr4bench::report::Table::new(
                 format!(
                     "Design-space exploration ({} predictions)",
-                    if rt.as_ref().is_some_and(|r| r.has_bwmodel()) { "XLA bwmodel" } else { "rust model" }
+                    if rt.as_ref().is_some_and(|r| r.has_bwmodel()) {
+                        "XLA bwmodel"
+                    } else {
+                        "rust model"
+                    }
                 ),
                 &["Ch", "Rate", "Workload", "GB/s", "LUT", "GB/s per kLUT"],
             );
@@ -289,7 +312,10 @@ fn main() -> Result<()> {
                 let front = ddr4bench::analytic::dse::pareto(&points, wl);
                 let desc: Vec<String> = front
                     .iter()
-                    .map(|p| format!("{}ch@{} ({:.1} GB/s, {:.0} LUT)", p.channels, p.speed, p.gbs, p.lut))
+                    .map(|p| {
+                        let (c, s) = (p.channels, p.speed);
+                        format!("{c}ch@{s} ({:.1} GB/s, {:.0} LUT)", p.gbs, p.lut)
+                    })
                     .collect();
                 println!("pareto[{wl}]: {}", desc.join(" -> "));
             }
@@ -334,10 +360,13 @@ fn main() -> Result<()> {
                 }
             };
             println!(
-                "sweep: {} jobs ({} speeds x {} channel counts x {} patterns) on {} workers",
+                "sweep: {} jobs ({} speeds x {} channel counts x {} mappings x {} knob \
+                 profiles x {} patterns) on {} workers",
                 jobs.len(),
                 spec.speeds.len(),
                 spec.channels.len(),
+                spec.mappings.len(),
+                spec.knobs.len(),
                 spec.patterns.len(),
                 workers.min(jobs.len().max(1))
             );
@@ -351,6 +380,42 @@ fn main() -> Result<()> {
                     outcomes.len(),
                     summary.display()
                 );
+            }
+        }
+        Some("compare") => {
+            if args.positional.len() < 2 {
+                return Err(anyhow!(
+                    "compare needs at least two sweep summaries, e.g. \
+                     `ddr4bench compare BENCH_sweep.json sweep-out/BENCH_sweep.json`"
+                ));
+            }
+            let threshold: f64 = args.parse_or("threshold", 2.0).map_err(|e| anyhow!(e))?;
+            let files = args
+                .positional
+                .iter()
+                .map(|p| compare::load_sweep(std::path::Path::new(p)))
+                .collect::<Result<Vec<_>>>()?;
+            for f in &files {
+                println!("loaded {}: {} jobs (source: {})", f.label, f.records.len(), f.source);
+            }
+            let report = compare::compare(&files, threshold);
+            println!("{}", report.delta.ascii());
+            println!("{}", report.axes.ascii());
+            if report.regressions.is_empty() {
+                println!("no regressions beyond {threshold}% vs baseline {}", files[0].label);
+            } else {
+                for r in &report.regressions {
+                    println!("REGRESSION: {r}");
+                }
+            }
+            if let Some(p) = csv_path {
+                report.delta.write_csv(&p)?;
+            }
+            if args.has_flag("strict") && !report.regressions.is_empty() {
+                return Err(anyhow!(
+                    "{} regression(s) beyond {threshold}%",
+                    report.regressions.len()
+                ));
             }
         }
         Some("serve") => {

@@ -1,8 +1,10 @@
 //! Campaign sweep executive: expand a cartesian sweep specification
-//! (speed bins × channel counts × traffic patterns) into a deduplicated
-//! job list and execute it on a work-stealing thread pool, one isolated
-//! [`Platform`] per job, emitting per-job JSON/CSV artifacts plus a
-//! machine-readable summary (`BENCH_sweep.json` schema).
+//! (speed bins × channel counts × address mappings × controller knobs ×
+//! traffic patterns) into a deduplicated job list and execute it on a
+//! work-stealing thread pool, one isolated [`Platform`] per job, emitting
+//! per-job JSON/CSV artifacts plus a machine-readable summary
+//! (`BENCH_sweep.json` schema; cross-sweep deltas render through
+//! [`crate::report::compare`] / `ddr4bench compare`).
 //!
 //! This is the scale/speed/scenario-diversity executive the ROADMAP asks
 //! for: where [`Platform::run_batch_all`] parallelizes the *channels of
@@ -26,13 +28,19 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{parse_kv_text, parse_pattern_config, DesignConfig, PatternConfig, SpeedBin};
+use crate::config::{
+    parse_controller_tokens, parse_kv_text, parse_pattern_config, ControllerParams, DesignConfig,
+    PatternConfig, SpeedBin,
+};
+use crate::ddr4::MappingPolicy;
 use crate::platform::Platform;
 use crate::report::Table;
 use crate::stats::BatchStats;
 
-/// Schema identifier stamped into every sweep artifact.
-pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v1";
+/// Schema identifier stamped into every sweep artifact. `v2` adds the
+/// `mapping` and `knobs` axis fields; `v1` artifacts (no such fields) are
+/// still accepted by [`crate::report::compare`].
+pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v2";
 
 /// A cartesian sweep specification.
 #[derive(Debug, Clone)]
@@ -41,6 +49,10 @@ pub struct SweepSpec {
     pub speeds: Vec<SpeedBin>,
     /// Channel counts to sweep (1..=3 on the XCKU115).
     pub channels: Vec<usize>,
+    /// Address-mapping policies to sweep.
+    pub mappings: Vec<MappingPolicy>,
+    /// Labeled controller-knob profiles to sweep.
+    pub knobs: Vec<(String, ControllerParams)>,
     /// Labeled traffic patterns to sweep.
     pub patterns: Vec<(String, PatternConfig)>,
 }
@@ -78,6 +90,8 @@ impl SweepSpec {
         Self {
             speeds: vec![SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400],
             channels: vec![1, 2],
+            mappings: vec![MappingPolicy::row_col_bank()],
+            knobs: vec![("mig".to_string(), ControllerParams::default())],
             patterns: ["strided", "bank", "chase"]
                 .iter()
                 .map(|n| preset(n).expect("builtin preset"))
@@ -90,19 +104,28 @@ impl SweepSpec {
     /// ```text
     /// speeds = 1600, 2400
     /// channels = 1, 2
+    /// mappings = row_col_bank, xor_hash
     /// [patterns]
     /// strided = OP=R ADDR=STRIDE STRIDE=64k BURST=4 BATCH=2048
     /// chase   = OP=R ADDR=CHASE SEED=7 WSET=4m SIG=BLK BATCH=1024 BURST=1
+    /// [knobs]
+    /// mig  = lookahead=4
+    /// deep = lookahead=8 rq=32 wq=32 whi=24 wlo=8
     /// ```
     ///
     /// Omitted sections fall back to the [`Self::paper_grid`] values.
     pub fn parse(text: &str) -> Result<Self> {
         let map = parse_kv_text(text).map_err(|e| anyhow!("{e}"))?;
         for key in map.keys() {
-            if key != "speeds" && key != "channels" && !key.starts_with("patterns.") {
+            if key != "speeds"
+                && key != "channels"
+                && key != "mappings"
+                && !key.starts_with("patterns.")
+                && !key.starts_with("knobs.")
+            {
                 bail!(
-                    "unknown sweep spec key `{key}` \
-                     (expected `speeds`, `channels`, or `[patterns]` entries)"
+                    "unknown sweep spec key `{key}` (expected `speeds`, `channels`, \
+                     `mappings`, or `[patterns]`/`[knobs]` entries)"
                 );
             }
         }
@@ -113,6 +136,25 @@ impl SweepSpec {
         if let Some(v) = map.get("channels") {
             spec.channels = parse_channel_list(v)?;
         }
+        if let Some(v) = map.get("mappings") {
+            spec.mappings = parse_mapping_list(v)?;
+        }
+        let knobs: Vec<(String, ControllerParams)> = map
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix("knobs.").map(|label| (label.to_string(), v.as_str()))
+            })
+            .map(|(label, tokens)| {
+                let toks: Vec<&str> = tokens.split_whitespace().collect();
+                let params = parse_controller_tokens(ControllerParams::default(), &toks)
+                    .map_err(|e| anyhow!("knob profile `{label}`: {e}"))?;
+                validate_knob_profile(&label, params)?;
+                Ok((label, params))
+            })
+            .collect::<Result<_>>()?;
+        if !knobs.is_empty() {
+            spec.knobs = knobs;
+        }
         let patterns: Vec<(String, PatternConfig)> = map
             .iter()
             .filter_map(|(k, v)| {
@@ -122,6 +164,12 @@ impl SweepSpec {
                 let toks: Vec<&str> = tokens.split_whitespace().collect();
                 let cfg = parse_pattern_config(&toks)
                     .map_err(|e| anyhow!("pattern `{label}`: {e}"))?;
+                if cfg.mapping.is_some() {
+                    bail!(
+                        "pattern `{label}`: MAP= is not allowed in sweep patterns — \
+                         sweep the address mapping via the `mappings` axis instead"
+                    );
+                }
                 Ok((label, cfg))
             })
             .collect::<Result<_>>()?;
@@ -132,28 +180,51 @@ impl SweepSpec {
     }
 
     /// Expand the cartesian product into a deduplicated, deterministic
-    /// job list (duplicate (speed, channels, label) points collapse).
+    /// job list (duplicate (speed, channels, mapping, knobs, pattern)
+    /// points collapse).
     pub fn expand(&self) -> Vec<SweepJob> {
-        let mut seen: HashSet<(u32, usize, String)> = HashSet::new();
+        let mut seen: HashSet<(u32, usize, String, String, String)> = HashSet::new();
         let mut jobs = Vec::new();
         for &speed in &self.speeds {
             for &channels in &self.channels {
-                for (label, cfg) in &self.patterns {
-                    if !seen.insert((speed.data_rate_mts(), channels, label.clone())) {
-                        continue;
+                for &mapping in &self.mappings {
+                    for (knob, params) in &self.knobs {
+                        for (label, cfg) in &self.patterns {
+                            let key = (
+                                speed.data_rate_mts(),
+                                channels,
+                                mapping.name(),
+                                knob.clone(),
+                                label.clone(),
+                            );
+                            if !seen.insert(key) {
+                                continue;
+                            }
+                            jobs.push(SweepJob {
+                                id: jobs.len(),
+                                speed,
+                                channels,
+                                mapping,
+                                knob: knob.clone(),
+                                params: *params,
+                                label: label.clone(),
+                                cfg: cfg.clone(),
+                            });
+                        }
                     }
-                    jobs.push(SweepJob {
-                        id: jobs.len(),
-                        speed,
-                        channels,
-                        label: label.clone(),
-                        cfg: cfg.clone(),
-                    });
                 }
             }
         }
         jobs
     }
+}
+
+/// Reject knob profiles that cannot instantiate a valid design (watermark
+/// ordering, zero windows, …) before the sweep spends any work on them.
+fn validate_knob_profile(label: &str, params: ControllerParams) -> Result<()> {
+    let probe = DesignConfig { controller: params, ..DesignConfig::default() };
+    probe.validate().map_err(|e| anyhow!("knob profile `{label}`: {e}"))?;
+    Ok(())
 }
 
 /// Parse "1600, 2400" style speed lists.
@@ -162,6 +233,35 @@ pub fn parse_speed_list(s: &str) -> Result<Vec<SpeedBin>> {
         .map(str::trim)
         .filter(|t| !t.is_empty())
         .map(|t| SpeedBin::parse(t).ok_or_else(|| anyhow!("unknown speed bin `{t}`")))
+        .collect()
+}
+
+/// Parse "row_col_bank, xor_hash" style mapping-policy lists.
+pub fn parse_mapping_list(s: &str) -> Result<Vec<MappingPolicy>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| MappingPolicy::parse(t).ok_or_else(|| anyhow!("unknown mapping policy `{t}`")))
+        .collect()
+}
+
+/// Parse a CLI `--knobs` axis: comma-separated knob variants, each a
+/// `+`-joined list of `KEY=VALUE` controller overrides applied on top of
+/// the MIG-like defaults, e.g. `lookahead=1,lookahead=8+wq=32`. The
+/// variant's label is its spec with the separators compacted
+/// (`lookahead8_wq32`).
+pub fn parse_knob_list(s: &str) -> Result<Vec<(String, ControllerParams)>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|variant| {
+            let toks: Vec<&str> = variant.split('+').collect();
+            let params = parse_controller_tokens(ControllerParams::default(), &toks)
+                .map_err(|e| anyhow!("--knobs `{variant}`: {e}"))?;
+            let label = variant.replace('=', "").replace('+', "_").replace(' ', "");
+            validate_knob_profile(&label, params)?;
+            Ok((label, params))
+        })
         .collect()
 }
 
@@ -189,6 +289,12 @@ pub struct SweepJob {
     pub speed: SpeedBin,
     /// Channel count of the design.
     pub channels: usize,
+    /// Address-mapping policy of the design's geometry.
+    pub mapping: MappingPolicy,
+    /// Controller-knob profile label (artifact naming).
+    pub knob: String,
+    /// The controller-knob profile itself.
+    pub params: ControllerParams,
     /// Pattern label (artifact naming).
     pub label: String,
     /// The traffic pattern to run.
@@ -210,17 +316,20 @@ pub struct SweepOutcome {
 
 fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
     let t0 = std::time::Instant::now();
-    let design = DesignConfig::with_channels(job.channels, job.speed);
+    let mut design = DesignConfig::with_channels(job.channels, job.speed);
+    design.geometry.mapping = job.mapping;
+    design.controller = job.params;
     design.validate().map_err(|e| anyhow!("{e}"))?;
     let mut platform = Platform::new(design);
+    // The job's mapping axis is authoritative: a stray pattern-level
+    // MAP= override would run a different policy than the artifact
+    // labels claim (SweepSpec::parse rejects it; this guards
+    // programmatic specs too, and keeps the echoed cfg truthful).
+    let mut job = job.clone();
+    job.cfg.mapping = None;
     let per_channel = platform.run_batch_all(&job.cfg)?;
     let agg = Platform::aggregate(&per_channel);
-    Ok(SweepOutcome {
-        job: job.clone(),
-        per_channel,
-        agg,
-        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-    })
+    Ok(SweepOutcome { job, per_channel, agg, wall_ms: t0.elapsed().as_secs_f64() * 1e3 })
 }
 
 /// Execute `jobs` on a work-stealing pool of `workers` threads. Each
@@ -331,6 +440,8 @@ pub fn job_json(o: &SweepOutcome) -> String {
             "  \"data_rate_mts\": {rate},\n",
             "  \"channels\": {channels},\n",
             "  \"pattern\": \"{label}\",\n",
+            "  \"mapping\": \"{mapping}\",\n",
+            "  \"knobs\": \"{knob}\",\n",
             "  \"cfg\": \"{cfg}\",\n",
             "  \"rd_gbs\": {rd:.6},\n",
             "  \"wr_gbs\": {wr:.6},\n",
@@ -351,6 +462,8 @@ pub fn job_json(o: &SweepOutcome) -> String {
         rate = o.job.speed.data_rate_mts(),
         channels = o.job.channels,
         label = json_escape(&o.job.label),
+        mapping = json_escape(&o.job.mapping.name()),
+        knob = json_escape(&o.job.knob),
         cfg = json_escape(&crate::config::format_pattern_config(&o.job.cfg)),
         rd = o.agg.read_throughput_gbs(),
         wr = o.agg.write_throughput_gbs(),
@@ -369,14 +482,16 @@ pub fn job_json(o: &SweepOutcome) -> String {
 /// Render one outcome as a single-row CSV (header + row).
 pub fn job_csv(o: &SweepOutcome) -> String {
     format!(
-        "id,speed,data_rate_mts,channels,pattern,rd_gbs,wr_gbs,total_gbs,rd_lat_ns,wr_lat_ns,\
-         refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
-         {},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{},{},{:.3},{:.4},{:.3}\n",
+        "id,speed,data_rate_mts,channels,pattern,mapping,knobs,rd_gbs,wr_gbs,total_gbs,\
+         rd_lat_ns,wr_lat_ns,refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
+         {},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{},{},{:.3},{:.4},{:.3}\n",
         o.job.id,
         o.job.speed,
         o.job.speed.data_rate_mts(),
         o.job.channels,
         csv_escape(&o.job.label),
+        csv_escape(&o.job.mapping.name()),
+        csv_escape(&o.job.knob),
         o.agg.read_throughput_gbs(),
         o.agg.write_throughput_gbs(),
         o.agg.total_throughput_gbs(),
@@ -414,10 +529,12 @@ pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf>
     std::fs::create_dir_all(dir)?;
     for o in outcomes {
         let stem = format!(
-            "{:03}_{}_{}ch_{}",
+            "{:03}_{}_{}ch_{}_{}_{}",
             o.job.id,
             o.job.speed.data_rate_mts(),
             o.job.channels,
+            sanitize_label(&o.job.mapping.name()),
+            sanitize_label(&o.job.knob),
             sanitize_label(&o.job.label)
         );
         std::fs::write(dir.join(format!("{stem}.json")), job_json(o))?;
@@ -432,7 +549,10 @@ pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf>
 pub fn summary_table(outcomes: &[SweepOutcome]) -> Table {
     let mut t = Table::new(
         "Campaign sweep summary",
-        &["Job", "Rate", "Ch", "Pattern", "RD GB/s", "WR GB/s", "Total GB/s", "Wall ms"],
+        &[
+            "Job", "Rate", "Ch", "Pattern", "Map", "Knobs", "RD GB/s", "WR GB/s", "Total GB/s",
+            "Wall ms",
+        ],
     );
     for o in outcomes {
         t.row(vec![
@@ -440,6 +560,8 @@ pub fn summary_table(outcomes: &[SweepOutcome]) -> Table {
             o.job.speed.to_string(),
             o.job.channels.to_string(),
             o.job.label.clone(),
+            o.job.mapping.name(),
+            o.job.knob.clone(),
             format!("{:.2}", o.agg.read_throughput_gbs()),
             format!("{:.2}", o.agg.write_throughput_gbs()),
             format!("{:.2}", o.agg.total_throughput_gbs()),
@@ -471,21 +593,49 @@ mod tests {
         let mut spec = SweepSpec::paper_grid();
         spec.speeds = vec![SpeedBin::Ddr4_1600, SpeedBin::Ddr4_1600];
         spec.channels = vec![1, 1];
+        spec.mappings = vec![MappingPolicy::row_col_bank(), MappingPolicy::row_col_bank()];
         assert_eq!(spec.expand().len(), 3, "duplicates collapse");
+    }
+
+    #[test]
+    fn mapping_and_knob_axes_multiply_the_grid() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.mappings = vec![MappingPolicy::row_col_bank(), MappingPolicy::xor_hash()];
+        spec.knobs = parse_knob_list("lookahead=1,lookahead=8").unwrap();
+        let jobs = spec.expand();
+        assert_eq!(jobs.len(), 2 * 2 * 3, "2 mappings x 2 knob profiles x 3 patterns");
+        let maps: HashSet<String> = jobs.iter().map(|j| j.mapping.name()).collect();
+        assert_eq!(maps, HashSet::from(["row_col_bank".into(), "xor_hash".into()]));
+        let knobs: HashSet<&str> = jobs.iter().map(|j| j.knob.as_str()).collect();
+        assert_eq!(knobs, HashSet::from(["lookahead1", "lookahead8"]));
+        assert!(jobs.iter().any(|j| j.params.lookahead == 1));
+        assert!(jobs.iter().any(|j| j.params.lookahead == 8));
     }
 
     #[test]
     fn spec_parse_overrides_and_defaults() {
         let spec = SweepSpec::parse(
-            "speeds = 1866\nchannels = 3\n[patterns]\nmine = OP=W ADDR=BANK SEED=2 BATCH=64\n",
+            "speeds = 1866\nchannels = 3\nmappings = bank_row_col, xor\n\
+             [patterns]\nmine = OP=W ADDR=BANK SEED=2 BATCH=64\n\
+             [knobs]\ndeep = lookahead=8 rq=32 wq=32 whi=24 wlo=8\n",
         )
         .unwrap();
         assert_eq!(spec.speeds, vec![SpeedBin::Ddr4_1866]);
         assert_eq!(spec.channels, vec![3]);
+        assert_eq!(
+            spec.mappings,
+            vec![MappingPolicy::bank_row_col(), MappingPolicy::xor_hash()]
+        );
         assert_eq!(spec.patterns.len(), 1);
         assert_eq!(spec.patterns[0].0, "mine");
+        assert_eq!(spec.knobs.len(), 1);
+        assert_eq!(spec.knobs[0].0, "deep");
+        assert_eq!(spec.knobs[0].1.lookahead, 8);
+        assert_eq!(spec.knobs[0].1.write_drain_high, 24);
         let jobs = spec.expand();
-        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs.len(), 2, "1 speed x 1 ch x 2 mappings x 1 knob x 1 pattern");
         assert_eq!(jobs[0].label, "mine");
     }
 
@@ -493,10 +643,60 @@ mod tests {
     fn spec_parse_rejects_bad_axes() {
         assert!(SweepSpec::parse("speeds = 9999\n").is_err());
         assert!(SweepSpec::parse("channels = 4\n").is_err());
+        assert!(SweepSpec::parse("mappings = nope\n").is_err());
         assert!(SweepSpec::parse("[patterns]\nx = ADDR=NOPE\n").is_err());
+        assert!(SweepSpec::parse("[knobs]\nx = frobnicate=1\n").is_err());
+        // knob profiles that cannot build a valid design fail at parse
+        assert!(SweepSpec::parse("[knobs]\nbad = whi=4 wlo=12\n").is_err());
         // typo'd keys must fail loudly, not silently run the default grid
         assert!(SweepSpec::parse("speed = 1866\n").is_err());
         assert!(SweepSpec::parse("[pattern]\nx = OP=R\n").is_err());
+        // a pattern-level MAP= would shadow the mappings axis and
+        // mislabel every artifact — rejected at parse time
+        assert!(SweepSpec::parse("[patterns]\nx = OP=R MAP=xor_hash\n").is_err());
+    }
+
+    #[test]
+    fn run_job_strips_pattern_level_mapping_overrides() {
+        // programmatic specs bypass parse(): the job axis must still win
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("bank").unwrap()];
+        spec.patterns[0].1.batch_len = 32;
+        spec.patterns[0].1.mapping = Some(MappingPolicy::xor_hash());
+        let baseline = {
+            let mut s = spec.clone();
+            s.patterns[0].1.mapping = None;
+            run_sweep(s.expand(), 1).unwrap()
+        };
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        assert_eq!(outcomes[0].job.cfg.mapping, None, "override stripped from the echo");
+        assert_eq!(
+            outcomes[0].agg.counters.total_cycles, baseline[0].agg.counters.total_cycles,
+            "job ran under the axis policy, not the stray override"
+        );
+    }
+
+    #[test]
+    fn knob_list_parses_compound_variants() {
+        let knobs = parse_knob_list("lookahead=8+wq=32, dwell=0").unwrap();
+        assert_eq!(knobs.len(), 2);
+        assert_eq!(knobs[0].0, "lookahead8_wq32");
+        assert_eq!(knobs[0].1.lookahead, 8);
+        assert_eq!(knobs[0].1.write_queue_depth, 32);
+        assert_eq!(knobs[1].0, "dwell0");
+        assert_eq!(knobs[1].1.mode_dwell_ck, 0);
+        assert!(parse_knob_list("nope=1").is_err());
+        assert!(parse_knob_list("whi=4+wlo=12").is_err(), "invalid watermark profile");
+    }
+
+    #[test]
+    fn mapping_list_parses_builtins_and_customs() {
+        let maps = parse_mapping_list("row_col_bank, xor, RoBaBgCo").unwrap();
+        assert_eq!(maps.len(), 3);
+        assert_eq!(maps[1], MappingPolicy::xor_hash());
+        assert!(parse_mapping_list("frob").is_err());
     }
 
     #[test]
@@ -544,8 +744,10 @@ mod tests {
         spec.patterns[0].1.batch_len = 32;
         let outcomes = run_sweep(spec.expand(), 1).unwrap();
         let j = job_json(&outcomes[0]);
-        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v1\""));
+        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v2\""));
         assert!(j.contains("\"pattern\": \"bank\""));
+        assert!(j.contains("\"mapping\": \"row_col_bank\""));
+        assert!(j.contains("\"knobs\": \"mig\""));
         assert!(j.contains("\"total_gbs\""));
         let c = job_csv(&outcomes[0]);
         let lines: Vec<&str> = c.lines().collect();

@@ -282,7 +282,12 @@ pub fn model_check(scale: f64) -> (Table, f64) {
                 let mut cfg = PatternConfig::seq_read_burst(*len, 1);
                 cfg.op = *op;
                 cfg.addr = addr.clone();
-                let model = analytic::predict_pattern(SpeedBin::Ddr4_1600, &cfg, 32) as f64;
+                // mapping-aware prediction: the derate is exactly 1.0 on
+                // the default bank-interleaved geometry this grid uses,
+                // and kicks in when a design re-maps to a row-major order
+                let geo = crate::config::DesignConfig::default().geometry;
+                let model =
+                    analytic::predict_pattern_mapped(SpeedBin::Ddr4_1600, &cfg, 32, &geo) as f64;
                 let err = (model - sim).abs() / sim.max(1e-9);
                 errs.push(err);
                 t.row(vec![

@@ -1,0 +1,614 @@
+//! Cross-sweep comparison reports (`ddr4bench compare`).
+//!
+//! Loads several `BENCH_sweep.json` campaign summaries (both the current
+//! `ddr4bench.sweep.v2` schema and the older `v1`, which predates the
+//! mapping/knob axes), matches jobs across files by their axis key
+//! (data rate, channels, pattern, mapping, knobs), and renders:
+//!
+//! - a **delta table** — per job point, the first file's throughput as
+//!   the baseline and every other file's absolute value plus percentage
+//!   delta against it;
+//! - a **per-axis extremes table** — for each sweep axis and file, the
+//!   best and worst value by mean total throughput;
+//! - a **regression list** — job points whose delta against the baseline
+//!   falls below a configurable threshold.
+//!
+//! The loader uses a self-contained minimal JSON reader (the crate builds
+//! fully offline, without serde — DESIGN.md §9).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::Table;
+
+// ------------------------------------------------------------ JSON reader
+
+/// Minimal JSON value — just enough for the sweep artifact schema.
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("json: {msg} at byte {}", self.i)
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'{' => {
+                self.eat(b'{')?;
+                let mut fields = Vec::new();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.ws();
+                    let key = match self.string()? {
+                        Json::Str(s) => s,
+                        _ => unreachable!(),
+                    };
+                    self.eat(b':')?;
+                    fields.push((key, self.value()?));
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(self.err("expected `,` or `}`")),
+                    }
+                }
+            }
+            b'[' => {
+                self.eat(b'[')?;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(self.err("expected `,` or `]`")),
+                    }
+                }
+            }
+            b'"' => self.string(),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<Json, String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(Json::Str(s));
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let e = *self.b.get(self.i).ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                _ => {
+                    // multi-byte UTF-8 sequences pass through untouched
+                    let start = self.i;
+                    self.i += 1;
+                    while self.i < self.b.len() && self.b[self.i] & 0xC0 == 0x80 {
+                        self.i += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    s.push_str(chunk);
+                }
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("number"))?;
+        text.parse::<f64>().map(Json::Num).map_err(|_| self.err("invalid number"))
+    }
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let mut r = Reader { b: text.as_bytes(), i: 0 };
+    let v = r.value()?;
+    r.ws();
+    if r.i != r.b.len() {
+        return Err(r.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+// ------------------------------------------------------------ sweep files
+
+/// One job point of a loaded sweep summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRecord {
+    /// Speed-bin name ("DDR4-1600").
+    pub speed: String,
+    /// Data rate in MT/s.
+    pub data_rate_mts: u32,
+    /// Channel count.
+    pub channels: u64,
+    /// Pattern label.
+    pub pattern: String,
+    /// Address-mapping policy name (v1 files default to `row_col_bank`).
+    pub mapping: String,
+    /// Controller-knob profile label (v1 files default to `mig`).
+    pub knobs: String,
+    /// Aggregate throughput of the job.
+    pub total_gbs: f64,
+}
+
+impl SweepRecord {
+    /// The cross-file matching key.
+    fn key(&self) -> (u32, u64, String, String, String) {
+        (
+            self.data_rate_mts,
+            self.channels,
+            self.pattern.clone(),
+            self.mapping.clone(),
+            self.knobs.clone(),
+        )
+    }
+
+    /// Human-readable key ("1600MT/1ch/bank/row_col_bank/mig").
+    fn key_label(&self) -> String {
+        format!(
+            "{}MT/{}ch/{}/{}/{}",
+            self.data_rate_mts, self.channels, self.pattern, self.mapping, self.knobs
+        )
+    }
+}
+
+/// A loaded campaign summary (`BENCH_sweep.json`).
+#[derive(Debug, Clone)]
+pub struct SweepFile {
+    /// Display label (the file stem by default).
+    pub label: String,
+    /// The summary's `source` field.
+    pub source: String,
+    /// Its job points.
+    pub records: Vec<SweepRecord>,
+}
+
+impl SweepFile {
+    fn find(&self, key: &(u32, u64, String, String, String)) -> Option<&SweepRecord> {
+        self.records.iter().find(|r| &r.key() == key)
+    }
+}
+
+/// Parse a campaign summary document. Accepts every `ddr4bench.sweep.*`
+/// schema version; axis fields missing from older versions get defaults.
+pub fn parse_summary(text: &str, label: &str) -> Result<SweepFile> {
+    let doc = parse_json(text).map_err(|e| anyhow!("{label}: {e}"))?;
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+    if !schema.starts_with("ddr4bench.sweep.") {
+        return Err(anyhow!("{label}: not a sweep summary (schema `{schema}`)"));
+    }
+    let source = doc.get("source").and_then(Json::as_str).unwrap_or("unknown").to_string();
+    let jobs = match doc.get("jobs") {
+        Some(Json::Arr(jobs)) => jobs,
+        _ => return Err(anyhow!("{label}: missing `jobs` array")),
+    };
+    let mut records = Vec::with_capacity(jobs.len());
+    for (i, job) in jobs.iter().enumerate() {
+        let str_of = |k: &str, default: &str| -> String {
+            job.get(k).and_then(Json::as_str).unwrap_or(default).to_string()
+        };
+        let num_of = |k: &str| -> Result<f64> {
+            job.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("{label}: job {i}: missing numeric `{k}`"))
+        };
+        records.push(SweepRecord {
+            speed: str_of("speed", "?"),
+            data_rate_mts: num_of("data_rate_mts")? as u32,
+            channels: num_of("channels")? as u64,
+            pattern: str_of("pattern", "?"),
+            mapping: str_of("mapping", "row_col_bank"),
+            knobs: str_of("knobs", "mig"),
+            total_gbs: num_of("total_gbs")?,
+        });
+    }
+    Ok(SweepFile { label: label.to_string(), source, records })
+}
+
+/// Load a `BENCH_sweep.json` from disk; the display label is the parent
+/// directory + file stem (enough to tell `a/BENCH_sweep` from `b/…`).
+pub fn load_sweep(path: &Path) -> Result<SweepFile> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read {}: {e}", path.display()))?;
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("sweep");
+    let parent = path
+        .parent()
+        .and_then(|p| p.file_name())
+        .and_then(|s| s.to_str())
+        .filter(|p| !p.is_empty());
+    let label = match parent {
+        Some(p) => format!("{p}/{stem}"),
+        None => stem.to_string(),
+    };
+    parse_summary(&text, &label)
+}
+
+// -------------------------------------------------------------- comparison
+
+/// A rendered cross-sweep comparison.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    /// Per-job delta table (baseline = first file).
+    pub delta: Table,
+    /// Best/worst value per sweep axis per file.
+    pub axes: Table,
+    /// Flagged regressions (delta below `-threshold_pct` vs baseline).
+    pub regressions: Vec<String>,
+}
+
+/// Compare sweep summaries; `files[0]` is the baseline.
+pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
+    assert!(!files.is_empty(), "compare needs at least one sweep file");
+    let base = &files[0];
+
+    // ordered union of job keys: baseline order first, then new keys in
+    // the order later files introduce them
+    let mut keys: Vec<(u32, u64, String, String, String)> = Vec::new();
+    for f in files {
+        for r in &f.records {
+            if !keys.contains(&r.key()) {
+                keys.push(r.key());
+            }
+        }
+    }
+
+    let mut headers: Vec<String> =
+        ["Rate", "Ch", "Pattern", "Map", "Knobs"].iter().map(|s| s.to_string()).collect();
+    headers.push(format!("{} GB/s", base.label));
+    for f in &files[1..] {
+        headers.push(format!("{} GB/s", f.label));
+        headers.push(format!("{} %", f.label));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut delta = Table::new(
+        format!("Cross-sweep comparison (baseline: {})", base.label),
+        &header_refs,
+    );
+
+    let mut regressions = Vec::new();
+    for key in &keys {
+        let mut cells = vec![
+            key.0.to_string(),
+            key.1.to_string(),
+            key.2.clone(),
+            key.3.clone(),
+            key.4.clone(),
+        ];
+        let base_rec = base.find(key);
+        cells.push(match base_rec {
+            Some(r) => format!("{:.3}", r.total_gbs),
+            None => "-".to_string(),
+        });
+        for f in &files[1..] {
+            match (base_rec, f.find(key)) {
+                (Some(b), Some(r)) => {
+                    let pct = if b.total_gbs.abs() > f64::EPSILON {
+                        (r.total_gbs - b.total_gbs) / b.total_gbs * 100.0
+                    } else {
+                        0.0
+                    };
+                    cells.push(format!("{:.3}", r.total_gbs));
+                    cells.push(format!("{pct:+.1}"));
+                    if pct < -threshold_pct {
+                        regressions.push(format!(
+                            "{}: {} {:.3} -> {:.3} GB/s ({pct:+.1}%)",
+                            f.label,
+                            b.key_label(),
+                            b.total_gbs,
+                            r.total_gbs
+                        ));
+                    }
+                }
+                (_, Some(r)) => {
+                    cells.push(format!("{:.3}", r.total_gbs));
+                    cells.push("new".to_string());
+                }
+                (_, None) => {
+                    cells.push("-".to_string());
+                    cells.push("-".to_string());
+                }
+            }
+        }
+        delta.row(cells);
+    }
+
+    CompareReport { delta, axes: axis_extremes(files), regressions }
+}
+
+/// Best/worst mean throughput per axis value, per file.
+pub fn axis_extremes(files: &[SweepFile]) -> Table {
+    let mut t = Table::new(
+        "Per-axis extremes (mean total GB/s)",
+        &["Axis", "File", "Best", "Worst"],
+    );
+    let axes: [(&str, fn(&SweepRecord) -> String); 5] = [
+        ("rate", |r| r.data_rate_mts.to_string()),
+        ("channels", |r| r.channels.to_string()),
+        ("pattern", |r| r.pattern.clone()),
+        ("mapping", |r| r.mapping.clone()),
+        ("knobs", |r| r.knobs.clone()),
+    ];
+    for (axis, value_of) in axes {
+        for f in files {
+            // mean throughput per axis value, in first-seen order
+            let mut means: Vec<(String, f64, u32)> = Vec::new();
+            for r in &f.records {
+                let v = value_of(r);
+                match means.iter_mut().find(|(name, _, _)| *name == v) {
+                    Some((_, sum, n)) => {
+                        *sum += r.total_gbs;
+                        *n += 1;
+                    }
+                    None => means.push((v, r.total_gbs, 1)),
+                }
+            }
+            if means.len() < 2 {
+                continue; // a one-value axis has no best/worst contrast
+            }
+            let mean = |(name, sum, n): &(String, f64, u32)| (name.clone(), sum / *n as f64);
+            let best = means
+                .iter()
+                .map(mean)
+                .fold((String::new(), f64::MIN), |a, b| if b.1 > a.1 { b } else { a });
+            let worst = means
+                .iter()
+                .map(mean)
+                .fold((String::new(), f64::MAX), |a, b| if b.1 < a.1 { b } else { a });
+            t.row(vec![
+                axis.to_string(),
+                f.label.clone(),
+                format!("{} ({:.3})", best.0, best.1),
+                format!("{} ({:.3})", worst.0, worst.1),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(label: &str, jobs: &[(&str, u32, u64, &str, &str, &str, f64)]) -> SweepFile {
+        let body: Vec<String> = jobs
+            .iter()
+            .map(|(speed, rate, ch, pat, map, knob, gbs)| {
+                format!(
+                    "{{\"schema\": \"ddr4bench.sweep.v2\", \"speed\": \"{speed}\", \
+                     \"data_rate_mts\": {rate}, \"channels\": {ch}, \"pattern\": \"{pat}\", \
+                     \"mapping\": \"{map}\", \"knobs\": \"{knob}\", \"total_gbs\": {gbs}}}"
+                )
+            })
+            .collect();
+        let text = format!(
+            "{{\"schema\": \"ddr4bench.sweep.v2\", \"source\": \"test\", \"jobs\": [{}]}}",
+            body.join(", ")
+        );
+        parse_summary(&text, label).unwrap()
+    }
+
+    #[test]
+    fn json_reader_handles_the_artifact_subset() {
+        let v = parse_json(
+            "{\"a\": [1, -2.5e1, null, true], \"s\": \"x\\n\\\"y\\u0041\", \"o\": {}}",
+        )
+        .unwrap();
+        assert_eq!(
+            v.get("a"),
+            Some(&Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Num(-25.0),
+                Json::Null,
+                Json::Bool(true)
+            ]))
+        );
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("x\n\"yA"));
+        assert_eq!(v.get("o"), Some(&Json::Obj(vec![])));
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("[1, 2").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn v1_summaries_get_axis_defaults_and_tolerate_nulls() {
+        let text = "{\n  \"schema\": \"ddr4bench.sweep.v1\",\n  \"source\": \"analytic\",\n \
+                    \"jobs\": [{\"schema\": \"ddr4bench.sweep.v1\", \"id\": 0, \"speed\": \
+                    \"DDR4-1600\", \"data_rate_mts\": 1600, \"channels\": 1, \"pattern\": \
+                    \"bank\", \"cfg\": \"OP=R\", \"rd_lat_ns\": null, \"total_gbs\": 0.476, \
+                    \"per_channel_total_gbs\": [0.476]}]\n}\n";
+        let f = parse_summary(text, "baseline").unwrap();
+        assert_eq!(f.records.len(), 1);
+        assert_eq!(f.records[0].mapping, "row_col_bank");
+        assert_eq!(f.records[0].knobs, "mig");
+        assert_eq!(f.records[0].data_rate_mts, 1600);
+        assert!(parse_summary("{\"schema\": \"other\", \"jobs\": []}", "x").is_err());
+    }
+
+    #[test]
+    fn compare_renders_deltas_and_flags_regressions() {
+        let a = summary(
+            "base",
+            &[
+                ("DDR4-1600", 1600, 1, "bank", "row_col_bank", "mig", 1.0),
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", 6.0),
+            ],
+        );
+        let b = summary(
+            "next",
+            &[
+                ("DDR4-1600", 1600, 1, "bank", "row_col_bank", "mig", 0.5),
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", 6.3),
+                ("DDR4-1600", 1600, 1, "seq", "xor_hash", "mig", 6.1),
+            ],
+        );
+        let rep = compare(&[a, b], 2.0);
+        assert_eq!(rep.delta.rows.len(), 3, "union of job keys");
+        let ascii = rep.delta.ascii();
+        assert!(ascii.contains("-50.0"), "{ascii}");
+        assert!(ascii.contains("+5.0"), "{ascii}");
+        assert!(ascii.contains("new"), "{ascii}");
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("bank"), "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("-50.0%"), "{:?}", rep.regressions);
+        // small dips below the threshold are not flagged
+        assert!(compare(
+            &[
+                summary("x", &[("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", 6.0)]),
+                summary("y", &[("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", 5.95)]),
+            ],
+            2.0,
+        )
+        .regressions
+        .is_empty());
+    }
+
+    #[test]
+    fn axis_extremes_pick_best_and_worst_per_axis() {
+        let f = summary(
+            "only",
+            &[
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", 6.0),
+                ("DDR4-1600", 1600, 1, "bank", "row_col_bank", "mig", 0.5),
+                ("DDR4-1600", 1600, 1, "seq", "row_bank_col", "mig", 4.0),
+                ("DDR4-1600", 1600, 1, "bank", "row_bank_col", "mig", 0.4),
+            ],
+        );
+        let t = axis_extremes(&[f]);
+        let ascii = t.ascii();
+        // pattern axis: seq best, bank worst; mapping axis: MIG order best
+        assert!(ascii.contains("pattern"), "{ascii}");
+        assert!(ascii.contains("seq (5.000)"), "{ascii}");
+        assert!(ascii.contains("bank (0.450)"), "{ascii}");
+        assert!(ascii.contains("row_col_bank (3.250)"), "{ascii}");
+        // single-value axes (rate, channels, knobs) produce no rows
+        assert!(!ascii.contains("rate"), "{ascii}");
+    }
+
+    #[test]
+    fn the_committed_repo_baseline_loads() {
+        // the analytic-model v1 baseline at the repo root must stay
+        // loadable so CI can diff fresh sweeps against it
+        let root = std::env::var("CARGO_MANIFEST_DIR").unwrap();
+        let path = std::path::Path::new(&root).join("BENCH_sweep.json");
+        let f = load_sweep(&path).unwrap();
+        assert_eq!(f.records.len(), 12, "12-job paper grid");
+        assert!(f.records.iter().all(|r| r.mapping == "row_col_bank"));
+        assert!(f.records.iter().all(|r| r.total_gbs > 0.0));
+    }
+}

@@ -3,9 +3,12 @@
 //! [`Table`] renders ASCII and CSV; [`campaign`] holds the drivers that
 //! regenerate every table and figure of the paper's evaluation (shared by
 //! `examples/paper_campaign.rs` and the `cargo bench` targets so the
-//! numbers always come from one code path).
+//! numbers always come from one code path); [`compare`] loads several
+//! `BENCH_sweep.json` campaign summaries and renders cross-sweep delta
+//! tables (the `ddr4bench compare` subcommand).
 
 pub mod campaign;
+pub mod compare;
 
 /// A rendered results table.
 #[derive(Debug, Clone)]
@@ -130,7 +133,8 @@ impl Figure {
 
     /// CSV: x column then one column per series.
     pub fn csv(&self) -> String {
-        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        let mut xs: Vec<f64> =
+            self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
         xs.sort_by(f64::total_cmp);
         xs.dedup();
         let mut out = format!(

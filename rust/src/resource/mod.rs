@@ -29,7 +29,12 @@ pub struct Resources {
 impl Resources {
     /// Component sum.
     pub fn add(self, o: Resources) -> Resources {
-        Resources { lut: self.lut + o.lut, ff: self.ff + o.ff, bram: self.bram + o.bram, dsp: self.dsp + o.dsp }
+        Resources {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            dsp: self.dsp + o.dsp,
+        }
     }
 
     /// Scale by an instance count.

@@ -145,7 +145,12 @@ mod tests {
 
     fn stats(rd_bytes: u64, rd_cycles: u64, speed: SpeedBin) -> BatchStats {
         BatchStats {
-            counters: BatchCounters { rd_bytes, rd_cycles, total_cycles: rd_cycles, ..Default::default() },
+            counters: BatchCounters {
+                rd_bytes,
+                rd_cycles,
+                total_cycles: rd_cycles,
+                ..Default::default()
+            },
             speed,
             energy: Default::default(),
         }
@@ -174,7 +179,8 @@ mod tests {
 
     #[test]
     fn merge_accumulates_and_maxes() {
-        let mut a = BatchCounters { rd_txns: 10, rd_bytes: 100, rd_cycles: 50, ..Default::default() };
+        let mut a =
+            BatchCounters { rd_txns: 10, rd_bytes: 100, rd_cycles: 50, ..Default::default() };
         let b = BatchCounters { rd_txns: 5, rd_bytes: 70, rd_cycles: 80, ..Default::default() };
         a.merge(&b);
         assert_eq!(a.rd_txns, 15);

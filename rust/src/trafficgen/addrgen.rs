@@ -10,15 +10,22 @@
 //! - **Strided** — each transaction advances a fixed byte stride
 //!   (rounded up to the transaction alignment), wrapping in the region.
 //! - **BankConflict** — successive transactions hit the *same* DRAM bank
-//!   in *different* rows. The stride between consecutive addresses is
-//!   derived from the channel geometry (`banks x row_bytes`), which under
-//!   every supported address mapping keeps the low (bank-selecting)
-//!   address bits fixed while advancing the row — a guaranteed row miss
+//!   in *different* rows. The stream is derived from the channel geometry
+//!   and its active [`MappingPolicy`](crate::ddr4::MappingPolicy): a
+//!   seed-picked base address is decoded into a DRAM coordinate, then the
+//!   row coordinate advances while the bank and column stay pinned and
+//!   each step is re-encoded through the policy. The pin survives even
+//!   XOR-hashed mappings: exactly for single-burst transactions, and via
+//!   fold-period row stepping for wider spans (whose alignment mask
+//!   would otherwise strip the swizzle bits) — a guaranteed row miss
 //!   with zero bank-level parallelism.
 //! - **PointerChase** — a dependent walk over a working set: slot
 //!   `s_{n+1} = (a * s_n + c) mod m` with `m` a power of two, `a ≡ 1
 //!   (mod 4)` and `c` odd, which by Hull–Dobell has full period `m` — the
 //!   chase visits every slot of the working set exactly once per cycle.
+//!   The slot→address assignment composes an odd multiplier derived from
+//!   the mapping policy's row stride, so dependent hops keep crossing row
+//!   boundaries under whichever address mapping is active.
 //! - **Phased** — runs each inner mode for its transaction count,
 //!   cycling through the phase list.
 //!
@@ -57,14 +64,19 @@ enum Kind {
         step: u64,
     },
     Bank {
-        /// Aligned byte offset inside the first row window (seed-derived;
-        /// selects which bank the conflict stream pins).
-        base: u64,
-        /// Byte distance between same-bank consecutive-row addresses.
-        stride: u64,
-        /// Distinct rows reachable inside the region.
-        rows: u64,
-        next_row: u64,
+        /// Geometry (with its active mapping policy) the stream is
+        /// re-encoded through on every step.
+        geo: DramGeometry,
+        /// Pinned flat bank index (seed-derived via the base decode).
+        bank: u32,
+        /// Pinned column address.
+        col: u32,
+        /// Row increment per transaction (> 1 when the transaction
+        /// alignment spans multiple row steps).
+        kstep: u64,
+        /// Distinct row points the stream cycles through.
+        m: u64,
+        idx: u64,
     },
     Chase {
         cur: u64,
@@ -72,6 +84,9 @@ enum Kind {
         inc: u64,
         /// `slots - 1` for the power-of-two slot count.
         mask: u64,
+        /// Odd slot multiplier derived from the mapping policy's row
+        /// stride (an align-preserving permutation of the working set).
+        spread: u64,
     },
     Phased {
         gens: Vec<(AddrGen, u32)>,
@@ -114,13 +129,25 @@ impl AddrGen {
                 Kind::Strided { next_off: 0, step }
             }
             AddrMode::BankConflict { seed } => {
-                // Same bank bits, next row: the geometry-derived stride.
-                let stride = (geo.banks() as u64 * geo.row_bytes()).max(align);
-                let rows = (region / stride).max(1);
-                // Seed picks the aligned base slot (and thereby the bank).
-                let base_slots = (region.min(stride) / align).max(1);
+                // Same bank, next row — derived from the active mapping
+                // policy. The seed picks an aligned base inside the first
+                // row-step window; its decode pins the bank and column,
+                // and each transaction re-encodes with the row advanced.
+                let row_step = geo.row_step_bytes().max(64);
+                let base_slots = (region.min(row_step) / align).max(1);
                 let base = (SplitMix64::new(*seed).below(base_slots)) * align;
-                Kind::Bank { base, stride, rows, next_row: 0 }
+                let coord = geo.decode(base);
+                let mut kstep = (align / row_step).max(1);
+                if geo.mapping.is_xor_hashed() && align > geo.burst_bytes() as u64 {
+                    // Transactions wider than one DRAM burst get their
+                    // low (bank-swizzle) bits cleared by the alignment
+                    // mask below; stepping rows in whole fold periods
+                    // keeps the XOR fold constant so the masked stream
+                    // still pins a single bank.
+                    kstep = kstep.max(geo.banks() as u64);
+                }
+                let m = (region / (row_step * kstep)).min(geo.rows as u64 / kstep).max(1);
+                Kind::Bank { geo: *geo, bank: coord.bank, col: coord.col, kstep, m, idx: 0 }
             }
             AddrMode::PointerChase { seed, working_set } => {
                 let ws_slots = ((*working_set).min(region) / align).max(1);
@@ -131,6 +158,7 @@ impl AddrGen {
                     cur: (seed >> 8) & mask,
                     inc: (seed | 1) & mask.max(1),
                     mask,
+                    spread: (geo.row_step_bytes() / align) | 1,
                 }
             }
             AddrMode::Phased(phases) => {
@@ -174,15 +202,16 @@ impl AddrGen {
                 *next_off = (s + *step) % slots;
                 start + s * align
             }
-            Kind::Bank { base, stride, rows, next_row } => {
-                let r = *next_row;
-                *next_row = (r + 1) % *rows;
-                start + *base + r * *stride
+            Kind::Bank { geo, bank, col, kstep, m, idx } => {
+                let row = (*idx * *kstep) as u32;
+                *idx = (*idx + 1) % *m;
+                let a = geo.encode(crate::ddr4::DramAddr { bank: *bank, row, col: *col });
+                start + (a & !(align - 1))
             }
-            Kind::Chase { cur, inc, mask } => {
+            Kind::Chase { cur, inc, mask, spread } => {
                 let s = *cur;
                 *cur = cur.wrapping_mul(CHASE_MUL).wrapping_add(*inc) & *mask;
-                start + s * align
+                start + (s.wrapping_mul(*spread) & *mask) * align
             }
             Kind::Phased { gens, idx, left } => {
                 let addr = gens[*idx].0.next_addr();
@@ -338,6 +367,67 @@ mod tests {
         for &a in &addrs {
             assert!(a < 64 << 20, "inside region");
             assert_eq!(a % 64, 0, "burst aligned");
+        }
+    }
+
+    #[test]
+    fn bank_conflict_pins_bank_under_every_mapping_policy() {
+        use crate::ddr4::MappingPolicy;
+        let mut policies = MappingPolicy::builtins().to_vec();
+        policies.push(MappingPolicy::parse("RoBaBgCo").unwrap());
+        for mapping in policies {
+            let mut geometry = geo();
+            geometry.mapping = mapping;
+            let mut g = AddrGen::new(
+                &AddrMode::BankConflict { seed: 3 },
+                0,
+                64 << 20,
+                incr(1),
+                32,
+                &geometry,
+            );
+            let addrs: Vec<u64> = (0..64).map(|_| g.next_addr()).collect();
+            let first = geometry.decode(addrs[0]);
+            for w in addrs.windows(2) {
+                let (a, b) = (geometry.decode(w[0]), geometry.decode(w[1]));
+                assert_eq!(a.bank, first.bank, "{mapping}: bank pinned");
+                assert_eq!(b.bank, first.bank, "{mapping}: bank pinned");
+                assert_ne!(a.row, b.row, "{mapping}: fresh row each txn");
+            }
+            for &a in &addrs {
+                assert!(a < 64 << 20, "{mapping}: inside region");
+                assert_eq!(a % 64, 0, "{mapping}: burst aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn bank_conflict_pins_bank_under_xor_hash_with_wide_transactions() {
+        // burst 32 x 32 B beats = 1 KiB alignment: the mask strips the
+        // XOR swizzle bits, so the generator must step rows in whole
+        // fold periods to keep the decoded bank constant.
+        use crate::ddr4::MappingPolicy;
+        let mut geometry = geo();
+        geometry.mapping = MappingPolicy::xor_hash();
+        let mut g = AddrGen::new(
+            &AddrMode::BankConflict { seed: 9 },
+            0,
+            64 << 20,
+            incr(32),
+            32,
+            &geometry,
+        );
+        let addrs: Vec<u64> = (0..64).map(|_| g.next_addr()).collect();
+        let first = geometry.decode(addrs[0]);
+        for w in addrs.windows(2) {
+            let (a, b) = (geometry.decode(w[0]), geometry.decode(w[1]));
+            assert_eq!(a.bank, first.bank, "bank pinned under masked xor stream");
+            assert_eq!(b.bank, first.bank);
+            assert_ne!(a.row, b.row, "fresh row each txn");
+        }
+        for &a in &addrs {
+            assert!(a < 64 << 20);
+            assert_eq!(a % 1024, 0, "txn-span aligned");
         }
     }
 

@@ -47,7 +47,8 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>> {
             "W" | "WR" | "WRITE" => true,
             other => bail!("line {}: unknown op `{other}`", lineno + 1),
         };
-        let addr_tok = toks.next().with_context(|| format!("line {}: missing address", lineno + 1))?;
+        let addr_tok =
+            toks.next().with_context(|| format!("line {}: missing address", lineno + 1))?;
         let addr = parse_addr(addr_tok)
             .with_context(|| format!("line {}: bad address `{addr_tok}`", lineno + 1))?;
         let beats: u32 = match toks.next() {

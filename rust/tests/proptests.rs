@@ -18,29 +18,101 @@ use ddr4bench::config::{
     ControllerParams, DataPattern, DesignConfig, OpMix, PatternConfig, Signaling, SpeedBin,
 };
 use ddr4bench::controller::{MemController, MemRequest};
-use ddr4bench::ddr4::{AddrMapping, Cmd, DdrDevice, DramGeometry, TimingParams};
+use ddr4bench::ddr4::{Cmd, DdrDevice, DramGeometry, MappingPolicy, TimingParams};
 use ddr4bench::platform::Platform;
 use ddr4bench::rng::SplitMix64;
 use ddr4bench::testkit::{check, check_shrink};
 use ddr4bench::trafficgen::payload;
 
+/// Every mapping policy the engine can express: the four built-ins plus
+/// custom bit orders (including XOR-hashed ones).
+fn all_policies() -> Vec<MappingPolicy> {
+    let mut v = MappingPolicy::builtins().to_vec();
+    for custom in ["RoBaBgCo", "CoRoBaBg", "BgRoBaCo", "XorRoBaBgCo", "XorRoBgBaCo"] {
+        v.push(MappingPolicy::parse(custom).expect(custom));
+    }
+    v
+}
+
+/// Geometries the bijectivity sweep covers: the proFPGA board plus a
+/// small and an asymmetric (4-group) variant.
+fn all_geometries() -> Vec<DramGeometry> {
+    let board = DramGeometry::profpga_board();
+    let mut small = board;
+    small.rows = 1 << 12;
+    small.cols = 256;
+    let mut wide = board;
+    wide.bank_groups = 4;
+    wide.banks_per_group = 2;
+    vec![board, small, wide]
+}
+
 #[test]
 fn prop_address_mapping_bijective() {
-    for mapping in [AddrMapping::RowColBank, AddrMapping::RowBankCol, AddrMapping::BankRowCol] {
+    for mapping in all_policies() {
+        for mut geo in all_geometries() {
+            geo.mapping = mapping;
+            assert!(geo.validate().is_ok());
+            check(
+                &format!("addr mapping bijective {mapping} rows={}", geo.rows),
+                2000,
+                |rng| rng.below(geo.capacity_bytes()),
+                |&addr| {
+                    let dec = geo.decode(addr);
+                    let enc = geo.encode(dec);
+                    if enc != addr & !63 {
+                        return Err(format!("{addr:#x} -> {dec:?} -> {enc:#x}"));
+                    }
+                    if dec.bank >= geo.banks() || dec.row >= geo.rows || dec.col >= geo.cols {
+                        return Err(format!("decoded fields out of range: {dec:?}"));
+                    }
+                    let coord = geo.decode_coord(addr);
+                    if coord.to_flat(geo.banks_per_group) != dec {
+                        return Err(format!("coord/flat disagree: {coord:?} vs {dec:?}"));
+                    }
+                    if geo.encode_coord(coord) != addr & !63 {
+                        return Err(format!("encode_coord breaks round trip at {addr:#x}"));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bank_conflict_pins_one_bank_under_every_mapping_policy() {
+    for mapping in all_policies() {
         let mut geo = DramGeometry::profpga_board();
         geo.mapping = mapping;
         check(
-            &format!("addr mapping bijective {mapping:?}"),
-            5000,
-            |rng| rng.below(geo.capacity_bytes()),
-            |&addr| {
-                let dec = geo.decode(addr);
-                let enc = geo.encode(dec);
-                if enc != addr & !63 {
-                    return Err(format!("{addr:#x} -> {dec:?} -> {enc:#x}"));
-                }
-                if dec.bank >= geo.banks() || dec.row >= geo.rows || dec.col >= geo.cols {
-                    return Err(format!("decoded fields out of range: {dec:?}"));
+            &format!("bank conflict pinned under {mapping}"),
+            40,
+            |rng| rng.next_u64() >> 1,
+            |&seed| {
+                let mode = AddrMode::BankConflict { seed };
+                let spec = BurstSpec { len: 1, kind: BurstKind::Incr };
+                let mut g =
+                    ddr4bench::trafficgen::AddrGen::new(&mode, 0, 256 << 20, spec, 32, &geo);
+                let mut prev: Option<ddr4bench::ddr4::DramAddr> = None;
+                for i in 0..96 {
+                    let a = g.next_addr();
+                    if a >= 256 << 20 {
+                        return Err(format!("{mapping}: addr {a:#x} escapes the region"));
+                    }
+                    let d = geo.decode(a);
+                    if let Some(p) = prev {
+                        if d.bank != p.bank {
+                            return Err(format!(
+                                "{mapping}: bank drifted {} -> {} at txn {i}",
+                                p.bank, d.bank
+                            ));
+                        }
+                        if d.row == p.row {
+                            return Err(format!("{mapping}: row {} repeated", d.row));
+                        }
+                    }
+                    prev = Some(d);
                 }
                 Ok(())
             },
@@ -524,8 +596,14 @@ fn prop_phased_is_exact_concatenation() {
                 (AddrMode::Random { seed }, nb),
             ]);
             let mut g = ddr4bench::trafficgen::AddrGen::new(&phased, 0, region, spec, 32, &geo);
-            let mut seq =
-                ddr4bench::trafficgen::AddrGen::new(&AddrMode::Sequential, 0, region, spec, 32, &geo);
+            let mut seq = ddr4bench::trafficgen::AddrGen::new(
+                &AddrMode::Sequential,
+                0,
+                region,
+                spec,
+                32,
+                &geo,
+            );
             let mut rnd = ddr4bench::trafficgen::AddrGen::new(
                 &AddrMode::Random { seed },
                 0,
@@ -559,7 +637,10 @@ fn prop_pattern_config_roundtrip() {
         "CFG syntax round-trip",
         300,
         |rng| {
-            let mut cfg = PatternConfig::seq_read_burst(1 + rng.below(128) as u32, 1 + rng.below(10_000) as u32);
+            let mut cfg = PatternConfig::seq_read_burst(
+                1 + rng.below(128) as u32,
+                1 + rng.below(10_000) as u32,
+            );
             cfg.op = match rng.below(3) {
                 0 => OpMix::ReadOnly,
                 1 => OpMix::WriteOnly,

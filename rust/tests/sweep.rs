@@ -5,10 +5,13 @@
 use std::collections::HashSet;
 
 use ddr4bench::config::{PatternConfig, SpeedBin};
+use ddr4bench::ddr4::MappingPolicy;
 use ddr4bench::platform::sweep::{
-    job_csv, job_json, preset, run_sweep, summary_json, write_artifacts, SweepSpec,
+    job_csv, job_json, parse_knob_list, preset, run_sweep, summary_json, write_artifacts,
+    SweepSpec,
 };
 use ddr4bench::platform::Platform;
+use ddr4bench::report::compare;
 
 /// A small spec (fast enough for CI) that still exercises two speeds, two
 /// channel counts and all three adversarial patterns = 12 jobs.
@@ -91,7 +94,7 @@ fn artifacts_written_one_json_and_csv_per_job() {
     let summary = write_artifacts(&outcomes, &dir).unwrap();
     assert!(summary.ends_with("BENCH_sweep.json"));
     let summary_text = std::fs::read_to_string(&summary).unwrap();
-    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v1\""));
+    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v2\""));
     let mut jsons = 0;
     let mut csvs = 0;
     for entry in std::fs::read_dir(&dir).unwrap() {
@@ -116,6 +119,51 @@ fn artifacts_written_one_json_and_csv_per_job() {
     for o in &outcomes {
         assert!(summary_text.contains(&format!("\"id\": {}", o.job.id)));
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mapping_and_knob_axes_run_and_label_artifacts() {
+    // 1 speed x 1 channel x 2 mappings x 2 knob profiles x 1 pattern
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1];
+    spec.mappings = vec![MappingPolicy::row_col_bank(), MappingPolicy::xor_hash()];
+    spec.knobs = parse_knob_list("lookahead=1,lookahead=8").unwrap();
+    spec.patterns = vec![preset("bank").unwrap()];
+    spec.patterns[0].1.batch_len = 32;
+    let jobs = spec.expand();
+    assert_eq!(jobs.len(), 4);
+    let outcomes = run_sweep(jobs, 2).unwrap();
+    for o in &outcomes {
+        let c = &o.agg.counters;
+        assert_eq!(c.rd_txns + c.wr_txns, 32, "{} conserves txns", o.job.mapping);
+        assert!(o.agg.total_throughput_gbs() > 0.0);
+        let j = job_json(o);
+        assert!(j.contains(&format!("\"mapping\": \"{}\"", o.job.mapping.name())), "{j}");
+        assert!(j.contains(&format!("\"knobs\": \"{}\"", o.job.knob)), "{j}");
+    }
+    // per-job artifacts are labeled with the policy and knob profile
+    let dir = std::env::temp_dir().join(format!("ddr4bench_map_sweep_{}", std::process::id()));
+    let summary = write_artifacts(&outcomes, &dir).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    for (map, knob) in [("row_col_bank", "lookahead1"), ("xor_hash", "lookahead8")] {
+        assert!(
+            names.iter().any(|n| n.contains(map) && n.contains(knob) && n.ends_with(".json")),
+            "missing {map}/{knob} artifact in {names:?}"
+        );
+    }
+    // and the summary feeds straight into the compare pipeline
+    let loaded = compare::load_sweep(&summary).unwrap();
+    assert_eq!(loaded.records.len(), 4);
+    let maps: HashSet<&str> = loaded.records.iter().map(|r| r.mapping.as_str()).collect();
+    assert_eq!(maps, HashSet::from(["row_col_bank", "xor_hash"]));
+    let report = compare::compare(&[loaded.clone(), loaded.clone()], 2.0);
+    assert_eq!(report.delta.rows.len(), 4);
+    assert!(report.regressions.is_empty(), "a sweep never regresses against itself");
     std::fs::remove_dir_all(&dir).ok();
 }
 
