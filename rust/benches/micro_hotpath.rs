@@ -3,6 +3,9 @@
 //!
 //! - DDR4 device command legality + issue (inner loop of every tick);
 //! - controller tick under saturated sequential and random load;
+//! - scheduler pick under deep queues, one series per policy — documents
+//!   that the `controller::sched` trait dispatch + wake fast path does
+//!   not slow the hot loop relative to the monolithic scheduler;
 //! - end-to-end simulated-cycles-per-second (the SPerf headline);
 //! - PRBS payload expansion, Rust mirror vs the AOT XLA kernel;
 //! - batched verification, Rust mirror vs XLA.
@@ -11,7 +14,7 @@
 
 use ddr4bench::benchkit::Bench;
 use ddr4bench::config::{ControllerParams, DesignConfig, PatternConfig, SpeedBin};
-use ddr4bench::controller::{MemController, MemRequest};
+use ddr4bench::controller::{MemController, MemRequest, SchedKind};
 use ddr4bench::ddr4::{Cmd, DdrDevice, DramGeometry, TimingParams};
 use ddr4bench::platform::Platform;
 use ddr4bench::rng::SplitMix64;
@@ -71,6 +74,62 @@ fn main() {
                         arrival: now,
                         last_of_txn: true,
                     });
+                    id += 1;
+                }
+                ctrl.tick(now);
+                if now % 64 == 0 {
+                    comps.clear();
+                    ctrl.pop_completions(now, &mut comps);
+                }
+            }
+            std::hint::black_box(ctrl.device().stats().reads);
+        });
+    }
+
+    // --- scheduler pick: deep queues (depth 64, window 16), every policy
+    for kind in SchedKind::ALL {
+        let name = format!("controller/sched_pick_{}", kind.name());
+        bench.bench_throughput(&name, 150_000.0, "tick", move || {
+            let geo = DramGeometry::profpga_board();
+            let params = ControllerParams {
+                sched: kind,
+                read_queue_depth: 64,
+                write_queue_depth: 64,
+                write_drain_high: 48,
+                write_drain_low: 8,
+                lookahead: 16,
+                ..Default::default()
+            };
+            let mut ctrl =
+                MemController::new(params, TimingParams::for_bin(SpeedBin::Ddr4_1600), geo);
+            let mut rng = SplitMix64::new(11);
+            let mut comps = Vec::new();
+            let mut id = 0u64;
+            for now in 0..150_000u64 {
+                // keep both queues deep so every pick scans a full window
+                // (steer pushes away from a full queue so one full side
+                // cannot starve the refill of the other)
+                while ctrl.read_slots() > 32 || ctrl.write_slots() > 32 {
+                    let is_write = if ctrl.write_slots() == 0 {
+                        false
+                    } else if ctrl.read_slots() == 0 {
+                        true
+                    } else {
+                        rng.percent(40)
+                    };
+                    let addr = rng.below(1 << 22) * 64;
+                    let pushed = ctrl.try_push(MemRequest {
+                        txn_id: id,
+                        is_write,
+                        addr: geo.decode(addr),
+                        burst_addr: addr,
+                        beats: 2,
+                        arrival: now,
+                        last_of_txn: true,
+                    });
+                    if pushed.is_err() {
+                        break;
+                    }
                     id += 1;
                 }
                 ctrl.tick(now);

@@ -23,7 +23,7 @@
 
 pub mod dse;
 
-use crate::config::{OpMix, PatternConfig, SpeedBin};
+use crate::config::{OpMix, PatternConfig, SchedKind, SpeedBin};
 use crate::ddr4::{DramGeometry, TimingParams};
 
 /// Model inputs distilled from a (design, pattern) pair — the 8 feature
@@ -198,9 +198,58 @@ pub fn mapping_derate(geo: &DramGeometry, cfg: &PatternConfig, speed: SpeedBin) 
     per_visit / (per_visit + reopen)
 }
 
+/// Throughput derate for a scheduling/page policy — the policy-aware
+/// half of the row-miss/turnaround accounting
+/// (`frfcfs` = 1.0 by construction, so the 8-feature `bwmodel` XLA
+/// artifact and its pinned-value parity tests stay untouched).
+///
+/// - `fcfs`: a window-1 scheduler cannot overlap the next miss's
+///   PRE/ACT with the current transaction's data phase, so row-hostile
+///   patterns repay tRP per transaction on top of the modeled flush.
+/// - `frfcfs-cap`: a fairness knob; first-order bandwidth-neutral (the
+///   cap only reorders *which* request pays the row cycle, not how many
+///   row cycles are paid).
+/// - `closed`: row-friendly streams lose their open-row hits — every
+///   transaction reopens its row, amortizing tRCD over the transaction's
+///   DRAM bursts. Row-hostile traffic already pays the full row cycle
+///   (the auto-precharge merely moves the PRE off the command bus), so
+///   no derate there.
+/// - `adaptive`: the idle timer only fires in idle gaps, which the
+///   saturated batches the model describes don't have.
+pub fn sched_derate(
+    sched: SchedKind,
+    cfg: &PatternConfig,
+    speed: SpeedBin,
+    beat_bytes: u32,
+) -> f32 {
+    let t = TimingParams::for_bin(speed);
+    match sched {
+        SchedKind::FrFcfs | SchedKind::FrFcfsCap { .. } | SchedKind::Adaptive => 1.0,
+        SchedKind::Fcfs => {
+            if cfg.addr.row_hostile() {
+                let service = (t.trcd + t.cl + t.burst_cycles) as f32;
+                service / (service + t.trp as f32)
+            } else {
+                1.0
+            }
+        }
+        SchedKind::Closed => {
+            if cfg.addr.row_hostile() {
+                1.0
+            } else {
+                let txn_bytes = (cfg.burst.len * beat_bytes) as f32;
+                let service = (txn_bytes / 64.0).max(1.0) * t.burst_cycles as f32;
+                service / (service + t.trcd as f32)
+            }
+        }
+    }
+}
+
 /// Predict throughput for a (speed, pattern) pair under an explicit
 /// geometry: the pattern's `MAP=` override (when set) re-maps the
-/// geometry before the mapping derate is applied.
+/// geometry before the mapping derate is applied, and the `SCHED=`
+/// override (when set) applies the policy derate (`frfcfs` otherwise —
+/// derate 1.0, preserving the historical predictions).
 pub fn predict_pattern_mapped(
     speed: SpeedBin,
     cfg: &PatternConfig,
@@ -211,7 +260,10 @@ pub fn predict_pattern_mapped(
     if let Some(m) = cfg.mapping {
         g.mapping = m;
     }
-    predict_pattern(speed, cfg, beat_bytes) * mapping_derate(&g, cfg, speed)
+    let sched = cfg.sched.unwrap_or(SchedKind::FrFcfs);
+    predict_pattern(speed, cfg, beat_bytes)
+        * mapping_derate(&g, cfg, speed)
+        * sched_derate(sched, cfg, speed, beat_bytes)
 }
 
 #[cfg(test)]
@@ -289,6 +341,45 @@ mod tests {
         cfg.mapping = Some(MappingPolicy::row_bank_col());
         let mapped = predict_pattern_mapped(SpeedBin::Ddr4_1600, &cfg, 32, &geo);
         assert!(mapped < base, "mapped {mapped} vs base {base}");
+    }
+
+    #[test]
+    fn sched_derates_order_policies_sanely() {
+        let geo = crate::ddr4::DramGeometry::profpga_board();
+        let seq = PatternConfig::seq_read_burst(32, 1);
+        let rnd = PatternConfig::rnd_read_burst(1, 1, 0);
+        // frfcfs is the 1.0 baseline everywhere
+        for cfg in [&seq, &rnd] {
+            assert_eq!(sched_derate(SchedKind::FrFcfs, cfg, SpeedBin::Ddr4_1600, 32), 1.0);
+            assert_eq!(
+                sched_derate(SchedKind::FrFcfsCap { cap: 4 }, cfg, SpeedBin::Ddr4_1600, 32),
+                1.0
+            );
+            assert_eq!(sched_derate(SchedKind::Adaptive, cfg, SpeedBin::Ddr4_1600, 32), 1.0);
+        }
+        // fcfs pays on row-hostile traffic only
+        let d = sched_derate(SchedKind::Fcfs, &rnd, SpeedBin::Ddr4_1600, 32);
+        assert!(d < 1.0 && d > 0.5, "fcfs hostile derate {d}");
+        assert_eq!(sched_derate(SchedKind::Fcfs, &seq, SpeedBin::Ddr4_1600, 32), 1.0);
+        // closed pays on row-friendly traffic only, less for longer bursts
+        let c32 = sched_derate(SchedKind::Closed, &seq, SpeedBin::Ddr4_1600, 32);
+        assert!(c32 < 1.0 && c32 > 0.5, "closed seq derate {c32}");
+        let c1 = sched_derate(
+            SchedKind::Closed,
+            &PatternConfig::seq_read_burst(1, 1),
+            SpeedBin::Ddr4_1600,
+            32,
+        );
+        assert!(c1 < c32, "short transactions amortize the reopen worse: {c1} vs {c32}");
+        assert_eq!(sched_derate(SchedKind::Closed, &rnd, SpeedBin::Ddr4_1600, 32), 1.0);
+        // the mapped predictor composes base x mapping x sched; no
+        // override keeps the historical prediction bit-identical
+        let base = predict_pattern_mapped(SpeedBin::Ddr4_1600, &seq, 32, &geo);
+        assert_eq!(base, predict_pattern(SpeedBin::Ddr4_1600, &seq, 32));
+        let mut closed = seq.clone();
+        closed.sched = Some(SchedKind::Closed);
+        let predicted = predict_pattern_mapped(SpeedBin::Ddr4_1600, &closed, 32, &geo);
+        assert!((predicted / base - c32).abs() < 1e-6, "{predicted} vs {base} x {c32}");
     }
 
     #[test]

@@ -26,6 +26,91 @@ pub use parse::{
 use crate::ddr4::geometry::DramGeometry;
 use crate::ddr4::mapping::MappingPolicy;
 
+/// Runtime-selectable scheduler / page-policy identifier — a plain
+/// configuration value, like [`MappingPolicy`]. The behaviour behind
+/// each name is implemented in [`crate::controller::sched`]. Parsed
+/// from the `SCHED=` pattern token, the `--sched`/`--scheds` CLI axes,
+/// the `[controller] sched =` design key and the host protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SchedKind {
+    /// Strict oldest-first: no reordering at all (reorder window 1).
+    Fcfs,
+    /// FR-FCFS, open page — the MIG-like default (pre-refactor
+    /// behaviour, preserved bit-exactly).
+    #[default]
+    FrFcfs,
+    /// FR-FCFS with a bypass cap: at most `cap` consecutive younger
+    /// row hits may overtake the oldest request (starvation bound).
+    FrFcfsCap {
+        /// Maximum consecutive head bypasses before the scheduler
+        /// degrades to strict FCFS until the head issues.
+        cap: u32,
+    },
+    /// Closed page: CAS commands carry auto-precharge (RDA/WRA) unless
+    /// another queued request still wants the open row.
+    Closed,
+    /// Open page with an idle-timer precharge (the pre-existing
+    /// `idle_precharge_cycles` heuristic, on by default).
+    Adaptive,
+}
+
+impl SchedKind {
+    /// Default bypass cap of `frfcfs-cap` (chosen so a four-deep reorder
+    /// window cannot starve its head for more than one window refill).
+    pub const DEFAULT_CAP: u32 = 4;
+
+    /// Every selectable policy, in sweep/report order.
+    pub const ALL: [SchedKind; 5] = [
+        SchedKind::Fcfs,
+        SchedKind::FrFcfs,
+        SchedKind::FrFcfsCap { cap: Self::DEFAULT_CAP },
+        SchedKind::Closed,
+        SchedKind::Adaptive,
+    ];
+
+    /// Parse a policy name: `fcfs`, `frfcfs` (or `fr-fcfs`),
+    /// `frfcfs-cap` / `frfcfs-cap8` / `frfcfs-cap=8`, `closed`,
+    /// `adaptive`. Underscores are accepted in place of dashes.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_lowercase().replace('_', "-");
+        match s.as_str() {
+            "fcfs" | "in-order" => return Some(SchedKind::Fcfs),
+            "frfcfs" | "fr-fcfs" | "open" => return Some(SchedKind::FrFcfs),
+            "closed" | "closed-page" => return Some(SchedKind::Closed),
+            "adaptive" | "adaptive-open" => return Some(SchedKind::Adaptive),
+            _ => {}
+        }
+        let rest = s.strip_prefix("frfcfs-cap").or_else(|| s.strip_prefix("fr-fcfs-cap"))?;
+        if rest.is_empty() {
+            return Some(SchedKind::FrFcfsCap { cap: Self::DEFAULT_CAP });
+        }
+        let cap: u32 = rest.strip_prefix('=').unwrap_or(rest).parse().ok()?;
+        if cap == 0 {
+            return None;
+        }
+        Some(SchedKind::FrFcfsCap { cap })
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]; used for
+    /// artifact labels and the `SCHED=` echo).
+    pub fn name(self) -> String {
+        match self {
+            SchedKind::Fcfs => "fcfs".into(),
+            SchedKind::FrFcfs => "frfcfs".into(),
+            SchedKind::FrFcfsCap { cap } if cap == Self::DEFAULT_CAP => "frfcfs-cap".into(),
+            SchedKind::FrFcfsCap { cap } => format!("frfcfs-cap{cap}"),
+            SchedKind::Closed => "closed".into(),
+            SchedKind::Adaptive => "adaptive".into(),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
 /// JEDEC DDR4 speed bins supported by the platform — the four the paper's
 /// campaign covers (§III, Table II).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -190,6 +275,12 @@ pub struct ControllerParams {
     /// transaction — the behaviour behind the paper's "mixed beats pure"
     /// observation.
     pub mode_dwell_ck: u32,
+    /// Command-scheduling / page-management policy
+    /// ([`crate::controller::sched`]): `fcfs`, `frfcfs` (the MIG-like
+    /// default), `frfcfs-cap[N]`, `closed` or `adaptive`. Selectable at
+    /// design time here, per batch via the `SCHED=` pattern token, and
+    /// as a sweep axis (`--scheds`).
+    pub sched: SchedKind,
 }
 
 impl Default for ControllerParams {
@@ -206,6 +297,7 @@ impl Default for ControllerParams {
             serial_frontend: true,
             miss_flush: true,
             mode_dwell_ck: 48,
+            sched: SchedKind::FrFcfs,
         }
     }
 }
@@ -279,6 +371,11 @@ impl DesignConfig {
         }
         if c.addr_cmd_interval_axi == 0 {
             return Err(ConfigError::new("addr_cmd_interval_axi must be >= 1"));
+        }
+        if let SchedKind::FrFcfsCap { cap } = c.sched {
+            if cap == 0 {
+                return Err(ConfigError::new("frfcfs-cap requires cap >= 1"));
+            }
         }
         self.geometry.validate().map_err(ConfigError::new)?;
         Ok(())
@@ -598,6 +695,11 @@ pub struct PatternConfig {
     /// channel at run time — both the traffic generator's decode and the
     /// geometry-derived adversarial streams follow it.
     pub mapping: Option<MappingPolicy>,
+    /// Scheduler/page-policy override for this batch (`SCHED=` token).
+    /// `None` runs under the design's [`ControllerParams::sched`];
+    /// `Some` re-schedules the channel at run time for the batches that
+    /// follow (queued state and open rows carry over).
+    pub sched: Option<SchedKind>,
 }
 
 impl PatternConfig {
@@ -616,6 +718,7 @@ impl PatternConfig {
             data: DataPattern::default(),
             verify: false,
             mapping: None,
+            sched: None,
         }
     }
 
@@ -709,6 +812,9 @@ impl PatternConfig {
         }
         if self.region_bytes == 0 {
             return Err(ConfigError::new("region_bytes must be > 0"));
+        }
+        if let Some(SchedKind::FrFcfsCap { cap: 0 }) = self.sched {
+            return Err(ConfigError::new("SCHED=frfcfs-cap requires cap >= 1"));
         }
         self.addr.validate()?;
         if self.addr.uses_bank_conflict()

@@ -8,7 +8,7 @@
 
 use super::{
     AddrMode, BurstKind, ControllerParams, CounterSet, DataPattern, DesignConfig, OpMix,
-    PatternConfig, Signaling, SpeedBin,
+    PatternConfig, SchedKind, Signaling, SpeedBin,
 };
 use crate::ddr4::mapping::MappingPolicy;
 use std::collections::BTreeMap;
@@ -119,7 +119,8 @@ pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
 /// [counters]  batch_cycles/latency/refresh/integrity = true|false
 /// [controller] read_queue_depth / write_queue_depth / lookahead /
 ///              write_drain_high / write_drain_low / outstanding_cap /
-///              idle_precharge_cycles / addr_cmd_interval_axi
+///              idle_precharge_cycles / addr_cmd_interval_axi /
+///              sched = fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive
 /// ```
 pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
     let map = parse_kv_text(text)?;
@@ -161,6 +162,12 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
         serial_frontend: get_bool(&map, "controller.serial_frontend", d.serial_frontend)?,
         miss_flush: get_bool(&map, "controller.miss_flush", d.miss_flush)?,
         mode_dwell_ck: get_u32(&map, "controller.mode_dwell_ck", d.mode_dwell_ck)?,
+        sched: match map.get("controller.sched") {
+            None => d.sched,
+            Some(v) => SchedKind::parse(v).ok_or_else(|| {
+                ConfigError::new(format!("controller.sched: unknown policy `{v}`"))
+            })?,
+        },
     };
     cfg.validate()?;
     Ok(cfg)
@@ -175,6 +182,7 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
 /// TYPE=FIXED|INCR|WRAP  SIG=NB|BLK|AGR  BATCH=4096  START=0  REGION=256m
 /// DATA=PRBS|ZEROS|<hex>  VERIFY=0|1
 /// MAP=row_col_bank|row_bank_col|bank_row_col|xor_hash|<order, e.g. RoBaBgCo>
+/// SCHED=fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive
 /// ```
 ///
 /// Pattern parameters are order-independent: `SEED`, `STRIDE` and `WSET`
@@ -299,6 +307,11 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
             "MAP" => {
                 p.mapping = Some(MappingPolicy::parse(val).ok_or_else(|| {
                     ConfigError::new(format!("MAP: unknown mapping policy `{val}`"))
+                })?);
+            }
+            "SCHED" => {
+                p.sched = Some(SchedKind::parse(val).ok_or_else(|| {
+                    ConfigError::new(format!("SCHED: unknown scheduler policy `{val}`"))
                 })?);
             }
             _ => return Err(ConfigError::new(format!("unknown pattern key `{k}`"))),
@@ -452,6 +465,9 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
     if let Some(m) = &p.mapping {
         s.push_str(&format!(" MAP={}", m.name()));
     }
+    if let Some(k) = p.sched {
+        s.push_str(&format!(" SCHED={}", k.name()));
+    }
     s
 }
 
@@ -462,7 +478,7 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
 /// `write_drain_high` (`whi`), `write_drain_low` (`wlo`),
 /// `outstanding_cap` (`cap`), `idle_precharge_cycles` (`idle_pre`),
 /// `addr_cmd_interval_axi` (`addr_interval`), `serial_frontend`,
-/// `miss_flush`, `mode_dwell_ck` (`dwell`).
+/// `miss_flush`, `mode_dwell_ck` (`dwell`), `sched` (`policy`).
 pub fn parse_controller_tokens(
     base: ControllerParams,
     tokens: &[&str],
@@ -505,6 +521,11 @@ pub fn parse_controller_tokens(
             "serial_frontend" => p.serial_frontend = as_bool()?,
             "miss_flush" => p.miss_flush = as_bool()?,
             "mode_dwell_ck" | "dwell" => p.mode_dwell_ck = as_u32()?,
+            "sched" | "policy" => {
+                p.sched = SchedKind::parse(val).ok_or_else(|| {
+                    ConfigError::new(format!("knob sched: unknown policy `{val}`"))
+                })?;
+            }
             other => return Err(ConfigError::new(format!("unknown controller knob `{other}`"))),
         }
     }
@@ -705,6 +726,39 @@ mod tests {
         let cfg = parse_design_config("mapping = bank_row_col\n").unwrap();
         assert_eq!(cfg.geometry.mapping, MappingPolicy::bank_row_col());
         assert!(parse_design_config("mapping = nope\n").is_err());
+    }
+
+    #[test]
+    fn sched_token_parses_and_roundtrips() {
+        let p = parse_pattern_config(&["ADDR=SEQ", "SCHED=fcfs"]).unwrap();
+        assert_eq!(p.sched, Some(SchedKind::Fcfs));
+        let p = parse_pattern_config(&["SCHED=frfcfs-cap8"]).unwrap();
+        assert_eq!(p.sched, Some(SchedKind::FrFcfsCap { cap: 8 }));
+        assert!(parse_pattern_config(&["SCHED=frobnicate"]).is_err());
+        assert!(parse_pattern_config(&["SCHED=frfcfs-cap0"]).is_err());
+        // SCHED= survives the format/parse round trip, alone and with MAP=
+        for sched in ["fcfs", "frfcfs", "frfcfs-cap", "frfcfs-cap16", "closed", "adaptive"] {
+            let toks = ["ADDR=BANK", "SEED=5", "MAP=xor_hash", &format!("SCHED={sched}")];
+            let p = parse_pattern_config(&toks).unwrap();
+            let text = format_pattern_config(&p);
+            assert!(text.contains("SCHED="), "{text}");
+            let toks2: Vec<&str> = text.split_whitespace().collect();
+            assert_eq!(parse_pattern_config(&toks2).unwrap(), p, "`{text}`");
+        }
+        // no override: the echo stays silent about scheduling
+        let p = parse_pattern_config(&["ADDR=SEQ"]).unwrap();
+        assert_eq!(p.sched, None);
+        assert!(!format_pattern_config(&p).contains("SCHED="));
+    }
+
+    #[test]
+    fn design_config_sched_key() {
+        let cfg = parse_design_config("[controller]\nsched = closed\n").unwrap();
+        assert_eq!(cfg.controller.sched, SchedKind::Closed);
+        let cfg = parse_design_config("[controller]\nsched = frfcfs-cap=2\n").unwrap();
+        assert_eq!(cfg.controller.sched, SchedKind::FrFcfsCap { cap: 2 });
+        assert_eq!(parse_design_config("").unwrap().controller.sched, SchedKind::FrFcfs);
+        assert!(parse_design_config("[controller]\nsched = nope\n").is_err());
     }
 
     #[test]

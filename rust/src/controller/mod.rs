@@ -8,8 +8,10 @@
 //!
 //! - separate **read and write queues** fed concurrently by the AXI front
 //!   end, with configurable depths;
-//! - an **FR-FCFS, open-page scheduler** with a bounded reorder window
-//!   (`lookahead`): row hits first, then oldest-first ACT/PRE preparation;
+//! - a **runtime-selectable scheduler** behind the [`sched::SchedPolicy`]
+//!   trait: FR-FCFS open page (the MIG-like default), strict FCFS, a
+//!   bypass-capped FR-FCFS, closed page (auto-precharge) and an adaptive
+//!   idle-timer page policy — see [`sched`] and [`sched::SchedKind`];
 //! - **write draining** with high/low watermarks to batch bus turnarounds;
 //! - **refresh insertion** on the tREFI cadence (PREA + REF, tRFC stall);
 //! - the **PHY command serialization** model: one DDR4 command slot per
@@ -17,13 +19,24 @@
 //!   slots per fabric cycle, matching §II-A's "issue multiple commands to
 //!   DDR4 at a time".
 //!
+//! The controller is decomposed as front end + scheduler: this module
+//! owns the queues, the read/write direction state machine, refresh and
+//! the miss-flush gates, and delegates every scheduling *choice* to the
+//! policy engine in [`sched`]. The default policy reproduces the
+//! pre-refactor monolithic scheduler command-for-command (differential
+//! proptest in `rust/tests/frfcfs_differential.rs`).
+//!
 //! Data integrity under reordering is preserved the same way MIG does it:
 //! requests to the *same DRAM burst address* are never reordered past each
-//! other (checked by `same-address ordering` in the property tests).
+//! other, under every policy (checked by `same-address ordering` in the
+//! property tests; the hazard check lives in the shared scan of [`sched`],
+//! outside any policy hook).
 
 pub mod request;
+pub mod sched;
 
 pub use request::{Completion, MemRequest};
+pub use sched::{SchedEngine, SchedKind, SchedPolicy};
 
 use std::collections::VecDeque;
 
@@ -62,6 +75,8 @@ pub struct CtrlStats {
 #[derive(Debug, Clone)]
 pub struct MemController {
     params: ControllerParams,
+    /// The scheduling/page policy in force (runtime-swappable).
+    sched: SchedEngine,
     device: DdrDevice,
     read_q: VecDeque<MemRequest>,
     write_q: VecDeque<MemRequest>,
@@ -97,6 +112,7 @@ impl MemController {
             bank_last_use: vec![0; banks],
             dirty: true,
             idle_until: 0,
+            sched: SchedEngine::new(params.sched),
             params,
             device: DdrDevice::new(timing, geometry),
             read_q: VecDeque::with_capacity(params.read_queue_depth),
@@ -125,6 +141,23 @@ impl MemController {
     /// Microarchitectural parameters in force.
     pub fn params(&self) -> &ControllerParams {
         &self.params
+    }
+
+    /// The active scheduling/page policy.
+    pub fn sched_kind(&self) -> SchedKind {
+        self.sched.kind()
+    }
+
+    /// Swap the scheduling/page policy at run time (a batch-level
+    /// `SCHED=` override). Queued work and bank state carry over; the
+    /// policy's internal state (e.g. the bypass streak) starts fresh.
+    pub fn set_sched(&mut self, kind: SchedKind) {
+        if self.sched.kind() != kind {
+            self.sched = SchedEngine::new(kind);
+            self.params.sched = kind;
+            // the new policy may issue earlier than the cached wake time
+            self.dirty = true;
+        }
     }
 
     /// Free slots in the read queue.
@@ -269,42 +302,41 @@ impl MemController {
         None
     }
 
-    /// Close an open row that has sat unused for `idle_precharge_cycles`
-    /// and that no queued request still wants — turns the next access to
-    /// that bank from a 2-command conflict (PRE+ACT) into a plain ACT,
-    /// trading sequential locality for random-access latency (the
-    /// page-policy ablation bench quantifies the trade).
+    /// Scheduling view over the queues of `mode` (active) and its
+    /// opposite (hazards), for the policy engine.
+    fn sched_view(&self, mode: Mode, now: Cycle) -> sched::SchedView<'_> {
+        let (active, other) = match mode {
+            Mode::Read => (&self.read_q, &self.write_q),
+            Mode::Write => (&self.write_q, &self.read_q),
+        };
+        sched::SchedView {
+            device: &self.device,
+            params: &self.params,
+            active,
+            other,
+            is_write: mode == Mode::Write,
+            bank_last_use: &self.bank_last_use,
+            now,
+        }
+    }
+
+    /// Close an open row that has sat unused past the policy's idle
+    /// timer and that no queued request still wants — turns the next
+    /// access to that bank from a 2-command conflict (PRE+ACT) into a
+    /// plain ACT, trading sequential locality for random-access latency
+    /// (the page-policy ablation bench quantifies the trade). The timer
+    /// is policy-defined: 0 (never) for open-page policies unless the
+    /// `idle_precharge_cycles` knob is set, always-on for `adaptive`.
     fn try_idle_precharge(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
-        let timer = self.params.idle_precharge_cycles;
-        if timer == 0 {
-            return (None, Cycle::MAX);
-        }
-        let mut wake = Cycle::MAX;
-        for bank in 0..self.bank_last_use.len() {
-            let b = self.device.bank(bank as u32);
-            let Some(open_row) = b.open_row else { continue };
-            let expires = self.bank_last_use[bank] + timer as Cycle;
-            if now < expires {
-                wake = wake.min(expires);
-                continue;
-            }
-            let wanted = self
-                .read_q
-                .iter()
-                .chain(self.write_q.iter())
-                .any(|r| r.addr.bank == bank as u32 && r.addr.row == open_row);
-            if wanted {
-                continue;
-            }
-            let cmd = Cmd::Pre { bank: bank as u32 };
-            let at = self.device.earliest_issue(cmd);
-            if at <= now && self.device.can_issue(cmd, now) {
+        let (bank, wake) = self.sched.pick_idle_precharge(&self.sched_view(Mode::Read, now));
+        match bank {
+            Some(bank) => {
+                let cmd = Cmd::Pre { bank };
                 self.device.issue(cmd, now);
-                return (Some(cmd), now);
+                (Some(cmd), now)
             }
-            wake = wake.min(at);
+            None => (None, wake),
         }
-        (None, wake)
     }
 
     fn tick_refresh(&mut self, now: Cycle) -> Option<Cmd> {
@@ -392,53 +424,32 @@ impl MemController {
         other.iter().any(|r| r.addr == head.addr && r.arrival < head.arrival)
     }
 
-    /// FR-FCFS CAS selection: scan the first `lookahead` entries of the
-    /// active queue; issue the first row-hit whose CAS is legal now.
+    /// CAS issue: the policy engine picks the queue entry (row hits
+    /// first inside its window for the FR-FCFS family, strict head for
+    /// `fcfs`) and decides auto-precharge; the front end commits it.
     /// Same-address ordering: a request is skipped if an older queued
-    /// request (either direction) targets the same DRAM burst.
+    /// request (either direction) targets the same DRAM burst — the
+    /// hazard check lives in the shared scan, policy-independent.
     /// On failure, returns the earliest cycle a scanned candidate becomes
     /// legal (wake hint for the tick fast-path).
     fn try_cas(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
         let is_write = self.mode == Mode::Write;
-        let look = self.params.lookahead;
-        let (q, t) = match self.mode {
-            Mode::Read => (&self.read_q, self.device.timing()),
-            Mode::Write => (&self.write_q, self.device.timing()),
-        };
+        let (pick, wake) = self.sched.pick_cas(&self.sched_view(self.mode, now));
+        let Some(pick) = pick else { return (None, wake) };
+        let t = self.device.timing();
         let (cl, cwl, burst) = (t.cl, t.cwl, t.burst_cycles);
-
-        let mut pick: Option<usize> = None;
-        let mut wake = Cycle::MAX;
-        for (i, req) in q.iter().take(look).enumerate() {
-            if self.device.row_state(req.addr.bank, req.addr.row) == Some(true) {
-                let cmd = if is_write {
-                    Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
-                } else {
-                    Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
-                };
-                if self.reordered_past_same_addr(i, is_write) {
-                    continue; // hazard: cleared by a future issue (dirty)
-                }
-                let at = self.device.earliest_issue(cmd);
-                if at <= now {
-                    pick = Some(i);
-                    break;
-                }
-                wake = wake.min(at);
-            }
-        }
-        let Some(i) = pick else { return (None, wake) };
         let req = if is_write {
-            self.write_q.remove(i).unwrap()
+            self.write_q.remove(pick.index).unwrap()
         } else {
-            self.read_q.remove(i).unwrap()
+            self.read_q.remove(pick.index).unwrap()
         };
         let cmd = if is_write {
-            Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+            Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: pick.auto_pre }
         } else {
-            Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+            Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: pick.auto_pre }
         };
         self.device.issue(cmd, now);
+        self.sched.on_cas_issued(is_write, pick.index);
         self.bank_last_use[req.addr.bank as usize] = now;
         let done_at = now + if is_write { cwl + burst } else { cl + burst } as Cycle;
         // CAS issue order == data order on the bus (tCCD >= burst), so the
@@ -464,67 +475,14 @@ impl MemController {
         (Some(cmd), now)
     }
 
-    /// Would issuing queue entry `i` overtake an older same-address entry?
-    fn reordered_past_same_addr(&self, i: usize, is_write: bool) -> bool {
-        let q = if is_write { &self.write_q } else { &self.read_q };
-        let target = q[i].addr;
-        // older entries in the same queue
-        if q.iter().take(i).any(|r| r.addr == target) {
-            return true;
-        }
-        // and older entries in the opposite queue (RAW/WAR hazards)
-        let other = if is_write { &self.read_q } else { &self.write_q };
-        let my_arrival = q[i].arrival;
-        other.iter().any(|r| r.addr == target && r.arrival < my_arrival)
-    }
-
     /// Row preparation for the oldest serviceable entries of `mode`'s
-    /// queue: ACT closed banks, PRE conflicting rows (unless an older
-    /// request still wants the open row).
+    /// queue: the policy engine chooses the ACT/PRE target inside its
+    /// window; the front end commits it and applies the miss-flush gate.
     fn try_prep(&mut self, now: Cycle, mode: Mode) -> (Option<Cmd>, Cycle) {
-        let look = self.params.lookahead;
-        let q = match mode {
-            Mode::Read => &self.read_q,
-            Mode::Write => &self.write_q,
-        };
-        // Collect candidate (bank,row) prep targets oldest-first; dedup
-        // banks so we don't try to ACT one bank twice in a window.
-        let mut seen_banks = 0u32; // bitmask over <=32 banks
-        let mut act_target: Option<(u32, u32)> = None;
-        let mut pre_target: Option<u32> = None;
-        for req in q.iter().take(look) {
-            let bit = 1u32 << req.addr.bank;
-            if seen_banks & bit != 0 {
-                continue;
-            }
-            seen_banks |= bit;
-            match self.device.row_state(req.addr.bank, req.addr.row) {
-                None => {
-                    if act_target.is_none() {
-                        act_target = Some((req.addr.bank, req.addr.row));
-                    }
-                }
-                Some(false) => {
-                    // conflict: only precharge if no older queued request
-                    // (this window) still hits the open row of this bank
-                    let open = self.device.bank(req.addr.bank).open_row;
-                    let still_wanted = q.iter().take(look).any(|r| {
-                        r.addr.bank == req.addr.bank
-                            && Some(r.addr.row) == open
-                            && r.arrival < req.arrival
-                    });
-                    if !still_wanted && pre_target.is_none() {
-                        pre_target = Some(req.addr.bank);
-                    }
-                }
-                Some(true) => {}
-            }
-        }
-        let mut wake = Cycle::MAX;
-        if let Some((bank, row)) = act_target {
-            let cmd = Cmd::Act { bank, row };
-            let at = self.device.earliest_issue(cmd);
-            if at <= now {
+        let (action, wake) = self.sched.pick_prep(&self.sched_view(mode, now));
+        match action {
+            Some(sched::PrepAction::Act { bank, row }) => {
+                let cmd = Cmd::Act { bank, row };
                 self.device.issue(cmd, now);
                 // Page-miss pipeline flush: hold the next transaction of
                 // this direction until the miss's data phase completes
@@ -548,20 +506,15 @@ impl MemController {
                         Mode::Write => self.write_gate_until = self.write_gate_until.max(gate),
                     }
                 }
-                return (Some(cmd), now);
+                (Some(cmd), now)
             }
-            wake = wake.min(at);
-        }
-        if let Some(bank) = pre_target {
-            let cmd = Cmd::Pre { bank };
-            let at = self.device.earliest_issue(cmd);
-            if at <= now && self.device.can_issue(cmd, now) {
+            Some(sched::PrepAction::Pre { bank }) => {
+                let cmd = Cmd::Pre { bank };
                 self.device.issue(cmd, now);
-                return (Some(cmd), now);
+                (Some(cmd), now)
             }
-            wake = wake.min(at);
+            None => (None, wake),
         }
-        (None, wake)
     }
 }
 
@@ -794,6 +747,138 @@ mod tests {
         assert_eq!(done.len(), 1, "request to the open row served");
         // one ACT total: the row was never closed under the request
         assert_eq!(c.device().stats().acts, 1);
+    }
+
+    fn ctrl_with_sched(kind: SchedKind) -> MemController {
+        MemController::new(
+            ControllerParams { sched: kind, ..Default::default() },
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        )
+    }
+
+    /// Open row `row` in bank 0 by completing one read through `c`.
+    fn open_row(c: &mut MemController, row: u32) {
+        c.try_push(rd_req(0, 0, row, 0, 0)).unwrap();
+        let _ = run_until_completions(c, 1, 400);
+    }
+
+    #[test]
+    fn fcfs_serves_strictly_in_order() {
+        // The same scenario where FR-FCFS reorders (older miss vs younger
+        // hit): strict FCFS must serve arrival order.
+        let mut c = ctrl_with_sched(SchedKind::Fcfs);
+        open_row(&mut c, 1);
+        c.try_push(rd_req(1, 0, 2, 0, 1000)).unwrap(); // older miss
+        c.try_push(rd_req(2, 0, 1, 8, 1001)).unwrap(); // younger hit
+        let mut done = Vec::new();
+        for now in 1000..3000 {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+            if done.len() == 2 {
+                break;
+            }
+        }
+        assert_eq!(done[0].txn_id, 1, "fcfs serves the older miss first");
+        assert_eq!(done[1].txn_id, 2);
+    }
+
+    #[test]
+    fn frfcfs_cap_bounds_the_bypass_streak() {
+        // An older miss parked behind a stream of younger hits: plain
+        // FR-FCFS serves every hit first; the capped variant lets at most
+        // `cap` hits bypass before forcing the miss through.
+        let run_policy = |kind: SchedKind| -> Vec<u64> {
+            let mut c = ctrl_with_sched(kind);
+            open_row(&mut c, 1);
+            c.try_push(rd_req(1, 0, 2, 0, 1000)).unwrap(); // the starving miss
+            for i in 0..8u64 {
+                c.try_push(rd_req(2 + i, 0, 1, 8 * (i as u32 + 1), 1001 + i)).unwrap();
+            }
+            let mut done = Vec::new();
+            for now in 1000..20_000 {
+                c.tick(now);
+                c.pop_completions(now, &mut done);
+                if done.len() == 9 {
+                    break;
+                }
+            }
+            assert_eq!(done.len(), 9, "{kind}: all requests served");
+            done.iter().map(|d| d.txn_id).collect()
+        };
+        let frfcfs = run_policy(SchedKind::FrFcfs);
+        assert_eq!(frfcfs.last(), Some(&1), "open page starves the miss to the end");
+        let capped = run_policy(SchedKind::FrFcfsCap { cap: 2 });
+        let pos = capped.iter().position(|&id| id == 1).unwrap();
+        assert!(pos <= 2, "cap=2 bounds the bypass streak, miss at {pos} in {capped:?}");
+    }
+
+    #[test]
+    fn closed_page_auto_precharges_served_rows() {
+        let mut c = ctrl_with_sched(SchedKind::Closed);
+        open_row(&mut c, 5);
+        assert!(
+            c.device().all_banks_closed(),
+            "closed page: the CAS carried auto-precharge"
+        );
+        // a second access to the same row pays a fresh ACT
+        c.try_push(rd_req(1, 0, 5, 8, 500)).unwrap();
+        let mut done = Vec::new();
+        for now in 500..1000 {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(c.device().stats().acts, 2, "row reopened per visit");
+        // open page keeps the row open in the same scenario
+        let mut open = ctrl();
+        open_row(&mut open, 5);
+        assert!(!open.device().all_banks_closed());
+    }
+
+    #[test]
+    fn closed_page_keeps_rows_wanted_by_queued_requests() {
+        let mut c = ctrl_with_sched(SchedKind::Closed);
+        // 4 back-to-back hits queued together: only the last auto-precharges
+        for i in 0..4 {
+            c.try_push(rd_req(i, 0, 1, 8 * i as u32, 0)).unwrap();
+        }
+        let done = run_until_completions(&mut c, 4, 600);
+        assert_eq!(done.len(), 4);
+        assert_eq!(c.device().stats().acts, 1, "one ACT serves the queued hits");
+        assert!(c.device().all_banks_closed(), "last CAS closed the row");
+    }
+
+    #[test]
+    fn adaptive_closes_idle_rows_without_the_knob() {
+        // Default knobs (idle_precharge_cycles = 0): frfcfs keeps the row
+        // open forever, adaptive falls back to its built-in timer.
+        let mut c = ctrl_with_sched(SchedKind::Adaptive);
+        open_row(&mut c, 5);
+        assert!(!c.device().all_banks_closed());
+        for now in 400..1000 {
+            c.tick(now);
+        }
+        assert!(c.device().all_banks_closed(), "adaptive timer closed the stale row");
+    }
+
+    #[test]
+    fn set_sched_swaps_policy_live() {
+        let mut c = ctrl();
+        assert_eq!(c.sched_kind(), SchedKind::FrFcfs);
+        open_row(&mut c, 3);
+        c.set_sched(SchedKind::Closed);
+        assert_eq!(c.sched_kind(), SchedKind::Closed);
+        assert_eq!(c.params().sched, SchedKind::Closed);
+        // queued work keeps flowing under the new policy
+        c.try_push(rd_req(1, 0, 3, 8, 500)).unwrap();
+        let mut done = Vec::new();
+        for now in 500..1000 {
+            c.tick(now);
+            c.pop_completions(now, &mut done);
+        }
+        assert_eq!(done.len(), 1);
+        assert!(c.device().all_banks_closed(), "closed-page behaviour took effect");
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Runtime-selectable command-scheduling and page-management policies —
+//! the back half of the decomposed memory controller.
+//!
+//! "The Memory Controller Wall" (arXiv:1910.06726) shows that the
+//! *scheduler*, not the access pattern alone, decides how much of the
+//! DDR4 pin bandwidth survives to the fabric; the HBM benchmarking work
+//! (arXiv:2005.04324) sweeps controller behaviour as a first-class axis.
+//! This module makes that axis runtime-selectable here too: the
+//! controller front end ([`super::MemController`]) owns the queues,
+//! direction selection, refresh and the miss-flush gates, and delegates
+//! every *choice* — which CAS to issue, which row to prepare, when to
+//! speculatively close a row, whether a CAS carries auto-precharge — to
+//! a [`SchedPolicy`] behind [`SchedEngine`].
+//!
+//! Policies ([`SchedKind`]):
+//!
+//! | name | reorders | page management | bounds |
+//! |---|---|---|---|
+//! | `fcfs` | nothing (window 1) | open page | strict arrival order |
+//! | `frfcfs` | row hits first | open page | window = `lookahead` |
+//! | `frfcfs-cap[N]` | row hits first | open page | ≤ N consecutive bypasses |
+//! | `closed` | row hits first | auto-precharge (RDA/WRA) | window = `lookahead` |
+//! | `adaptive` | row hits first | idle-timer precharge | window = `lookahead` |
+//!
+//! Every policy preserves the controller's two hard contracts:
+//!
+//! - **same-address ordering** — requests to one DRAM burst never
+//!   reorder (the hazard check lives in the shared scan, so no policy
+//!   can bypass it);
+//! - **the `idle_until` fast path** — each decision function reports the
+//!   earliest cycle at which any candidate could become legal, so the
+//!   controller can sleep between external inputs exactly as the
+//!   monolithic scheduler did (§Perf; `benches/micro_hotpath.rs` has a
+//!   per-policy deep-queue benchmark).
+//!
+//! The `frfcfs` policy is the pre-refactor scheduler, preserved
+//! command-for-command (differential-tested against a frozen copy of
+//! the monolith in `rust/tests/frfcfs_differential.rs`); it is the
+//! default everywhere.
+
+use std::collections::VecDeque;
+
+use crate::config::ControllerParams;
+use crate::ddr4::{Cmd, Cycle, DdrDevice};
+
+use super::request::MemRequest;
+
+// The policy *identifier* is a plain config value (like `MappingPolicy`)
+// and lives with the other knobs in `config`; this module implements the
+// behaviour behind it.
+pub use crate::config::SchedKind;
+
+/// Idle-precharge timer (DRAM cycles) the `adaptive` policy falls back
+/// to when `ControllerParams::idle_precharge_cycles` is 0 (the open-page
+/// default would otherwise make `adaptive` identical to `frfcfs`).
+pub const ADAPTIVE_IDLE_CK: u32 = 64;
+
+/// Read-only scheduling context for one decision: the device (timing and
+/// bank state), the knobs, the active-direction queue and its opposite
+/// (same-address hazards), and the per-bank last-use clock.
+pub struct SchedView<'a> {
+    /// Device model (row states, `earliest_issue`, timing).
+    pub device: &'a DdrDevice,
+    /// Microarchitectural knobs in force.
+    pub params: &'a ControllerParams,
+    /// Queue of the direction being scheduled.
+    pub active: &'a VecDeque<MemRequest>,
+    /// The opposite direction's queue (hazard/row-wanted checks).
+    pub other: &'a VecDeque<MemRequest>,
+    /// Is the active direction the write direction?
+    pub is_write: bool,
+    /// Last CAS issue time per bank (idle-precharge timers).
+    pub bank_last_use: &'a [Cycle],
+    /// Current DRAM cycle.
+    pub now: Cycle,
+}
+
+/// A CAS selection: which queue entry to issue and whether the CAS
+/// carries auto-precharge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CasPick {
+    /// Index into the active queue (pre-removal).
+    pub index: usize,
+    /// Issue as RDA/WRA (closed-page management).
+    pub auto_pre: bool,
+}
+
+/// A row-preparation selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrepAction {
+    /// Activate `row` in `bank` for a pending request.
+    Act {
+        /// Flat bank index.
+        bank: u32,
+        /// Row to open.
+        row: u32,
+    },
+    /// Precharge `bank` to clear a row conflict.
+    Pre {
+        /// Flat bank index.
+        bank: u32,
+    },
+}
+
+/// The policy interface every scheduler implements. The shared scans
+/// ([`SchedEngine::pick_cas`] et al.) consult these hooks, so a policy
+/// is four decisions — window size, auto-precharge, idle timer, and a
+/// bypass observer — while queue/hazard mechanics stay common (and the
+/// same-address invariant cannot be opted out of).
+pub trait SchedPolicy: std::fmt::Debug {
+    /// Which [`SchedKind`] this policy implements.
+    fn kind(&self) -> SchedKind;
+
+    /// Reorder window for CAS selection and row preparation of the
+    /// given direction at this instant (1 = strict in-order).
+    fn window(&self, params: &ControllerParams, _is_write: bool) -> usize {
+        params.lookahead
+    }
+
+    /// Should the CAS picked at `index` carry auto-precharge?
+    fn auto_precharge(&self, _view: &SchedView<'_>, _index: usize) -> bool {
+        false
+    }
+
+    /// Effective idle-precharge timer in DRAM cycles (0 = never close
+    /// speculatively).
+    fn idle_timer(&self, params: &ControllerParams) -> u32 {
+        params.idle_precharge_cycles
+    }
+
+    /// Observe a CAS issue in the given direction; `index` is the picked
+    /// position in the pre-removal queue (0 = that direction's oldest
+    /// request was served).
+    fn on_cas_issued(&mut self, _is_write: bool, _index: usize) {}
+}
+
+/// Strict in-order scheduling (window 1, open page).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedPolicy for Fcfs {
+    fn kind(&self) -> SchedKind {
+        SchedKind::Fcfs
+    }
+
+    fn window(&self, _params: &ControllerParams, _is_write: bool) -> usize {
+        1
+    }
+}
+
+/// FR-FCFS, open page — the default policy (pre-refactor behaviour).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrFcfs;
+
+impl SchedPolicy for FrFcfs {
+    fn kind(&self) -> SchedKind {
+        SchedKind::FrFcfs
+    }
+}
+
+/// FR-FCFS with a consecutive-bypass cap, tracked per direction: after
+/// `cap` CAS issues that overtook that queue's oldest request, the
+/// direction's window collapses to 1 until its head is served (bounded
+/// starvation). Per-direction streaks keep the bound meaningful under
+/// mixed traffic — serving the *write* head must not forgive bypasses
+/// of a starving *read* head, and a read-side cap must not needlessly
+/// strangle the write queue's reordering.
+#[derive(Debug, Clone, Copy)]
+pub struct FrFcfsCap {
+    cap: u32,
+    /// Consecutive head bypasses, indexed by `is_write`.
+    streak: [u32; 2],
+}
+
+impl FrFcfsCap {
+    /// New capped scheduler.
+    pub fn new(cap: u32) -> Self {
+        Self { cap, streak: [0; 2] }
+    }
+
+    /// Consecutive bypasses of the given direction's head since it was
+    /// last served.
+    pub fn streak(&self, is_write: bool) -> u32 {
+        self.streak[usize::from(is_write)]
+    }
+}
+
+impl SchedPolicy for FrFcfsCap {
+    fn kind(&self) -> SchedKind {
+        SchedKind::FrFcfsCap { cap: self.cap }
+    }
+
+    fn window(&self, params: &ControllerParams, is_write: bool) -> usize {
+        if self.streak[usize::from(is_write)] >= self.cap {
+            1
+        } else {
+            params.lookahead
+        }
+    }
+
+    fn on_cas_issued(&mut self, is_write: bool, index: usize) {
+        let streak = &mut self.streak[usize::from(is_write)];
+        if index == 0 {
+            *streak = 0;
+        } else {
+            *streak += 1;
+        }
+    }
+}
+
+/// Closed-page management: a CAS auto-precharges its row unless some
+/// other queued request (either direction, whole queue) still wants it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClosedPage;
+
+impl SchedPolicy for ClosedPage {
+    fn kind(&self) -> SchedKind {
+        SchedKind::Closed
+    }
+
+    fn auto_precharge(&self, view: &SchedView<'_>, index: usize) -> bool {
+        let req = &view.active[index];
+        let (bank, row) = (req.addr.bank, req.addr.row);
+        let wanted = view
+            .active
+            .iter()
+            .enumerate()
+            .any(|(j, r)| j != index && r.addr.bank == bank && r.addr.row == row)
+            || view.other.iter().any(|r| r.addr.bank == bank && r.addr.row == row);
+        !wanted
+    }
+
+    fn idle_timer(&self, _params: &ControllerParams) -> u32 {
+        0 // rows close themselves at CAS time
+    }
+}
+
+/// Open page with an always-on idle-precharge timer: the pre-existing
+/// heuristic, given a non-zero default so it differs from pure open
+/// page even on an untouched knob profile.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaptiveOpen;
+
+impl SchedPolicy for AdaptiveOpen {
+    fn kind(&self) -> SchedKind {
+        SchedKind::Adaptive
+    }
+
+    fn idle_timer(&self, params: &ControllerParams) -> u32 {
+        if params.idle_precharge_cycles > 0 {
+            params.idle_precharge_cycles
+        } else {
+            ADAPTIVE_IDLE_CK
+        }
+    }
+}
+
+/// The instantiated policy. The [`SchedPolicy`] trait is the decision
+/// interface; the enum exists so the controller stays `Clone` without
+/// boxed-clone machinery. Decisions dispatch through a `&dyn
+/// SchedPolicy` — a handful of virtual hook calls per scheduler
+/// evaluation, which the per-policy deep-queue series in
+/// `benches/micro_hotpath.rs` tracks against the monolith's cost.
+#[derive(Debug, Clone)]
+pub enum SchedEngine {
+    /// Strict in-order.
+    Fcfs(Fcfs),
+    /// FR-FCFS (default).
+    FrFcfs(FrFcfs),
+    /// FR-FCFS with a bypass cap.
+    Cap(FrFcfsCap),
+    /// Closed page.
+    Closed(ClosedPage),
+    /// Adaptive open page.
+    Adaptive(AdaptiveOpen),
+}
+
+impl SchedEngine {
+    /// Instantiate the policy for `kind`.
+    pub fn new(kind: SchedKind) -> Self {
+        match kind {
+            SchedKind::Fcfs => SchedEngine::Fcfs(Fcfs),
+            SchedKind::FrFcfs => SchedEngine::FrFcfs(FrFcfs),
+            SchedKind::FrFcfsCap { cap } => SchedEngine::Cap(FrFcfsCap::new(cap)),
+            SchedKind::Closed => SchedEngine::Closed(ClosedPage),
+            SchedKind::Adaptive => SchedEngine::Adaptive(AdaptiveOpen),
+        }
+    }
+
+    /// The wrapped policy as a trait object (the decision interface).
+    pub fn policy(&self) -> &dyn SchedPolicy {
+        match self {
+            SchedEngine::Fcfs(p) => p,
+            SchedEngine::FrFcfs(p) => p,
+            SchedEngine::Cap(p) => p,
+            SchedEngine::Closed(p) => p,
+            SchedEngine::Adaptive(p) => p,
+        }
+    }
+
+    fn policy_mut(&mut self) -> &mut dyn SchedPolicy {
+        match self {
+            SchedEngine::Fcfs(p) => p,
+            SchedEngine::FrFcfs(p) => p,
+            SchedEngine::Cap(p) => p,
+            SchedEngine::Closed(p) => p,
+            SchedEngine::Adaptive(p) => p,
+        }
+    }
+
+    /// The policy's identifier.
+    pub fn kind(&self) -> SchedKind {
+        self.policy().kind()
+    }
+
+    /// CAS selection over the active queue: the first legal row hit in
+    /// the policy window that does not overtake an older same-address
+    /// request. On no pick, returns the earliest cycle a scanned
+    /// candidate becomes legal (wake hint for the tick fast path).
+    pub fn pick_cas(&self, v: &SchedView<'_>) -> (Option<CasPick>, Cycle) {
+        pick_cas_impl(self.policy(), v)
+    }
+
+    /// Row-preparation selection (ACT closed banks, PRE conflicting
+    /// rows) for the oldest serviceable entries in the policy window.
+    pub fn pick_prep(&self, v: &SchedView<'_>) -> (Option<PrepAction>, Cycle) {
+        pick_prep_impl(self.policy(), v)
+    }
+
+    /// Idle-timer precharge selection: a bank whose open row has sat
+    /// unused past the policy's timer and that no queued request wants.
+    pub fn pick_idle_precharge(&self, v: &SchedView<'_>) -> (Option<u32>, Cycle) {
+        pick_idle_precharge_impl(self.policy(), v)
+    }
+
+    /// Observe a CAS issue in the given direction (index into the
+    /// pre-removal queue).
+    pub fn on_cas_issued(&mut self, is_write: bool, index: usize) {
+        self.policy_mut().on_cas_issued(is_write, index);
+    }
+}
+
+impl Default for SchedEngine {
+    fn default() -> Self {
+        SchedEngine::new(SchedKind::FrFcfs)
+    }
+}
+
+/// Would issuing active-queue entry `i` overtake an older same-address
+/// entry (same queue, or older arrival in the opposite queue)? This is
+/// the data-integrity invariant; it is enforced here, outside any
+/// policy hook, so no policy can reorder same-address requests.
+fn reordered_past_same_addr(v: &SchedView<'_>, i: usize) -> bool {
+    let target = v.active[i].addr;
+    if v.active.iter().take(i).any(|r| r.addr == target) {
+        return true;
+    }
+    let my_arrival = v.active[i].arrival;
+    v.other.iter().any(|r| r.addr == target && r.arrival < my_arrival)
+}
+
+fn pick_cas_impl(p: &dyn SchedPolicy, v: &SchedView<'_>) -> (Option<CasPick>, Cycle) {
+    let look = p.window(v.params, v.is_write);
+    let mut pick: Option<usize> = None;
+    let mut wake = Cycle::MAX;
+    for (i, req) in v.active.iter().take(look).enumerate() {
+        if v.device.row_state(req.addr.bank, req.addr.row) == Some(true) {
+            let cmd = if v.is_write {
+                Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+            } else {
+                Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+            };
+            if reordered_past_same_addr(v, i) {
+                continue; // hazard: cleared by a future issue (dirty)
+            }
+            let at = v.device.earliest_issue(cmd);
+            if at <= v.now {
+                pick = Some(i);
+                break;
+            }
+            wake = wake.min(at);
+        }
+    }
+    match pick {
+        Some(i) => (Some(CasPick { index: i, auto_pre: p.auto_precharge(v, i) }), v.now),
+        None => (None, wake),
+    }
+}
+
+fn pick_prep_impl(p: &dyn SchedPolicy, v: &SchedView<'_>) -> (Option<PrepAction>, Cycle) {
+    let look = p.window(v.params, v.is_write);
+    // Collect candidate (bank,row) prep targets oldest-first; dedup
+    // banks so we don't try to ACT one bank twice in a window.
+    let mut seen_banks = 0u32; // bitmask over <=32 banks
+    let mut act_target: Option<(u32, u32)> = None;
+    let mut pre_target: Option<u32> = None;
+    for req in v.active.iter().take(look) {
+        let bit = 1u32 << req.addr.bank;
+        if seen_banks & bit != 0 {
+            continue;
+        }
+        seen_banks |= bit;
+        match v.device.row_state(req.addr.bank, req.addr.row) {
+            None => {
+                if act_target.is_none() {
+                    act_target = Some((req.addr.bank, req.addr.row));
+                }
+            }
+            Some(false) => {
+                // conflict: only precharge if no older queued request
+                // (this window) still hits the open row of this bank
+                let open = v.device.bank(req.addr.bank).open_row;
+                let still_wanted = v.active.iter().take(look).any(|r| {
+                    r.addr.bank == req.addr.bank
+                        && Some(r.addr.row) == open
+                        && r.arrival < req.arrival
+                });
+                if !still_wanted && pre_target.is_none() {
+                    pre_target = Some(req.addr.bank);
+                }
+            }
+            Some(true) => {}
+        }
+    }
+    let mut wake = Cycle::MAX;
+    if let Some((bank, row)) = act_target {
+        let at = v.device.earliest_issue(Cmd::Act { bank, row });
+        if at <= v.now {
+            return (Some(PrepAction::Act { bank, row }), v.now);
+        }
+        wake = wake.min(at);
+    }
+    if let Some(bank) = pre_target {
+        let cmd = Cmd::Pre { bank };
+        let at = v.device.earliest_issue(cmd);
+        if at <= v.now && v.device.can_issue(cmd, v.now) {
+            return (Some(PrepAction::Pre { bank }), v.now);
+        }
+        wake = wake.min(at);
+    }
+    (None, wake)
+}
+
+fn pick_idle_precharge_impl(p: &dyn SchedPolicy, v: &SchedView<'_>) -> (Option<u32>, Cycle) {
+    let timer = p.idle_timer(v.params);
+    if timer == 0 {
+        return (None, Cycle::MAX);
+    }
+    let mut wake = Cycle::MAX;
+    for bank in 0..v.bank_last_use.len() {
+        let b = v.device.bank(bank as u32);
+        let Some(open_row) = b.open_row else { continue };
+        let expires = v.bank_last_use[bank] + timer as Cycle;
+        if v.now < expires {
+            wake = wake.min(expires);
+            continue;
+        }
+        let wanted = v
+            .active
+            .iter()
+            .chain(v.other.iter())
+            .any(|r| r.addr.bank == bank as u32 && r.addr.row == open_row);
+        if wanted {
+            continue;
+        }
+        let cmd = Cmd::Pre { bank: bank as u32 };
+        let at = v.device.earliest_issue(cmd);
+        if at <= v.now && v.device.can_issue(cmd, v.now) {
+            return (Some(bank as u32), v.now);
+        }
+        wake = wake.min(at);
+    }
+    (None, wake)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+    use crate::ddr4::{DramAddr, DramGeometry, TimingParams};
+
+    #[test]
+    fn kind_parse_name_roundtrip() {
+        for kind in SchedKind::ALL {
+            assert_eq!(SchedKind::parse(&kind.name()), Some(kind), "{kind}");
+        }
+        assert_eq!(SchedKind::parse("fr-fcfs"), Some(SchedKind::FrFcfs));
+        assert_eq!(SchedKind::parse("FRFCFS_CAP"), Some(SchedKind::FrFcfsCap { cap: 4 }));
+        assert_eq!(SchedKind::parse("frfcfs-cap8"), Some(SchedKind::FrFcfsCap { cap: 8 }));
+        assert_eq!(SchedKind::parse("frfcfs-cap=16"), Some(SchedKind::FrFcfsCap { cap: 16 }));
+        assert_eq!(SchedKind::parse("closed_page"), Some(SchedKind::Closed));
+        assert_eq!(SchedKind::parse("frfcfs-cap0"), None, "zero cap is invalid");
+        assert_eq!(SchedKind::parse("nope"), None);
+        // non-default caps round-trip through the long name
+        let k = SchedKind::FrFcfsCap { cap: 16 };
+        assert_eq!(SchedKind::parse(&k.name()), Some(k));
+        assert_eq!(SchedKind::default(), SchedKind::FrFcfs);
+    }
+
+    #[test]
+    fn windows_follow_policy() {
+        let params = ControllerParams { lookahead: 8, ..Default::default() };
+        assert_eq!(Fcfs.window(&params, false), 1);
+        assert_eq!(FrFcfs.window(&params, false), 8);
+        let mut cap = FrFcfsCap::new(2);
+        assert_eq!(cap.window(&params, false), 8);
+        cap.on_cas_issued(false, 1);
+        cap.on_cas_issued(false, 3);
+        assert_eq!(cap.streak(false), 2);
+        assert_eq!(cap.window(&params, false), 1, "cap reached: strict order");
+        // streaks are per direction: read-side starvation must not
+        // strangle the write queue's reordering, and serving the write
+        // head must not forgive read-side bypasses
+        assert_eq!(cap.streak(true), 0);
+        assert_eq!(cap.window(&params, true), 8, "write direction unaffected");
+        cap.on_cas_issued(true, 0);
+        assert_eq!(cap.streak(false), 2, "write head service keeps the read streak");
+        assert_eq!(cap.window(&params, false), 1);
+        cap.on_cas_issued(false, 0);
+        assert_eq!(cap.streak(false), 0, "read head service resets the read streak");
+        assert_eq!(cap.window(&params, false), 8);
+    }
+
+    #[test]
+    fn idle_timers_follow_policy() {
+        let params = ControllerParams::default();
+        assert_eq!(params.idle_precharge_cycles, 0);
+        assert_eq!(FrFcfs.idle_timer(&params), 0);
+        assert_eq!(ClosedPage.idle_timer(&params), 0);
+        assert_eq!(AdaptiveOpen.idle_timer(&params), ADAPTIVE_IDLE_CK);
+        let tuned = ControllerParams { idle_precharge_cycles: 32, ..Default::default() };
+        assert_eq!(FrFcfs.idle_timer(&tuned), 32);
+        assert_eq!(AdaptiveOpen.idle_timer(&tuned), 32, "explicit knob wins");
+    }
+
+    fn req(id: u64, bank: u32, row: u32, col: u32, arrival: Cycle) -> MemRequest {
+        MemRequest {
+            txn_id: id,
+            is_write: false,
+            addr: DramAddr { bank, row, col },
+            burst_addr: 64 * id,
+            beats: 2,
+            arrival,
+            last_of_txn: true,
+        }
+    }
+
+    #[test]
+    fn closed_page_auto_precharges_only_unwanted_rows() {
+        let params = ControllerParams::default();
+        let mut dev = DdrDevice::new(
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        );
+        dev.issue(Cmd::Act { bank: 0, row: 1 }, 0);
+        let now = dev.timing().trcd as Cycle;
+        let bank_last_use = [0; 8];
+        // lone request to the open row: auto-precharge
+        let mut active: VecDeque<MemRequest> = VecDeque::new();
+        active.push_back(req(0, 0, 1, 0, 0));
+        let other = VecDeque::new();
+        let view = SchedView {
+            device: &dev,
+            params: &params,
+            active: &active,
+            other: &other,
+            is_write: false,
+            bank_last_use: &bank_last_use,
+            now,
+        };
+        let engine = SchedEngine::new(SchedKind::Closed);
+        let (pick, _) = engine.pick_cas(&view);
+        assert_eq!(pick, Some(CasPick { index: 0, auto_pre: true }));
+        // a second queued request to the same row keeps it open
+        active.push_back(req(1, 0, 1, 8, 1));
+        let view = SchedView {
+            device: &dev,
+            params: &params,
+            active: &active,
+            other: &other,
+            is_write: false,
+            bank_last_use: &bank_last_use,
+            now,
+        };
+        let (pick, _) = engine.pick_cas(&view);
+        assert_eq!(pick, Some(CasPick { index: 0, auto_pre: false }));
+        // frfcfs never auto-precharges
+        let (pick, _) = SchedEngine::default().pick_cas(&view);
+        assert_eq!(pick, Some(CasPick { index: 0, auto_pre: false }));
+    }
+
+    #[test]
+    fn fcfs_window_hides_younger_hits() {
+        let params = ControllerParams::default();
+        let mut dev = DdrDevice::new(
+            TimingParams::for_bin(SpeedBin::Ddr4_1600),
+            DramGeometry::profpga_board(),
+        );
+        dev.issue(Cmd::Act { bank: 0, row: 1 }, 0);
+        let now = dev.timing().trcd as Cycle;
+        let bank_last_use = [0; 8];
+        // head is a conflict (row 2), a younger hit (row 1) sits behind it
+        let mut active: VecDeque<MemRequest> = VecDeque::new();
+        active.push_back(req(0, 0, 2, 0, 0));
+        active.push_back(req(1, 0, 1, 8, 1));
+        let other = VecDeque::new();
+        let view = SchedView {
+            device: &dev,
+            params: &params,
+            active: &active,
+            other: &other,
+            is_write: false,
+            bank_last_use: &bank_last_use,
+            now,
+        };
+        let (pick, _) = SchedEngine::new(SchedKind::FrFcfs).pick_cas(&view);
+        assert_eq!(pick.map(|p| p.index), Some(1), "frfcfs serves the younger hit");
+        let (pick, _) = SchedEngine::new(SchedKind::Fcfs).pick_cas(&view);
+        assert_eq!(pick, None, "fcfs waits for the head's row");
+    }
+}

@@ -17,6 +17,7 @@
 //! STATS <ch>                   → OK RD_TXNS=.. RD_GBS=.. WR_GBS=.. ...
 //! PATTERNS                     → OK PATTERNS SEQ RND STRIDE BANK ...
 //! MAPPINGS                     → OK MAPPINGS ROW_COL_BANK ... (MAP= names)
+//! SCHEDS                       → OK SCHEDS FCFS FRFCFS ... (SCHED= names)
 //! RESET <ch>                   → OK RESET
 //! HELP                         → OK <command list>
 //! QUIT                         → OK BYE (closes the session)
@@ -29,7 +30,10 @@
 //! platform onto strided, bank-conflict, pointer-chase or phased traffic
 //! between batches without reinstantiation. The same goes for the
 //! address-mapping engine: `MAP=<policy>` re-maps the channel for the
-//! batches that follow (see [`crate::ddr4::MappingPolicy`]).
+//! batches that follow (see [`crate::ddr4::MappingPolicy`]) — and for
+//! the scheduler engine: `SCHED=<policy>` swaps the controller's
+//! command-scheduling/page policy live (see
+//! [`crate::controller::sched::SchedKind`]).
 //!
 //! Errors answer `ERR <reason>`; the session stays open.
 
@@ -91,12 +95,21 @@ impl HostController {
         let cmd = toks.next().unwrap_or("").to_ascii_uppercase();
         match cmd.as_str() {
             "" => Err("empty command".into()),
-            "HELP" => {
-                Ok("COMMANDS: INFO CFG RUN RUNALL STATS PATTERNS MAPPINGS RESET HELP QUIT".into())
-            }
+            "HELP" => Ok(
+                "COMMANDS: INFO CFG RUN RUNALL STATS PATTERNS MAPPINGS SCHEDS RESET HELP QUIT"
+                    .into(),
+            ),
             "PATTERNS" => {
                 // run-time selectable address modes of the pattern engine
                 Ok("PATTERNS SEQ RND STRIDE BANK CHASE PHASED".into())
+            }
+            "SCHEDS" => {
+                // run-time selectable scheduler/page policies (SCHED= token)
+                let names: Vec<String> = crate::controller::SchedKind::ALL
+                    .iter()
+                    .map(|k| k.name().to_ascii_uppercase())
+                    .collect();
+                Ok(format!("SCHEDS {}", names.join(" ")))
             }
             "MAPPINGS" => {
                 // run-time selectable address-mapping policies (MAP= token);
@@ -157,8 +170,9 @@ impl HostController {
                 Ok(format!(
                     "CH={ch} RD_TXNS={} WR_TXNS={} RD_BYTES={} WR_BYTES={} RD_CYCLES={} \
                      WR_CYCLES={} TOTAL_CYCLES={} RD_GBS={:.3} WR_GBS={:.3} TOT_GBS={:.3} \
-                     RD_LAT_NS={:.1} WR_LAT_NS={:.1} REFRESH_STALL={} MISMATCHES={} \
-                     ENERGY_NJ={:.0} PJ_BIT={:.2} PWR_MW={:.1}",
+                     RD_LAT_NS={:.1} WR_LAT_NS={:.1} RD_P50_NS={:.1} RD_P95_NS={:.1} \
+                     RD_P99_NS={:.1} WR_P50_NS={:.1} WR_P95_NS={:.1} WR_P99_NS={:.1} \
+                     REFRESH_STALL={} MISMATCHES={} ENERGY_NJ={:.0} PJ_BIT={:.2} PWR_MW={:.1}",
                     c.rd_txns,
                     c.wr_txns,
                     c.rd_bytes,
@@ -171,6 +185,12 @@ impl HostController {
                     s.total_throughput_gbs(),
                     s.read_latency_ns(),
                     s.write_latency_ns(),
+                    s.read_latency_pct_ns(50.0),
+                    s.read_latency_pct_ns(95.0),
+                    s.read_latency_pct_ns(99.0),
+                    s.write_latency_pct_ns(50.0),
+                    s.write_latency_pct_ns(95.0),
+                    s.write_latency_pct_ns(99.0),
                     c.refresh_stall_dram_cycles,
                     c.mismatches,
                     s.energy.total_nj(),
@@ -310,6 +330,26 @@ mod tests {
             assert!(r.starts_with("OK RUN CH=0 TXNS=64"), "`{cfg}` -> {r}");
         }
         assert!(h.handle_line("CFG 0 MAP=frobnicate").starts_with("ERR"));
+    }
+
+    #[test]
+    fn scheds_command_and_sched_token_reconfigure_live() {
+        let mut h = host();
+        let r = h.handle_line("SCHEDS");
+        for name in ["FCFS", "FRFCFS", "FRFCFS-CAP", "CLOSED", "ADAPTIVE"] {
+            assert!(r.contains(name), "{r}");
+        }
+        assert!(h.handle_line("HELP").contains("SCHEDS"));
+        // every policy is selectable live through CFG
+        for sched in ["fcfs", "frfcfs", "frfcfs-cap8", "closed", "adaptive"] {
+            let cfg = format!("CFG 0 OP=R ADDR=SEQ BURST=4 BATCH=64 SCHED={sched}");
+            let r = h.handle_line(&cfg);
+            assert!(r.starts_with("OK CFG CH=0"), "`{cfg}` -> {r}");
+            assert!(r.contains("SCHED="), "echo carries the policy: {r}");
+            let r = h.handle_line("RUN 0");
+            assert!(r.starts_with("OK RUN CH=0 TXNS=64"), "`{cfg}` -> {r}");
+        }
+        assert!(h.handle_line("CFG 0 SCHED=frobnicate").starts_with("ERR"));
     }
 
     #[test]

@@ -17,9 +17,14 @@
 //!   runtime-configurable address-mapping engine ([`ddr4::mapping`]:
 //!   bit-interleave orders, XOR bank hash, custom `MAP=` bit-order
 //!   strings — all bijective and property-tested).
-//! - [`controller`] — the memory interface: FR-FCFS command scheduling,
-//!   read/write queues and write draining, open-page policy, refresh
-//!   insertion, the 4:1 PHY:AXI clock ratio.
+//! - [`controller`] — the memory interface, decomposed into a front end
+//!   (read/write queues, write draining, refresh insertion, miss-flush
+//!   gates, the 4:1 PHY:AXI clock ratio) and the [`controller::sched`]
+//!   subsystem: runtime-selectable command-scheduling/page policies
+//!   behind the `SchedPolicy` trait (strict FCFS, FR-FCFS open page —
+//!   the default — bypass-capped FR-FCFS, closed page with
+//!   auto-precharge, and an adaptive idle-timer policy), swappable live
+//!   via the `SCHED=` token and sweepable as a campaign axis.
 //! - [`axi`] — the AXI4 on-chip protocol: five independent channels, burst
 //!   semantics (FIXED / INCR / WRAP, lengths 1–128), handshakes.
 //! - [`trafficgen`] — the paper's instrument: the run-time access-pattern

@@ -5,9 +5,11 @@
 //! ddr4bench run --speed 1600 --op R --addr seq --burst 32 --batch 4096
 //! ddr4bench run --addr chase --wset 4m --sig BLK --burst 1   # pattern engine
 //! ddr4bench run --addr bank --map xor_hash           # address-mapping engine
+//! ddr4bench run --addr seq --sched closed            # scheduler/page-policy engine
 //! ddr4bench sweep --speeds 1600,2400 --channels 1,2 \
 //!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
 //! ddr4bench sweep --maps row_col_bank,xor_hash --knobs lookahead=1,lookahead=8
+//! ddr4bench sweep --scheds fcfs,frfcfs,frfcfs-cap,closed --patterns seq,bank
 //! ddr4bench compare a/BENCH_sweep.json b/BENCH_sweep.json   # cross-sweep deltas
 //! ddr4bench table3 | table4 | fig2 | fig3 | scaling | analysis | modelcheck
 //! ddr4bench serve --addr-bind 127.0.0.1:5557  # host-controller TCP endpoint
@@ -48,6 +50,7 @@ fn cli() -> Cli {
         .option("wset", "working-set bytes for --addr chase (default 1m)")
         .option("phases", "phase list for --addr phased, e.g. SEQ@512,RND@512")
         .option("map", "address mapping: row_col_bank|row_bank_col|bank_row_col|xor_hash|RoBaBgCo")
+        .option("sched", "scheduler/page policy: fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive")
         .option("burst", "burst length 1-128 (default 32)")
         .option("btype", "burst type FIXED|INCR|WRAP (default INCR)")
         .option("sig", "signaling NB|BLK|AGR (default NB)")
@@ -60,6 +63,7 @@ fn cli() -> Cli {
         .option("patterns", "sweep: comma list of presets (seq,rnd,strided,bank,chase,phased)")
         .option("maps", "sweep: comma list of address-mapping policies")
         .option("knobs", "sweep: controller-knob variants, e.g. lookahead=1,lookahead=8+wq=32")
+        .option("scheds", "sweep: comma list of scheduler policies, e.g. fcfs,frfcfs-cap,closed")
         .option("spec", "sweep: read the sweep spec from this config file")
         .option("jobs", "sweep: worker threads (default: available parallelism)")
         .option("out", "sweep: write per-job JSON/CSV artifacts + BENCH_sweep.json here")
@@ -86,6 +90,7 @@ fn pattern_from_args(args: &ddr4bench::cli::Args) -> Result<PatternConfig> {
         ("wset", "WSET"),
         ("phases", "PHASES"),
         ("map", "MAP"),
+        ("sched", "SCHED"),
     ] {
         if let Some(v) = args.get(opt) {
             toks.push(format!("{key}={v}"));
@@ -135,6 +140,9 @@ fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec>
     }
     if let Some(v) = args.get("knobs") {
         spec.knobs = sweep::parse_knob_list(v)?;
+    }
+    if let Some(v) = args.get("scheds") {
+        spec.scheds = sweep::parse_sched_list(v)?;
     }
     Ok(spec)
 }
@@ -207,6 +215,16 @@ fn main() -> Result<()> {
                     s.write_latency_ns(),
                     s.counters.refresh_stall_dram_cycles,
                     s.counters.mismatches
+                );
+                println!(
+                    "ch{ch}: rd p50/p95/p99 {:.0}/{:.0}/{:.0} ns  \
+                     wr p50/p95/p99 {:.0}/{:.0}/{:.0} ns",
+                    s.read_latency_pct_ns(50.0),
+                    s.read_latency_pct_ns(95.0),
+                    s.read_latency_pct_ns(99.0),
+                    s.write_latency_pct_ns(50.0),
+                    s.write_latency_pct_ns(95.0),
+                    s.write_latency_pct_ns(99.0),
                 );
             }
             if per.len() > 1 {
@@ -361,12 +379,13 @@ fn main() -> Result<()> {
             };
             println!(
                 "sweep: {} jobs ({} speeds x {} channel counts x {} mappings x {} knob \
-                 profiles x {} patterns) on {} workers",
+                 profiles x {} scheds x {} patterns) on {} workers",
                 jobs.len(),
                 spec.speeds.len(),
                 spec.channels.len(),
                 spec.mappings.len(),
                 spec.knobs.len(),
+                spec.scheds.len(),
                 spec.patterns.len(),
                 workers.min(jobs.len().max(1))
             );

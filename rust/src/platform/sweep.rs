@@ -1,6 +1,7 @@
 //! Campaign sweep executive: expand a cartesian sweep specification
 //! (speed bins × channel counts × address mappings × controller knobs ×
-//! traffic patterns) into a deduplicated job list and execute it on a
+//! scheduler policies × traffic patterns) into a deduplicated job list
+//! and execute it on a
 //! work-stealing thread pool, one isolated [`Platform`] per job, emitting
 //! per-job JSON/CSV artifacts plus a machine-readable summary
 //! (`BENCH_sweep.json` schema; cross-sweep deltas render through
@@ -30,17 +31,18 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
     parse_controller_tokens, parse_kv_text, parse_pattern_config, ControllerParams, DesignConfig,
-    PatternConfig, SpeedBin,
+    PatternConfig, SchedKind, SpeedBin,
 };
 use crate::ddr4::MappingPolicy;
 use crate::platform::Platform;
 use crate::report::Table;
 use crate::stats::BatchStats;
 
-/// Schema identifier stamped into every sweep artifact. `v2` adds the
-/// `mapping` and `knobs` axis fields; `v1` artifacts (no such fields) are
-/// still accepted by [`crate::report::compare`].
-pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v2";
+/// Schema identifier stamped into every sweep artifact. `v3` adds the
+/// `sched` axis field and the latency-percentile columns; `v2` (mapping
+/// and knob axes, no percentiles) and `v1` artifacts are still accepted
+/// by [`crate::report::compare`], with missing axis fields defaulted.
+pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v3";
 
 /// A cartesian sweep specification.
 #[derive(Debug, Clone)]
@@ -53,6 +55,8 @@ pub struct SweepSpec {
     pub mappings: Vec<MappingPolicy>,
     /// Labeled controller-knob profiles to sweep.
     pub knobs: Vec<(String, ControllerParams)>,
+    /// Scheduler/page policies to sweep.
+    pub scheds: Vec<SchedKind>,
     /// Labeled traffic patterns to sweep.
     pub patterns: Vec<(String, PatternConfig)>,
 }
@@ -92,6 +96,7 @@ impl SweepSpec {
             channels: vec![1, 2],
             mappings: vec![MappingPolicy::row_col_bank()],
             knobs: vec![("mig".to_string(), ControllerParams::default())],
+            scheds: vec![SchedKind::FrFcfs],
             patterns: ["strided", "bank", "chase"]
                 .iter()
                 .map(|n| preset(n).expect("builtin preset"))
@@ -105,6 +110,7 @@ impl SweepSpec {
     /// speeds = 1600, 2400
     /// channels = 1, 2
     /// mappings = row_col_bank, xor_hash
+    /// scheds = fcfs, frfcfs, frfcfs-cap, closed
     /// [patterns]
     /// strided = OP=R ADDR=STRIDE STRIDE=64k BURST=4 BATCH=2048
     /// chase   = OP=R ADDR=CHASE SEED=7 WSET=4m SIG=BLK BATCH=1024 BURST=1
@@ -120,12 +126,13 @@ impl SweepSpec {
             if key != "speeds"
                 && key != "channels"
                 && key != "mappings"
+                && key != "scheds"
                 && !key.starts_with("patterns.")
                 && !key.starts_with("knobs.")
             {
                 bail!(
                     "unknown sweep spec key `{key}` (expected `speeds`, `channels`, \
-                     `mappings`, or `[patterns]`/`[knobs]` entries)"
+                     `mappings`, `scheds`, or `[patterns]`/`[knobs]` entries)"
                 );
             }
         }
@@ -139,6 +146,9 @@ impl SweepSpec {
         if let Some(v) = map.get("mappings") {
             spec.mappings = parse_mapping_list(v)?;
         }
+        if let Some(v) = map.get("scheds") {
+            spec.scheds = parse_sched_list(v)?;
+        }
         let knobs: Vec<(String, ControllerParams)> = map
             .iter()
             .filter_map(|(k, v)| {
@@ -146,6 +156,7 @@ impl SweepSpec {
             })
             .map(|(label, tokens)| {
                 let toks: Vec<&str> = tokens.split_whitespace().collect();
+                reject_sched_knob(&label, &toks)?;
                 let params = parse_controller_tokens(ControllerParams::default(), &toks)
                     .map_err(|e| anyhow!("knob profile `{label}`: {e}"))?;
                 validate_knob_profile(&label, params)?;
@@ -170,6 +181,12 @@ impl SweepSpec {
                          sweep the address mapping via the `mappings` axis instead"
                     );
                 }
+                if cfg.sched.is_some() {
+                    bail!(
+                        "pattern `{label}`: SCHED= is not allowed in sweep patterns — \
+                         sweep the scheduler via the `scheds` axis instead"
+                    );
+                }
                 Ok((label, cfg))
             })
             .collect::<Result<_>>()?;
@@ -180,36 +197,40 @@ impl SweepSpec {
     }
 
     /// Expand the cartesian product into a deduplicated, deterministic
-    /// job list (duplicate (speed, channels, mapping, knobs, pattern)
-    /// points collapse).
+    /// job list (duplicate (speed, channels, mapping, knobs, sched,
+    /// pattern) points collapse).
     pub fn expand(&self) -> Vec<SweepJob> {
-        let mut seen: HashSet<(u32, usize, String, String, String)> = HashSet::new();
+        let mut seen: HashSet<(u32, usize, String, String, String, String)> = HashSet::new();
         let mut jobs = Vec::new();
         for &speed in &self.speeds {
             for &channels in &self.channels {
                 for &mapping in &self.mappings {
                     for (knob, params) in &self.knobs {
-                        for (label, cfg) in &self.patterns {
-                            let key = (
-                                speed.data_rate_mts(),
-                                channels,
-                                mapping.name(),
-                                knob.clone(),
-                                label.clone(),
-                            );
-                            if !seen.insert(key) {
-                                continue;
+                        for &sched in &self.scheds {
+                            for (label, cfg) in &self.patterns {
+                                let key = (
+                                    speed.data_rate_mts(),
+                                    channels,
+                                    mapping.name(),
+                                    knob.clone(),
+                                    sched.name(),
+                                    label.clone(),
+                                );
+                                if !seen.insert(key) {
+                                    continue;
+                                }
+                                jobs.push(SweepJob {
+                                    id: jobs.len(),
+                                    speed,
+                                    channels,
+                                    mapping,
+                                    knob: knob.clone(),
+                                    params: *params,
+                                    sched,
+                                    label: label.clone(),
+                                    cfg: cfg.clone(),
+                                });
                             }
-                            jobs.push(SweepJob {
-                                id: jobs.len(),
-                                speed,
-                                channels,
-                                mapping,
-                                knob: knob.clone(),
-                                params: *params,
-                                label: label.clone(),
-                                cfg: cfg.clone(),
-                            });
                         }
                     }
                 }
@@ -224,6 +245,23 @@ impl SweepSpec {
 fn validate_knob_profile(label: &str, params: ControllerParams) -> Result<()> {
     let probe = DesignConfig { controller: params, ..DesignConfig::default() };
     probe.validate().map_err(|e| anyhow!("knob profile `{label}`: {e}"))?;
+    Ok(())
+}
+
+/// Knob profiles may not smuggle in a scheduler: the `scheds` axis is
+/// authoritative and `run_job` would silently overwrite the knob's
+/// choice, leaving the artifact labels lying about what ran (the same
+/// reason pattern-level `SCHED=`/`MAP=` are rejected).
+fn reject_sched_knob(label: &str, tokens: &[&str]) -> Result<()> {
+    for tok in tokens {
+        let key = tok.split('=').next().unwrap_or("").trim().to_ascii_lowercase();
+        if key == "sched" || key == "policy" {
+            bail!(
+                "knob profile `{label}`: sched= is not allowed in sweep knob profiles — \
+                 sweep the scheduler via the `scheds` axis instead"
+            );
+        }
+    }
     Ok(())
 }
 
@@ -256,12 +294,23 @@ pub fn parse_knob_list(s: &str) -> Result<Vec<(String, ControllerParams)>> {
         .filter(|t| !t.is_empty())
         .map(|variant| {
             let toks: Vec<&str> = variant.split('+').collect();
+            reject_sched_knob(variant, &toks)?;
             let params = parse_controller_tokens(ControllerParams::default(), &toks)
                 .map_err(|e| anyhow!("--knobs `{variant}`: {e}"))?;
             let label = variant.replace('=', "").replace('+', "_").replace(' ', "");
             validate_knob_profile(&label, params)?;
             Ok((label, params))
         })
+        .collect()
+}
+
+/// Parse "fcfs, frfcfs-cap8, closed" style scheduler-policy lists (the
+/// CLI `--scheds` axis and the spec `scheds =` key).
+pub fn parse_sched_list(s: &str) -> Result<Vec<SchedKind>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| SchedKind::parse(t).ok_or_else(|| anyhow!("unknown scheduler policy `{t}`")))
         .collect()
 }
 
@@ -295,6 +344,8 @@ pub struct SweepJob {
     pub knob: String,
     /// The controller-knob profile itself.
     pub params: ControllerParams,
+    /// Scheduler/page policy of the design's controller.
+    pub sched: SchedKind,
     /// Pattern label (artifact naming).
     pub label: String,
     /// The traffic pattern to run.
@@ -319,14 +370,16 @@ fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
     let mut design = DesignConfig::with_channels(job.channels, job.speed);
     design.geometry.mapping = job.mapping;
     design.controller = job.params;
+    design.controller.sched = job.sched;
     design.validate().map_err(|e| anyhow!("{e}"))?;
     let mut platform = Platform::new(design);
-    // The job's mapping axis is authoritative: a stray pattern-level
-    // MAP= override would run a different policy than the artifact
-    // labels claim (SweepSpec::parse rejects it; this guards
-    // programmatic specs too, and keeps the echoed cfg truthful).
+    // The job's mapping and scheduler axes are authoritative: a stray
+    // pattern-level MAP=/SCHED= override would run a different policy
+    // than the artifact labels claim (SweepSpec::parse rejects them;
+    // this guards programmatic specs too, and keeps the echo truthful).
     let mut job = job.clone();
     job.cfg.mapping = None;
+    job.cfg.sched = None;
     let per_channel = platform.run_batch_all(&job.cfg)?;
     let agg = Platform::aggregate(&per_channel);
     Ok(SweepOutcome { job, per_channel, agg, wall_ms: t0.elapsed().as_secs_f64() * 1e3 })
@@ -442,12 +495,19 @@ pub fn job_json(o: &SweepOutcome) -> String {
             "  \"pattern\": \"{label}\",\n",
             "  \"mapping\": \"{mapping}\",\n",
             "  \"knobs\": \"{knob}\",\n",
+            "  \"sched\": \"{sched}\",\n",
             "  \"cfg\": \"{cfg}\",\n",
             "  \"rd_gbs\": {rd:.6},\n",
             "  \"wr_gbs\": {wr:.6},\n",
             "  \"total_gbs\": {tot:.6},\n",
             "  \"rd_lat_ns\": {rdlat:.3},\n",
             "  \"wr_lat_ns\": {wrlat:.3},\n",
+            "  \"rd_p50_ns\": {rdp50:.3},\n",
+            "  \"rd_p95_ns\": {rdp95:.3},\n",
+            "  \"rd_p99_ns\": {rdp99:.3},\n",
+            "  \"wr_p50_ns\": {wrp50:.3},\n",
+            "  \"wr_p95_ns\": {wrp95:.3},\n",
+            "  \"wr_p99_ns\": {wrp99:.3},\n",
             "  \"refresh_stall_ck\": {refresh},\n",
             "  \"mismatches\": {mism},\n",
             "  \"energy_nj\": {energy:.3},\n",
@@ -464,12 +524,19 @@ pub fn job_json(o: &SweepOutcome) -> String {
         label = json_escape(&o.job.label),
         mapping = json_escape(&o.job.mapping.name()),
         knob = json_escape(&o.job.knob),
+        sched = json_escape(&o.job.sched.name()),
         cfg = json_escape(&crate::config::format_pattern_config(&o.job.cfg)),
         rd = o.agg.read_throughput_gbs(),
         wr = o.agg.write_throughput_gbs(),
         tot = o.agg.total_throughput_gbs(),
         rdlat = o.agg.read_latency_ns(),
         wrlat = o.agg.write_latency_ns(),
+        rdp50 = o.agg.read_latency_pct_ns(50.0),
+        rdp95 = o.agg.read_latency_pct_ns(95.0),
+        rdp99 = o.agg.read_latency_pct_ns(99.0),
+        wrp50 = o.agg.write_latency_pct_ns(50.0),
+        wrp95 = o.agg.write_latency_pct_ns(95.0),
+        wrp99 = o.agg.write_latency_pct_ns(99.0),
         refresh = o.agg.counters.refresh_stall_dram_cycles,
         mism = o.agg.counters.mismatches,
         energy = o.agg.energy.total_nj(),
@@ -482,9 +549,11 @@ pub fn job_json(o: &SweepOutcome) -> String {
 /// Render one outcome as a single-row CSV (header + row).
 pub fn job_csv(o: &SweepOutcome) -> String {
     format!(
-        "id,speed,data_rate_mts,channels,pattern,mapping,knobs,rd_gbs,wr_gbs,total_gbs,\
-         rd_lat_ns,wr_lat_ns,refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
-         {},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{},{},{:.3},{:.4},{:.3}\n",
+        "id,speed,data_rate_mts,channels,pattern,mapping,knobs,sched,rd_gbs,wr_gbs,total_gbs,\
+         rd_lat_ns,wr_lat_ns,rd_p50_ns,rd_p95_ns,rd_p99_ns,wr_p50_ns,wr_p95_ns,wr_p99_ns,\
+         refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
+         {},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},\
+         {:.3},{},{},{:.3},{:.4},{:.3}\n",
         o.job.id,
         o.job.speed,
         o.job.speed.data_rate_mts(),
@@ -492,11 +561,18 @@ pub fn job_csv(o: &SweepOutcome) -> String {
         csv_escape(&o.job.label),
         csv_escape(&o.job.mapping.name()),
         csv_escape(&o.job.knob),
+        csv_escape(&o.job.sched.name()),
         o.agg.read_throughput_gbs(),
         o.agg.write_throughput_gbs(),
         o.agg.total_throughput_gbs(),
         o.agg.read_latency_ns(),
         o.agg.write_latency_ns(),
+        o.agg.read_latency_pct_ns(50.0),
+        o.agg.read_latency_pct_ns(95.0),
+        o.agg.read_latency_pct_ns(99.0),
+        o.agg.write_latency_pct_ns(50.0),
+        o.agg.write_latency_pct_ns(95.0),
+        o.agg.write_latency_pct_ns(99.0),
         o.agg.counters.refresh_stall_dram_cycles,
         o.agg.counters.mismatches,
         o.agg.energy.total_nj(),
@@ -529,12 +605,13 @@ pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf>
     std::fs::create_dir_all(dir)?;
     for o in outcomes {
         let stem = format!(
-            "{:03}_{}_{}ch_{}_{}_{}",
+            "{:03}_{}_{}ch_{}_{}_{}_{}",
             o.job.id,
             o.job.speed.data_rate_mts(),
             o.job.channels,
             sanitize_label(&o.job.mapping.name()),
             sanitize_label(&o.job.knob),
+            sanitize_label(&o.job.sched.name()),
             sanitize_label(&o.job.label)
         );
         std::fs::write(dir.join(format!("{stem}.json")), job_json(o))?;
@@ -550,11 +627,12 @@ pub fn summary_table(outcomes: &[SweepOutcome]) -> Table {
     let mut t = Table::new(
         "Campaign sweep summary",
         &[
-            "Job", "Rate", "Ch", "Pattern", "Map", "Knobs", "RD GB/s", "WR GB/s", "Total GB/s",
-            "Wall ms",
+            "Job", "Rate", "Ch", "Pattern", "Map", "Knobs", "Sched", "RD GB/s", "WR GB/s",
+            "Total GB/s", "p99 ns", "Wall ms",
         ],
     );
     for o in outcomes {
+        let p99 = o.agg.read_latency_pct_ns(99.0).max(o.agg.write_latency_pct_ns(99.0));
         t.row(vec![
             o.job.id.to_string(),
             o.job.speed.to_string(),
@@ -562,9 +640,11 @@ pub fn summary_table(outcomes: &[SweepOutcome]) -> Table {
             o.job.label.clone(),
             o.job.mapping.name(),
             o.job.knob.clone(),
+            o.job.sched.name(),
             format!("{:.2}", o.agg.read_throughput_gbs()),
             format!("{:.2}", o.agg.write_throughput_gbs()),
             format!("{:.2}", o.agg.total_throughput_gbs()),
+            format!("{:.0}", p99),
             format!("{:.1}", o.wall_ms),
         ]);
     }
@@ -679,6 +759,46 @@ mod tests {
     }
 
     #[test]
+    fn sched_axis_multiplies_the_grid_and_labels_jobs() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.scheds = parse_sched_list("fcfs, frfcfs, frfcfs-cap, closed, adaptive").unwrap();
+        let jobs = spec.expand();
+        assert_eq!(jobs.len(), 5 * 3, "5 policies x 3 patterns");
+        let scheds: HashSet<String> = jobs.iter().map(|j| j.sched.name()).collect();
+        assert_eq!(scheds.len(), 5);
+        assert!(scheds.contains("frfcfs-cap"));
+        // spec files drive the same axis
+        let spec = SweepSpec::parse("scheds = fcfs, closed\n").unwrap();
+        assert_eq!(spec.scheds, vec![SchedKind::Fcfs, SchedKind::Closed]);
+        assert!(SweepSpec::parse("scheds = nope\n").is_err());
+        // a pattern-level SCHED= would shadow the axis — rejected
+        assert!(SweepSpec::parse("[patterns]\nx = OP=R SCHED=fcfs\n").is_err());
+        assert!(parse_sched_list("frfcfs-cap0").is_err());
+        // ...and so would a knob-profile sched=: the axis would silently
+        // overwrite it and mislabel every artifact — rejected too
+        assert!(SweepSpec::parse("[knobs]\nx = sched=closed\n").is_err());
+        assert!(parse_knob_list("sched=closed").is_err());
+        assert!(parse_knob_list("lookahead=8+policy=fcfs").is_err());
+    }
+
+    #[test]
+    fn run_job_strips_pattern_level_sched_overrides() {
+        // programmatic specs bypass parse(): the job axis must still win
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.scheds = vec![SchedKind::Closed];
+        spec.patterns = vec![preset("seq").unwrap()];
+        spec.patterns[0].1.batch_len = 64;
+        spec.patterns[0].1.sched = Some(SchedKind::Fcfs);
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        assert_eq!(outcomes[0].job.cfg.sched, None, "override stripped from the echo");
+        assert_eq!(outcomes[0].job.sched, SchedKind::Closed);
+    }
+
+    #[test]
     fn knob_list_parses_compound_variants() {
         let knobs = parse_knob_list("lookahead=8+wq=32, dwell=0").unwrap();
         assert_eq!(knobs.len(), 2);
@@ -744,11 +864,13 @@ mod tests {
         spec.patterns[0].1.batch_len = 32;
         let outcomes = run_sweep(spec.expand(), 1).unwrap();
         let j = job_json(&outcomes[0]);
-        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v2\""));
+        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v3\""));
         assert!(j.contains("\"pattern\": \"bank\""));
         assert!(j.contains("\"mapping\": \"row_col_bank\""));
         assert!(j.contains("\"knobs\": \"mig\""));
+        assert!(j.contains("\"sched\": \"frfcfs\""));
         assert!(j.contains("\"total_gbs\""));
+        assert!(j.contains("\"rd_p99_ns\""), "percentiles reach the artifact: {j}");
         let c = job_csv(&outcomes[0]);
         let lines: Vec<&str> = c.lines().collect();
         assert_eq!(lines.len(), 2);

@@ -1,13 +1,16 @@
 //! Cross-sweep comparison reports (`ddr4bench compare`).
 //!
-//! Loads several `BENCH_sweep.json` campaign summaries (both the current
-//! `ddr4bench.sweep.v2` schema and the older `v1`, which predates the
-//! mapping/knob axes), matches jobs across files by their axis key
-//! (data rate, channels, pattern, mapping, knobs), and renders:
+//! Loads several `BENCH_sweep.json` campaign summaries (the current
+//! `ddr4bench.sweep.v3` schema plus the older `v2` — which predates the
+//! scheduler axis and the latency percentiles — and `v1`, which also
+//! predates the mapping/knob axes), matches jobs across files by their
+//! axis key (data rate, channels, pattern, mapping, knobs, sched), and
+//! renders:
 //!
 //! - a **delta table** — per job point, the first file's throughput as
 //!   the baseline and every other file's absolute value plus percentage
-//!   delta against it;
+//!   delta against it, alongside the read-p99 latency delta when both
+//!   files carry percentiles (v3+);
 //! - a **per-axis extremes table** — for each sweep axis and file, the
 //!   best and worst value by mean total throughput;
 //! - a **regression list** — job points whose delta against the baseline
@@ -243,27 +246,32 @@ pub struct SweepRecord {
     pub mapping: String,
     /// Controller-knob profile label (v1 files default to `mig`).
     pub knobs: String,
+    /// Scheduler/page-policy name (v1/v2 files default to `frfcfs`).
+    pub sched: String,
     /// Aggregate throughput of the job.
     pub total_gbs: f64,
+    /// Read-latency p99 in nanoseconds (None before schema v3).
+    pub rd_p99_ns: Option<f64>,
 }
 
 impl SweepRecord {
     /// The cross-file matching key.
-    fn key(&self) -> (u32, u64, String, String, String) {
+    fn key(&self) -> (u32, u64, String, String, String, String) {
         (
             self.data_rate_mts,
             self.channels,
             self.pattern.clone(),
             self.mapping.clone(),
             self.knobs.clone(),
+            self.sched.clone(),
         )
     }
 
-    /// Human-readable key ("1600MT/1ch/bank/row_col_bank/mig").
+    /// Human-readable key ("1600MT/1ch/bank/row_col_bank/mig/frfcfs").
     fn key_label(&self) -> String {
         format!(
-            "{}MT/{}ch/{}/{}/{}",
-            self.data_rate_mts, self.channels, self.pattern, self.mapping, self.knobs
+            "{}MT/{}ch/{}/{}/{}/{}",
+            self.data_rate_mts, self.channels, self.pattern, self.mapping, self.knobs, self.sched
         )
     }
 }
@@ -280,7 +288,7 @@ pub struct SweepFile {
 }
 
 impl SweepFile {
-    fn find(&self, key: &(u32, u64, String, String, String)) -> Option<&SweepRecord> {
+    fn find(&self, key: &(u32, u64, String, String, String, String)) -> Option<&SweepRecord> {
         self.records.iter().find(|r| &r.key() == key)
     }
 }
@@ -315,7 +323,9 @@ pub fn parse_summary(text: &str, label: &str) -> Result<SweepFile> {
             pattern: str_of("pattern", "?"),
             mapping: str_of("mapping", "row_col_bank"),
             knobs: str_of("knobs", "mig"),
+            sched: str_of("sched", "frfcfs"),
             total_gbs: num_of("total_gbs")?,
+            rd_p99_ns: job.get("rd_p99_ns").and_then(Json::as_f64),
         });
     }
     Ok(SweepFile { label: label.to_string(), source, records })
@@ -359,7 +369,7 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
 
     // ordered union of job keys: baseline order first, then new keys in
     // the order later files introduce them
-    let mut keys: Vec<(u32, u64, String, String, String)> = Vec::new();
+    let mut keys: Vec<(u32, u64, String, String, String, String)> = Vec::new();
     for f in files {
         for r in &f.records {
             if !keys.contains(&r.key()) {
@@ -368,12 +378,16 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
         }
     }
 
-    let mut headers: Vec<String> =
-        ["Rate", "Ch", "Pattern", "Map", "Knobs"].iter().map(|s| s.to_string()).collect();
+    let mut headers: Vec<String> = ["Rate", "Ch", "Pattern", "Map", "Knobs", "Sched"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
     headers.push(format!("{} GB/s", base.label));
+    headers.push("p99 ns".to_string());
     for f in &files[1..] {
         headers.push(format!("{} GB/s", f.label));
         headers.push(format!("{} %", f.label));
+        headers.push(format!("{} p99 %", f.label));
     }
     let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
     let mut delta = Table::new(
@@ -389,10 +403,15 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
             key.2.clone(),
             key.3.clone(),
             key.4.clone(),
+            key.5.clone(),
         ];
         let base_rec = base.find(key);
         cells.push(match base_rec {
             Some(r) => format!("{:.3}", r.total_gbs),
+            None => "-".to_string(),
+        });
+        cells.push(match base_rec.and_then(|r| r.rd_p99_ns) {
+            Some(p99) => format!("{p99:.0}"),
             None => "-".to_string(),
         });
         for f in &files[1..] {
@@ -405,6 +424,12 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
                     };
                     cells.push(format!("{:.3}", r.total_gbs));
                     cells.push(format!("{pct:+.1}"));
+                    cells.push(match (b.rd_p99_ns, r.rd_p99_ns) {
+                        (Some(bp), Some(rp)) if bp > 0.0 => {
+                            format!("{:+.1}", (rp - bp) / bp * 100.0)
+                        }
+                        _ => "-".to_string(),
+                    });
                     if pct < -threshold_pct {
                         regressions.push(format!(
                             "{}: {} {:.3} -> {:.3} GB/s ({pct:+.1}%)",
@@ -418,8 +443,10 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
                 (_, Some(r)) => {
                     cells.push(format!("{:.3}", r.total_gbs));
                     cells.push("new".to_string());
+                    cells.push("-".to_string());
                 }
                 (_, None) => {
+                    cells.push("-".to_string());
                     cells.push("-".to_string());
                     cells.push("-".to_string());
                 }
@@ -437,12 +464,13 @@ pub fn axis_extremes(files: &[SweepFile]) -> Table {
         "Per-axis extremes (mean total GB/s)",
         &["Axis", "File", "Best", "Worst"],
     );
-    let axes: [(&str, fn(&SweepRecord) -> String); 5] = [
+    let axes: [(&str, fn(&SweepRecord) -> String); 6] = [
         ("rate", |r| r.data_rate_mts.to_string()),
         ("channels", |r| r.channels.to_string()),
         ("pattern", |r| r.pattern.clone()),
         ("mapping", |r| r.mapping.clone()),
         ("knobs", |r| r.knobs.clone()),
+        ("sched", |r| r.sched.clone()),
     ];
     for (axis, value_of) in axes {
         for f in files {
@@ -485,22 +513,36 @@ pub fn axis_extremes(files: &[SweepFile]) -> Table {
 mod tests {
     use super::*;
 
-    fn summary(label: &str, jobs: &[(&str, u32, u64, &str, &str, &str, f64)]) -> SweepFile {
+    fn summary_sched(
+        label: &str,
+        jobs: &[(&str, u32, u64, &str, &str, &str, &str, f64, f64)],
+    ) -> SweepFile {
         let body: Vec<String> = jobs
             .iter()
-            .map(|(speed, rate, ch, pat, map, knob, gbs)| {
+            .map(|(speed, rate, ch, pat, map, knob, sched, gbs, p99)| {
                 format!(
-                    "{{\"schema\": \"ddr4bench.sweep.v2\", \"speed\": \"{speed}\", \
+                    "{{\"schema\": \"ddr4bench.sweep.v3\", \"speed\": \"{speed}\", \
                      \"data_rate_mts\": {rate}, \"channels\": {ch}, \"pattern\": \"{pat}\", \
-                     \"mapping\": \"{map}\", \"knobs\": \"{knob}\", \"total_gbs\": {gbs}}}"
+                     \"mapping\": \"{map}\", \"knobs\": \"{knob}\", \"sched\": \"{sched}\", \
+                     \"total_gbs\": {gbs}, \"rd_p99_ns\": {p99}}}"
                 )
             })
             .collect();
         let text = format!(
-            "{{\"schema\": \"ddr4bench.sweep.v2\", \"source\": \"test\", \"jobs\": [{}]}}",
+            "{{\"schema\": \"ddr4bench.sweep.v3\", \"source\": \"test\", \"jobs\": [{}]}}",
             body.join(", ")
         );
         parse_summary(&text, label).unwrap()
+    }
+
+    fn summary(label: &str, jobs: &[(&str, u32, u64, &str, &str, &str, f64)]) -> SweepFile {
+        let with_sched: Vec<(&str, u32, u64, &str, &str, &str, &str, f64, f64)> = jobs
+            .iter()
+            .map(|&(speed, rate, ch, pat, map, knob, gbs)| {
+                (speed, rate, ch, pat, map, knob, "frfcfs", gbs, 100.0)
+            })
+            .collect();
+        summary_sched(label, &with_sched)
     }
 
     #[test]
@@ -536,8 +578,35 @@ mod tests {
         assert_eq!(f.records.len(), 1);
         assert_eq!(f.records[0].mapping, "row_col_bank");
         assert_eq!(f.records[0].knobs, "mig");
+        assert_eq!(f.records[0].sched, "frfcfs", "pre-v3 files get the default policy");
+        assert_eq!(f.records[0].rd_p99_ns, None, "pre-v3 files carry no percentiles");
         assert_eq!(f.records[0].data_rate_mts, 1600);
         assert!(parse_summary("{\"schema\": \"other\", \"jobs\": []}", "x").is_err());
+    }
+
+    #[test]
+    fn sched_axis_distinguishes_jobs_and_p99_deltas_render() {
+        let a = summary_sched(
+            "base",
+            &[
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", "frfcfs", 6.0, 200.0),
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", "fcfs", 5.8, 220.0),
+            ],
+        );
+        let b = summary_sched(
+            "next",
+            &[
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", "frfcfs", 6.0, 300.0),
+                ("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", "fcfs", 5.8, 220.0),
+            ],
+        );
+        let rep = compare(&[a, b], 2.0);
+        assert_eq!(rep.delta.rows.len(), 2, "policies are distinct job points");
+        let ascii = rep.delta.ascii();
+        assert!(ascii.contains("Sched"), "{ascii}");
+        assert!(ascii.contains("fcfs"), "{ascii}");
+        assert!(ascii.contains("+50.0"), "p99 delta rendered: {ascii}");
+        assert!(rep.regressions.is_empty(), "p99 shifts alone are not regressions");
     }
 
     #[test]
@@ -609,6 +678,7 @@ mod tests {
         let f = load_sweep(&path).unwrap();
         assert_eq!(f.records.len(), 12, "12-job paper grid");
         assert!(f.records.iter().all(|r| r.mapping == "row_col_bank"));
+        assert!(f.records.iter().all(|r| r.sched == "frfcfs"));
         assert!(f.records.iter().all(|r| r.total_gbs > 0.0));
     }
 }

@@ -116,6 +116,17 @@ impl BatchStats {
         self.counters.wr_latency.mean() * self.axi_ns()
     }
 
+    /// Read-latency percentile in nanoseconds (log2-bucket upper bound —
+    /// see [`LatencyHistogram::percentile`]; 0.0 when no reads ran).
+    pub fn read_latency_pct_ns(&self, p: f64) -> f64 {
+        self.counters.rd_latency.percentile(p).map(|c| c as f64 * self.axi_ns()).unwrap_or(0.0)
+    }
+
+    /// Write-latency percentile in nanoseconds (0.0 when no writes ran).
+    pub fn write_latency_pct_ns(&self, p: f64) -> f64 {
+        self.counters.wr_latency.percentile(p).map(|c| c as f64 * self.axi_ns()).unwrap_or(0.0)
+    }
+
     /// Energy per transferred bit in picojoules (None when no data moved).
     pub fn pj_per_bit(&self) -> Option<f64> {
         self.energy.pj_per_bit(self.counters.rd_bytes + self.counters.wr_bytes)
@@ -186,6 +197,24 @@ mod tests {
         assert_eq!(a.rd_txns, 15);
         assert_eq!(a.rd_bytes, 170);
         assert_eq!(a.rd_cycles, 80, "cycle counters take the max (parallel channels)");
+    }
+
+    #[test]
+    fn latency_percentiles_reach_physical_units() {
+        let mut s = stats(0, 1000, SpeedBin::Ddr4_1600);
+        assert_eq!(s.read_latency_pct_ns(99.0), 0.0, "empty histogram");
+        for v in 1..=100u64 {
+            s.counters.rd_latency.record(v);
+        }
+        let (p50, p95, p99) = (
+            s.read_latency_pct_ns(50.0),
+            s.read_latency_pct_ns(95.0),
+            s.read_latency_pct_ns(99.0),
+        );
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50}/{p95}/{p99}");
+        // AXI cycle at DDR4-1600 is 5 ns: bucket bounds scale by it
+        assert_eq!(p50 % 5.0, 0.0);
+        assert_eq!(s.write_latency_pct_ns(99.0), 0.0, "no writes ran");
     }
 
     #[test]

@@ -1,0 +1,521 @@
+//! Differential test of the `controller::sched` refactor: the default
+//! `frfcfs` policy must reproduce the pre-refactor monolithic scheduler
+//! **command for command** on randomized request streams.
+//!
+//! `RefController` below is a frozen copy of the monolithic
+//! `MemController` exactly as it stood before the scheduler was
+//! decomposed behind the `SchedPolicy` trait (PR 4). Both controllers
+//! are driven with identical pushes at identical cycles; every tick's
+//! issued command and every completion must match bit-exactly.
+
+use std::collections::VecDeque;
+
+use ddr4bench::config::{ControllerParams, SpeedBin};
+use ddr4bench::controller::{Completion, MemController, MemRequest};
+use ddr4bench::ddr4::{Cmd, Cycle, DdrDevice, DramGeometry, TimingParams};
+use ddr4bench::rng::SplitMix64;
+use ddr4bench::testkit::check;
+
+// ------------------------------------------------------------------------
+// Frozen pre-refactor controller (verbatim scheduler logic; accessors and
+// statistics that the differential driver does not need are omitted).
+// ------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Read,
+    Write,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RefreshState {
+    Idle,
+    Draining,
+}
+
+#[allow(dead_code)] // counters kept for fidelity with the original
+#[derive(Debug, Clone, Copy, Default)]
+struct RefCtrlStats {
+    refresh_stall_cycles: u64,
+    mode_switches: u64,
+    queue_rejects: u64,
+}
+
+struct RefController {
+    params: ControllerParams,
+    device: DdrDevice,
+    read_q: VecDeque<MemRequest>,
+    write_q: VecDeque<MemRequest>,
+    completions: VecDeque<Completion>,
+    mode: Mode,
+    refresh: RefreshState,
+    read_gate_until: Cycle,
+    write_gate_until: Cycle,
+    mode_entered: Cycle,
+    bank_last_use: Vec<Cycle>,
+    dirty: bool,
+    idle_until: Cycle,
+    stats: RefCtrlStats,
+}
+
+impl RefController {
+    fn new(params: ControllerParams, timing: TimingParams, geometry: DramGeometry) -> Self {
+        let banks = geometry.banks() as usize;
+        Self {
+            bank_last_use: vec![0; banks],
+            dirty: true,
+            idle_until: 0,
+            params,
+            device: DdrDevice::new(timing, geometry),
+            read_q: VecDeque::with_capacity(params.read_queue_depth),
+            write_q: VecDeque::with_capacity(params.write_queue_depth),
+            completions: VecDeque::new(),
+            mode: Mode::Read,
+            refresh: RefreshState::Idle,
+            read_gate_until: 0,
+            write_gate_until: 0,
+            mode_entered: 0,
+            stats: RefCtrlStats::default(),
+        }
+    }
+
+    fn try_push(&mut self, req: MemRequest) -> Result<(), MemRequest> {
+        let cap =
+            if req.is_write { self.params.write_queue_depth } else { self.params.read_queue_depth };
+        let len = if req.is_write { self.write_q.len() } else { self.read_q.len() };
+        if len >= cap {
+            self.stats.queue_rejects += 1;
+            return Err(req);
+        }
+        let q = if req.is_write { &mut self.write_q } else { &mut self.read_q };
+        q.push_back(req);
+        self.dirty = true;
+        Ok(())
+    }
+
+    fn pop_completions(&mut self, now: Cycle, out: &mut Vec<Completion>) {
+        while let Some(c) = self.completions.front() {
+            if c.done_at <= now {
+                out.push(*c);
+                self.completions.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn tick(&mut self, now: Cycle) -> Option<Cmd> {
+        if !self.dirty && now < self.idle_until && self.refresh == RefreshState::Idle {
+            return None;
+        }
+        self.dirty = false;
+        let cmd = self.tick_eval(now);
+        if cmd.is_some() {
+            self.idle_until = 0;
+        }
+        cmd
+    }
+
+    fn tick_eval(&mut self, now: Cycle) -> Option<Cmd> {
+        if self.refresh != RefreshState::Idle || self.device.refresh_needed(now) {
+            if let Some(cmd) = self.tick_refresh(now) {
+                return Some(cmd);
+            }
+            if self.refresh != RefreshState::Idle {
+                self.stats.refresh_stall_cycles += 1;
+                return None;
+            }
+        }
+
+        self.update_mode(now);
+        let mut wake = self.device.refresh_due();
+        if !self.read_q.is_empty() || !self.write_q.is_empty() {
+            wake = wake.min(self.mode_entered + (self.params.mode_dwell_ck / 4).max(1) as Cycle);
+        }
+
+        match self.try_cas(now) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+
+        match self.try_prep(now, self.mode) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+        let other = match self.mode {
+            Mode::Read => Mode::Write,
+            Mode::Write => Mode::Read,
+        };
+        match self.try_prep(now, other) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+        match self.try_idle_precharge(now) {
+            (Some(cmd), _) => return Some(cmd),
+            (None, w) => wake = wake.min(w),
+        }
+        self.idle_until = wake.max(now + 1);
+        None
+    }
+
+    fn try_idle_precharge(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
+        let timer = self.params.idle_precharge_cycles;
+        if timer == 0 {
+            return (None, Cycle::MAX);
+        }
+        let mut wake = Cycle::MAX;
+        for bank in 0..self.bank_last_use.len() {
+            let b = self.device.bank(bank as u32);
+            let Some(open_row) = b.open_row else { continue };
+            let expires = self.bank_last_use[bank] + timer as Cycle;
+            if now < expires {
+                wake = wake.min(expires);
+                continue;
+            }
+            let wanted = self
+                .read_q
+                .iter()
+                .chain(self.write_q.iter())
+                .any(|r| r.addr.bank == bank as u32 && r.addr.row == open_row);
+            if wanted {
+                continue;
+            }
+            let cmd = Cmd::Pre { bank: bank as u32 };
+            let at = self.device.earliest_issue(cmd);
+            if at <= now && self.device.can_issue(cmd, now) {
+                self.device.issue(cmd, now);
+                return (Some(cmd), now);
+            }
+            wake = wake.min(at);
+        }
+        (None, wake)
+    }
+
+    fn tick_refresh(&mut self, now: Cycle) -> Option<Cmd> {
+        match self.refresh {
+            RefreshState::Idle => {
+                if self.device.all_banks_closed() {
+                    if self.device.can_issue(Cmd::Ref, now) {
+                        self.device.issue(Cmd::Ref, now);
+                        self.stats.refresh_stall_cycles += self.device.timing().trfc as u64;
+                        return Some(Cmd::Ref);
+                    }
+                    self.refresh = RefreshState::Draining;
+                    None
+                } else if self.device.can_issue(Cmd::PreAll, now) {
+                    self.device.issue(Cmd::PreAll, now);
+                    self.refresh = RefreshState::Draining;
+                    Some(Cmd::PreAll)
+                } else {
+                    self.refresh = RefreshState::Draining;
+                    None
+                }
+            }
+            RefreshState::Draining => {
+                if !self.device.all_banks_closed() {
+                    if self.device.can_issue(Cmd::PreAll, now) {
+                        self.device.issue(Cmd::PreAll, now);
+                        return Some(Cmd::PreAll);
+                    }
+                    return None;
+                }
+                if self.device.can_issue(Cmd::Ref, now) {
+                    self.device.issue(Cmd::Ref, now);
+                    self.refresh = RefreshState::Idle;
+                    self.stats.refresh_stall_cycles += self.device.timing().trfc as u64;
+                    return Some(Cmd::Ref);
+                }
+                None
+            }
+        }
+    }
+
+    fn update_mode(&mut self, now: Cycle) {
+        let wlen = self.write_q.len();
+        let dwell = self.params.mode_dwell_ck as Cycle;
+        let dwell_ok = now >= self.mode_entered + dwell;
+        let grace_ok = now >= self.mode_entered + dwell / 4;
+        let switch = match self.mode {
+            Mode::Read => {
+                wlen >= self.params.write_drain_high
+                    || self.head_hazard_blocked(false)
+                    || (wlen > 0 && dwell_ok && !self.read_q.is_empty())
+                    || (wlen > 0 && grace_ok && self.read_q.is_empty())
+            }
+            Mode::Write => {
+                self.head_hazard_blocked(true)
+                    || (!self.read_q.is_empty()
+                        && (wlen <= self.params.write_drain_low || dwell_ok))
+                    || (wlen == 0 && grace_ok && !self.read_q.is_empty())
+            }
+        };
+        if switch {
+            self.mode = match self.mode {
+                Mode::Read => Mode::Write,
+                Mode::Write => Mode::Read,
+            };
+            self.mode_entered = now;
+            self.stats.mode_switches += 1;
+        }
+    }
+
+    fn head_hazard_blocked(&self, is_write: bool) -> bool {
+        let (q, other) =
+            if is_write { (&self.write_q, &self.read_q) } else { (&self.read_q, &self.write_q) };
+        let Some(head) = q.front() else { return false };
+        other.iter().any(|r| r.addr == head.addr && r.arrival < head.arrival)
+    }
+
+    fn try_cas(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
+        let is_write = self.mode == Mode::Write;
+        let look = self.params.lookahead;
+        let (q, t) = match self.mode {
+            Mode::Read => (&self.read_q, self.device.timing()),
+            Mode::Write => (&self.write_q, self.device.timing()),
+        };
+        let (cl, cwl, burst) = (t.cl, t.cwl, t.burst_cycles);
+
+        let mut pick: Option<usize> = None;
+        let mut wake = Cycle::MAX;
+        for (i, req) in q.iter().take(look).enumerate() {
+            if self.device.row_state(req.addr.bank, req.addr.row) == Some(true) {
+                let cmd = if is_write {
+                    Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+                } else {
+                    Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+                };
+                if self.reordered_past_same_addr(i, is_write) {
+                    continue;
+                }
+                let at = self.device.earliest_issue(cmd);
+                if at <= now {
+                    pick = Some(i);
+                    break;
+                }
+                wake = wake.min(at);
+            }
+        }
+        let Some(i) = pick else { return (None, wake) };
+        let req = if is_write {
+            self.write_q.remove(i).unwrap()
+        } else {
+            self.read_q.remove(i).unwrap()
+        };
+        let cmd = if is_write {
+            Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+        } else {
+            Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+        };
+        self.device.issue(cmd, now);
+        self.bank_last_use[req.addr.bank as usize] = now;
+        let done_at = now + if is_write { cwl + burst } else { cl + burst } as Cycle;
+        let comp = Completion {
+            txn_id: req.txn_id,
+            is_write,
+            burst_addr: req.burst_addr,
+            beats: req.beats,
+            done_at,
+            arrival: req.arrival,
+            last_of_txn: req.last_of_txn,
+        };
+        let pos = self
+            .completions
+            .iter()
+            .rposition(|c| c.done_at <= done_at)
+            .map(|p| p + 1)
+            .unwrap_or(0);
+        self.completions.insert(pos, comp);
+        (Some(cmd), now)
+    }
+
+    fn reordered_past_same_addr(&self, i: usize, is_write: bool) -> bool {
+        let q = if is_write { &self.write_q } else { &self.read_q };
+        let target = q[i].addr;
+        if q.iter().take(i).any(|r| r.addr == target) {
+            return true;
+        }
+        let other = if is_write { &self.read_q } else { &self.write_q };
+        let my_arrival = q[i].arrival;
+        other.iter().any(|r| r.addr == target && r.arrival < my_arrival)
+    }
+
+    fn try_prep(&mut self, now: Cycle, mode: Mode) -> (Option<Cmd>, Cycle) {
+        let look = self.params.lookahead;
+        let q = match mode {
+            Mode::Read => &self.read_q,
+            Mode::Write => &self.write_q,
+        };
+        let mut seen_banks = 0u32;
+        let mut act_target: Option<(u32, u32)> = None;
+        let mut pre_target: Option<u32> = None;
+        for req in q.iter().take(look) {
+            let bit = 1u32 << req.addr.bank;
+            if seen_banks & bit != 0 {
+                continue;
+            }
+            seen_banks |= bit;
+            match self.device.row_state(req.addr.bank, req.addr.row) {
+                None => {
+                    if act_target.is_none() {
+                        act_target = Some((req.addr.bank, req.addr.row));
+                    }
+                }
+                Some(false) => {
+                    let open = self.device.bank(req.addr.bank).open_row;
+                    let still_wanted = q.iter().take(look).any(|r| {
+                        r.addr.bank == req.addr.bank
+                            && Some(r.addr.row) == open
+                            && r.arrival < req.arrival
+                    });
+                    if !still_wanted && pre_target.is_none() {
+                        pre_target = Some(req.addr.bank);
+                    }
+                }
+                Some(true) => {}
+            }
+        }
+        let mut wake = Cycle::MAX;
+        if let Some((bank, row)) = act_target {
+            let cmd = Cmd::Act { bank, row };
+            let at = self.device.earliest_issue(cmd);
+            if at <= now {
+                self.device.issue(cmd, now);
+                if self.params.miss_flush {
+                    let t = self.device.timing();
+                    let gate = match mode {
+                        Mode::Read => {
+                            now + (t.trcd + t.cl + t.burst_cycles + t.trp) as Cycle
+                        }
+                        Mode::Write => {
+                            now + (t.trcd + t.cwl + t.burst_cycles + t.twr + t.twtr_l)
+                                as Cycle
+                        }
+                    };
+                    match mode {
+                        Mode::Read => self.read_gate_until = self.read_gate_until.max(gate),
+                        Mode::Write => self.write_gate_until = self.write_gate_until.max(gate),
+                    }
+                }
+                return (Some(cmd), now);
+            }
+            wake = wake.min(at);
+        }
+        if let Some(bank) = pre_target {
+            let cmd = Cmd::Pre { bank };
+            let at = self.device.earliest_issue(cmd);
+            if at <= now && self.device.can_issue(cmd, now) {
+                self.device.issue(cmd, now);
+                return (Some(cmd), now);
+            }
+            wake = wake.min(at);
+        }
+        (None, wake)
+    }
+}
+
+// ------------------------------------------------------------------------
+// The differential driver
+// ------------------------------------------------------------------------
+
+/// Drive both controllers with an identical randomized request stream and
+/// compare every tick's command and every completion.
+fn run_differential(seed: u64, params: ControllerParams, cycles: u64) -> Result<(), String> {
+    let geo = DramGeometry::profpga_board();
+    let timing = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+    let mut new_ctrl = MemController::new(params, timing, geo);
+    let mut ref_ctrl = RefController::new(params, timing, geo);
+    let mut rng = SplitMix64::new(seed);
+    // a small pool mixed with uniform addresses forces same-address
+    // hazards through both schedulers
+    let pool: Vec<u64> = (0..8).map(|i| i * 64).collect();
+    let mut id = 0u64;
+    let mut done_new: Vec<Completion> = Vec::new();
+    let mut done_ref: Vec<Completion> = Vec::new();
+    for now in 0..cycles {
+        if rng.percent(35) {
+            let is_write = rng.percent(40);
+            let addr = if rng.percent(20) {
+                pool[rng.below(pool.len() as u64) as usize]
+            } else {
+                rng.below(1 << 22) * 64
+            };
+            let req = MemRequest {
+                txn_id: id,
+                is_write,
+                addr: geo.decode(addr),
+                burst_addr: addr,
+                beats: 2,
+                arrival: now,
+                last_of_txn: true,
+            };
+            let a = new_ctrl.try_push(req);
+            let b = ref_ctrl.try_push(req);
+            if a.is_ok() != b.is_ok() {
+                return Err(format!(
+                    "cycle {now}: push divergence (new {:?} vs ref {:?})",
+                    a.is_ok(),
+                    b.is_ok()
+                ));
+            }
+            if a.is_ok() {
+                id += 1;
+            }
+        }
+        let ca = new_ctrl.tick(now);
+        let cb = ref_ctrl.tick(now);
+        if ca != cb {
+            return Err(format!("cycle {now}: command divergence {ca:?} vs {cb:?}"));
+        }
+        new_ctrl.pop_completions(now, &mut done_new);
+        ref_ctrl.pop_completions(now, &mut done_ref);
+        if done_new.len() != done_ref.len() {
+            return Err(format!(
+                "cycle {now}: completion count divergence {} vs {}",
+                done_new.len(),
+                done_ref.len()
+            ));
+        }
+    }
+    if done_new != done_ref {
+        return Err("completion streams diverge".into());
+    }
+    if done_new.is_empty() {
+        return Err("differential run serviced no requests".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn frfcfs_matches_prerefactor_scheduler_command_for_command() {
+    check(
+        "frfcfs differential vs frozen monolith",
+        6,
+        |rng| rng.next_u64(),
+        |&seed| run_differential(seed, ControllerParams::default(), 60_000),
+    )
+}
+
+#[test]
+fn frfcfs_differential_holds_across_knob_profiles() {
+    // the bit-exactness contract covers the knob space, not just the
+    // MIG-like defaults: vary the window, the page timer and the dwell
+    check(
+        "frfcfs differential across knob profiles",
+        6,
+        |rng| {
+            let lookahead = [1usize, 4, 8][rng.below(3) as usize];
+            let idle = [0u32, 64][rng.below(2) as usize];
+            let dwell = [8u32, 48][rng.below(2) as usize];
+            (rng.next_u64(), lookahead, idle, dwell)
+        },
+        |&(seed, lookahead, idle, dwell)| {
+            let params = ControllerParams {
+                lookahead,
+                idle_precharge_cycles: idle,
+                mode_dwell_ck: dwell,
+                ..Default::default()
+            };
+            run_differential(seed, params, 40_000)
+        },
+    )
+}

@@ -15,7 +15,8 @@
 
 use ddr4bench::config::{
     format_pattern_config, parse_pattern_config, AddrMode, BurstKind, BurstSpec,
-    ControllerParams, DataPattern, DesignConfig, OpMix, PatternConfig, Signaling, SpeedBin,
+    ControllerParams, DataPattern, DesignConfig, OpMix, PatternConfig, SchedKind, Signaling,
+    SpeedBin,
 };
 use ddr4bench::controller::{MemController, MemRequest};
 use ddr4bench::ddr4::{Cmd, DdrDevice, DramGeometry, MappingPolicy, TimingParams};
@@ -410,6 +411,99 @@ fn prop_batch_counters_conserve() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_every_sched_policy_preserves_order_and_serves_everyone() {
+    // The two hard contracts of the scheduler subsystem, for every policy
+    // x mapping combination: (a) same-address requests never reorder
+    // (data integrity), and (b) every request is eventually served (no
+    // starvation — the whole point of frfcfs-cap, but fcfs/closed/
+    // adaptive must uphold it too).
+    let mappings =
+        [MappingPolicy::row_col_bank(), MappingPolicy::row_bank_col(), MappingPolicy::xor_hash()];
+    for kind in SchedKind::ALL {
+        for mapping in mappings {
+            let mut geo = DramGeometry::profpga_board();
+            geo.mapping = mapping;
+            check(
+                &format!("sched {kind} x {mapping}: ordering + eventual service"),
+                6,
+                |rng| rng.next_u64(),
+                |&seed| {
+                    let params = ControllerParams { sched: kind, ..Default::default() };
+                    let mut ctrl = MemController::new(
+                        params,
+                        TimingParams::for_bin(SpeedBin::Ddr4_1600),
+                        geo,
+                    );
+                    let mut rng = SplitMix64::new(seed);
+                    // small pool to force same-address collisions
+                    let pool: Vec<u64> = (0..4).map(|i| i * 64).collect();
+                    let mut seq = Vec::new();
+                    let mut done = Vec::new();
+                    let mut now = 0u64;
+                    let mut pushed = 0u64;
+                    let total = 24;
+                    while pushed < total || done.len() < total as usize {
+                        if pushed < total {
+                            let addr = pool[rng.below(pool.len() as u64) as usize];
+                            let is_write = rng.percent(50);
+                            let req = MemRequest {
+                                txn_id: pushed,
+                                is_write,
+                                addr: geo.decode(addr),
+                                burst_addr: addr,
+                                beats: 2,
+                                arrival: now,
+                                last_of_txn: true,
+                            };
+                            if ctrl.try_push(req).is_ok() {
+                                seq.push((pushed, addr));
+                                pushed += 1;
+                            }
+                        }
+                        ctrl.tick(now);
+                        ctrl.pop_completions(now, &mut done);
+                        now += 1;
+                        if now > 2_000_000 {
+                            return Err(format!(
+                                "{kind}: starved — {} of {total} served",
+                                done.len()
+                            ));
+                        }
+                    }
+                    // eventual service: each pushed id completes exactly once
+                    let mut ids: Vec<u64> = done.iter().map(|c| c.txn_id).collect();
+                    ids.sort_unstable();
+                    ids.dedup();
+                    if ids.len() != total as usize {
+                        return Err(format!("{} unique completions of {total}", ids.len()));
+                    }
+                    // same-address ordering: completion order == push order
+                    for addr in &pool {
+                        let pushed_ids: Vec<u64> =
+                            seq.iter().filter(|(_, a)| a == addr).map(|(i, _)| *i).collect();
+                        let mut completed: Vec<(u64, u64)> = done
+                            .iter()
+                            .filter(|c| c.burst_addr == *addr)
+                            .map(|c| (c.done_at, c.txn_id))
+                            .collect();
+                        completed.sort_unstable();
+                        let completed_ids: Vec<u64> =
+                            completed.iter().map(|&(_, id)| id).collect();
+                        if completed_ids != pushed_ids {
+                            return Err(format!(
+                                "{kind}/{mapping}: addr {addr:#x} push {pushed_ids:?} vs \
+                                 completion {completed_ids:?}"
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
 }
 
 // --------------------------------------------------- pattern-engine modes

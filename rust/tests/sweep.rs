@@ -7,8 +7,8 @@ use std::collections::HashSet;
 use ddr4bench::config::{PatternConfig, SpeedBin};
 use ddr4bench::ddr4::MappingPolicy;
 use ddr4bench::platform::sweep::{
-    job_csv, job_json, parse_knob_list, preset, run_sweep, summary_json, write_artifacts,
-    SweepSpec,
+    job_csv, job_json, parse_knob_list, parse_sched_list, preset, run_sweep, summary_json,
+    write_artifacts, SweepSpec,
 };
 use ddr4bench::platform::Platform;
 use ddr4bench::report::compare;
@@ -94,7 +94,7 @@ fn artifacts_written_one_json_and_csv_per_job() {
     let summary = write_artifacts(&outcomes, &dir).unwrap();
     assert!(summary.ends_with("BENCH_sweep.json"));
     let summary_text = std::fs::read_to_string(&summary).unwrap();
-    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v2\""));
+    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v3\""));
     let mut jsons = 0;
     let mut csvs = 0;
     for entry in std::fs::read_dir(&dir).unwrap() {
@@ -163,6 +163,78 @@ fn mapping_and_knob_axes_run_and_label_artifacts() {
     assert_eq!(maps, HashSet::from(["row_col_bank", "xor_hash"]));
     let report = compare::compare(&[loaded.clone(), loaded.clone()], 2.0);
     assert_eq!(report.delta.rows.len(), 4);
+    assert!(report.regressions.is_empty(), "a sweep never regresses against itself");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sched_axis_sweep_labels_artifacts_and_orders_policies_sanely() {
+    // The ISSUE acceptance run at test scale:
+    //   ddr4bench sweep --scheds fcfs,frfcfs,frfcfs-cap,closed
+    // on a bank-conflict pattern (every access a same-bank row miss) and
+    // a sequential pattern (pure row-hit locality).
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1];
+    spec.scheds = parse_sched_list("fcfs,frfcfs,frfcfs-cap,closed").unwrap();
+    spec.patterns = vec![preset("bank").unwrap(), preset("seq").unwrap()];
+    for (_, cfg) in &mut spec.patterns {
+        cfg.batch_len = 128;
+    }
+    let jobs = spec.expand();
+    assert_eq!(jobs.len(), 4 * 2, "4 policies x 2 patterns");
+    let outcomes = run_sweep(jobs, 4).unwrap();
+    let gbs = |sched: &str, pattern: &str| -> f64 {
+        outcomes
+            .iter()
+            .find(|o| o.job.sched.name() == sched && o.job.label == pattern)
+            .unwrap_or_else(|| panic!("missing {sched}/{pattern}"))
+            .agg
+            .total_throughput_gbs()
+    };
+    // sane ordering: the reordering scheduler cannot lose to strict FCFS
+    // on an adversarial bank-conflict stream...
+    assert!(
+        gbs("frfcfs", "bank") >= gbs("fcfs", "bank") * 0.999,
+        "frfcfs {} vs fcfs {} on bank conflicts",
+        gbs("frfcfs", "bank"),
+        gbs("fcfs", "bank")
+    );
+    // ...and open page cannot lose to closed page on a sequential stream
+    assert!(
+        gbs("frfcfs", "seq") >= gbs("closed", "seq") * 0.999,
+        "frfcfs {} vs closed {} on sequential",
+        gbs("frfcfs", "seq"),
+        gbs("closed", "seq")
+    );
+    // policy-labeled artifacts: stem carries the sched axis, JSON/CSV
+    // carry the sched field
+    let dir = std::env::temp_dir().join(format!("ddr4bench_sched_sweep_{}", std::process::id()));
+    let summary = write_artifacts(&outcomes, &dir).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    for sched in ["fcfs", "frfcfs", "frfcfs-cap", "closed"] {
+        assert!(
+            names.iter().any(|n| n.contains(sched) && n.ends_with(".json")),
+            "missing {sched} artifact in {names:?}"
+        );
+    }
+    for o in &outcomes {
+        let j = job_json(o);
+        assert!(j.contains(&format!("\"sched\": \"{}\"", o.job.sched.name())), "{j}");
+        assert!(job_csv(o).contains(&o.job.sched.name()), "csv carries the policy");
+    }
+    // the summary round-trips through the compare pipeline with the
+    // sched axis as part of the matching key
+    let loaded = compare::load_sweep(&summary).unwrap();
+    assert_eq!(loaded.records.len(), 8);
+    let scheds: HashSet<&str> = loaded.records.iter().map(|r| r.sched.as_str()).collect();
+    assert_eq!(scheds, HashSet::from(["fcfs", "frfcfs", "frfcfs-cap", "closed"]));
+    assert!(loaded.records.iter().all(|r| r.rd_p99_ns.is_some()), "percentiles in artifacts");
+    let report = compare::compare(&[loaded.clone(), loaded.clone()], 2.0);
+    assert_eq!(report.delta.rows.len(), 8);
     assert!(report.regressions.is_empty(), "a sweep never regresses against itself");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -11,9 +11,11 @@ This script exists for environments without a Rust toolchain: it walks
 the same 12-job grid (the Fig. 2 data rates x {1, 2} channels x the
 three adversarial patterns) through ``python/compile/model.py``'s
 ``bw_model`` — the jnp twin of ``rust/src/analytic`` — and emits the
-same ``ddr4bench.sweep.v1`` schema with ``"source"`` marking the values
+same ``ddr4bench.sweep.v3`` schema with ``"source"`` marking the values
 as analytic predictions rather than simulator measurements. Fields the
-model cannot predict (latency, wall time, refresh, energy) are null.
+model cannot predict (latency and its percentiles, wall time, refresh,
+energy) are null; the mapping/knob/sched axes are the defaults the
+simulator grid runs under (``row_col_bank``/``mig``/``frfcfs``).
 
 Run from the repo root: ``python3 scripts/bench_sweep_baseline.py``
 """
@@ -72,18 +74,27 @@ def main():
         total = float(per_channel) * ch
         jobs.append(
             {
-                "schema": "ddr4bench.sweep.v1",
+                "schema": "ddr4bench.sweep.v3",
                 "id": jid,
                 "speed": f"DDR4-{rate}",
                 "data_rate_mts": rate,
                 "channels": ch,
                 "pattern": label,
+                "mapping": "row_col_bank",
+                "knobs": "mig",
+                "sched": "frfcfs",
                 "cfg": cfg,
                 "rd_gbs": round(total, 6),
                 "wr_gbs": 0.0,
                 "total_gbs": round(total, 6),
                 "rd_lat_ns": None,
                 "wr_lat_ns": None,
+                "rd_p50_ns": None,
+                "rd_p95_ns": None,
+                "rd_p99_ns": None,
+                "wr_p50_ns": None,
+                "wr_p95_ns": None,
+                "wr_p99_ns": None,
                 "refresh_stall_ck": None,
                 "mismatches": None,
                 "energy_nj": None,
@@ -93,12 +104,13 @@ def main():
             }
         )
     doc = {
-        "schema": "ddr4bench.sweep.v1",
+        "schema": "ddr4bench.sweep.v3",
         "source": (
             "analytic-model baseline (python/compile/model.py bw_model); "
-            "regenerate with the simulator: cargo run --release -- sweep "
-            "--speeds 1600,2400 --channels 1,2 --patterns strided,bank,chase "
-            "--jobs 4 --out sweep-out"
+            "promote a simulator-sourced summary with "
+            "scripts/promote_baseline.sh (CI uploads one as the "
+            "BENCH_sweep artifact every run) to flip the CI compare gate "
+            "to --strict"
         ),
         "jobs": jobs,
     }

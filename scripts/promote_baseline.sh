@@ -1,0 +1,21 @@
+#!/usr/bin/env sh
+# Promote a simulator-produced sweep summary to the committed repo
+# baseline. The CI `rust` job regenerates `sweep-out/BENCH_sweep.json`
+# with the cycle-level simulator on every push and uploads it as the
+# `BENCH_sweep` artifact; committing it here replaces the analytic
+# bootstrap baseline, and the CI compare step then gates run-to-run
+# perf deltas with `--strict` automatically (it keys off the `source`
+# field).
+#
+# Usage: scripts/promote_baseline.sh [path/to/BENCH_sweep.json]
+set -eu
+src="${1:-sweep-out/BENCH_sweep.json}"
+if ! grep -q '"source": "ddr4bench sweep executive (simulator)"' "$src"; then
+    echo "refusing: $src is not a simulator-sourced sweep summary" >&2
+    echo "(run: cargo run --release -- sweep --speeds 1600,2400 --channels 1,2 \\" >&2
+    echo "      --patterns strided,bank,chase --jobs 4 --out sweep-out)" >&2
+    exit 1
+fi
+dst="$(dirname "$0")/../BENCH_sweep.json"
+cp "$src" "$dst"
+echo "promoted $src -> BENCH_sweep.json; the CI compare step now gates --strict"
