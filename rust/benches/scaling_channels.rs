@@ -6,7 +6,7 @@
 //! Run: `cargo bench --bench scaling_channels` (add `--quick` for CI).
 
 use ddr4bench::benchkit::Bench;
-use ddr4bench::config::{DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::config::{ChannelMix, DesignConfig, PatternConfig, SpeedBin};
 use ddr4bench::platform::Platform;
 use ddr4bench::report::campaign;
 
@@ -29,6 +29,23 @@ fn main() {
             );
         }
     }
+
+    // Heterogeneous mix executive: three distinct per-channel workloads
+    // on parallel channel threads (the wall-clock cost of the mix path
+    // relative to the homogeneous runs above).
+    let seq_batch = campaign::batch_for(32, scale);
+    let mix = ChannelMix::new(vec![
+        PatternConfig::seq_read_burst(32, seq_batch),
+        PatternConfig::pointer_chase_read(1 << 20, seq_batch / 4, 7),
+        PatternConfig::bank_conflict_read(1, seq_batch / 2, 1),
+    ])
+    .expect("3-channel mix");
+    let txns: u32 = mix.iter().map(|c| c.batch_len).sum();
+    let mut platform = Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_2400));
+    bench.bench_throughput("scaling/3ch_hetero_seq+chase+bank", txns as f64, "txn", || {
+        let per = platform.run_batch_mix(&mix).unwrap();
+        std::hint::black_box(Platform::aggregate(&per).total_throughput_gbs());
+    });
 
     println!("\n{}", campaign::scaling(scale).ascii());
     bench.finish();

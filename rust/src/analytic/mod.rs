@@ -23,7 +23,7 @@
 
 pub mod dse;
 
-use crate::config::{OpMix, PatternConfig, SchedKind, SpeedBin};
+use crate::config::{ChannelMix, OpMix, PatternConfig, SchedKind, SpeedBin};
 use crate::ddr4::{DramGeometry, TimingParams};
 
 /// Model inputs distilled from a (design, pattern) pair — the 8 feature
@@ -266,6 +266,19 @@ pub fn predict_pattern_mapped(
         * sched_derate(sched, cfg, speed, beat_bytes)
 }
 
+/// Predict the aggregate throughput of a heterogeneous [`ChannelMix`]:
+/// channels are architecturally independent, so the platform prediction
+/// is the sum of each channel's [`predict_pattern_mapped`] — including
+/// any per-channel `MAP=`/`SCHED=` override the mix carries.
+pub fn predict_mix_mapped(
+    speed: SpeedBin,
+    mix: &ChannelMix,
+    beat_bytes: u32,
+    geo: &DramGeometry,
+) -> f32 {
+    mix.iter().map(|cfg| predict_pattern_mapped(speed, cfg, beat_bytes, geo)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,6 +393,31 @@ mod tests {
         closed.sched = Some(SchedKind::Closed);
         let predicted = predict_pattern_mapped(SpeedBin::Ddr4_1600, &closed, 32, &geo);
         assert!((predicted / base - c32).abs() < 1e-6, "{predicted} vs {base} x {c32}");
+    }
+
+    #[test]
+    fn mix_prediction_sums_independent_channels() {
+        let geo = crate::ddr4::DramGeometry::profpga_board();
+        let seq = PatternConfig::seq_read_burst(32, 1);
+        let chase = PatternConfig::pointer_chase_read(1 << 20, 1, 7);
+        // a uniform mix predicts n x the single-channel number
+        let uni = ChannelMix::uniform(&seq, 3).unwrap();
+        let single = predict_pattern_mapped(SpeedBin::Ddr4_1600, &seq, 32, &geo);
+        let triple = predict_mix_mapped(SpeedBin::Ddr4_1600, &uni, 32, &geo);
+        assert!((triple - 3.0 * single).abs() < 1e-4, "{triple} vs 3 x {single}");
+        // a heterogeneous mix sums its distinct per-channel predictions
+        let mix = ChannelMix::new(vec![seq.clone(), chase.clone()]).unwrap();
+        let expect = single + predict_pattern_mapped(SpeedBin::Ddr4_1600, &chase, 32, &geo);
+        let got = predict_mix_mapped(SpeedBin::Ddr4_1600, &mix, 32, &geo);
+        assert!((got - expect).abs() < 1e-4, "{got} vs {expect}");
+        // per-channel SCHED= overrides flow through the mix prediction
+        let mut closed = seq.clone();
+        closed.sched = Some(SchedKind::Closed);
+        let mix = ChannelMix::new(vec![seq, closed.clone()]).unwrap();
+        let expect = single + predict_pattern_mapped(SpeedBin::Ddr4_1600, &closed, 32, &geo);
+        let got = predict_mix_mapped(SpeedBin::Ddr4_1600, &mix, 32, &geo);
+        assert!((got - expect).abs() < 1e-4, "{got} vs {expect}");
+        assert!(got < 2.0 * single, "the closed-page channel derates the platform sum");
     }
 
     #[test]

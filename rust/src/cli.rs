@@ -14,6 +14,8 @@ pub struct Args {
     pub command: Option<String>,
     /// `--key value` options.
     pub options: BTreeMap<String, String>,
+    /// Repeatable `--key value` options, in the order given.
+    pub multi: BTreeMap<String, Vec<String>>,
     /// Bare `--flag`s.
     pub flags: Vec<String>,
     /// Positional arguments.
@@ -24,6 +26,12 @@ impl Args {
     /// Option value by key.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(String::as_str)
+    }
+
+    /// All values of a repeatable option, in the order given (empty when
+    /// absent).
+    pub fn get_multi(&self, key: &str) -> &[String] {
+        self.multi.get(key).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Option value or default.
@@ -52,6 +60,9 @@ pub struct OptSpec {
     pub key: &'static str,
     /// Does it take a value?
     pub takes_value: bool,
+    /// May it be given more than once? (Values collect into
+    /// [`Args::multi`] in order.)
+    pub repeatable: bool,
     /// One-line description.
     pub help: &'static str,
 }
@@ -78,13 +89,20 @@ impl Cli {
 
     /// Register a `--key <value>` option.
     pub fn option(mut self, key: &'static str, help: &'static str) -> Self {
-        self.options.push(OptSpec { key, takes_value: true, help });
+        self.options.push(OptSpec { key, takes_value: true, repeatable: false, help });
+        self
+    }
+
+    /// Register a repeatable `--key <value>` option (give it several
+    /// times; values collect in order).
+    pub fn multi(mut self, key: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec { key, takes_value: true, repeatable: true, help });
         self
     }
 
     /// Register a bare `--flag`.
     pub fn flag(mut self, key: &'static str, help: &'static str) -> Self {
-        self.options.push(OptSpec { key, takes_value: false, help });
+        self.options.push(OptSpec { key, takes_value: false, repeatable: false, help });
         self
     }
 
@@ -103,7 +121,9 @@ impl Cli {
         if !self.options.is_empty() {
             s.push_str("\nOPTIONS:\n");
             for o in &self.options {
-                let k = if o.takes_value {
+                let k = if o.takes_value && o.repeatable {
+                    format!("--{} <v>..", o.key)
+                } else if o.takes_value {
                     format!("--{} <v>", o.key)
                 } else {
                     format!("--{}", o.key)
@@ -137,7 +157,7 @@ impl Cli {
                 };
                 let spec = self.options.iter().find(|o| o.key == key);
                 match spec {
-                    Some(OptSpec { takes_value: true, .. }) => {
+                    Some(OptSpec { takes_value: true, repeatable, .. }) => {
                         let val = match inline {
                             Some(v) => v,
                             None => it
@@ -145,7 +165,11 @@ impl Cli {
                                 .ok_or_else(|| format!("--{key} expects a value"))?
                                 .clone(),
                         };
-                        args.options.insert(key, val);
+                        if *repeatable {
+                            args.multi.entry(key).or_default().push(val);
+                        } else {
+                            args.options.insert(key, val);
+                        }
                     }
                     Some(OptSpec { takes_value: false, .. }) => {
                         if inline.is_some() {
@@ -171,6 +195,7 @@ mod tests {
         Cli::new("t", "test tool")
             .command("run", "run things")
             .option("speed", "data rate")
+            .multi("ch", "per-channel spec")
             .flag("verbose", "chatty")
     }
 
@@ -222,5 +247,19 @@ mod tests {
     #[test]
     fn flag_with_value_rejected() {
         assert!(cli().parse(&v(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn repeatable_option_collects_in_order() {
+        let a = cli().parse(&v(&["--ch", "0:SEQ", "--ch=1:RND", "--ch", "2:BANK"])).unwrap();
+        assert_eq!(a.get_multi("ch").to_vec(), vec!["0:SEQ", "1:RND", "2:BANK"]);
+        assert_eq!(a.get("ch"), None, "repeatable values stay out of the scalar map");
+        assert!(cli().parse(&v(&[])).unwrap().get_multi("ch").is_empty());
+        // last-wins still holds for scalar options
+        let a = cli().parse(&v(&["--speed", "1600", "--speed", "2400"])).unwrap();
+        assert_eq!(a.get("speed"), Some("2400"));
+        // help marks repeatables
+        let help = cli().parse(&v(&["--help"])).unwrap_err();
+        assert!(help.contains("--ch <v>.."), "{help}");
     }
 }

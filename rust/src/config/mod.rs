@@ -19,8 +19,9 @@
 mod parse;
 
 pub use parse::{
-    format_pattern_config, parse_controller_tokens, parse_design_config, parse_kv_text,
-    parse_pattern_config, parse_u64_with_suffix, ConfigError,
+    format_channel_mix, format_channel_spec, format_pattern_config, parse_channel_mix,
+    parse_channel_spec, parse_controller_tokens, parse_design_config, parse_kv_text,
+    parse_mix_file, parse_pattern_config, parse_u64_with_suffix, ConfigError,
 };
 
 use crate::ddr4::geometry::DramGeometry;
@@ -836,6 +837,99 @@ impl Default for PatternConfig {
     }
 }
 
+/// Heterogeneous multi-channel workload: one independent [`PatternConfig`]
+/// per memory channel (index = channel). This is the per-channel runtime
+/// axis the paper's "varying traffic configurations" claim needs — each
+/// channel can run its own pattern, op mix, `MAP=` and `SCHED=` override
+/// simultaneously, instead of [`crate::platform::Platform::run_batch_all`]
+/// cloning a single config onto every channel.
+///
+/// Built from config files (`[channel.N]` sections — [`parse_mix_file`]),
+/// the CLI (repeated `--ch N:TOKENS,...` specs — [`parse_channel_mix`]) or
+/// the host protocol (`CHCFG` command), and executed by
+/// [`crate::platform::Platform::run_batch_mix`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelMix {
+    /// Per-channel pattern configs (index = channel).
+    channels: Vec<PatternConfig>,
+}
+
+impl ChannelMix {
+    /// Build a mix from per-channel configs (one per channel, channel 0
+    /// first). Rejects empty mixes and mixes wider than the 3 channels
+    /// the XCKU115 hosts.
+    pub fn new(channels: Vec<PatternConfig>) -> Result<Self, ConfigError> {
+        if channels.is_empty() {
+            return Err(ConfigError::new("channel mix must configure at least one channel"));
+        }
+        if channels.len() > 3 {
+            return Err(ConfigError::new(format!(
+                "channel mix configures {} channels; the XCKU115 hosts at most 3",
+                channels.len()
+            )));
+        }
+        Ok(Self { channels })
+    }
+
+    /// The homogeneous mix: `cfg` cloned onto `n` channels (what
+    /// `run_batch_all` historically did).
+    pub fn uniform(cfg: &PatternConfig, n: usize) -> Result<Self, ConfigError> {
+        Self::new(vec![cfg.clone(); n])
+    }
+
+    /// Number of channels the mix configures.
+    pub fn len(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Is the mix empty? (Never true for a constructed mix; required by
+    /// the `len`/`is_empty` convention.)
+    pub fn is_empty(&self) -> bool {
+        self.channels.is_empty()
+    }
+
+    /// Channel `ch`'s config.
+    pub fn get(&self, ch: usize) -> Option<&PatternConfig> {
+        self.channels.get(ch)
+    }
+
+    /// Iterate the per-channel configs, channel 0 first.
+    pub fn iter(&self) -> std::slice::Iter<'_, PatternConfig> {
+        self.channels.iter()
+    }
+
+    /// Validate every per-channel config.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        for (ch, cfg) in self.channels.iter().enumerate() {
+            cfg.validate().map_err(|e| ConfigError::new(format!("channel {ch}: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Short per-channel workload label (the lowercased address-mode
+    /// label: `seq`, `rnd`, `strd`, `bank`, `chase`, `phase`).
+    pub fn channel_label(&self, ch: usize) -> String {
+        self.channels[ch].addr.label().to_ascii_lowercase()
+    }
+
+    /// Mix label: per-channel labels joined with `+` (`seq+chase+bank`).
+    pub fn label(&self) -> String {
+        (0..self.len()).map(|ch| self.channel_label(ch)).collect::<Vec<_>>().join("+")
+    }
+
+    /// A copy with every per-channel `MAP=`/`SCHED=` override cleared —
+    /// the sweep executive uses it so the mapping/sched axes stay
+    /// authoritative over what actually runs.
+    pub fn without_overrides(&self) -> Self {
+        let mut mix = self.clone();
+        for cfg in &mut mix.channels {
+            cfg.mapping = None;
+            cfg.sched = None;
+        }
+        mix
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -996,5 +1090,48 @@ mod tests {
         assert_eq!(p.signaling, Signaling::Blocking);
         assert_eq!(p.burst.len, 1);
         assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn channel_mix_bounds_and_labels() {
+        assert!(ChannelMix::new(vec![]).is_err(), "empty mix rejected");
+        assert!(ChannelMix::new(vec![PatternConfig::default(); 4]).is_err(), "4 channels");
+        let mix = ChannelMix::new(vec![
+            PatternConfig::seq_read_burst(32, 64),
+            PatternConfig::pointer_chase_read(1 << 20, 64, 7),
+            PatternConfig::bank_conflict_read(1, 64, 1),
+        ])
+        .unwrap();
+        assert_eq!(mix.len(), 3);
+        assert!(!mix.is_empty());
+        assert_eq!(mix.label(), "seq+chase+bank");
+        assert_eq!(mix.channel_label(1), "chase");
+        assert!(mix.validate().is_ok());
+        assert_eq!(mix.get(2).unwrap().burst.len, 1);
+        assert!(mix.get(3).is_none());
+    }
+
+    #[test]
+    fn channel_mix_uniform_and_override_strip() {
+        let mut cfg = PatternConfig::seq_read_burst(4, 32);
+        cfg.mapping = Some(MappingPolicy::xor_hash());
+        cfg.sched = Some(SchedKind::Closed);
+        let mix = ChannelMix::uniform(&cfg, 2).unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix.get(0), mix.get(1));
+        let stripped = mix.without_overrides();
+        assert!(stripped.iter().all(|c| c.mapping.is_none() && c.sched.is_none()));
+        // everything else is untouched
+        assert!(stripped.iter().all(|c| c.burst.len == 4 && c.batch_len == 32));
+        assert!(ChannelMix::uniform(&cfg, 0).is_err());
+    }
+
+    #[test]
+    fn channel_mix_validate_flags_the_channel() {
+        let mut bad = PatternConfig::seq_read_burst(4, 32);
+        bad.batch_len = 0;
+        let mix = ChannelMix::new(vec![PatternConfig::seq_read_burst(4, 32), bad]).unwrap();
+        let err = mix.validate().unwrap_err().to_string();
+        assert!(err.contains("channel 1"), "{err}");
     }
 }

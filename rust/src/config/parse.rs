@@ -7,8 +7,8 @@
 //! paths share the conversion functions here.
 
 use super::{
-    AddrMode, BurstKind, ControllerParams, CounterSet, DataPattern, DesignConfig, OpMix,
-    PatternConfig, SchedKind, Signaling, SpeedBin,
+    AddrMode, BurstKind, ChannelMix, ControllerParams, CounterSet, DataPattern, DesignConfig,
+    OpMix, PatternConfig, SchedKind, Signaling, SpeedBin,
 };
 use crate::ddr4::mapping::MappingPolicy;
 use std::collections::BTreeMap;
@@ -471,6 +471,154 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
     s
 }
 
+/// Parse one per-channel workload spec of a heterogeneous mix:
+/// `N:TOKEN[,TOKEN...]` — channel index, a colon, then comma-separated
+/// pattern tokens in the [`parse_pattern_config`] syntax. A bare token
+/// without `=` is shorthand for `ADDR=<token>`, so `0:SEQ,BURST=32` and
+/// `0:ADDR=SEQ,BURST=32` are the same spec. `PHASES=` values are
+/// themselves comma-separated `MODE@TXNS` entries; a chunk with `@` and
+/// no `=` therefore continues the preceding token instead of starting a
+/// new one, so `0:PHASED,PHASES=SEQ@512,RND@512` carries the whole
+/// phase list. This is the syntax of the CLI `--ch` option, the sweep
+/// `--mixes`/`[mixes]` axis and the host protocol's `CHCFG` command.
+pub fn parse_channel_spec(spec: &str) -> Result<(usize, PatternConfig), ConfigError> {
+    let (idx, rest) = spec
+        .split_once(':')
+        .ok_or_else(|| ConfigError::new(format!("channel spec `{spec}`: expected N:TOKENS")))?;
+    let ch: usize = idx
+        .trim()
+        .parse()
+        .map_err(|_| ConfigError::new(format!("channel spec `{spec}`: bad channel `{idx}`")))?;
+    let mut toks: Vec<String> = Vec::new();
+    for chunk in rest.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        if chunk.contains('=') {
+            toks.push(chunk.to_string());
+        } else if chunk.contains('@') {
+            // continuation of a comma-separated PHASES= list
+            match toks.last_mut() {
+                Some(prev) if prev.to_ascii_uppercase().starts_with("PHASES=") => {
+                    prev.push(',');
+                    prev.push_str(chunk);
+                }
+                _ => {
+                    return Err(ConfigError::new(format!(
+                        "channel spec `{spec}`: `{chunk}` continues no PHASES= token"
+                    )));
+                }
+            }
+        } else {
+            toks.push(format!("ADDR={chunk}"));
+        }
+    }
+    if toks.is_empty() {
+        return Err(ConfigError::new(format!("channel spec `{spec}`: no pattern tokens")));
+    }
+    let refs: Vec<&str> = toks.iter().map(String::as_str).collect();
+    let cfg = parse_pattern_config(&refs)
+        .map_err(|e| ConfigError::new(format!("channel {ch}: {e}")))?;
+    Ok((ch, cfg))
+}
+
+/// Build a [`ChannelMix`] from per-channel specs (`N:TOKENS,...` each —
+/// see [`parse_channel_spec`]). Channel indices must be dense from 0 and
+/// free of duplicates so the mix unambiguously covers channels `0..K`.
+pub fn parse_channel_mix(specs: &[&str]) -> Result<ChannelMix, ConfigError> {
+    let mut slots: Vec<Option<PatternConfig>> = Vec::new();
+    for spec in specs {
+        let (ch, cfg) = parse_channel_spec(spec)?;
+        if ch >= 3 {
+            return Err(ConfigError::new(format!(
+                "channel {ch} out of range (mixes cover channels 0..=2)"
+            )));
+        }
+        if slots.len() <= ch {
+            slots.resize(ch + 1, None);
+        }
+        if slots[ch].is_some() {
+            return Err(ConfigError::new(format!("channel {ch} configured twice")));
+        }
+        slots[ch] = Some(cfg);
+    }
+    let mut channels = Vec::with_capacity(slots.len());
+    for (ch, slot) in slots.into_iter().enumerate() {
+        channels.push(slot.ok_or_else(|| {
+            ConfigError::new(format!("channel {ch} missing: mix channels must be dense from 0"))
+        })?);
+    }
+    ChannelMix::new(channels)
+}
+
+/// Parse a heterogeneous mix from config-file text with one `[channel.N]`
+/// section per channel, each holding a `pattern =` key in the
+/// [`parse_pattern_config`] token syntax:
+///
+/// ```text
+/// [channel.0]
+/// pattern = OP=R ADDR=SEQ BURST=32 BATCH=4096
+/// [channel.1]
+/// pattern = OP=R ADDR=CHASE WSET=1m SIG=BLK BURST=1 BATCH=1024
+/// ```
+pub fn parse_mix_file(text: &str) -> Result<ChannelMix, ConfigError> {
+    // parse_kv_text is documented last-wins, but a duplicated
+    // [channel.N] section is the copy-paste typo the CLI (`--ch 0:..
+    // --ch 0:..`) and the CHCFG command both reject — reject it here
+    // too instead of silently dropping the first workload
+    let mut sections: Vec<String> = Vec::new();
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_ascii_lowercase();
+            if sections.contains(&name) {
+                return Err(ConfigError::new(format!(
+                    "section `[{name}]` appears twice (mix channels may be configured once)"
+                )));
+            }
+            sections.push(name);
+        }
+    }
+    let map = parse_kv_text(text)?;
+    let mut specs: Vec<String> = Vec::new();
+    for (key, value) in &map {
+        let Some(rest) = key.strip_prefix("channel.") else {
+            return Err(ConfigError::new(format!(
+                "unknown mix key `{key}` (expected `[channel.N]` sections with `pattern =`)"
+            )));
+        };
+        let Some(ch) = rest.strip_suffix(".pattern") else {
+            return Err(ConfigError::new(format!(
+                "unknown mix key `{key}` (each `[channel.N]` section takes one `pattern =`)"
+            )));
+        };
+        specs.push(format!("{}:{}", ch, value.split_whitespace().collect::<Vec<_>>().join(",")));
+    }
+    if specs.is_empty() {
+        return Err(ConfigError::new("mix file has no `[channel.N]` sections"));
+    }
+    let refs: Vec<&str> = specs.iter().map(String::as_str).collect();
+    parse_channel_mix(&refs)
+}
+
+/// Render one channel's config as a `N:TOKEN,TOKEN,...` channel spec
+/// ([`parse_channel_spec`] reproduces the config — the single place the
+/// "join pattern tokens with commas" rendering lives, shared by
+/// [`format_channel_mix`] and the host protocol's `CHCFG` echo).
+pub fn format_channel_spec(ch: usize, cfg: &PatternConfig) -> String {
+    let echo = format_pattern_config(cfg);
+    format!("{ch}:{}", echo.split_whitespace().collect::<Vec<_>>().join(","))
+}
+
+/// Render a [`ChannelMix`] back to the whitespace-separated channel-spec
+/// syntax (`0:OP=R,ADDR=SEQ,... 1:...`); [`parse_channel_mix`] of the
+/// split output reproduces the mix (same round-trip caveats as
+/// [`format_pattern_config`]).
+pub fn format_channel_mix(mix: &ChannelMix) -> String {
+    mix.iter()
+        .enumerate()
+        .map(|(ch, cfg)| format_channel_spec(ch, cfg))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
 /// Apply `KEY=VALUE` controller-knob tokens on top of `base` — the syntax
 /// of the sweep spec's `[knobs]` section and the CLI `--knobs` axis.
 /// Recognized keys (short aliases in parentheses): `lookahead` (`la`),
@@ -773,6 +921,101 @@ mod tests {
         assert!(parse_controller_tokens(d, &["nope=1"]).is_err());
         assert!(parse_controller_tokens(d, &["lookahead=abc"]).is_err());
         assert!(parse_controller_tokens(d, &["lookahead"]).is_err());
+    }
+
+    #[test]
+    fn channel_spec_parses_bare_modes_and_tokens() {
+        let (ch, cfg) = parse_channel_spec("0:SEQ,BURST=32,BATCH=128").unwrap();
+        assert_eq!(ch, 0);
+        assert_eq!(cfg.addr, AddrMode::Sequential);
+        assert_eq!(cfg.burst.len, 32);
+        assert_eq!(cfg.batch_len, 128);
+        // bare first token is ADDR= shorthand; explicit tokens equal it
+        let (_, explicit) = parse_channel_spec("0:ADDR=SEQ,BURST=32,BATCH=128").unwrap();
+        assert_eq!(cfg, explicit);
+        let (ch, cfg) = parse_channel_spec("2:CHASE,WSET=64k,SIG=BLK,BURST=1").unwrap();
+        assert_eq!(ch, 2);
+        assert!(matches!(cfg.addr, AddrMode::PointerChase { working_set: 65536, .. }));
+        assert!(parse_channel_spec("0:").is_err(), "no tokens");
+        assert!(parse_channel_spec("SEQ").is_err(), "missing N:");
+        assert!(parse_channel_spec("x:SEQ").is_err(), "bad index");
+        assert!(parse_channel_spec("0:NOPE").is_err(), "unknown mode");
+    }
+
+    #[test]
+    fn channel_mix_requires_dense_unique_channels() {
+        let mix = parse_channel_mix(&["1:CHASE,BURST=1", "0:SEQ,BURST=32"]).unwrap();
+        assert_eq!(mix.len(), 2, "order-independent, indexed by channel");
+        assert_eq!(mix.channel_label(0), "seq");
+        assert_eq!(mix.channel_label(1), "chase");
+        assert!(parse_channel_mix(&["1:SEQ"]).is_err(), "channel 0 missing");
+        assert!(parse_channel_mix(&["0:SEQ", "0:RND"]).is_err(), "duplicate channel");
+        assert!(parse_channel_mix(&["0:SEQ", "1:SEQ", "3:SEQ"]).is_err(), "out of range");
+        assert!(parse_channel_mix(&[]).is_err(), "empty");
+    }
+
+    #[test]
+    fn mix_file_sections_parse_and_reject_garbage() {
+        let mix = parse_mix_file(
+            "[channel.0]\npattern = OP=R ADDR=SEQ BURST=32 BATCH=256\n\
+             [channel.1]\npattern = OP=W ADDR=BANK SEED=3 BURST=1 BATCH=128\n",
+        )
+        .unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix.get(0).unwrap().op, OpMix::ReadOnly);
+        assert_eq!(mix.get(1).unwrap().addr, AddrMode::BankConflict { seed: 3 });
+        assert!(parse_mix_file("").is_err(), "no sections");
+        assert!(parse_mix_file("[channel.0]\nfrob = 1\n").is_err(), "unknown section key");
+        assert!(parse_mix_file("stray = 1\n").is_err(), "key outside channel sections");
+        assert!(parse_mix_file("[channel.1]\npattern = OP=R\n").is_err(), "sparse channels");
+        // a duplicated section is a typo, not a last-wins override
+        let dup = "[channel.0]\npattern = OP=R ADDR=SEQ\n[channel.0]\npattern = OP=W ADDR=RND\n";
+        let err = parse_mix_file(dup).unwrap_err().to_string();
+        assert!(err.contains("appears twice"), "{err}");
+    }
+
+    #[test]
+    fn channel_spec_carries_phased_patterns() {
+        // PHASES= values are themselves comma-separated: chunks with `@`
+        // and no `=` continue the PHASES= token instead of starting one
+        let (_, cfg) = parse_channel_spec("0:PHASED,PHASES=SEQ@512,RND@256,BURST=4").unwrap();
+        assert_eq!(
+            cfg.addr,
+            AddrMode::Phased(vec![
+                (AddrMode::Sequential, 512),
+                (AddrMode::Random { seed: 0xD0D0_CAFE }, 256),
+            ])
+        );
+        assert_eq!(cfg.burst.len, 4, "tokens after the phase list still apply");
+        // the format side emits the same embedded-comma spec and round-trips
+        let spec = format_channel_spec(0, &cfg);
+        assert!(spec.contains("PHASES=SEQ@512,RND@256"), "{spec}");
+        let (_, again) = parse_channel_spec(&spec).unwrap();
+        assert_eq!(again, cfg);
+        // ...and so does a [channel.N] mix file using the file syntax
+        let mix = parse_mix_file(
+            "[channel.0]\npattern = OP=R ADDR=PHASED PHASES=SEQ@64,RND@64 BATCH=128\n\
+             [channel.1]\npattern = OP=R ADDR=SEQ BURST=32 BATCH=128\n",
+        )
+        .unwrap();
+        assert!(matches!(mix.get(0).unwrap().addr, AddrMode::Phased(_)));
+        // a dangling phase chunk with nothing to continue is rejected
+        assert!(parse_channel_spec("0:SEQ@512").is_err());
+        assert!(parse_channel_spec("0:SEQ,RND@4").is_err(), "ADDR=SEQ is not a PHASES=");
+    }
+
+    #[test]
+    fn channel_mix_format_roundtrip() {
+        let mix = parse_channel_mix(&[
+            "0:SEQ,BURST=32,BATCH=256",
+            "1:CHASE,WSET=1m,SIG=BLK,BURST=1,BATCH=128",
+            "2:BANK,SEED=5,MAP=xor_hash,SCHED=closed,BATCH=64",
+        ])
+        .unwrap();
+        let text = format_channel_mix(&mix);
+        let specs: Vec<&str> = text.split_whitespace().collect();
+        assert_eq!(parse_channel_mix(&specs).unwrap(), mix, "round-trip through `{text}`");
+        assert!(text.contains("MAP=xor_hash") && text.contains("SCHED=closed"), "{text}");
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //! ```text
 //! INFO                         → OK CHANNELS=3 SPEED=DDR4-1600 ...
 //! CFG <ch> KEY=VALUE ...       → OK CFG <echo>     (see config::parse)
+//! CHCFG <N:TOK,..> ...         → OK CHCFG 0:<echo> 1:<echo>  (per-channel mix)
 //! RUN <ch>                     → OK RUN CH=0 TXNS=4096 CYCLES=...
 //! RUNALL                      → OK RUNALL CHANNELS=3 AGG_GBS=...
+//! RUNMIX                      → OK RUNMIX CHANNELS=3 OK=3 AGG_GBS=... CH0_GBS=...
 //! STATS <ch>                   → OK RD_TXNS=.. RD_GBS=.. WR_GBS=.. ...
 //! PATTERNS                     → OK PATTERNS SEQ RND STRIDE BANK ...
 //! MAPPINGS                     → OK MAPPINGS ROW_COL_BANK ... (MAP= names)
@@ -35,11 +37,28 @@
 //! command-scheduling/page policy live (see
 //! [`crate::controller::sched::SchedKind`]).
 //!
+//! Heterogeneous per-channel workloads configure in one `CHCFG` command
+//! (whitespace-separated `N:TOKENS,...` channel specs — the
+//! [`crate::config::parse_channel_spec`] syntax, so every per-channel
+//! pattern, op mix, `MAP=` and `SCHED=` is reachable) and launch
+//! concurrently with `RUNMIX`, which runs every channel's pending
+//! pattern on parallel threads; a failing channel answers
+//! `CHx=ERR[reason]` (whitespace collapsed to keep the line one token)
+//! while the surviving channels' stats stay readable via `STATS`.
+//! `RUNMIX`'s `AGG_GBS` is the platform aggregate (bytes sum over max
+//! cycles — [`Platform::aggregate`], the same convention as `run` and
+//! the sweep artifacts), *not* `RUNALL`'s sum of per-channel rates: the
+//! two coincide for homogeneous traffic but diverge once channels run
+//! heterogeneous workloads of different durations.
+//!
 //! Errors answer `ERR <reason>`; the session stays open.
 
 use std::io::{BufRead, BufReader, Write};
 
-use crate::config::{format_pattern_config, parse_pattern_config, PatternConfig};
+use crate::config::{
+    format_channel_spec, format_pattern_config, parse_channel_spec, parse_pattern_config,
+    ChannelMix, PatternConfig,
+};
 use crate::platform::Platform;
 use crate::stats::BatchStats;
 
@@ -96,7 +115,8 @@ impl HostController {
         match cmd.as_str() {
             "" => Err("empty command".into()),
             "HELP" => Ok(
-                "COMMANDS: INFO CFG RUN RUNALL STATS PATTERNS MAPPINGS SCHEDS RESET HELP QUIT"
+                "COMMANDS: INFO CFG CHCFG RUN RUNALL RUNMIX STATS PATTERNS MAPPINGS \
+                 SCHEDS RESET HELP QUIT"
                     .into(),
             ),
             "PATTERNS" => {
@@ -140,6 +160,33 @@ impl HostController {
                 self.pending[ch] = cfg;
                 Ok(format!("CFG CH={ch} {echo}"))
             }
+            "CHCFG" => {
+                // one or more N:TOKENS,... channel specs in one command
+                let specs: Vec<&str> = toks.collect();
+                if specs.is_empty() {
+                    return Err("CHCFG needs at least one N:TOKENS,... channel spec".into());
+                }
+                let mut staged = Vec::with_capacity(specs.len());
+                for spec in specs {
+                    let (ch, cfg) = parse_channel_spec(spec).map_err(|e| e.to_string())?;
+                    if ch >= self.platform.channels() {
+                        return Err(format!(
+                            "channel {ch} out of range (design has {})",
+                            self.platform.channels()
+                        ));
+                    }
+                    if staged.iter().any(|(c, _)| *c == ch) {
+                        return Err(format!("channel {ch} configured twice in one CHCFG"));
+                    }
+                    staged.push((ch, cfg));
+                }
+                let mut echos = Vec::with_capacity(staged.len());
+                for (ch, cfg) in staged {
+                    echos.push(format_channel_spec(ch, &cfg));
+                    self.pending[ch] = cfg;
+                }
+                Ok(format!("CHCFG {}", echos.join(" ")))
+            }
             "RUN" => {
                 let ch = self.parse_channel(toks.next())?;
                 let cfg = self.pending[ch].clone();
@@ -162,6 +209,46 @@ impl HostController {
                     self.last[ch] = Some(stats);
                 }
                 Ok(format!("RUNALL CHANNELS={} AGG_GBS={agg:.3}", self.platform.channels()))
+            }
+            "RUNMIX" => {
+                // run every channel's pending pattern concurrently (the
+                // heterogeneous mix executive); surviving channels'
+                // stats stay readable when one fails
+                let mix = ChannelMix::new(self.pending.clone()).map_err(|e| e.to_string())?;
+                let results =
+                    self.platform.run_batch_mix_results(&mix).map_err(|e| e.to_string())?;
+                let mut survivors = Vec::new();
+                let mut cells = Vec::with_capacity(results.len());
+                for (ch, result) in results.into_iter().enumerate() {
+                    match result {
+                        Ok(stats) => {
+                            cells.push(format!("CH{ch}_GBS={:.3}", stats.total_throughput_gbs()));
+                            survivors.push(stats.clone());
+                            self.last[ch] = Some(stats);
+                        }
+                        Err(e) => {
+                            // single-line protocol: collapse the reason's
+                            // whitespace so it stays one token
+                            let msg = e.to_string();
+                            let msg = msg.split_whitespace().collect::<Vec<_>>().join("_");
+                            cells.push(format!("CH{ch}=ERR[{msg}]"));
+                            self.last[ch] = None;
+                        }
+                    }
+                }
+                if survivors.is_empty() {
+                    return Err(format!("every channel failed: {}", cells.join(" ")));
+                }
+                // platform aggregate (bytes sum over max cycles), the
+                // same convention as `run` and the sweep artifacts —
+                // per-rate sums diverge once channels are heterogeneous
+                let agg = Platform::aggregate(&survivors).total_throughput_gbs();
+                Ok(format!(
+                    "RUNMIX CHANNELS={} OK={} AGG_GBS={agg:.3} {}",
+                    self.platform.channels(),
+                    survivors.len(),
+                    cells.join(" ")
+                ))
             }
             "STATS" => {
                 let ch = self.parse_channel(toks.next())?;
@@ -369,6 +456,76 @@ mod tests {
         // echo carries the mode so a host can read back what it set
         let r = h.handle_line("CFG 0 ADDR=BANK SEED=77");
         assert!(r.contains("ADDR=BANK") && r.contains("SEED=77"), "{r}");
+    }
+
+    fn host3() -> HostController {
+        HostController::new(Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_1600)))
+    }
+
+    #[test]
+    fn chcfg_configures_channels_and_runmix_runs_them_concurrently() {
+        let mut h = host3();
+        let r = h.handle_line(
+            "CHCFG 0:SEQ,BURST=32,BATCH=256 1:CHASE,WSET=64k,BURST=1,BATCH=64 \
+             2:BANK,SEED=1,BURST=1,BATCH=64",
+        );
+        assert!(r.starts_with("OK CHCFG 0:"), "{r}");
+        assert!(r.contains("1:OP=R,ADDR=CHASE"), "per-channel echo: {r}");
+        assert!(r.contains("2:OP=R,ADDR=BANK"), "{r}");
+        let r = h.handle_line("RUNMIX");
+        assert!(r.starts_with("OK RUNMIX CHANNELS=3 OK=3"), "{r}");
+        assert!(r.contains("CH0_GBS=") && r.contains("CH2_GBS="), "{r}");
+        // per-channel stats readable afterwards, and they are distinct
+        let s0 = h.handle_line("STATS 0");
+        let s1 = h.handle_line("STATS 1");
+        assert!(s0.contains("RD_TXNS=256"), "{s0}");
+        assert!(s1.contains("RD_TXNS=64"), "{s1}");
+        // partial CHCFG updates only the named channel
+        let r = h.handle_line("CHCFG 1:SEQ,BURST=4,BATCH=32");
+        assert!(r.starts_with("OK CHCFG 1:"), "{r}");
+        let r = h.handle_line("RUNMIX");
+        assert!(r.contains("OK=3"), "{r}");
+        assert!(h.handle_line("STATS 1").contains("RD_TXNS=32"));
+        assert!(h.handle_line("STATS 0").contains("RD_TXNS=256"), "channel 0 kept its cfg");
+    }
+
+    #[test]
+    fn runmix_reports_failed_channel_with_reason_and_spares_survivors() {
+        let mut p = Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_1600));
+        p.inject_channel_panic(1);
+        let mut h = HostController::new(p);
+        let r = h.handle_line(
+            "CHCFG 0:SEQ,BURST=4,BATCH=32 1:SEQ,BURST=4,BATCH=32 2:SEQ,BURST=4,BATCH=32",
+        );
+        assert!(r.starts_with("OK CHCFG"), "{r}");
+        let r = h.handle_line("RUNMIX");
+        assert!(r.starts_with("OK RUNMIX CHANNELS=3 OK=2"), "{r}");
+        assert!(r.contains("CH1=ERR[") && r.contains("panicked"), "reason surfaces: {r}");
+        assert!(h.handle_line("STATS 0").starts_with("OK"), "survivor stats readable");
+        assert!(h.handle_line("STATS 1").starts_with("ERR"), "failed channel has no stats");
+        // the failed channel was reset: the next RUNMIX is fully clean
+        assert!(h.handle_line("RUNMIX").contains("OK=3"));
+    }
+
+    #[test]
+    fn chcfg_rejects_bad_specs() {
+        let mut h = host3();
+        assert!(h.handle_line("CHCFG").starts_with("ERR"), "no specs");
+        assert!(h.handle_line("CHCFG 5:SEQ").starts_with("ERR"), "channel out of range");
+        assert!(h.handle_line("CHCFG 0:SEQ 0:RND").starts_with("ERR"), "duplicate channel");
+        assert!(h.handle_line("CHCFG 0:NOPE").starts_with("ERR"), "unknown mode");
+        assert!(h.handle_line("CHCFG 0:BURST=4000").starts_with("ERR"), "invalid config");
+        // per-channel MAP=/SCHED= are allowed live (unlike in sweeps)
+        let r = h.handle_line("CHCFG 0:SEQ,MAP=xor_hash,SCHED=closed,BATCH=64");
+        assert!(r.starts_with("OK CHCFG"), "{r}");
+        assert!(r.contains("MAP=xor_hash") && r.contains("SCHED=closed"), "{r}");
+        // ...and so are phased patterns (comma-separated PHASES= entries)
+        let r = h.handle_line("CHCFG 1:PHASED,PHASES=SEQ@32,RND@32,BATCH=64");
+        assert!(r.starts_with("OK CHCFG 1:"), "{r}");
+        assert!(r.contains("PHASES=SEQ@32,RND@32"), "{r}");
+        assert!(h.handle_line("RUNMIX").contains("OK=3"));
+        assert!(h.handle_line("HELP").contains("CHCFG"));
+        assert!(h.handle_line("HELP").contains("RUNMIX"));
     }
 
     #[test]

@@ -36,11 +36,15 @@
 //!   TCP server) that configures TGs and collects statistics at run time;
 //!   every pattern-engine mode is selectable live through `CFG`.
 //! - [`platform`] — design-time composition: N channels × data rate ×
-//!   counter set, the batch-run executive, and the
+//!   counter set, the batch-run executive — including the heterogeneous
+//!   per-channel workload engine ([`config::ChannelMix`] /
+//!   `Platform::run_batch_mix`: an independent pattern per channel on
+//!   parallel threads, per-channel error isolation, and the
+//!   solo-vs-co-run `interference_matrix` report) — and the
 //!   [`platform::sweep`] campaign executive that expands cartesian
-//!   (speed × channels × mapping × controller-knob × pattern) grids into
-//!   deduplicated job lists and runs them on a work-stealing thread pool,
-//!   emitting per-job JSON/CSV artifacts.
+//!   (speed × channels × mapping × controller-knob × pattern/mix) grids
+//!   into deduplicated job lists and runs them on a work-stealing thread
+//!   pool, emitting per-job JSON/CSV artifacts.
 //! - [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   artifacts (payload generator, verifier, analytic bandwidth model) and
 //!   executes them from the hot path; Python never runs at benchmark time.

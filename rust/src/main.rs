@@ -10,6 +10,9 @@
 //!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
 //! ddr4bench sweep --maps row_col_bank,xor_hash --knobs lookahead=1,lookahead=8
 //! ddr4bench sweep --scheds fcfs,frfcfs,frfcfs-cap,closed --patterns seq,bank
+//! ddr4bench sweep --mixes "0:SEQ,BURST=32+1:CHASE,WSET=1m"  # heterogeneous axis
+//! ddr4bench run --ch 0:SEQ,BURST=32 --ch 1:CHASE,WSET=1m   # per-channel mix
+//! ddr4bench interference --ch 0:SEQ --ch 1:CHASE --ch 2:BANK # solo-vs-co-run
 //! ddr4bench compare a/BENCH_sweep.json b/BENCH_sweep.json   # cross-sweep deltas
 //! ddr4bench table3 | table4 | fig2 | fig3 | scaling | analysis | modelcheck
 //! ddr4bench serve --addr-bind 127.0.0.1:5557  # host-controller TCP endpoint
@@ -18,9 +21,12 @@
 use anyhow::{anyhow, Result};
 
 use ddr4bench::cli::Cli;
-use ddr4bench::config::{parse_pattern_config, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::config::{
+    parse_channel_mix, parse_mix_file, parse_pattern_config, ChannelMix, DesignConfig,
+    PatternConfig, SpeedBin,
+};
 use ddr4bench::hostctrl::{serve_tcp, HostController};
-use ddr4bench::platform::{sweep, Platform};
+use ddr4bench::platform::{interference_matrix, sweep, Platform};
 use ddr4bench::report::{campaign, compare};
 use ddr4bench::resource;
 use ddr4bench::runtime::XlaRuntime;
@@ -40,6 +46,7 @@ fn cli() -> Cli {
         .command("dse", "design-space exploration (analytic model; XLA-batched if present)")
         .command("trace", "replay a memory-access trace file (see trafficgen::trace)")
         .command("sweep", "parallel campaign sweep (speeds x channels x maps x knobs x patterns)")
+        .command("interference", "solo-vs-co-run channel-interference matrix for a --ch mix")
         .command("compare", "cross-sweep delta report from two or more BENCH_sweep.json files")
         .option("speed", "data rate: 1600|1866|2133|2400 (default 1600)")
         .option("channels", "memory channels 1-3 (default 1); comma list for sweep")
@@ -51,6 +58,8 @@ fn cli() -> Cli {
         .option("phases", "phase list for --addr phased, e.g. SEQ@512,RND@512")
         .option("map", "address mapping: row_col_bank|row_bank_col|bank_row_col|xor_hash|RoBaBgCo")
         .option("sched", "scheduler/page policy: fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive")
+        .multi("ch", "per-channel workload N:TOKENS,.. (repeat per channel; e.g. 0:SEQ,BURST=32)")
+        .option("mix-file", "read the per-channel mix from a [channel.N]-sectioned config file")
         .option("burst", "burst length 1-128 (default 32)")
         .option("btype", "burst type FIXED|INCR|WRAP (default INCR)")
         .option("sig", "signaling NB|BLK|AGR (default NB)")
@@ -64,6 +73,7 @@ fn cli() -> Cli {
         .option("maps", "sweep: comma list of address-mapping policies")
         .option("knobs", "sweep: controller-knob variants, e.g. lookahead=1,lookahead=8+wq=32")
         .option("scheds", "sweep: comma list of scheduler policies, e.g. fcfs,frfcfs-cap,closed")
+        .option("mixes", "sweep: ;-separated mixes of +-joined N:TOKENS channel specs")
         .option("spec", "sweep: read the sweep spec from this config file")
         .option("jobs", "sweep: worker threads (default: available parallelism)")
         .option("out", "sweep: write per-job JSON/CSV artifacts + BENCH_sweep.json here")
@@ -101,6 +111,58 @@ fn pattern_from_args(args: &ddr4bench::cli::Args) -> Result<PatternConfig> {
     }
     let refs: Vec<&str> = toks.iter().map(String::as_str).collect();
     parse_pattern_config(&refs).map_err(|e| anyhow!("{e}"))
+}
+
+/// Build the heterogeneous mix from `--ch` specs or `--mix-file` (None
+/// when neither is given — the homogeneous path; giving both is
+/// ambiguous and rejected).
+fn mix_from_args(args: &ddr4bench::cli::Args) -> Result<Option<ChannelMix>> {
+    let specs = args.get_multi("ch");
+    let file = args.get("mix-file");
+    match (specs.is_empty(), file) {
+        (true, None) => Ok(None),
+        (false, Some(_)) => Err(anyhow!("--ch and --mix-file are mutually exclusive")),
+        (false, None) => {
+            let refs: Vec<&str> = specs.iter().map(String::as_str).collect();
+            Ok(Some(parse_channel_mix(&refs).map_err(|e| anyhow!("{e}"))?))
+        }
+        (true, Some(path)) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+            Ok(Some(parse_mix_file(&text).map_err(|e| anyhow!("{path}: {e}"))?))
+        }
+    }
+}
+
+/// The scalar per-pattern options of `run` — every option whose value
+/// lands in a single [`PatternConfig`] (plus `channels`, which a mix
+/// fixes itself). Registering a new pattern option in [`cli`] means
+/// adding it here too, or it will be silently ignored next to `--ch`.
+const SCALAR_PATTERN_OPTS: [&str; 13] = [
+    "op", "addr", "seed", "stride", "wset", "phases", "map", "sched", "burst", "btype", "sig",
+    "batch", "channels",
+];
+
+/// A mix carries every pattern parameter per channel and fixes the
+/// channel count, so the scalar pattern flags would be silently ignored
+/// next to `--ch`/`--mix-file` — reject the combination instead (used by
+/// both `run` and `interference`).
+fn reject_scalar_pattern_flags(args: &ddr4bench::cli::Args) -> Result<()> {
+    for key in SCALAR_PATTERN_OPTS {
+        if args.get(key).is_some() {
+            return Err(anyhow!(
+                "--{key} conflicts with --ch/--mix-file: put the parameter in the \
+                 per-channel specs instead (e.g. --ch 0:SEQ,BURST=32)"
+            ));
+        }
+    }
+    if args.has_flag("verify") {
+        return Err(anyhow!(
+            "--verify conflicts with --ch/--mix-file: use a VERIFY=1 token in the \
+             per-channel specs instead"
+        ));
+    }
+    Ok(())
 }
 
 fn design_from_args(args: &ddr4bench::cli::Args) -> Result<DesignConfig> {
@@ -144,6 +206,9 @@ fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec>
     if let Some(v) = args.get("scheds") {
         spec.scheds = sweep::parse_sched_list(v)?;
     }
+    if let Some(v) = args.get("mixes") {
+        spec.mixes = sweep::parse_mix_list(v)?;
+    }
     Ok(spec)
 }
 
@@ -173,6 +238,18 @@ fn main() -> Result<()> {
     let scale: f64 = args.parse_or("scale", 1.0).map_err(|e| anyhow!(e))?;
     let csv_path = args.get("csv").map(std::path::PathBuf::from);
 
+    // only `run` and `interference` consume a per-channel mix; anywhere
+    // else --ch/--mix-file would be silently ignored — reject instead
+    // (sweeps take mixes through --mixes / a [mixes] spec section)
+    if !matches!(args.command.as_deref(), Some("run") | Some("interference"))
+        && (!args.get_multi("ch").is_empty() || args.get("mix-file").is_some())
+    {
+        return Err(anyhow!(
+            "--ch/--mix-file only apply to `run` and `interference`; sweep mixes go through \
+             --mixes or a [mixes] spec section"
+        ));
+    }
+
     match args.command.as_deref() {
         None | Some("info") => {
             let d = design_from_args(&args)?;
@@ -197,16 +274,38 @@ fn main() -> Result<()> {
             }
         }
         Some("run") => {
-            let design = design_from_args(&args)?;
-            let cfg = pattern_from_args(&args)?;
+            let mix = mix_from_args(&args)?;
+            let mut design = design_from_args(&args)?;
+            if let Some(mix) = &mix {
+                reject_scalar_pattern_flags(&args)?;
+                // the mix fixes the channel count (one config per channel)
+                design.channels = mix.len();
+                design.validate().map_err(|e| anyhow!("{e}"))?;
+            }
+            let mix = match mix {
+                Some(m) => m,
+                None => ChannelMix::uniform(&pattern_from_args(&args)?, design.channels)
+                    .map_err(|e| anyhow!("{e}"))?,
+            };
             let mut platform = Platform::new(design);
             if let Some(rt) = maybe_runtime(&args)? {
                 platform = platform.with_runtime(rt);
             }
-            let per = platform.run_batch_all(&cfg)?;
-            for (ch, s) in per.iter().enumerate() {
+            let results = platform.run_batch_mix_results(&mix)?;
+            let mut survivors = Vec::new();
+            let mut failed = 0usize;
+            for (ch, result) in results.iter().enumerate() {
+                let label = mix.channel_label(ch);
+                let s = match result {
+                    Ok(s) => s,
+                    Err(e) => {
+                        failed += 1;
+                        println!("ch{ch} [{label}]: ERROR {e}");
+                        continue;
+                    }
+                };
                 println!(
-                    "ch{ch}: rd {:.2} GB/s  wr {:.2} GB/s  total {:.2} GB/s  \
+                    "ch{ch} [{label}]: rd {:.2} GB/s  wr {:.2} GB/s  total {:.2} GB/s  \
                      (rd lat {:.0} ns, wr lat {:.0} ns, refresh stall {} ck, mismatches {})",
                     s.read_throughput_gbs(),
                     s.write_throughput_gbs(),
@@ -217,7 +316,7 @@ fn main() -> Result<()> {
                     s.counters.mismatches
                 );
                 println!(
-                    "ch{ch}: rd p50/p95/p99 {:.0}/{:.0}/{:.0} ns  \
+                    "ch{ch} [{label}]: rd p50/p95/p99 {:.0}/{:.0}/{:.0} ns  \
                      wr p50/p95/p99 {:.0}/{:.0}/{:.0} ns",
                     s.read_latency_pct_ns(50.0),
                     s.read_latency_pct_ns(95.0),
@@ -226,10 +325,36 @@ fn main() -> Result<()> {
                     s.write_latency_pct_ns(95.0),
                     s.write_latency_pct_ns(99.0),
                 );
+                survivors.push(s.clone());
             }
-            if per.len() > 1 {
-                let agg = Platform::aggregate(&per);
+            if survivors.len() > 1 {
+                let agg = Platform::aggregate(&survivors);
                 println!("aggregate: {:.2} GB/s", agg.total_throughput_gbs());
+            }
+            if failed > 0 {
+                return Err(anyhow!(
+                    "{failed} of {} channel(s) failed (surviving channels reported above)",
+                    results.len()
+                ));
+            }
+        }
+        Some("interference") => {
+            let mix = mix_from_args(&args)?
+                .ok_or_else(|| anyhow!("interference requires --ch specs or --mix-file"))?;
+            reject_scalar_pattern_flags(&args)?;
+            let design = design_from_args(&args)?;
+            let workloads: Vec<(String, PatternConfig)> = mix
+                .iter()
+                .enumerate()
+                .map(|(ch, cfg)| (format!("ch{ch}:{}", mix.channel_label(ch)), cfg.clone()))
+                .collect();
+            let m = interference_matrix(&design, &workloads)?;
+            let (bw, lat) = ddr4bench::report::interference_tables(&m);
+            println!("{}", bw.ascii());
+            println!("{}", lat.ascii());
+            if let Some(p) = csv_path {
+                bw.write_csv(&p)?;
+                lat.write_csv(&p.with_extension("p99.csv"))?;
             }
         }
         Some("table3") => {
@@ -373,13 +498,19 @@ fn main() -> Result<()> {
                     // scale the default pool down to avoid oversubscription
                     let par =
                         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-                    let max_ch = spec.channels.iter().copied().max().unwrap_or(1);
+                    let max_ch = spec
+                        .channels
+                        .iter()
+                        .copied()
+                        .chain(spec.mixes.iter().map(|(_, m)| m.len()))
+                        .max()
+                        .unwrap_or(1);
                     (par / max_ch).max(1)
                 }
             };
             println!(
                 "sweep: {} jobs ({} speeds x {} channel counts x {} mappings x {} knob \
-                 profiles x {} scheds x {} patterns) on {} workers",
+                 profiles x {} scheds x {} patterns, + {} mixes) on {} workers",
                 jobs.len(),
                 spec.speeds.len(),
                 spec.channels.len(),
@@ -387,6 +518,7 @@ fn main() -> Result<()> {
                 spec.knobs.len(),
                 spec.scheds.len(),
                 spec.patterns.len(),
+                spec.mixes.len(),
                 workers.min(jobs.len().max(1))
             );
             let outcomes = sweep::run_sweep(jobs, workers)?;

@@ -1,7 +1,8 @@
 //! Campaign sweep executive: expand a cartesian sweep specification
 //! (speed bins × channel counts × address mappings × controller knobs ×
-//! scheduler policies × traffic patterns) into a deduplicated job list
-//! and execute it on a
+//! scheduler policies × traffic patterns, plus heterogeneous per-channel
+//! mixes that bring their own channel count) into a deduplicated job
+//! list and execute it on a
 //! work-stealing thread pool, one isolated [`Platform`] per job, emitting
 //! per-job JSON/CSV artifacts plus a machine-readable summary
 //! (`BENCH_sweep.json` schema; cross-sweep deltas render through
@@ -30,19 +31,22 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
-    parse_controller_tokens, parse_kv_text, parse_pattern_config, ControllerParams, DesignConfig,
-    PatternConfig, SchedKind, SpeedBin,
+    format_channel_mix, parse_channel_mix, parse_controller_tokens, parse_kv_text,
+    parse_pattern_config, ChannelMix, ControllerParams, DesignConfig, PatternConfig, SchedKind,
+    SpeedBin,
 };
 use crate::ddr4::MappingPolicy;
 use crate::platform::Platform;
 use crate::report::Table;
 use crate::stats::BatchStats;
 
-/// Schema identifier stamped into every sweep artifact. `v3` adds the
-/// `sched` axis field and the latency-percentile columns; `v2` (mapping
-/// and knob axes, no percentiles) and `v1` artifacts are still accepted
-/// by [`crate::report::compare`], with missing axis fields defaulted.
-pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v3";
+/// Schema identifier stamped into every sweep artifact. `v4` adds the
+/// heterogeneous-mix axis (`mix` field: the per-channel workload spec,
+/// empty for uniform jobs); `v3` (sched axis + latency percentiles),
+/// `v2` (mapping and knob axes, no percentiles) and `v1` artifacts are
+/// still accepted by [`crate::report::compare`], with missing axis
+/// fields defaulted.
+pub const SWEEP_SCHEMA: &str = "ddr4bench.sweep.v4";
 
 /// A cartesian sweep specification.
 #[derive(Debug, Clone)]
@@ -59,6 +63,10 @@ pub struct SweepSpec {
     pub scheds: Vec<SchedKind>,
     /// Labeled traffic patterns to sweep.
     pub patterns: Vec<(String, PatternConfig)>,
+    /// Labeled heterogeneous channel mixes to sweep. Each mix fixes its
+    /// own channel count (= the number of channels it configures), so
+    /// mix jobs do not multiply with the `channels` axis.
+    pub mixes: Vec<(String, ChannelMix)>,
 }
 
 /// Named pattern preset, by the names the CLI accepts
@@ -101,6 +109,7 @@ impl SweepSpec {
                 .iter()
                 .map(|n| preset(n).expect("builtin preset"))
                 .collect(),
+            mixes: Vec::new(),
         }
     }
 
@@ -117,9 +126,15 @@ impl SweepSpec {
     /// [knobs]
     /// mig  = lookahead=4
     /// deep = lookahead=8 rq=32 wq=32 whi=24 wlo=8
+    /// [mixes]
+    /// hetero = 0:SEQ,BURST=32,BATCH=2048 1:CHASE,WSET=1m,BURST=1,BATCH=1024
     /// ```
     ///
     /// Omitted sections fall back to the [`Self::paper_grid`] values.
+    /// `[mixes]` entries are whitespace-separated `N:TOKENS,...` channel
+    /// specs ([`parse_channel_mix`]); like patterns, their per-channel
+    /// `MAP=`/`SCHED=` overrides are rejected — the `mappings`/`scheds`
+    /// axes stay authoritative over the artifact labels.
     pub fn parse(text: &str) -> Result<Self> {
         let map = parse_kv_text(text).map_err(|e| anyhow!("{e}"))?;
         for key in map.keys() {
@@ -129,10 +144,11 @@ impl SweepSpec {
                 && key != "scheds"
                 && !key.starts_with("patterns.")
                 && !key.starts_with("knobs.")
+                && !key.starts_with("mixes.")
             {
                 bail!(
                     "unknown sweep spec key `{key}` (expected `speeds`, `channels`, \
-                     `mappings`, `scheds`, or `[patterns]`/`[knobs]` entries)"
+                     `mappings`, `scheds`, or `[patterns]`/`[knobs]`/`[mixes]` entries)"
                 );
             }
         }
@@ -193,14 +209,30 @@ impl SweepSpec {
         if !patterns.is_empty() {
             spec.patterns = patterns;
         }
+        let mixes: Vec<(String, ChannelMix)> = map
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix("mixes.").map(|label| (label.to_string(), v.as_str()))
+            })
+            .map(|(label, specs)| {
+                let parts: Vec<&str> = specs.split_whitespace().collect();
+                let mix = parse_channel_mix(&parts).map_err(|e| anyhow!("mix `{label}`: {e}"))?;
+                reject_mix_overrides(&label, &mix)?;
+                Ok((label, mix))
+            })
+            .collect::<Result<_>>()?;
+        spec.mixes = mixes;
         Ok(spec)
     }
 
     /// Expand the cartesian product into a deduplicated, deterministic
     /// job list (duplicate (speed, channels, mapping, knobs, sched,
-    /// pattern) points collapse).
+    /// pattern/mix) points collapse). Heterogeneous mixes expand against
+    /// every axis except `channels` — each mix brings its own channel
+    /// count.
     pub fn expand(&self) -> Vec<SweepJob> {
-        let mut seen: HashSet<(u32, usize, String, String, String, String)> = HashSet::new();
+        let mut seen: HashSet<(u32, usize, String, String, String, String, String)> =
+            HashSet::new();
         let mut jobs = Vec::new();
         for &speed in &self.speeds {
             for &channels in &self.channels {
@@ -215,6 +247,7 @@ impl SweepSpec {
                                     knob.clone(),
                                     sched.name(),
                                     label.clone(),
+                                    String::new(),
                                 );
                                 if !seen.insert(key) {
                                     continue;
@@ -229,8 +262,41 @@ impl SweepSpec {
                                     sched,
                                     label: label.clone(),
                                     cfg: cfg.clone(),
+                                    mix: None,
                                 });
                             }
+                        }
+                    }
+                }
+            }
+            for &mapping in &self.mappings {
+                for (knob, params) in &self.knobs {
+                    for &sched in &self.scheds {
+                        for (label, mix) in &self.mixes {
+                            let key = (
+                                speed.data_rate_mts(),
+                                mix.len(),
+                                mapping.name(),
+                                knob.clone(),
+                                sched.name(),
+                                label.clone(),
+                                format_channel_mix(mix),
+                            );
+                            if !seen.insert(key) {
+                                continue;
+                            }
+                            jobs.push(SweepJob {
+                                id: jobs.len(),
+                                speed,
+                                channels: mix.len(),
+                                mapping,
+                                knob: knob.clone(),
+                                params: *params,
+                                sched,
+                                label: label.clone(),
+                                cfg: mix.get(0).expect("mix covers channel 0").clone(),
+                                mix: Some(mix.clone()),
+                            });
                         }
                     }
                 }
@@ -238,6 +304,54 @@ impl SweepSpec {
         }
         jobs
     }
+}
+
+/// Mixes may not smuggle in per-channel `MAP=`/`SCHED=` overrides inside
+/// a sweep: the `mappings`/`scheds` axes are authoritative and `run_job`
+/// would strip the override anyway, leaving the artifact labels lying
+/// about what ran (same rationale as the pattern-level rejection).
+fn reject_mix_overrides(label: &str, mix: &ChannelMix) -> Result<()> {
+    for (ch, cfg) in mix.iter().enumerate() {
+        if cfg.mapping.is_some() {
+            bail!(
+                "mix `{label}` channel {ch}: MAP= is not allowed in sweep mixes — \
+                 sweep the address mapping via the `mappings` axis instead"
+            );
+        }
+        if cfg.sched.is_some() {
+            bail!(
+                "mix `{label}` channel {ch}: SCHED= is not allowed in sweep mixes — \
+                 sweep the scheduler via the `scheds` axis instead"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Parse a CLI `--mixes` axis: semicolon-separated heterogeneous mixes,
+/// each a `+`-joined list of `N:TOKENS,...` channel specs, e.g.
+/// `0:SEQ,BURST=32+1:CHASE,WSET=1m;0:BANK+1:RND`. Labels derive from the
+/// per-channel address modes (`seq+chase`), de-duplicated with a numeric
+/// suffix when two mixes share one.
+pub fn parse_mix_list(s: &str) -> Result<Vec<(String, ChannelMix)>> {
+    let mut out: Vec<(String, ChannelMix)> = Vec::new();
+    for variant in s.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+        let specs: Vec<&str> = variant.split('+').map(str::trim).collect();
+        let mix = parse_channel_mix(&specs).map_err(|e| anyhow!("--mixes `{variant}`: {e}"))?;
+        let base = mix.label();
+        let mut label = base.clone();
+        let mut n = 2;
+        while out.iter().any(|(l, _)| *l == label) {
+            label = format!("{base}_{n}");
+            n += 1;
+        }
+        reject_mix_overrides(&label, &mix)?;
+        out.push((label, mix));
+    }
+    if out.is_empty() {
+        bail!("--mixes: no mixes given");
+    }
+    Ok(out)
 }
 
 /// Reject knob profiles that cannot instantiate a valid design (watermark
@@ -346,10 +460,14 @@ pub struct SweepJob {
     pub params: ControllerParams,
     /// Scheduler/page policy of the design's controller.
     pub sched: SchedKind,
-    /// Pattern label (artifact naming).
+    /// Pattern/mix label (artifact naming).
     pub label: String,
-    /// The traffic pattern to run.
+    /// The traffic pattern to run (for mix jobs: channel 0's pattern;
+    /// the full mix is in `mix`).
     pub cfg: PatternConfig,
+    /// Heterogeneous per-channel workloads (None = uniform job running
+    /// `cfg` on every channel).
+    pub mix: Option<ChannelMix>,
 }
 
 /// A completed sweep job with its measurements.
@@ -374,13 +492,21 @@ fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
     design.validate().map_err(|e| anyhow!("{e}"))?;
     let mut platform = Platform::new(design);
     // The job's mapping and scheduler axes are authoritative: a stray
-    // pattern-level MAP=/SCHED= override would run a different policy
-    // than the artifact labels claim (SweepSpec::parse rejects them;
-    // this guards programmatic specs too, and keeps the echo truthful).
+    // pattern-level (or per-channel) MAP=/SCHED= override would run a
+    // different policy than the artifact labels claim (SweepSpec::parse
+    // rejects them; this guards programmatic specs too, and keeps the
+    // echo truthful).
     let mut job = job.clone();
     job.cfg.mapping = None;
     job.cfg.sched = None;
-    let per_channel = platform.run_batch_all(&job.cfg)?;
+    if let Some(mix) = &job.mix {
+        job.mix = Some(mix.without_overrides());
+    }
+    let mix = match &job.mix {
+        Some(mix) => mix.clone(),
+        None => ChannelMix::uniform(&job.cfg, job.channels).map_err(|e| anyhow!("{e}"))?,
+    };
+    let per_channel = platform.run_batch_mix(&mix)?;
     let agg = Platform::aggregate(&per_channel);
     Ok(SweepOutcome { job, per_channel, agg, wall_ms: t0.elapsed().as_secs_f64() * 1e3 })
 }
@@ -496,6 +622,7 @@ pub fn job_json(o: &SweepOutcome) -> String {
             "  \"mapping\": \"{mapping}\",\n",
             "  \"knobs\": \"{knob}\",\n",
             "  \"sched\": \"{sched}\",\n",
+            "  \"mix\": \"{mix}\",\n",
             "  \"cfg\": \"{cfg}\",\n",
             "  \"rd_gbs\": {rd:.6},\n",
             "  \"wr_gbs\": {wr:.6},\n",
@@ -525,6 +652,7 @@ pub fn job_json(o: &SweepOutcome) -> String {
         mapping = json_escape(&o.job.mapping.name()),
         knob = json_escape(&o.job.knob),
         sched = json_escape(&o.job.sched.name()),
+        mix = json_escape(&o.job.mix.as_ref().map(format_channel_mix).unwrap_or_default()),
         cfg = json_escape(&crate::config::format_pattern_config(&o.job.cfg)),
         rd = o.agg.read_throughput_gbs(),
         wr = o.agg.write_throughput_gbs(),
@@ -546,14 +674,17 @@ pub fn job_json(o: &SweepOutcome) -> String {
     )
 }
 
-/// Render one outcome as a single-row CSV (header + row).
+/// Render one outcome as a single-row CSV (header + row). Every
+/// free-form string column — pattern/mix labels, mapping, knob profile,
+/// sched, the mix spec — passes through [`csv_escape`]: per-channel mix
+/// specs and labels can legitimately contain commas.
 pub fn job_csv(o: &SweepOutcome) -> String {
     format!(
-        "id,speed,data_rate_mts,channels,pattern,mapping,knobs,sched,rd_gbs,wr_gbs,total_gbs,\
-         rd_lat_ns,wr_lat_ns,rd_p50_ns,rd_p95_ns,rd_p99_ns,wr_p50_ns,wr_p95_ns,wr_p99_ns,\
-         refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
-         {},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},\
-         {:.3},{},{},{:.3},{:.4},{:.3}\n",
+        "id,speed,data_rate_mts,channels,pattern,mapping,knobs,sched,mix,rd_gbs,wr_gbs,\
+         total_gbs,rd_lat_ns,wr_lat_ns,rd_p50_ns,rd_p95_ns,rd_p99_ns,wr_p50_ns,wr_p95_ns,\
+         wr_p99_ns,refresh_stall_ck,mismatches,energy_nj,pj_per_bit,wall_ms\n\
+         {},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},\
+         {:.3},{:.3},{},{},{:.3},{:.4},{:.3}\n",
         o.job.id,
         o.job.speed,
         o.job.speed.data_rate_mts(),
@@ -562,6 +693,7 @@ pub fn job_csv(o: &SweepOutcome) -> String {
         csv_escape(&o.job.mapping.name()),
         csv_escape(&o.job.knob),
         csv_escape(&o.job.sched.name()),
+        csv_escape(&o.job.mix.as_ref().map(format_channel_mix).unwrap_or_default()),
         o.agg.read_throughput_gbs(),
         o.agg.write_throughput_gbs(),
         o.agg.total_throughput_gbs(),
@@ -864,11 +996,12 @@ mod tests {
         spec.patterns[0].1.batch_len = 32;
         let outcomes = run_sweep(spec.expand(), 1).unwrap();
         let j = job_json(&outcomes[0]);
-        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v3\""));
+        assert!(j.contains("\"schema\": \"ddr4bench.sweep.v4\""));
         assert!(j.contains("\"pattern\": \"bank\""));
         assert!(j.contains("\"mapping\": \"row_col_bank\""));
         assert!(j.contains("\"knobs\": \"mig\""));
         assert!(j.contains("\"sched\": \"frfcfs\""));
+        assert!(j.contains("\"mix\": \"\""), "uniform jobs carry an empty mix: {j}");
         assert!(j.contains("\"total_gbs\""));
         assert!(j.contains("\"rd_p99_ns\""), "percentiles reach the artifact: {j}");
         let c = job_csv(&outcomes[0]);
@@ -884,6 +1017,114 @@ mod tests {
     fn json_escape_controls_and_quotes() {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
         assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    fn mini_mix() -> ChannelMix {
+        parse_channel_mix(&["0:SEQ,BURST=32,BATCH=64", "1:CHASE,WSET=64k,BURST=1,BATCH=32"])
+            .unwrap()
+    }
+
+    #[test]
+    fn mixes_axis_expands_with_own_channel_count() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600, SpeedBin::Ddr4_2400];
+        spec.channels = vec![1, 2, 3];
+        spec.patterns = vec![preset("seq").unwrap()];
+        spec.mixes = vec![("hetero".to_string(), mini_mix())];
+        let jobs = spec.expand();
+        // 2 speeds x (3 channel counts x 1 pattern + 1 mix): mixes do NOT
+        // multiply with the channels axis
+        assert_eq!(jobs.len(), 2 * (3 + 1));
+        let mix_jobs: Vec<_> = jobs.iter().filter(|j| j.mix.is_some()).collect();
+        assert_eq!(mix_jobs.len(), 2);
+        for j in &mix_jobs {
+            assert_eq!(j.channels, 2, "mix fixes its own channel count");
+            assert_eq!(j.label, "hetero");
+        }
+        // duplicate mixes collapse
+        spec.mixes.push(("hetero".to_string(), mini_mix()));
+        assert_eq!(spec.expand().len(), jobs.len());
+    }
+
+    #[test]
+    fn mix_jobs_run_and_emit_v4_artifacts() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("seq").unwrap()];
+        spec.patterns[0].1.batch_len = 32;
+        spec.mixes = vec![("hetero".to_string(), mini_mix())];
+        let outcomes = run_sweep(spec.expand(), 2).unwrap();
+        let mix_outcome = outcomes.iter().find(|o| o.job.mix.is_some()).unwrap();
+        assert_eq!(mix_outcome.per_channel.len(), 2);
+        assert_eq!(mix_outcome.per_channel[0].counters.rd_txns, 64, "seq channel");
+        assert_eq!(mix_outcome.per_channel[1].counters.rd_txns, 32, "chase channel");
+        let j = job_json(mix_outcome);
+        assert!(j.contains("\"mix\": \"0:"), "mix spec reaches the artifact: {j}");
+        assert!(j.contains("\"channels\": 2"), "{j}");
+        let c = job_csv(mix_outcome);
+        assert!(c.contains("\"0:"), "comma-bearing mix spec is quoted in CSV: {c}");
+    }
+
+    #[test]
+    fn spec_and_cli_mixes_parse_and_reject_overrides() {
+        let spec = SweepSpec::parse(
+            "speeds = 1600\n[mixes]\nhetero = 0:SEQ,BURST=32,BATCH=64 \
+             1:BANK,SEED=2,BURST=1,BATCH=32\n",
+        )
+        .unwrap();
+        assert_eq!(spec.mixes.len(), 1);
+        assert_eq!(spec.mixes[0].0, "hetero");
+        assert_eq!(spec.mixes[0].1.len(), 2);
+        // per-channel MAP=/SCHED= would shadow the axes — rejected
+        assert!(SweepSpec::parse("[mixes]\nx = 0:SEQ 1:RND,MAP=xor_hash\n").is_err());
+        assert!(SweepSpec::parse("[mixes]\nx = 0:SEQ,SCHED=fcfs 1:RND\n").is_err());
+        assert!(SweepSpec::parse("[mixes]\nx = 1:SEQ\n").is_err(), "sparse channels");
+        // CLI --mixes: ;-separated mixes of +-joined channel specs
+        let mixes =
+            parse_mix_list("0:SEQ,BURST=32+1:CHASE,WSET=64k;0:SEQ+1:CHASE,WSET=1m").unwrap();
+        assert_eq!(mixes.len(), 2);
+        assert_eq!(mixes[0].0, "seq+chase");
+        assert_eq!(mixes[1].0, "seq+chase_2", "label collision gets a suffix");
+        assert!(parse_mix_list("0:SEQ+1:RND,SCHED=closed").is_err());
+        assert!(parse_mix_list("").is_err());
+        assert!(parse_mix_list("0:NOPE").is_err());
+    }
+
+    #[test]
+    fn job_csv_escapes_every_string_column() {
+        // labels with commas and quotes must not shift CSV columns once
+        // per-channel mixes are labeled
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.knobs = vec![("mig,\"deep\"".to_string(), ControllerParams::default())];
+        spec.patterns = vec![("a,b\"c".to_string(), {
+            let mut p = preset("seq").unwrap().1;
+            p.batch_len = 16;
+            p
+        })];
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        let c = job_csv(&outcomes[0]);
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].contains("\"a,b\"\"c\""), "label quoted+doubled: {}", lines[1]);
+        assert!(lines[1].contains("\"mig,\"\"deep\"\"\""), "knob quoted: {}", lines[1]);
+        // parse the row with a minimal quote-aware splitter: the column
+        // count must match the header exactly
+        let split = |line: &str| {
+            let mut fields = 1;
+            let mut in_quotes = false;
+            for ch in line.chars() {
+                match ch {
+                    '"' => in_quotes = !in_quotes,
+                    ',' if !in_quotes => fields += 1,
+                    _ => {}
+                }
+            }
+            fields
+        };
+        assert_eq!(split(lines[0]), split(lines[1]), "column counts agree");
     }
 
     #[test]

@@ -1,11 +1,11 @@
 //! Cross-sweep comparison reports (`ddr4bench compare`).
 //!
 //! Loads several `BENCH_sweep.json` campaign summaries (the current
-//! `ddr4bench.sweep.v3` schema plus the older `v2` — which predates the
-//! scheduler axis and the latency percentiles — and `v1`, which also
-//! predates the mapping/knob axes), matches jobs across files by their
-//! axis key (data rate, channels, pattern, mapping, knobs, sched), and
-//! renders:
+//! `ddr4bench.sweep.v4` schema plus the older `v3` — which predates the
+//! heterogeneous-mix axis — `v2` — which predates the scheduler axis and
+//! the latency percentiles — and `v1`, which also predates the
+//! mapping/knob axes), matches jobs across files by their axis key (data
+//! rate, channels, pattern, mapping, knobs, sched, mix), and renders:
 //!
 //! - a **delta table** — per job point, the first file's throughput as
 //!   the baseline and every other file's absolute value plus percentage
@@ -248,6 +248,9 @@ pub struct SweepRecord {
     pub knobs: String,
     /// Scheduler/page-policy name (v1/v2 files default to `frfcfs`).
     pub sched: String,
+    /// Heterogeneous per-channel mix spec (empty for uniform jobs and
+    /// for pre-v4 files).
+    pub mix: String,
     /// Aggregate throughput of the job.
     pub total_gbs: f64,
     /// Read-latency p99 in nanoseconds (None before schema v3).
@@ -255,24 +258,35 @@ pub struct SweepRecord {
 }
 
 impl SweepRecord {
-    /// The cross-file matching key.
-    fn key(&self) -> (u32, u64, String, String, String, String) {
+    /// The cross-file matching key. For heterogeneous jobs the mix spec
+    /// is authoritative and the pattern label is dropped from the key:
+    /// auto-generated mix labels can carry invocation-dependent collision
+    /// suffixes (`seq+chase_2`), and keying on them would stop the same
+    /// mix from matching itself across two sweeps.
+    fn key(&self) -> (u32, u64, String, String, String, String, String) {
+        let pattern = if self.mix.is_empty() { self.pattern.clone() } else { String::new() };
         (
             self.data_rate_mts,
             self.channels,
-            self.pattern.clone(),
+            pattern,
             self.mapping.clone(),
             self.knobs.clone(),
             self.sched.clone(),
+            self.mix.clone(),
         )
     }
 
-    /// Human-readable key ("1600MT/1ch/bank/row_col_bank/mig/frfcfs").
+    /// Human-readable key ("1600MT/1ch/bank/row_col_bank/mig/frfcfs");
+    /// heterogeneous jobs append their mix spec.
     fn key_label(&self) -> String {
-        format!(
+        let mut s = format!(
             "{}MT/{}ch/{}/{}/{}/{}",
             self.data_rate_mts, self.channels, self.pattern, self.mapping, self.knobs, self.sched
-        )
+        );
+        if !self.mix.is_empty() {
+            s.push_str(&format!("/[{}]", self.mix));
+        }
+        s
     }
 }
 
@@ -288,7 +302,10 @@ pub struct SweepFile {
 }
 
 impl SweepFile {
-    fn find(&self, key: &(u32, u64, String, String, String, String)) -> Option<&SweepRecord> {
+    fn find(
+        &self,
+        key: &(u32, u64, String, String, String, String, String),
+    ) -> Option<&SweepRecord> {
         self.records.iter().find(|r| &r.key() == key)
     }
 }
@@ -324,6 +341,7 @@ pub fn parse_summary(text: &str, label: &str) -> Result<SweepFile> {
             mapping: str_of("mapping", "row_col_bank"),
             knobs: str_of("knobs", "mig"),
             sched: str_of("sched", "frfcfs"),
+            mix: str_of("mix", ""),
             total_gbs: num_of("total_gbs")?,
             rd_p99_ns: job.get("rd_p99_ns").and_then(Json::as_f64),
         });
@@ -369,7 +387,7 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
 
     // ordered union of job keys: baseline order first, then new keys in
     // the order later files introduce them
-    let mut keys: Vec<(u32, u64, String, String, String, String)> = Vec::new();
+    let mut keys: Vec<(u32, u64, String, String, String, String, String)> = Vec::new();
     for f in files {
         for r in &f.records {
             if !keys.contains(&r.key()) {
@@ -397,10 +415,20 @@ pub fn compare(files: &[SweepFile], threshold_pct: f64) -> CompareReport {
 
     let mut regressions = Vec::new();
     for key in &keys {
+        // mix jobs key on the spec, not the label — display whichever
+        // label a file actually carries for the point
+        let pattern_cell = if key.2.is_empty() && !key.6.is_empty() {
+            files
+                .iter()
+                .find_map(|f| f.find(key).map(|r| r.pattern.clone()))
+                .unwrap_or_default()
+        } else {
+            key.2.clone()
+        };
         let mut cells = vec![
             key.0.to_string(),
             key.1.to_string(),
-            key.2.clone(),
+            pattern_cell,
             key.3.clone(),
             key.4.clone(),
             key.5.clone(),
@@ -607,6 +635,40 @@ mod tests {
         assert!(ascii.contains("fcfs"), "{ascii}");
         assert!(ascii.contains("+50.0"), "p99 delta rendered: {ascii}");
         assert!(rep.regressions.is_empty(), "p99 shifts alone are not regressions");
+    }
+
+    #[test]
+    fn v4_mix_field_distinguishes_jobs_and_defaults_empty() {
+        // two jobs identical on every axis except the mix spec must stay
+        // distinct job points; pre-v4 records default to no mix
+        let text = "{\"schema\": \"ddr4bench.sweep.v4\", \"source\": \"test\", \"jobs\": [\
+                    {\"data_rate_mts\": 1600, \"channels\": 2, \"pattern\": \"hetero\", \
+                     \"mix\": \"0:OP=R,ADDR=SEQ 1:OP=R,ADDR=CHASE\", \"total_gbs\": 6.5}, \
+                    {\"data_rate_mts\": 1600, \"channels\": 2, \"pattern\": \"hetero\", \
+                     \"mix\": \"0:OP=R,ADDR=SEQ 1:OP=R,ADDR=BANK\", \"total_gbs\": 6.8}]}";
+        let f = parse_summary(text, "mixes").unwrap();
+        assert_eq!(f.records.len(), 2);
+        assert_ne!(f.records[0].key(), f.records[1].key(), "mix is part of the key");
+        assert!(f.records[0].key_label().contains("[0:OP=R,ADDR=SEQ"), "mix in the label");
+        let rep = compare(&[f.clone(), f], 2.0);
+        assert_eq!(rep.delta.rows.len(), 2, "mix jobs do not collapse");
+        assert!(rep.delta.ascii().contains("hetero"), "label still displayed");
+        // the label is NOT part of a mix job's key: the same spec under a
+        // collision-suffixed auto label still matches itself across files
+        let a_text = "{\"schema\": \"ddr4bench.sweep.v4\", \"source\": \"t\", \"jobs\": [\
+                      {\"data_rate_mts\": 1600, \"channels\": 2, \"pattern\": \"seq+chase_2\", \
+                       \"mix\": \"0:OP=R,ADDR=SEQ 1:OP=R,ADDR=CHASE\", \"total_gbs\": 6.0}]}";
+        let b_text = "{\"schema\": \"ddr4bench.sweep.v4\", \"source\": \"t\", \"jobs\": [\
+                      {\"data_rate_mts\": 1600, \"channels\": 2, \"pattern\": \"seq+chase\", \
+                       \"mix\": \"0:OP=R,ADDR=SEQ 1:OP=R,ADDR=CHASE\", \"total_gbs\": 3.0}]}";
+        let a = parse_summary(a_text, "a").unwrap();
+        let b = parse_summary(b_text, "b").unwrap();
+        let rep = compare(&[a, b], 2.0);
+        assert_eq!(rep.delta.rows.len(), 1, "same spec matches despite differing labels");
+        assert_eq!(rep.regressions.len(), 1, "-50% regression caught: {:?}", rep.regressions);
+        // v3 records (no mix field) load with the empty default
+        let v3 = summary("old", &[("DDR4-1600", 1600, 1, "seq", "row_col_bank", "mig", 6.0)]);
+        assert_eq!(v3.records[0].mix, "");
     }
 
     #[test]

@@ -5,10 +5,14 @@
 //! `examples/paper_campaign.rs` and the `cargo bench` targets so the
 //! numbers always come from one code path); [`compare`] loads several
 //! `BENCH_sweep.json` campaign summaries and renders cross-sweep delta
-//! tables (the `ddr4bench compare` subcommand).
+//! tables (the `ddr4bench compare` subcommand);
+//! [`interference_tables`] renders the solo-vs-co-run channel
+//! interference matrix (the `ddr4bench interference` subcommand).
 
 pub mod campaign;
 pub mod compare;
+
+use crate::platform::InterferenceMatrix;
 
 /// A rendered results table.
 #[derive(Debug, Clone)]
@@ -90,6 +94,55 @@ impl Table {
     pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.csv())
     }
+}
+
+/// Percentage delta of `co` against `solo` (`+0.0%` when solo is zero —
+/// nothing to degrade).
+fn delta_pct(solo: f64, co: f64) -> f64 {
+    if solo.abs() > f64::EPSILON {
+        (co - solo) / solo * 100.0
+    } else {
+        0.0
+    }
+}
+
+/// Render an [`InterferenceMatrix`] as two `compare`-style delta tables:
+/// per-pair total bandwidth and p99 latency under co-scheduling, each
+/// cell annotated with its percentage degradation against the workload's
+/// solo run. Rows are the measured workload, columns its co-runner.
+pub fn interference_tables(m: &InterferenceMatrix) -> (Table, Table) {
+    let mut headers: Vec<String> = vec!["Workload".into(), "Solo".into()];
+    for label in &m.labels {
+        headers.push(format!("vs {label}"));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut bw = Table::new(
+        "Channel-interference matrix: total GB/s co-run (delta% vs solo)",
+        &header_refs,
+    );
+    let mut lat = Table::new(
+        "Channel-interference matrix: p99 latency ns co-run (delta% vs solo)",
+        &header_refs,
+    );
+    for (i, label) in m.labels.iter().enumerate() {
+        let mut bw_cells = vec![label.clone(), format!("{:.3}", m.solo_gbs[i])];
+        let mut lat_cells = vec![label.clone(), format!("{:.0}", m.solo_p99_ns[i])];
+        for j in 0..m.labels.len() {
+            bw_cells.push(format!(
+                "{:.3} ({:+.1}%)",
+                m.co_gbs[i][j],
+                delta_pct(m.solo_gbs[i], m.co_gbs[i][j])
+            ));
+            lat_cells.push(format!(
+                "{:.0} ({:+.1}%)",
+                m.co_p99_ns[i][j],
+                delta_pct(m.solo_p99_ns[i], m.co_p99_ns[i][j])
+            ));
+        }
+        bw.row(bw_cells);
+        lat.row(lat_cells);
+    }
+    (bw, lat)
 }
 
 /// A figure data series: (x, y) points with a label — the reproduction of
@@ -221,5 +274,34 @@ mod tests {
         f.push("a", vec![(1.0, 1.0), (2.0, 2.0)]);
         let a = f.ascii();
         assert!(a.contains("##"));
+    }
+
+    #[test]
+    fn interference_tables_render_deltas() {
+        let m = InterferenceMatrix {
+            labels: vec!["seq".into(), "bank".into()],
+            solo_gbs: vec![6.0, 0.5],
+            solo_p99_ns: vec![200.0, 2000.0],
+            co_gbs: vec![vec![6.0, 3.0], vec![0.5, 0.4]],
+            co_p99_ns: vec![vec![200.0, 400.0], vec![2000.0, 2500.0]],
+        };
+        let (bw, lat) = interference_tables(&m);
+        assert_eq!(bw.rows.len(), 2);
+        let a = bw.ascii();
+        assert!(a.contains("vs bank"), "{a}");
+        assert!(a.contains("3.000 (-50.0%)"), "bandwidth degradation cell: {a}");
+        assert!(a.contains("6.000 (+0.0%)"), "self pair unchanged: {a}");
+        let l = lat.ascii();
+        assert!(l.contains("400 (+100.0%)"), "p99 inflation cell: {l}");
+        // zero-solo guard: no NaN/inf in the rendering
+        let z = InterferenceMatrix {
+            labels: vec!["a".into(), "b".into()],
+            solo_gbs: vec![0.0, 1.0],
+            solo_p99_ns: vec![0.0, 1.0],
+            co_gbs: vec![vec![0.0, 0.0], vec![1.0, 1.0]],
+            co_p99_ns: vec![vec![0.0, 0.0], vec![1.0, 1.0]],
+        };
+        let (bw, _) = interference_tables(&z);
+        assert!(!bw.ascii().contains("NaN"), "{}", bw.ascii());
     }
 }

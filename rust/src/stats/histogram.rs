@@ -59,8 +59,14 @@ impl LatencyHistogram {
         (self.count > 0).then_some(self.max)
     }
 
-    /// Approximate percentile (0..=100) from the bucket boundaries: returns
-    /// the upper bound of the bucket containing the percentile.
+    /// Approximate percentile (0..=100) from the bucket boundaries:
+    /// returns the upper bound of the bucket containing the percentile,
+    /// saturated to the recorded maximum. The saturation matters twice:
+    /// a bucket's nominal upper bound can overstate the largest sample
+    /// actually recorded in it, and the overflow bucket (samples at or
+    /// above `2^31`, which all land in bucket 31) has no meaningful
+    /// upper bound at all — its nominal `2^32` is a stale boundary that
+    /// can *understate* the real tail by orders of magnitude.
     pub fn percentile(&self, p: f64) -> Option<u64> {
         if self.count == 0 {
             return None;
@@ -70,7 +76,10 @@ impl LatencyHistogram {
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
             if seen >= target {
-                return Some(1u64 << (i + 1));
+                // the overflow bucket is unbounded: report the recorded
+                // max, not the stale 2^32 boundary
+                let bound = if i == 31 { self.max } else { 1u64 << (i + 1) };
+                return Some(bound.min(self.max));
             }
         }
         Some(self.max)
@@ -170,5 +179,39 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 1);
         assert_eq!(h.max(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn percentile_saturates_to_recorded_max() {
+        // the bucket upper bound can overstate the real tail: 100
+        // samples of 100 all land in [64,127], whose nominal bound 128
+        // exceeds every recorded value
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(100);
+        }
+        assert_eq!(h.percentile(99.0), Some(100), "saturated to max, not the 128 bound");
+        assert_eq!(h.percentile(50.0), Some(100));
+    }
+
+    #[test]
+    fn percentile_overflow_bucket_reports_max_not_stale_bound() {
+        // regression at the overflow edge: samples >= 2^31 all share
+        // bucket 31, whose nominal 2^32 bound *understates* the tail —
+        // p99 must saturate to the recorded max instead
+        let mut h = LatencyHistogram::new();
+        h.record(10);
+        let huge = 1u64 << 40;
+        for _ in 0..99 {
+            h.record(huge);
+        }
+        assert_eq!(h.percentile(99.0), Some(huge), "not the stale 2^32 bucket bound");
+        assert_eq!(h.percentile(100.0), Some(huge));
+        // when the recorded max lies above a non-overflow bucket's bound,
+        // that nominal bound is kept (it does not overstate anything)
+        let mut h = LatencyHistogram::new();
+        h.record(1u64 << 30); // bucket 30: [2^30, 2^31)
+        h.record(1u64 << 40); // overflow bucket holds the max
+        assert_eq!(h.percentile(50.0), Some(1u64 << 31), "nominal bound below max is kept");
     }
 }

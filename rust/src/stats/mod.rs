@@ -116,8 +116,9 @@ impl BatchStats {
         self.counters.wr_latency.mean() * self.axi_ns()
     }
 
-    /// Read-latency percentile in nanoseconds (log2-bucket upper bound —
-    /// see [`LatencyHistogram::percentile`]; 0.0 when no reads ran).
+    /// Read-latency percentile in nanoseconds (log2-bucket upper bound,
+    /// saturated to the recorded maximum — see
+    /// [`LatencyHistogram::percentile`]; 0.0 when no reads ran).
     pub fn read_latency_pct_ns(&self, p: f64) -> f64 {
         self.counters.rd_latency.percentile(p).map(|c| c as f64 * self.axi_ns()).unwrap_or(0.0)
     }
@@ -215,6 +216,21 @@ mod tests {
         // AXI cycle at DDR4-1600 is 5 ns: bucket bounds scale by it
         assert_eq!(p50 % 5.0, 0.0);
         assert_eq!(s.write_latency_pct_ns(99.0), 0.0, "no writes ran");
+    }
+
+    #[test]
+    fn latency_percentiles_saturate_to_recorded_max() {
+        // the overflow edge in physical units: a pathological sample far
+        // above the top histogram bucket must surface as itself, not as
+        // the stale 2^32-cycle bucket bound
+        let mut s = stats(0, 1000, SpeedBin::Ddr4_1600);
+        let huge = 1u64 << 40;
+        s.counters.rd_latency.record(10);
+        for _ in 0..99 {
+            s.counters.rd_latency.record(huge);
+        }
+        let p99 = s.read_latency_pct_ns(99.0);
+        assert!((p99 - huge as f64 * 5.0).abs() < 1e-3, "p99 {p99} vs max {}", huge * 5);
     }
 
     #[test]

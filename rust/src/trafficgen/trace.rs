@@ -13,7 +13,10 @@
 //! ```
 //!
 //! Replay maps each record onto one AXI transaction (INCR burst of the
-//! recorded length, clamped to 1–128) and runs through the exact same
+//! recorded length). Burst lengths are *validated* to the AXI4 range
+//! 1–128 — an out-of-range record is rejected with a line-numbered
+//! error, never silently clamped, so a malformed trace cannot replay as
+//! different traffic than it describes — and run through the exact same
 //! platform executive as the synthetic patterns.
 
 use anyhow::{bail, Context, Result};
@@ -56,7 +59,11 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>> {
             Some(b) => b.parse().with_context(|| format!("line {}: bad beats `{b}`", lineno + 1))?,
         };
         if beats == 0 || beats > 128 {
-            bail!("line {}: beats {beats} outside 1..=128", lineno + 1);
+            bail!(
+                "line {}: burst length {beats} outside the AXI4 range 1..=128 \
+                 (records are validated, not clamped)",
+                lineno + 1
+            );
         }
         out.push(TraceRecord { is_write, addr, beats });
     }
@@ -172,6 +179,22 @@ mod tests {
         assert!(parse_trace("R zz 1").is_err());
         assert!(parse_trace("R 0 200").is_err());
         assert!(parse_trace("R").is_err());
+    }
+
+    #[test]
+    fn burst_length_validated_not_clamped() {
+        // in-range boundaries replay as written...
+        let t = parse_trace("R 0 1\nW 64 128\n").unwrap();
+        assert_eq!(t[0].beats, 1);
+        assert_eq!(t[1].beats, 128);
+        // ...out-of-range records are rejected with a line-numbered
+        // error, matching the module doc (no silent clamping)
+        for (trace, line) in [("R 0 0", "line 1"), ("R 0 1\nR 64 129", "line 2")] {
+            let err = parse_trace(trace).unwrap_err().to_string();
+            assert!(err.contains(line), "{err}");
+            assert!(err.contains("1..=128"), "{err}");
+            assert!(err.contains("not clamped"), "{err}");
+        }
     }
 
     #[test]

@@ -830,3 +830,55 @@ fn prop_verify_counts_exact_faults() {
         },
     );
 }
+
+#[test]
+fn prop_channel_mix_isolated_from_neighbours() {
+    use ddr4bench::config::ChannelMix;
+    // Determinism + isolation invariant of the heterogeneous workload
+    // engine: channels share no state, so every channel of a ChannelMix
+    // must produce stats bit-identical to running its config solo on a
+    // 1-channel design of the same speed.
+    check(
+        "heterogeneous mix channels match their solo runs",
+        10,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = SplitMix64::new(seed);
+            let k = rng.range_inclusive(1, 3) as usize;
+            let mut cfgs = Vec::with_capacity(k);
+            for _ in 0..k {
+                let burst = [1u32, 4, 32][rng.below(3) as usize];
+                let batch = 16 + rng.below(32) as u32;
+                let mut cfg = match rng.below(5) {
+                    0 => PatternConfig::seq_read_burst(burst, batch),
+                    1 => PatternConfig::rnd_read_burst(burst, batch, rng.next_u64()),
+                    2 => PatternConfig::strided_read(4096 + rng.below(64) * 64, burst, batch),
+                    3 => PatternConfig::bank_conflict_read(burst, batch, rng.next_u64()),
+                    _ => PatternConfig::pointer_chase_read(1 << 20, batch, rng.next_u64()),
+                };
+                if rng.percent(30) {
+                    cfg.op = OpMix::Mixed { read_pct: rng.below(101) as u32 };
+                }
+                cfgs.push(cfg);
+            }
+            let mix = ChannelMix::new(cfgs.clone()).map_err(|e| e.to_string())?;
+            let mut platform = Platform::new(DesignConfig::with_channels(k, SpeedBin::Ddr4_1600));
+            let per = platform.run_batch_mix(&mix).map_err(|e| e.to_string())?;
+            if per.len() != k {
+                return Err(format!("{} stats for {k} channels", per.len()));
+            }
+            for (ch, cfg) in cfgs.iter().enumerate() {
+                let mut solo = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+                let s = solo.run_batch(0, cfg).map_err(|e| e.to_string())?;
+                if s.counters != per[ch].counters {
+                    return Err(format!(
+                        "channel {ch} ({cfg:?}) diverges from its solo run:\n  mix  \
+                         {:?}\n  solo {:?}",
+                        per[ch].counters, s.counters
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

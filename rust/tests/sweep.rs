@@ -7,8 +7,8 @@ use std::collections::HashSet;
 use ddr4bench::config::{PatternConfig, SpeedBin};
 use ddr4bench::ddr4::MappingPolicy;
 use ddr4bench::platform::sweep::{
-    job_csv, job_json, parse_knob_list, parse_sched_list, preset, run_sweep, summary_json,
-    write_artifacts, SweepSpec,
+    job_csv, job_json, parse_knob_list, parse_mix_list, parse_sched_list, preset, run_sweep,
+    summary_json, write_artifacts, SweepSpec,
 };
 use ddr4bench::platform::Platform;
 use ddr4bench::report::compare;
@@ -94,7 +94,7 @@ fn artifacts_written_one_json_and_csv_per_job() {
     let summary = write_artifacts(&outcomes, &dir).unwrap();
     assert!(summary.ends_with("BENCH_sweep.json"));
     let summary_text = std::fs::read_to_string(&summary).unwrap();
-    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v3\""));
+    assert!(summary_text.contains("\"schema\": \"ddr4bench.sweep.v4\""));
     let mut jsons = 0;
     let mut csvs = 0;
     for entry in std::fs::read_dir(&dir).unwrap() {
@@ -236,6 +236,61 @@ fn sched_axis_sweep_labels_artifacts_and_orders_policies_sanely() {
     let report = compare::compare(&[loaded.clone(), loaded.clone()], 2.0);
     assert_eq!(report.delta.rows.len(), 8);
     assert!(report.regressions.is_empty(), "a sweep never regresses against itself");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn heterogeneous_mix_sweep_end_to_end() {
+    // The mixes axis: one 3-channel heterogeneous mix next to a uniform
+    // pattern, through execution, artifacts and the compare pipeline.
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1];
+    spec.patterns = vec![preset("seq").unwrap()];
+    spec.patterns[0].1.batch_len = 32;
+    spec.mixes = parse_mix_list(
+        "0:SEQ,BURST=32,BATCH=64+1:CHASE,WSET=64k,BURST=1,BATCH=32+2:BANK,SEED=1,BATCH=32",
+    )
+    .unwrap();
+    let jobs = spec.expand();
+    assert_eq!(jobs.len(), 2, "1 uniform pattern + 1 mix");
+    let outcomes = run_sweep(jobs, 2).unwrap();
+    let mix = outcomes.iter().find(|o| o.job.mix.is_some()).unwrap();
+    assert_eq!(mix.job.channels, 3, "mix brings its own channel count");
+    assert_eq!(mix.job.label, "seq+chase+bank");
+    assert_eq!(mix.per_channel.len(), 3);
+    // distinct per-channel workloads produce distinct per-channel stats
+    let seq = mix.per_channel[0].read_throughput_gbs();
+    let chase = mix.per_channel[1].read_throughput_gbs();
+    assert!(seq > 2.0 * chase, "seq {seq:.2} vs chase {chase:.2}");
+    // artifacts: v4 schema, mix spec in JSON and (quoted) in CSV
+    let dir = std::env::temp_dir().join(format!("ddr4bench_mix_sweep_{}", std::process::id()));
+    let summary = write_artifacts(&outcomes, &dir).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(
+        names.iter().any(|n| n.contains("seq_chase_bank") && n.ends_with(".json")),
+        "mix-labeled artifact in {names:?}"
+    );
+    // the v4 summary loads in compare, with the mix spec in the job key
+    let loaded = compare::load_sweep(&summary).unwrap();
+    assert_eq!(loaded.records.len(), 2);
+    let mix_rec = loaded.records.iter().find(|r| !r.mix.is_empty()).unwrap();
+    assert_eq!(mix_rec.pattern, "seq+chase+bank");
+    assert!(mix_rec.mix.contains("1:") && mix_rec.mix.contains("ADDR=CHASE"), "{}", mix_rec.mix);
+    let report = compare::compare(&[loaded.clone(), loaded.clone()], 2.0);
+    assert_eq!(report.delta.rows.len(), 2);
+    assert!(report.regressions.is_empty());
+    // determinism: a second independently-scheduled run reproduces the
+    // mix job exactly
+    let again = run_sweep(spec.expand(), 1).unwrap();
+    let mix2 = again.iter().find(|o| o.job.mix.is_some()).unwrap();
+    assert_eq!(
+        mix.agg.counters.total_cycles, mix2.agg.counters.total_cycles,
+        "run-to-run determinism on the mix job"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 

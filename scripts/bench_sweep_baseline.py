@@ -11,7 +11,7 @@ This script exists for environments without a Rust toolchain: it walks
 the same 12-job grid (the Fig. 2 data rates x {1, 2} channels x the
 three adversarial patterns) through ``python/compile/model.py``'s
 ``bw_model`` — the jnp twin of ``rust/src/analytic`` — and emits the
-same ``ddr4bench.sweep.v3`` schema with ``"source"`` marking the values
+same ``ddr4bench.sweep.v4`` schema with ``"source"`` marking the values
 as analytic predictions rather than simulator measurements. Fields the
 model cannot predict (latency and its percentiles, wall time, refresh,
 energy) are null; the mapping/knob/sched axes are the defaults the
@@ -74,7 +74,7 @@ def main():
         total = float(per_channel) * ch
         jobs.append(
             {
-                "schema": "ddr4bench.sweep.v3",
+                "schema": "ddr4bench.sweep.v4",
                 "id": jid,
                 "speed": f"DDR4-{rate}",
                 "data_rate_mts": rate,
@@ -83,6 +83,7 @@ def main():
                 "mapping": "row_col_bank",
                 "knobs": "mig",
                 "sched": "frfcfs",
+                "mix": "",
                 "cfg": cfg,
                 "rd_gbs": round(total, 6),
                 "wr_gbs": 0.0,
@@ -104,7 +105,7 @@ def main():
             }
         )
     doc = {
-        "schema": "ddr4bench.sweep.v3",
+        "schema": "ddr4bench.sweep.v4",
         "source": (
             "analytic-model baseline (python/compile/model.py bw_model); "
             "promote a simulator-sourced summary with "
