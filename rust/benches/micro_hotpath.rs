@@ -13,7 +13,7 @@
 //! Run: `cargo bench --bench micro_hotpath` (add `--quick` for CI).
 
 use ddr4bench::benchkit::Bench;
-use ddr4bench::config::{ControllerParams, DesignConfig, PatternConfig, SpeedBin};
+use ddr4bench::config::{ControllerParams, DesignConfig, EngineKind, PatternConfig, SpeedBin};
 use ddr4bench::controller::{MemController, MemRequest, SchedKind};
 use ddr4bench::ddr4::{Cmd, DdrDevice, DramGeometry, TimingParams};
 use ddr4bench::platform::Platform;
@@ -151,6 +151,27 @@ fn main() {
     bench.bench_throughput("platform/sim_dram_cycles", dram_cycles as f64, "cycle", || {
         std::hint::black_box(platform.run_batch(0, &cfg).unwrap().read_throughput_gbs());
     });
+
+    // --- engine duel: cycle-stepped oracle vs event-driven time-skip core
+    // on an idle-heavy workload (single-beat reads throttled to one AR per
+    // 64 fabric cycles — long quiet gaps between commands), the regime the
+    // event engine exists for. The differential suite pins both engines
+    // bit-identical; this pair pins the wall-clock win (acceptance: the
+    // `_event` series sustains >=5x the `_cycle` rate here).
+    let mut idle_design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+    idle_design.controller.addr_cmd_interval_axi = 64;
+    for engine in EngineKind::ALL {
+        let idle_cfg = PatternConfig::seq_read_burst(1, 2048);
+        let mut design = idle_design.clone();
+        design.engine = engine;
+        let mut p = Platform::new(design);
+        let probe = p.run_batch(0, &idle_cfg).unwrap();
+        let idle_dram_cycles = probe.counters.total_cycles * 4;
+        let name = format!("platform/idle_dram_cycles_{engine}");
+        bench.bench_throughput(&name, idle_dram_cycles as f64, "cycle", move || {
+            std::hint::black_box(p.run_batch(0, &idle_cfg).unwrap().read_throughput_gbs());
+        });
+    }
 
     // --- data path: rust mirror vs XLA artifacts
     let seeds: Vec<u32> = (0..4096u32).map(|i| i.wrapping_mul(2654435761)).collect();

@@ -112,6 +112,52 @@ impl std::fmt::Display for SchedKind {
     }
 }
 
+/// Runtime-selectable simulation engine. Both engines drive the exact
+/// same controller/device/TG state machines; they differ only in how
+/// the batch executive advances time. The cycle engine is the frozen
+/// oracle; the event engine leaps over provably idle fabric cycles
+/// (see `rust/tests/engine_differential.rs` for the bit-exactness
+/// pin). Parsed from the `ENGINE=` pattern token, the `--engine` CLI
+/// option, the `engine =` design key and the host protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum EngineKind {
+    /// Step every fabric cycle (4 DRAM ticks each) unconditionally.
+    #[default]
+    Cycle,
+    /// Time-skip core: every timing source (controller wake, pending
+    /// completions, TG injection) publishes its next-actionable tick
+    /// and the loop jumps straight to the earliest one.
+    Event,
+}
+
+impl EngineKind {
+    /// Both engines, in report order.
+    pub const ALL: [EngineKind; 2] = [EngineKind::Cycle, EngineKind::Event];
+
+    /// Parse an engine name: `cycle` or `event`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cycle" => Some(EngineKind::Cycle),
+            "event" => Some(EngineKind::Event),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Cycle => "cycle",
+            EngineKind::Event => "event",
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// JEDEC DDR4 speed bins supported by the platform — the four the paper's
 /// campaign covers (§III, Table II).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -320,6 +366,10 @@ pub struct DesignConfig {
     pub geometry: DramGeometry,
     /// Memory-controller microarchitecture.
     pub controller: ControllerParams,
+    /// Simulation engine driving the batch loop (`--engine` / the
+    /// `engine =` design key). Semantics are identical either way; the
+    /// event engine only skips provably idle fabric cycles.
+    pub engine: EngineKind,
 }
 
 impl DesignConfig {
@@ -338,6 +388,7 @@ impl DesignConfig {
             axi_data_width_bits: 256,
             geometry: DramGeometry::profpga_board(),
             controller: ControllerParams::default(),
+            engine: EngineKind::default(),
         }
     }
 
@@ -701,6 +752,11 @@ pub struct PatternConfig {
     /// `Some` re-schedules the channel at run time for the batches that
     /// follow (queued state and open rows carry over).
     pub sched: Option<SchedKind>,
+    /// Simulation-engine override for this batch (`ENGINE=` token).
+    /// `None` runs under the design's [`DesignConfig::engine`]. Either
+    /// way the results are bit-identical; this only selects how the
+    /// batch loop advances time.
+    pub engine: Option<EngineKind>,
 }
 
 impl PatternConfig {
@@ -720,6 +776,7 @@ impl PatternConfig {
             verify: false,
             mapping: None,
             sched: None,
+            engine: None,
         }
     }
 
@@ -917,14 +974,15 @@ impl ChannelMix {
         (0..self.len()).map(|ch| self.channel_label(ch)).collect::<Vec<_>>().join("+")
     }
 
-    /// A copy with every per-channel `MAP=`/`SCHED=` override cleared —
-    /// the sweep executive uses it so the mapping/sched axes stay
-    /// authoritative over what actually runs.
+    /// A copy with every per-channel `MAP=`/`SCHED=`/`ENGINE=` override
+    /// cleared — the sweep executive uses it so the mapping/sched/engine
+    /// axes stay authoritative over what actually runs.
     pub fn without_overrides(&self) -> Self {
         let mut mix = self.clone();
         for cfg in &mut mix.channels {
             cfg.mapping = None;
             cfg.sched = None;
+            cfg.engine = None;
         }
         mix
     }
@@ -1116,14 +1174,30 @@ mod tests {
         let mut cfg = PatternConfig::seq_read_burst(4, 32);
         cfg.mapping = Some(MappingPolicy::xor_hash());
         cfg.sched = Some(SchedKind::Closed);
+        cfg.engine = Some(EngineKind::Event);
         let mix = ChannelMix::uniform(&cfg, 2).unwrap();
         assert_eq!(mix.len(), 2);
         assert_eq!(mix.get(0), mix.get(1));
         let stripped = mix.without_overrides();
-        assert!(stripped.iter().all(|c| c.mapping.is_none() && c.sched.is_none()));
+        assert!(stripped
+            .iter()
+            .all(|c| c.mapping.is_none() && c.sched.is_none() && c.engine.is_none()));
         // everything else is untouched
         assert!(stripped.iter().all(|c| c.burst.len == 4 && c.batch_len == 32));
         assert!(ChannelMix::uniform(&cfg, 0).is_err());
+    }
+
+    #[test]
+    fn engine_kind_parses_and_round_trips() {
+        assert_eq!(EngineKind::parse("cycle"), Some(EngineKind::Cycle));
+        assert_eq!(EngineKind::parse(" EVENT "), Some(EngineKind::Event));
+        assert_eq!(EngineKind::parse("wheel"), None);
+        assert_eq!(EngineKind::default(), EngineKind::Cycle);
+        for e in EngineKind::ALL {
+            assert_eq!(EngineKind::parse(e.name()), Some(e), "{e} round-trips");
+        }
+        assert_eq!(DesignConfig::default().engine, EngineKind::Cycle);
+        assert_eq!(PatternConfig::default().engine, None);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::{
     AddrMode, BurstKind, ChannelMix, ControllerParams, CounterSet, DataPattern, DesignConfig,
-    OpMix, PatternConfig, SchedKind, Signaling, SpeedBin,
+    EngineKind, OpMix, PatternConfig, SchedKind, Signaling, SpeedBin,
 };
 use crate::ddr4::mapping::MappingPolicy;
 use std::collections::BTreeMap;
@@ -133,6 +133,10 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
     if let Some(v) = map.get("mapping") {
         cfg.geometry.mapping = MappingPolicy::parse(v)
             .ok_or_else(|| ConfigError::new(format!("mapping: unknown policy `{v}`")))?;
+    }
+    if let Some(v) = map.get("engine") {
+        cfg.engine = EngineKind::parse(v)
+            .ok_or_else(|| ConfigError::new(format!("engine: unknown engine `{v}`")))?;
     }
     cfg.axi_data_width_bits = get_u32(&map, "axi_width", cfg.axi_data_width_bits)?;
     cfg.counters = CounterSet {
@@ -314,6 +318,11 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
                     ConfigError::new(format!("SCHED: unknown scheduler policy `{val}`"))
                 })?);
             }
+            "ENGINE" => {
+                p.engine = Some(EngineKind::parse(val).ok_or_else(|| {
+                    ConfigError::new(format!("ENGINE: unknown engine `{val}`"))
+                })?);
+            }
             _ => return Err(ConfigError::new(format!("unknown pattern key `{k}`"))),
         }
     }
@@ -467,6 +476,9 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
     }
     if let Some(k) = p.sched {
         s.push_str(&format!(" SCHED={}", k.name()));
+    }
+    if let Some(e) = p.engine {
+        s.push_str(&format!(" ENGINE={}", e.name()));
     }
     s
 }
@@ -907,6 +919,38 @@ mod tests {
         assert_eq!(cfg.controller.sched, SchedKind::FrFcfsCap { cap: 2 });
         assert_eq!(parse_design_config("").unwrap().controller.sched, SchedKind::FrFcfs);
         assert!(parse_design_config("[controller]\nsched = nope\n").is_err());
+    }
+
+    #[test]
+    fn engine_token_parses_and_roundtrips() {
+        let p = parse_pattern_config(&["ADDR=SEQ", "ENGINE=event"]).unwrap();
+        assert_eq!(p.engine, Some(EngineKind::Event));
+        let p = parse_pattern_config(&["ENGINE=Cycle"]).unwrap();
+        assert_eq!(p.engine, Some(EngineKind::Cycle));
+        let err = parse_pattern_config(&["ENGINE=wheel"]).unwrap_err().to_string();
+        assert!(err.contains("ENGINE: unknown engine `wheel`"), "{err}");
+        // ENGINE= survives the format/parse round trip alongside the
+        // other overrides, and stays silent when unset
+        let toks = ["ADDR=SEQ", "MAP=xor_hash", "SCHED=closed", "ENGINE=event"];
+        let p = parse_pattern_config(&toks).unwrap();
+        let text = format_pattern_config(&p);
+        assert!(text.contains("ENGINE=event"), "{text}");
+        let toks2: Vec<&str> = text.split_whitespace().collect();
+        assert_eq!(parse_pattern_config(&toks2).unwrap(), p, "`{text}`");
+        let p = parse_pattern_config(&["ADDR=SEQ"]).unwrap();
+        assert_eq!(p.engine, None);
+        assert!(!format_pattern_config(&p).contains("ENGINE="));
+    }
+
+    #[test]
+    fn design_config_engine_key() {
+        let cfg = parse_design_config("engine = event\n").unwrap();
+        assert_eq!(cfg.engine, EngineKind::Event);
+        let cfg = parse_design_config("engine = cycle\nspeed = 2400\n").unwrap();
+        assert_eq!(cfg.engine, EngineKind::Cycle);
+        assert_eq!(parse_design_config("").unwrap().engine, EngineKind::Cycle);
+        let err = parse_design_config("engine = wheel\n").unwrap_err().to_string();
+        assert!(err.contains("engine: unknown engine `wheel`"), "{err}");
     }
 
     #[test]

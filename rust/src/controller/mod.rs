@@ -216,6 +216,35 @@ impl MemController {
         Ok(())
     }
 
+    /// Earliest DRAM cycle at or after `now` at which [`Self::tick`]
+    /// could do *anything* — the event-engine contract generalizing the
+    /// `idle_until` single-tick fast path. Every returned tick is safe
+    /// to leap to because the fast path between `now` and the returned
+    /// cycle is side-effect free: ticks are skippable exactly when the
+    /// last full evaluation proved no candidate (CAS, ACT/PRE prep,
+    /// direction switch, idle precharge) becomes legal earlier *and*
+    /// the refresh engine is parked (`idle_until` is always bounded by
+    /// the tREFI deadline and the mode-dwell grace window, so a leap
+    /// can never overshoot either). Returns `now` whenever a skip would
+    /// change behaviour: an un-consumed external input (`dirty`), an
+    /// active refresh (every drained cycle charges
+    /// `refresh_stall_cycles`), or a stale/expired wake.
+    pub fn next_event(&self, now: Cycle) -> Cycle {
+        if self.dirty || self.refresh != RefreshState::Idle || self.idle_until <= now {
+            now
+        } else {
+            self.idle_until
+        }
+    }
+
+    /// DRAM cycle at which the oldest in-flight completion finishes its
+    /// data phase (`None` when nothing is in flight). The deque is kept
+    /// sorted by `done_at`, so the front is the earliest — the event
+    /// engine's wake source for [`Self::pop_completions`].
+    pub fn next_completion_at(&self) -> Option<Cycle> {
+        self.completions.front().map(|c| c.done_at)
+    }
+
     /// Pop completions whose data phase has finished by `now`.
     pub fn pop_completions(&mut self, now: Cycle, out: &mut Vec<Completion>) {
         while let Some(c) = self.completions.front() {
@@ -897,5 +926,147 @@ mod tests {
         for w in done.windows(2) {
             assert!(w[0].done_at <= w[1].done_at, "completion order");
         }
+    }
+
+    #[test]
+    fn next_event_contract_basics() {
+        let mut c = ctrl();
+        assert_eq!(c.next_event(0), 0, "fresh controller must be ticked");
+        assert!(c.tick(0).is_none());
+        let due = c.device().refresh_due();
+        assert_eq!(c.next_event(1), due, "idle wake is the tREFI deadline");
+        assert_eq!(c.next_event(due + 5), due + 5, "expired wake forces a tick");
+        c.try_push(rd_req(1, 0, 1, 0, 1)).unwrap();
+        assert_eq!(c.next_event(1), 1, "un-consumed push (dirty) forces a tick");
+        assert!(c.tick(1).is_some(), "the push turns into an ACT");
+        let w = c.next_event(2);
+        assert!(w >= 2 && w <= c.device().refresh_due(), "wake never overshoots tREFI");
+    }
+
+    #[test]
+    fn next_completion_at_tracks_front_of_flight() {
+        let mut c = ctrl();
+        assert_eq!(c.next_completion_at(), None);
+        c.try_push(rd_req(1, 0, 5, 0, 0)).unwrap();
+        let done_at = {
+            let t = c.device().timing();
+            (t.trcd + t.cl + t.burst_cycles) as Cycle
+        };
+        for now in 0..done_at {
+            c.tick(now);
+            if let Some(d) = c.next_completion_at() {
+                assert_eq!(d, done_at, "front of the deque is the earliest data phase");
+            }
+        }
+        let mut out = Vec::new();
+        c.pop_completions(done_at, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(c.next_completion_at(), None, "drained flight publishes no wake");
+    }
+
+    /// Drive cycle-by-cycle (the oracle): push scheduled requests, tick
+    /// every DRAM cycle, pop completions. Returns ((txn, done_at) log,
+    /// tick count).
+    fn drive_cycle_stepped(
+        c: &mut MemController,
+        mut pushes: Vec<(Cycle, MemRequest)>,
+        n: Cycle,
+    ) -> (Vec<(u64, Cycle)>, u64) {
+        let mut popped = Vec::new();
+        let mut ticks = 0u64;
+        for now in 0..n {
+            while !pushes.is_empty() && pushes[0].0 == now {
+                c.try_push(pushes.remove(0).1).unwrap();
+            }
+            c.tick(now);
+            ticks += 1;
+            c.pop_completions(now, &mut popped);
+        }
+        (popped.iter().map(|d| (d.txn_id, d.done_at)).collect(), ticks)
+    }
+
+    /// Drive via the event contract — the platform's time-skip loop in
+    /// miniature: leap to `next_event`, clamped by pending completions
+    /// and by the scheduled external pushes.
+    fn drive_event_skipped(
+        c: &mut MemController,
+        mut pushes: Vec<(Cycle, MemRequest)>,
+        n: Cycle,
+    ) -> (Vec<(u64, Cycle)>, u64) {
+        let mut popped = Vec::new();
+        let mut ticks = 0u64;
+        let mut now: Cycle = 0;
+        while now < n {
+            while !pushes.is_empty() && pushes[0].0 == now {
+                c.try_push(pushes.remove(0).1).unwrap();
+            }
+            c.tick(now);
+            ticks += 1;
+            c.pop_completions(now, &mut popped);
+            let mut next = c.next_event(now + 1).max(now + 1);
+            if let Some(d) = c.next_completion_at() {
+                next = next.min(d.max(now + 1));
+            }
+            if let Some(&(t, _)) = pushes.first() {
+                next = next.min(t);
+            }
+            now = next;
+        }
+        (popped.iter().map(|d| (d.txn_id, d.done_at)).collect(), ticks)
+    }
+
+    fn refresh_timing() -> (Cycle, Cycle) {
+        let c = ctrl();
+        let t = c.device().timing();
+        (t.trefi as Cycle, t.trfc as Cycle)
+    }
+
+    #[test]
+    fn event_leap_across_trefi_matches_cycle_stepping() {
+        // Traffic early, then a long idle window spanning several tREFI
+        // deadlines: the event drive leaps straight to each REF and must
+        // charge the identical refresh_stall_cycles lump at each one.
+        let (trefi, _) = refresh_timing();
+        let n = 3 * trefi + 500;
+        let pushes = || {
+            vec![
+                (0, rd_req(1, 0, 1, 0, 0)),
+                (0, rd_req(2, 3, 7, 8, 0)),
+                (10, wr_req(3, 1, 2, 0, 10)),
+            ]
+        };
+        let (mut a, mut b) = (ctrl(), ctrl());
+        let (done_a, ticks_a) = drive_cycle_stepped(&mut a, pushes(), n);
+        let (done_b, ticks_b) = drive_event_skipped(&mut b, pushes(), n);
+        assert_eq!(done_a, done_b, "completion log identical");
+        assert_eq!(a.stats().refresh_stall_cycles, b.stats().refresh_stall_cycles);
+        assert!(a.stats().refresh_stall_cycles > 0, "scenario crossed refresh deadlines");
+        assert_eq!(a.stats().mode_switches, b.stats().mode_switches);
+        assert_eq!(a.device().stats(), b.device().stats(), "command stream identical");
+        assert!(ticks_b * 5 < ticks_a, "event drive skipped: {ticks_b} vs {ticks_a} ticks");
+    }
+
+    #[test]
+    fn event_landing_mid_trfc_matches_cycle_stepping() {
+        // Requests arriving right before a tREFI deadline (forcing the
+        // refresh engine through its drain state) and inside the tRFC
+        // window: stall accounting must not drift by a single cycle.
+        let (trefi, trfc) = refresh_timing();
+        let n = 2 * trefi;
+        let pushes = || {
+            vec![
+                (trefi - 2, rd_req(1, 0, 1, 0, trefi - 2)),
+                (trefi + 3, wr_req(2, 1, 2, 0, trefi + 3)),
+                (trefi + trfc / 2, rd_req(3, 2, 5, 0, trefi + trfc / 2)),
+            ]
+        };
+        let (mut a, mut b) = (ctrl(), ctrl());
+        let (done_a, ticks_a) = drive_cycle_stepped(&mut a, pushes(), n);
+        let (done_b, ticks_b) = drive_event_skipped(&mut b, pushes(), n);
+        assert_eq!(done_a, done_b, "completion log identical");
+        assert_eq!(a.stats().refresh_stall_cycles, b.stats().refresh_stall_cycles);
+        assert!(a.stats().refresh_stall_cycles >= trfc, "tRFC lump charged");
+        assert_eq!(a.device().stats(), b.device().stats(), "command stream identical");
+        assert!(ticks_b < ticks_a, "event drive skipped: {ticks_b} vs {ticks_a} ticks");
     }
 }

@@ -98,6 +98,20 @@ impl Bank {
         debug_assert!(self.is_closed(), "REF with open bank");
         self.earliest_act = self.earliest_act.max(now + t.trfc as Cycle);
     }
+
+    /// Earliest cycle at which *some* command class could become legal
+    /// on this bank given its open/closed state: an ACT when closed, a
+    /// CAS or PRE when open. Cross-bank constraints (tRRD/tFAW/tCCD,
+    /// bus turnarounds, tRFC) can only push the true legality later, so
+    /// this is a safe lower bound — the per-bank wake hint behind
+    /// [`super::device::DdrDevice::next_bank_actionable`].
+    pub fn next_actionable(&self) -> Cycle {
+        if self.is_closed() {
+            self.earliest_act
+        } else {
+            self.earliest_cas.min(self.earliest_pre)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -174,5 +188,20 @@ mod tests {
         let mut b = Bank::default();
         b.on_refresh(1000, &t);
         assert_eq!(b.earliest_act, 1000 + t.trfc as Cycle);
+    }
+
+    #[test]
+    fn next_actionable_follows_bank_state() {
+        let t = t();
+        let mut b = Bank::default();
+        assert_eq!(b.next_actionable(), 0, "fresh closed bank: ACT now");
+        b.on_act(1, 100, &t);
+        // open bank: the CAS gate (tRCD) opens before the PRE gate (tRAS)
+        assert_eq!(b.next_actionable(), 100 + t.trcd as Cycle);
+        let cas_at = b.earliest_cas;
+        b.on_rd(cas_at, false, &t);
+        let pre_at = b.earliest_pre;
+        b.on_pre(pre_at, &t);
+        assert_eq!(b.next_actionable(), b.earliest_act, "closed again: ACT gate");
     }
 }

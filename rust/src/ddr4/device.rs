@@ -28,6 +28,11 @@ pub struct DdrDevice {
     t: TimingParams,
     geo: DramGeometry,
     banks: Vec<Bank>,
+    /// Columnar (SoA-style) mirror of the hot `open_row.is_some()` bit,
+    /// one bit per bank: the open/closed scans the scheduler and the
+    /// event engine run every evaluation touch one word instead of
+    /// striding through `Vec<Bank>`. Kept in sync by [`Self::issue`].
+    open_mask: u64,
     /// Issue times of the last 4 ACTs (tFAW window).
     act_window: VecDeque<Cycle>,
     /// Last ACT issue time, any bank (tRRD_S), and per group (tRRD_L).
@@ -91,11 +96,13 @@ impl DdrDevice {
     /// New idle device. The first refresh falls one tREFI after reset.
     pub fn new(t: TimingParams, geo: DramGeometry) -> Self {
         let banks = vec![Bank::default(); geo.banks() as usize];
+        debug_assert!(banks.len() <= 64, "open_mask packs one bit per bank");
         let groups = geo.bank_groups as usize;
         Self {
             t,
             geo,
             banks,
+            open_mask: 0,
             act_window: VecDeque::with_capacity(4),
             last_act_any: None,
             last_act_group: vec![None; groups],
@@ -139,9 +146,25 @@ impl DdrDevice {
         now >= self.refresh_due
     }
 
-    /// Are all banks precharged?
+    /// Are all banks precharged? (One-word test on the SoA open column.)
     pub fn all_banks_closed(&self) -> bool {
-        self.banks.iter().all(|b| b.is_closed())
+        self.open_mask == 0
+    }
+
+    /// End of an in-progress tRFC window (0 when no refresh is active):
+    /// every command class is gated until this cycle.
+    pub fn busy_until(&self) -> Cycle {
+        self.busy_until
+    }
+
+    /// Earliest cycle at which *some* bank could legally accept *some*
+    /// command, ignoring cross-bank spacing (tRRD/tFAW/tCCD, bus
+    /// turnarounds) — those only push legality later, so this is a safe
+    /// lower bound: an event-engine wake hint, never an issue license.
+    pub fn next_bank_actionable(&self) -> Cycle {
+        let earliest =
+            self.banks.iter().map(Bank::next_actionable).min().unwrap_or(Cycle::MAX);
+        earliest.max(self.busy_until)
     }
 
     fn group_of(&self, bank: u32) -> usize {
@@ -257,6 +280,7 @@ impl DdrDevice {
             Cmd::Act { bank, row } => {
                 let g = self.group_of(bank);
                 self.banks[bank as usize].on_act(row, now, &self.t);
+                self.open_mask |= 1u64 << bank;
                 self.last_act_any = Some(now);
                 self.last_act_group[g] = Some(now);
                 if self.act_window.len() == 4 {
@@ -268,6 +292,7 @@ impl DdrDevice {
             }
             Cmd::Pre { bank } => {
                 self.banks[bank as usize].on_pre(now, &self.t);
+                self.open_mask &= !(1u64 << bank);
                 self.stats.pres += 1;
                 now
             }
@@ -277,12 +302,16 @@ impl DdrDevice {
                         self.banks[i].on_pre(now, &self.t);
                     }
                 }
+                self.open_mask = 0;
                 self.stats.pres += 1;
                 now
             }
             Cmd::Rd { bank, auto_pre, .. } => {
                 let g = self.group_of(bank);
                 self.banks[bank as usize].on_rd(now, auto_pre, &self.t);
+                if auto_pre {
+                    self.open_mask &= !(1u64 << bank);
+                }
                 self.last_cas_any = Some(now);
                 self.last_cas_group[g] = Some(now);
                 self.last_rd_cas = Some(now);
@@ -292,6 +321,9 @@ impl DdrDevice {
             Cmd::Wr { bank, auto_pre, .. } => {
                 let g = self.group_of(bank);
                 self.banks[bank as usize].on_wr(now, auto_pre, &self.t);
+                if auto_pre {
+                    self.open_mask &= !(1u64 << bank);
+                }
                 self.last_cas_any = Some(now);
                 self.last_cas_group[g] = Some(now);
                 self.last_wr_cas = Some((now, g as u32));
@@ -299,6 +331,7 @@ impl DdrDevice {
                 now + (self.t.cwl + self.t.burst_cycles) as Cycle
             }
             Cmd::Ref => {
+                debug_assert_eq!(self.open_mask, 0, "REF requires all banks closed");
                 for b in &mut self.banks {
                     b.on_refresh(now, &self.t);
                 }
@@ -482,5 +515,52 @@ mod tests {
         let a = d.earliest_issue(Cmd::Act { bank: 4, row: 2 });
         d.issue(Cmd::Act { bank: 4, row: 2 }, a);
         assert!(d.earliest_issue(probe) >= before);
+    }
+
+    /// The SoA open column must agree with the per-bank truth after any
+    /// command sequence (the mask is what `all_banks_closed` now reads).
+    fn assert_mask_consistent(d: &DdrDevice) {
+        let truth = (0..d.geometry().banks()).all(|b| d.bank(b).is_closed());
+        assert_eq!(d.all_banks_closed(), truth, "open_mask out of sync");
+    }
+
+    #[test]
+    fn open_mask_tracks_bank_state_across_commands() {
+        let mut d = dev();
+        assert_mask_consistent(&d);
+        d.issue(Cmd::Act { bank: 2, row: 3 }, 0);
+        assert!(!d.all_banks_closed());
+        assert_mask_consistent(&d);
+        // auto-precharging CAS closes the bank through the mask too
+        let r = d.earliest_issue(Cmd::Rd { bank: 2, col: 0, auto_pre: true });
+        d.issue(Cmd::Rd { bank: 2, col: 0, auto_pre: true }, r);
+        assert!(d.all_banks_closed());
+        assert_mask_consistent(&d);
+        // explicit PRE path
+        let a = d.earliest_issue(Cmd::Act { bank: 5, row: 1 });
+        d.issue(Cmd::Act { bank: 5, row: 1 }, a);
+        assert_mask_consistent(&d);
+        let p = d.earliest_issue(Cmd::Pre { bank: 5 });
+        d.issue(Cmd::Pre { bank: 5 }, p);
+        assert!(d.all_banks_closed());
+        assert_mask_consistent(&d);
+    }
+
+    #[test]
+    fn next_bank_actionable_is_a_lower_bound() {
+        let mut d = dev();
+        assert_eq!(d.next_bank_actionable(), 0, "fresh device: ACT legal now");
+        d.issue(Cmd::Act { bank: 0, row: 0 }, 0);
+        // some other bank is still closed with earliest_act = 0, so the
+        // hint stays 0 — conservative, never later than true legality
+        assert_eq!(d.next_bank_actionable(), 0);
+        let t = *d.timing();
+        let pa = d.earliest_issue(Cmd::PreAll);
+        d.issue(Cmd::PreAll, pa);
+        let ref_at = d.earliest_issue(Cmd::Ref).max(t.trefi as Cycle);
+        let end = d.issue(Cmd::Ref, ref_at);
+        // during tRFC nothing is actionable before the window ends
+        assert_eq!(d.next_bank_actionable(), end);
+        assert!(d.next_bank_actionable() <= d.earliest_issue(Cmd::Act { bank: 0, row: 0 }));
     }
 }

@@ -35,7 +35,10 @@
 //! batches that follow (see [`crate::ddr4::MappingPolicy`]) — and for
 //! the scheduler engine: `SCHED=<policy>` swaps the controller's
 //! command-scheduling/page policy live (see
-//! [`crate::controller::sched::SchedKind`]).
+//! [`crate::controller::sched::SchedKind`]) — and for the simulation
+//! engine: `ENGINE=cycle|event` picks the cycle-stepped oracle or the
+//! event-driven time-skip core for the batches that follow (bit-exact by
+//! contract, so a host can switch freely for speed).
 //!
 //! Heterogeneous per-channel workloads configure in one `CHCFG` command
 //! (whitespace-separated `N:TOKENS,...` channel specs — the
@@ -437,6 +440,32 @@ mod tests {
             assert!(r.starts_with("OK RUN CH=0 TXNS=64"), "`{cfg}` -> {r}");
         }
         assert!(h.handle_line("CFG 0 SCHED=frobnicate").starts_with("ERR"));
+    }
+
+    #[test]
+    fn engine_token_selects_engine_live() {
+        // ENGINE= swaps the simulation engine per batch over the wire;
+        // both engines must report identical counters (bit-exactness is
+        // part of the protocol contract — a host can flip for speed)
+        let mut h = host();
+        let mut cycles = Vec::new();
+        for engine in ["cycle", "event"] {
+            let cfg = format!("CFG 0 OP=R ADDR=SEQ BURST=8 BATCH=128 ENGINE={engine}");
+            let r = h.handle_line(&cfg);
+            assert!(r.starts_with("OK CFG CH=0"), "`{cfg}` -> {r}");
+            assert!(r.contains("ENGINE="), "echo carries the engine: {r}");
+            let r = h.handle_line("RUN 0");
+            assert!(r.starts_with("OK RUN CH=0 TXNS=128"), "`{cfg}` -> {r}");
+            let s = h.handle_line("STATS 0");
+            let total = s
+                .split_whitespace()
+                .find_map(|t| t.strip_prefix("TOTAL_CYCLES="))
+                .unwrap()
+                .to_string();
+            cycles.push(total);
+        }
+        assert_eq!(cycles[0], cycles[1], "engines diverge over the protocol");
+        assert!(h.handle_line("CFG 0 ENGINE=frobnicate").starts_with("ERR"));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! ddr4bench run --addr chase --wset 4m --sig BLK --burst 1   # pattern engine
 //! ddr4bench run --addr bank --map xor_hash           # address-mapping engine
 //! ddr4bench run --addr seq --sched closed            # scheduler/page-policy engine
+//! ddr4bench run --addr chase --engine event          # event-driven time-skip core
 //! ddr4bench sweep --speeds 1600,2400 --channels 1,2 \
 //!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
 //! ddr4bench sweep --maps row_col_bank,xor_hash --knobs lookahead=1,lookahead=8
@@ -23,7 +24,7 @@ use anyhow::{anyhow, Result};
 use ddr4bench::cli::Cli;
 use ddr4bench::config::{
     parse_channel_mix, parse_mix_file, parse_pattern_config, ChannelMix, DesignConfig,
-    PatternConfig, SpeedBin,
+    EngineKind, PatternConfig, SpeedBin,
 };
 use ddr4bench::hostctrl::{serve_tcp, HostController};
 use ddr4bench::platform::{interference_matrix, sweep, Platform};
@@ -58,6 +59,7 @@ fn cli() -> Cli {
         .option("phases", "phase list for --addr phased, e.g. SEQ@512,RND@512")
         .option("map", "address mapping: row_col_bank|row_bank_col|bank_row_col|xor_hash|RoBaBgCo")
         .option("sched", "scheduler/page policy: fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive")
+        .option("engine", "simulation engine: cycle|event (default cycle; event = time-skip core)")
         .multi("ch", "per-channel workload N:TOKENS,.. (repeat per channel; e.g. 0:SEQ,BURST=32)")
         .option("mix-file", "read the per-channel mix from a [channel.N]-sectioned config file")
         .option("burst", "burst length 1-128 (default 32)")
@@ -169,7 +171,11 @@ fn design_from_args(args: &ddr4bench::cli::Args) -> Result<DesignConfig> {
     let speed = SpeedBin::parse(args.get_or("speed", "1600"))
         .ok_or_else(|| anyhow!("unknown --speed"))?;
     let channels: usize = args.parse_or("channels", 1usize).map_err(|e| anyhow!(e))?;
-    let d = DesignConfig::with_channels(channels, speed);
+    let mut d = DesignConfig::with_channels(channels, speed);
+    if let Some(v) = args.get("engine") {
+        d.engine = EngineKind::parse(v)
+            .ok_or_else(|| anyhow!("--engine: unknown engine `{v}` (expected cycle|event)"))?;
+    }
     d.validate().map_err(|e| anyhow!("{e}"))?;
     Ok(d)
 }
@@ -208,6 +214,10 @@ fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec>
     }
     if let Some(v) = args.get("mixes") {
         spec.mixes = sweep::parse_mix_list(v)?;
+    }
+    if let Some(v) = args.get("engine") {
+        spec.engine = EngineKind::parse(v)
+            .ok_or_else(|| anyhow!("--engine: unknown engine `{v}` (expected cycle|event)"))?;
     }
     Ok(spec)
 }

@@ -27,7 +27,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{ChannelMix, DesignConfig, PatternConfig};
+use crate::config::{ChannelMix, DesignConfig, EngineKind, PatternConfig};
 use crate::controller::MemController;
 use crate::ddr4::{TimingParams, AXI_RATIO};
 use crate::runtime::XlaRuntime;
@@ -181,35 +181,12 @@ impl Platform {
             }
         }
 
+        let engine = cfg.engine.unwrap_or(design.engine);
         let state = &mut self.channels[ch];
         let refresh_before = state.controller.stats().refresh_stall_cycles;
         let dev_before = *state.controller.device().stats();
         let start_axi = state.axi_now;
-        // Deadlock guard: generous upper bound on the batch runtime.
-        let limit = start_axi
-            + 2_000_000
-            + cfg.batch_len as u64 * (cfg.burst.len as u64 + 4) * 64;
-        let mut comps = Vec::with_capacity(16);
-        while !tg.is_done() {
-            if state.axi_now >= limit {
-                bail!(
-                    "batch deadlock: {}/{} txns after {} fabric cycles",
-                    tg.completed(),
-                    cfg.batch_len,
-                    state.axi_now - start_axi
-                );
-            }
-            let now = state.axi_now - start_axi; // TG counts batch-relative
-            comps.clear();
-            state.controller.pop_completions(state.axi_now * AXI_RATIO, &mut comps);
-            tg.on_completions(&comps, now);
-            tg.tick_axi(now, state.axi_now * AXI_RATIO, &mut state.controller);
-            let dram_base = state.axi_now * AXI_RATIO;
-            for s in 0..AXI_RATIO {
-                state.controller.tick(dram_base + s);
-            }
-            state.axi_now += 1;
-        }
+        drive_batch(engine, state, &mut tg, cfg, batch_limit(start_axi, cfg))?;
         let mut counters = std::mem::take(&mut tg.counters);
         counters.refresh_stall_dram_cycles =
             state.controller.stats().refresh_stall_cycles - refresh_before;
@@ -480,6 +457,85 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Deadlock guard: generous upper bound on one batch's fabric-cycle
+/// runtime, measured from `start_axi`.
+fn batch_limit(start_axi: u64, cfg: &PatternConfig) -> u64 {
+    start_axi + 2_000_000 + cfg.batch_len as u64 * (cfg.burst.len as u64 + 4) * 64
+}
+
+/// The batch time-advance loop, shared by both batch runners and both
+/// simulation engines.
+///
+/// Every executed fabric cycle runs the canonical body — pop DRAM
+/// completions, feed them to the TG, tick the TG's AXI side, then tick
+/// the controller for the [`AXI_RATIO`] DRAM sub-cycles — so the cycle
+/// engine here *is* the historical hot loop, bit for bit.
+///
+/// The event engine runs the identical body but then leaps the fabric
+/// clock straight to the earliest cycle at which anything can happen:
+/// the minimum of the TG's next injection ([`TrafficGen::next_event`]),
+/// the fabric cycle that pops the oldest in-flight completion
+/// ([`MemController::next_completion_at`]), and the controller's own
+/// wake contract ([`MemController::next_event`], which refuses to skip
+/// while its queues are dirty or a refresh is draining). Each of those
+/// bounds is conservative — never later than the first real action — and
+/// every skipped cycle is one where the canonical body is provably a
+/// no-op, so counters, latencies and per-device command stats are
+/// bit-identical across engines (pinned by `tests/engine_differential`).
+///
+/// The leap is clamped to `limit` so a wedged batch still trips the
+/// deadlock guard at exactly the same fabric-cycle reading — and with
+/// the same diagnostic — as the cycle engine.
+fn drive_batch(
+    engine: EngineKind,
+    state: &mut ChannelState,
+    tg: &mut TrafficGen,
+    cfg: &PatternConfig,
+    limit: u64,
+) -> Result<()> {
+    let start_axi = state.axi_now;
+    let mut comps = Vec::with_capacity(16);
+    while !tg.is_done() {
+        if state.axi_now >= limit {
+            bail!(
+                "batch deadlock: {}/{} txns after {} fabric cycles",
+                tg.completed(),
+                cfg.batch_len,
+                state.axi_now - start_axi
+            );
+        }
+        let now = state.axi_now - start_axi; // TG counts batch-relative
+        comps.clear();
+        state.controller.pop_completions(state.axi_now * AXI_RATIO, &mut comps);
+        tg.on_completions(&comps, now);
+        let dram_base = state.axi_now * AXI_RATIO;
+        tg.tick_axi(now, dram_base, &mut state.controller);
+        for s in 0..AXI_RATIO {
+            state.controller.tick(dram_base + s);
+        }
+        state.axi_now += 1;
+        if engine == EngineKind::Event && !tg.is_done() {
+            // Earliest absolute fabric cycle anyone needs to run again:
+            // the TG's next injection (u64::MAX = woken by completions
+            // only), the pop cycle of the oldest in-flight completion,
+            // and the controller's own wake (refresh deadline / mode
+            // dwell; `now` itself while dirty or draining a refresh).
+            let mut wake = tg
+                .next_event(now, dram_base, &state.controller)
+                .checked_add(start_axi)
+                .unwrap_or(u64::MAX);
+            if let Some(done_at) = state.controller.next_completion_at() {
+                wake = wake.min(done_at.div_ceil(AXI_RATIO));
+            }
+            wake = wake.min(state.controller.next_event(state.axi_now * AXI_RATIO) / AXI_RATIO);
+            if wake > state.axi_now {
+                state.axi_now = wake.min(limit);
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Free-function batch runner over a borrowed channel state (thread body
 /// of [`Platform::run_batch_mix`]; Rust-mirror data path only).
 fn run_batch_on_state(
@@ -507,27 +563,11 @@ fn run_batch_on_state(
     if cfg.verify {
         tg.store = state.store.take().or_else(|| Some(DataStore::new()));
     }
+    let engine = cfg.engine.unwrap_or(design.engine);
     let refresh_before = state.controller.stats().refresh_stall_cycles;
     let dev_before = *state.controller.device().stats();
     let start_axi = state.axi_now;
-    let limit =
-        start_axi + 2_000_000 + cfg.batch_len as u64 * (cfg.burst.len as u64 + 4) * 64;
-    let mut comps = Vec::with_capacity(16);
-    while !tg.is_done() {
-        if state.axi_now >= limit {
-            bail!("batch deadlock on threaded channel");
-        }
-        let now = state.axi_now - start_axi;
-        comps.clear();
-        state.controller.pop_completions(state.axi_now * AXI_RATIO, &mut comps);
-        tg.on_completions(&comps, now);
-        tg.tick_axi(now, state.axi_now * AXI_RATIO, &mut state.controller);
-        let dram_base = state.axi_now * AXI_RATIO;
-        for s in 0..AXI_RATIO {
-            state.controller.tick(dram_base + s);
-        }
-        state.axi_now += 1;
-    }
+    drive_batch(engine, state, &mut tg, cfg, batch_limit(start_axi, cfg))?;
     let mut counters = std::mem::take(&mut tg.counters);
     counters.refresh_stall_dram_cycles =
         state.controller.stats().refresh_stall_cycles - refresh_before;
@@ -876,5 +916,69 @@ mod tests {
         assert!(stats.counters.refresh_stall_dram_cycles > 0);
         let deg = stats.refresh_degradation();
         assert!(deg > 0.0 && deg < 0.2, "refresh degradation {deg:.4}");
+    }
+
+    #[test]
+    fn event_engine_matches_cycle_engine_on_basic_patterns() {
+        // The event engine only skips provably dead fabric cycles, so
+        // every counter — including the batch clock — must match the
+        // cycle oracle exactly (tests/engine_differential fuzzes this
+        // property; here we pin three representative shapes).
+        let mut event_design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        event_design.engine = EngineKind::Event;
+        for cfg in [
+            PatternConfig::seq_read_burst(8, 400),
+            PatternConfig::pointer_chase_read(1 << 20, 200, 7),
+            PatternConfig::mixed(AddrMode::Sequential, 4, 300),
+        ] {
+            let mut cycle = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+            let mut event = Platform::new(event_design.clone());
+            let a = cycle.run_batch(0, &cfg).unwrap();
+            let b = event.run_batch(0, &cfg).unwrap();
+            assert_eq!(a.counters, b.counters, "{:?} counters diverge", cfg.addr);
+            assert_eq!(
+                cycle.channels[0].axi_now, event.channels[0].axi_now,
+                "{:?}: channel clocks diverge",
+                cfg.addr
+            );
+        }
+        // and the per-batch ENGINE= override selects the engine too
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let mut cfg = PatternConfig::seq_read_burst(8, 400);
+        let base = p.run_batch(0, &cfg).unwrap();
+        cfg.engine = Some(EngineKind::Event);
+        let ovr = p.run_batch(0, &cfg).unwrap();
+        assert_eq!(base.counters, ovr.counters, "ENGINE= override diverges");
+    }
+
+    #[test]
+    fn deadlock_guard_fires_identically_across_engines() {
+        // Regression (event-core introduction): a time-skip past `limit`
+        // must not overshoot silently — the leap is clamped so both
+        // engines bail at exactly the limit with the same diagnostic.
+        let mut design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        // a sparse injection schedule makes the event engine *want* to
+        // leap far beyond the tiny limit below
+        design.controller.addr_cmd_interval_axi = 64;
+        let cfg = PatternConfig::seq_read_burst(8, 400);
+        let mut errs = Vec::new();
+        for engine in EngineKind::ALL {
+            let mut p = Platform::new(design.clone());
+            let state = &mut p.channels[0];
+            let mut tg = TrafficGen::with_frontend(
+                cfg.clone(),
+                design.axi_beat_bytes(),
+                design.geometry,
+                design.controller.outstanding_cap,
+                design.controller.addr_cmd_interval_axi,
+                design.controller.serial_frontend,
+            );
+            let err = drive_batch(engine, state, &mut tg, &cfg, 10).unwrap_err();
+            assert_eq!(state.axi_now, 10, "{engine}: must stop at exactly the limit");
+            errs.push(err.to_string());
+        }
+        assert_eq!(errs[0], errs[1], "engines must report the same diagnostic");
+        assert!(errs[0].contains("batch deadlock"), "{}", errs[0]);
+        assert!(errs[0].contains("after 10 fabric cycles"), "{}", errs[0]);
     }
 }

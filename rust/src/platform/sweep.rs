@@ -32,8 +32,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
     format_channel_mix, parse_channel_mix, parse_controller_tokens, parse_kv_text,
-    parse_pattern_config, ChannelMix, ControllerParams, DesignConfig, PatternConfig, SchedKind,
-    SpeedBin,
+    parse_pattern_config, ChannelMix, ControllerParams, DesignConfig, EngineKind, PatternConfig,
+    SchedKind, SpeedBin,
 };
 use crate::ddr4::MappingPolicy;
 use crate::platform::Platform;
@@ -67,6 +67,13 @@ pub struct SweepSpec {
     /// own channel count (= the number of channels it configures), so
     /// mix jobs do not multiply with the `channels` axis.
     pub mixes: Vec<(String, ChannelMix)>,
+    /// Simulation engine every job runs under. Not a cartesian axis: the
+    /// engines are bit-identical by contract (only wall-clock differs),
+    /// so sweeping both would double the grid for measurement-free jobs.
+    /// It is also deliberately absent from the artifact stems and
+    /// JSON/CSV labels — a cycle sweep and an event sweep of the same
+    /// spec produce identically-named, `compare`-able artifacts.
+    pub engine: EngineKind,
 }
 
 /// Named pattern preset, by the names the CLI accepts
@@ -110,6 +117,7 @@ impl SweepSpec {
                 .map(|n| preset(n).expect("builtin preset"))
                 .collect(),
             mixes: Vec::new(),
+            engine: EngineKind::default(),
         }
     }
 
@@ -120,6 +128,7 @@ impl SweepSpec {
     /// channels = 1, 2
     /// mappings = row_col_bank, xor_hash
     /// scheds = fcfs, frfcfs, frfcfs-cap, closed
+    /// engine = event
     /// [patterns]
     /// strided = OP=R ADDR=STRIDE STRIDE=64k BURST=4 BATCH=2048
     /// chase   = OP=R ADDR=CHASE SEED=7 WSET=4m SIG=BLK BATCH=1024 BURST=1
@@ -142,13 +151,15 @@ impl SweepSpec {
                 && key != "channels"
                 && key != "mappings"
                 && key != "scheds"
+                && key != "engine"
                 && !key.starts_with("patterns.")
                 && !key.starts_with("knobs.")
                 && !key.starts_with("mixes.")
             {
                 bail!(
                     "unknown sweep spec key `{key}` (expected `speeds`, `channels`, \
-                     `mappings`, `scheds`, or `[patterns]`/`[knobs]`/`[mixes]` entries)"
+                     `mappings`, `scheds`, `engine`, or `[patterns]`/`[knobs]`/`[mixes]` \
+                     entries)"
                 );
             }
         }
@@ -164,6 +175,10 @@ impl SweepSpec {
         }
         if let Some(v) = map.get("scheds") {
             spec.scheds = parse_sched_list(v)?;
+        }
+        if let Some(v) = map.get("engine") {
+            spec.engine = EngineKind::parse(v)
+                .ok_or_else(|| anyhow!("engine: unknown engine `{v}` (expected cycle|event)"))?;
         }
         let knobs: Vec<(String, ControllerParams)> = map
             .iter()
@@ -260,6 +275,7 @@ impl SweepSpec {
                                     knob: knob.clone(),
                                     params: *params,
                                     sched,
+                                    engine: self.engine,
                                     label: label.clone(),
                                     cfg: cfg.clone(),
                                     mix: None,
@@ -293,6 +309,7 @@ impl SweepSpec {
                                 knob: knob.clone(),
                                 params: *params,
                                 sched,
+                                engine: self.engine,
                                 label: label.clone(),
                                 cfg: mix.get(0).expect("mix covers channel 0").clone(),
                                 mix: Some(mix.clone()),
@@ -460,6 +477,9 @@ pub struct SweepJob {
     pub params: ControllerParams,
     /// Scheduler/page policy of the design's controller.
     pub sched: SchedKind,
+    /// Simulation engine the job runs under (absent from artifact
+    /// labels: both engines produce bit-identical measurements).
+    pub engine: EngineKind,
     /// Pattern/mix label (artifact naming).
     pub label: String,
     /// The traffic pattern to run (for mix jobs: channel 0's pattern;
@@ -489,16 +509,19 @@ fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
     design.geometry.mapping = job.mapping;
     design.controller = job.params;
     design.controller.sched = job.sched;
+    design.engine = job.engine;
     design.validate().map_err(|e| anyhow!("{e}"))?;
     let mut platform = Platform::new(design);
     // The job's mapping and scheduler axes are authoritative: a stray
     // pattern-level (or per-channel) MAP=/SCHED= override would run a
     // different policy than the artifact labels claim (SweepSpec::parse
     // rejects them; this guards programmatic specs too, and keeps the
-    // echo truthful).
+    // echo truthful). ENGINE= is stripped for the same reason: the
+    // job-level engine choice is what ran.
     let mut job = job.clone();
     job.cfg.mapping = None;
     job.cfg.sched = None;
+    job.cfg.engine = None;
     if let Some(mix) = &job.mix {
         job.mix = Some(mix.without_overrides());
     }
@@ -731,21 +754,28 @@ pub fn summary_json(outcomes: &[SweepOutcome], source: &str) -> String {
     )
 }
 
+/// Artifact file stem of one outcome. Deliberately engine-free: a cycle
+/// sweep and an event sweep of the same spec must label their artifacts
+/// identically so `compare` lines them up job for job.
+pub fn artifact_stem(o: &SweepOutcome) -> String {
+    format!(
+        "{:03}_{}_{}ch_{}_{}_{}_{}",
+        o.job.id,
+        o.job.speed.data_rate_mts(),
+        o.job.channels,
+        sanitize_label(&o.job.mapping.name()),
+        sanitize_label(&o.job.knob),
+        sanitize_label(&o.job.sched.name()),
+        sanitize_label(&o.job.label)
+    )
+}
+
 /// Write per-job JSON + CSV artifacts and the campaign summary into
 /// `dir` (created if missing). Returns the summary path.
 pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf> {
     std::fs::create_dir_all(dir)?;
     for o in outcomes {
-        let stem = format!(
-            "{:03}_{}_{}ch_{}_{}_{}_{}",
-            o.job.id,
-            o.job.speed.data_rate_mts(),
-            o.job.channels,
-            sanitize_label(&o.job.mapping.name()),
-            sanitize_label(&o.job.knob),
-            sanitize_label(&o.job.sched.name()),
-            sanitize_label(&o.job.label)
-        );
+        let stem = artifact_stem(o);
         std::fs::write(dir.join(format!("{stem}.json")), job_json(o))?;
         std::fs::write(dir.join(format!("{stem}.csv")), job_csv(o))?;
     }
@@ -1089,6 +1119,59 @@ mod tests {
         assert!(parse_mix_list("0:SEQ+1:RND,SCHED=closed").is_err());
         assert!(parse_mix_list("").is_err());
         assert!(parse_mix_list("0:NOPE").is_err());
+    }
+
+    #[test]
+    fn engine_key_parses_and_rejects_unknown() {
+        let spec = SweepSpec::parse("engine = event\n").unwrap();
+        assert_eq!(spec.engine, EngineKind::Event);
+        assert!(spec.expand().iter().all(|j| j.engine == EngineKind::Event));
+        assert_eq!(SweepSpec::parse("speeds = 1600\n").unwrap().engine, EngineKind::Cycle);
+        let err = SweepSpec::parse("engine = wheel\n").unwrap_err().to_string();
+        assert!(err.contains("unknown engine `wheel`"), "{err}");
+    }
+
+    #[test]
+    fn engines_produce_identical_artifacts_modulo_wall_clock() {
+        // The whole point of the event core: same spec, same artifact
+        // stems, bit-identical measurements — only wall_ms may differ.
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("bank").unwrap(), preset("chase").unwrap()];
+        for (_, cfg) in &mut spec.patterns {
+            cfg.batch_len = 64;
+        }
+        spec.mixes = vec![("hetero".to_string(), mini_mix())];
+        let cycle = run_sweep(spec.expand(), 1).unwrap();
+        spec.engine = EngineKind::Event;
+        let event = run_sweep(spec.expand(), 1).unwrap();
+        assert_eq!(cycle.len(), event.len());
+        for (a, b) in cycle.iter().zip(&event) {
+            assert_eq!(artifact_stem(a), artifact_stem(b), "stems label identically");
+            assert_eq!(a.per_channel.len(), b.per_channel.len());
+            for (ca, cb) in a.per_channel.iter().zip(&b.per_channel) {
+                assert_eq!(ca.counters, cb.counters, "{}: counters diverge", a.job.label);
+            }
+            // artifact JSON is byte-identical except the wall_ms line
+            let strip = |o: &SweepOutcome| -> String {
+                job_json(o).lines().filter(|l| !l.contains("\"wall_ms\"")).collect()
+            };
+            assert_eq!(strip(a), strip(b), "{}: artifact JSON diverges", a.job.label);
+        }
+    }
+
+    #[test]
+    fn run_job_strips_pattern_level_engine_overrides() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("seq").unwrap()];
+        spec.patterns[0].1.batch_len = 32;
+        spec.patterns[0].1.engine = Some(EngineKind::Event);
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        assert_eq!(outcomes[0].job.cfg.engine, None, "override stripped from the echo");
+        assert_eq!(outcomes[0].job.engine, EngineKind::Cycle);
     }
 
     #[test]

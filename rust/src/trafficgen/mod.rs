@@ -37,7 +37,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::axi::{AxiTxn, TxnId};
 use crate::config::{OpMix, PatternConfig, Signaling};
 use crate::controller::{Completion, MemController, MemRequest};
-use crate::ddr4::DramGeometry;
+use crate::ddr4::{DramGeometry, AXI_RATIO};
 use crate::rng::SplitMix64;
 use crate::stats::BatchCounters;
 
@@ -560,6 +560,78 @@ impl TrafficGen {
         if self.is_done() && self.counters.total_cycles == 0 {
             self.counters.total_cycles = now;
         }
+    }
+
+    /// Event-engine contract: the earliest batch-relative fabric cycle
+    /// after `now` (the cycle [`Self::tick_axi`] just ran at, with DRAM
+    /// clock `dram_now`) at which the TG could do anything, assuming no
+    /// completion arrives in between (completions publish their own wake
+    /// through [`MemController::next_completion_at`]). `u64::MAX` means
+    /// only an external event can wake the TG. The bound is
+    /// conservative — it may be earlier than the first real action
+    /// (costing a no-op tick) but never later, which is what keeps the
+    /// event engine bit-exact: every cycle that *could* mutate TG or
+    /// controller state is executed.
+    pub fn next_event(&self, now: u64, dram_now: u64, ctrl: &MemController) -> u64 {
+        // R beats drain one per fabric cycle while anything is queued.
+        if !self.r_queue.is_empty() {
+            return now + 1;
+        }
+        let mut wake = u64::MAX;
+        // Issue phase: when is the next AR/AW accept possible?
+        match self.cfg.signaling {
+            Signaling::Blocking => {
+                if self.blk_next < self.plan.len() && self.total_outstanding() == 0 {
+                    return now + 1;
+                }
+            }
+            Signaling::NonBlocking | Signaling::Aggressive => {
+                if self.rd_next < self.rd_idx.len()
+                    && self.rd_outstanding < self.outstanding_cap
+                    && self.rd_unroll.len() < UNROLL_TXNS
+                {
+                    wake = wake.min(self.next_ar_at.max(now + 1));
+                }
+                if self.wr_next < self.wr_idx.len()
+                    && self.wr_outstanding < self.outstanding_cap
+                    && self.wr_unroll.len() < UNROLL_TXNS
+                {
+                    wake = wake.min(self.next_aw_at.max(now + 1));
+                }
+            }
+        }
+        // Read unrolling: a mid-unroll head retries every cycle; a fresh
+        // head under the serial front end waits for the native queue to
+        // drain (a controller event) or for the pure time gate.
+        if let Some(head) = self.rd_unroll.front() {
+            if !self.serial_frontend || head.next > 0 || !ctrl.read_queue_empty() {
+                return now + 1;
+            }
+            let gate = ctrl.frontend_gate(false);
+            if dram_now < gate {
+                wake = wake.min(now + (gate - dram_now).div_ceil(AXI_RATIO));
+            } else {
+                return now + 1;
+            }
+        }
+        // Write streaming: same structure over the oldest entry that
+        // still has beats to stream or a burst push to retry (entries
+        // merely awaiting their B response publish no wake of their own).
+        if let Some(head) =
+            self.wr_unroll.iter().find(|u| u.pending_push || u.cur < u.bursts.len())
+        {
+            let fresh = head.cur == 0 && head.beats_in_cur == 0 && !head.pending_push;
+            if !self.serial_frontend || !fresh || !ctrl.write_queue_empty() {
+                return now + 1;
+            }
+            let gate = ctrl.frontend_gate(true);
+            if dram_now < gate {
+                wake = wake.min(now + (gate - dram_now).div_ceil(AXI_RATIO));
+            } else {
+                return now + 1;
+            }
+        }
+        wake
     }
 
     /// Verify collected read-back samples against expected payloads using

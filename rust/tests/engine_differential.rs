@@ -1,0 +1,170 @@
+//! Differential pinning of the event-driven time-skip engine against the
+//! frozen cycle-stepped oracle.
+//!
+//! The event engine may only leap over fabric cycles in which the
+//! canonical loop body is provably a no-op, so *every* observable — the
+//! hardware counters (including both latency histograms), the derived
+//! latency percentiles, and the per-device command statistics (compared
+//! through the deterministic energy breakdown they feed) — must be
+//! bit-identical across engines for any workload, scheduler, address
+//! mapping, and heterogeneous channel mix. Randomized patterns come from
+//! the seeded in-tree property kit (`DDR4BENCH_PT_SEED` reproduces a
+//! failing run exactly).
+
+use ddr4bench::config::{
+    AddrMode, ChannelMix, DesignConfig, EngineKind, PatternConfig, SchedKind, Signaling, SpeedBin,
+};
+use ddr4bench::ddr4::MappingPolicy;
+use ddr4bench::platform::Platform;
+use ddr4bench::rng::SplitMix64;
+use ddr4bench::stats::BatchStats;
+use ddr4bench::testkit::check;
+
+/// Draw a randomized pattern across the whole access-pattern engine:
+/// every address mode, a spread of burst/batch sizes, and (30% of the
+/// time) blocking signaling — the idle-heavy regime where the event
+/// engine leaps hardest.
+fn random_pattern(rng: &mut SplitMix64) -> PatternConfig {
+    let batch = 64 + rng.below(192) as u32;
+    let burst = [1u32, 4, 8, 32][rng.below(4) as usize];
+    let mut cfg = match rng.below(6) {
+        0 => PatternConfig::seq_read_burst(burst, batch),
+        1 => PatternConfig::rnd_read_burst(burst, batch, rng.next_u64()),
+        2 => PatternConfig::bank_conflict_read(1, batch, rng.next_u64()),
+        3 => {
+            PatternConfig::pointer_chase_read(1 << 18, 64 + rng.below(64) as u32, rng.next_u64())
+        }
+        4 => PatternConfig::strided_read(64 << 10, burst, batch),
+        _ => PatternConfig::mixed(AddrMode::Sequential, burst, batch),
+    };
+    if rng.percent(30) {
+        cfg.signaling = Signaling::Blocking;
+    }
+    cfg
+}
+
+/// Every observable of two batches must match bit for bit.
+fn assert_same(a: &BatchStats, b: &BatchStats, what: &str) -> Result<(), String> {
+    if a.counters != b.counters {
+        return Err(format!(
+            "{what}: counters diverge\n  cycle: {:?}\n  event: {:?}",
+            a.counters, b.counters
+        ));
+    }
+    for pct in [50.0, 90.0, 95.0, 99.0] {
+        let (ra, rb) = (a.read_latency_pct_ns(pct), b.read_latency_pct_ns(pct));
+        if ra.to_bits() != rb.to_bits() {
+            return Err(format!("{what}: read p{pct} diverges ({ra} vs {rb})"));
+        }
+        let (wa, wb) = (a.write_latency_pct_ns(pct), b.write_latency_pct_ns(pct));
+        if wa.to_bits() != wb.to_bits() {
+            return Err(format!("{what}: write p{pct} diverges ({wa} vs {wb})"));
+        }
+    }
+    // the energy breakdown is a pure function of the per-device command
+    // stats delta (ACT/PRE/RD/WR/REF counts) and the batch's DRAM-cycle
+    // span: bit-equality here pins both, without platform internals
+    let ea = [
+        a.energy.activate_nj,
+        a.energy.read_nj,
+        a.energy.write_nj,
+        a.energy.refresh_nj,
+        a.energy.background_nj,
+    ];
+    let eb = [
+        b.energy.activate_nj,
+        b.energy.read_nj,
+        b.energy.write_nj,
+        b.energy.refresh_nj,
+        b.energy.background_nj,
+    ];
+    if ea.iter().zip(&eb).any(|(x, y)| x.to_bits() != y.to_bits()) {
+        return Err(format!("{what}: device-stat-derived energy diverges ({ea:?} vs {eb:?})"));
+    }
+    Ok(())
+}
+
+/// Run `cfg` on a cycle-engine platform and an event-engine platform —
+/// two batches each, so the second starts on a nonzero, engine-advanced
+/// channel clock — and compare every observable.
+fn run_differential(
+    cfg: &PatternConfig,
+    sched: SchedKind,
+    mapping: MappingPolicy,
+) -> Result<(), String> {
+    let mut design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+    design.controller.sched = sched;
+    design.geometry.mapping = mapping;
+    let mut cycle = Platform::new(design.clone());
+    design.engine = EngineKind::Event;
+    let mut event = Platform::new(design);
+    for batch in 0..2 {
+        let a = cycle.run_batch(0, cfg).map_err(|e| e.to_string())?;
+        let b = event.run_batch(0, cfg).map_err(|e| e.to_string())?;
+        assert_same(&a, &b, &format!("batch {batch}"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn event_engine_bit_identical_across_all_schedulers() {
+    check("engine differential across schedulers", 4, random_pattern, |cfg| {
+        for sched in SchedKind::ALL {
+            run_differential(cfg, sched, MappingPolicy::row_col_bank())
+                .map_err(|e| format!("{sched}: {e}"))?;
+        }
+        Ok(())
+    })
+}
+
+#[test]
+fn event_engine_bit_identical_across_mappings() {
+    check("engine differential across mappings", 3, random_pattern, |cfg| {
+        for mapping in MappingPolicy::builtins() {
+            run_differential(cfg, SchedKind::FrFcfs, mapping)
+                .map_err(|e| format!("{mapping}: {e}"))?;
+        }
+        Ok(())
+    })
+}
+
+#[test]
+fn event_engine_bit_identical_on_channel_mixes() {
+    check(
+        "engine differential across channel mixes",
+        4,
+        |rng| {
+            let n = 2 + rng.below(2) as usize; // 2 or 3 channels
+            (0..n).map(|_| random_pattern(rng)).collect::<Vec<_>>()
+        },
+        |cfgs| {
+            let mix = ChannelMix::new(cfgs.clone()).map_err(|e| e.to_string())?;
+            let mut design = DesignConfig::with_channels(cfgs.len(), SpeedBin::Ddr4_1600);
+            let mut cycle = Platform::new(design.clone());
+            design.engine = EngineKind::Event;
+            let mut event = Platform::new(design);
+            let a = cycle.run_batch_mix(&mix).map_err(|e| e.to_string())?;
+            let b = event.run_batch_mix(&mix).map_err(|e| e.to_string())?;
+            for (ch, (sa, sb)) in a.iter().zip(&b).enumerate() {
+                assert_same(sa, sb, &format!("channel {ch}"))?;
+            }
+            Ok(())
+        },
+    )
+}
+
+#[test]
+fn engine_override_token_matches_design_level_selection() {
+    // a per-batch ENGINE=event override on a cycle-default platform must
+    // agree with the cycle oracle just like a design-level selection
+    check("engine differential via ENGINE= override", 3, random_pattern, |cfg| {
+        let design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        let mut base = Platform::new(design.clone());
+        let mut ovr = Platform::new(design);
+        let a = base.run_batch(0, cfg).map_err(|e| e.to_string())?;
+        let mut cfg2 = cfg.clone();
+        cfg2.engine = Some(EngineKind::Event);
+        let b = ovr.run_batch(0, &cfg2).map_err(|e| e.to_string())?;
+        assert_same(&a, &b, "override batch")
+    })
+}
