@@ -988,9 +988,74 @@ impl ChannelMix {
     }
 }
 
+/// Per-session resource limits of the multi-session bench server
+/// ([`crate::hostctrl::server`]): how much of the shared machine one
+/// client session may claim. Violations surface as named `ERR`
+/// diagnostics (`LIMIT_CHANNELS` / `LIMIT_BATCH` / `LIMIT_QUEUE`) so
+/// scripted clients can tell a quota rejection from a protocol error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionLimits {
+    /// Highest channel index a session may touch is `max_channels - 1`
+    /// (also caps how many jobs one `RUNALL` may enqueue).
+    pub max_channels: usize,
+    /// Largest `BATCH=` a session may stage on any channel.
+    pub max_batch: u32,
+    /// Most runs one command may enqueue on the shared pool (a `RUNMIX`
+    /// enqueues one per configured channel).
+    pub max_queued_runs: usize,
+}
+
+impl SessionLimits {
+    /// No limits at all — what the single-user serial transports
+    /// (in-memory REPL, `serve_tcp`) grant, preserving their historical
+    /// behaviour.
+    pub const UNLIMITED: SessionLimits = SessionLimits {
+        max_channels: usize::MAX,
+        max_batch: u32::MAX,
+        max_queued_runs: usize::MAX,
+    };
+
+    /// Validate invariants (every limit must admit at least one unit).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_channels == 0 {
+            return Err(ConfigError::new("max_channels must be >= 1"));
+        }
+        if self.max_batch == 0 {
+            return Err(ConfigError::new("max_batch must be >= 1"));
+        }
+        if self.max_queued_runs == 0 {
+            return Err(ConfigError::new("max_queued_runs must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+impl Default for SessionLimits {
+    /// Server defaults: the full 3-channel design, batches up to 1 Mi
+    /// transactions, 8 queued runs per command.
+    fn default() -> Self {
+        Self { max_channels: 3, max_batch: 1 << 20, max_queued_runs: 8 }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn session_limits_defaults_and_validation() {
+        let d = SessionLimits::default();
+        assert!(d.validate().is_ok());
+        assert_eq!(d.max_channels, 3);
+        assert!(SessionLimits::UNLIMITED.validate().is_ok());
+        for bad in [
+            SessionLimits { max_channels: 0, ..d },
+            SessionLimits { max_batch: 0, ..d },
+            SessionLimits { max_queued_runs: 0, ..d },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
+    }
 
     #[test]
     fn speed_bin_clocks_match_table2() {

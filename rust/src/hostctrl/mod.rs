@@ -2,10 +2,32 @@
 //!
 //! In the paper, a host PC drives the platform over UART: it configures
 //! each traffic generator independently, launches batches, and reads the
-//! performance counters back. This module implements that protocol over a
-//! byte-stream transport — an in-memory link standing in for the UART
-//! (used by tests and `examples/host_session.rs`) or a TCP listener
-//! ([`serve_tcp`]) for interactive use.
+//! performance counters back. This module implements that protocol over
+//! byte-stream transports, layered so every transport speaks the *same*
+//! API:
+//!
+//! - [`proto`] — the typed protocol surface: [`Request`] / [`Response`]
+//!   enums with exactly one parse path ([`parse_request`]) and one
+//!   render path ([`render_response`]), plus the [`COMMANDS`] reference
+//!   table that `HELP` and the README are generated from.
+//! - [`session`] — [`Session`]: per-client state (staged configs,
+//!   last-run stats, [`SessionLimits`](crate::config::SessionLimits))
+//!   and the dispatch from `Request` to `Response`. Sessions execute
+//!   inline (the serial REPL) or on a shared
+//!   [`RunPool`](crate::platform::RunPool), and can stream
+//!   `STREAM <label> MS=<n>` heartbeats during long pooled runs
+//!   (`STREAM ON|OFF`).
+//! - [`server`] — [`BenchServer`]: the concurrent multi-session TCP
+//!   front end. Each client gets an isolated platform; all batches
+//!   execute on one bounded worker pool so K sessions cannot
+//!   oversubscribe the machine.
+//!
+//! [`HostController`] is the historical single-user façade — an inline
+//! [`Session`] behind the original `new`/`handle_line`/`serve` API —
+//! and [`serve_tcp`] the one-session-at-a-time TCP loop (the physical
+//! UART is single-master too). Both are now thin shims over the typed
+//! core, so the wire format below is byte-identical to what they always
+//! spoke.
 //!
 //! ## Protocol (line-oriented, ASCII)
 //!
@@ -21,6 +43,7 @@
 //! MAPPINGS                     → OK MAPPINGS ROW_COL_BANK ... (MAP= names)
 //! SCHEDS                       → OK SCHEDS FCFS FRFCFS ... (SCHED= names)
 //! RESET <ch>                   → OK RESET
+//! STREAM ON|OFF                → OK STREAM ON   (heartbeats on pooled runs)
 //! HELP                         → OK <command list>
 //! QUIT                         → OK BYE (closes the session)
 //! ```
@@ -28,17 +51,18 @@
 //! The whole access-pattern engine is reachable at run time through
 //! `CFG`: `ADDR=SEQ|RND|STRIDE|BANK|CHASE|PHASED` with `SEED=`,
 //! `STRIDE=`, `WSET=` and `PHASES=` parameters — exactly the syntax of
-//! [`parse_pattern_config`], so host sessions can reconfigure a live
-//! platform onto strided, bank-conflict, pointer-chase or phased traffic
-//! between batches without reinstantiation. The same goes for the
-//! address-mapping engine: `MAP=<policy>` re-maps the channel for the
-//! batches that follow (see [`crate::ddr4::MappingPolicy`]) — and for
-//! the scheduler engine: `SCHED=<policy>` swaps the controller's
-//! command-scheduling/page policy live (see
-//! [`crate::controller::sched::SchedKind`]) — and for the simulation
-//! engine: `ENGINE=cycle|event` picks the cycle-stepped oracle or the
-//! event-driven time-skip core for the batches that follow (bit-exact by
-//! contract, so a host can switch freely for speed).
+//! [`parse_pattern_config`](crate::config::parse_pattern_config), so
+//! host sessions can reconfigure a live platform onto strided,
+//! bank-conflict, pointer-chase or phased traffic between batches
+//! without reinstantiation. The same goes for the address-mapping
+//! engine: `MAP=<policy>` re-maps the channel for the batches that
+//! follow (see [`crate::ddr4::MappingPolicy`]) — and for the scheduler
+//! engine: `SCHED=<policy>` swaps the controller's command-scheduling/
+//! page policy live (see [`crate::controller::sched::SchedKind`]) — and
+//! for the simulation engine: `ENGINE=cycle|event` picks the
+//! cycle-stepped oracle or the event-driven time-skip core for the
+//! batches that follow (bit-exact by contract, so a host can switch
+//! freely for speed).
 //!
 //! Heterogeneous per-channel workloads configure in one `CHCFG` command
 //! (whitespace-separated `N:TOKENS,...` channel specs — the
@@ -49,277 +73,74 @@
 //! `CHx=ERR[reason]` (whitespace collapsed to keep the line one token)
 //! while the surviving channels' stats stay readable via `STATS`.
 //! `RUNMIX`'s `AGG_GBS` is the platform aggregate (bytes sum over max
-//! cycles — [`Platform::aggregate`], the same convention as `run` and
-//! the sweep artifacts), *not* `RUNALL`'s sum of per-channel rates: the
-//! two coincide for homogeneous traffic but diverge once channels run
-//! heterogeneous workloads of different durations.
+//! cycles — [`Platform::aggregate_gbs`] with `legacy = false`, the same
+//! convention as `run` and the sweep artifacts), *not* `RUNALL`'s sum
+//! of per-channel rates: the two coincide for homogeneous traffic but
+//! diverge once channels run heterogeneous workloads of different
+//! durations.
 //!
-//! Errors answer `ERR <reason>`; the session stays open.
+//! Errors answer `ERR <reason>`; the session stays open. Sessions with
+//! resource limits name the violated limit in the diagnostic
+//! (`LIMIT_CHANNELS:` / `LIMIT_BATCH:` / `LIMIT_QUEUE:`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::BufRead;
+use std::io::BufReader;
+use std::io::Write;
 
-use crate::config::{
-    format_channel_spec, format_pattern_config, parse_channel_spec, parse_pattern_config,
-    ChannelMix, PatternConfig,
-};
 use crate::platform::Platform;
-use crate::stats::BatchStats;
 
-/// Host-controller session state over a [`Platform`].
+pub mod proto;
+pub mod server;
+pub mod session;
+
+pub use proto::{
+    parse_request, render_request, render_response, CommandInfo, MixCell, Request, Response,
+    COMMANDS,
+};
+pub use server::{BenchServer, ServerConfig, ShutdownHandle};
+pub use session::{serve_stream, Session};
+
+/// Host-controller session state over a [`Platform`] — the historical
+/// single-user façade: an inline, unlimited [`Session`] behind the
+/// original API.
 pub struct HostController {
-    platform: Platform,
-    pending: Vec<PatternConfig>,
-    last: Vec<Option<BatchStats>>,
+    session: Session,
 }
 
 impl HostController {
     /// Wrap a platform.
     pub fn new(platform: Platform) -> Self {
-        let n = platform.channels();
-        Self { platform, pending: vec![PatternConfig::default(); n], last: vec![None; n] }
+        Self { session: Session::inline(platform) }
     }
 
     /// Borrow the wrapped platform.
     pub fn platform(&self) -> &Platform {
-        &self.platform
+        self.session.platform()
     }
 
     /// Take the platform back (end of session).
     pub fn into_platform(self) -> Platform {
-        self.platform
-    }
-
-    fn parse_channel(&self, tok: Option<&str>) -> Result<usize, String> {
-        let ch: usize = tok
-            .ok_or("missing channel index")?
-            .parse()
-            .map_err(|_| "channel must be an integer".to_string())?;
-        if ch >= self.platform.channels() {
-            return Err(format!(
-                "channel {ch} out of range (design has {})",
-                self.platform.channels()
-            ));
-        }
-        Ok(ch)
+        self.session.into_platform()
     }
 
     /// Handle one command line; returns the response line (without
     /// newline). `QUIT` returns `OK BYE` — transports treat it as EOF.
     pub fn handle_line(&mut self, line: &str) -> String {
-        match self.handle_inner(line) {
-            Ok(resp) => format!("OK {resp}"),
-            Err(e) => format!("ERR {e}"),
-        }
-    }
-
-    fn handle_inner(&mut self, line: &str) -> Result<String, String> {
-        let mut toks = line.split_whitespace();
-        let cmd = toks.next().unwrap_or("").to_ascii_uppercase();
-        match cmd.as_str() {
-            "" => Err("empty command".into()),
-            "HELP" => Ok(
-                "COMMANDS: INFO CFG CHCFG RUN RUNALL RUNMIX STATS PATTERNS MAPPINGS \
-                 SCHEDS RESET HELP QUIT"
-                    .into(),
-            ),
-            "PATTERNS" => {
-                // run-time selectable address modes of the pattern engine
-                Ok("PATTERNS SEQ RND STRIDE BANK CHASE PHASED".into())
-            }
-            "SCHEDS" => {
-                // run-time selectable scheduler/page policies (SCHED= token)
-                let names: Vec<String> = crate::controller::SchedKind::ALL
-                    .iter()
-                    .map(|k| k.name().to_ascii_uppercase())
-                    .collect();
-                Ok(format!("SCHEDS {}", names.join(" ")))
-            }
-            "MAPPINGS" => {
-                // run-time selectable address-mapping policies (MAP= token);
-                // custom bit orders like MAP=RoBaBgCo are also accepted
-                let names: Vec<String> = crate::ddr4::MappingPolicy::builtins()
-                    .iter()
-                    .map(|m| m.name().to_ascii_uppercase())
-                    .collect();
-                Ok(format!("MAPPINGS {} CUSTOM", names.join(" ")))
-            }
-            "INFO" => {
-                let d = self.platform.design();
-                Ok(format!(
-                    "CHANNELS={} SPEED={} AXI_MHZ={:.0} PHY_MHZ={:.0} AXI_BITS={} XLA={}",
-                    d.channels,
-                    d.speed,
-                    d.speed.axi_clock_mhz(),
-                    d.speed.phy_clock_mhz(),
-                    d.axi_data_width_bits,
-                    if self.platform.has_runtime() { 1 } else { 0 },
-                ))
-            }
-            "CFG" => {
-                let ch = self.parse_channel(toks.next())?;
-                let rest: Vec<&str> = toks.collect();
-                let cfg = parse_pattern_config(&rest).map_err(|e| e.to_string())?;
-                let echo = format_pattern_config(&cfg);
-                self.pending[ch] = cfg;
-                Ok(format!("CFG CH={ch} {echo}"))
-            }
-            "CHCFG" => {
-                // one or more N:TOKENS,... channel specs in one command
-                let specs: Vec<&str> = toks.collect();
-                if specs.is_empty() {
-                    return Err("CHCFG needs at least one N:TOKENS,... channel spec".into());
-                }
-                let mut staged = Vec::with_capacity(specs.len());
-                for spec in specs {
-                    let (ch, cfg) = parse_channel_spec(spec).map_err(|e| e.to_string())?;
-                    if ch >= self.platform.channels() {
-                        return Err(format!(
-                            "channel {ch} out of range (design has {})",
-                            self.platform.channels()
-                        ));
-                    }
-                    if staged.iter().any(|(c, _)| *c == ch) {
-                        return Err(format!("channel {ch} configured twice in one CHCFG"));
-                    }
-                    staged.push((ch, cfg));
-                }
-                let mut echos = Vec::with_capacity(staged.len());
-                for (ch, cfg) in staged {
-                    echos.push(format_channel_spec(ch, &cfg));
-                    self.pending[ch] = cfg;
-                }
-                Ok(format!("CHCFG {}", echos.join(" ")))
-            }
-            "RUN" => {
-                let ch = self.parse_channel(toks.next())?;
-                let cfg = self.pending[ch].clone();
-                let stats = self.platform.run_batch(ch, &cfg).map_err(|e| e.to_string())?;
-                let resp = format!(
-                    "RUN CH={ch} TXNS={} CYCLES={}",
-                    stats.counters.rd_txns + stats.counters.wr_txns,
-                    stats.counters.total_cycles
-                );
-                self.last[ch] = Some(stats);
-                Ok(resp)
-            }
-            "RUNALL" => {
-                // run each channel's own pending pattern
-                let mut agg = 0.0;
-                for ch in 0..self.platform.channels() {
-                    let cfg = self.pending[ch].clone();
-                    let stats = self.platform.run_batch(ch, &cfg).map_err(|e| e.to_string())?;
-                    agg += stats.total_throughput_gbs();
-                    self.last[ch] = Some(stats);
-                }
-                Ok(format!("RUNALL CHANNELS={} AGG_GBS={agg:.3}", self.platform.channels()))
-            }
-            "RUNMIX" => {
-                // run every channel's pending pattern concurrently (the
-                // heterogeneous mix executive); surviving channels'
-                // stats stay readable when one fails
-                let mix = ChannelMix::new(self.pending.clone()).map_err(|e| e.to_string())?;
-                let results =
-                    self.platform.run_batch_mix_results(&mix).map_err(|e| e.to_string())?;
-                let mut survivors = Vec::new();
-                let mut cells = Vec::with_capacity(results.len());
-                for (ch, result) in results.into_iter().enumerate() {
-                    match result {
-                        Ok(stats) => {
-                            cells.push(format!("CH{ch}_GBS={:.3}", stats.total_throughput_gbs()));
-                            survivors.push(stats.clone());
-                            self.last[ch] = Some(stats);
-                        }
-                        Err(e) => {
-                            // single-line protocol: collapse the reason's
-                            // whitespace so it stays one token
-                            let msg = e.to_string();
-                            let msg = msg.split_whitespace().collect::<Vec<_>>().join("_");
-                            cells.push(format!("CH{ch}=ERR[{msg}]"));
-                            self.last[ch] = None;
-                        }
-                    }
-                }
-                if survivors.is_empty() {
-                    return Err(format!("every channel failed: {}", cells.join(" ")));
-                }
-                // platform aggregate (bytes sum over max cycles), the
-                // same convention as `run` and the sweep artifacts —
-                // per-rate sums diverge once channels are heterogeneous
-                let agg = Platform::aggregate(&survivors).total_throughput_gbs();
-                Ok(format!(
-                    "RUNMIX CHANNELS={} OK={} AGG_GBS={agg:.3} {}",
-                    self.platform.channels(),
-                    survivors.len(),
-                    cells.join(" ")
-                ))
-            }
-            "STATS" => {
-                let ch = self.parse_channel(toks.next())?;
-                let s = self.last[ch].as_ref().ok_or("no batch has run on this channel")?;
-                let c = &s.counters;
-                Ok(format!(
-                    "CH={ch} RD_TXNS={} WR_TXNS={} RD_BYTES={} WR_BYTES={} RD_CYCLES={} \
-                     WR_CYCLES={} TOTAL_CYCLES={} RD_GBS={:.3} WR_GBS={:.3} TOT_GBS={:.3} \
-                     RD_LAT_NS={:.1} WR_LAT_NS={:.1} RD_P50_NS={:.1} RD_P95_NS={:.1} \
-                     RD_P99_NS={:.1} WR_P50_NS={:.1} WR_P95_NS={:.1} WR_P99_NS={:.1} \
-                     REFRESH_STALL={} MISMATCHES={} ENERGY_NJ={:.0} PJ_BIT={:.2} PWR_MW={:.1}",
-                    c.rd_txns,
-                    c.wr_txns,
-                    c.rd_bytes,
-                    c.wr_bytes,
-                    c.rd_cycles,
-                    c.wr_cycles,
-                    c.total_cycles,
-                    s.read_throughput_gbs(),
-                    s.write_throughput_gbs(),
-                    s.total_throughput_gbs(),
-                    s.read_latency_ns(),
-                    s.write_latency_ns(),
-                    s.read_latency_pct_ns(50.0),
-                    s.read_latency_pct_ns(95.0),
-                    s.read_latency_pct_ns(99.0),
-                    s.write_latency_pct_ns(50.0),
-                    s.write_latency_pct_ns(95.0),
-                    s.write_latency_pct_ns(99.0),
-                    c.refresh_stall_dram_cycles,
-                    c.mismatches,
-                    s.energy.total_nj(),
-                    s.pj_per_bit().unwrap_or(0.0),
-                    s.avg_power_mw(),
-                ))
-            }
-            "RESET" => {
-                let ch = self.parse_channel(toks.next())?;
-                self.pending[ch] = PatternConfig::default();
-                self.last[ch] = None;
-                Ok("RESET".into())
-            }
-            "QUIT" => Ok("BYE".into()),
-            other => Err(format!("unknown command `{other}` (try HELP)")),
-        }
+        self.session.handle_line(line)
     }
 
     /// Drive a whole session over reader/writer streams (the UART loop).
-    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> std::io::Result<()> {
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            let resp = self.handle_line(&line);
-            writeln!(writer, "{resp}")?;
-            if resp == "OK BYE" {
-                break;
-            }
-        }
-        writer.flush()
+    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, writer: W) -> std::io::Result<()> {
+        serve_stream(&mut self.session, reader, writer)
     }
 }
 
 /// Serve the host protocol on a TCP socket (one session at a time — the
-/// physical UART is single-master too). Binds to `addr` (e.g.
-/// "127.0.0.1:5557"); returns after `max_sessions` sessions (None = run
-/// forever).
+/// physical UART is single-master too; use [`BenchServer`] for
+/// concurrent clients). Binds to `addr` (e.g. "127.0.0.1:5557");
+/// returns after `max_sessions` sessions (None = run forever). A
+/// failing connection (I/O error mid-session) is logged and counted,
+/// never tears the listener down.
 pub fn serve_tcp(
     mut host: HostController,
     addr: &str,
@@ -329,9 +150,13 @@ pub fn serve_tcp(
     eprintln!("ddr4bench host controller listening on {addr}");
     let mut served = 0;
     for stream in listener.incoming() {
-        let stream = stream?;
-        let reader = BufReader::new(stream.try_clone()?);
-        host.serve(reader, stream)?;
+        let outcome = stream.and_then(|s| {
+            let reader = BufReader::new(s.try_clone()?);
+            host.serve(reader, s)
+        });
+        if let Err(e) = outcome {
+            eprintln!("ddr4bench: session error: {e}");
+        }
         served += 1;
         if max_sessions.is_some_and(|m| served >= m) {
             break;

@@ -1,0 +1,548 @@
+//! The typed host-protocol surface: one parse path, one render path.
+//!
+//! Every transport — the in-memory UART loop, [`crate::hostctrl::serve_tcp`],
+//! and the concurrent [`crate::hostctrl::server`] — speaks the same
+//! line-oriented ASCII wire format, but none of them interprets command
+//! strings themselves: a line parses into a [`Request`] here
+//! ([`parse_request`]), the session core maps it to a [`Response`], and
+//! [`render_response`] produces the exact reply bytes. Protocol behaviour
+//! is therefore specified (and tested) exactly once; the transports are
+//! thin byte shovels.
+//!
+//! [`COMMANDS`] is the machine-readable command reference — one entry per
+//! [`Request`] variant with syntax, reply shape and error cases. The
+//! `HELP` reply and the README's protocol table are both derived from it
+//! (a test pins the README rows to the table), so the three cannot drift
+//! apart.
+//!
+//! Wire compatibility is a contract: the rendered `OK`/`ERR` lines are
+//! byte-identical to the pre-typed `handle_line` implementation, pinned
+//! by `rust/tests/host_protocol.rs`.
+
+use crate::config::{
+    format_channel_spec, format_pattern_config, parse_channel_spec, parse_pattern_config,
+    PatternConfig, SpeedBin,
+};
+use crate::stats::BatchStats;
+
+/// A parsed protocol command. Channel *syntax* is validated here; channel
+/// *range* (and per-session resource limits) are session state and are
+/// checked by [`crate::hostctrl::Session`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// `INFO` — design summary.
+    Info,
+    /// `CFG <ch> KEY=VALUE ...` — stage a pattern on one channel.
+    Cfg { ch: usize, cfg: Box<PatternConfig> },
+    /// `CHCFG <N:TOKENS,...> ...` — stage a heterogeneous mix in one line.
+    ChCfg { specs: Vec<(usize, PatternConfig)> },
+    /// `RUN <ch>` — run one channel's staged pattern.
+    Run { ch: usize },
+    /// `RUNALL` — run every channel's staged pattern, serially.
+    RunAll,
+    /// `RUNMIX` — run every channel's staged pattern concurrently.
+    RunMix,
+    /// `STATS <ch>` — full counters of the channel's last batch.
+    Stats { ch: usize },
+    /// `PATTERNS` — list the access-pattern engine's address modes.
+    Patterns,
+    /// `MAPPINGS` — list the address-mapping policies.
+    Mappings,
+    /// `SCHEDS` — list the scheduler/page policies.
+    Scheds,
+    /// `RESET <ch>` — clear one channel's staged config and stats.
+    Reset { ch: usize },
+    /// `STREAM ON|OFF` — opt into `STREAM` progress lines during runs.
+    Stream { on: bool },
+    /// `HELP` — list the commands (derived from [`COMMANDS`]).
+    Help,
+    /// `QUIT` — end the session.
+    Quit,
+}
+
+impl Request {
+    /// The wire-format command word (the key into [`COMMANDS`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Request::Info => "INFO",
+            Request::Cfg { .. } => "CFG",
+            Request::ChCfg { .. } => "CHCFG",
+            Request::Run { .. } => "RUN",
+            Request::RunAll => "RUNALL",
+            Request::RunMix => "RUNMIX",
+            Request::Stats { .. } => "STATS",
+            Request::Patterns => "PATTERNS",
+            Request::Mappings => "MAPPINGS",
+            Request::Scheds => "SCHEDS",
+            Request::Reset { .. } => "RESET",
+            Request::Stream { .. } => "STREAM",
+            Request::Help => "HELP",
+            Request::Quit => "QUIT",
+        }
+    }
+}
+
+/// One channel's cell in a `RUNMIX` reply.
+#[derive(Debug, Clone)]
+pub enum MixCell {
+    /// The channel's batch succeeded.
+    Ok { ch: usize, gbs: f64 },
+    /// The channel's batch failed; `reason` is rendered with its
+    /// whitespace collapsed to `_` so the reply stays one token per cell.
+    Err { ch: usize, reason: String },
+}
+
+impl MixCell {
+    /// The cell's wire token (`CH<i>_GBS=<f>` / `CH<i>=ERR[reason]`) —
+    /// also used to fold the all-channels-failed case into one `ERR`
+    /// line.
+    pub fn render(&self) -> String {
+        match self {
+            MixCell::Ok { ch, gbs } => format!("CH{ch}_GBS={gbs:.3}"),
+            MixCell::Err { ch, reason } => {
+                // single-line protocol: collapse the reason's whitespace
+                // so the cell stays one token
+                let reason = reason.split_whitespace().collect::<Vec<_>>().join("_");
+                format!("CH{ch}=ERR[{reason}]")
+            }
+        }
+    }
+}
+
+/// A typed protocol reply. [`render_response`] is the single place the
+/// wire bytes are produced.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// `OK CHANNELS=.. SPEED=.. ...`
+    Info {
+        channels: usize,
+        speed: SpeedBin,
+        axi_mhz: f64,
+        phy_mhz: f64,
+        axi_bits: u32,
+        xla: bool,
+    },
+    /// `OK CFG CH=<ch> <echo>`
+    Cfg { ch: usize, cfg: Box<PatternConfig> },
+    /// `OK CHCFG <echo> ...`
+    ChCfg { specs: Vec<(usize, PatternConfig)> },
+    /// `OK RUN CH=<ch> TXNS=<n> CYCLES=<n>`
+    Run { ch: usize, txns: u64, cycles: u64 },
+    /// `OK RUNALL CHANNELS=<n> AGG_GBS=<f>`
+    RunAll { channels: usize, agg_gbs: f64 },
+    /// `OK RUNMIX CHANNELS=<n> OK=<n> AGG_GBS=<f> <cells>`
+    RunMix { channels: usize, ok: usize, agg_gbs: f64, cells: Vec<MixCell> },
+    /// `OK CH=<ch> RD_TXNS=.. ..` — the full counter dump.
+    Stats { ch: usize, stats: Box<BatchStats> },
+    /// `OK PATTERNS ...` (the fixed address-mode list).
+    Patterns,
+    /// `OK MAPPINGS <names>` (the session appends `CUSTOM`).
+    Mappings { names: Vec<String> },
+    /// `OK SCHEDS <names>`
+    Scheds { names: Vec<String> },
+    /// `OK RESET`
+    Reset,
+    /// `OK STREAM ON|OFF`
+    Stream { on: bool },
+    /// `OK COMMANDS: ...` (derived from [`COMMANDS`]).
+    Help,
+    /// `OK BYE`
+    Bye,
+    /// `STREAM <label> MS=<n>` — mid-run progress heartbeat (only emitted
+    /// while the session has `STREAM ON`; never `OK`/`ERR`-prefixed, so
+    /// streaming clients skip `STREAM `-prefixed lines until the reply).
+    Progress { label: String, ms: u64 },
+    /// `ERR <reason>`
+    Err(String),
+}
+
+/// One row of the command reference: syntax, reply shape, error cases.
+/// The `HELP` reply and the README protocol table derive from this.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandInfo {
+    /// Command word (matches [`Request::name`]).
+    pub name: &'static str,
+    /// Invocation syntax.
+    pub syntax: &'static str,
+    /// Reply shape on success.
+    pub reply: &'static str,
+    /// Error cases (`ERR <reason>` lines).
+    pub errors: &'static str,
+}
+
+/// The command reference — exactly one entry per [`Request`] variant, in
+/// `HELP` listing order (pinned by a test against [`Request::name`]).
+pub const COMMANDS: &[CommandInfo] = &[
+    CommandInfo {
+        name: "INFO",
+        syntax: "INFO",
+        reply: "OK CHANNELS=<n> SPEED=<bin> AXI_MHZ=<f> PHY_MHZ=<f> AXI_BITS=<n> XLA=<0|1>",
+        errors: "none",
+    },
+    CommandInfo {
+        name: "CFG",
+        syntax: "CFG <ch> KEY=VALUE ...",
+        reply: "OK CFG CH=<ch> <canonical echo>",
+        errors: "bad/missing channel; invalid pattern tokens; LIMIT_CHANNELS / LIMIT_BATCH",
+    },
+    CommandInfo {
+        name: "CHCFG",
+        syntax: "CHCFG <N:TOKENS,...> ...",
+        reply: "OK CHCFG <N:echo> ...",
+        errors: "no specs; duplicate/bad channel; invalid tokens; LIMIT_CHANNELS / LIMIT_BATCH",
+    },
+    CommandInfo {
+        name: "RUN",
+        syntax: "RUN <ch>",
+        reply: "OK RUN CH=<ch> TXNS=<n> CYCLES=<n>",
+        errors: "bad/missing channel; batch failure (deadlock guard, panic); LIMIT_QUEUE",
+    },
+    CommandInfo {
+        name: "RUNALL",
+        syntax: "RUNALL",
+        reply: "OK RUNALL CHANNELS=<n> AGG_GBS=<f>  (legacy per-channel rate sum)",
+        errors: "first failing channel aborts the loop; LIMIT_CHANNELS / LIMIT_QUEUE",
+    },
+    CommandInfo {
+        name: "RUNMIX",
+        syntax: "RUNMIX",
+        reply: "OK RUNMIX CHANNELS=<n> OK=<n> AGG_GBS=<f> CH<i>_GBS=<f>|CH<i>=ERR[reason] ...",
+        errors: "every channel failed; LIMIT_CHANNELS / LIMIT_QUEUE",
+    },
+    CommandInfo {
+        name: "STATS",
+        syntax: "STATS <ch>",
+        reply: "OK CH=<ch> RD_TXNS=.. WR_TXNS=.. .. PWR_MW=<f>",
+        errors: "bad/missing channel; no batch has run on this channel",
+    },
+    CommandInfo {
+        name: "PATTERNS",
+        syntax: "PATTERNS",
+        reply: "OK PATTERNS SEQ RND STRIDE BANK CHASE PHASED",
+        errors: "none",
+    },
+    CommandInfo {
+        name: "MAPPINGS",
+        syntax: "MAPPINGS",
+        reply: "OK MAPPINGS <builtin policies> CUSTOM",
+        errors: "none",
+    },
+    CommandInfo {
+        name: "SCHEDS",
+        syntax: "SCHEDS",
+        reply: "OK SCHEDS <policies>",
+        errors: "none",
+    },
+    CommandInfo {
+        name: "RESET",
+        syntax: "RESET <ch>",
+        reply: "OK RESET",
+        errors: "bad/missing channel",
+    },
+    CommandInfo {
+        name: "STREAM",
+        syntax: "STREAM ON|OFF",
+        reply: "OK STREAM ON|OFF  (then STREAM <label> MS=<n> heartbeats during runs)",
+        errors: "missing/unknown mode",
+    },
+    CommandInfo {
+        name: "HELP",
+        syntax: "HELP",
+        reply: "OK COMMANDS: <command list>",
+        errors: "none",
+    },
+    CommandInfo {
+        name: "QUIT",
+        syntax: "QUIT",
+        reply: "OK BYE  (the transport then closes the session)",
+        errors: "none",
+    },
+];
+
+fn parse_channel_tok(tok: Option<&str>) -> Result<usize, String> {
+    tok.ok_or("missing channel index")?
+        .parse()
+        .map_err(|_| "channel must be an integer".to_string())
+}
+
+/// Parse one command line into a [`Request`]. The single parse path:
+/// every transport feeds lines through here.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let mut toks = line.split_whitespace();
+    let cmd = toks.next().unwrap_or("").to_ascii_uppercase();
+    match cmd.as_str() {
+        "" => Err("empty command".into()),
+        "HELP" => Ok(Request::Help),
+        "INFO" => Ok(Request::Info),
+        "PATTERNS" => Ok(Request::Patterns),
+        "MAPPINGS" => Ok(Request::Mappings),
+        "SCHEDS" => Ok(Request::Scheds),
+        "RUNALL" => Ok(Request::RunAll),
+        "RUNMIX" => Ok(Request::RunMix),
+        "QUIT" => Ok(Request::Quit),
+        "CFG" => {
+            let ch = parse_channel_tok(toks.next())?;
+            let rest: Vec<&str> = toks.collect();
+            let cfg = parse_pattern_config(&rest).map_err(|e| e.to_string())?;
+            Ok(Request::Cfg { ch, cfg: Box::new(cfg) })
+        }
+        "CHCFG" => {
+            let raw: Vec<&str> = toks.collect();
+            if raw.is_empty() {
+                return Err("CHCFG needs at least one N:TOKENS,... channel spec".into());
+            }
+            let mut specs = Vec::with_capacity(raw.len());
+            for spec in raw {
+                let (ch, cfg) = parse_channel_spec(spec).map_err(|e| e.to_string())?;
+                if specs.iter().any(|(c, _)| *c == ch) {
+                    return Err(format!("channel {ch} configured twice in one CHCFG"));
+                }
+                specs.push((ch, cfg));
+            }
+            Ok(Request::ChCfg { specs })
+        }
+        "RUN" => Ok(Request::Run { ch: parse_channel_tok(toks.next())? }),
+        "STATS" => Ok(Request::Stats { ch: parse_channel_tok(toks.next())? }),
+        "RESET" => Ok(Request::Reset { ch: parse_channel_tok(toks.next())? }),
+        "STREAM" => match toks.next().map(str::to_ascii_uppercase).as_deref() {
+            Some("ON") | Some("1") => Ok(Request::Stream { on: true }),
+            Some("OFF") | Some("0") => Ok(Request::Stream { on: false }),
+            _ => Err("STREAM needs ON or OFF".into()),
+        },
+        other => Err(format!("unknown command `{other}` (try HELP)")),
+    }
+}
+
+/// Render a [`Request`] back to its canonical wire line (used by clients,
+/// scripted drivers and the round-trip tests; `parse_request` of the
+/// output reproduces the request).
+pub fn render_request(req: &Request) -> String {
+    match req {
+        Request::Info
+        | Request::RunAll
+        | Request::RunMix
+        | Request::Patterns
+        | Request::Mappings
+        | Request::Scheds
+        | Request::Help
+        | Request::Quit => req.name().to_string(),
+        Request::Cfg { ch, cfg } => format!("CFG {ch} {}", format_pattern_config(cfg)),
+        Request::ChCfg { specs } => {
+            let cells: Vec<String> =
+                specs.iter().map(|(ch, cfg)| format_channel_spec(*ch, cfg)).collect();
+            format!("CHCFG {}", cells.join(" "))
+        }
+        Request::Run { ch } => format!("RUN {ch}"),
+        Request::Stats { ch } => format!("STATS {ch}"),
+        Request::Reset { ch } => format!("RESET {ch}"),
+        Request::Stream { on } => format!("STREAM {}", if *on { "ON" } else { "OFF" }),
+    }
+}
+
+/// Render a [`Response`] to its exact wire line. The single render path:
+/// `OK`/`ERR` prefixes, field order and float precision all live here and
+/// nowhere else.
+pub fn render_response(resp: &Response) -> String {
+    match resp {
+        Response::Info { channels, speed, axi_mhz, phy_mhz, axi_bits, xla } => format!(
+            "OK CHANNELS={channels} SPEED={speed} AXI_MHZ={axi_mhz:.0} PHY_MHZ={phy_mhz:.0} \
+             AXI_BITS={axi_bits} XLA={}",
+            u8::from(*xla)
+        ),
+        Response::Cfg { ch, cfg } => format!("OK CFG CH={ch} {}", format_pattern_config(cfg)),
+        Response::ChCfg { specs } => {
+            let cells: Vec<String> =
+                specs.iter().map(|(ch, cfg)| format_channel_spec(*ch, cfg)).collect();
+            format!("OK CHCFG {}", cells.join(" "))
+        }
+        Response::Run { ch, txns, cycles } => format!("OK RUN CH={ch} TXNS={txns} CYCLES={cycles}"),
+        Response::RunAll { channels, agg_gbs } => {
+            format!("OK RUNALL CHANNELS={channels} AGG_GBS={agg_gbs:.3}")
+        }
+        Response::RunMix { channels, ok, agg_gbs, cells } => {
+            let cells: Vec<String> = cells.iter().map(MixCell::render).collect();
+            format!(
+                "OK RUNMIX CHANNELS={channels} OK={ok} AGG_GBS={agg_gbs:.3} {}",
+                cells.join(" ")
+            )
+        }
+        Response::Stats { ch, stats } => {
+            let s = stats;
+            let c = &s.counters;
+            format!(
+                "OK CH={ch} RD_TXNS={} WR_TXNS={} RD_BYTES={} WR_BYTES={} RD_CYCLES={} \
+                 WR_CYCLES={} TOTAL_CYCLES={} RD_GBS={:.3} WR_GBS={:.3} TOT_GBS={:.3} \
+                 RD_LAT_NS={:.1} WR_LAT_NS={:.1} RD_P50_NS={:.1} RD_P95_NS={:.1} \
+                 RD_P99_NS={:.1} WR_P50_NS={:.1} WR_P95_NS={:.1} WR_P99_NS={:.1} \
+                 REFRESH_STALL={} MISMATCHES={} ENERGY_NJ={:.0} PJ_BIT={:.2} PWR_MW={:.1}",
+                c.rd_txns,
+                c.wr_txns,
+                c.rd_bytes,
+                c.wr_bytes,
+                c.rd_cycles,
+                c.wr_cycles,
+                c.total_cycles,
+                s.read_throughput_gbs(),
+                s.write_throughput_gbs(),
+                s.total_throughput_gbs(),
+                s.read_latency_ns(),
+                s.write_latency_ns(),
+                s.read_latency_pct_ns(50.0),
+                s.read_latency_pct_ns(95.0),
+                s.read_latency_pct_ns(99.0),
+                s.write_latency_pct_ns(50.0),
+                s.write_latency_pct_ns(95.0),
+                s.write_latency_pct_ns(99.0),
+                c.refresh_stall_dram_cycles,
+                c.mismatches,
+                s.energy.total_nj(),
+                s.pj_per_bit().unwrap_or(0.0),
+                s.avg_power_mw(),
+            )
+        }
+        Response::Patterns => "OK PATTERNS SEQ RND STRIDE BANK CHASE PHASED".into(),
+        Response::Mappings { names } => format!("OK MAPPINGS {}", names.join(" ")),
+        Response::Scheds { names } => format!("OK SCHEDS {}", names.join(" ")),
+        Response::Reset => "OK RESET".into(),
+        Response::Stream { on } => format!("OK STREAM {}", if *on { "ON" } else { "OFF" }),
+        Response::Help => {
+            let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+            format!("OK COMMANDS: {}", names.join(" "))
+        }
+        Response::Bye => "OK BYE".into(),
+        Response::Progress { label, ms } => format!("STREAM {label} MS={ms}"),
+        Response::Err(reason) => format!("ERR {reason}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One sample per [`Request`] variant (the exhaustiveness anchor:
+    /// extending the enum without extending this list fails the
+    /// `commands_table_is_exhaustive` test via `Request::name`).
+    fn samples() -> Vec<Request> {
+        let cfg = Box::new(PatternConfig::seq_read_burst(8, 256));
+        vec![
+            Request::Info,
+            Request::Cfg { ch: 0, cfg: cfg.clone() },
+            Request::ChCfg {
+                specs: vec![
+                    (0, PatternConfig::seq_read_burst(32, 512)),
+                    (2, PatternConfig::bank_conflict_read(1, 64, 1)),
+                ],
+            },
+            Request::Run { ch: 1 },
+            Request::RunAll,
+            Request::RunMix,
+            Request::Stats { ch: 2 },
+            Request::Patterns,
+            Request::Mappings,
+            Request::Scheds,
+            Request::Reset { ch: 0 },
+            Request::Stream { on: true },
+            Request::Help,
+            Request::Quit,
+        ]
+    }
+
+    #[test]
+    fn every_request_round_trips_through_the_wire_format() {
+        for req in samples() {
+            let line = render_request(&req);
+            let back = parse_request(&line).unwrap_or_else(|e| panic!("`{line}`: {e}"));
+            assert_eq!(back, req, "round trip of `{line}`");
+        }
+    }
+
+    #[test]
+    fn commands_table_is_exhaustive_and_in_help_order() {
+        let names: Vec<&str> = samples().iter().map(Request::name).collect();
+        assert_eq!(names.len(), COMMANDS.len(), "one COMMANDS row per Request variant");
+        for name in &names {
+            assert!(COMMANDS.iter().any(|c| c.name == *name), "{name} missing from COMMANDS");
+        }
+        let help = render_response(&Response::Help);
+        for c in COMMANDS {
+            assert!(help.contains(c.name), "HELP omits {}: {help}", c.name);
+        }
+        // the table's syntax column starts with the command word, so the
+        // generated docs cannot mislabel a row
+        for c in COMMANDS {
+            assert!(c.syntax.starts_with(c.name), "{}: syntax `{}`", c.name, c.syntax);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines_with_the_legacy_reasons() {
+        assert_eq!(parse_request("").unwrap_err(), "empty command");
+        assert_eq!(parse_request("   ").unwrap_err(), "empty command");
+        assert_eq!(parse_request("FROB 1").unwrap_err(), "unknown command `FROB` (try HELP)");
+        assert_eq!(parse_request("RUN").unwrap_err(), "missing channel index");
+        assert_eq!(parse_request("RUN x").unwrap_err(), "channel must be an integer");
+        assert_eq!(
+            parse_request("CHCFG").unwrap_err(),
+            "CHCFG needs at least one N:TOKENS,... channel spec"
+        );
+        assert_eq!(
+            parse_request("CHCFG 0:SEQ 0:RND").unwrap_err(),
+            "channel 0 configured twice in one CHCFG"
+        );
+        assert!(parse_request("CFG 0 BURST=4000").is_err(), "invalid pattern tokens");
+        assert!(parse_request("STREAM").is_err());
+        assert!(parse_request("STREAM maybe").is_err());
+    }
+
+    #[test]
+    fn commands_are_case_insensitive() {
+        assert_eq!(parse_request("info").unwrap(), Request::Info);
+        assert_eq!(parse_request("Quit").unwrap(), Request::Quit);
+        assert_eq!(parse_request("stream off").unwrap(), Request::Stream { on: false });
+    }
+
+    #[test]
+    fn render_response_produces_the_exact_wire_lines() {
+        assert_eq!(
+            render_response(&Response::Run { ch: 0, txns: 512, cycles: 9000 }),
+            "OK RUN CH=0 TXNS=512 CYCLES=9000"
+        );
+        assert_eq!(
+            render_response(&Response::RunAll { channels: 3, agg_gbs: 12.3456 }),
+            "OK RUNALL CHANNELS=3 AGG_GBS=12.346"
+        );
+        assert_eq!(render_response(&Response::Err("boom".into())), "ERR boom");
+        assert_eq!(render_response(&Response::Bye), "OK BYE");
+        assert_eq!(render_response(&Response::Reset), "OK RESET");
+        assert_eq!(
+            render_response(&Response::Progress { label: "RUN CH=0".into(), ms: 250 }),
+            "STREAM RUN CH=0 MS=250"
+        );
+        let mix = Response::RunMix {
+            channels: 2,
+            ok: 1,
+            agg_gbs: 1.0,
+            cells: vec![
+                MixCell::Ok { ch: 0, gbs: 1.0 },
+                MixCell::Err { ch: 1, reason: "it went  very wrong".into() },
+            ],
+        };
+        assert_eq!(
+            render_response(&mix),
+            "OK RUNMIX CHANNELS=2 OK=1 AGG_GBS=1.000 CH0_GBS=1.000 CH1=ERR[it_went_very_wrong]"
+        );
+    }
+
+    #[test]
+    fn readme_protocol_table_documents_every_command() {
+        // doc-sync: the README's host-protocol reference must carry one
+        // table row per command, so adding a Request variant without
+        // documenting it fails here
+        let readme =
+            std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/README.md")).unwrap();
+        for cmd in COMMANDS {
+            let row = format!("| `{}` |", cmd.name);
+            assert!(readme.contains(&row), "README protocol table is missing a `{}` row", cmd.name);
+        }
+    }
+}

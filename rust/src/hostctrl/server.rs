@@ -1,0 +1,282 @@
+//! The concurrent multi-session bench server.
+//!
+//! [`BenchServer`] turns the host protocol into a service many clients
+//! can hammer simultaneously: a TCP accept loop hands each connection a
+//! [`Session`] with its own isolated [`Platform`] (config, staged channel
+//! mixes, last-run stats — one client's commands can never perturb
+//! another's counters), while actual batch execution dispatches to one
+//! shared bounded [`RunPool`], so K sessions compete for a fixed number
+//! of executor threads instead of spawning K×channels of their own.
+//!
+//! Admission control is strict: at most `max_sessions` concurrent
+//! sessions; a connection beyond that is answered with one
+//! `ERR SERVER_FULL: ...` line and closed, so a scripted client can
+//! back off and retry. Each admitted session gets a monotonically
+//! increasing id (the thread name and log label), per-session
+//! [`SessionLimits`], and its own session thread. Cleanup is
+//! guard-based: a client disconnect, an I/O error or even a panic in
+//! the session thread releases the admission slot, and a panicking
+//! *batch* is already contained one level lower (the pool's
+//! `catch_unwind`) — it fails that session's run, never the server.
+//!
+//! Shutdown is cooperative: [`BenchServer::shutdown_handle`] yields a
+//! [`ShutdownHandle`] whose `signal()` flips a flag and self-connects to
+//! unblock the accept loop; SIGTERM works too (the CI smoke gate kills
+//! the process directly).
+
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::config::{DesignConfig, SessionLimits};
+use crate::platform::{Platform, RunPool};
+
+use super::session::{serve_stream, Session};
+
+/// Server-level knobs (`ddr4bench serve --workers --max-sessions ...`).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Executor threads in the shared [`RunPool`].
+    pub workers: usize,
+    /// Most concurrent client sessions admitted; further connections are
+    /// answered `ERR SERVER_FULL` and closed.
+    pub max_sessions: usize,
+    /// Resource limits handed to every session.
+    pub limits: SessionLimits,
+}
+
+impl Default for ServerConfig {
+    /// Workers default to the machine's parallelism minus one (the
+    /// accept loop and session threads need a core too), sessions to 8.
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(2);
+        Self { workers, max_sessions: 8, limits: SessionLimits::default() }
+    }
+}
+
+/// Cooperative shutdown for a running [`BenchServer`].
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ShutdownHandle {
+    /// Ask the server to stop: sets the flag, then self-connects so the
+    /// blocking accept wakes up and observes it. Already-admitted
+    /// sessions run to completion on their own threads.
+    pub fn signal(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Decrements the active-session count when the session thread exits —
+/// by any path, including a panic — so a dying session always releases
+/// its admission slot.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The concurrent bench server: one isolated platform per client
+/// session, one shared worker pool for execution.
+pub struct BenchServer {
+    listener: TcpListener,
+    design: DesignConfig,
+    cfg: ServerConfig,
+    pool: Arc<RunPool>,
+    active: Arc<AtomicUsize>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl BenchServer {
+    /// Bind to `addr` (e.g. `127.0.0.1:5557`, or port 0 for an ephemeral
+    /// port) after validating the design and limits up front, and spawn
+    /// the shared worker pool.
+    pub fn bind(design: DesignConfig, cfg: ServerConfig, addr: &str) -> io::Result<Self> {
+        let invalid = |e: String| io::Error::new(io::ErrorKind::InvalidInput, e);
+        design.validate().map_err(|e| invalid(e.to_string()))?;
+        cfg.limits.validate().map_err(|e| invalid(e.to_string()))?;
+        if cfg.max_sessions == 0 {
+            return Err(invalid("max_sessions must be >= 1".into()));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let pool = Arc::new(RunPool::new(cfg.workers));
+        Ok(Self {
+            listener,
+            design,
+            cfg,
+            pool,
+            active: Arc::new(AtomicUsize::new(0)),
+            next_id: AtomicU64::new(1),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A handle that can stop the accept loop from another thread.
+    pub fn shutdown_handle(&self) -> io::Result<ShutdownHandle> {
+        Ok(ShutdownHandle { flag: Arc::clone(&self.shutdown), addr: self.local_addr()? })
+    }
+
+    /// Currently admitted sessions.
+    pub fn active_sessions(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Run the accept loop until shut down. Per-connection failures
+    /// (accept errors, session I/O errors, panicking batches) are logged
+    /// and never tear the listener down.
+    pub fn run(self) -> io::Result<()> {
+        eprintln!(
+            "ddr4bench bench server listening on {} ({} worker(s), max {} session(s))",
+            self.local_addr()?,
+            self.pool.workers(),
+            self.cfg.max_sessions
+        );
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => self.spawn_session(s),
+                Err(e) => eprintln!("ddr4bench: accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn spawn_session(&self, stream: TcpStream) {
+        // optimistic admission: claim a slot, give it back if over
+        let prev = self.active.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.cfg.max_sessions {
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let _ = writeln!(
+                stream,
+                "ERR SERVER_FULL: {prev} session(s) active (max {})",
+                self.cfg.max_sessions
+            );
+            return;
+        }
+        let guard = ActiveGuard(Arc::clone(&self.active));
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let design = self.design.clone();
+        let limits = self.cfg.limits;
+        let pool = Arc::clone(&self.pool);
+        let spawned = std::thread::Builder::new().name(format!("session-{id}")).spawn(move || {
+            // the guard rides the session thread: any exit releases the
+            // admission slot
+            let _guard = guard;
+            let mut session = Session::pooled(Platform::new(design), pool, limits, id);
+            if let Err(e) = serve_session(&mut session, &stream) {
+                eprintln!("ddr4bench: session {id} ended with error: {e}");
+            }
+        });
+        // a failed spawn drops the (moved) closure — and with it the
+        // guard — so the slot is still released
+        if let Err(e) = spawned {
+            eprintln!("ddr4bench: failed to spawn session thread: {e}");
+        }
+    }
+}
+
+fn serve_session(session: &mut Session, stream: &TcpStream) -> io::Result<()> {
+    let reader = io::BufReader::new(stream.try_clone()?);
+    let writer = stream.try_clone()?;
+    serve_stream(session, reader, writer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+    use std::io::{BufRead, BufReader};
+    use std::time::Duration;
+
+    fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        (BufReader::new(stream.try_clone().unwrap()), stream)
+    }
+
+    fn roundtrip(r: &mut BufReader<TcpStream>, w: &mut TcpStream, line: &str) -> String {
+        writeln!(w, "{line}").unwrap();
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    }
+
+    #[test]
+    fn server_admits_isolates_and_rejects_beyond_capacity() {
+        let design = DesignConfig::with_channels(2, SpeedBin::Ddr4_1600);
+        let cfg = ServerConfig { workers: 1, max_sessions: 1, limits: SessionLimits::default() };
+        let server = BenchServer::bind(design, cfg, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let shutdown = server.shutdown_handle().unwrap();
+        let serving = std::thread::spawn(move || server.run().unwrap());
+
+        let (mut r1, mut w1) = connect(addr);
+        // reading the reply proves session 1 is admitted before the
+        // second connection races in
+        let info = roundtrip(&mut r1, &mut w1, "INFO");
+        assert!(info.starts_with("OK CHANNELS=2"), "{info}");
+
+        let (mut r2, _w2) = connect(addr);
+        let mut line = String::new();
+        r2.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR SERVER_FULL:"), "{line}");
+
+        // session 1 still works end to end while 2 was bounced
+        let run = roundtrip(&mut r1, &mut w1, "CFG 0 OP=R BURST=4 BATCH=64");
+        assert!(run.starts_with("OK CFG CH=0"), "{run}");
+        let run = roundtrip(&mut r1, &mut w1, "RUN 0");
+        assert!(run.starts_with("OK RUN CH=0 TXNS=64"), "{run}");
+        assert_eq!(roundtrip(&mut r1, &mut w1, "QUIT"), "OK BYE");
+        drop((r1, w1));
+
+        // once the slot frees, a new client gets in (poll for the
+        // session thread's guard to release)
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let (mut r3, mut w3) = connect(addr);
+            let mut line = String::new();
+            writeln!(w3, "INFO").unwrap();
+            r3.read_line(&mut line).unwrap();
+            if line.starts_with("OK CHANNELS=2") {
+                break;
+            }
+            assert!(line.starts_with("ERR SERVER_FULL:"), "{line}");
+            assert!(std::time::Instant::now() < deadline, "slot never released");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        shutdown.signal();
+        serving.join().unwrap();
+    }
+
+    #[test]
+    fn bind_validates_design_limits_and_capacity() {
+        let bad_design = DesignConfig::with_channels(4, SpeedBin::Ddr4_1600);
+        assert!(BenchServer::bind(bad_design, ServerConfig::default(), "127.0.0.1:0").is_err());
+        let design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        let cfg = ServerConfig {
+            limits: SessionLimits { max_batch: 0, ..SessionLimits::default() },
+            ..ServerConfig::default()
+        };
+        assert!(BenchServer::bind(design.clone(), cfg, "127.0.0.1:0").is_err());
+        let cfg = ServerConfig { max_sessions: 0, ..ServerConfig::default() };
+        assert!(BenchServer::bind(design, cfg, "127.0.0.1:0").is_err());
+    }
+}

@@ -1,0 +1,584 @@
+//! One client's protocol session: the single place [`Request`]s are
+//! mapped to [`Response`]s.
+//!
+//! A [`Session`] owns an isolated [`Platform`] (staged per-channel
+//! configs, last-run stats) plus per-session [`SessionLimits`], and
+//! executes batches either inline on the calling thread (the historical
+//! single-user transports) or by dispatching to a shared
+//! [`RunPool`] (the concurrent bench server) — protocol behaviour is
+//! identical either way, byte for byte. [`serve_stream`] is the one
+//! transport loop: the in-memory UART stand-in, `serve_tcp` and every
+//! bench-server connection all push their byte streams through it.
+//!
+//! Limit violations answer named `ERR` diagnostics — `LIMIT_CHANNELS`,
+//! `LIMIT_BATCH`, `LIMIT_QUEUE` — so scripted clients can distinguish a
+//! quota rejection from a malformed command. With `STREAM ON`, pooled
+//! runs emit `STREAM <label> MS=<elapsed>` heartbeat lines while a long
+//! batch executes, before the final `OK`/`ERR` reply.
+
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ChannelMix, PatternConfig, SessionLimits};
+use crate::platform::{Platform, RunPool};
+use crate::stats::BatchStats;
+
+use super::proto::{parse_request, render_response, MixCell, Request, Response};
+
+/// How often a pooled run wakes up to emit a `STREAM` heartbeat (when
+/// the session has streaming on) and re-poll the pool.
+const STREAM_INTERVAL: Duration = Duration::from_millis(100);
+
+/// How the session executes batches.
+enum Exec {
+    /// On the calling thread, via [`Platform::run_batch`] — the serial
+    /// transports (in-memory REPL, `serve_tcp`).
+    Inline,
+    /// Dispatched to a shared worker pool — bench-server sessions. K
+    /// sessions share the pool's bounded worker threads, so they cannot
+    /// oversubscribe the machine.
+    Pool(Arc<RunPool>),
+}
+
+/// One client's session state over its own isolated [`Platform`].
+pub struct Session {
+    id: u64,
+    platform: Platform,
+    pending: Vec<PatternConfig>,
+    last: Vec<Option<BatchStats>>,
+    limits: SessionLimits,
+    exec: Exec,
+    stream: bool,
+    stream_interval: Duration,
+}
+
+impl Session {
+    /// A serial single-user session: inline execution, no limits —
+    /// exactly the historical `HostController` behaviour.
+    pub fn inline(platform: Platform) -> Self {
+        Self::build(platform, SessionLimits::UNLIMITED, Exec::Inline, 0)
+    }
+
+    /// A bench-server session: batches dispatch to the shared `pool`,
+    /// bounded by `limits`, identified by `id` (used in server logs and
+    /// thread names).
+    pub fn pooled(platform: Platform, pool: Arc<RunPool>, limits: SessionLimits, id: u64) -> Self {
+        Self::build(platform, limits, Exec::Pool(pool), id)
+    }
+
+    fn build(platform: Platform, limits: SessionLimits, exec: Exec, id: u64) -> Self {
+        let n = platform.channels();
+        Self {
+            id,
+            platform,
+            pending: vec![PatternConfig::default(); n],
+            last: vec![None; n],
+            limits,
+            exec,
+            stream: false,
+            stream_interval: STREAM_INTERVAL,
+        }
+    }
+
+    /// The session's handle/id (0 for serial sessions).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Borrow the session's platform.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// Take the platform back (end of session).
+    pub fn into_platform(self) -> Platform {
+        self.platform
+    }
+
+    /// The limits in force.
+    pub fn limits(&self) -> SessionLimits {
+        self.limits
+    }
+
+    /// Override the heartbeat/poll cadence of pooled runs (tuning/test
+    /// hook; the default is 100 ms).
+    pub fn set_stream_interval(&mut self, interval: Duration) {
+        self.stream_interval = interval.max(Duration::from_millis(1));
+    }
+
+    /// Handle one typed request (no streaming sink — progress heartbeats
+    /// are dropped).
+    pub fn handle(&mut self, req: &Request) -> Response {
+        self.handle_with_progress(req, &mut |_| {})
+    }
+
+    /// Handle one typed request, forwarding any mid-run
+    /// [`Response::Progress`] heartbeats to `progress`.
+    pub fn handle_with_progress(
+        &mut self,
+        req: &Request,
+        progress: &mut dyn FnMut(Response),
+    ) -> Response {
+        match self.dispatch(req, progress) {
+            Ok(resp) => resp,
+            Err(e) => Response::Err(e),
+        }
+    }
+
+    /// Parse + handle + render in one step — the line-oriented surface
+    /// the byte-compat tests pin.
+    pub fn handle_line(&mut self, line: &str) -> String {
+        let resp = match parse_request(line) {
+            Ok(req) => self.handle(&req),
+            Err(e) => Response::Err(e),
+        };
+        render_response(&resp)
+    }
+
+    fn dispatch(
+        &mut self,
+        req: &Request,
+        progress: &mut dyn FnMut(Response),
+    ) -> Result<Response, String> {
+        match req {
+            Request::Help => Ok(Response::Help),
+            Request::Patterns => Ok(Response::Patterns),
+            Request::Scheds => {
+                let names = crate::controller::SchedKind::ALL
+                    .iter()
+                    .map(|k| k.name().to_ascii_uppercase())
+                    .collect();
+                Ok(Response::Scheds { names })
+            }
+            Request::Mappings => {
+                // custom bit orders like MAP=RoBaBgCo are also accepted
+                let mut names: Vec<String> = crate::ddr4::MappingPolicy::builtins()
+                    .iter()
+                    .map(|m| m.name().to_ascii_uppercase())
+                    .collect();
+                names.push("CUSTOM".into());
+                Ok(Response::Mappings { names })
+            }
+            Request::Info => {
+                let d = self.platform.design();
+                Ok(Response::Info {
+                    channels: d.channels,
+                    speed: d.speed,
+                    axi_mhz: d.speed.axi_clock_mhz(),
+                    phy_mhz: d.speed.phy_clock_mhz(),
+                    axi_bits: d.axi_data_width_bits,
+                    xla: self.platform.has_runtime(),
+                })
+            }
+            Request::Cfg { ch, cfg } => {
+                self.check_channel(*ch)?;
+                self.check_batch(cfg)?;
+                self.pending[*ch] = (**cfg).clone();
+                Ok(Response::Cfg { ch: *ch, cfg: cfg.clone() })
+            }
+            Request::ChCfg { specs } => {
+                // atomic: every spec is vetted before any channel is
+                // re-staged, so a bad spec can't half-apply the command
+                for (ch, cfg) in specs {
+                    self.check_channel(*ch)?;
+                    self.check_batch(cfg)?;
+                }
+                for (ch, cfg) in specs {
+                    self.pending[*ch] = cfg.clone();
+                }
+                Ok(Response::ChCfg { specs: specs.clone() })
+            }
+            Request::Run { ch } => {
+                self.check_channel(*ch)?;
+                let cfg = self.pending[*ch].clone();
+                let label = format!("RUN CH={ch}");
+                let stats = self.execute_single(*ch, &cfg, &label, progress)?;
+                let resp = Response::Run {
+                    ch: *ch,
+                    txns: stats.counters.rd_txns + stats.counters.wr_txns,
+                    cycles: stats.counters.total_cycles,
+                };
+                self.last[*ch] = Some(stats);
+                Ok(resp)
+            }
+            Request::RunAll => {
+                let channels = self.platform.channels();
+                if channels > self.limits.max_channels {
+                    return Err(format!(
+                        "LIMIT_CHANNELS: RUNALL touches {channels} channel(s), exceeding \
+                         this session's max_channels {}",
+                        self.limits.max_channels
+                    ));
+                }
+                // run each channel's own pending pattern, serially
+                let mut stats = Vec::with_capacity(channels);
+                for ch in 0..channels {
+                    let cfg = self.pending[ch].clone();
+                    let label = format!("RUNALL CH={ch}");
+                    let s = self.execute_single(ch, &cfg, &label, progress)?;
+                    self.last[ch] = Some(s.clone());
+                    stats.push(s);
+                }
+                // the legacy rate-sum convention, kept wire-compatible
+                let agg_gbs = Platform::aggregate_gbs(&stats, true);
+                Ok(Response::RunAll { channels, agg_gbs })
+            }
+            Request::RunMix => {
+                let channels = self.platform.channels();
+                if channels > self.limits.max_channels {
+                    return Err(format!(
+                        "LIMIT_CHANNELS: RUNMIX touches {channels} channel(s), exceeding \
+                         this session's max_channels {}",
+                        self.limits.max_channels
+                    ));
+                }
+                self.check_queued(channels)?;
+                let mix = ChannelMix::new(self.pending.clone()).map_err(|e| e.to_string())?;
+                let results = self.execute_mix(&mix, progress)?;
+                let mut survivors = Vec::new();
+                let mut cells = Vec::with_capacity(results.len());
+                for (ch, result) in results.into_iter().enumerate() {
+                    match result {
+                        Ok(stats) => {
+                            cells.push(MixCell::Ok { ch, gbs: stats.total_throughput_gbs() });
+                            survivors.push(stats.clone());
+                            self.last[ch] = Some(stats);
+                        }
+                        Err(e) => {
+                            cells.push(MixCell::Err { ch, reason: e.to_string() });
+                            self.last[ch] = None;
+                        }
+                    }
+                }
+                if survivors.is_empty() {
+                    let rendered: Vec<String> = cells.iter().map(MixCell::render).collect();
+                    return Err(format!("every channel failed: {}", rendered.join(" ")));
+                }
+                // platform aggregate (bytes sum over max cycles), the
+                // same convention as `run` and the sweep artifacts —
+                // per-rate sums diverge once channels are heterogeneous
+                let agg_gbs = Platform::aggregate_gbs(&survivors, false);
+                Ok(Response::RunMix { channels, ok: survivors.len(), agg_gbs, cells })
+            }
+            Request::Stats { ch } => {
+                self.check_channel(*ch)?;
+                let s = self.last[*ch].as_ref().ok_or("no batch has run on this channel")?;
+                Ok(Response::Stats { ch: *ch, stats: Box::new(s.clone()) })
+            }
+            Request::Reset { ch } => {
+                self.check_channel(*ch)?;
+                self.pending[*ch] = PatternConfig::default();
+                self.last[*ch] = None;
+                Ok(Response::Reset)
+            }
+            Request::Stream { on } => {
+                self.stream = *on;
+                Ok(Response::Stream { on: *on })
+            }
+            Request::Quit => Ok(Response::Bye),
+        }
+    }
+
+    fn check_channel(&self, ch: usize) -> Result<(), String> {
+        if ch >= self.platform.channels() {
+            return Err(format!(
+                "channel {ch} out of range (design has {})",
+                self.platform.channels()
+            ));
+        }
+        if ch >= self.limits.max_channels {
+            return Err(format!(
+                "LIMIT_CHANNELS: channel {ch} exceeds this session's max_channels {}",
+                self.limits.max_channels
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_batch(&self, cfg: &PatternConfig) -> Result<(), String> {
+        if cfg.batch_len > self.limits.max_batch {
+            return Err(format!(
+                "LIMIT_BATCH: BATCH={} exceeds this session's max_batch {}",
+                cfg.batch_len, self.limits.max_batch
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_queued(&self, runs: usize) -> Result<(), String> {
+        if runs > self.limits.max_queued_runs {
+            return Err(format!(
+                "LIMIT_QUEUE: {runs} queued run(s) exceed this session's max_queued_runs {}",
+                self.limits.max_queued_runs
+            ));
+        }
+        Ok(())
+    }
+
+    /// Run one channel's batch: inline, or dispatched to the shared pool
+    /// with heartbeat polling.
+    fn execute_single(
+        &mut self,
+        ch: usize,
+        cfg: &PatternConfig,
+        label: &str,
+        progress: &mut dyn FnMut(Response),
+    ) -> Result<BatchStats, String> {
+        let pool = match &self.exec {
+            Exec::Inline => None,
+            Exec::Pool(p) => Some(Arc::clone(p)),
+        };
+        match pool {
+            None => self.platform.run_batch(ch, cfg).map_err(|e| e.to_string()),
+            Some(pool) => {
+                let pending =
+                    self.platform.start_batch_on(&pool, ch, cfg).map_err(|e| e.to_string())?;
+                let started = Instant::now();
+                loop {
+                    if let Some(result) = self.platform.poll_batch(&pending, self.stream_interval)
+                    {
+                        return result.map_err(|e| e.to_string());
+                    }
+                    if self.stream {
+                        progress(Response::Progress {
+                            label: label.to_string(),
+                            ms: started.elapsed().as_millis() as u64,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run a whole channel mix: inline (the scoped-thread executive), or
+    /// one pool job per channel with heartbeat polling.
+    fn execute_mix(
+        &mut self,
+        mix: &ChannelMix,
+        progress: &mut dyn FnMut(Response),
+    ) -> Result<Vec<anyhow::Result<BatchStats>>, String> {
+        let pool = match &self.exec {
+            Exec::Inline => None,
+            Exec::Pool(p) => Some(Arc::clone(p)),
+        };
+        match pool {
+            None => self.platform.run_batch_mix_results(mix).map_err(|e| e.to_string()),
+            Some(pool) => {
+                let mut pending =
+                    self.platform.start_mix_on(&pool, mix).map_err(|e| e.to_string())?;
+                let started = Instant::now();
+                while !self.platform.poll_mix(&mut pending, self.stream_interval) {
+                    if self.stream {
+                        progress(Response::Progress {
+                            label: "RUNMIX".into(),
+                            ms: started.elapsed().as_millis() as u64,
+                        });
+                    }
+                }
+                Ok(self.platform.finish_mix(pending))
+            }
+        }
+    }
+}
+
+/// Drive a whole session over reader/writer byte streams — the single
+/// transport loop behind the in-memory UART stand-in,
+/// [`crate::hostctrl::serve_tcp`] and every bench-server connection.
+/// Blank lines are skipped; each command line answers exactly one
+/// `OK`/`ERR` line (preceded by `STREAM` heartbeat lines when the
+/// session streams); `QUIT`'s `OK BYE` ends the loop.
+pub fn serve_stream<R: BufRead, W: Write>(
+    session: &mut Session,
+    reader: R,
+    mut writer: W,
+) -> std::io::Result<()> {
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request(&line) {
+            Ok(req) => {
+                // heartbeats go down the same wire, flushed immediately
+                // so a streaming client sees them during the run
+                let mut werr: Option<std::io::Error> = None;
+                let resp = session.handle_with_progress(&req, &mut |p| {
+                    if werr.is_none() {
+                        let attempt = writeln!(writer, "{}", render_response(&p))
+                            .and_then(|()| writer.flush());
+                        if let Err(e) = attempt {
+                            werr = Some(e);
+                        }
+                    }
+                });
+                if let Some(e) = werr {
+                    return Err(e);
+                }
+                resp
+            }
+            Err(e) => Response::Err(e),
+        };
+        writeln!(writer, "{}", render_response(&resp))?;
+        if matches!(resp, Response::Bye) {
+            break;
+        }
+    }
+    writer.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DesignConfig, SpeedBin};
+
+    fn pooled(channels: usize, workers: usize, limits: SessionLimits) -> Session {
+        let platform = Platform::new(DesignConfig::with_channels(channels, SpeedBin::Ddr4_1600));
+        Session::pooled(platform, Arc::new(RunPool::new(workers)), limits, 7)
+    }
+
+    #[test]
+    fn pooled_session_answers_byte_identically_to_inline() {
+        let script = [
+            "INFO",
+            "HELP",
+            "CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=256",
+            "CHCFG 1:CHASE,WSET=64k,BURST=1,BATCH=64 2:BANK,SEED=1,BURST=1,BATCH=64",
+            "RUN 0",
+            "STATS 0",
+            "RUNALL",
+            "RUNMIX",
+            "STATS 1",
+            "RESET 0",
+            "STATS 0",
+            "RUN 9",
+            "QUIT",
+        ];
+        let mut inline = Session::inline(Platform::new(DesignConfig::with_channels(
+            3,
+            SpeedBin::Ddr4_1600,
+        )));
+        let mut pooled = pooled(3, 2, SessionLimits::UNLIMITED);
+        for line in script {
+            assert_eq!(
+                inline.handle_line(line),
+                pooled.handle_line(line),
+                "`{line}` diverges between inline and pooled execution"
+            );
+        }
+    }
+
+    #[test]
+    fn limit_violations_answer_named_diagnostics() {
+        let limits = SessionLimits { max_channels: 2, max_batch: 1000, max_queued_runs: 2 };
+        let mut s = pooled(3, 1, limits);
+        // channel 2 exists in the design but exceeds the session quota
+        let r = s.handle_line("CFG 2 OP=R BATCH=64");
+        assert!(r.starts_with("ERR LIMIT_CHANNELS:"), "{r}");
+        // out-of-design range keeps the legacy (non-limit) diagnostic
+        let r = s.handle_line("CFG 9 OP=R BATCH=64");
+        assert!(r.starts_with("ERR channel 9 out of range"), "{r}");
+        let r = s.handle_line("CFG 0 OP=R BATCH=2000");
+        assert!(r.starts_with("ERR LIMIT_BATCH:"), "{r}");
+        let r = s.handle_line("CHCFG 0:SEQ,BATCH=2000");
+        assert!(r.starts_with("ERR LIMIT_BATCH:"), "{r}");
+        // RUNALL/RUNMIX touch all 3 channels; the quota allows 2
+        let r = s.handle_line("RUNALL");
+        assert!(r.starts_with("ERR LIMIT_CHANNELS:"), "{r}");
+        let r = s.handle_line("RUNMIX");
+        assert!(r.starts_with("ERR LIMIT_CHANNELS:"), "{r}");
+        // within quota everything still works
+        let r = s.handle_line("CFG 1 OP=R BURST=4 BATCH=64");
+        assert!(r.starts_with("OK CFG CH=1"), "{r}");
+        let r = s.handle_line("RUN 1");
+        assert!(r.starts_with("OK RUN CH=1 TXNS=64"), "{r}");
+    }
+
+    #[test]
+    fn runmix_queue_limit_counts_one_run_per_channel() {
+        let limits = SessionLimits { max_queued_runs: 2, ..SessionLimits::default() };
+        let mut s = pooled(3, 1, limits);
+        let r = s.handle_line("RUNMIX");
+        assert!(r.starts_with("ERR LIMIT_QUEUE:"), "{r}");
+        assert!(r.contains("3 queued run(s)"), "{r}");
+        // a 2-channel session under the same limit is fine
+        let mut s = pooled(2, 1, limits);
+        let r = s.handle_line("CHCFG 0:SEQ,BURST=4,BATCH=64 1:SEQ,BURST=4,BATCH=64");
+        assert!(r.starts_with("OK CHCFG"), "{r}");
+        let r = s.handle_line("RUNMIX");
+        assert!(r.starts_with("OK RUNMIX CHANNELS=2 OK=2"), "{r}");
+    }
+
+    #[test]
+    fn pooled_runmix_isolates_a_panicking_channel() {
+        let mut p = Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_1600));
+        p.inject_channel_panic(1);
+        let mut s =
+            Session::pooled(p, Arc::new(RunPool::new(2)), SessionLimits::default(), 1);
+        let r = s.handle_line("CHCFG 0:SEQ,BURST=4,BATCH=32 1:SEQ,BURST=4,BATCH=32 \
+                               2:SEQ,BURST=4,BATCH=32");
+        assert!(r.starts_with("OK CHCFG"), "{r}");
+        let r = s.handle_line("RUNMIX");
+        assert!(r.starts_with("OK RUNMIX CHANNELS=3 OK=2"), "{r}");
+        assert!(r.contains("CH1=ERR[") && r.contains("panicked"), "{r}");
+        assert!(s.handle_line("STATS 0").starts_with("OK"), "survivor stats readable");
+        assert!(s.handle_line("STATS 1").starts_with("ERR"), "failed channel has no stats");
+        // the channel was reset; the next mix is fully clean
+        assert!(s.handle_line("RUNMIX").contains("OK=3"));
+    }
+
+    #[test]
+    fn streaming_emits_heartbeats_on_pooled_runs_only_when_enabled() {
+        let mut s = pooled(1, 1, SessionLimits::UNLIMITED);
+        s.set_stream_interval(Duration::from_millis(1));
+        s.handle_line("CFG 0 OP=R ADDR=RND SEED=3 BURST=1 BATCH=60000");
+        // streaming off: no heartbeats
+        let mut beats = Vec::new();
+        let resp = s.handle_with_progress(&parse_request("RUN 0").unwrap(), &mut |p| {
+            beats.push(render_response(&p));
+        });
+        assert!(render_response(&resp).starts_with("OK RUN CH=0"), "run succeeded");
+        assert!(beats.is_empty(), "no heartbeats without STREAM ON: {beats:?}");
+        // streaming on: heartbeat lines precede the reply
+        assert_eq!(s.handle_line("STREAM ON"), "OK STREAM ON");
+        let mut beats = Vec::new();
+        let resp = s.handle_with_progress(&parse_request("RUN 0").unwrap(), &mut |p| {
+            beats.push(render_response(&p));
+        });
+        assert!(render_response(&resp).starts_with("OK RUN CH=0"), "run succeeded");
+        assert!(!beats.is_empty(), "a 1ms cadence must tick during a 60k-txn batch");
+        assert!(beats[0].starts_with("STREAM RUN CH=0 MS="), "{}", beats[0]);
+        assert_eq!(s.handle_line("STREAM OFF"), "OK STREAM OFF");
+    }
+
+    #[test]
+    fn serve_stream_interleaves_heartbeats_before_the_reply() {
+        let mut s = pooled(1, 1, SessionLimits::UNLIMITED);
+        s.set_stream_interval(Duration::from_millis(1));
+        let input = b"STREAM ON\nCFG 0 OP=R ADDR=RND SEED=3 BURST=1 BATCH=60000\nRUN 0\nQUIT\n"
+            .to_vec();
+        let mut out = Vec::new();
+        serve_stream(&mut s, std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "OK STREAM ON");
+        let beats = lines.iter().filter(|l| l.starts_with("STREAM RUN CH=0 MS=")).count();
+        assert!(beats > 0, "heartbeats on the wire: {text}");
+        // the heartbeats sit between CFG's reply and RUN's reply
+        assert!(lines[1].starts_with("OK CFG CH=0"), "{}", lines[1]);
+        assert!(lines[2 + beats].starts_with("OK RUN CH=0"), "{text}");
+        assert_eq!(*lines.last().unwrap(), "OK BYE");
+    }
+
+    #[test]
+    fn chcfg_is_atomic_under_limits() {
+        let limits = SessionLimits { max_batch: 100, ..SessionLimits::default() };
+        let mut s = pooled(2, 1, limits);
+        let r = s.handle_line("CHCFG 0:SEQ,BURST=4,BATCH=50 1:SEQ,BURST=4,BATCH=2000");
+        assert!(r.starts_with("ERR LIMIT_BATCH:"), "{r}");
+        // channel 0 kept its default staging (batch 1024), proving the
+        // rejected command didn't half-apply
+        let r = s.handle_line("RUN 0");
+        assert!(r.starts_with("OK RUN CH=0 TXNS=1024"), "{r}");
+    }
+}

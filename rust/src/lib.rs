@@ -32,9 +32,14 @@
 //!   phased addressing — see [`config::AddrMode`]), signaling modes,
 //!   payload generation + read-back verification, hardware-style
 //!   performance counters.
-//! - [`hostctrl`] — the UART/host-PC command protocol (in-memory link or
-//!   TCP server) that configures TGs and collects statistics at run time;
-//!   every pattern-engine mode is selectable live through `CFG`.
+//! - [`hostctrl`] — the UART/host-PC command protocol, re-founded on a
+//!   typed `Request`/`Response` API ([`hostctrl::proto`]) with one parse
+//!   and one render path; transports are thin: the in-memory link, the
+//!   legacy serial TCP loop, and the concurrent multi-session bench
+//!   server ([`hostctrl::BenchServer`] — per-client isolated platforms,
+//!   one shared bounded worker pool, per-session resource limits,
+//!   streaming `STATS` heartbeats). Every pattern-engine mode is
+//!   selectable live through `CFG`.
 //! - [`platform`] — design-time composition: N channels × data rate ×
 //!   counter set, the batch-run executive — including the heterogeneous
 //!   per-channel workload engine ([`config::ChannelMix`] /

@@ -16,7 +16,8 @@
 //! ddr4bench interference --ch 0:SEQ --ch 1:CHASE --ch 2:BANK # solo-vs-co-run
 //! ddr4bench compare a/BENCH_sweep.json b/BENCH_sweep.json   # cross-sweep deltas
 //! ddr4bench table3 | table4 | fig2 | fig3 | scaling | analysis | modelcheck
-//! ddr4bench serve --addr-bind 127.0.0.1:5557  # host-controller TCP endpoint
+//! ddr4bench serve --listen 127.0.0.1:5557 --workers 4 --max-sessions 8
+//! ddr4bench serve --serial --addr-bind 127.0.0.1:5557  # legacy one-client loop
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -26,7 +27,7 @@ use ddr4bench::config::{
     parse_channel_mix, parse_mix_file, parse_pattern_config, ChannelMix, DesignConfig,
     EngineKind, PatternConfig, SpeedBin,
 };
-use ddr4bench::hostctrl::{serve_tcp, HostController};
+use ddr4bench::hostctrl::{serve_tcp, BenchServer, HostController, ServerConfig};
 use ddr4bench::platform::{interference_matrix, sweep, Platform};
 use ddr4bench::report::{campaign, compare};
 use ddr4bench::resource;
@@ -43,7 +44,7 @@ fn cli() -> Cli {
         .command("scaling", "channel-scaling experiment (1-3 channels)")
         .command("analysis", "paper-claim vs measured ratio table (SIII-C)")
         .command("modelcheck", "analytic model vs simulator cross-check")
-        .command("serve", "serve the host-controller protocol over TCP")
+        .command("serve", "concurrent multi-session bench server (host protocol over TCP)")
         .command("dse", "design-space exploration (analytic model; XLA-batched if present)")
         .command("trace", "replay a memory-access trace file (see trafficgen::trace)")
         .command("sweep", "parallel campaign sweep (speeds x channels x maps x knobs x patterns)")
@@ -67,7 +68,13 @@ fn cli() -> Cli {
         .option("sig", "signaling NB|BLK|AGR (default NB)")
         .option("batch", "transactions per batch (default 4096)")
         .option("scale", "campaign scale factor (default 1.0)")
-        .option("addr-bind", "TCP bind address for serve (default 127.0.0.1:5557)")
+        .option("listen", "serve: TCP bind address (default 127.0.0.1:5557)")
+        .option("addr-bind", "serve: legacy alias of --listen")
+        .option("workers", "serve: shared executor-pool threads (default: parallelism - 1)")
+        .option("max-sessions", "serve: concurrent sessions (default 8); with --serial, total")
+        .option("max-batch", "serve: per-session BATCH ceiling (default 1048576)")
+        .option("max-queued", "serve: per-session queued-run ceiling (default 8)")
+        .flag("serial", "serve: legacy one-client-at-a-time loop (inline execution)")
         .option("csv", "write table/figure CSV to this path")
         .option("file", "trace file for the trace command")
         .option("speeds", "sweep: comma list of data rates (default 1600,2400)")
@@ -581,12 +588,42 @@ fn main() -> Result<()> {
         }
         Some("serve") => {
             let design = design_from_args(&args)?;
-            let mut platform = Platform::new(design);
-            if let Some(rt) = maybe_runtime(&args)? {
-                platform = platform.with_runtime(rt);
+            let addr = args.get("listen").or(args.get("addr-bind")).unwrap_or("127.0.0.1:5557");
+            if args.has_flag("serial") {
+                // legacy single-master loop: one client at a time, inline
+                // execution on this thread (the only mode that can carry
+                // the XLA runtime)
+                let mut platform = Platform::new(design);
+                if let Some(rt) = maybe_runtime(&args)? {
+                    platform = platform.with_runtime(rt);
+                }
+                let max = match args.get("max-sessions") {
+                    Some(v) => {
+                        Some(v.parse().map_err(|_| anyhow!("--max-sessions: bad integer `{v}`"))?)
+                    }
+                    None => None,
+                };
+                serve_tcp(HostController::new(platform), addr, max)?;
+            } else {
+                if args.has_flag("xla") {
+                    return Err(anyhow!(
+                        "--xla requires --serial: pooled server sessions use the pure-Rust \
+                         data path"
+                    ));
+                }
+                let mut cfg = ServerConfig::default();
+                if let Some(v) = args.get("workers") {
+                    cfg.workers = v.parse().map_err(|_| anyhow!("--workers: bad integer `{v}`"))?;
+                }
+                cfg.max_sessions =
+                    args.parse_or("max-sessions", cfg.max_sessions).map_err(|e| anyhow!(e))?;
+                cfg.limits.max_batch =
+                    args.parse_or("max-batch", cfg.limits.max_batch).map_err(|e| anyhow!(e))?;
+                cfg.limits.max_queued_runs = args
+                    .parse_or("max-queued", cfg.limits.max_queued_runs)
+                    .map_err(|e| anyhow!(e))?;
+                BenchServer::bind(design, cfg, addr)?.run()?;
             }
-            let host = HostController::new(platform);
-            serve_tcp(host, args.get_or("addr-bind", "127.0.0.1:5557"), None)?;
         }
         Some(other) => return Err(anyhow!("unknown command {other}")),
     }

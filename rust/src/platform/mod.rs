@@ -18,12 +18,26 @@
 //! degradation. Whole *campaigns* — cartesian (speed × channels ×
 //! pattern/mix) grids — run through the [`sweep`] executive's
 //! work-stealing pool, one platform instance per job.
+//!
+//! For the multi-session bench server, batch execution can instead be
+//! dispatched to a shared persistent [`pool::RunPool`]:
+//! [`Platform::start_batch_on`] moves the channel's state into a pool
+//! job (installing a power-on placeholder meanwhile) and returns a
+//! [`PendingBatch`] handle; [`Platform::poll_batch`] /
+//! [`Platform::finish_batch`] reinstall the state on success and
+//! surface failures with the same reset-on-failure semantics as
+//! [`Platform::run_batch`]. [`Platform::start_mix_on`] is the
+//! heterogeneous-mix counterpart.
 
+pub mod pool;
 pub mod sweep;
 
+pub use pool::RunPool;
 pub use sweep::{SweepJob, SweepOutcome, SweepSpec};
 
 use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -264,13 +278,19 @@ impl Platform {
     /// channel mid-simulation (half-mutated queues, a taken store), and
     /// silently reusing that torn state would corrupt later batches.
     fn reset_channel(&mut self, ch: usize) {
+        self.channels[ch] = self.fresh_state();
+    }
+
+    /// A power-on channel state for this design (fresh controller,
+    /// cleared memory, zeroed clock).
+    fn fresh_state(&self) -> ChannelState {
         let timing = TimingParams::for_bin(self.design.speed);
-        self.channels[ch] = ChannelState {
+        ChannelState {
             controller: MemController::new(self.design.controller, timing, self.design.geometry),
             store: Some(DataStore::new()),
             axi_now: 0,
             panic_inject: false,
-        };
+        }
     }
 
     /// Run a heterogeneous [`ChannelMix`] and return each channel's
@@ -364,6 +384,173 @@ impl Platform {
         BatchStats { counters, speed: stats[0].speed, energy }
     }
 
+    /// The one documented aggregate-throughput accessor, reconciling the
+    /// platform's two historical conventions:
+    ///
+    /// * `legacy = false` (run/sweep/`RUNMIX`): merge the counters first
+    ///   ([`Self::aggregate`]: bytes sum, cycles max) and take the merged
+    ///   throughput — channels overlap in time, so this is the paper's
+    ///   "N channels deliver N× the bandwidth" composition.
+    /// * `legacy = true` (the `RUNALL` wire value since PR 1): sum the
+    ///   per-channel rates in channel order. For equal-length batches the
+    ///   two agree; for skewed mixes the rate sum over-credits short
+    ///   batches. Kept — explicitly, not as a silently different code
+    ///   path — because `RUNALL AGG_GBS=` is wire-compatible output.
+    ///
+    /// The float additions happen in channel order in both modes, so each
+    /// mode is bit-stable run to run.
+    pub fn aggregate_gbs(stats: &[BatchStats], legacy: bool) -> f64 {
+        if stats.is_empty() {
+            return 0.0;
+        }
+        if legacy {
+            let mut agg = 0.0;
+            for s in stats {
+                agg += s.total_throughput_gbs();
+            }
+            agg
+        } else {
+            Self::aggregate(stats).total_throughput_gbs()
+        }
+    }
+
+    /// Dispatch one batch to a shared [`RunPool`]: channel `ch`'s state
+    /// moves into the job (a power-on placeholder takes its seat until
+    /// the result is collected) and the returned [`PendingBatch`] is
+    /// redeemed with [`Self::poll_batch`] / [`Self::finish_batch`].
+    /// Config and range errors are rejected here, before any state moves,
+    /// with the same diagnostics as [`Self::run_batch`]. Pool execution
+    /// uses the pure-Rust data path — the PJRT handles of an attached XLA
+    /// runtime are not `Send`, so a runtime-attached platform is
+    /// rejected.
+    pub fn start_batch_on(
+        &mut self,
+        pool: &RunPool,
+        ch: usize,
+        cfg: &PatternConfig,
+    ) -> Result<PendingBatch> {
+        if ch >= self.channels.len() {
+            bail!("channel {ch} out of range (design has {})", self.channels.len());
+        }
+        if self.runtime.is_some() {
+            bail!("pooled execution uses the pure-Rust data path; detach the XLA runtime");
+        }
+        cfg.validate()?;
+        let fresh = self.fresh_state();
+        let state = std::mem::replace(&mut self.channels[ch], fresh);
+        let (tx, rx) = mpsc::channel();
+        pool.submit(pool::Job {
+            ch,
+            design: self.design.clone(),
+            state,
+            cfg: cfg.clone(),
+            reply: tx,
+        });
+        Ok(PendingBatch { ch, rx })
+    }
+
+    /// Wait up to `timeout` for a dispatched batch. `None` means still
+    /// running (poll again — e.g. after emitting a streaming heartbeat);
+    /// `Some(result)` is terminal: the channel state is reinstalled on
+    /// success, and on failure the channel keeps the power-on placeholder
+    /// installed at dispatch time (the [`Self::run_batch`]
+    /// reset-on-failure contract). Don't call again after `Some`.
+    pub fn poll_batch(
+        &mut self,
+        pending: &PendingBatch,
+        timeout: Duration,
+    ) -> Option<Result<BatchStats>> {
+        match pending.rx.recv_timeout(timeout) {
+            Ok(outcome) => Some(self.install_outcome(pending.ch, outcome)),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(anyhow!("worker pool shut down mid-batch")))
+            }
+        }
+    }
+
+    /// Block until a dispatched batch completes and return its result
+    /// (same terminal semantics as [`Self::poll_batch`]).
+    pub fn finish_batch(&mut self, pending: PendingBatch) -> Result<BatchStats> {
+        match pending.rx.recv() {
+            Ok(outcome) => self.install_outcome(pending.ch, outcome),
+            Err(_) => Err(anyhow!("worker pool shut down mid-batch")),
+        }
+    }
+
+    /// Blocking convenience: [`Self::start_batch_on`] +
+    /// [`Self::finish_batch`] — the pooled equivalent of
+    /// [`Self::run_batch`].
+    pub fn run_batch_on(
+        &mut self,
+        pool: &RunPool,
+        ch: usize,
+        cfg: &PatternConfig,
+    ) -> Result<BatchStats> {
+        let pending = self.start_batch_on(pool, ch, cfg)?;
+        self.finish_batch(pending)
+    }
+
+    fn install_outcome(&mut self, ch: usize, outcome: pool::JobOutcome) -> Result<BatchStats> {
+        if let Some(state) = outcome.state {
+            self.channels[ch] = state;
+        }
+        outcome.result
+    }
+
+    /// Dispatch a whole [`ChannelMix`] to the pool, one job per channel
+    /// (the pooled counterpart of [`Self::run_batch_mix_results`]).
+    /// Mix-level configuration errors (width mismatch, invalid
+    /// per-channel configs) are rejected up front with the same
+    /// diagnostics as the inline executive.
+    pub fn start_mix_on(&mut self, pool: &RunPool, mix: &ChannelMix) -> Result<PendingMix> {
+        if mix.len() != self.channels.len() {
+            bail!(
+                "channel mix configures {} channel(s) but the design has {}",
+                mix.len(),
+                self.channels.len()
+            );
+        }
+        mix.validate()?;
+        let mut slots = Vec::with_capacity(mix.len());
+        for ch in 0..mix.len() {
+            let cfg = mix.get(ch).expect("mix covers channel");
+            slots.push(Some(self.start_batch_on(pool, ch, cfg)?));
+        }
+        Ok(PendingMix { done: (0..mix.len()).map(|_| None).collect(), slots })
+    }
+
+    /// Wait up to `timeout` for the mix's first unfinished channel (the
+    /// rest are polled without blocking). Returns `true` once every
+    /// channel has its result — then redeem with [`Self::finish_mix`].
+    pub fn poll_mix(&mut self, pending: &mut PendingMix, timeout: Duration) -> bool {
+        let mut wait = timeout;
+        for ch in 0..pending.slots.len() {
+            let result = match pending.slots[ch].as_ref() {
+                Some(p) => self.poll_batch(p, wait),
+                None => continue,
+            };
+            wait = Duration::ZERO;
+            if let Some(r) = result {
+                pending.done[ch] = Some(r);
+                pending.slots[ch] = None;
+            }
+        }
+        pending.done.iter().all(|d| d.is_some())
+    }
+
+    /// Block until every channel of the mix completes and return the
+    /// per-channel outcomes in channel order (failed channels keep their
+    /// power-on reset, like [`Self::run_batch_mix_results`]).
+    pub fn finish_mix(&mut self, mut pending: PendingMix) -> Vec<Result<BatchStats>> {
+        for ch in 0..pending.slots.len() {
+            if let Some(p) = pending.slots[ch].take() {
+                pending.done[ch] = Some(self.finish_batch(p));
+            }
+        }
+        pending.done.into_iter().map(|d| d.expect("all slots finished")).collect()
+    }
+
     /// Pre-generate payload words for every write burst in the TG's plan
     /// via the XLA datagen executable.
     fn datagen_for_plan(
@@ -443,6 +630,50 @@ impl Platform {
                 m
             }),
         }
+    }
+}
+
+/// Handle to one batch dispatched to a [`RunPool`] via
+/// [`Platform::start_batch_on`]. Dropping it abandons the run: the
+/// worker's reply is discarded and the channel stays at the power-on
+/// placeholder — safe (that's a plain reset), which is what makes a
+/// mid-run client disconnect harmless.
+pub struct PendingBatch {
+    ch: usize,
+    rx: mpsc::Receiver<pool::JobOutcome>,
+}
+
+impl PendingBatch {
+    /// The channel the batch was dispatched for.
+    pub fn channel(&self) -> usize {
+        self.ch
+    }
+}
+
+/// Handle to a [`ChannelMix`] dispatched to a [`RunPool`] via
+/// [`Platform::start_mix_on`] — one [`PendingBatch`] per channel plus
+/// the already-collected results.
+pub struct PendingMix {
+    slots: Vec<Option<PendingBatch>>,
+    done: Vec<Option<Result<BatchStats>>>,
+}
+
+impl PendingMix {
+    /// Number of channels in the mix.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True for the zero-channel mix (cannot actually be constructed —
+    /// `ChannelMix` rejects empty mixes — but clippy insists `len` has an
+    /// `is_empty` partner).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Channels whose results are already in.
+    pub fn finished(&self) -> usize {
+        self.done.iter().filter(|d| d.is_some()).count()
     }
 }
 
@@ -785,6 +1016,80 @@ mod tests {
         assert!(err.contains("injected channel fault"), "{err}");
         let per = p.run_batch_mix(&mix).unwrap();
         assert_eq!(per[0].counters.rd_txns, 32, "reset channel runs clean");
+    }
+
+    #[test]
+    fn aggregate_gbs_reconciles_legacy_and_merged_conventions() {
+        let mut p = Platform::new(DesignConfig::with_channels(2, SpeedBin::Ddr4_1600));
+        // equal-length batches: rate sum and merged throughput agree
+        let per = p.run_batch_all(&PatternConfig::seq_read_burst(8, 400)).unwrap();
+        let legacy = Platform::aggregate_gbs(&per, true);
+        let merged = Platform::aggregate_gbs(&per, false);
+        assert!((legacy - merged).abs() < 1e-9, "equal batches: {legacy} vs {merged}");
+        assert_eq!(
+            legacy,
+            per[0].total_throughput_gbs() + per[1].total_throughput_gbs(),
+            "legacy mode is the ordered per-channel rate sum"
+        );
+        assert_eq!(
+            merged,
+            Platform::aggregate(&per).total_throughput_gbs(),
+            "merged mode is the counters-merge throughput"
+        );
+        // skewed batches: the rate sum over-credits the short batch, so
+        // legacy strictly exceeds merged (cycles max ≥ each channel's)
+        let mix = ChannelMix::new(vec![
+            PatternConfig::seq_read_burst(8, 1200),
+            PatternConfig::seq_read_burst(8, 100),
+        ])
+        .unwrap();
+        let per = p.run_batch_mix(&mix).unwrap();
+        let legacy = Platform::aggregate_gbs(&per, true);
+        let merged = Platform::aggregate_gbs(&per, false);
+        assert!(legacy > merged, "skewed batches diverge: {legacy} vs {merged}");
+        assert_eq!(Platform::aggregate_gbs(&[], true), 0.0);
+        assert_eq!(Platform::aggregate_gbs(&[], false), 0.0);
+    }
+
+    #[test]
+    fn pooled_mix_matches_threaded_mix_and_isolates_panics() {
+        let design = DesignConfig::with_channels(3, SpeedBin::Ddr4_1600);
+        let mix = ChannelMix::new(vec![
+            PatternConfig::seq_read_burst(32, 400),
+            PatternConfig::pointer_chase_read(1 << 20, 200, 7),
+            PatternConfig::bank_conflict_read(1, 200, 1),
+        ])
+        .unwrap();
+        let mut threaded = Platform::new(design.clone());
+        let expect = threaded.run_batch_mix(&mix).unwrap();
+
+        let pool = RunPool::new(2);
+        let mut pooled = Platform::new(design);
+        let mut pending = pooled.start_mix_on(&pool, &mix).unwrap();
+        assert_eq!(pending.len(), 3);
+        let mut polls = 0;
+        while !pooled.poll_mix(&mut pending, Duration::from_millis(20)) {
+            polls += 1;
+            assert!(polls < 10_000, "mix never completed");
+        }
+        assert_eq!(pending.finished(), 3);
+        let results = pooled.finish_mix(pending);
+        for (ch, r) in results.iter().enumerate() {
+            let s = r.as_ref().unwrap();
+            assert_eq!(s.counters, expect[ch].counters, "channel {ch} diverges from threads");
+        }
+
+        // a panicking channel fails alone; the survivors' results land
+        pooled.inject_channel_panic(1);
+        let pending = pooled.start_mix_on(&pool, &mix).unwrap();
+        let results = pooled.finish_mix(pending);
+        assert!(results[0].is_ok() && results[2].is_ok(), "survivors spared");
+        let err = results[1].as_ref().unwrap_err().to_string();
+        assert!(err.contains("channel 1 panicked"), "{err}");
+        // width mismatch diagnosed up front, like the inline executive
+        let wide = ChannelMix::uniform(&PatternConfig::seq_read_burst(4, 32), 4).unwrap();
+        let err = pooled.start_mix_on(&pool, &wide).unwrap_err().to_string();
+        assert!(err.contains("but the design has 3"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Shared bounded worker pool for batch execution.
+//!
+//! The bench server hands every client session its own isolated
+//! [`super::Platform`], but lets *execution* go through one process-wide
+//! [`RunPool`] so K concurrent sessions cannot oversubscribe the machine:
+//! the pool owns `workers` OS threads, full stop, no matter how many
+//! sessions are queueing batches. The executor idiom is the same
+//! work-stealing shape as [`super::sweep::run_sweep`] — per-worker deques,
+//! round-robin submission, steal-from-the-back when idle — but the pool
+//! is persistent (the server owns it for its whole lifetime) rather than
+//! scoped to one campaign, so idle workers park on a condvar and a
+//! `Drop`-driven shutdown flag replaces scope exit.
+//!
+//! A job ships the channel's *state* (not the whole `Platform` — the
+//! platform's PJRT handles are not `Send`, its channel states are) plus
+//! the design and pattern, and runs the same
+//! [`super::run_batch_on_state`] body as the mix executive's scoped
+//! threads, wrapped in `catch_unwind`: a panicking batch becomes that
+//! job's error, the worker thread survives, and a client that
+//! disconnected mid-run (dropping its reply receiver) is simply ignored —
+//! a dead session can never poison the pool.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{DesignConfig, PatternConfig};
+use crate::stats::BatchStats;
+
+use super::{panic_msg, run_batch_on_state, ChannelState};
+
+/// One dispatched batch: the channel's moved-out state plus everything
+/// needed to run it. Created by [`super::Platform::start_batch_on`].
+pub(super) struct Job {
+    pub ch: usize,
+    pub design: DesignConfig,
+    pub state: ChannelState,
+    pub cfg: PatternConfig,
+    pub reply: Sender<JobOutcome>,
+}
+
+/// What comes back over a job's reply channel. `state` is `Some` only on
+/// success — a failed or panicked batch abandons its (torn) state, and
+/// the submitting platform keeps the fresh power-on placeholder it
+/// installed at dispatch time, which is exactly the reset-on-failure
+/// contract of [`super::Platform::run_batch`].
+pub(super) struct JobOutcome {
+    pub state: Option<ChannelState>,
+    pub result: Result<BatchStats>,
+}
+
+struct PoolShared {
+    /// One deque per worker; submitters round-robin, idle workers steal.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Parking lot for idle workers.
+    idle: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin submission cursor.
+    next: AtomicUsize,
+}
+
+/// A persistent bounded pool of batch-executor threads, shared by every
+/// session of a bench server. Dropping the pool drains the queues and
+/// joins the workers.
+pub struct RunPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RunPool {
+    /// Spawn a pool with `workers` executor threads (at least one).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|idx| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("runpool-{idx}"))
+                    .spawn(move || worker_loop(&shared, idx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers: handles }
+    }
+
+    /// Number of executor threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job (round-robin over the worker deques) and wake a
+    /// parked worker.
+    pub(super) fn submit(&self, job: Job) {
+        let idx = self.shared.next.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
+        self.shared.queues[idx].lock().unwrap().push_back(job);
+        self.shared.wake.notify_all();
+    }
+}
+
+impl Drop for RunPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, idx: usize) {
+    loop {
+        // Take work before honouring shutdown, so dropping the pool
+        // drains already-queued jobs instead of orphaning their replies.
+        if let Some(job) = take_job(shared, idx) {
+            execute(job);
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let guard = shared.idle.lock().unwrap();
+        let _ = shared.wake.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+    }
+}
+
+/// Pop from the worker's own deque front; steal from other deques' backs.
+fn take_job(shared: &PoolShared, idx: usize) -> Option<Job> {
+    let n = shared.queues.len();
+    for offset in 0..n {
+        let qi = (idx + offset) % n;
+        let mut q = shared.queues[qi].lock().unwrap();
+        let job = if offset == 0 { q.pop_front() } else { q.pop_back() };
+        if job.is_some() {
+            return job;
+        }
+    }
+    None
+}
+
+fn execute(job: Job) {
+    let Job { ch, design, mut state, cfg, reply } = job;
+    let caught =
+        catch_unwind(AssertUnwindSafe(|| run_batch_on_state(&design, &mut state, &cfg)));
+    let outcome = match caught {
+        Ok(Ok(stats)) => JobOutcome { state: Some(state), result: Ok(stats) },
+        // failed batch: abandon the torn state (the platform keeps its
+        // power-on placeholder — run_batch's reset-on-failure contract)
+        Ok(Err(e)) => JobOutcome { state: None, result: Err(e) },
+        Err(payload) => JobOutcome {
+            state: None,
+            result: Err(anyhow!("channel {ch} panicked: {}", panic_msg(payload.as_ref()))),
+        },
+    };
+    // A disconnected receiver means the client went away mid-run: the
+    // result is simply dropped; the worker lives on.
+    let _ = reply.send(outcome);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Platform;
+    use super::*;
+    use crate::config::{DesignConfig, SpeedBin};
+
+    #[test]
+    fn pooled_batch_matches_inline_counters_bit_for_bit() {
+        let design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        let cfg = PatternConfig::seq_read_burst(8, 300);
+        let mut inline = Platform::new(design.clone());
+        let a = inline.run_batch(0, &cfg).unwrap();
+        let pool = RunPool::new(2);
+        let mut pooled = Platform::new(design);
+        let b = pooled.run_batch_on(&pool, 0, &cfg).unwrap();
+        assert_eq!(a.counters, b.counters, "pool executor must not perturb the simulation");
+    }
+
+    #[test]
+    fn warm_state_survives_across_pooled_batches() {
+        // The moved-out state is reinstalled on success: memory contents
+        // written by batch 1 verify cleanly in batch 2, exactly like the
+        // inline path.
+        let pool = RunPool::new(1);
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let region = 64 * 4 * 32;
+        let mut w = PatternConfig::seq_write_burst(4, 64);
+        w.verify = true;
+        w.region_bytes = region;
+        assert_eq!(p.run_batch_on(&pool, 0, &w).unwrap().counters.mismatches, 0);
+        let mut r = PatternConfig::seq_read_burst(4, 64);
+        r.verify = true;
+        r.region_bytes = region;
+        assert_eq!(p.run_batch_on(&pool, 0, &r).unwrap().counters.mismatches, 0);
+    }
+
+    #[test]
+    fn panicking_job_fails_only_its_batch_and_resets_the_channel() {
+        let pool = RunPool::new(1);
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        p.inject_channel_panic(0);
+        let cfg = PatternConfig::seq_read_burst(4, 64);
+        let err = p.run_batch_on(&pool, 0, &cfg).unwrap_err().to_string();
+        assert!(err.contains("channel 0 panicked"), "{err}");
+        assert!(err.contains("injected channel fault"), "{err}");
+        // the worker survived and the channel is back at power-on state
+        let s = p.run_batch_on(&pool, 0, &cfg).unwrap();
+        assert_eq!(s.counters.rd_txns, 64, "pool keeps serving after a panicked job");
+    }
+
+    #[test]
+    fn dropped_pending_batch_never_poisons_the_pool() {
+        // A client disconnecting mid-run drops its PendingBatch (and with
+        // it the reply receiver); the worker's send fails silently and
+        // the next submission runs normally.
+        let pool = RunPool::new(1);
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let cfg = PatternConfig::seq_read_burst(4, 64);
+        let pending = p.start_batch_on(&pool, 0, &cfg).unwrap();
+        drop(pending);
+        let s = p.run_batch_on(&pool, 0, &cfg).unwrap();
+        assert_eq!(s.counters.rd_txns, 64);
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs_before_joining() {
+        let pool = RunPool::new(1);
+        let mut p = Platform::new(DesignConfig::with_channels(3, SpeedBin::Ddr4_1600));
+        let cfg = PatternConfig::seq_read_burst(4, 64);
+        let pendings: Vec<_> =
+            (0..3).map(|ch| p.start_batch_on(&pool, ch, &cfg).unwrap()).collect();
+        drop(pool);
+        for pending in pendings {
+            let s = p.finish_batch(pending).unwrap();
+            assert_eq!(s.counters.rd_txns, 64, "queued job still ran to completion");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Bench-server integration tests: N real TCP clients drive concurrent
+//! sessions against one [`BenchServer`] and every transcript must be
+//! byte-identical to a solo single-session `HostController` replay of
+//! the same script — session isolation plus the shared worker pool must
+//! be observationally invisible. Also: a client that vanishes
+//! mid-session never poisons the pool, and per-session limits surface
+//! their named `ERR LIMIT_*` diagnostics over the wire.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use ddr4bench::config::{DesignConfig, SessionLimits, SpeedBin};
+use ddr4bench::hostctrl::{BenchServer, HostController, ServerConfig, ShutdownHandle};
+use ddr4bench::platform::Platform;
+
+fn design() -> DesignConfig {
+    DesignConfig::with_channels(2, SpeedBin::Ddr4_1600)
+}
+
+/// Four deliberately different session scripts: plain read, seeded
+/// random write, a heterogeneous CHCFG/RUNMIX flow, and a mixed-op
+/// run with a RESET — so concurrent sessions exercise distinct state.
+static SCRIPTS: [&[&str]; 4] = [
+    &["INFO", "CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=512", "RUN 0", "STATS 0", "QUIT"],
+    &["CFG 0 OP=W ADDR=RND SEED=7 BURST=4 BATCH=256", "RUN 0", "STATS 0", "QUIT"],
+    &[
+        "CHCFG 0:SEQ,BURST=8,BATCH=128 1:BANK,SEED=3,BURST=1,BATCH=64",
+        "RUNMIX",
+        "STATS 0",
+        "STATS 1",
+        "QUIT",
+    ],
+    &["CFG 1 OP=M RDPCT=75 ADDR=SEQ BURST=16 BATCH=256", "RUN 1", "STATS 1", "RESET 1", "QUIT"],
+];
+
+/// The ground truth: the same script through a serial, inline,
+/// unlimited session.
+fn solo_replay(script: &[&str]) -> Vec<String> {
+    let mut h = HostController::new(Platform::new(design()));
+    script.iter().map(|line| h.handle_line(line)).collect()
+}
+
+fn run_client(addr: SocketAddr, script: &[&str]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let reader = BufReader::new(stream);
+    for line in script {
+        writeln!(writer, "{line}").unwrap();
+    }
+    reader.lines().map_while(Result::ok).collect()
+}
+
+fn start(cfg: ServerConfig) -> (SocketAddr, ShutdownHandle, std::thread::JoinHandle<()>) {
+    let server = BenchServer::bind(design(), cfg, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let shutdown = server.shutdown_handle().unwrap();
+    let serving = std::thread::spawn(move || server.run().unwrap());
+    (addr, shutdown, serving)
+}
+
+#[test]
+fn concurrent_sessions_match_solo_replay_bit_for_bit() {
+    let cfg = ServerConfig { workers: 2, max_sessions: 8, limits: SessionLimits::default() };
+    let (addr, shutdown, serving) = start(cfg);
+
+    // all four clients in flight at once, each with a distinct script
+    let clients: Vec<_> = SCRIPTS
+        .iter()
+        .map(|script| std::thread::spawn(move || run_client(addr, script)))
+        .collect();
+    for (i, client) in clients.into_iter().enumerate() {
+        let got = client.join().unwrap();
+        let want = solo_replay(SCRIPTS[i]);
+        assert_eq!(got, want, "client {i} transcript diverges from solo replay");
+    }
+
+    shutdown.signal();
+    serving.join().unwrap();
+}
+
+#[test]
+fn dropped_client_never_poisons_the_server_or_pool() {
+    let cfg = ServerConfig { workers: 1, max_sessions: 4, limits: SessionLimits::default() };
+    let (addr, shutdown, serving) = start(cfg);
+
+    // a client queues real work and vanishes without reading a byte
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        writeln!(w, "CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=4096").unwrap();
+        writeln!(w, "RUN 0").unwrap();
+    }
+
+    // the same (single-worker) pool still answers a fresh client with
+    // bit-identical results
+    let got = run_client(addr, SCRIPTS[0]);
+    assert_eq!(got, solo_replay(SCRIPTS[0]), "transcript diverges after a dropped client");
+
+    shutdown.signal();
+    serving.join().unwrap();
+}
+
+#[test]
+fn per_session_limits_surface_named_diagnostics_over_tcp() {
+    let limits = SessionLimits { max_channels: 1, max_batch: 128, max_queued_runs: 1 };
+    let cfg = ServerConfig { workers: 1, max_sessions: 2, limits };
+    let (addr, shutdown, serving) = start(cfg);
+
+    let got = run_client(
+        addr,
+        &[
+            "CFG 0 OP=R BATCH=512",
+            "CFG 1 OP=R BATCH=64",
+            "RUNALL",
+            "CFG 0 OP=R ADDR=SEQ BURST=4 BATCH=64",
+            "RUN 0",
+            "QUIT",
+        ],
+    );
+    assert_eq!(got.len(), 6, "{got:?}");
+    assert!(got[0].starts_with("ERR LIMIT_BATCH:"), "{}", got[0]);
+    assert!(got[1].starts_with("ERR LIMIT_CHANNELS:"), "{}", got[1]);
+    assert!(got[2].starts_with("ERR LIMIT_CHANNELS:"), "{}", got[2]);
+    assert!(got[3].starts_with("OK CFG CH=0"), "{}", got[3]);
+    assert!(got[4].starts_with("OK RUN CH=0 TXNS=64"), "{}", got[4]);
+    assert_eq!(got[5], "OK BYE");
+
+    shutdown.signal();
+    serving.join().unwrap();
+}

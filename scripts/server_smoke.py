@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Bench-server smoke test: concurrent scripted clients over real TCP.
+
+Connects ``--clients`` simultaneous sessions to a running ``ddr4bench
+serve`` instance (2+ channels), drives each through its own command
+script, and requires every reply line to be ``OK ...``. Exits 0 on
+success, 1 with a per-client failure report otherwise — the CI gate
+backgrounds the server, runs this, then checks a clean SIGTERM exit.
+
+Usage: server_smoke.py [--addr 127.0.0.1:5557] [--clients 4]
+"""
+
+import argparse
+import socket
+import sys
+import threading
+import time
+
+# Distinct per-client scripts (cycled when --clients > 4): plain read,
+# seeded random write, a heterogeneous CHCFG/RUNMIX flow, mixed-op +
+# RESET. Channel 1 appears, so the server needs --channels 2 or more.
+SCRIPTS = [
+    ["INFO", "CFG 0 OP=R ADDR=SEQ BURST=32 BATCH=512", "RUN 0", "STATS 0", "QUIT"],
+    ["CFG 0 OP=W ADDR=RND SEED=7 BURST=4 BATCH=256", "RUN 0", "STATS 0", "QUIT"],
+    [
+        "CHCFG 0:SEQ,BURST=8,BATCH=128 1:BANK,SEED=3,BURST=1,BATCH=64",
+        "RUNMIX",
+        "STATS 1",
+        "QUIT",
+    ],
+    ["CFG 1 OP=M RDPCT=75 ADDR=SEQ BURST=16 BATCH=256", "RUN 1", "STATS 1", "RESET 1", "QUIT"],
+]
+
+
+def wait_ready(host, port, timeout=30.0):
+    """Retry-connect until the server accepts (it may still be building)."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            with socket.create_connection((host, port), timeout=5) as probe:
+                probe.sendall(b"QUIT\n")
+                probe.makefile("r").readline()
+            return
+        except OSError as e:
+            if time.monotonic() >= deadline:
+                sys.exit(f"server at {host}:{port} never became ready: {e}")
+            time.sleep(0.2)
+
+
+def run_client(idx, host, port, script, failures):
+    try:
+        with socket.create_connection((host, port), timeout=60) as conn:
+            conn.settimeout(60)
+            reader = conn.makefile("r")
+            conn.sendall(("".join(line + "\n" for line in script)).encode())
+            for line_no, sent in enumerate(script):
+                reply = reader.readline().rstrip("\n")
+                if not reply.startswith("OK"):
+                    failures.append(f"client {idx}: `{sent}` -> `{reply}`")
+                    return
+    except OSError as e:
+        failures.append(f"client {idx}: connection error: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--addr", default="127.0.0.1:5557", help="server address (host:port)")
+    ap.add_argument("--clients", type=int, default=4, help="concurrent sessions to drive")
+    args = ap.parse_args()
+    host, port = args.addr.rsplit(":", 1)
+    port = int(port)
+
+    wait_ready(host, port)
+
+    failures = []
+    threads = [
+        threading.Thread(
+            target=run_client,
+            args=(i, host, port, SCRIPTS[i % len(SCRIPTS)], failures),
+        )
+        for i in range(args.clients)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    if failures:
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"server smoke: {args.clients} concurrent session(s), all replies OK")
+
+
+if __name__ == "__main__":
+    main()
