@@ -6,7 +6,8 @@
 //! - scheduler pick under deep queues, one series per policy — documents
 //!   that the `controller::sched` trait dispatch + wake fast path does
 //!   not slow the hot loop relative to the monolithic scheduler;
-//! - end-to-end simulated-cycles-per-second (the SPerf headline);
+//! - end-to-end simulated-cycles-per-second (the SPerf headline), plus a
+//!   telemetry-armed twin that prices the windowed sampler's probe;
 //! - PRBS payload expansion, Rust mirror vs the AOT XLA kernel;
 //! - batched verification, Rust mirror vs XLA.
 //!
@@ -150,6 +151,17 @@ fn main() {
     let dram_cycles = probe.counters.total_cycles * 4;
     bench.bench_throughput("platform/sim_dram_cycles", dram_cycles as f64, "cycle", || {
         std::hint::black_box(platform.run_batch(0, &cfg).unwrap().read_throughput_gbs());
+    });
+
+    // --- same workload with the telemetry sampler armed: the `_telem`
+    // series documents the observer's cost, and the plain series above is
+    // the telemetry-off hot path the acceptance gate watches — a
+    // regression there means the disabled probe is no longer free.
+    let mut telem_cfg = PatternConfig::seq_read_burst(32, 4096);
+    telem_cfg.telemetry = Some(1024);
+    let mut telem_platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    bench.bench_throughput("platform/sim_dram_cycles_telem", dram_cycles as f64, "cycle", || {
+        std::hint::black_box(telem_platform.run_batch(0, &telem_cfg).unwrap().counters.rd_bytes);
     });
 
     // --- engine duel: cycle-stepped oracle vs event-driven time-skip core

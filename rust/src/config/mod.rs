@@ -370,6 +370,12 @@ pub struct DesignConfig {
     /// `engine =` design key). Semantics are identical either way; the
     /// event engine only skips provably idle fabric cycles.
     pub engine: EngineKind,
+    /// Telemetry sampling window in AXI cycles (`telemetry =` design
+    /// key). `None` disables the windowed time-series sampler; `Some(w)`
+    /// makes every batch record one [`crate::obs::TelemetryWindow`] per
+    /// `w` fabric cycles. Observation-only: results are bit-identical
+    /// with telemetry on or off.
+    pub telemetry: Option<u64>,
 }
 
 impl DesignConfig {
@@ -389,6 +395,7 @@ impl DesignConfig {
             geometry: DramGeometry::profpga_board(),
             controller: ControllerParams::default(),
             engine: EngineKind::default(),
+            telemetry: None,
         }
     }
 
@@ -428,6 +435,9 @@ impl DesignConfig {
             if cap == 0 {
                 return Err(ConfigError::new("frfcfs-cap requires cap >= 1"));
             }
+        }
+        if self.telemetry == Some(0) {
+            return Err(ConfigError::new("telemetry window must be >= 1 AXI cycle"));
         }
         self.geometry.validate().map_err(ConfigError::new)?;
         Ok(())
@@ -757,6 +767,11 @@ pub struct PatternConfig {
     /// way the results are bit-identical; this only selects how the
     /// batch loop advances time.
     pub engine: Option<EngineKind>,
+    /// Telemetry window override for this batch (`TELEM=` token): record
+    /// one time-series sample every N AXI cycles. `None` falls back to
+    /// the design's [`DesignConfig::telemetry`]. Observation-only —
+    /// counters and results are bit-identical either way.
+    pub telemetry: Option<u64>,
 }
 
 impl PatternConfig {
@@ -777,6 +792,7 @@ impl PatternConfig {
             mapping: None,
             sched: None,
             engine: None,
+            telemetry: None,
         }
     }
 
@@ -873,6 +889,9 @@ impl PatternConfig {
         }
         if let Some(SchedKind::FrFcfsCap { cap: 0 }) = self.sched {
             return Err(ConfigError::new("SCHED=frfcfs-cap requires cap >= 1"));
+        }
+        if self.telemetry == Some(0) {
+            return Err(ConfigError::new("TELEM window must be >= 1 AXI cycle"));
         }
         self.addr.validate()?;
         if self.addr.uses_bank_conflict()
@@ -974,15 +993,17 @@ impl ChannelMix {
         (0..self.len()).map(|ch| self.channel_label(ch)).collect::<Vec<_>>().join("+")
     }
 
-    /// A copy with every per-channel `MAP=`/`SCHED=`/`ENGINE=` override
-    /// cleared — the sweep executive uses it so the mapping/sched/engine
-    /// axes stay authoritative over what actually runs.
+    /// A copy with every per-channel `MAP=`/`SCHED=`/`ENGINE=`/`TELEM=`
+    /// override cleared — the sweep executive uses it so the
+    /// mapping/sched/engine/telemetry axes stay authoritative over what
+    /// actually runs.
     pub fn without_overrides(&self) -> Self {
         let mut mix = self.clone();
         for cfg in &mut mix.channels {
             cfg.mapping = None;
             cfg.sched = None;
             cfg.engine = None;
+            cfg.telemetry = None;
         }
         mix
     }
@@ -1240,16 +1261,34 @@ mod tests {
         cfg.mapping = Some(MappingPolicy::xor_hash());
         cfg.sched = Some(SchedKind::Closed);
         cfg.engine = Some(EngineKind::Event);
+        cfg.telemetry = Some(4096);
         let mix = ChannelMix::uniform(&cfg, 2).unwrap();
         assert_eq!(mix.len(), 2);
         assert_eq!(mix.get(0), mix.get(1));
         let stripped = mix.without_overrides();
-        assert!(stripped
-            .iter()
-            .all(|c| c.mapping.is_none() && c.sched.is_none() && c.engine.is_none()));
+        assert!(stripped.iter().all(|c| c.mapping.is_none()
+            && c.sched.is_none()
+            && c.engine.is_none()
+            && c.telemetry.is_none()));
         // everything else is untouched
         assert!(stripped.iter().all(|c| c.burst.len == 4 && c.batch_len == 32));
         assert!(ChannelMix::uniform(&cfg, 0).is_err());
+    }
+
+    #[test]
+    fn telemetry_window_validates_and_defaults_off() {
+        assert_eq!(DesignConfig::default().telemetry, None);
+        assert_eq!(PatternConfig::default().telemetry, None);
+        let mut d = DesignConfig::default();
+        d.telemetry = Some(0);
+        assert!(d.validate().is_err(), "zero-cycle design window rejected");
+        d.telemetry = Some(1024);
+        assert!(d.validate().is_ok());
+        let mut p = PatternConfig::default();
+        p.telemetry = Some(0);
+        assert!(p.validate().is_err(), "zero-cycle TELEM= rejected");
+        p.telemetry = Some(1);
+        assert!(p.validate().is_ok());
     }
 
     #[test]

@@ -116,6 +116,7 @@ pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
 /// speed = 2400                 # or "ddr4-2400"
 /// axi_width = 256              # bits
 /// mapping = row_col_bank       # address-mapping policy (or e.g. RoBaBgCo)
+/// telemetry = 4096             # time-series window in AXI cycles (off if absent)
 /// [counters]  batch_cycles/latency/refresh/integrity = true|false
 /// [controller] read_queue_depth / write_queue_depth / lookahead /
 ///              write_drain_high / write_drain_low / outstanding_cap /
@@ -137,6 +138,11 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
     if let Some(v) = map.get("engine") {
         cfg.engine = EngineKind::parse(v)
             .ok_or_else(|| ConfigError::new(format!("engine: unknown engine `{v}`")))?;
+    }
+    if let Some(v) = map.get("telemetry") {
+        cfg.telemetry = Some(parse_u64_with_suffix(v).ok_or_else(|| {
+            ConfigError::new(format!("telemetry: expected window cycles, got `{v}`"))
+        })?);
     }
     cfg.axi_data_width_bits = get_u32(&map, "axi_width", cfg.axi_data_width_bits)?;
     cfg.counters = CounterSet {
@@ -187,6 +193,7 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
 /// DATA=PRBS|ZEROS|<hex>  VERIFY=0|1
 /// MAP=row_col_bank|row_bank_col|bank_row_col|xor_hash|<order, e.g. RoBaBgCo>
 /// SCHED=fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive
+/// ENGINE=cycle|event  TELEM=4096
 /// ```
 ///
 /// Pattern parameters are order-independent: `SEED`, `STRIDE` and `WSET`
@@ -321,6 +328,11 @@ pub fn parse_pattern_config(tokens: &[&str]) -> Result<PatternConfig, ConfigErro
             "ENGINE" => {
                 p.engine = Some(EngineKind::parse(val).ok_or_else(|| {
                     ConfigError::new(format!("ENGINE: unknown engine `{val}`"))
+                })?);
+            }
+            "TELEM" => {
+                p.telemetry = Some(parse_u64_with_suffix(val).ok_or_else(|| {
+                    ConfigError::new(format!("TELEM: expected window cycles, got `{val}`"))
                 })?);
             }
             _ => return Err(ConfigError::new(format!("unknown pattern key `{k}`"))),
@@ -479,6 +491,9 @@ pub fn format_pattern_config(p: &PatternConfig) -> String {
     }
     if let Some(e) = p.engine {
         s.push_str(&format!(" ENGINE={}", e.name()));
+    }
+    if let Some(w) = p.telemetry {
+        s.push_str(&format!(" TELEM={w}"));
     }
     s
 }
@@ -940,6 +955,41 @@ mod tests {
         let p = parse_pattern_config(&["ADDR=SEQ"]).unwrap();
         assert_eq!(p.engine, None);
         assert!(!format_pattern_config(&p).contains("ENGINE="));
+    }
+
+    #[test]
+    fn telem_token_parses_and_roundtrips() {
+        let p = parse_pattern_config(&["ADDR=SEQ", "TELEM=4096"]).unwrap();
+        assert_eq!(p.telemetry, Some(4096));
+        // size suffixes work like every other cycle/byte count token
+        let p = parse_pattern_config(&["TELEM=4k"]).unwrap();
+        assert_eq!(p.telemetry, Some(4096));
+        let err = parse_pattern_config(&["TELEM=abc"]).unwrap_err().to_string();
+        assert!(err.contains("TELEM: expected window cycles"), "{err}");
+        assert!(parse_pattern_config(&["TELEM=0"]).is_err(), "zero window rejected");
+        // TELEM= survives the format/parse round trip alongside the
+        // other overrides, and stays silent when unset
+        let toks = ["ADDR=SEQ", "ENGINE=event", "TELEM=2048"];
+        let p = parse_pattern_config(&toks).unwrap();
+        let text = format_pattern_config(&p);
+        assert!(text.contains("TELEM=2048"), "{text}");
+        let toks2: Vec<&str> = text.split_whitespace().collect();
+        assert_eq!(parse_pattern_config(&toks2).unwrap(), p, "`{text}`");
+        let p = parse_pattern_config(&["ADDR=SEQ"]).unwrap();
+        assert_eq!(p.telemetry, None);
+        assert!(!format_pattern_config(&p).contains("TELEM="));
+    }
+
+    #[test]
+    fn design_config_telemetry_key() {
+        let cfg = parse_design_config("telemetry = 8192\n").unwrap();
+        assert_eq!(cfg.telemetry, Some(8192));
+        let cfg = parse_design_config("telemetry = 16k\nspeed = 2400\n").unwrap();
+        assert_eq!(cfg.telemetry, Some(16384));
+        assert_eq!(parse_design_config("").unwrap().telemetry, None);
+        assert!(parse_design_config("telemetry = 0\n").is_err(), "zero window rejected");
+        let err = parse_design_config("telemetry = abc\n").unwrap_err().to_string();
+        assert!(err.contains("telemetry: expected window cycles"), "{err}");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use std::collections::VecDeque;
 
 use crate::config::ControllerParams;
 use crate::ddr4::{Cmd, Cycle, DdrDevice, DramGeometry, TimingParams};
+use crate::obs::{CmdTrace, TraceCmd, TraceEvent};
 
 /// Scheduler direction mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,6 +103,10 @@ pub struct MemController {
     /// fast-path; §Perf).
     idle_until: Cycle,
     stats: CtrlStats,
+    /// Bounded DRAM command ring, recording at every issue point when
+    /// enabled at runtime (`--cmd-trace` / host `TRACEDUMP`). `None`
+    /// (the default) keeps tracing entirely off the hot path.
+    cmd_trace: Option<CmdTrace>,
 }
 
 impl MemController {
@@ -125,6 +130,7 @@ impl MemController {
             write_gate_until: 0,
             mode_entered: 0,
             stats: CtrlStats::default(),
+            cmd_trace: None,
         }
     }
 
@@ -136,6 +142,56 @@ impl MemController {
     /// Controller statistics.
     pub fn stats(&self) -> &CtrlStats {
         &self.stats
+    }
+
+    /// Start recording DRAM commands into a bounded ring of `cap`
+    /// events (replacing any previous ring). Until this is called,
+    /// tracing costs one branch per issued command.
+    pub fn enable_cmd_trace(&mut self, cap: usize) {
+        self.cmd_trace = Some(CmdTrace::new(cap));
+    }
+
+    /// The command ring, when tracing is enabled. Reading is
+    /// non-destructive: the ring keeps filling across batches until
+    /// re-armed or the controller is rebuilt.
+    pub fn cmd_trace(&self) -> Option<&CmdTrace> {
+        self.cmd_trace.as_ref()
+    }
+
+    /// Record `cmd` into the trace ring (when armed), then issue it to
+    /// the device — the single funnel every controller issue point goes
+    /// through, so the trace can never miss a command class.
+    fn issue_cmd(&mut self, cmd: Cmd, now: Cycle) -> Cycle {
+        if self.cmd_trace.is_some() {
+            let ev = self.trace_event(cmd, now);
+            if let Some(trace) = self.cmd_trace.as_mut() {
+                trace.record(ev);
+            }
+        }
+        self.device.issue(cmd, now)
+    }
+
+    /// Build the trace record for `cmd`: ACT carries its target row;
+    /// CAS/PRE are annotated with the row currently open in their bank
+    /// (read *before* issue — PRE and auto-precharge close it); the
+    /// all-bank commands (PREA/REF) use 0 sentinels throughout.
+    fn trace_event(&self, cmd: Cmd, now: Cycle) -> TraceEvent {
+        let group_of = |bank: u32| bank / self.device.geometry().banks_per_group;
+        let (tcmd, bank_group, bank, row) = match cmd {
+            Cmd::Act { bank, row } => (TraceCmd::Act, group_of(bank), bank, row),
+            Cmd::Pre { bank } => {
+                (TraceCmd::Pre, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
+            }
+            Cmd::Rd { bank, .. } => {
+                (TraceCmd::Rd, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
+            }
+            Cmd::Wr { bank, .. } => {
+                (TraceCmd::Wr, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
+            }
+            Cmd::PreAll => (TraceCmd::PreAll, 0, 0, 0),
+            Cmd::Ref => (TraceCmd::Ref, 0, 0, 0),
+        };
+        TraceEvent { cycle: now, cmd: tcmd, bank_group, bank, row }
     }
 
     /// Microarchitectural parameters in force.
@@ -361,7 +417,7 @@ impl MemController {
         match bank {
             Some(bank) => {
                 let cmd = Cmd::Pre { bank };
-                self.device.issue(cmd, now);
+                self.issue_cmd(cmd, now);
                 (Some(cmd), now)
             }
             None => (None, wake),
@@ -374,7 +430,7 @@ impl MemController {
                 self.refresh_started = now;
                 if self.device.all_banks_closed() {
                     if self.device.can_issue(Cmd::Ref, now) {
-                        self.device.issue(Cmd::Ref, now);
+                        self.issue_cmd(Cmd::Ref, now);
                         // tRFC itself stalls the command slot; account it.
                         self.stats.refresh_stall_cycles += self.device.timing().trfc as u64;
                         return Some(Cmd::Ref);
@@ -382,7 +438,7 @@ impl MemController {
                     self.refresh = RefreshState::Draining;
                     None
                 } else if self.device.can_issue(Cmd::PreAll, now) {
-                    self.device.issue(Cmd::PreAll, now);
+                    self.issue_cmd(Cmd::PreAll, now);
                     self.refresh = RefreshState::Draining;
                     Some(Cmd::PreAll)
                 } else {
@@ -393,13 +449,13 @@ impl MemController {
             RefreshState::Draining => {
                 if !self.device.all_banks_closed() {
                     if self.device.can_issue(Cmd::PreAll, now) {
-                        self.device.issue(Cmd::PreAll, now);
+                        self.issue_cmd(Cmd::PreAll, now);
                         return Some(Cmd::PreAll);
                     }
                     return None;
                 }
                 if self.device.can_issue(Cmd::Ref, now) {
-                    self.device.issue(Cmd::Ref, now);
+                    self.issue_cmd(Cmd::Ref, now);
                     self.refresh = RefreshState::Idle;
                     self.stats.refresh_stall_cycles += self.device.timing().trfc as u64;
                     return Some(Cmd::Ref);
@@ -477,7 +533,7 @@ impl MemController {
         } else {
             Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: pick.auto_pre }
         };
-        self.device.issue(cmd, now);
+        self.issue_cmd(cmd, now);
         self.sched.on_cas_issued(is_write, pick.index);
         self.bank_last_use[req.addr.bank as usize] = now;
         let done_at = now + if is_write { cwl + burst } else { cl + burst } as Cycle;
@@ -512,7 +568,7 @@ impl MemController {
         match action {
             Some(sched::PrepAction::Act { bank, row }) => {
                 let cmd = Cmd::Act { bank, row };
-                self.device.issue(cmd, now);
+                self.issue_cmd(cmd, now);
                 // Page-miss pipeline flush: hold the next transaction of
                 // this direction until the miss's data phase completes
                 // (+tRP refill). Misses *within* an already-accepted
@@ -539,7 +595,7 @@ impl MemController {
             }
             Some(sched::PrepAction::Pre { bank }) => {
                 let cmd = Cmd::Pre { bank };
-                self.device.issue(cmd, now);
+                self.issue_cmd(cmd, now);
                 (Some(cmd), now)
             }
             None => (None, wake),
@@ -926,6 +982,53 @@ mod tests {
         for w in done.windows(2) {
             assert!(w[0].done_at <= w[1].done_at, "completion order");
         }
+    }
+
+    #[test]
+    fn cmd_trace_records_every_issue_point_with_rows() {
+        let mut c = ctrl();
+        c.enable_cmd_trace(1024);
+        c.try_push(rd_req(1, 0, 5, 0, 0)).unwrap();
+        c.try_push(wr_req(2, 1, 9, 0, 0)).unwrap();
+        let _ = run_until_completions(&mut c, 2, 2000);
+        // run across a refresh deadline so PREA/REF are traced too
+        let trefi = c.device().timing().trefi as Cycle;
+        for now in 2000..trefi + 2000 {
+            c.tick(now);
+        }
+        let trace = c.cmd_trace().expect("tracing armed");
+        let cmds: Vec<TraceCmd> = trace.events().map(|e| e.cmd).collect();
+        assert!(cmds.contains(&TraceCmd::Act));
+        assert!(cmds.contains(&TraceCmd::Rd));
+        assert!(cmds.contains(&TraceCmd::Wr));
+        assert!(cmds.contains(&TraceCmd::Ref), "{cmds:?}");
+        // the device's own command counts corroborate the ring
+        let s = c.device().stats();
+        let traced_acts = trace.events().filter(|e| e.cmd == TraceCmd::Act).count() as u64;
+        assert_eq!(traced_acts, s.acts, "one trace event per issued ACT");
+        // ACT and its CAS agree on the row; cycles are non-decreasing
+        let act = trace.events().find(|e| e.cmd == TraceCmd::Act && e.bank == 0).unwrap();
+        let rd = trace.events().find(|e| e.cmd == TraceCmd::Rd && e.bank == 0).unwrap();
+        assert_eq!((act.row, rd.row), (5, 5), "CAS annotated with the open row");
+        let cycles: Vec<u64> = trace.events().map(|e| e.cycle).collect();
+        assert!(cycles.windows(2).all(|w| w[0] <= w[1]));
+        // untraced controller records nothing
+        assert!(ctrl().cmd_trace().is_none());
+    }
+
+    #[test]
+    fn cmd_trace_does_not_perturb_the_run() {
+        let pushes = vec![
+            (0, rd_req(1, 0, 1, 0, 0)),
+            (0, wr_req(2, 3, 7, 8, 0)),
+            (10, rd_req(3, 1, 2, 0, 10)),
+        ];
+        let (mut plain, mut traced) = (ctrl(), ctrl());
+        traced.enable_cmd_trace(4);
+        let (done_a, _) = drive_cycle_stepped(&mut plain, pushes.clone(), 2000);
+        let (done_b, _) = drive_cycle_stepped(&mut traced, pushes, 2000);
+        assert_eq!(done_a, done_b, "tracing is observation-only");
+        assert_eq!(plain.device().stats(), traced.device().stats());
     }
 
     #[test]

@@ -151,6 +151,18 @@ impl DdrDevice {
         self.open_mask == 0
     }
 
+    /// Number of currently open banks (one popcount on the SoA open
+    /// column — the telemetry sampler's point snapshot).
+    pub fn open_banks(&self) -> u32 {
+        self.open_mask.count_ones()
+    }
+
+    /// The row currently open in `bank`, if any (the command tracer's
+    /// row annotation for CAS/PRE events).
+    pub fn open_row(&self, bank: u32) -> Option<u32> {
+        self.banks[bank as usize].open_row
+    }
+
     /// End of an in-progress tRFC window (0 when no refresh is active):
     /// every command class is gated until this cycle.
     pub fn busy_until(&self) -> Cycle {

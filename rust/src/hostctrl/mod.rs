@@ -44,6 +44,8 @@
 //! SCHEDS                       → OK SCHEDS FCFS FRFCFS ... (SCHED= names)
 //! RESET <ch>                   → OK RESET
 //! STREAM ON|OFF                → OK STREAM ON   (heartbeats on pooled runs)
+//! METRICS <ch>                 → OK METRICS CH=0 WINDOW=.. CLOSED=.. [LAST_START=..]
+//! TRACEDUMP <ch>               → TRACE <cycle> <ch> <cmd> ... lines, then OK TRACEDUMP
 //! HELP                         → OK <command list>
 //! QUIT                         → OK BYE (closes the session)
 //! ```
@@ -78,6 +80,17 @@
 //! of per-channel rates: the two coincide for homogeneous traffic but
 //! diverge once channels run heterogeneous workloads of different
 //! durations.
+//!
+//! The telemetry layer (see [`crate::obs`]) is reachable over the wire
+//! too: a `TELEM=<window>` token in `CFG`/`CHCFG` records windowed
+//! time-series counters during the batches that follow, `METRICS <ch>`
+//! answers the last run's snapshot (all raw integers — bytes, AXI
+//! cycles, counts — so the line is engine-identical), and with
+//! `STREAM ON` a pooled single-channel run enriches its heartbeats in
+//! place to `STREAM <label> MS=<n> bw=<gbs> qd=<n> p99=<ns>`.
+//! `TRACEDUMP <ch>` arms the channel's DRAM command trace on first call
+//! and dumps it non-destructively thereafter (`TRACE` data lines before
+//! the terminal `OK`, so clients read until the `OK`/`ERR` reply).
 //!
 //! Errors answer `ERR <reason>`; the session stays open. Sessions with
 //! resource limits name the violated limit in the diagnostic

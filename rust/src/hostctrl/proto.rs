@@ -23,6 +23,7 @@ use crate::config::{
     format_channel_spec, format_pattern_config, parse_channel_spec, parse_pattern_config,
     PatternConfig, SpeedBin,
 };
+use crate::obs::{TelemetrySnapshot, TraceEvent};
 use crate::stats::BatchStats;
 
 /// A parsed protocol command. Channel *syntax* is validated here; channel
@@ -54,6 +55,10 @@ pub enum Request {
     Reset { ch: usize },
     /// `STREAM ON|OFF` — opt into `STREAM` progress lines during runs.
     Stream { on: bool },
+    /// `METRICS <ch>` — telemetry snapshot of the channel's last run.
+    Metrics { ch: usize },
+    /// `TRACEDUMP <ch>` — arm (first call) / dump the DRAM command trace.
+    TraceDump { ch: usize },
     /// `HELP` — list the commands (derived from [`COMMANDS`]).
     Help,
     /// `QUIT` — end the session.
@@ -76,6 +81,8 @@ impl Request {
             Request::Scheds => "SCHEDS",
             Request::Reset { .. } => "RESET",
             Request::Stream { .. } => "STREAM",
+            Request::Metrics { .. } => "METRICS",
+            Request::TraceDump { .. } => "TRACEDUMP",
             Request::Help => "HELP",
             Request::Quit => "QUIT",
         }
@@ -144,6 +151,16 @@ pub enum Response {
     Reset,
     /// `OK STREAM ON|OFF`
     Stream { on: bool },
+    /// `OK METRICS CH=<ch> WINDOW=<w> CLOSED=<n> DROPPED=<n> DONE=<0|1>`
+    /// plus the last closed window's fields when one exists. All raw
+    /// integers (bytes, AXI cycles, counts) — unit conversion is a
+    /// client concern, and integers keep the line engine-identical.
+    Metrics { ch: usize, snapshot: TelemetrySnapshot },
+    /// `TRACE <cycle> <ch> <cmd> <bg> <bank> <row>` data lines followed
+    /// by the `OK TRACEDUMP CH=<ch> EVENTS=<n> DROPPED=<n>` terminal —
+    /// like heartbeats, data lines precede the reply so clients read
+    /// until the `OK`/`ERR` line.
+    TraceDump { ch: usize, events: Vec<TraceEvent>, dropped: u64 },
     /// `OK COMMANDS: ...` (derived from [`COMMANDS`]).
     Help,
     /// `OK BYE`
@@ -151,9 +168,24 @@ pub enum Response {
     /// `STREAM <label> MS=<n>` — mid-run progress heartbeat (only emitted
     /// while the session has `STREAM ON`; never `OK`/`ERR`-prefixed, so
     /// streaming clients skip `STREAM `-prefixed lines until the reply).
-    Progress { label: String, ms: u64 },
+    /// With live telemetry attached the line is enriched in place:
+    /// `STREAM <label> MS=<n> bw=<gbs> qd=<n> p99=<ns>` — appended after
+    /// the pinned prefix, so pre-telemetry clients keep parsing.
+    Progress { label: String, ms: u64, live: Option<ProgressLive> },
     /// `ERR <reason>`
     Err(String),
+}
+
+/// Live telemetry payload of an enriched `STREAM` heartbeat, derived
+/// from the running batch's most recently closed window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProgressLive {
+    /// Window bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// In-flight transactions at window close.
+    pub qd: u64,
+    /// Worse of the window's read/write p99 latencies, nanoseconds.
+    pub p99_ns: f64,
 }
 
 /// One row of the command reference: syntax, reply shape, error cases.
@@ -246,6 +278,21 @@ pub const COMMANDS: &[CommandInfo] = &[
         errors: "missing/unknown mode",
     },
     CommandInfo {
+        name: "METRICS",
+        syntax: "METRICS <ch>",
+        reply: "OK METRICS CH=<ch> WINDOW=<w> CLOSED=<n> DROPPED=<n> DONE=<0|1> [LAST_START=.. \
+                LAST_END=.. RD_BYTES=.. WR_BYTES=.. QD=.. OPEN_BANKS=.. ACTS=.. PRES=.. \
+                REF_STALL=.. RD_P99=.. WR_P99=..]",
+        errors: "bad/missing channel; no telemetry recorded (run with TELEM= or telemetry key)",
+    },
+    CommandInfo {
+        name: "TRACEDUMP",
+        syntax: "TRACEDUMP <ch>",
+        reply: "TRACE <cycle> <ch> <cmd> <bg> <bank> <row> lines, then OK TRACEDUMP CH=<ch> \
+                EVENTS=<n> DROPPED=<n>  (first call arms tracing and returns EVENTS=0)",
+        errors: "bad/missing channel",
+    },
+    CommandInfo {
         name: "HELP",
         syntax: "HELP",
         reply: "OK COMMANDS: <command list>",
@@ -304,6 +351,8 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "RUN" => Ok(Request::Run { ch: parse_channel_tok(toks.next())? }),
         "STATS" => Ok(Request::Stats { ch: parse_channel_tok(toks.next())? }),
         "RESET" => Ok(Request::Reset { ch: parse_channel_tok(toks.next())? }),
+        "METRICS" => Ok(Request::Metrics { ch: parse_channel_tok(toks.next())? }),
+        "TRACEDUMP" => Ok(Request::TraceDump { ch: parse_channel_tok(toks.next())? }),
         "STREAM" => match toks.next().map(str::to_ascii_uppercase).as_deref() {
             Some("ON") | Some("1") => Ok(Request::Stream { on: true }),
             Some("OFF") | Some("0") => Ok(Request::Stream { on: false }),
@@ -336,6 +385,8 @@ pub fn render_request(req: &Request) -> String {
         Request::Stats { ch } => format!("STATS {ch}"),
         Request::Reset { ch } => format!("RESET {ch}"),
         Request::Stream { on } => format!("STREAM {}", if *on { "ON" } else { "OFF" }),
+        Request::Metrics { ch } => format!("METRICS {ch}"),
+        Request::TraceDump { ch } => format!("TRACEDUMP {ch}"),
     }
 }
 
@@ -405,12 +456,64 @@ pub fn render_response(resp: &Response) -> String {
         Response::Scheds { names } => format!("OK SCHEDS {}", names.join(" ")),
         Response::Reset => "OK RESET".into(),
         Response::Stream { on } => format!("OK STREAM {}", if *on { "ON" } else { "OFF" }),
+        Response::Metrics { ch, snapshot } => {
+            let s = snapshot;
+            let mut line = format!(
+                "OK METRICS CH={ch} WINDOW={} CLOSED={} DROPPED={} DONE={}",
+                s.window,
+                s.closed,
+                s.dropped,
+                u8::from(s.done)
+            );
+            if let Some(w) = &s.last {
+                line.push_str(&format!(
+                    " LAST_START={} LAST_END={} RD_BYTES={} WR_BYTES={} QD={} OPEN_BANKS={} \
+                     ACTS={} PRES={} REF_STALL={} RD_P99={} WR_P99={}",
+                    w.start,
+                    w.end,
+                    w.rd_bytes,
+                    w.wr_bytes,
+                    w.queue_depth,
+                    w.open_banks,
+                    w.acts,
+                    w.pres,
+                    w.refresh_stall,
+                    w.rd_p99,
+                    w.wr_p99
+                ));
+            }
+            line
+        }
+        Response::TraceDump { ch, events, dropped } => {
+            let mut out = String::new();
+            for ev in events {
+                out.push_str(&format!(
+                    "TRACE {} {ch} {} {} {} {}\n",
+                    ev.cycle,
+                    ev.cmd.name(),
+                    ev.bank_group,
+                    ev.bank,
+                    ev.row
+                ));
+            }
+            out.push_str(&format!(
+                "OK TRACEDUMP CH={ch} EVENTS={} DROPPED={dropped}",
+                events.len()
+            ));
+            out
+        }
         Response::Help => {
             let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
             format!("OK COMMANDS: {}", names.join(" "))
         }
         Response::Bye => "OK BYE".into(),
-        Response::Progress { label, ms } => format!("STREAM {label} MS={ms}"),
+        Response::Progress { label, ms, live } => {
+            let mut line = format!("STREAM {label} MS={ms}");
+            if let Some(l) = live {
+                line.push_str(&format!(" bw={:.2} qd={} p99={:.0}", l.bw_gbs, l.qd, l.p99_ns));
+            }
+            line
+        }
         Response::Err(reason) => format!("ERR {reason}"),
     }
 }
@@ -442,6 +545,8 @@ mod tests {
             Request::Scheds,
             Request::Reset { ch: 0 },
             Request::Stream { on: true },
+            Request::Metrics { ch: 0 },
+            Request::TraceDump { ch: 1 },
             Request::Help,
             Request::Quit,
         ]
@@ -515,8 +620,18 @@ mod tests {
         assert_eq!(render_response(&Response::Bye), "OK BYE");
         assert_eq!(render_response(&Response::Reset), "OK RESET");
         assert_eq!(
-            render_response(&Response::Progress { label: "RUN CH=0".into(), ms: 250 }),
+            render_response(&Response::Progress { label: "RUN CH=0".into(), ms: 250, live: None }),
             "STREAM RUN CH=0 MS=250"
+        );
+        // live telemetry appends after the pinned prefix, never reorders it
+        let live = ProgressLive { bw_gbs: 6.275, qd: 8, p99_ns: 211.4 };
+        assert_eq!(
+            render_response(&Response::Progress {
+                label: "RUN CH=0".into(),
+                ms: 250,
+                live: Some(live),
+            }),
+            "STREAM RUN CH=0 MS=250 bw=6.28 qd=8 p99=211"
         );
         let mix = Response::RunMix {
             channels: 2,
@@ -531,6 +646,57 @@ mod tests {
             render_response(&mix),
             "OK RUNMIX CHANNELS=2 OK=1 AGG_GBS=1.000 CH0_GBS=1.000 CH1=ERR[it_went_very_wrong]"
         );
+    }
+
+    #[test]
+    fn metrics_and_tracedump_render_the_documented_wire_shapes() {
+        use crate::obs::{TelemetryWindow, TraceCmd};
+        // empty snapshot: headline fields only
+        let empty = TelemetrySnapshot { window: 4096, ..TelemetrySnapshot::default() };
+        assert_eq!(
+            render_response(&Response::Metrics { ch: 1, snapshot: empty }),
+            "OK METRICS CH=1 WINDOW=4096 CLOSED=0 DROPPED=0 DONE=0"
+        );
+        // with a last window: every field lands, raw integers
+        let snap = TelemetrySnapshot {
+            window: 100,
+            closed: 3,
+            dropped: 1,
+            done: true,
+            last: Some(TelemetryWindow {
+                start: 200,
+                end: 300,
+                rd_bytes: 4096,
+                wr_bytes: 128,
+                queue_depth: 5,
+                open_banks: 2,
+                acts: 7,
+                pres: 6,
+                refresh_stall: 40,
+                rd_p50: 16,
+                rd_p99: 64,
+                wr_p50: 0,
+                wr_p99: 0,
+            }),
+        };
+        assert_eq!(
+            render_response(&Response::Metrics { ch: 0, snapshot: snap }),
+            "OK METRICS CH=0 WINDOW=100 CLOSED=3 DROPPED=1 DONE=1 LAST_START=200 LAST_END=300 \
+             RD_BYTES=4096 WR_BYTES=128 QD=5 OPEN_BANKS=2 ACTS=7 PRES=6 REF_STALL=40 RD_P99=64 \
+             WR_P99=0"
+        );
+        // trace dump: data lines precede the OK terminal
+        let events = vec![
+            TraceEvent { cycle: 40, cmd: TraceCmd::Act, bank_group: 1, bank: 5, row: 9 },
+            TraceEvent { cycle: 44, cmd: TraceCmd::Rd, bank_group: 1, bank: 5, row: 9 },
+        ];
+        assert_eq!(
+            render_response(&Response::TraceDump { ch: 2, events, dropped: 3 }),
+            "TRACE 40 2 ACT 1 5 9\nTRACE 44 2 RD 1 5 9\nOK TRACEDUMP CH=2 EVENTS=2 DROPPED=3"
+        );
+        // arming call: no events yet, still a well-formed OK line
+        let armed = render_response(&Response::TraceDump { ch: 0, events: vec![], dropped: 0 });
+        assert_eq!(armed, "OK TRACEDUMP CH=0 EVENTS=0 DROPPED=0");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::io::{self, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::{DesignConfig, SessionLimits};
 use crate::platform::{Platform, RunPool};
@@ -44,16 +45,26 @@ pub struct ServerConfig {
     pub max_sessions: usize,
     /// Resource limits handed to every session.
     pub limits: SessionLimits,
+    /// How often a session's pooled run re-polls the pool and (with
+    /// `STREAM ON`) emits a heartbeat line. Smoke tests lower this so a
+    /// short run still produces observable heartbeats.
+    pub stream_interval: Duration,
 }
 
 impl Default for ServerConfig {
     /// Workers default to the machine's parallelism minus one (the
-    /// accept loop and session threads need a core too), sessions to 8.
+    /// accept loop and session threads need a core too), sessions to 8,
+    /// the heartbeat/poll interval to 100 ms.
     fn default() -> Self {
         let workers = std::thread::available_parallelism()
             .map(|n| n.get().saturating_sub(1).max(1))
             .unwrap_or(2);
-        Self { workers, max_sessions: 8, limits: SessionLimits::default() }
+        Self {
+            workers,
+            max_sessions: 8,
+            limits: SessionLimits::default(),
+            stream_interval: Duration::from_millis(100),
+        }
     }
 }
 
@@ -174,12 +185,14 @@ impl BenchServer {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let design = self.design.clone();
         let limits = self.cfg.limits;
+        let interval = self.cfg.stream_interval;
         let pool = Arc::clone(&self.pool);
         let spawned = std::thread::Builder::new().name(format!("session-{id}")).spawn(move || {
             // the guard rides the session thread: any exit releases the
             // admission slot
             let _guard = guard;
             let mut session = Session::pooled(Platform::new(design), pool, limits, id);
+            session.set_stream_interval(interval);
             if let Err(e) = serve_session(&mut session, &stream) {
                 eprintln!("ddr4bench: session {id} ended with error: {e}");
             }
@@ -221,7 +234,7 @@ mod tests {
     #[test]
     fn server_admits_isolates_and_rejects_beyond_capacity() {
         let design = DesignConfig::with_channels(2, SpeedBin::Ddr4_1600);
-        let cfg = ServerConfig { workers: 1, max_sessions: 1, limits: SessionLimits::default() };
+        let cfg = ServerConfig { workers: 1, max_sessions: 1, ..ServerConfig::default() };
         let server = BenchServer::bind(design, cfg, "127.0.0.1:0").unwrap();
         let addr = server.local_addr().unwrap();
         let shutdown = server.shutdown_handle().unwrap();

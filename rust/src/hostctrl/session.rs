@@ -14,17 +14,25 @@
 //! `LIMIT_BATCH`, `LIMIT_QUEUE` — so scripted clients can distinguish a
 //! quota rejection from a malformed command. With `STREAM ON`, pooled
 //! runs emit `STREAM <label> MS=<elapsed>` heartbeat lines while a long
-//! batch executes, before the final `OK`/`ERR` reply.
+//! batch executes, before the final `OK`/`ERR` reply; when the pending
+//! pattern sets a telemetry window (`TELEM=`), single-channel heartbeats
+//! are enriched in place with the live window (`bw= qd= p99=`) read off
+//! the batch's [`SharedTelemetry`](crate::obs::SharedTelemetry) handle.
+//! `METRICS <ch>` answers the last run's telemetry snapshot and
+//! `TRACEDUMP <ch>` arms (first call) then dumps the channel's DRAM
+//! command trace.
 
 use std::io::{BufRead, Write};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{ChannelMix, PatternConfig, SessionLimits};
+use crate::obs::export::window_bw_gbs;
+use crate::obs::{snapshot_from_series, DEFAULT_TRACE_EVENTS};
 use crate::platform::{Platform, RunPool};
 use crate::stats::BatchStats;
 
-use super::proto::{parse_request, render_response, MixCell, Request, Response};
+use super::proto::{parse_request, render_response, MixCell, ProgressLive, Request, Response};
 
 /// How often a pooled run wakes up to emit a `STREAM` heartbeat (when
 /// the session has streaming on) and re-poll the pool.
@@ -276,6 +284,29 @@ impl Session {
                 self.stream = *on;
                 Ok(Response::Stream { on: *on })
             }
+            Request::Metrics { ch } => {
+                self.check_channel(*ch)?;
+                let series = self.last[*ch]
+                    .as_ref()
+                    .and_then(|s| s.telemetry.as_ref())
+                    .ok_or("no telemetry recorded (run with TELEM= or the telemetry key)")?;
+                Ok(Response::Metrics { ch: *ch, snapshot: snapshot_from_series(series) })
+            }
+            Request::TraceDump { ch } => {
+                self.check_channel(*ch)?;
+                // first call arms the ring (and answers EVENTS=0); later
+                // calls dump it non-destructively — enable_cmd_trace is
+                // idempotent, so re-arming never clears captured events
+                self.platform
+                    .enable_cmd_trace(*ch, DEFAULT_TRACE_EVENTS)
+                    .map_err(|e| e.to_string())?;
+                let trace = self.platform.cmd_trace(*ch).expect("trace armed above");
+                Ok(Response::TraceDump {
+                    ch: *ch,
+                    events: trace.events().copied().collect(),
+                    dropped: trace.dropped(),
+                })
+            }
             Request::Quit => Ok(Response::Bye),
         }
     }
@@ -334,6 +365,7 @@ impl Session {
             Some(pool) => {
                 let pending =
                     self.platform.start_batch_on(&pool, ch, cfg).map_err(|e| e.to_string())?;
+                let axi_ns = 1000.0 / self.platform.design().speed.axi_clock_mhz();
                 let started = Instant::now();
                 loop {
                     if let Some(result) = self.platform.poll_batch(&pending, self.stream_interval)
@@ -341,9 +373,20 @@ impl Session {
                         return result.map_err(|e| e.to_string());
                     }
                     if self.stream {
+                        // enrich the heartbeat with the most recently
+                        // closed telemetry window, when the run has one
+                        let live = pending.live_telemetry().and_then(|shared| {
+                            let snap = shared.lock().unwrap();
+                            snap.last.as_ref().map(|w| ProgressLive {
+                                bw_gbs: window_bw_gbs(w, axi_ns),
+                                qd: w.queue_depth,
+                                p99_ns: w.rd_p99.max(w.wr_p99) as f64 * axi_ns,
+                            })
+                        });
                         progress(Response::Progress {
                             label: label.to_string(),
                             ms: started.elapsed().as_millis() as u64,
+                            live,
                         });
                     }
                 }
@@ -373,6 +416,7 @@ impl Session {
                         progress(Response::Progress {
                             label: "RUNMIX".into(),
                             ms: started.elapsed().as_millis() as u64,
+                            live: None,
                         });
                     }
                 }
@@ -449,6 +493,12 @@ mod tests {
             "RUNALL",
             "RUNMIX",
             "STATS 1",
+            "CFG 0 OP=R ADDR=SEQ BURST=8 BATCH=128 TELEM=64",
+            "TRACEDUMP 0",
+            "RUN 0",
+            "METRICS 0",
+            "TRACEDUMP 0",
+            "METRICS 2",
             "RESET 0",
             "STATS 0",
             "RUN 9",
@@ -549,6 +599,58 @@ mod tests {
         assert!(!beats.is_empty(), "a 1ms cadence must tick during a 60k-txn batch");
         assert!(beats[0].starts_with("STREAM RUN CH=0 MS="), "{}", beats[0]);
         assert_eq!(s.handle_line("STREAM OFF"), "OK STREAM OFF");
+    }
+
+    #[test]
+    fn metrics_and_tracedump_flow_over_a_pooled_session() {
+        let mut s = pooled(2, 1, SessionLimits::UNLIMITED);
+        // before any run (or without a window) METRICS is a named error
+        assert!(s.handle_line("METRICS 0").starts_with("ERR no telemetry"));
+        s.handle_line("CFG 0 OP=R ADDR=SEQ BURST=8 BATCH=256 TELEM=64");
+        // first TRACEDUMP arms the ring and answers EVENTS=0
+        assert_eq!(s.handle_line("TRACEDUMP 0"), "OK TRACEDUMP CH=0 EVENTS=0 DROPPED=0");
+        assert!(s.handle_line("RUN 0").starts_with("OK RUN CH=0 TXNS=256"));
+        let r = s.handle_line("METRICS 0");
+        assert!(r.starts_with("OK METRICS CH=0 WINDOW=64"), "{r}");
+        assert!(r.contains("DONE=1") && r.contains("LAST_START="), "{r}");
+        // a run without a telemetry window leaves the channel series-less
+        s.handle_line("CFG 1 OP=R ADDR=SEQ BURST=8 BATCH=64");
+        s.handle_line("RUN 1");
+        assert!(s.handle_line("METRICS 1").starts_with("ERR no telemetry"));
+        // the armed trace captured the run; the dump is non-destructive
+        let dump = s.handle_line("TRACEDUMP 0");
+        assert!(dump.lines().next().unwrap().starts_with("TRACE "), "{dump}");
+        let last = dump.lines().last().unwrap();
+        assert!(last.starts_with("OK TRACEDUMP CH=0 EVENTS="), "{dump}");
+        assert!(!last.contains("EVENTS=0"), "{last}");
+        assert_eq!(s.handle_line("TRACEDUMP 0"), dump, "dump must be non-destructive");
+        assert!(s.handle_line("METRICS 9").starts_with("ERR channel 9 out of range"));
+        assert!(s.handle_line("TRACEDUMP 9").starts_with("ERR channel 9 out of range"));
+    }
+
+    #[test]
+    fn streaming_heartbeats_carry_live_telemetry_when_window_set() {
+        let mut s = pooled(1, 1, SessionLimits::UNLIMITED);
+        s.set_stream_interval(Duration::from_millis(1));
+        s.handle_line("CFG 0 OP=R ADDR=RND SEED=3 BURST=1 BATCH=60000 TELEM=64");
+        assert_eq!(s.handle_line("STREAM ON"), "OK STREAM ON");
+        let mut beats = Vec::new();
+        let resp = s.handle_with_progress(&parse_request("RUN 0").unwrap(), &mut |p| {
+            beats.push(render_response(&p));
+        });
+        assert!(render_response(&resp).starts_with("OK RUN CH=0"), "run succeeded");
+        assert!(!beats.is_empty(), "a 1ms cadence must tick during a 60k-txn batch");
+        for b in &beats {
+            assert!(b.starts_with("STREAM RUN CH=0 MS="), "pinned prefix survives: {b}");
+        }
+        assert!(
+            beats.iter().any(|b| b.contains(" bw=") && b.contains(" qd=") && b.contains(" p99=")),
+            "at least one heartbeat carries the live window: {beats:?}"
+        );
+        // the same series is then queryable as a METRICS snapshot
+        let r = s.handle_line("METRICS 0");
+        assert!(r.starts_with("OK METRICS CH=0 WINDOW=64"), "{r}");
+        assert!(r.contains("DONE=1"), "{r}");
     }
 
     #[test]

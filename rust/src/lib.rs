@@ -91,6 +91,7 @@ pub mod config;
 pub mod controller;
 pub mod ddr4;
 pub mod hostctrl;
+pub mod obs;
 pub mod platform;
 pub mod report;
 pub mod resource;

@@ -7,11 +7,14 @@
 //! ddr4bench run --addr bank --map xor_hash           # address-mapping engine
 //! ddr4bench run --addr seq --sched closed            # scheduler/page-policy engine
 //! ddr4bench run --addr chase --engine event          # event-driven time-skip core
+//! ddr4bench run --addr seq --telemetry 4096          # windowed time-series report
+//! ddr4bench run --addr bank --cmd-trace trace.csv    # DRAM command trace dump
 //! ddr4bench sweep --speeds 1600,2400 --channels 1,2 \
 //!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
 //! ddr4bench sweep --maps row_col_bank,xor_hash --knobs lookahead=1,lookahead=8
 //! ddr4bench sweep --scheds fcfs,frfcfs,frfcfs-cap,closed --patterns seq,bank
 //! ddr4bench sweep --mixes "0:SEQ,BURST=32+1:CHASE,WSET=1m"  # heterogeneous axis
+//! ddr4bench sweep --telemetry 4096 --out sweep-out  # + {stem}_timeline.json artifacts
 //! ddr4bench run --ch 0:SEQ,BURST=32 --ch 1:CHASE,WSET=1m   # per-channel mix
 //! ddr4bench interference --ch 0:SEQ --ch 1:CHASE --ch 2:BANK # solo-vs-co-run
 //! ddr4bench compare a/BENCH_sweep.json b/BENCH_sweep.json   # cross-sweep deltas
@@ -61,6 +64,9 @@ fn cli() -> Cli {
         .option("map", "address mapping: row_col_bank|row_bank_col|bank_row_col|xor_hash|RoBaBgCo")
         .option("sched", "scheduler/page policy: fcfs|frfcfs|frfcfs-cap[N]|closed|adaptive")
         .option("engine", "simulation engine: cycle|event (default cycle; event = time-skip core)")
+        .option("telemetry", "telemetry window in AXI cycles: run prints a timeline table, sweep \
+                              adds {stem}_timeline.json artifacts")
+        .option("cmd-trace", "run: record the DRAM command trace and write it to this CSV path")
         .multi("ch", "per-channel workload N:TOKENS,.. (repeat per channel; e.g. 0:SEQ,BURST=32)")
         .option("mix-file", "read the per-channel mix from a [channel.N]-sectioned config file")
         .option("burst", "burst length 1-128 (default 32)")
@@ -74,6 +80,7 @@ fn cli() -> Cli {
         .option("max-sessions", "serve: concurrent sessions (default 8); with --serial, total")
         .option("max-batch", "serve: per-session BATCH ceiling (default 1048576)")
         .option("max-queued", "serve: per-session queued-run ceiling (default 8)")
+        .option("stream-interval-ms", "serve: STREAM heartbeat/poll interval in ms (default 100)")
         .flag("serial", "serve: legacy one-client-at-a-time loop (inline execution)")
         .option("csv", "write table/figure CSV to this path")
         .option("file", "trace file for the trace command")
@@ -110,6 +117,7 @@ fn pattern_from_args(args: &ddr4bench::cli::Args) -> Result<PatternConfig> {
         ("phases", "PHASES"),
         ("map", "MAP"),
         ("sched", "SCHED"),
+        ("telemetry", "TELEM"),
     ] {
         if let Some(v) = args.get(opt) {
             toks.push(format!("{key}={v}"));
@@ -147,9 +155,9 @@ fn mix_from_args(args: &ddr4bench::cli::Args) -> Result<Option<ChannelMix>> {
 /// lands in a single [`PatternConfig`] (plus `channels`, which a mix
 /// fixes itself). Registering a new pattern option in [`cli`] means
 /// adding it here too, or it will be silently ignored next to `--ch`.
-const SCALAR_PATTERN_OPTS: [&str; 13] = [
-    "op", "addr", "seed", "stride", "wset", "phases", "map", "sched", "burst", "btype", "sig",
-    "batch", "channels",
+const SCALAR_PATTERN_OPTS: [&str; 14] = [
+    "op", "addr", "seed", "stride", "wset", "phases", "map", "sched", "telemetry", "burst",
+    "btype", "sig", "batch", "channels",
 ];
 
 /// A mix carries every pattern parameter per channel and fixes the
@@ -225,6 +233,14 @@ fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec>
     if let Some(v) = args.get("engine") {
         spec.engine = EngineKind::parse(v)
             .ok_or_else(|| anyhow!("--engine: unknown engine `{v}` (expected cycle|event)"))?;
+    }
+    if let Some(v) = args.get("telemetry") {
+        let w = ddr4bench::config::parse_u64_with_suffix(v)
+            .ok_or_else(|| anyhow!("--telemetry: expected window cycles, got `{v}`"))?;
+        if w == 0 {
+            return Err(anyhow!("--telemetry: window must be >= 1 AXI cycle"));
+        }
+        spec.telemetry = Some(w);
     }
     Ok(spec)
 }
@@ -304,9 +320,16 @@ fn main() -> Result<()> {
                 None => ChannelMix::uniform(&pattern_from_args(&args)?, design.channels)
                     .map_err(|e| anyhow!("{e}"))?,
             };
+            let axi_ns = 1000.0 / design.speed.axi_clock_mhz();
+            let trace_path = args.get("cmd-trace").map(std::path::PathBuf::from);
             let mut platform = Platform::new(design);
             if let Some(rt) = maybe_runtime(&args)? {
                 platform = platform.with_runtime(rt);
+            }
+            if trace_path.is_some() {
+                for ch in 0..platform.channels() {
+                    platform.enable_cmd_trace(ch, ddr4bench::obs::DEFAULT_TRACE_EVENTS)?;
+                }
             }
             let results = platform.run_batch_mix_results(&mix)?;
             let mut survivors = Vec::new();
@@ -342,11 +365,31 @@ fn main() -> Result<()> {
                     s.write_latency_pct_ns(95.0),
                     s.write_latency_pct_ns(99.0),
                 );
+                if let Some(series) = &s.telemetry {
+                    let title = format!("ch{ch} {label}");
+                    let t = ddr4bench::report::timeline_table(&title, series, axi_ns);
+                    println!("{}", t.ascii());
+                }
                 survivors.push(s.clone());
             }
             if survivors.len() > 1 {
                 let agg = Platform::aggregate(&survivors);
                 println!("aggregate: {:.2} GB/s", agg.total_throughput_gbs());
+            }
+            if let Some(path) = &trace_path {
+                let mut out = String::new();
+                for ch in 0..platform.channels() {
+                    if let Some(trace) = platform.cmd_trace(ch) {
+                        let csv = ddr4bench::obs::export::trace_csv(ch, trace);
+                        if out.is_empty() {
+                            out.push_str(&csv);
+                        } else if let Some((_, rest)) = csv.split_once('\n') {
+                            out.push_str(rest); // one shared header line
+                        }
+                    }
+                }
+                std::fs::write(path, &out)?;
+                println!("wrote DRAM command trace to {}", path.display());
             }
             if failed > 0 {
                 return Err(anyhow!(
@@ -542,10 +585,15 @@ fn main() -> Result<()> {
             println!("{}", sweep::summary_table(&outcomes).ascii());
             if let Some(dir) = args.get("out") {
                 let summary = sweep::write_artifacts(&outcomes, std::path::Path::new(dir))?;
+                let timelines = outcomes
+                    .iter()
+                    .filter(|o| o.per_channel.iter().any(|s| s.telemetry.is_some()))
+                    .count();
                 println!(
-                    "wrote {} JSON + {} CSV artifacts and {}",
+                    "wrote {} JSON + {} CSV artifacts ({} timelines) and {}",
                     outcomes.len(),
                     outcomes.len(),
+                    timelines,
                     summary.display()
                 );
             }
@@ -622,6 +670,12 @@ fn main() -> Result<()> {
                 cfg.limits.max_queued_runs = args
                     .parse_or("max-queued", cfg.limits.max_queued_runs)
                     .map_err(|e| anyhow!(e))?;
+                if let Some(v) = args.get("stream-interval-ms") {
+                    let ms: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow!("--stream-interval-ms: bad integer `{v}`"))?;
+                    cfg.stream_interval = std::time::Duration::from_millis(ms.max(1));
+                }
                 BenchServer::bind(design, cfg, addr)?.run()?;
             }
         }

@@ -1,0 +1,162 @@
+//! Bounded DRAM command tracing.
+//!
+//! A [`CmdTrace`] is a fixed-capacity ring of [`TraceEvent`]s recorded
+//! at the memory controller's command-issue points when tracing is
+//! enabled at runtime (`ddr4bench run --cmd-trace`, host `TRACEDUMP`).
+//! The ring allocates once up front and evicts oldest-first when full
+//! (evictions counted), so steady-state recording never allocates and a
+//! long trace-enabled run holds the *tail* of the command stream — the
+//! part a post-mortem wants.
+
+use std::collections::VecDeque;
+
+/// Default ring capacity, in events.
+pub const DEFAULT_TRACE_EVENTS: usize = 65536;
+
+/// The DDR4 command classes the controller issues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceCmd {
+    /// Activate (open) a row.
+    Act,
+    /// Precharge (close) one bank.
+    Pre,
+    /// Precharge all banks.
+    PreAll,
+    /// Column read.
+    Rd,
+    /// Column write.
+    Wr,
+    /// Refresh.
+    Ref,
+}
+
+impl TraceCmd {
+    /// Compact wire/CSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceCmd::Act => "ACT",
+            TraceCmd::Pre => "PRE",
+            TraceCmd::PreAll => "PREA",
+            TraceCmd::Rd => "RD",
+            TraceCmd::Wr => "WR",
+            TraceCmd::Ref => "REF",
+        }
+    }
+}
+
+/// One issued DRAM command. `row` is the open/target row where the
+/// command addresses one (ACT's target, RD/WR/PRE's open row) and 0 for
+/// the all-bank commands (PREA/REF), whose `bank_group`/`bank` are 0
+/// too.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// DRAM clock cycle the command issued at.
+    pub cycle: u64,
+    /// Command class.
+    pub cmd: TraceCmd,
+    /// Bank group of the addressed bank.
+    pub bank_group: u32,
+    /// Flat bank index within the device.
+    pub bank: u32,
+    /// Row (see type docs for per-command meaning).
+    pub row: u32,
+}
+
+/// The bounded command ring.
+#[derive(Debug, Clone)]
+pub struct CmdTrace {
+    events: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl CmdTrace {
+    /// Ring with capacity `cap` events (clamped to >= 1); allocates the
+    /// full capacity up front.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { events: VecDeque::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Record one event, evicting the oldest when full.
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Events currently held, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been recorded (or everything evicted).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64) -> TraceEvent {
+        TraceEvent { cycle, cmd: TraceCmd::Act, bank_group: 0, bank: 0, row: 7 }
+    }
+
+    #[test]
+    fn ring_keeps_the_tail() {
+        let mut t = CmdTrace::new(3);
+        for c in 0..5 {
+            t.record(ev(c));
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let cycles: Vec<u64> = t.events().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![2, 3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn capacity_never_exceeded_and_no_realloc() {
+        let mut t = CmdTrace::new(8);
+        let cap_before = t.events.capacity();
+        for c in 0..1000 {
+            t.record(ev(c));
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.events.capacity(), cap_before, "steady state must not reallocate");
+    }
+
+    #[test]
+    fn cmd_names_are_compact() {
+        let names: Vec<&str> = [
+            TraceCmd::Act,
+            TraceCmd::Pre,
+            TraceCmd::PreAll,
+            TraceCmd::Rd,
+            TraceCmd::Wr,
+            TraceCmd::Ref,
+        ]
+        .iter()
+        .map(|c| c.name())
+        .collect();
+        assert_eq!(names, vec!["ACT", "PRE", "PREA", "RD", "WR", "REF"]);
+    }
+}

@@ -1,0 +1,41 @@
+//! Runtime observability: windowed telemetry sampling, DRAM command
+//! tracing, and export helpers.
+//!
+//! The paper's platform reads its hardware counters only after a batch
+//! completes (§II-B/§II-C), so every reported figure is an end-of-run
+//! aggregate. This module adds the in-flight view the ROADMAP's
+//! fleet-facing north star needs, without perturbing the thing being
+//! measured:
+//!
+//! - [`sampler`] — a [`TelemetrySampler`] hooked into the canonical
+//!   batch loop (`platform::drive_batch`, both engines) that closes
+//!   fixed-width windows of per-window read/write bytes, queue depth,
+//!   bank open/close churn, refresh stalls and incremental latency
+//!   percentiles into a bounded ring. Sampling is observation-only:
+//!   telemetry on vs off leaves every counter bit-identical
+//!   (property-tested), and the cycle and event engines emit identical
+//!   series because windows are closed at loop-top before any state
+//!   mutation and event-mode leaps only skip provably idle cycles.
+//! - [`cmdtrace`] — a bounded, zero-alloc-in-steady-state ring of
+//!   `(cycle, cmd, bank_group, bank, row)` events recorded at the
+//!   memory controller's command-issue points behind a runtime enable
+//!   (`ddr4bench run --cmd-trace`, host `TRACEDUMP`).
+//! - [`export`] — the compact CSV trace format, the
+//!   `ddr4bench.timeline.v1` JSON artifact the sweep executive writes
+//!   next to each job, and the bandwidth conversion shared by the
+//!   report table and the enriched `STREAM` heartbeats.
+//!
+//! Everything a window records is an integer (bytes, cycles, counts);
+//! GB/s only appears at export/render time, so the series — and the
+//! timeline artifacts derived from it — are byte-identical across
+//! engines and run-to-run.
+
+pub mod cmdtrace;
+pub mod export;
+pub mod sampler;
+
+pub use cmdtrace::{CmdTrace, TraceCmd, TraceEvent, DEFAULT_TRACE_EVENTS};
+pub use sampler::{
+    snapshot_from_series, Probe, SharedTelemetry, TelemetrySampler, TelemetrySeries,
+    TelemetrySnapshot, TelemetryWindow, DEFAULT_RING_WINDOWS,
+};

@@ -1,0 +1,399 @@
+//! Windowed time-series telemetry sampling for the batch loop.
+//!
+//! A [`TelemetrySampler`] divides a batch's AXI-cycle timeline into
+//! fixed-width windows and, at each boundary, closes a
+//! [`TelemetryWindow`] holding the *delta* of the monotone counters
+//! (bytes moved, activates, precharges, refresh-stall cycles, latency
+//! histogram) since the previous boundary plus point-in-time snapshots
+//! (in-flight queue depth, open banks). Windows land in a bounded ring
+//! (oldest evicted first, eviction counted in `dropped`), so a
+//! telemetry-enabled run can never grow without bound.
+//!
+//! ## Engine-identity contract
+//!
+//! The sampler is driven from the top of the canonical batch loop,
+//! *before* any state mutation of that iteration, with `now` = AXI
+//! cycles since batch start. The event engine only leaps across cycles
+//! whose loop body is provably a no-op, so when a leap lands past one
+//! or more window boundaries the machine state is exactly what it was
+//! at every skipped boundary: [`TelemetrySampler::observe`] closes all
+//! overdue windows against the same probe — the first takes the whole
+//! delta since its baseline, the rest record zero deltas — which is
+//! precisely the series the cycle engine produces by crossing each
+//! boundary one at a time. The differential tests pin this.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::stats::LatencyHistogram;
+
+/// Default bounded-ring capacity, in windows.
+pub const DEFAULT_RING_WINDOWS: usize = 4096;
+
+/// A point-in-time reading of everything the sampler observes. Built by
+/// the batch loop only when a window boundary has actually been crossed
+/// (the [`TelemetrySampler::due`] fast path gates it), so the histogram
+/// clones stay off the hot path.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    /// Read payload bytes completed so far (monotone).
+    pub rd_bytes: u64,
+    /// Write payload bytes completed so far (monotone).
+    pub wr_bytes: u64,
+    /// Transactions currently in flight (point snapshot).
+    pub in_flight: u64,
+    /// Banks currently open across the device (point snapshot).
+    pub open_banks: u32,
+    /// ACT commands issued so far (monotone).
+    pub acts: u64,
+    /// PRE/PREA commands issued so far (monotone).
+    pub pres: u64,
+    /// DRAM cycles stalled by refresh so far (monotone).
+    pub refresh_stall: u64,
+    /// Cumulative read-latency histogram (AXI cycles).
+    pub rd_latency: LatencyHistogram,
+    /// Cumulative write-latency histogram (AXI cycles).
+    pub wr_latency: LatencyHistogram,
+}
+
+/// One closed sample window. Every field is an integer so series
+/// compare bit-exactly across engines and runs; bandwidth in GB/s is
+/// derived at export time ([`crate::obs::export::window_bw_gbs`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryWindow {
+    /// Window start, AXI cycles since batch start (inclusive).
+    pub start: u64,
+    /// Window end, AXI cycles since batch start (exclusive).
+    pub end: u64,
+    /// Read bytes completed within the window.
+    pub rd_bytes: u64,
+    /// Write bytes completed within the window.
+    pub wr_bytes: u64,
+    /// In-flight transactions at window close.
+    pub queue_depth: u64,
+    /// Open banks at window close.
+    pub open_banks: u32,
+    /// ACT commands issued within the window (bank-open churn).
+    pub acts: u64,
+    /// PRE/PREA commands issued within the window (bank-close churn).
+    pub pres: u64,
+    /// DRAM cycles stalled by refresh within the window.
+    pub refresh_stall: u64,
+    /// p50 of read latencies recorded within the window (AXI cycles,
+    /// log2-bucket bound; 0 when no reads completed in the window).
+    pub rd_p50: u64,
+    /// p99 of read latencies recorded within the window (AXI cycles).
+    pub rd_p99: u64,
+    /// p50 of write latencies recorded within the window (AXI cycles).
+    pub wr_p50: u64,
+    /// p99 of write latencies recorded within the window (AXI cycles).
+    pub wr_p99: u64,
+}
+
+/// A batch's complete telemetry series: the ring contents at batch end.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetrySeries {
+    /// Window width in AXI cycles.
+    pub window: u64,
+    /// Closed windows, oldest first (ring-bounded).
+    pub windows: Vec<TelemetryWindow>,
+    /// Windows evicted from the ring because it was full.
+    pub dropped: u64,
+}
+
+/// The live view a running batch publishes for `METRICS` / enriched
+/// `STREAM` heartbeats: ring totals plus the most recently closed
+/// window.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TelemetrySnapshot {
+    /// Window width in AXI cycles.
+    pub window: u64,
+    /// Windows closed so far (including any evicted from the ring).
+    pub closed: u64,
+    /// Windows evicted from the ring.
+    pub dropped: u64,
+    /// Whether the batch has finished.
+    pub done: bool,
+    /// Most recently closed window, if any.
+    pub last: Option<TelemetryWindow>,
+}
+
+/// Shared handle a pooled batch publishes its live snapshot through.
+pub type SharedTelemetry = Arc<Mutex<TelemetrySnapshot>>;
+
+/// Reconstruct the end-of-run snapshot from a finished series (what
+/// `METRICS` answers when no live handle exists — the inline execution
+/// path — kept identical to what the live publisher leaves behind).
+pub fn snapshot_from_series(series: &TelemetrySeries) -> TelemetrySnapshot {
+    TelemetrySnapshot {
+        window: series.window,
+        closed: series.windows.len() as u64 + series.dropped,
+        dropped: series.dropped,
+        done: true,
+        last: series.windows.last().cloned(),
+    }
+}
+
+/// The windowed sampler. Owned by the batch executive, driven by the
+/// canonical loop: [`begin`](Self::begin) once, [`due`](Self::due) /
+/// [`observe`](Self::observe) at loop top, [`finalize`](Self::finalize)
+/// after the loop, then [`take_series`](Self::take_series).
+#[derive(Debug)]
+pub struct TelemetrySampler {
+    window: u64,
+    cap: usize,
+    win_start: u64,
+    next_end: u64,
+    baseline: Option<Probe>,
+    windows: VecDeque<TelemetryWindow>,
+    closed: u64,
+    dropped: u64,
+    publisher: Option<SharedTelemetry>,
+}
+
+impl TelemetrySampler {
+    /// Sampler with `window` AXI cycles per sample and the default ring
+    /// capacity. `window` must be >= 1 (validated upstream by config).
+    pub fn new(window: u64) -> Self {
+        Self::with_capacity(window, DEFAULT_RING_WINDOWS)
+    }
+
+    /// Sampler with an explicit ring capacity (clamped to >= 1).
+    pub fn with_capacity(window: u64, cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            window: window.max(1),
+            cap,
+            win_start: 0,
+            next_end: window.max(1),
+            baseline: None,
+            windows: VecDeque::with_capacity(cap),
+            closed: 0,
+            dropped: 0,
+            publisher: None,
+        }
+    }
+
+    /// Attach a live publisher: every boundary crossing (and the final
+    /// close) updates the shared snapshot under its lock.
+    pub fn with_publisher(mut self, shared: SharedTelemetry) -> Self {
+        self.publisher = Some(shared);
+        self
+    }
+
+    /// Window width in AXI cycles.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Capture the time-zero baseline. Device and controller counters
+    /// persist across batches, so the first window's deltas must be
+    /// measured against the values at batch start, not zero.
+    pub fn begin(&mut self, probe: &Probe) {
+        self.baseline = Some(probe.clone());
+        self.win_start = 0;
+        self.next_end = self.window;
+        self.publish(false);
+    }
+
+    /// Cheap hot-path gate: has at least one window boundary passed?
+    #[inline]
+    pub fn due(&self, now: u64) -> bool {
+        now >= self.next_end
+    }
+
+    /// Close every window whose end is `<= now` against `probe`. Called
+    /// from the top of the batch loop once [`due`](Self::due) fires; the
+    /// event engine may close several windows at once here (see the
+    /// module docs for why that yields the cycle engine's exact series).
+    pub fn observe(&mut self, now: u64, probe: &Probe) {
+        let mut any = false;
+        while self.next_end <= now {
+            let end = self.next_end;
+            self.close_window(end, probe);
+            self.win_start = end;
+            self.next_end = end + self.window;
+            any = true;
+        }
+        if any {
+            self.publish(false);
+        }
+    }
+
+    /// Close all remaining full windows plus the final partial window
+    /// `[win_start, now)` and publish the done snapshot. `now` is the
+    /// batch's final AXI cycle (`total_cycles`) — identical on both
+    /// engines, so so is the final partial window.
+    pub fn finalize(&mut self, now: u64, probe: &Probe) {
+        while self.next_end <= now {
+            let end = self.next_end;
+            self.close_window(end, probe);
+            self.win_start = end;
+            self.next_end = end + self.window;
+        }
+        if now > self.win_start {
+            self.close_window(now, probe);
+            self.win_start = now;
+        }
+        self.publish(true);
+    }
+
+    /// Drain the finished series out of the sampler.
+    pub fn take_series(&mut self) -> TelemetrySeries {
+        TelemetrySeries {
+            window: self.window,
+            windows: std::mem::take(&mut self.windows).into(),
+            dropped: self.dropped,
+        }
+    }
+
+    fn close_window(&mut self, end: u64, probe: &Probe) {
+        let base = self.baseline.as_ref().expect("TelemetrySampler::begin not called");
+        let w = TelemetryWindow {
+            start: self.win_start,
+            end,
+            rd_bytes: probe.rd_bytes - base.rd_bytes,
+            wr_bytes: probe.wr_bytes - base.wr_bytes,
+            queue_depth: probe.in_flight,
+            open_banks: probe.open_banks,
+            acts: probe.acts - base.acts,
+            pres: probe.pres - base.pres,
+            refresh_stall: probe.refresh_stall - base.refresh_stall,
+            rd_p50: probe.rd_latency.percentile_delta(&base.rd_latency, 50.0),
+            rd_p99: probe.rd_latency.percentile_delta(&base.rd_latency, 99.0),
+            wr_p50: probe.wr_latency.percentile_delta(&base.wr_latency, 50.0),
+            wr_p99: probe.wr_latency.percentile_delta(&base.wr_latency, 99.0),
+        };
+        if self.windows.len() == self.cap {
+            self.windows.pop_front();
+            self.dropped += 1;
+        }
+        self.windows.push_back(w);
+        self.closed += 1;
+        self.baseline = Some(probe.clone());
+    }
+
+    fn publish(&self, done: bool) {
+        if let Some(shared) = &self.publisher {
+            if let Ok(mut snap) = shared.lock() {
+                snap.window = self.window;
+                snap.closed = self.closed;
+                snap.dropped = self.dropped;
+                snap.done = done;
+                snap.last = self.windows.back().cloned();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(rd_bytes: u64, in_flight: u64) -> Probe {
+        Probe {
+            rd_bytes,
+            wr_bytes: 0,
+            in_flight,
+            open_banks: 1,
+            acts: 0,
+            pres: 0,
+            refresh_stall: 0,
+            rd_latency: LatencyHistogram::new(),
+            wr_latency: LatencyHistogram::new(),
+        }
+    }
+
+    #[test]
+    fn windows_record_deltas_and_point_snapshots() {
+        let mut s = TelemetrySampler::new(100);
+        s.begin(&probe(1000, 0)); // nonzero baseline: counters persist
+        assert!(!s.due(99));
+        assert!(s.due(100));
+        s.observe(100, &probe(1064, 3));
+        s.finalize(250, &probe(1096, 1));
+        let series = s.take_series();
+        assert_eq!(series.window, 100);
+        assert_eq!(series.windows.len(), 3);
+        let w0 = &series.windows[0];
+        assert_eq!((w0.start, w0.end, w0.rd_bytes, w0.queue_depth), (0, 100, 64, 3));
+        let w1 = &series.windows[1];
+        assert_eq!((w1.start, w1.end, w1.rd_bytes), (100, 200, 32));
+        // the trailing partial window is kept
+        let w2 = &series.windows[2];
+        assert_eq!((w2.start, w2.end, w2.rd_bytes), (200, 250, 0));
+        assert_eq!(series.dropped, 0);
+    }
+
+    #[test]
+    fn leap_landing_splits_overdue_windows_like_single_steps() {
+        // the event-engine case: nothing happened between cycle 10 and a
+        // leap landing at 350 — three windows close at once, the first
+        // takes the whole delta, the rest are zero
+        let mut leap = TelemetrySampler::new(100);
+        leap.begin(&probe(0, 0));
+        leap.observe(350, &probe(64, 2));
+        let mut step = TelemetrySampler::new(100);
+        step.begin(&probe(0, 0));
+        step.observe(100, &probe(64, 2)); // cycle engine crossed here with
+        step.observe(200, &probe(64, 2)); // ...state already frozen
+        step.observe(300, &probe(64, 2));
+        let (a, b) = (leap.take_series(), step.take_series());
+        assert_eq!(a, b);
+        assert_eq!(a.windows[0].rd_bytes, 64);
+        assert_eq!(a.windows[1].rd_bytes, 0);
+        assert_eq!(a.windows[2].rd_bytes, 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut s = TelemetrySampler::with_capacity(10, 3);
+        s.begin(&probe(0, 0));
+        s.observe(55, &probe(100, 0)); // closes windows ending 10..=50
+        let series = s.take_series();
+        assert_eq!(series.windows.len(), 3);
+        assert_eq!(series.dropped, 2);
+        assert_eq!(series.windows.last().unwrap().end, 50);
+    }
+
+    #[test]
+    fn percentiles_are_per_window_deltas() {
+        let mut s = TelemetrySampler::new(100);
+        let mut p0 = probe(0, 0);
+        for _ in 0..100 {
+            p0.rd_latency.record(8);
+        }
+        s.begin(&p0);
+        // second window adds only slow samples: its p50 must reflect
+        // them, not the cumulative (fast-dominated) distribution
+        let mut p1 = p0.clone();
+        for _ in 0..10 {
+            p1.rd_latency.record(1000);
+        }
+        s.observe(100, &p1);
+        let series = s.take_series();
+        assert!(series.windows[0].rd_p50 >= 1000 || series.windows[0].rd_p50 == 1024);
+    }
+
+    #[test]
+    fn publisher_sees_live_and_done_snapshots() {
+        let shared: SharedTelemetry = Arc::new(Mutex::new(TelemetrySnapshot::default()));
+        let mut s = TelemetrySampler::new(100).with_publisher(Arc::clone(&shared));
+        s.begin(&probe(0, 0));
+        assert!(!shared.lock().unwrap().done);
+        s.observe(120, &probe(64, 1));
+        {
+            let snap = shared.lock().unwrap();
+            assert_eq!(snap.closed, 1);
+            assert_eq!(snap.last.as_ref().unwrap().rd_bytes, 64);
+        }
+        s.finalize(150, &probe(64, 0));
+        let snap = shared.lock().unwrap();
+        assert!(snap.done);
+        assert_eq!(snap.closed, 2);
+        // and the inline reconstruction matches the live leftovers
+        drop(snap);
+        let series = s.take_series();
+        assert_eq!(snapshot_from_series(&series), shared.lock().unwrap().clone());
+    }
+}

@@ -44,6 +44,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{ChannelMix, DesignConfig, EngineKind, PatternConfig};
 use crate::controller::MemController;
 use crate::ddr4::{TimingParams, AXI_RATIO};
+use crate::obs::{CmdTrace, Probe, SharedTelemetry, TelemetrySampler};
 use crate::runtime::XlaRuntime;
 use crate::stats::{BatchCounters, BatchStats};
 use crate::trafficgen::{payload, DataStore, TrafficGen};
@@ -116,6 +117,30 @@ impl Platform {
     /// panic to its caller.
     pub fn inject_channel_panic(&mut self, ch: usize) {
         self.channels[ch].panic_inject = true;
+    }
+
+    /// Arm DRAM command tracing on channel `ch`: from now on every
+    /// controller command issue lands in a bounded ring of `cap` events
+    /// (oldest evicted first, evictions counted). Arming is idempotent —
+    /// a second call keeps the existing ring, so a dump request cannot
+    /// clear what an earlier one armed. The ring rides the channel state
+    /// (including through pool dispatch) but is lost when the channel is
+    /// reset after a failed batch.
+    pub fn enable_cmd_trace(&mut self, ch: usize, cap: usize) -> Result<()> {
+        if ch >= self.channels.len() {
+            bail!("channel {ch} out of range (design has {})", self.channels.len());
+        }
+        let controller = &mut self.channels[ch].controller;
+        if controller.cmd_trace().is_none() {
+            controller.enable_cmd_trace(cap);
+        }
+        Ok(())
+    }
+
+    /// Channel `ch`'s command-trace ring, when tracing is armed
+    /// (non-destructive read).
+    pub fn cmd_trace(&self, ch: usize) -> Option<&CmdTrace> {
+        self.channels.get(ch).and_then(|c| c.controller.cmd_trace())
     }
 
     /// Inject a fault into channel `ch`'s memory (test/debug hook; proves
@@ -196,11 +221,13 @@ impl Platform {
         }
 
         let engine = cfg.engine.unwrap_or(design.engine);
+        let mut sampler = cfg.telemetry.or(design.telemetry).map(TelemetrySampler::new);
         let state = &mut self.channels[ch];
         let refresh_before = state.controller.stats().refresh_stall_cycles;
         let dev_before = *state.controller.device().stats();
         let start_axi = state.axi_now;
-        drive_batch(engine, state, &mut tg, cfg, batch_limit(start_axi, cfg))?;
+        drive_batch(engine, state, &mut tg, cfg, batch_limit(start_axi, cfg), sampler.as_mut())?;
+        let telemetry = sampler.as_mut().map(|s| s.take_series());
         let mut counters = std::mem::take(&mut tg.counters);
         counters.refresh_stall_dram_cycles =
             state.controller.stats().refresh_stall_cycles - refresh_before;
@@ -217,7 +244,7 @@ impl Platform {
             counters.mismatches += self.verify_readback(&mut tg, cfg)?;
             self.channels[ch].store = tg.store.take();
         }
-        Ok(BatchStats { counters, speed: design.speed, energy })
+        Ok(BatchStats { counters, speed: design.speed, energy, telemetry })
     }
 
     /// Replay a memory-access trace on channel `ch` (one AXI transaction
@@ -348,7 +375,7 @@ impl Platform {
                 let design = design.clone();
                 joins.push(scope.spawn(move || {
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_batch_on_state(&design, state, &cfg)
+                        run_batch_on_state(&design, state, &cfg, None)
                     }))
                 }));
             }
@@ -374,14 +401,14 @@ impl Platform {
         let mut counters = BatchCounters::default();
         let mut energy = crate::ddr4::power::EnergyBreakdown::default();
         for s in stats {
-            counters.merge(&s.counters);
+            counters.merge_concurrent(&s.counters);
             energy.activate_nj += s.energy.activate_nj;
             energy.read_nj += s.energy.read_nj;
             energy.write_nj += s.energy.write_nj;
             energy.refresh_nj += s.energy.refresh_nj;
             energy.background_nj += s.energy.background_nj;
         }
-        BatchStats { counters, speed: stats[0].speed, energy }
+        BatchStats { counters, speed: stats[0].speed, energy, telemetry: None }
     }
 
     /// The one documented aggregate-throughput accessor, reconciling the
@@ -439,14 +466,16 @@ impl Platform {
         let fresh = self.fresh_state();
         let state = std::mem::replace(&mut self.channels[ch], fresh);
         let (tx, rx) = mpsc::channel();
+        let live = cfg.telemetry.or(self.design.telemetry).map(|_| SharedTelemetry::default());
         pool.submit(pool::Job {
             ch,
             design: self.design.clone(),
             state,
             cfg: cfg.clone(),
+            live: live.clone(),
             reply: tx,
         });
-        Ok(PendingBatch { ch, rx })
+        Ok(PendingBatch { ch, rx, live })
     }
 
     /// Wait up to `timeout` for a dispatched batch. `None` means still
@@ -641,12 +670,21 @@ impl Platform {
 pub struct PendingBatch {
     ch: usize,
     rx: mpsc::Receiver<pool::JobOutcome>,
+    live: Option<SharedTelemetry>,
 }
 
 impl PendingBatch {
     /// The channel the batch was dispatched for.
     pub fn channel(&self) -> usize {
         self.ch
+    }
+
+    /// Live telemetry handle of the running batch — present when the
+    /// effective telemetry window is set; the pool worker publishes its
+    /// current snapshot through it mid-run (the `METRICS`/heartbeat
+    /// data source).
+    pub fn live_telemetry(&self) -> Option<&SharedTelemetry> {
+        self.live.as_ref()
     }
 }
 
@@ -717,14 +755,27 @@ fn batch_limit(start_axi: u64, cfg: &PatternConfig) -> u64 {
 /// The leap is clamped to `limit` so a wedged batch still trips the
 /// deadlock guard at exactly the same fabric-cycle reading — and with
 /// the same diagnostic — as the cycle engine.
+///
+/// When a [`TelemetrySampler`] is attached it is driven from the loop
+/// top, *before* any of that iteration's state mutations — the one
+/// point both engines pass through with identical machine state, which
+/// is what makes the sampled series engine-identical (a leap landing
+/// closes every overdue window against the same frozen state the cycle
+/// engine saw at each boundary; see `obs::sampler`). Telemetry is
+/// observation-only: with `sampler == None` this is byte-for-byte the
+/// historical loop.
 fn drive_batch(
     engine: EngineKind,
     state: &mut ChannelState,
     tg: &mut TrafficGen,
     cfg: &PatternConfig,
     limit: u64,
+    mut sampler: Option<&mut TelemetrySampler>,
 ) -> Result<()> {
     let start_axi = state.axi_now;
+    if let Some(s) = sampler.as_deref_mut() {
+        s.begin(&probe_channel(state, tg));
+    }
     let mut comps = Vec::with_capacity(16);
     while !tg.is_done() {
         if state.axi_now >= limit {
@@ -736,6 +787,11 @@ fn drive_batch(
             );
         }
         let now = state.axi_now - start_axi; // TG counts batch-relative
+        if let Some(s) = sampler.as_deref_mut() {
+            if s.due(now) {
+                s.observe(now, &probe_channel(state, tg));
+            }
+        }
         comps.clear();
         state.controller.pop_completions(state.axi_now * AXI_RATIO, &mut comps);
         tg.on_completions(&comps, now);
@@ -764,15 +820,45 @@ fn drive_batch(
             }
         }
     }
+    if let Some(s) = sampler.as_deref_mut() {
+        // Close the trailing partial window at the batch clock reading —
+        // `total_cycles` is a counter, so it is engine-identical.
+        s.finalize(tg.counters.total_cycles, &probe_channel(state, tg));
+    }
     Ok(())
 }
 
+/// Point-in-time probe of everything the telemetry sampler observes:
+/// batch byte/latency counters, device command stats, refresh stalls,
+/// and the queue/bank occupancy snapshots. Only built when a window
+/// boundary has actually been crossed (the histogram clones stay off
+/// the telemetry-off hot path entirely).
+fn probe_channel(state: &ChannelState, tg: &TrafficGen) -> Probe {
+    let dev = state.controller.device().stats();
+    Probe {
+        rd_bytes: tg.counters.rd_bytes,
+        wr_bytes: tg.counters.wr_bytes,
+        in_flight: tg.in_flight() as u64,
+        open_banks: state.controller.device().open_banks(),
+        acts: dev.acts,
+        pres: dev.pres,
+        refresh_stall: state.controller.stats().refresh_stall_cycles,
+        rd_latency: tg.counters.rd_latency.clone(),
+        wr_latency: tg.counters.wr_latency.clone(),
+    }
+}
+
 /// Free-function batch runner over a borrowed channel state (thread body
-/// of [`Platform::run_batch_mix`]; Rust-mirror data path only).
+/// of [`Platform::run_batch_mix`] and the pool worker; Rust-mirror data
+/// path only). `live` is the optional shared handle a pooled batch
+/// publishes its telemetry snapshot through mid-run (for `METRICS` and
+/// enriched `STREAM` heartbeats); it does nothing unless the effective
+/// telemetry window is set.
 fn run_batch_on_state(
     design: &DesignConfig,
     state: &mut ChannelState,
     cfg: &PatternConfig,
+    live: Option<SharedTelemetry>,
 ) -> Result<BatchStats> {
     if state.panic_inject {
         state.panic_inject = false;
@@ -795,10 +881,18 @@ fn run_batch_on_state(
         tg.store = state.store.take().or_else(|| Some(DataStore::new()));
     }
     let engine = cfg.engine.unwrap_or(design.engine);
+    let mut sampler = cfg.telemetry.or(design.telemetry).map(|w| {
+        let s = TelemetrySampler::new(w);
+        match live {
+            Some(shared) => s.with_publisher(shared),
+            None => s,
+        }
+    });
     let refresh_before = state.controller.stats().refresh_stall_cycles;
     let dev_before = *state.controller.device().stats();
     let start_axi = state.axi_now;
-    drive_batch(engine, state, &mut tg, cfg, batch_limit(start_axi, cfg))?;
+    drive_batch(engine, state, &mut tg, cfg, batch_limit(start_axi, cfg), sampler.as_mut())?;
+    let telemetry = sampler.as_mut().map(|s| s.take_series());
     let mut counters = std::mem::take(&mut tg.counters);
     counters.refresh_stall_dram_cycles =
         state.controller.stats().refresh_stall_cycles - refresh_before;
@@ -813,7 +907,7 @@ fn run_batch_on_state(
         counters.mismatches += tg.verify_readback_rust();
         state.store = tg.store.take();
     }
-    Ok(BatchStats { counters, speed: design.speed, energy })
+    Ok(BatchStats { counters, speed: design.speed, energy, telemetry })
 }
 
 /// Solo-vs-co-run interference measurements for K workloads (the
@@ -1257,6 +1351,84 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_series_is_engine_identical_and_observation_only() {
+        let mut cfg = PatternConfig::seq_read_burst(8, 600);
+        cfg.telemetry = Some(256);
+        let mut plain_cfg = cfg.clone();
+        plain_cfg.telemetry = None;
+        let mut cycle = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let a = cycle.run_batch(0, &cfg).unwrap();
+        let mut event_design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        event_design.engine = EngineKind::Event;
+        let mut event = Platform::new(event_design);
+        let b = event.run_batch(0, &cfg).unwrap();
+        // observation only: counters with telemetry on equal telemetry off
+        let mut plain = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let p = plain.run_batch(0, &plain_cfg).unwrap();
+        assert_eq!(a.counters, p.counters, "telemetry must not perturb the run");
+        assert!(p.telemetry.is_none(), "no window configured, no series");
+        // identical series across engines, field for field
+        let sa = a.telemetry.as_ref().expect("TELEM= produces a series");
+        let sb = b.telemetry.as_ref().unwrap();
+        assert_eq!(sa, sb, "engines must produce identical telemetry series");
+        assert!(!sa.windows.is_empty());
+        // contiguous, monotone window stamps starting at batch time zero
+        assert_eq!(sa.windows[0].start, 0);
+        for w in sa.windows.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "windows tile the timeline");
+        }
+        // the deltas sum back to the batch totals
+        let rd: u64 = sa.windows.iter().map(|w| w.rd_bytes).sum();
+        assert_eq!(rd, a.counters.rd_bytes, "window deltas conserve bytes");
+        let stall: u64 = sa.windows.iter().map(|w| w.refresh_stall).sum();
+        assert_eq!(stall, a.counters.refresh_stall_dram_cycles, "stall deltas conserve");
+        // the design-level key enables the same sampler
+        let mut d = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+        d.telemetry = Some(256);
+        let mut p2 = Platform::new(d);
+        let s2 = p2.run_batch(0, &plain_cfg).unwrap();
+        assert_eq!(s2.telemetry.as_ref().unwrap(), sa, "design key matches TELEM= override");
+    }
+
+    #[test]
+    fn platform_cmd_trace_arms_idempotently() {
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        assert!(p.cmd_trace(0).is_none(), "tracing starts disarmed");
+        p.enable_cmd_trace(0, 1024).unwrap();
+        p.run_batch(0, &PatternConfig::seq_read_burst(4, 100)).unwrap();
+        let n = p.cmd_trace(0).unwrap().len();
+        assert!(n > 0, "armed ring captured commands");
+        // re-arming keeps the existing ring instead of clearing it
+        p.enable_cmd_trace(0, 16).unwrap();
+        assert_eq!(p.cmd_trace(0).unwrap().len(), n);
+        assert!(p.enable_cmd_trace(9, 16).is_err(), "range-checked");
+    }
+
+    #[test]
+    fn pooled_live_telemetry_publishes_and_matches_series() {
+        let pool = RunPool::new(1);
+        let mut p = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let mut cfg = PatternConfig::seq_read_burst(8, 400);
+        cfg.telemetry = Some(128);
+        let pending = p.start_batch_on(&pool, 0, &cfg).unwrap();
+        let live = std::sync::Arc::clone(pending.live_telemetry().expect("live handle"));
+        let stats = p.finish_batch(pending).unwrap();
+        let series = stats.telemetry.as_ref().unwrap();
+        let snap = live.lock().unwrap().clone();
+        assert!(snap.done, "final publish marks the run done");
+        assert_eq!(snap, crate::obs::snapshot_from_series(series));
+        // pooled series matches the inline executive's bit for bit
+        let mut inline = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+        let expect = inline.run_batch(0, &cfg).unwrap();
+        assert_eq!(stats.telemetry, expect.telemetry);
+        // no telemetry window -> no live handle
+        let plain = PatternConfig::seq_read_burst(8, 50);
+        let pending = p.start_batch_on(&pool, 0, &plain).unwrap();
+        assert!(pending.live_telemetry().is_none());
+        p.finish_batch(pending).unwrap();
+    }
+
+    #[test]
     fn deadlock_guard_fires_identically_across_engines() {
         // Regression (event-core introduction): a time-skip past `limit`
         // must not overshoot silently — the leap is clamped so both
@@ -1278,7 +1450,7 @@ mod tests {
                 design.controller.addr_cmd_interval_axi,
                 design.controller.serial_frontend,
             );
-            let err = drive_batch(engine, state, &mut tg, &cfg, 10).unwrap_err();
+            let err = drive_batch(engine, state, &mut tg, &cfg, 10, None).unwrap_err();
             assert_eq!(state.axi_now, 10, "{engine}: must stop at exactly the limit");
             errs.push(err.to_string());
         }

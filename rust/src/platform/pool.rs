@@ -31,6 +31,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::config::{DesignConfig, PatternConfig};
+use crate::obs::SharedTelemetry;
 use crate::stats::BatchStats;
 
 use super::{panic_msg, run_batch_on_state, ChannelState};
@@ -42,6 +43,9 @@ pub(super) struct Job {
     pub design: DesignConfig,
     pub state: ChannelState,
     pub cfg: PatternConfig,
+    /// Shared handle the batch publishes live telemetry snapshots
+    /// through (present when the effective telemetry window is set).
+    pub live: Option<SharedTelemetry>,
     pub reply: Sender<JobOutcome>,
 }
 
@@ -152,9 +156,9 @@ fn take_job(shared: &PoolShared, idx: usize) -> Option<Job> {
 }
 
 fn execute(job: Job) {
-    let Job { ch, design, mut state, cfg, reply } = job;
+    let Job { ch, design, mut state, cfg, live, reply } = job;
     let caught =
-        catch_unwind(AssertUnwindSafe(|| run_batch_on_state(&design, &mut state, &cfg)));
+        catch_unwind(AssertUnwindSafe(|| run_batch_on_state(&design, &mut state, &cfg, live)));
     let outcome = match caught {
         Ok(Ok(stats)) => JobOutcome { state: Some(state), result: Ok(stats) },
         // failed batch: abandon the torn state (the platform keeps its

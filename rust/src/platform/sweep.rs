@@ -32,10 +32,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
     format_channel_mix, parse_channel_mix, parse_controller_tokens, parse_kv_text,
-    parse_pattern_config, ChannelMix, ControllerParams, DesignConfig, EngineKind, PatternConfig,
-    SchedKind, SpeedBin,
+    parse_pattern_config, parse_u64_with_suffix, ChannelMix, ControllerParams, DesignConfig,
+    EngineKind, PatternConfig, SchedKind, SpeedBin,
 };
 use crate::ddr4::MappingPolicy;
+use crate::obs::TelemetrySeries;
 use crate::platform::Platform;
 use crate::report::Table;
 use crate::stats::BatchStats;
@@ -74,6 +75,13 @@ pub struct SweepSpec {
     /// JSON/CSV labels — a cycle sweep and an event sweep of the same
     /// spec produce identically-named, `compare`-able artifacts.
     pub engine: EngineKind,
+    /// Telemetry sampling window (AXI cycles) every job records under
+    /// (`telemetry =` spec key / CLI `--telemetry`). Like `engine`, not
+    /// a cartesian axis: telemetry is observation-only by contract, so
+    /// sweeping it would multiply the grid without changing any
+    /// measurement. When set, each job additionally emits a
+    /// `{stem}_timeline.json` per-channel time-series artifact.
+    pub telemetry: Option<u64>,
 }
 
 /// Named pattern preset, by the names the CLI accepts
@@ -118,6 +126,7 @@ impl SweepSpec {
                 .collect(),
             mixes: Vec::new(),
             engine: EngineKind::default(),
+            telemetry: None,
         }
     }
 
@@ -152,14 +161,15 @@ impl SweepSpec {
                 && key != "mappings"
                 && key != "scheds"
                 && key != "engine"
+                && key != "telemetry"
                 && !key.starts_with("patterns.")
                 && !key.starts_with("knobs.")
                 && !key.starts_with("mixes.")
             {
                 bail!(
                     "unknown sweep spec key `{key}` (expected `speeds`, `channels`, \
-                     `mappings`, `scheds`, `engine`, or `[patterns]`/`[knobs]`/`[mixes]` \
-                     entries)"
+                     `mappings`, `scheds`, `engine`, `telemetry`, or \
+                     `[patterns]`/`[knobs]`/`[mixes]` entries)"
                 );
             }
         }
@@ -179,6 +189,14 @@ impl SweepSpec {
         if let Some(v) = map.get("engine") {
             spec.engine = EngineKind::parse(v)
                 .ok_or_else(|| anyhow!("engine: unknown engine `{v}` (expected cycle|event)"))?;
+        }
+        if let Some(v) = map.get("telemetry") {
+            let w = parse_u64_with_suffix(v)
+                .ok_or_else(|| anyhow!("telemetry: expected window cycles, got `{v}`"))?;
+            if w == 0 {
+                bail!("telemetry: window must be >= 1 AXI cycle");
+            }
+            spec.telemetry = Some(w);
         }
         let knobs: Vec<(String, ControllerParams)> = map
             .iter()
@@ -216,6 +234,12 @@ impl SweepSpec {
                     bail!(
                         "pattern `{label}`: SCHED= is not allowed in sweep patterns — \
                          sweep the scheduler via the `scheds` axis instead"
+                    );
+                }
+                if cfg.telemetry.is_some() {
+                    bail!(
+                        "pattern `{label}`: TELEM= is not allowed in sweep patterns — \
+                         set the sweep-level `telemetry` key instead"
                     );
                 }
                 Ok((label, cfg))
@@ -276,6 +300,7 @@ impl SweepSpec {
                                     params: *params,
                                     sched,
                                     engine: self.engine,
+                                    telemetry: self.telemetry,
                                     label: label.clone(),
                                     cfg: cfg.clone(),
                                     mix: None,
@@ -310,6 +335,7 @@ impl SweepSpec {
                                 params: *params,
                                 sched,
                                 engine: self.engine,
+                                telemetry: self.telemetry,
                                 label: label.clone(),
                                 cfg: mix.get(0).expect("mix covers channel 0").clone(),
                                 mix: Some(mix.clone()),
@@ -339,6 +365,12 @@ fn reject_mix_overrides(label: &str, mix: &ChannelMix) -> Result<()> {
             bail!(
                 "mix `{label}` channel {ch}: SCHED= is not allowed in sweep mixes — \
                  sweep the scheduler via the `scheds` axis instead"
+            );
+        }
+        if cfg.telemetry.is_some() {
+            bail!(
+                "mix `{label}` channel {ch}: TELEM= is not allowed in sweep mixes — \
+                 set the sweep-level `telemetry` key instead"
             );
         }
     }
@@ -480,6 +512,9 @@ pub struct SweepJob {
     /// Simulation engine the job runs under (absent from artifact
     /// labels: both engines produce bit-identical measurements).
     pub engine: EngineKind,
+    /// Telemetry sampling window, AXI cycles (absent from artifact
+    /// labels: telemetry is observation-only by contract).
+    pub telemetry: Option<u64>,
     /// Pattern/mix label (artifact naming).
     pub label: String,
     /// The traffic pattern to run (for mix jobs: channel 0's pattern;
@@ -510,6 +545,7 @@ fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
     design.controller = job.params;
     design.controller.sched = job.sched;
     design.engine = job.engine;
+    design.telemetry = job.telemetry;
     design.validate().map_err(|e| anyhow!("{e}"))?;
     let mut platform = Platform::new(design);
     // The job's mapping and scheduler axes are authoritative: a stray
@@ -517,11 +553,13 @@ fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
     // different policy than the artifact labels claim (SweepSpec::parse
     // rejects them; this guards programmatic specs too, and keeps the
     // echo truthful). ENGINE= is stripped for the same reason: the
-    // job-level engine choice is what ran.
+    // job-level engine choice is what ran — and TELEM= likewise: the
+    // sweep-level window is what every channel recorded under.
     let mut job = job.clone();
     job.cfg.mapping = None;
     job.cfg.sched = None;
     job.cfg.engine = None;
+    job.cfg.telemetry = None;
     if let Some(mix) = &job.mix {
         job.mix = Some(mix.without_overrides());
     }
@@ -770,14 +808,37 @@ pub fn artifact_stem(o: &SweepOutcome) -> String {
     )
 }
 
-/// Write per-job JSON + CSV artifacts and the campaign summary into
-/// `dir` (created if missing). Returns the summary path.
+/// Render one outcome's per-channel telemetry series as the
+/// `{stem}_timeline.json` artifact body — `None` when the sweep ran
+/// without a telemetry window. Engine-free like the stem: both engines
+/// record identical series, so timelines line up byte for byte too.
+pub fn timeline_artifact(o: &SweepOutcome) -> Option<String> {
+    let series: Vec<(usize, &TelemetrySeries)> = o
+        .per_channel
+        .iter()
+        .enumerate()
+        .filter_map(|(ch, s)| s.telemetry.as_ref().map(|t| (ch, t)))
+        .collect();
+    if series.is_empty() {
+        return None;
+    }
+    let axi_ns = 1000.0 / o.job.speed.axi_clock_mhz();
+    Some(crate::obs::export::timeline_json(&o.job.label, axi_ns, &series))
+}
+
+/// Write per-job JSON + CSV artifacts (plus `{stem}_timeline.json`
+/// time-series artifacts when the jobs recorded telemetry) and the
+/// campaign summary into `dir` (created if missing). Returns the
+/// summary path.
 pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf> {
     std::fs::create_dir_all(dir)?;
     for o in outcomes {
         let stem = artifact_stem(o);
         std::fs::write(dir.join(format!("{stem}.json")), job_json(o))?;
         std::fs::write(dir.join(format!("{stem}.csv")), job_csv(o))?;
+        if let Some(timeline) = timeline_artifact(o) {
+            std::fs::write(dir.join(format!("{stem}_timeline.json")), timeline)?;
+        }
     }
     let summary = dir.join("BENCH_sweep.json");
     std::fs::write(&summary, summary_json(outcomes, "ddr4bench sweep executive (simulator)"))?;
@@ -1143,6 +1204,7 @@ mod tests {
             cfg.batch_len = 64;
         }
         spec.mixes = vec![("hetero".to_string(), mini_mix())];
+        spec.telemetry = Some(128);
         let cycle = run_sweep(spec.expand(), 1).unwrap();
         spec.engine = EngineKind::Event;
         let event = run_sweep(spec.expand(), 1).unwrap();
@@ -1152,13 +1214,64 @@ mod tests {
             assert_eq!(a.per_channel.len(), b.per_channel.len());
             for (ca, cb) in a.per_channel.iter().zip(&b.per_channel) {
                 assert_eq!(ca.counters, cb.counters, "{}: counters diverge", a.job.label);
+                assert_eq!(ca.telemetry, cb.telemetry, "{}: series diverge", a.job.label);
             }
             // artifact JSON is byte-identical except the wall_ms line
             let strip = |o: &SweepOutcome| -> String {
                 job_json(o).lines().filter(|l| !l.contains("\"wall_ms\"")).collect()
             };
             assert_eq!(strip(a), strip(b), "{}: artifact JSON diverges", a.job.label);
+            // ...and the timeline artifact is byte-identical, full stop
+            let ta = timeline_artifact(a).expect("telemetry sweep emits timelines");
+            assert_eq!(ta, timeline_artifact(b).unwrap(), "{}: timelines", a.job.label);
         }
+    }
+
+    #[test]
+    fn telemetry_key_records_timelines_without_perturbing_measurements() {
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("bank").unwrap()];
+        spec.patterns[0].1.batch_len = 64;
+        let baseline = run_sweep(spec.expand(), 1).unwrap();
+        assert!(timeline_artifact(&baseline[0]).is_none(), "no window, no timeline");
+        spec.telemetry = Some(128);
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        assert_eq!(
+            baseline[0].agg.counters, outcomes[0].agg.counters,
+            "telemetry is observation-only across the sweep executive"
+        );
+        let timeline = timeline_artifact(&outcomes[0]).unwrap();
+        assert!(timeline.contains("\"schema\": \"ddr4bench.timeline.v1\""), "{timeline}");
+        assert!(timeline.contains("\"window_axi_cycles\": 128"), "{timeline}");
+        assert!(timeline.contains("\"bw_gbs\""), "{timeline}");
+        // the spec key parses (with suffixes) and rejects a zero window
+        let spec = SweepSpec::parse("telemetry = 4k\n").unwrap();
+        assert_eq!(spec.telemetry, Some(4096));
+        assert!(spec.expand().iter().all(|j| j.telemetry == Some(4096)));
+        assert_eq!(SweepSpec::parse("speeds = 1600\n").unwrap().telemetry, None);
+        assert!(SweepSpec::parse("telemetry = 0\n").is_err());
+        assert!(SweepSpec::parse("telemetry = abc\n").is_err());
+        // a pattern- or mix-level TELEM= would shadow the sweep-level
+        // window and mislabel the timelines — rejected like MAP=/SCHED=
+        assert!(SweepSpec::parse("[patterns]\nx = OP=R TELEM=64\n").is_err());
+        assert!(SweepSpec::parse("[mixes]\nx = 0:SEQ 1:RND,TELEM=64\n").is_err());
+        assert!(parse_mix_list("0:SEQ+1:RND,TELEM=64").is_err());
+    }
+
+    #[test]
+    fn run_job_strips_pattern_level_telemetry_overrides() {
+        // programmatic specs bypass parse(): the job-level window wins
+        let mut spec = SweepSpec::paper_grid();
+        spec.speeds = vec![SpeedBin::Ddr4_1600];
+        spec.channels = vec![1];
+        spec.patterns = vec![preset("seq").unwrap()];
+        spec.patterns[0].1.batch_len = 32;
+        spec.patterns[0].1.telemetry = Some(64);
+        let outcomes = run_sweep(spec.expand(), 1).unwrap();
+        assert_eq!(outcomes[0].job.cfg.telemetry, None, "override stripped from the echo");
+        assert!(timeline_artifact(&outcomes[0]).is_none(), "spec-level window was unset");
     }
 
     #[test]

@@ -7,11 +7,15 @@
 //! `BENCH_sweep.json` campaign summaries and renders cross-sweep delta
 //! tables (the `ddr4bench compare` subcommand);
 //! [`interference_tables`] renders the solo-vs-co-run channel
-//! interference matrix (the `ddr4bench interference` subcommand).
+//! interference matrix (the `ddr4bench interference` subcommand);
+//! [`timeline_table`] renders a telemetry series as a
+//! bandwidth-over-time table (the `ddr4bench run --telemetry` report).
 
 pub mod campaign;
 pub mod compare;
 
+use crate::obs::export::window_bw_gbs;
+use crate::obs::TelemetrySeries;
 use crate::platform::InterferenceMatrix;
 
 /// A rendered results table.
@@ -145,6 +149,42 @@ pub fn interference_tables(m: &InterferenceMatrix) -> (Table, Table) {
     (bw, lat)
 }
 
+/// Render one channel's telemetry series as a bandwidth-over-time table
+/// (the `ddr4bench run --telemetry` report). Window stamps stay in AXI
+/// cycles (the series' native, engine-identical unit); bandwidth and the
+/// p99 latencies convert through `axi_ns` (the AXI clock period).
+pub fn timeline_table(label: &str, series: &TelemetrySeries, axi_ns: f64) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Telemetry timeline [{label}]: {} window(s) x {} AXI cycles ({} dropped)",
+            series.windows.len(),
+            series.window,
+            series.dropped
+        ),
+        &[
+            "Win", "Start", "End", "BW GB/s", "RD B", "WR B", "QD", "Banks", "ACT", "PRE",
+            "RefStall", "p99 ns",
+        ],
+    );
+    for (i, w) in series.windows.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            w.start.to_string(),
+            w.end.to_string(),
+            format!("{:.2}", window_bw_gbs(w, axi_ns)),
+            w.rd_bytes.to_string(),
+            w.wr_bytes.to_string(),
+            w.queue_depth.to_string(),
+            w.open_banks.to_string(),
+            w.acts.to_string(),
+            w.pres.to_string(),
+            w.refresh_stall.to_string(),
+            format!("{:.0}", w.rd_p99.max(w.wr_p99) as f64 * axi_ns),
+        ]);
+    }
+    t
+}
+
 /// A figure data series: (x, y) points with a label — the reproduction of
 /// a paper plot line. Rendered as CSV columns plus a coarse ASCII chart.
 #[derive(Debug, Clone)]
@@ -274,6 +314,35 @@ mod tests {
         f.push("a", vec![(1.0, 1.0), (2.0, 2.0)]);
         let a = f.ascii();
         assert!(a.contains("##"));
+    }
+
+    #[test]
+    fn timeline_table_renders_bandwidth_over_time() {
+        let series = TelemetrySeries {
+            window: 100,
+            windows: vec![crate::obs::TelemetryWindow {
+                start: 0,
+                end: 100,
+                rd_bytes: 32,
+                wr_bytes: 32,
+                queue_depth: 2,
+                open_banks: 1,
+                acts: 3,
+                pres: 2,
+                refresh_stall: 0,
+                rd_p50: 8,
+                rd_p99: 16,
+                wr_p50: 0,
+                wr_p99: 0,
+            }],
+            dropped: 0,
+        };
+        let t = timeline_table("seq", &series, 5.0);
+        assert!(t.title.contains("1 window(s) x 100 AXI cycles"), "{}", t.title);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][1], "0", "start stamp in AXI cycles");
+        assert_eq!(t.rows[0][3], "0.13", "64 bytes over 500 ns");
+        assert_eq!(t.rows[0][11], "80", "p99 = max(rd, wr) x axi_ns");
     }
 
     #[test]

@@ -85,6 +85,31 @@ impl LatencyHistogram {
         Some(self.max)
     }
 
+    /// Approximate percentile of only the samples recorded since
+    /// `earlier` — an *incremental* percentile over the bucket deltas,
+    /// used by the telemetry sampler to report per-window latency from
+    /// two snapshots of one cumulative histogram. `earlier` must be a
+    /// past state of `self` (every bucket <= the current one). Returns
+    /// 0 when no samples landed in the delta. The bound saturates to
+    /// the cumulative max (the per-window max isn't tracked), which is
+    /// deterministic and never understates the window's tail.
+    pub fn percentile_delta(&self, earlier: &LatencyHistogram, p: f64) -> u64 {
+        let count = self.count - earlier.count;
+        if count == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for i in 0..32 {
+            seen += self.buckets[i] - earlier.buckets[i];
+            if seen >= target {
+                let bound = if i == 31 { self.max } else { 1u64 << (i + 1) };
+                return bound.min(self.max);
+            }
+        }
+        self.max
+    }
+
     /// Merge another histogram into this one.
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
@@ -171,6 +196,27 @@ mod tests {
         assert_eq!(a.min(), Some(5));
         assert_eq!(a.max(), Some(100));
         assert_eq!(a.mean(), 52.5);
+    }
+
+    #[test]
+    fn percentile_delta_reflects_only_the_new_samples() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(8);
+        }
+        let earlier = h.clone();
+        assert_eq!(h.percentile_delta(&earlier, 99.0), 0, "empty delta");
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        // the cumulative p50 is still fast-dominated, but the delta
+        // contains only slow samples
+        assert!(h.percentile(50.0).unwrap() <= 16);
+        let d50 = h.percentile_delta(&earlier, 50.0);
+        assert!(d50 >= 1000 && d50 <= 1024, "{d50}");
+        // a delta covering the whole history matches the plain percentile
+        let empty = LatencyHistogram::new();
+        assert_eq!(h.percentile_delta(&empty, 99.0), h.percentile(99.0).unwrap());
     }
 
     #[test]

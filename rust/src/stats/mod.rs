@@ -43,16 +43,39 @@ pub struct BatchCounters {
 }
 
 impl BatchCounters {
-    /// Merge another batch's counters into this one (used when aggregating
-    /// channels or repeated batches).
-    pub fn merge(&mut self, other: &BatchCounters) {
+    /// Merge counters of batches that ran *concurrently* (parallel
+    /// channels over one wall-clock interval): work sums, cycle
+    /// counters take the max — the channels shared the elapsed time,
+    /// so adding their cycle counts would invent time that never
+    /// passed. For batches that ran back to back use
+    /// [`merge_sequential`](Self::merge_sequential); the old ambiguous
+    /// `merge` name is gone precisely because max silently drops time
+    /// when misapplied to sequential batches.
+    pub fn merge_concurrent(&mut self, other: &BatchCounters) {
+        self.merge_work(other);
+        self.rd_cycles = self.rd_cycles.max(other.rd_cycles);
+        self.wr_cycles = self.wr_cycles.max(other.wr_cycles);
+        self.total_cycles = self.total_cycles.max(other.total_cycles);
+    }
+
+    /// Merge counters of batches that ran *sequentially* (one after the
+    /// other on the same channel): work sums and cycle counters sum
+    /// too, so elapsed time accumulates instead of being dropped by the
+    /// concurrent max.
+    pub fn merge_sequential(&mut self, other: &BatchCounters) {
+        self.merge_work(other);
+        self.rd_cycles += other.rd_cycles;
+        self.wr_cycles += other.wr_cycles;
+        self.total_cycles += other.total_cycles;
+    }
+
+    /// The merge rules shared by both time conventions: transaction,
+    /// byte, stall and mismatch counts sum; histograms merge.
+    fn merge_work(&mut self, other: &BatchCounters) {
         self.rd_txns += other.rd_txns;
         self.wr_txns += other.wr_txns;
         self.rd_bytes += other.rd_bytes;
         self.wr_bytes += other.wr_bytes;
-        self.rd_cycles = self.rd_cycles.max(other.rd_cycles);
-        self.wr_cycles = self.wr_cycles.max(other.wr_cycles);
-        self.total_cycles = self.total_cycles.max(other.total_cycles);
         self.refresh_stall_dram_cycles += other.refresh_stall_dram_cycles;
         self.mismatches += other.mismatches;
         self.rd_latency.merge(&other.rd_latency);
@@ -71,6 +94,9 @@ pub struct BatchStats {
     /// Channel energy over the batch window (IDD-based model, §II-C
     /// "other statistics").
     pub energy: crate::ddr4::power::EnergyBreakdown,
+    /// Windowed telemetry series, when the batch ran with sampling
+    /// enabled (`TELEM=`/`--telemetry`/`telemetry =`); `None` otherwise.
+    pub telemetry: Option<crate::obs::TelemetrySeries>,
 }
 
 impl BatchStats {
@@ -165,6 +191,7 @@ mod tests {
             },
             speed,
             energy: Default::default(),
+            telemetry: None,
         }
     }
 
@@ -190,14 +217,54 @@ mod tests {
     }
 
     #[test]
-    fn merge_accumulates_and_maxes() {
+    fn merge_concurrent_accumulates_work_and_maxes_time() {
         let mut a =
             BatchCounters { rd_txns: 10, rd_bytes: 100, rd_cycles: 50, ..Default::default() };
         let b = BatchCounters { rd_txns: 5, rd_bytes: 70, rd_cycles: 80, ..Default::default() };
-        a.merge(&b);
+        a.merge_concurrent(&b);
         assert_eq!(a.rd_txns, 15);
         assert_eq!(a.rd_bytes, 170);
         assert_eq!(a.rd_cycles, 80, "cycle counters take the max (parallel channels)");
+    }
+
+    #[test]
+    fn merge_sequential_accumulates_time_too() {
+        // regression for the old single `merge`: aggregating two
+        // back-to-back batches with the concurrent max silently dropped
+        // the first batch's elapsed time, halving it into a 2x
+        // throughput overstatement
+        let base = BatchCounters {
+            rd_txns: 10,
+            rd_bytes: 32_000,
+            rd_cycles: 1000,
+            wr_cycles: 400,
+            total_cycles: 1000,
+            ..Default::default()
+        };
+        let mut seq = base.clone();
+        seq.merge_sequential(&base);
+        assert_eq!(seq.rd_txns, 20);
+        assert_eq!(seq.rd_cycles, 2000, "sequential batches accumulate elapsed time");
+        assert_eq!(seq.wr_cycles, 800);
+        assert_eq!(seq.total_cycles, 2000);
+        let mut conc = base.clone();
+        conc.merge_concurrent(&base);
+        assert_eq!(conc.total_cycles, 1000, "concurrent channels share elapsed time");
+        // the derived throughput of a sequential double-run must equal
+        // the single run's, not double it
+        let single = BatchStats {
+            counters: base,
+            speed: SpeedBin::Ddr4_1600,
+            energy: Default::default(),
+            telemetry: None,
+        };
+        let doubled = BatchStats {
+            counters: seq,
+            speed: SpeedBin::Ddr4_1600,
+            energy: Default::default(),
+            telemetry: None,
+        };
+        assert!((single.read_throughput_gbs() - doubled.read_throughput_gbs()).abs() < 1e-12);
     }
 
     #[test]

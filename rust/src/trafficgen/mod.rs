@@ -278,6 +278,12 @@ impl TrafficGen {
         self.rd_outstanding + self.wr_outstanding
     }
 
+    /// Transactions currently in flight (issued, not yet fully
+    /// completed) — the telemetry sampler's queue-depth snapshot.
+    pub fn in_flight(&self) -> usize {
+        self.total_outstanding()
+    }
+
     /// May a new transaction be issued under the signaling mode?
     fn may_issue(&self, is_write: bool, now: u64) -> bool {
         match self.cfg.signaling {

@@ -62,7 +62,7 @@ fn start(cfg: ServerConfig) -> (SocketAddr, ShutdownHandle, std::thread::JoinHan
 
 #[test]
 fn concurrent_sessions_match_solo_replay_bit_for_bit() {
-    let cfg = ServerConfig { workers: 2, max_sessions: 8, limits: SessionLimits::default() };
+    let cfg = ServerConfig { workers: 2, max_sessions: 8, ..ServerConfig::default() };
     let (addr, shutdown, serving) = start(cfg);
 
     // all four clients in flight at once, each with a distinct script
@@ -82,7 +82,7 @@ fn concurrent_sessions_match_solo_replay_bit_for_bit() {
 
 #[test]
 fn dropped_client_never_poisons_the_server_or_pool() {
-    let cfg = ServerConfig { workers: 1, max_sessions: 4, limits: SessionLimits::default() };
+    let cfg = ServerConfig { workers: 1, max_sessions: 4, ..ServerConfig::default() };
     let (addr, shutdown, serving) = start(cfg);
 
     // a client queues real work and vanishes without reading a byte
@@ -103,9 +103,68 @@ fn dropped_client_never_poisons_the_server_or_pool() {
 }
 
 #[test]
+fn metrics_reaches_a_streaming_client_mid_run_over_tcp() {
+    // A client that pipelines RUN + METRICS with streaming on and a
+    // telemetry window armed must see live heartbeats while the run is
+    // in flight, then a well-formed snapshot once it lands.
+    let cfg = ServerConfig {
+        workers: 1,
+        max_sessions: 2,
+        stream_interval: Duration::from_millis(1),
+        ..ServerConfig::default()
+    };
+    let (addr, shutdown, serving) = start(cfg);
+
+    let all = run_client(
+        addr,
+        &[
+            "STREAM ON",
+            "CFG 0 OP=R ADDR=RND SEED=9 BURST=1 BATCH=60000 TELEM=256",
+            "RUN 0",
+            "METRICS 0",
+            "QUIT",
+        ],
+    );
+
+    let beats: Vec<&String> = all.iter().filter(|l| l.starts_with("STREAM ")).collect();
+    let replies: Vec<&String> = all.iter().filter(|l| !l.starts_with("STREAM ")).collect();
+    assert!(!beats.is_empty(), "no heartbeat arrived during the run: {all:?}");
+    assert!(beats.iter().all(|b| b.starts_with("STREAM RUN CH=0 MS=")), "{beats:?}");
+    assert!(
+        beats.iter().any(|b| b.contains(" bw=") && b.contains(" qd=") && b.contains(" p99=")),
+        "no heartbeat carried live telemetry: {beats:?}"
+    );
+    // every heartbeat belongs to the run: all precede the RUN reply
+    let run_pos = all.iter().position(|l| l.starts_with("OK RUN CH=0")).expect("RUN reply");
+    let last_beat = all.iter().rposition(|l| l.starts_with("STREAM ")).unwrap();
+    assert!(last_beat < run_pos, "heartbeat after the RUN reply: {all:?}");
+
+    assert_eq!(replies.len(), 5, "{all:?}");
+    assert_eq!(replies[0], "OK STREAM ON");
+    assert!(replies[1].starts_with("OK CFG CH=0"), "{}", replies[1]);
+    assert!(replies[2].starts_with("OK RUN CH=0 TXNS=60000"), "{}", replies[2]);
+    let metrics = replies[3];
+    assert!(metrics.starts_with("OK METRICS CH=0 WINDOW=256 CLOSED="), "{metrics}");
+    assert!(metrics.contains(" DONE=1"), "{metrics}");
+    assert!(metrics.contains(" LAST_START="), "{metrics}");
+    assert!(metrics.contains(" RD_P99="), "{metrics}");
+    let closed: u64 = metrics
+        .split(" CLOSED=")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|n| n.parse().ok())
+        .expect("CLOSED= field");
+    assert!(closed > 0, "snapshot closed no windows: {metrics}");
+    assert_eq!(replies[4], "OK BYE");
+
+    shutdown.signal();
+    serving.join().unwrap();
+}
+
+#[test]
 fn per_session_limits_surface_named_diagnostics_over_tcp() {
     let limits = SessionLimits { max_channels: 1, max_batch: 128, max_queued_runs: 1 };
-    let cfg = ServerConfig { workers: 1, max_sessions: 2, limits };
+    let cfg = ServerConfig { workers: 1, max_sessions: 2, limits, ..ServerConfig::default() };
     let (addr, shutdown, serving) = start(cfg);
 
     let got = run_client(

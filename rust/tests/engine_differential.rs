@@ -4,8 +4,9 @@
 //! The event engine may only leap over fabric cycles in which the
 //! canonical loop body is provably a no-op, so *every* observable — the
 //! hardware counters (including both latency histograms), the derived
-//! latency percentiles, and the per-device command statistics (compared
-//! through the deterministic energy breakdown they feed) — must be
+//! latency percentiles, the per-device command statistics (compared
+//! through the deterministic energy breakdown they feed), and the
+//! windowed telemetry series when a `TELEM=` sampler is armed — must be
 //! bit-identical across engines for any workload, scheduler, address
 //! mapping, and heterogeneous channel mix. Randomized patterns come from
 //! the seeded in-tree property kit (`DDR4BENCH_PT_SEED` reproduces a
@@ -40,6 +41,11 @@ fn random_pattern(rng: &mut SplitMix64) -> PatternConfig {
     if rng.percent(30) {
         cfg.signaling = Signaling::Blocking;
     }
+    if rng.percent(50) {
+        // arm the telemetry sampler on half the draws: the differential
+        // then also pins the windowed series bit-identical across engines
+        cfg.telemetry = Some(64 << rng.below(4));
+    }
     cfg
 }
 
@@ -49,6 +55,12 @@ fn assert_same(a: &BatchStats, b: &BatchStats, what: &str) -> Result<(), String>
         return Err(format!(
             "{what}: counters diverge\n  cycle: {:?}\n  event: {:?}",
             a.counters, b.counters
+        ));
+    }
+    if a.telemetry != b.telemetry {
+        return Err(format!(
+            "{what}: telemetry series diverge\n  cycle: {:?}\n  event: {:?}",
+            a.telemetry, b.telemetry
         ));
     }
     for pct in [50.0, 90.0, 95.0, 99.0] {

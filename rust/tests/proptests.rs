@@ -10,13 +10,15 @@
 //! - FR-FCFS never loses or duplicates requests (conservation), and
 //!   same-address requests never reorder;
 //! - batch counters conserve: issued = completed, bytes = txns × size;
+//! - telemetry sampling is observation-only: every measured observable
+//!   is bit-identical with the sampler armed or absent;
 //! - pattern configs round-trip through the host-protocol CFG syntax;
 //! - PRBS expansion is deterministic and never produces a zero word.
 
 use ddr4bench::config::{
     format_pattern_config, parse_pattern_config, AddrMode, BurstKind, BurstSpec,
-    ControllerParams, DataPattern, DesignConfig, OpMix, PatternConfig, SchedKind, Signaling,
-    SpeedBin,
+    ControllerParams, DataPattern, DesignConfig, EngineKind, OpMix, PatternConfig, SchedKind,
+    Signaling, SpeedBin,
 };
 use ddr4bench::controller::{MemController, MemRequest};
 use ddr4bench::ddr4::{Cmd, DdrDevice, DramGeometry, MappingPolicy, TimingParams};
@@ -407,6 +409,68 @@ fn prop_batch_counters_conserve() {
             }
             if c.total_cycles < c.rd_cycles.max(c.wr_cycles) {
                 return Err("total_cycles < per-direction cycles".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_telemetry_sampling_is_observation_only() {
+    // The telemetry sampler must be a pure observer: with a window
+    // armed, the batch counters (including TOTAL_CYCLES) and the
+    // latency percentiles are bit-identical to the telemetry-off run —
+    // across both engines and every scheduler policy.
+    check(
+        "telemetry on vs off: observables bit-identical",
+        3,
+        |rng| {
+            let burst = [1u32, 8, 32][rng.below(3) as usize];
+            let batch = 64 + rng.below(128) as u32;
+            let mut cfg = match rng.below(3) {
+                0 => PatternConfig::seq_read_burst(burst, batch),
+                1 => PatternConfig::rnd_read_burst(burst, batch, rng.next_u64() >> 1),
+                _ => PatternConfig::bank_conflict_read(1, batch, rng.next_u64() >> 1),
+            };
+            if rng.percent(40) {
+                cfg.op = OpMix::Mixed { read_pct: 25 + rng.below(51) as u32 };
+            }
+            (cfg, 16 + rng.below(240))
+        },
+        |(cfg, window)| {
+            for engine in EngineKind::ALL {
+                for sched in SchedKind::ALL {
+                    let mut design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+                    design.engine = engine;
+                    design.controller.sched = sched;
+                    let mut off = Platform::new(design.clone());
+                    let mut on = Platform::new(design);
+                    let a = off.run_batch(0, cfg).map_err(|e| e.to_string())?;
+                    let mut armed = cfg.clone();
+                    armed.telemetry = Some(*window);
+                    let b = on.run_batch(0, &armed).map_err(|e| e.to_string())?;
+                    if b.telemetry.is_none() {
+                        return Err(format!("{engine}/{sched}: no series with TELEM={window}"));
+                    }
+                    if a.counters != b.counters {
+                        return Err(format!(
+                            "{engine}/{sched}: counters diverge with telemetry on\n  off: \
+                             {:?}\n  on:  {:?}",
+                            a.counters, b.counters
+                        ));
+                    }
+                    for pct in [50.0, 99.0] {
+                        let (ra, rb) = (a.read_latency_pct_ns(pct), b.read_latency_pct_ns(pct));
+                        if ra.to_bits() != rb.to_bits() {
+                            return Err(format!("{engine}/{sched}: read p{pct} {ra} vs {rb}"));
+                        }
+                        let (wa, wb) =
+                            (a.write_latency_pct_ns(pct), b.write_latency_pct_ns(pct));
+                        if wa.to_bits() != wb.to_bits() {
+                            return Err(format!("{engine}/{sched}: write p{pct} {wa} vs {wb}"));
+                        }
+                    }
+                }
             }
             Ok(())
         },

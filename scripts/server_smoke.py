@@ -3,9 +3,13 @@
 
 Connects ``--clients`` simultaneous sessions to a running ``ddr4bench
 serve`` instance (2+ channels), drives each through its own command
-script, and requires every reply line to be ``OK ...``. Exits 0 on
-success, 1 with a per-client failure report otherwise — the CI gate
-backgrounds the server, runs this, then checks a clean SIGTERM exit.
+script, and requires every reply line to be ``OK ...``. One extra
+streaming session turns ``STREAM ON`` before a long pooled run and
+requires at least one ``STREAM ...`` heartbeat line to land before the
+run's terminal reply. Exits 0 on success, 1 with a per-client failure
+report otherwise — the CI gate backgrounds the server (with a short
+``--stream-interval-ms`` so heartbeats are dense), runs this, then
+checks a clean SIGTERM exit.
 
 Usage: server_smoke.py [--addr 127.0.0.1:5557] [--clients 4]
 """
@@ -62,6 +66,48 @@ def run_client(idx, host, port, script, failures):
         failures.append(f"client {idx}: connection error: {e}")
 
 
+def run_stream_client(host, port, failures):
+    """STREAM ON during a pooled run: at least one heartbeat line must
+    arrive over TCP before the run's terminal ``OK RUN`` reply (the
+    replies themselves must all be OK too)."""
+    script = [
+        "STREAM ON",
+        "CFG 0 OP=R ADDR=CHASE WSET=16m BURST=1 BATCH=100000 TELEM=256",
+        "RUN 0",
+        "QUIT",
+    ]
+    try:
+        with socket.create_connection((host, port), timeout=120) as conn:
+            conn.settimeout(120)
+            reader = conn.makefile("r")
+            conn.sendall(("".join(line + "\n" for line in script)).encode())
+            heartbeats = 0
+            replies = []
+            while len(replies) < len(script):
+                line = reader.readline().rstrip("\n")
+                if not line:
+                    failures.append("stream client: connection closed early")
+                    return
+                if line.startswith("STREAM "):
+                    heartbeats += 1
+                else:
+                    replies.append(line)
+            bad = [
+                f"stream client: `{sent}` -> `{reply}`"
+                for sent, reply in zip(script, replies)
+                if not reply.startswith("OK")
+            ]
+            if bad:
+                failures.extend(bad)
+                return
+            if heartbeats == 0:
+                failures.append("stream client: no STREAM heartbeat before the run completed")
+                return
+            print(f"server smoke: stream client saw {heartbeats} heartbeat(s) mid-run")
+    except OSError as e:
+        failures.append(f"stream client: connection error: {e}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--addr", default="127.0.0.1:5557", help="server address (host:port)")
@@ -80,6 +126,7 @@ def main():
         )
         for i in range(args.clients)
     ]
+    threads.append(threading.Thread(target=run_stream_client, args=(host, port, failures)))
     for t in threads:
         t.start()
     for t in threads:
@@ -89,7 +136,10 @@ def main():
         for f in failures:
             print(f"FAIL {f}", file=sys.stderr)
         sys.exit(1)
-    print(f"server smoke: {args.clients} concurrent session(s), all replies OK")
+    print(
+        f"server smoke: {args.clients} concurrent session(s) + 1 streaming session, "
+        "all replies OK"
+    )
 
 
 if __name__ == "__main__":
