@@ -6,6 +6,10 @@
 //! - scheduler pick under deep queues, one series per policy — documents
 //!   that the `controller::sched` trait dispatch + wake fast path does
 //!   not slow the hot loop relative to the monolithic scheduler;
+//! - saturated deep-queue scheduling, per policy and window width, with
+//!   `_oracle` twins running the frozen scan scheduler
+//!   (`controller.sched_oracle`) — the indexed-fast-path speedup the CI
+//!   perf smoke reads out of `BENCH_micro.json`;
 //! - end-to-end simulated-cycles-per-second (the SPerf headline), plus a
 //!   telemetry-armed twin that prices the windowed sampler's probe;
 //! - PRBS payload expansion, Rust mirror vs the AOT XLA kernel;
@@ -21,6 +25,61 @@ use ddr4bench::platform::Platform;
 use ddr4bench::rng::SplitMix64;
 use ddr4bench::runtime::XlaRuntime;
 use ddr4bench::trafficgen::payload;
+
+/// One saturated deep-queue scheduling run: depth-64 queues kept
+/// brimming (refill whenever more than 8 slots open) under a
+/// `lookahead`-wide reorder window, over a small working set thick with
+/// bank conflicts and same-address revisits. `oracle` selects the frozen
+/// scan scheduler instead of the incremental indexes — the `_oracle`
+/// bench twins make the fast-path speedup directly readable.
+fn run_satq(kind: SchedKind, lookahead: usize, oracle: bool) {
+    let geo = DramGeometry::profpga_board();
+    let params = ControllerParams {
+        sched: kind,
+        sched_oracle: oracle,
+        lookahead,
+        read_queue_depth: 64,
+        write_queue_depth: 64,
+        write_drain_high: 48,
+        write_drain_low: 8,
+        ..Default::default()
+    };
+    let mut ctrl = MemController::new(params, TimingParams::for_bin(SpeedBin::Ddr4_1600), geo);
+    let mut rng = SplitMix64::new(7);
+    let mut comps = Vec::new();
+    let mut id = 0u64;
+    for now in 0..60_000u64 {
+        while ctrl.read_slots() > 8 || ctrl.write_slots() > 8 {
+            let is_write = if ctrl.write_slots() == 0 {
+                false
+            } else if ctrl.read_slots() == 0 {
+                true
+            } else {
+                rng.percent(40)
+            };
+            let addr = rng.below(1 << 14) * 64;
+            let pushed = ctrl.try_push(MemRequest {
+                txn_id: id,
+                is_write,
+                addr: geo.decode(addr),
+                burst_addr: addr,
+                beats: 2,
+                arrival: now,
+                last_of_txn: true,
+            });
+            if pushed.is_err() {
+                break;
+            }
+            id += 1;
+        }
+        ctrl.tick(now);
+        if now % 64 == 0 {
+            comps.clear();
+            ctrl.pop_completions(now, &mut comps);
+        }
+    }
+    std::hint::black_box(ctrl.device().stats().reads);
+}
 
 fn main() {
     let mut bench = Bench::new("micro_hotpath");
@@ -143,6 +202,26 @@ fn main() {
         });
     }
 
+    // --- saturated deep-queue scheduling: the indexed fast path against
+    // its frozen scan-oracle twin, per policy and window width. The CI
+    // perf smoke reads these series out of BENCH_micro.json and checks
+    // (advisorily) that each `satq_*_la32` sustains >= 1.5x the cycle
+    // rate of its `_oracle` twin.
+    for kind in SchedKind::ALL {
+        for lookahead in [8usize, 32] {
+            for oracle in [false, true] {
+                let name = format!(
+                    "controller/satq_{}_la{lookahead}{}",
+                    kind.name(),
+                    if oracle { "_oracle" } else { "" }
+                );
+                bench.bench_throughput(&name, 60_000.0, "cycle", move || {
+                    run_satq(kind, lookahead, oracle);
+                });
+            }
+        }
+    }
+
     // --- end-to-end: simulated DRAM cycles per wall second
     let cfg = PatternConfig::seq_read_burst(32, 4096);
     let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
@@ -217,6 +296,12 @@ fn main() {
     } else {
         println!("(artifacts missing: skipping XLA data-path benches)");
     }
+
+    // machine-readable mirror of everything measured above — the CI perf
+    // smoke parses this and uploads it as an artifact
+    let json_path = std::path::Path::new("BENCH_micro.json");
+    bench.write_json(json_path).expect("write BENCH_micro.json");
+    println!("(wrote {})", json_path.display());
 
     bench.finish();
 }

@@ -156,10 +156,62 @@ impl Bench {
         &self.results
     }
 
+    /// Render the collected samples as a machine-readable JSON document
+    /// (schema `ddr4bench.micro.v1`). Hand-rendered — the offline image
+    /// carries no serde — with every time in seconds so downstream
+    /// tooling (the CI perf smoke) needs no unit parsing.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"ddr4bench.micro.v1\",\n");
+        out.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(&self.suite)));
+        out.push_str(&format!("  \"samples_per_bench\": {},\n", self.samples));
+        out.push_str("  \"benches\": [\n");
+        for (i, s) in self.results.iter().enumerate() {
+            out.push_str("    {\n");
+            out.push_str(&format!("      \"name\": \"{}\",\n", json_escape(&s.name)));
+            out.push_str(&format!("      \"median_s\": {:e},\n", s.median()));
+            out.push_str(&format!("      \"mean_s\": {:e},\n", s.mean()));
+            out.push_str(&format!("      \"stddev_s\": {:e},\n", s.stddev()));
+            out.push_str(&format!("      \"min_s\": {:e},\n", s.min()));
+            out.push_str(&format!("      \"max_s\": {:e}", s.max()));
+            if let Some((n, unit)) = s.elements {
+                out.push_str(",\n");
+                out.push_str(&format!("      \"elements\": {n:e},\n"));
+                out.push_str(&format!("      \"unit\": \"{}\",\n", json_escape(unit)));
+                out.push_str(&format!("      \"throughput_per_s\": {:e}\n", n / s.median()));
+            } else {
+                out.push('\n');
+            }
+            out.push_str(if i + 1 < self.results.len() { "    },\n" } else { "    }\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`Self::to_json`] to `path` (the `BENCH_micro.json`
+    /// artifact the CI perf smoke uploads).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
     /// Print the suite footer.
     pub fn finish(self) {
         println!("== {}: {} benchmarks done ==", self.suite, self.results.len());
     }
+}
+
+/// Minimal JSON string escaper (quotes, backslashes, control bytes).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -195,6 +247,38 @@ mod tests {
         assert_eq!(calls, 4); // 1 warmup + 3 samples
         assert_eq!(b.samples().len(), 1);
         b.finish();
+    }
+
+    #[test]
+    fn json_rendering_is_well_formed() {
+        let mut b = Bench { suite: "micro".into(), samples: 2, warmup: 0, results: Vec::new() };
+        b.results.push(Sample {
+            name: "controller/satq_frfcfs_la32".into(),
+            times: vec![Duration::from_millis(10), Duration::from_millis(20)],
+            elements: Some((60_000.0, "cycles")),
+        });
+        b.results.push(Sample {
+            name: "plain \"quoted\"".into(),
+            times: vec![Duration::from_millis(5)],
+            elements: None,
+        });
+        let j = b.to_json();
+        assert!(j.contains("\"schema\": \"ddr4bench.micro.v1\""));
+        assert!(j.contains("\"name\": \"controller/satq_frfcfs_la32\""));
+        assert!(j.contains("\"throughput_per_s\""));
+        assert!(j.contains("plain \\\"quoted\\\""));
+        // crude structural checks: balanced braces/brackets, no trailing
+        // comma before a closing bracket
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(!j.contains(",\n  ]"));
+        assert!(!j.contains(",\n    }"));
+    }
+
+    #[test]
+    fn json_escape_control_bytes() {
+        assert_eq!(json_escape("a\nb"), "a\\u000ab");
+        assert_eq!(json_escape("c:\\d"), "c:\\\\d");
     }
 
     #[test]

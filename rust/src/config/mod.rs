@@ -328,6 +328,13 @@ pub struct ControllerParams {
     /// design time here, per batch via the `SCHED=` pattern token, and
     /// as a sweep axis (`--scheds`).
     pub sched: SchedKind,
+    /// Run the frozen scan-based scheduler implementation instead of
+    /// the incrementally-indexed fast path
+    /// ([`crate::controller::sched_index`]). The two are pinned
+    /// bit-exact by `rust/tests/sched_index_differential.rs`; the scans
+    /// exist as the differential oracle and for debugging, not as a
+    /// tuning knob — leave this off outside tests and benches.
+    pub sched_oracle: bool,
 }
 
 impl Default for ControllerParams {
@@ -345,6 +352,7 @@ impl Default for ControllerParams {
             miss_flush: true,
             mode_dwell_ck: 48,
             sched: SchedKind::FrFcfs,
+            sched_oracle: false,
         }
     }
 }

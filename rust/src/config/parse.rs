@@ -178,6 +178,7 @@ pub fn parse_design_config(text: &str) -> Result<DesignConfig, ConfigError> {
                 ConfigError::new(format!("controller.sched: unknown policy `{v}`"))
             })?,
         },
+        sched_oracle: get_bool(&map, "controller.sched_oracle", d.sched_oracle)?,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -653,7 +654,9 @@ pub fn format_channel_mix(mix: &ChannelMix) -> String {
 /// `write_drain_high` (`whi`), `write_drain_low` (`wlo`),
 /// `outstanding_cap` (`cap`), `idle_precharge_cycles` (`idle_pre`),
 /// `addr_cmd_interval_axi` (`addr_interval`), `serial_frontend`,
-/// `miss_flush`, `mode_dwell_ck` (`dwell`), `sched` (`policy`).
+/// `miss_flush`, `mode_dwell_ck` (`dwell`), `sched` (`policy`),
+/// `sched_oracle` (`oracle` — run the frozen scan scheduler instead of
+/// the indexed fast path; a differential/debug knob, not a perf one).
 pub fn parse_controller_tokens(
     base: ControllerParams,
     tokens: &[&str],
@@ -696,6 +699,7 @@ pub fn parse_controller_tokens(
             "serial_frontend" => p.serial_frontend = as_bool()?,
             "miss_flush" => p.miss_flush = as_bool()?,
             "mode_dwell_ck" | "dwell" => p.mode_dwell_ck = as_u32()?,
+            "sched_oracle" | "oracle" => p.sched_oracle = as_bool()?,
             "sched" | "policy" => {
                 p.sched = SchedKind::parse(val).ok_or_else(|| {
                     ConfigError::new(format!("knob sched: unknown policy `{val}`"))

@@ -30,10 +30,19 @@
 //! requests to the *same DRAM burst address* are never reordered past each
 //! other, under every policy (checked by `same-address ordering` in the
 //! property tests; the hazard check lives in the shared scan of [`sched`],
-//! outside any policy hook).
+//! outside any policy hook, and both enforcement points share one
+//! predicate — [`request::older_same_addr`]).
+//!
+//! Scheduling decisions run on the incrementally-indexed fast path in
+//! [`sched_index`] (per-address occupancy, per-(bank,row) wanted counts,
+//! epoch-memoized candidate sets maintained at the queue mutation
+//! points); the scans in [`sched`] stay in-tree as the frozen oracle,
+//! selected by [`ControllerParams::sched_oracle`] and pinned bit-exact
+//! by `rust/tests/sched_index_differential.rs`.
 
 pub mod request;
 pub mod sched;
+pub mod sched_index;
 
 pub use request::{Completion, MemRequest};
 pub use sched::{SchedEngine, SchedKind, SchedPolicy};
@@ -78,6 +87,11 @@ pub struct MemController {
     params: ControllerParams,
     /// The scheduling/page policy in force (runtime-swappable).
     sched: SchedEngine,
+    /// Incremental scheduling indexes (the tick fast path), maintained
+    /// at every queue mutation point; see [`sched_index`]. Kept in sync
+    /// even when `params.sched_oracle` routes decisions to the scans,
+    /// so the flag can be flipped mid-run (differential tests do).
+    index: sched_index::SchedIndex,
     device: DdrDevice,
     read_q: VecDeque<MemRequest>,
     write_q: VecDeque<MemRequest>,
@@ -118,6 +132,7 @@ impl MemController {
             dirty: true,
             idle_until: 0,
             sched: SchedEngine::new(params.sched),
+            index: sched_index::SchedIndex::new(banks),
             params,
             device: DdrDevice::new(timing, geometry),
             read_q: VecDeque::with_capacity(params.read_queue_depth),
@@ -168,6 +183,9 @@ impl MemController {
                 trace.record(ev);
             }
         }
+        // Any issued command can change row states / timing horizons:
+        // invalidate the scheduler's decision memos.
+        self.index.bump();
         self.device.issue(cmd, now)
     }
 
@@ -211,8 +229,10 @@ impl MemController {
         if self.sched.kind() != kind {
             self.sched = SchedEngine::new(kind);
             self.params.sched = kind;
-            // the new policy may issue earlier than the cached wake time
+            // the new policy may issue earlier than the cached wake time,
+            // and memoized candidate sets assume the old policy's window
             self.dirty = true;
+            self.index.bump();
         }
     }
 
@@ -264,6 +284,7 @@ impl MemController {
         }
         let q = if req.is_write { &mut self.write_q } else { &mut self.read_q };
         q.push_back(req);
+        self.index.on_push(&req);
         // A new request may be issuable before the cached wake time:
         // force a full evaluation on the next tick. (A precise per-request
         // wake computation was measured slower — the evaluation happens
@@ -331,6 +352,39 @@ impl MemController {
             self.idle_until = 0;
         }
         cmd
+    }
+
+    /// Test-only: run a full scheduler evaluation at `now`, bypassing
+    /// the `idle_until`/dirty fast path. The wake-conservatism property
+    /// test drives this on cloned controllers to prove that every cycle
+    /// the fast path skips is a cycle the scheduler would issue nothing.
+    #[doc(hidden)]
+    pub fn debug_force_eval(&mut self, now: Cycle) -> Option<Cmd> {
+        self.tick_eval(now)
+    }
+
+    /// Test-only: flip between the indexed fast path and the frozen
+    /// scan oracle mid-run (the indexes stay maintained either way).
+    #[doc(hidden)]
+    pub fn debug_set_oracle(&mut self, oracle: bool) {
+        self.params.sched_oracle = oracle;
+        self.dirty = true;
+    }
+
+    /// Test-only: the cycle the tick fast path sleeps to, if the next
+    /// tick would take the fast path at all (`None` when a full
+    /// evaluation is pending anyway — un-consumed input or an active
+    /// refresh).
+    #[doc(hidden)]
+    pub fn debug_sleep_until(&self) -> Option<Cycle> {
+        (!self.dirty && self.refresh == RefreshState::Idle).then_some(self.idle_until)
+    }
+
+    /// Test-only: validate the incremental indexes against a
+    /// from-scratch recount of both queues.
+    #[doc(hidden)]
+    pub fn debug_assert_index_consistent(&self) {
+        self.index.assert_consistent(&self.read_q, &self.write_q);
     }
 
     /// Full scheduler evaluation (the slow path of [`Self::tick`]); sets
@@ -405,6 +459,33 @@ impl MemController {
         }
     }
 
+    /// [`sched::SchedView`] assembled from explicit field borrows, so a
+    /// call site can hold `&mut self.index` alongside it (the
+    /// whole-`self` borrow of [`Self::sched_view`] could not).
+    fn view_parts<'a>(
+        device: &'a DdrDevice,
+        params: &'a ControllerParams,
+        read_q: &'a VecDeque<MemRequest>,
+        write_q: &'a VecDeque<MemRequest>,
+        bank_last_use: &'a [Cycle],
+        mode: Mode,
+        now: Cycle,
+    ) -> sched::SchedView<'a> {
+        let (active, other) = match mode {
+            Mode::Read => (read_q, write_q),
+            Mode::Write => (write_q, read_q),
+        };
+        sched::SchedView {
+            device,
+            params,
+            active,
+            other,
+            is_write: mode == Mode::Write,
+            bank_last_use,
+            now,
+        }
+    }
+
     /// Close an open row that has sat unused past the policy's idle
     /// timer and that no queued request still wants — turns the next
     /// access to that bank from a 2-command conflict (PRE+ACT) into a
@@ -413,7 +494,22 @@ impl MemController {
     /// is policy-defined: 0 (never) for open-page policies unless the
     /// `idle_precharge_cycles` knob is set, always-on for `adaptive`.
     fn try_idle_precharge(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
-        let (bank, wake) = self.sched.pick_idle_precharge(&self.sched_view(Mode::Read, now));
+        // The view direction is immaterial here (the wanted test spans
+        // both queues); Mode::Read matches the oracle call convention.
+        let (bank, wake) = if self.params.sched_oracle {
+            self.sched.pick_idle_precharge(&self.sched_view(Mode::Read, now))
+        } else {
+            let v = Self::view_parts(
+                &self.device,
+                &self.params,
+                &self.read_q,
+                &self.write_q,
+                &self.bank_last_use,
+                Mode::Read,
+                now,
+            );
+            sched_index::pick_idle_precharge_indexed(self.sched.policy(), &v, &self.index)
+        };
         match bank {
             Some(bank) => {
                 let cmd = Cmd::Pre { bank };
@@ -506,7 +602,7 @@ impl MemController {
         let (q, other) =
             if is_write { (&self.write_q, &self.read_q) } else { (&self.read_q, &self.write_q) };
         let Some(head) = q.front() else { return false };
-        other.iter().any(|r| r.addr == head.addr && r.arrival < head.arrival)
+        request::older_same_addr(other, head.addr, head.arrival)
     }
 
     /// CAS issue: the policy engine picks the queue entry (row hits
@@ -519,7 +615,20 @@ impl MemController {
     /// legal (wake hint for the tick fast-path).
     fn try_cas(&mut self, now: Cycle) -> (Option<Cmd>, Cycle) {
         let is_write = self.mode == Mode::Write;
-        let (pick, wake) = self.sched.pick_cas(&self.sched_view(self.mode, now));
+        let (pick, wake) = if self.params.sched_oracle {
+            self.sched.pick_cas(&self.sched_view(self.mode, now))
+        } else {
+            let v = Self::view_parts(
+                &self.device,
+                &self.params,
+                &self.read_q,
+                &self.write_q,
+                &self.bank_last_use,
+                self.mode,
+                now,
+            );
+            sched_index::pick_cas_indexed(self.sched.policy(), &v, &mut self.index)
+        };
         let Some(pick) = pick else { return (None, wake) };
         let t = self.device.timing();
         let (cl, cwl, burst) = (t.cl, t.cwl, t.burst_cycles);
@@ -528,6 +637,7 @@ impl MemController {
         } else {
             self.read_q.remove(pick.index).unwrap()
         };
+        self.index.on_remove(&req, if is_write { &self.write_q } else { &self.read_q });
         let cmd = if is_write {
             Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: pick.auto_pre }
         } else {
@@ -564,7 +674,20 @@ impl MemController {
     /// queue: the policy engine chooses the ACT/PRE target inside its
     /// window; the front end commits it and applies the miss-flush gate.
     fn try_prep(&mut self, now: Cycle, mode: Mode) -> (Option<Cmd>, Cycle) {
-        let (action, wake) = self.sched.pick_prep(&self.sched_view(mode, now));
+        let (action, wake) = if self.params.sched_oracle {
+            self.sched.pick_prep(&self.sched_view(mode, now))
+        } else {
+            let v = Self::view_parts(
+                &self.device,
+                &self.params,
+                &self.read_q,
+                &self.write_q,
+                &self.bank_last_use,
+                mode,
+                now,
+            );
+            sched_index::pick_prep_indexed(self.sched.policy(), &v, &mut self.index)
+        };
         match action {
             Some(sched::PrepAction::Act { bank, row }) => {
                 let cmd = Cmd::Act { bank, row };
@@ -694,6 +817,43 @@ mod tests {
         }
         assert_eq!(done[0].txn_id, 2, "row hit first (FR-FCFS)");
         assert_eq!(done[1].txn_id, 1);
+    }
+
+    #[test]
+    fn hazard_predicate_shared_by_both_call_sites() {
+        // The same-address hazard has two enforcement points — the
+        // direction state machine's head test and the scheduler scans —
+        // both built on `request::older_same_addr`. Crafted overlap
+        // cases must get the same verdict at every call site.
+        let mut c = ctrl();
+        open_row(&mut c, 1); // bank 0 row 1 open, queues drained
+        c.try_push(wr_req(1, 0, 1, 0, 500)).unwrap();
+        c.try_push(rd_req(2, 0, 1, 0, 501)).unwrap(); // overlaps the write
+        c.try_push(rd_req(3, 0, 1, 8, 502)).unwrap(); // same row, other burst
+        assert!(c.head_hazard_blocked(false), "read head overlaps an older write");
+        assert!(!c.head_hazard_blocked(true), "write head has no older read");
+        // Scan call sites (oracle and indexed): the read-mode pick must
+        // skip the blocked head and serve the non-overlapping burst.
+        let now = 600;
+        let oracle = c.sched.pick_cas(&c.sched_view(Mode::Read, now));
+        let v = MemController::view_parts(
+            &c.device,
+            &c.params,
+            &c.read_q,
+            &c.write_q,
+            &c.bank_last_use,
+            Mode::Read,
+            now,
+        );
+        let fast = sched_index::pick_cas_indexed(c.sched.policy(), &v, &mut c.index);
+        assert_eq!(fast, oracle, "oracle and indexed hazard verdicts diverge");
+        assert_eq!(oracle.0.map(|p| p.index), Some(1), "hazard-free row hit must be served");
+        // Equal arrivals tie-break identically (neither direction blocks).
+        let mut c = ctrl();
+        c.try_push(wr_req(4, 2, 3, 0, 700)).unwrap();
+        c.try_push(rd_req(5, 2, 3, 0, 700)).unwrap();
+        assert!(!c.head_hazard_blocked(false));
+        assert!(!c.head_hazard_blocked(true));
     }
 
     #[test]

@@ -59,9 +59,55 @@ impl Completion {
     }
 }
 
+/// Does `queue` hold a request to the same DRAM burst as (`addr`,
+/// `arrival`) that arrived strictly earlier?
+///
+/// This is the controller's same-address data-integrity predicate,
+/// shared by its two enforcement points — the head-of-queue hazard test
+/// in the direction state machine (`MemController::head_hazard_blocked`)
+/// and the per-candidate check in the scheduler scans
+/// (`sched::reordered_past_same_addr`) — so the two call sites cannot
+/// drift apart. Ties (equal arrival) do not block: the queues are FIFO
+/// per direction, so an equal-arrival same-address pair can only be the
+/// request itself.
+pub fn older_same_addr<'a, I>(queue: I, addr: DramAddr, arrival: Cycle) -> bool
+where
+    I: IntoIterator<Item = &'a MemRequest>,
+{
+    queue.into_iter().any(|r| r.addr == addr && r.arrival < arrival)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn req(bank: u32, row: u32, col: u32, arrival: Cycle) -> MemRequest {
+        MemRequest {
+            txn_id: 0,
+            is_write: false,
+            addr: DramAddr { bank, row, col },
+            burst_addr: 0,
+            beats: 2,
+            arrival,
+            last_of_txn: true,
+        }
+    }
+
+    #[test]
+    fn older_same_addr_requires_exact_addr_and_strictly_older_arrival() {
+        let a = DramAddr { bank: 1, row: 7, col: 8 };
+        let queue = [req(1, 7, 8, 10), req(1, 7, 16, 5), req(2, 7, 8, 0)];
+        // strictly older same-address entry blocks
+        assert!(older_same_addr(&queue, a, 20));
+        // equal arrival does not (can only be the request itself)
+        assert!(!older_same_addr(&queue, a, 10));
+        assert!(!older_same_addr(&queue, a, 9));
+        // same row/col in another bank, or another col, never matches
+        assert!(!older_same_addr(&queue, DramAddr { bank: 3, row: 7, col: 8 }, 100));
+        assert!(older_same_addr(&queue, DramAddr { bank: 1, row: 7, col: 16 }, 100));
+        // empty queue
+        assert!(!older_same_addr(&[], a, 100));
+    }
 
     #[test]
     fn completion_latency() {

@@ -37,13 +37,21 @@
 //! command-for-command (differential-tested against a frozen copy of
 //! the monolith in `rust/tests/frfcfs_differential.rs`); it is the
 //! default everywhere.
+//!
+//! The scan implementations in this module (`pick_cas_impl` and
+//! friends) are additionally the **frozen oracle** for the indexed
+//! scheduler fast path in [`super::sched_index`]: production ticks run
+//! the incremental indexes, and `ControllerParams::sched_oracle`
+//! selects these scans instead. `rust/tests/sched_index_differential.rs`
+//! pins the two command-for-command, so treat any change here as a
+//! semantic change to both implementations.
 
 use std::collections::VecDeque;
 
 use crate::config::ControllerParams;
 use crate::ddr4::{Cmd, Cycle, DdrDevice};
 
-use super::request::MemRequest;
+use super::request::{older_same_addr, MemRequest};
 
 // The policy *identifier* is a plain config value (like `MappingPolicy`)
 // and lives with the other knobs in `config`; this module implements the
@@ -349,14 +357,16 @@ impl Default for SchedEngine {
 /// Would issuing active-queue entry `i` overtake an older same-address
 /// entry (same queue, or older arrival in the opposite queue)? This is
 /// the data-integrity invariant; it is enforced here, outside any
-/// policy hook, so no policy can reorder same-address requests.
+/// policy hook, so no policy can reorder same-address requests. The
+/// opposite-queue half shares [`older_same_addr`] with the controller's
+/// head-of-queue hazard test; the same-queue half is positional (any
+/// same-address entry ahead of `i` blocks, regardless of arrival tie).
 fn reordered_past_same_addr(v: &SchedView<'_>, i: usize) -> bool {
     let target = v.active[i].addr;
     if v.active.iter().take(i).any(|r| r.addr == target) {
         return true;
     }
-    let my_arrival = v.active[i].arrival;
-    v.other.iter().any(|r| r.addr == target && r.arrival < my_arrival)
+    older_same_addr(v.other, target, v.active[i].arrival)
 }
 
 fn pick_cas_impl(p: &dyn SchedPolicy, v: &SchedView<'_>) -> (Option<CasPick>, Cycle) {

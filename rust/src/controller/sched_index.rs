@@ -1,0 +1,620 @@
+//! Incrementally-indexed scheduler hot path — the production twin of the
+//! scan implementations in [`super::sched`].
+//!
+//! Under saturated traffic every DRAM tick re-runs the scheduler scans:
+//! the same-address hazard check is O(i) per candidate (O(window²) per
+//! `pick_cas`), `pick_prep`'s still-wanted test is another nested window
+//! scan, and `pick_idle_precharge` walks *both* queues per open bank.
+//! This module replaces those per-tick recomputations with indexes
+//! maintained at the queue mutation points (enqueue, CAS removal):
+//!
+//! - **per-address occupancy** (`addr_occ`): per direction, how many
+//!   queued requests target each decoded DRAM burst and the earliest
+//!   arrival among them — the hazard check becomes O(1) (with an exact
+//!   prefix-scan fallback only when the *same queue* holds a duplicate
+//!   address, which a FIFO per direction makes rare);
+//! - **per-(bank,row) wanted counts** (`row_wanted`) over both queues —
+//!   the idle-precharge `wanted` scan and the closed-page
+//!   auto-precharge decision become O(1) lookups;
+//! - **per-bank queued-request counts** (`bank_load`) so bank-granular
+//!   questions skip the hash map entirely for cold banks, and the
+//!   idle-precharge path word-scans the device's SoA
+//!   [`open column`](crate::ddr4::DdrDevice::open_bank_mask) instead of
+//!   striding `0..banks`;
+//! - **per-direction decision memos** (`cas_memo` / `prep_memo`):
+//!   between queue/device mutations the controller is deterministic, so
+//!   a scan that issued nothing caches its candidate set (queue index +
+//!   earliest legal cycle) and consecutive ticks replay the cached
+//!   candidates against the new `now` instead of re-scanning. An
+//!   `epoch` counter bumped at every mutation point (enqueue, any
+//!   command issue, policy swap) invalidates the memos.
+//!
+//! **Exactness contract:** every function here reproduces its scan
+//! oracle *bit for bit* — same pick, same wake hint — for every policy.
+//! The scans stay in-tree as the frozen oracle
+//! (`ControllerParams::sched_oracle` selects them), and
+//! `rust/tests/sched_index_differential.rs` pins the two
+//! command-for-command across all policies, mappings and engines. The
+//! memo replay is sound because everything a scan depends on — row
+//! states, `earliest_issue`, queue contents and order, policy window
+//! (including the `frfcfs-cap` streak), `bank_last_use` — only changes
+//! at an epoch bump; between bumps only `now` advances, and `now`
+//! enters the decision solely through `at <= now` comparisons.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::ddr4::{Cmd, Cycle, DramAddr};
+
+use super::request::MemRequest;
+use super::sched::{CasPick, PrepAction, SchedKind, SchedPolicy, SchedView};
+
+/// Queue occupancy of one decoded DRAM burst address in one direction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct AddrOcc {
+    /// Queued requests with this exact address.
+    count: u32,
+    /// Earliest arrival among them (meaningless when `count == 0`;
+    /// reset to 0 so the index stays canonically comparable).
+    min_arrival: Cycle,
+}
+
+/// An epoch-stamped cached value; valid only while the stamp matches
+/// the index's current epoch (`epoch == 0` is never current).
+#[derive(Debug, Clone, Default)]
+struct Memo<T> {
+    epoch: u64,
+    value: T,
+}
+
+/// Cached `pick_prep` scan result: the deduped ACT and PRE targets with
+/// their earliest legal cycles, exactly as the oracle scan would select
+/// them (the scan picks targets by queue order, then tests legality).
+#[derive(Debug, Clone, Copy, Default)]
+struct PrepTargets {
+    /// First closed-bank target in window order: (bank, row, earliest).
+    act: Option<(u32, u32, Cycle)>,
+    /// First not-still-wanted conflict target: (bank, earliest).
+    pre: Option<(u32, Cycle)>,
+}
+
+/// The incremental scheduling indexes of one controller. Maintained by
+/// [`super::MemController`] at its queue mutation points; consulted by
+/// the `pick_*_indexed` functions below.
+#[derive(Debug, Clone)]
+pub struct SchedIndex {
+    /// Per-address occupancy, `[read, write]` per entry.
+    addr_occ: HashMap<DramAddr, [AddrOcc; 2]>,
+    /// Queued-request count per (bank, row), both directions combined.
+    row_wanted: HashMap<(u32, u32), u32>,
+    /// Queued-request count per bank, `[read, write]`.
+    bank_load: Vec<[u32; 2]>,
+    /// Mutation counter; memos stamped with an older epoch are stale.
+    epoch: u64,
+    /// Cached CAS candidates per direction: (queue index, earliest).
+    cas_memo: [Memo<Vec<(usize, Cycle)>>; 2],
+    /// Cached prep targets per direction.
+    prep_memo: [Memo<PrepTargets>; 2],
+}
+
+impl SchedIndex {
+    /// Empty index for a device with `banks` banks.
+    pub fn new(banks: usize) -> Self {
+        Self {
+            addr_occ: HashMap::new(),
+            row_wanted: HashMap::new(),
+            bank_load: vec![[0; 2]; banks],
+            epoch: 1,
+            cas_memo: Default::default(),
+            prep_memo: Default::default(),
+        }
+    }
+
+    /// Invalidate the decision memos. Called for every mutation that can
+    /// change a scheduling decision: enqueue, any device command issue,
+    /// and a runtime policy swap. (A read↔write mode flip needs no bump:
+    /// the memos are per direction and depend only on queue and device
+    /// state, neither of which a flip touches.)
+    pub fn bump(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Account a request entering its direction's queue.
+    pub fn on_push(&mut self, req: &MemRequest) {
+        let dir = usize::from(req.is_write);
+        let occ = &mut self.addr_occ.entry(req.addr).or_default()[dir];
+        occ.count += 1;
+        if occ.count == 1 || req.arrival < occ.min_arrival {
+            occ.min_arrival = req.arrival;
+        }
+        *self.row_wanted.entry((req.addr.bank, req.addr.row)).or_insert(0) += 1;
+        self.bank_load[req.addr.bank as usize][dir] += 1;
+        self.bump();
+    }
+
+    /// Account a request leaving its direction's queue (CAS issue).
+    /// `remaining` is that direction's queue *after* the removal — the
+    /// minimum-arrival rescan (only needed when the removed request was
+    /// the earliest for its address, i.e. on duplicate addresses) walks
+    /// it once.
+    pub fn on_remove(&mut self, req: &MemRequest, remaining: &VecDeque<MemRequest>) {
+        let dir = usize::from(req.is_write);
+        let mut drop_entry = false;
+        match self.addr_occ.get_mut(&req.addr) {
+            Some(entry) => {
+                let other_count = entry[1 - dir].count;
+                let occ = &mut entry[dir];
+                occ.count -= 1;
+                if occ.count == 0 {
+                    occ.min_arrival = 0;
+                    drop_entry = other_count == 0;
+                } else if req.arrival <= occ.min_arrival {
+                    let rescan = remaining
+                        .iter()
+                        .filter(|r| r.addr == req.addr)
+                        .map(|r| r.arrival)
+                        .min();
+                    match rescan {
+                        Some(m) => occ.min_arrival = m,
+                        None => debug_assert!(false, "count > 0 but no same-addr entry remains"),
+                    }
+                }
+            }
+            None => debug_assert!(false, "removed request was never indexed"),
+        }
+        if drop_entry {
+            self.addr_occ.remove(&req.addr);
+        }
+        match self.row_wanted.get_mut(&(req.addr.bank, req.addr.row)) {
+            Some(c) if *c > 1 => *c -= 1,
+            Some(_) => {
+                self.row_wanted.remove(&(req.addr.bank, req.addr.row));
+            }
+            None => debug_assert!(false, "row_wanted underflow"),
+        }
+        self.bank_load[req.addr.bank as usize][dir] -= 1;
+        self.bump();
+    }
+
+    /// Queued requests (either direction) targeting (bank, row).
+    fn row_wanted(&self, bank: u32, row: u32) -> u32 {
+        let load = self.bank_load[bank as usize];
+        if load[0] + load[1] == 0 {
+            return 0; // cold bank: skip the hash lookup
+        }
+        self.row_wanted.get(&(bank, row)).copied().unwrap_or(0)
+    }
+
+    /// O(1) same-address hazard check, bit-exact with the oracle's
+    /// `reordered_past_same_addr`: would issuing active-queue entry `i`
+    /// overtake an older same-address request? The same-queue half uses
+    /// the occupancy count (a single entry for this address must be the
+    /// candidate itself; duplicates fall back to the oracle's exact
+    /// prefix scan); the other-queue half compares against the indexed
+    /// minimum arrival.
+    fn hazard(&self, v: &SchedView<'_>, i: usize) -> bool {
+        let req = &v.active[i];
+        let dir = usize::from(v.is_write);
+        let Some(occ) = self.addr_occ.get(&req.addr) else {
+            debug_assert!(false, "queued request missing from addr index");
+            return false;
+        };
+        if occ[dir].count >= 2 && v.active.iter().take(i).any(|r| r.addr == req.addr) {
+            return true;
+        }
+        let other = occ[1 - dir];
+        other.count > 0 && other.min_arrival < req.arrival
+    }
+
+    /// Validate every index against a from-scratch recount of the queues
+    /// (test support; panics on divergence).
+    #[doc(hidden)]
+    pub fn assert_consistent(&self, read_q: &VecDeque<MemRequest>, write_q: &VecDeque<MemRequest>) {
+        let mut addr_occ: HashMap<DramAddr, [AddrOcc; 2]> = HashMap::new();
+        let mut row_wanted: HashMap<(u32, u32), u32> = HashMap::new();
+        let mut bank_load: Vec<[u32; 2]> = vec![[0; 2]; self.bank_load.len()];
+        for r in read_q.iter().chain(write_q.iter()) {
+            let dir = usize::from(r.is_write);
+            let occ = &mut addr_occ.entry(r.addr).or_default()[dir];
+            occ.count += 1;
+            if occ.count == 1 || r.arrival < occ.min_arrival {
+                occ.min_arrival = r.arrival;
+            }
+            *row_wanted.entry((r.addr.bank, r.addr.row)).or_insert(0) += 1;
+            bank_load[r.addr.bank as usize][dir] += 1;
+        }
+        assert_eq!(self.addr_occ, addr_occ, "addr_occ diverged from queue recount");
+        assert_eq!(self.row_wanted, row_wanted, "row_wanted diverged from queue recount");
+        assert_eq!(self.bank_load, bank_load, "bank_load diverged from queue recount");
+    }
+}
+
+/// Auto-precharge decision for the picked CAS. The closed-page policy's
+/// hook scans both full queues for another same-(bank,row) request; the
+/// wanted-count index answers that in O(1) (the count includes the
+/// picked request itself, so "another exists" is `count >= 2`). Every
+/// other policy's hook is queue-independent and dispatches unchanged.
+fn auto_pre(p: &dyn SchedPolicy, v: &SchedView<'_>, idx: &SchedIndex, i: usize) -> bool {
+    match p.kind() {
+        SchedKind::Closed => {
+            let a = v.active[i].addr;
+            idx.row_wanted(a.bank, a.row) < 2
+        }
+        _ => p.auto_precharge(v, i),
+    }
+}
+
+/// Indexed twin of the oracle's `pick_cas` scan: first legal row hit in
+/// the policy window that does not overtake an older same-address
+/// request; on no pick, the earliest cycle a scanned candidate becomes
+/// legal. Consecutive no-pick ticks replay the memoized candidate set.
+pub fn pick_cas_indexed(
+    p: &dyn SchedPolicy,
+    v: &SchedView<'_>,
+    idx: &mut SchedIndex,
+) -> (Option<CasPick>, Cycle) {
+    let dir = usize::from(v.is_write);
+    if idx.cas_memo[dir].epoch == idx.epoch {
+        let mut wake = Cycle::MAX;
+        let mut hit = None;
+        for &(i, at) in &idx.cas_memo[dir].value {
+            if at <= v.now {
+                hit = Some(i);
+                break;
+            }
+            wake = wake.min(at);
+        }
+        return match hit {
+            Some(i) => (Some(CasPick { index: i, auto_pre: auto_pre(p, v, idx, i) }), v.now),
+            None => (None, wake),
+        };
+    }
+    let look = p.window(v.params, v.is_write);
+    // reuse the stale memo's buffer; re-stamped below only on a no-pick
+    let mut cands = std::mem::take(&mut idx.cas_memo[dir].value);
+    cands.clear();
+    let mut wake = Cycle::MAX;
+    let mut pick = None;
+    for (i, req) in v.active.iter().take(look).enumerate() {
+        if v.device.row_state(req.addr.bank, req.addr.row) != Some(true) {
+            continue;
+        }
+        if idx.hazard(v, i) {
+            continue; // hazard: cleared by a future issue (epoch bump)
+        }
+        let cmd = if v.is_write {
+            Cmd::Wr { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+        } else {
+            Cmd::Rd { bank: req.addr.bank, col: req.addr.col, auto_pre: false }
+        };
+        let at = v.device.earliest_issue(cmd);
+        if at <= v.now {
+            pick = Some(i);
+            break;
+        }
+        cands.push((i, at));
+        wake = wake.min(at);
+    }
+    // A pick leads to an issue (epoch bump), so its partial candidate
+    // list must not be replayed: stamp 0 (never current) to keep only
+    // the buffer capacity.
+    let epoch = if pick.is_some() { 0 } else { idx.epoch };
+    idx.cas_memo[dir] = Memo { epoch, value: cands };
+    match pick {
+        Some(i) => (Some(CasPick { index: i, auto_pre: auto_pre(p, v, idx, i) }), v.now),
+        None => (None, wake),
+    }
+}
+
+/// One O(window) pass replacing the oracle scan's nested still-wanted
+/// test: per bank, the earliest arrival of an open-row hit inside the
+/// window. "An older request still hits this bank's open row" is then
+/// `hit_min_arrival[bank] < req.arrival`.
+fn scan_prep_targets(p: &dyn SchedPolicy, v: &SchedView<'_>) -> PrepTargets {
+    let look = p.window(v.params, v.is_write);
+    let mut hit_arr = [Cycle::MAX; 64]; // device asserts banks <= 64
+    for req in v.active.iter().take(look) {
+        if v.device.row_state(req.addr.bank, req.addr.row) == Some(true) {
+            let e = &mut hit_arr[req.addr.bank as usize];
+            *e = (*e).min(req.arrival);
+        }
+    }
+    let mut seen_banks = 0u64;
+    let mut act = None;
+    let mut pre = None;
+    for req in v.active.iter().take(look) {
+        let bit = 1u64 << req.addr.bank;
+        if seen_banks & bit != 0 {
+            continue;
+        }
+        seen_banks |= bit;
+        match v.device.row_state(req.addr.bank, req.addr.row) {
+            None => {
+                if act.is_none() {
+                    let at = v.device.earliest_issue(Cmd::Act {
+                        bank: req.addr.bank,
+                        row: req.addr.row,
+                    });
+                    act = Some((req.addr.bank, req.addr.row, at));
+                }
+            }
+            Some(false) => {
+                let still_wanted = hit_arr[req.addr.bank as usize] < req.arrival;
+                if !still_wanted && pre.is_none() {
+                    let at = v.device.earliest_issue(Cmd::Pre { bank: req.addr.bank });
+                    pre = Some((req.addr.bank, at));
+                }
+            }
+            Some(true) => {}
+        }
+    }
+    PrepTargets { act, pre }
+}
+
+/// Indexed twin of the oracle's `pick_prep` scan: ACT the first closed
+/// bank in the window, else PRE the first conflict whose open row no
+/// older window entry still wants. The target selection is memoized
+/// across no-issue ticks; legality is re-tested against the new `now`.
+pub fn pick_prep_indexed(
+    p: &dyn SchedPolicy,
+    v: &SchedView<'_>,
+    idx: &mut SchedIndex,
+) -> (Option<PrepAction>, Cycle) {
+    let dir = usize::from(v.is_write);
+    let targets = if idx.prep_memo[dir].epoch == idx.epoch {
+        idx.prep_memo[dir].value
+    } else {
+        let t = scan_prep_targets(p, v);
+        // Safe to stamp even when an action follows: the resulting
+        // issue bumps the epoch before the memo could be replayed.
+        idx.prep_memo[dir] = Memo { epoch: idx.epoch, value: t };
+        t
+    };
+    let mut wake = Cycle::MAX;
+    if let Some((bank, row, at)) = targets.act {
+        if at <= v.now {
+            return (Some(PrepAction::Act { bank, row }), v.now);
+        }
+        wake = wake.min(at);
+    }
+    if let Some((bank, at)) = targets.pre {
+        let cmd = Cmd::Pre { bank };
+        if at <= v.now && v.device.can_issue(cmd, v.now) {
+            return (Some(PrepAction::Pre { bank }), v.now);
+        }
+        wake = wake.min(at);
+    }
+    (None, wake)
+}
+
+/// Indexed twin of the oracle's `pick_idle_precharge` scan: word-scan
+/// the device's SoA open column (ascending bank order, matching the
+/// oracle's `0..banks` walk) and answer "does any queued request still
+/// want this row" from the wanted-count index. Already O(open banks)
+/// with O(1) per bank, so it takes no memo. Wanted rows contribute no
+/// wake, exactly like the oracle (the wake source for them is the
+/// enqueue/issue that changes the index, which sets `dirty`/bumps).
+pub fn pick_idle_precharge_indexed(
+    p: &dyn SchedPolicy,
+    v: &SchedView<'_>,
+    idx: &SchedIndex,
+) -> (Option<u32>, Cycle) {
+    let timer = p.idle_timer(v.params);
+    if timer == 0 {
+        return (None, Cycle::MAX);
+    }
+    let mut wake = Cycle::MAX;
+    let mut mask = v.device.open_bank_mask();
+    while mask != 0 {
+        let bank = mask.trailing_zeros();
+        mask &= mask - 1;
+        let expires = v.bank_last_use[bank as usize] + timer as Cycle;
+        if v.now < expires {
+            wake = wake.min(expires);
+            continue;
+        }
+        let open_row = match v.device.bank(bank).open_row {
+            Some(row) => row,
+            None => {
+                debug_assert!(false, "open_bank_mask bit set on a closed bank");
+                continue;
+            }
+        };
+        if idx.row_wanted(bank, open_row) > 0 {
+            continue;
+        }
+        let cmd = Cmd::Pre { bank };
+        let at = v.device.earliest_issue(cmd);
+        if at <= v.now && v.device.can_issue(cmd, v.now) {
+            return (Some(bank), v.now);
+        }
+        wake = wake.min(at);
+    }
+    (None, wake)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ControllerParams, SpeedBin};
+    use crate::controller::sched::SchedEngine;
+    use crate::ddr4::{DdrDevice, DramGeometry, TimingParams};
+    use crate::rng::SplitMix64;
+
+    fn req(is_write: bool, bank: u32, row: u32, col: u32, arrival: Cycle) -> MemRequest {
+        MemRequest {
+            txn_id: arrival,
+            is_write,
+            addr: DramAddr { bank, row, col },
+            burst_addr: (u64::from(bank) << 40) | (u64::from(row) << 20) | u64::from(col),
+            beats: 2,
+            arrival,
+            last_of_txn: true,
+        }
+    }
+
+    fn random_req(rng: &mut SplitMix64, arrival: Cycle) -> MemRequest {
+        // a handful of banks/rows/cols so duplicates and conflicts occur
+        req(
+            rng.percent(40),
+            rng.below(8) as u32,
+            rng.below(4) as u32,
+            (rng.below(16) * 8) as u32,
+            arrival,
+        )
+    }
+
+    fn rebuild_index(read_q: &VecDeque<MemRequest>, write_q: &VecDeque<MemRequest>) -> SchedIndex {
+        let mut idx = SchedIndex::new(8);
+        for r in read_q.iter().chain(write_q.iter()) {
+            idx.on_push(r);
+        }
+        idx
+    }
+
+    #[test]
+    fn occupancy_index_tracks_push_and_remove() {
+        let mut rng = SplitMix64::new(0x5eed);
+        for _ in 0..50 {
+            let mut read_q: VecDeque<MemRequest> = VecDeque::new();
+            let mut write_q: VecDeque<MemRequest> = VecDeque::new();
+            let mut idx = SchedIndex::new(8);
+            for step in 0..200u64 {
+                if rng.percent(60) || (read_q.is_empty() && write_q.is_empty()) {
+                    let r = random_req(&mut rng, step);
+                    let q = if r.is_write { &mut write_q } else { &mut read_q };
+                    q.push_back(r);
+                    idx.on_push(&r);
+                } else {
+                    let from_write = if read_q.is_empty() {
+                        true
+                    } else if write_q.is_empty() {
+                        false
+                    } else {
+                        rng.percent(50)
+                    };
+                    let q = if from_write { &mut write_q } else { &mut read_q };
+                    let at = rng.below(q.len() as u64) as usize;
+                    let r = q.remove(at).unwrap();
+                    idx.on_remove(&r, if from_write { &write_q } else { &read_q });
+                }
+                idx.assert_consistent(&read_q, &write_q);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_bumps_on_every_mutation() {
+        let mut idx = SchedIndex::new(8);
+        let e0 = idx.epoch;
+        let r = req(false, 1, 2, 8, 5);
+        idx.on_push(&r);
+        assert!(idx.epoch > e0);
+        let e1 = idx.epoch;
+        idx.on_remove(&r, &VecDeque::new());
+        assert!(idx.epoch > e1);
+        let e2 = idx.epoch;
+        idx.bump();
+        assert!(idx.epoch > e2);
+    }
+
+    /// Mini-differential: on randomized device/queue states, every
+    /// indexed pick function must agree with its scan oracle — pick and
+    /// wake hint both — for every policy, including across memo replays
+    /// and mid-state removals. (The full controller/platform pinning
+    /// lives in `rust/tests/sched_index_differential.rs`.)
+    #[test]
+    fn indexed_picks_match_scan_oracle_on_random_states() {
+        let mut rng = SplitMix64::new(0xd1ff);
+        for trial in 0..120u64 {
+            // device with a few open/closed banks and advanced timing state
+            let mut device = DdrDevice::new(
+                TimingParams::for_bin(SpeedBin::Ddr4_1600),
+                DramGeometry::profpga_board(),
+            );
+            let mut now: Cycle = 1;
+            for bank in 0..8u32 {
+                if rng.percent(60) {
+                    let act = Cmd::Act { bank, row: rng.below(4) as u32 };
+                    now = device.earliest_issue(act).max(now + 1);
+                    device.issue(act, now);
+                    if rng.percent(30) {
+                        let rd = Cmd::Rd { bank, col: 0, auto_pre: false };
+                        now = device.earliest_issue(rd).max(now + 1);
+                        device.issue(rd, now);
+                    }
+                }
+            }
+            let mut read_q: VecDeque<MemRequest> = VecDeque::new();
+            let mut write_q: VecDeque<MemRequest> = VecDeque::new();
+            for i in 0..(4 + rng.below(12)) {
+                let r = random_req(&mut rng, now + i);
+                if r.is_write {
+                    write_q.push_back(r);
+                } else {
+                    read_q.push_back(r);
+                }
+            }
+            let params = ControllerParams {
+                lookahead: 1 + rng.below(8) as usize,
+                idle_precharge_cycles: [0u32, 64][rng.below(2) as usize],
+                ..Default::default()
+            };
+            let bank_last_use: Vec<Cycle> =
+                (0..8).map(|_| now.saturating_sub(rng.below(200))).collect();
+            let mut idx = rebuild_index(&read_q, &write_q);
+            for kind in SchedKind::ALL {
+                let engine = SchedEngine::new(kind);
+                // probe a few instants, including replays of one memo
+                for probe in 0..4u64 {
+                    let at = now + probe * 7;
+                    for is_write in [false, true] {
+                        let (active, other) = if is_write {
+                            (&write_q, &read_q)
+                        } else {
+                            (&read_q, &write_q)
+                        };
+                        let v = SchedView {
+                            device: &device,
+                            params: &params,
+                            active,
+                            other,
+                            is_write,
+                            bank_last_use: &bank_last_use,
+                            now: at,
+                        };
+                        let oracle = engine.pick_cas(&v);
+                        let fast = pick_cas_indexed(engine.policy(), &v, &mut idx);
+                        assert_eq!(fast, oracle, "pick_cas {kind} trial {trial} now {at}");
+                        let oracle = engine.pick_prep(&v);
+                        let fast = pick_prep_indexed(engine.policy(), &v, &mut idx);
+                        assert_eq!(fast, oracle, "pick_prep {kind} trial {trial} now {at}");
+                        let oracle = engine.pick_idle_precharge(&v);
+                        let fast = pick_idle_precharge_indexed(engine.policy(), &v, &idx);
+                        assert_eq!(fast, oracle, "idle_pre {kind} trial {trial} now {at}");
+                    }
+                }
+                // a removal must invalidate the memos and keep agreement
+                if !read_q.is_empty() && !write_q.is_empty() {
+                    // (separate clone per policy so policies stay independent)
+                    let mut rq = read_q.clone();
+                    let r = rq.remove(rng.below(rq.len() as u64) as usize).unwrap();
+                    let mut idx2 = idx.clone();
+                    idx2.on_remove(&r, &rq);
+                    idx2.assert_consistent(&rq, &write_q);
+                    let v = SchedView {
+                        device: &device,
+                        params: &params,
+                        active: &rq,
+                        other: &write_q,
+                        is_write: false,
+                        bank_last_use: &bank_last_use,
+                        now: now + 3,
+                    };
+                    let oracle = engine.pick_cas(&v);
+                    let fast = pick_cas_indexed(engine.policy(), &v, &mut idx2);
+                    assert_eq!(fast, oracle, "post-remove pick_cas {kind} trial {trial}");
+                }
+            }
+        }
+    }
+}

@@ -157,6 +157,13 @@ impl DdrDevice {
         self.open_mask.count_ones()
     }
 
+    /// The SoA open column itself: bit `b` is set iff bank `b` has an
+    /// open row. The indexed scheduler's idle-precharge path word-scans
+    /// this instead of striding `0..banks` through `Vec<Bank>`.
+    pub fn open_bank_mask(&self) -> u64 {
+        self.open_mask
+    }
+
     /// The row currently open in `bank`, if any (the command tracer's
     /// row annotation for CAS/PRE events).
     pub fn open_row(&self, bank: u32) -> Option<u32> {

@@ -751,6 +751,11 @@ fn batch_limit(start_axi: u64, cfg: &PatternConfig) -> u64 {
 /// every skipped cycle is one where the canonical body is provably a
 /// no-op, so counters, latencies and per-device command stats are
 /// bit-identical across engines (pinned by `tests/engine_differential`).
+/// The controller's bound holds for both of its scheduler
+/// implementations — the incremental indexes and the frozen scan oracle
+/// compute identical wake hints, and the wake-conservatism property
+/// test in `tests/sched_index_differential` probes every skipped sleep
+/// window against a scan-oracle clone.
 ///
 /// The leap is clamped to `limit` so a wedged batch still trips the
 /// deadlock guard at exactly the same fabric-cycle reading — and with

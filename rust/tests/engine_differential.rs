@@ -141,6 +141,49 @@ fn event_engine_bit_identical_across_mappings() {
 }
 
 #[test]
+fn event_engine_bit_identical_under_deep_queue_knobs() {
+    // The engines must stay locked when the controller runs wide
+    // reorder windows over deep saturated queues — the regime the
+    // indexed scheduler fast path exists for: lookahead up to 32,
+    // depth-64 queues, bank-conflict and pointer-chase streams (plus a
+    // mixed read/write stream so the write queue saturates too).
+    check(
+        "engine differential, deep-queue knobs",
+        3,
+        |rng| {
+            let batch = 192 + rng.below(64) as u32;
+            let mut cfg = match rng.below(3) {
+                0 => PatternConfig::bank_conflict_read(1, batch, rng.next_u64()),
+                1 => PatternConfig::pointer_chase_read(1 << 16, batch, rng.next_u64()),
+                _ => PatternConfig::mixed(AddrMode::Sequential, 4, batch),
+            };
+            if rng.percent(40) {
+                cfg.telemetry = Some(256);
+            }
+            let lookahead = [8usize, 32][rng.below(2) as usize];
+            (cfg, lookahead)
+        },
+        |(cfg, lookahead)| {
+            let mut design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+            design.controller.lookahead = *lookahead;
+            design.controller.read_queue_depth = 64;
+            design.controller.write_queue_depth = 64;
+            design.controller.write_drain_high = 48;
+            design.controller.write_drain_low = 8;
+            let mut cycle = Platform::new(design.clone());
+            design.engine = EngineKind::Event;
+            let mut event = Platform::new(design);
+            for batch in 0..2 {
+                let a = cycle.run_batch(0, cfg).map_err(|e| e.to_string())?;
+                let b = event.run_batch(0, cfg).map_err(|e| e.to_string())?;
+                assert_same(&a, &b, &format!("deep-queue batch {batch}"))?;
+            }
+            Ok(())
+        },
+    )
+}
+
+#[test]
 fn event_engine_bit_identical_on_channel_mixes() {
     check(
         "engine differential across channel mixes",

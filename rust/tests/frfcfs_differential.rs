@@ -417,9 +417,75 @@ impl RefController {
 // The differential driver
 // ------------------------------------------------------------------------
 
+/// Address streams the differential drivers can generate. `Mixed` is
+/// the original pool+uniform stream; the other two are the adversarial
+/// shapes where queue depth and window size matter most — all of one
+/// bank's rows fighting over its row buffer, and a dependent-looking
+/// walk over a small working set (heavy same-address revisits, the
+/// stress case for the indexed scheduler's duplicate-address paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AddrStream {
+    /// Small same-address pool mixed with uniform addresses.
+    Mixed,
+    /// Every request in one bank, hopping across its rows.
+    BankConflict,
+    /// Multiplicative walk over a small region (pointer-chase-like).
+    Chase,
+}
+
+/// Stateful address generator for one [`AddrStream`].
+struct StreamGen {
+    stream: AddrStream,
+    pool: Vec<u64>,
+    row_step: u64,
+    cursor: u64,
+}
+
+impl StreamGen {
+    fn new(stream: AddrStream, geo: &DramGeometry, seed: u64) -> Self {
+        Self {
+            stream,
+            pool: (0..8).map(|i| i * 64).collect(),
+            row_step: geo.row_step_bytes(),
+            cursor: seed | 1,
+        }
+    }
+
+    fn next(&mut self, rng: &mut SplitMix64) -> u64 {
+        match self.stream {
+            AddrStream::Mixed => {
+                if rng.percent(20) {
+                    self.pool[rng.below(self.pool.len() as u64) as usize]
+                } else {
+                    rng.below(1 << 22) * 64
+                }
+            }
+            // same bank (the lowest mapping field stays 0), 512 rows
+            AddrStream::BankConflict => rng.below(1 << 9) * self.row_step,
+            AddrStream::Chase => {
+                self.cursor = self.cursor.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (self.cursor >> 16) % (1 << 12) * 64
+            }
+        }
+    }
+}
+
 /// Drive both controllers with an identical randomized request stream and
 /// compare every tick's command and every completion.
 fn run_differential(seed: u64, params: ControllerParams, cycles: u64) -> Result<(), String> {
+    run_differential_stream(seed, params, cycles, AddrStream::Mixed, 35)
+}
+
+/// [`run_differential`] with a selectable address stream and push rate
+/// (percent chance of an enqueue attempt per cycle — high rates keep
+/// deep queues saturated so wide windows actually fill).
+fn run_differential_stream(
+    seed: u64,
+    params: ControllerParams,
+    cycles: u64,
+    stream: AddrStream,
+    push_pct: u32,
+) -> Result<(), String> {
     let geo = DramGeometry::profpga_board();
     let timing = TimingParams::for_bin(SpeedBin::Ddr4_1600);
     let mut new_ctrl = MemController::new(params, timing, geo);
@@ -427,18 +493,14 @@ fn run_differential(seed: u64, params: ControllerParams, cycles: u64) -> Result<
     let mut rng = SplitMix64::new(seed);
     // a small pool mixed with uniform addresses forces same-address
     // hazards through both schedulers
-    let pool: Vec<u64> = (0..8).map(|i| i * 64).collect();
+    let mut gen = StreamGen::new(stream, &geo, seed);
     let mut id = 0u64;
     let mut done_new: Vec<Completion> = Vec::new();
     let mut done_ref: Vec<Completion> = Vec::new();
     for now in 0..cycles {
-        if rng.percent(35) {
+        if rng.percent(push_pct) {
             let is_write = rng.percent(40);
-            let addr = if rng.percent(20) {
-                pool[rng.below(pool.len() as u64) as usize]
-            } else {
-                rng.below(1 << 22) * 64
-            };
+            let addr = gen.next(&mut rng);
             let req = MemRequest {
                 txn_id: id,
                 is_write,
@@ -516,6 +578,36 @@ fn frfcfs_differential_holds_across_knob_profiles() {
                 ..Default::default()
             };
             run_differential(seed, params, 40_000)
+        },
+    )
+}
+
+#[test]
+fn frfcfs_differential_deep_queues_saturated() {
+    // The windows where the indexed scheduler earns its keep: depth-64
+    // queues kept brimming (90% push rate) under wide lookahead, on the
+    // adversarial streams — every request to one bank, and a
+    // pointer-chase-like walk thick with same-address revisits. The
+    // oracle must still be matched tick for tick.
+    check(
+        "frfcfs differential, deep saturated queues",
+        6,
+        |rng| {
+            let lookahead = [8usize, 32][rng.below(2) as usize];
+            let stream = [AddrStream::Mixed, AddrStream::BankConflict, AddrStream::Chase]
+                [rng.below(3) as usize];
+            (rng.next_u64(), lookahead, stream)
+        },
+        |&(seed, lookahead, stream)| {
+            let params = ControllerParams {
+                lookahead,
+                read_queue_depth: 64,
+                write_queue_depth: 64,
+                write_drain_high: 48,
+                write_drain_low: 8,
+                ..Default::default()
+            };
+            run_differential_stream(seed, params, 40_000, stream, 90)
         },
     )
 }

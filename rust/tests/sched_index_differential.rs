@@ -1,0 +1,442 @@
+//! Differential pinning of the indexed scheduler fast path against the
+//! frozen scan oracle (`ControllerParams::sched_oracle`).
+//!
+//! Three layers of evidence, all seeded through the in-tree property
+//! kit (`DDR4BENCH_PT_SEED` reproduces any failing run exactly):
+//!
+//! 1. **Controller-level, command for command.** Two `MemController`s
+//!    differing only in the `sched_oracle` flag are driven with
+//!    identical pushes at identical cycles; every tick's issued command
+//!    and every completion must match bit-exactly, for every policy,
+//!    across knob profiles and adversarial address streams, with the
+//!    incremental indexes recounted from scratch along the way.
+//! 2. **Platform-level, every observable.** Whole-platform runs (both
+//!    simulation engines, every built-in address mapping) must produce
+//!    bit-identical counters, telemetry series, latency percentiles and
+//!    device-stat-derived energy whichever scheduler implementation is
+//!    selected.
+//! 3. **Wake conservatism.** Whenever the indexed controller's tick
+//!    fast path decides to sleep to `idle_until`, a scan-oracle clone
+//!    forced to evaluate inside the skipped window must issue nothing —
+//!    the sleep never runs past the first cycle the oracle would act on.
+
+use ddr4bench::config::{
+    AddrMode, ControllerParams, DesignConfig, EngineKind, PatternConfig, SchedKind, SpeedBin,
+};
+use ddr4bench::controller::{Completion, MemController, MemRequest};
+use ddr4bench::ddr4::{Cycle, DramGeometry, MappingPolicy, TimingParams};
+use ddr4bench::platform::Platform;
+use ddr4bench::rng::SplitMix64;
+use ddr4bench::stats::BatchStats;
+use ddr4bench::testkit::check;
+
+// ------------------------------------------------------------------------
+// Controller-level differential: indexed vs oracle, tick for tick
+// ------------------------------------------------------------------------
+
+/// Address streams for the controller-level driver (mirrors the
+/// generator in `frfcfs_differential.rs`; test binaries cannot share
+/// code). `Chase` is the duplicate-address stress case for the indexed
+/// occupancy paths; `BankConflict` keeps one bank's row buffer thrashing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AddrStream {
+    /// Small same-address pool mixed with uniform addresses.
+    Mixed,
+    /// Every request in one bank, hopping across its rows.
+    BankConflict,
+    /// Multiplicative walk over a small region (pointer-chase-like).
+    Chase,
+}
+
+struct StreamGen {
+    stream: AddrStream,
+    pool: Vec<u64>,
+    row_step: u64,
+    cursor: u64,
+}
+
+impl StreamGen {
+    fn new(stream: AddrStream, geo: &DramGeometry, seed: u64) -> Self {
+        Self {
+            stream,
+            pool: (0..8).map(|i| i * 64).collect(),
+            row_step: geo.row_step_bytes(),
+            cursor: seed | 1,
+        }
+    }
+
+    fn next(&mut self, rng: &mut SplitMix64) -> u64 {
+        match self.stream {
+            AddrStream::Mixed => {
+                if rng.percent(20) {
+                    self.pool[rng.below(self.pool.len() as u64) as usize]
+                } else {
+                    rng.below(1 << 22) * 64
+                }
+            }
+            AddrStream::BankConflict => rng.below(1 << 9) * self.row_step,
+            AddrStream::Chase => {
+                self.cursor = self.cursor.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (self.cursor >> 16) % (1 << 12) * 64
+            }
+        }
+    }
+}
+
+/// Drive an indexed controller and a scan-oracle controller with an
+/// identical randomized request stream; compare every tick's command,
+/// every completion, and the final controller/device statistics. The
+/// indexed controller's incremental indexes are also recounted from
+/// scratch periodically.
+fn run_controller_differential(
+    seed: u64,
+    params: ControllerParams,
+    cycles: u64,
+    stream: AddrStream,
+    push_pct: u32,
+) -> Result<(), String> {
+    let geo = DramGeometry::profpga_board();
+    let timing = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+    let idx_params = ControllerParams { sched_oracle: false, ..params };
+    let ora_params = ControllerParams { sched_oracle: true, ..params };
+    let mut indexed = MemController::new(idx_params, timing, geo);
+    let mut oracle = MemController::new(ora_params, timing, geo);
+    let mut rng = SplitMix64::new(seed);
+    let mut gen = StreamGen::new(stream, &geo, seed);
+    let mut id = 0u64;
+    let mut done_idx: Vec<Completion> = Vec::new();
+    let mut done_ora: Vec<Completion> = Vec::new();
+    for now in 0..cycles {
+        if rng.percent(push_pct) {
+            let is_write = rng.percent(40);
+            let addr = gen.next(&mut rng);
+            let req = MemRequest {
+                txn_id: id,
+                is_write,
+                addr: geo.decode(addr),
+                burst_addr: addr,
+                beats: 2,
+                arrival: now,
+                last_of_txn: true,
+            };
+            let a = indexed.try_push(req);
+            let b = oracle.try_push(req);
+            if a.is_ok() != b.is_ok() {
+                return Err(format!(
+                    "cycle {now}: push divergence (indexed {:?} vs oracle {:?})",
+                    a.is_ok(),
+                    b.is_ok()
+                ));
+            }
+            if a.is_ok() {
+                id += 1;
+            }
+        }
+        let ca = indexed.tick(now);
+        let cb = oracle.tick(now);
+        if ca != cb {
+            return Err(format!("cycle {now}: command divergence {ca:?} vs {cb:?}"));
+        }
+        indexed.pop_completions(now, &mut done_idx);
+        oracle.pop_completions(now, &mut done_ora);
+        if done_idx.len() != done_ora.len() {
+            return Err(format!(
+                "cycle {now}: completion count divergence {} vs {}",
+                done_idx.len(),
+                done_ora.len()
+            ));
+        }
+        if now % 1024 == 0 {
+            indexed.debug_assert_index_consistent();
+        }
+    }
+    if done_idx != done_ora {
+        return Err("completion streams diverge".into());
+    }
+    if done_idx.is_empty() {
+        return Err("differential run serviced no requests".into());
+    }
+    let (si, so) = (indexed.stats(), oracle.stats());
+    if si.refresh_stall_cycles != so.refresh_stall_cycles
+        || si.mode_switches != so.mode_switches
+        || si.queue_rejects != so.queue_rejects
+    {
+        return Err(format!("controller stats diverge\n  indexed: {si:?}\n  oracle: {so:?}"));
+    }
+    if indexed.device().stats() != oracle.device().stats() {
+        return Err(format!(
+            "device command stats diverge\n  indexed: {:?}\n  oracle: {:?}",
+            indexed.device().stats(),
+            oracle.device().stats()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn indexed_scheduler_matches_scan_oracle_for_every_policy() {
+    check(
+        "sched index differential across policies and knobs",
+        5,
+        |rng| {
+            let lookahead = [1usize, 4, 8, 32][rng.below(4) as usize];
+            let idle = [0u32, 64][rng.below(2) as usize];
+            let dwell = [8u32, 48][rng.below(2) as usize];
+            let stream = [AddrStream::Mixed, AddrStream::BankConflict, AddrStream::Chase]
+                [rng.below(3) as usize];
+            (rng.next_u64(), lookahead, idle, dwell, stream)
+        },
+        |&(seed, lookahead, idle, dwell, stream)| {
+            for sched in SchedKind::ALL {
+                let params = ControllerParams {
+                    sched,
+                    lookahead,
+                    idle_precharge_cycles: idle,
+                    mode_dwell_ck: dwell,
+                    ..Default::default()
+                };
+                run_controller_differential(seed, params, 25_000, stream, 60)
+                    .map_err(|e| format!("{sched}: {e}"))?;
+            }
+            Ok(())
+        },
+    )
+}
+
+#[test]
+fn indexed_scheduler_matches_scan_oracle_on_deep_saturated_queues() {
+    // the regime the indexes exist for: depth-64 queues kept brimming
+    // under wide reorder windows, on the adversarial streams
+    check(
+        "sched index differential, deep saturated queues",
+        4,
+        |rng| {
+            let lookahead = [8usize, 32][rng.below(2) as usize];
+            let stream = [AddrStream::Mixed, AddrStream::BankConflict, AddrStream::Chase]
+                [rng.below(3) as usize];
+            (rng.next_u64(), lookahead, stream)
+        },
+        |&(seed, lookahead, stream)| {
+            for sched in SchedKind::ALL {
+                let params = ControllerParams {
+                    sched,
+                    lookahead,
+                    read_queue_depth: 64,
+                    write_queue_depth: 64,
+                    write_drain_high: 48,
+                    write_drain_low: 8,
+                    ..Default::default()
+                };
+                run_controller_differential(seed, params, 30_000, stream, 90)
+                    .map_err(|e| format!("{sched}: {e}"))?;
+            }
+            Ok(())
+        },
+    )
+}
+
+// ------------------------------------------------------------------------
+// Platform-level differential: every observable, both engines
+// ------------------------------------------------------------------------
+
+/// Every observable of two batches must match bit for bit (same contract
+/// as the engine differential: counters, telemetry, percentiles through
+/// their bit patterns, and the device-stat-derived energy breakdown).
+fn assert_same(a: &BatchStats, b: &BatchStats, what: &str) -> Result<(), String> {
+    if a.counters != b.counters {
+        return Err(format!(
+            "{what}: counters diverge\n  indexed: {:?}\n  oracle: {:?}",
+            a.counters, b.counters
+        ));
+    }
+    if a.telemetry != b.telemetry {
+        return Err(format!(
+            "{what}: telemetry series diverge\n  indexed: {:?}\n  oracle: {:?}",
+            a.telemetry, b.telemetry
+        ));
+    }
+    for pct in [50.0, 90.0, 95.0, 99.0] {
+        let (ra, rb) = (a.read_latency_pct_ns(pct), b.read_latency_pct_ns(pct));
+        if ra.to_bits() != rb.to_bits() {
+            return Err(format!("{what}: read p{pct} diverges ({ra} vs {rb})"));
+        }
+        let (wa, wb) = (a.write_latency_pct_ns(pct), b.write_latency_pct_ns(pct));
+        if wa.to_bits() != wb.to_bits() {
+            return Err(format!("{what}: write p{pct} diverges ({wa} vs {wb})"));
+        }
+    }
+    let ea = [
+        a.energy.activate_nj,
+        a.energy.read_nj,
+        a.energy.write_nj,
+        a.energy.refresh_nj,
+        a.energy.background_nj,
+    ];
+    let eb = [
+        b.energy.activate_nj,
+        b.energy.read_nj,
+        b.energy.write_nj,
+        b.energy.refresh_nj,
+        b.energy.background_nj,
+    ];
+    if ea.iter().zip(&eb).any(|(x, y)| x.to_bits() != y.to_bits()) {
+        return Err(format!("{what}: device-stat-derived energy diverges ({ea:?} vs {eb:?})"));
+    }
+    Ok(())
+}
+
+/// Run `cfg` on an indexed platform and a scan-oracle platform — two
+/// batches each, so the second starts on an engine-advanced clock — and
+/// compare every observable.
+fn run_platform_differential(
+    cfg: &PatternConfig,
+    sched: SchedKind,
+    mapping: MappingPolicy,
+    engine: EngineKind,
+    lookahead: usize,
+) -> Result<(), String> {
+    let mut design = DesignConfig::single_channel(SpeedBin::Ddr4_1600);
+    design.controller.sched = sched;
+    design.controller.lookahead = lookahead;
+    design.controller.read_queue_depth = 64;
+    design.controller.write_queue_depth = 64;
+    design.controller.write_drain_high = 48;
+    design.controller.write_drain_low = 8;
+    design.geometry.mapping = mapping;
+    design.engine = engine;
+    let mut indexed = Platform::new(design.clone());
+    design.controller.sched_oracle = true;
+    let mut oracle = Platform::new(design);
+    for batch in 0..2 {
+        let a = indexed.run_batch(0, cfg).map_err(|e| e.to_string())?;
+        let b = oracle.run_batch(0, cfg).map_err(|e| e.to_string())?;
+        assert_same(&a, &b, &format!("batch {batch}"))?;
+    }
+    Ok(())
+}
+
+/// Deep-queue-leaning pattern draw for the platform differential.
+fn deep_pattern(rng: &mut SplitMix64) -> (PatternConfig, usize) {
+    let batch = 128 + rng.below(128) as u32;
+    let mut cfg = match rng.below(3) {
+        0 => PatternConfig::bank_conflict_read(1, batch, rng.next_u64()),
+        1 => PatternConfig::pointer_chase_read(1 << 16, batch, rng.next_u64()),
+        _ => PatternConfig::mixed(AddrMode::Sequential, 4, batch),
+    };
+    if rng.percent(40) {
+        cfg.telemetry = Some(256);
+    }
+    let lookahead = [8usize, 32][rng.below(2) as usize];
+    (cfg, lookahead)
+}
+
+#[test]
+fn indexed_platform_bit_identical_across_policies_and_engines() {
+    check("platform sched index differential across policies", 3, deep_pattern, |(cfg, la)| {
+        for sched in SchedKind::ALL {
+            for engine in EngineKind::ALL {
+                run_platform_differential(cfg, sched, MappingPolicy::row_col_bank(), engine, *la)
+                    .map_err(|e| format!("{sched}/{engine:?}: {e}"))?;
+            }
+        }
+        Ok(())
+    })
+}
+
+#[test]
+fn indexed_platform_bit_identical_across_mappings() {
+    check("platform sched index differential across mappings", 2, deep_pattern, |(cfg, la)| {
+        for mapping in MappingPolicy::builtins() {
+            for engine in EngineKind::ALL {
+                run_platform_differential(cfg, SchedKind::FrFcfs, mapping, engine, *la)
+                    .map_err(|e| format!("{mapping}/{engine:?}: {e}"))?;
+            }
+        }
+        Ok(())
+    })
+}
+
+// ------------------------------------------------------------------------
+// Wake conservatism: idle_until never sleeps past the first oracle issue
+// ------------------------------------------------------------------------
+
+#[test]
+fn fast_path_sleep_never_skips_an_oracle_issue() {
+    // Whenever the indexed controller decides to sleep (tick fast path),
+    // force a scan-oracle clone to run a full evaluation at cycles
+    // inside the skipped window: it must issue nothing there. Each probe
+    // clones the post-tick state afresh, because in real execution the
+    // skipped cycles run no scheduler logic at all (not even the mode
+    // automaton).
+    check(
+        "idle_until wake conservatism vs scan oracle",
+        4,
+        |rng| {
+            let sched = SchedKind::ALL[rng.below(5) as usize];
+            let idle = [0u32, 64][rng.below(2) as usize];
+            (rng.next_u64(), sched, idle)
+        },
+        |&(seed, sched, idle)| {
+            let params =
+                ControllerParams { sched, idle_precharge_cycles: idle, ..Default::default() };
+            let geo = DramGeometry::profpga_board();
+            let timing = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+            let mut c = MemController::new(params, timing, geo);
+            let mut rng = SplitMix64::new(seed);
+            let mut gen = StreamGen::new(AddrStream::Mixed, &geo, seed);
+            let mut id = 0u64;
+            let mut done: Vec<Completion> = Vec::new();
+            let mut probes = 0u32;
+            let mut windows = 0u32;
+            for now in 0..30_000u64 {
+                // low push rate: long idle gaps are where the fast path sleeps
+                if rng.percent(8) {
+                    let addr = gen.next(&mut rng);
+                    let req = MemRequest {
+                        txn_id: id,
+                        is_write: rng.percent(40),
+                        addr: geo.decode(addr),
+                        burst_addr: addr,
+                        beats: 2,
+                        arrival: now,
+                        last_of_txn: true,
+                    };
+                    if c.try_push(req).is_ok() {
+                        id += 1;
+                    }
+                }
+                c.tick(now);
+                c.pop_completions(now, &mut done);
+                if probes >= 2_500 {
+                    continue;
+                }
+                let Some(until) = c.debug_sleep_until() else { continue };
+                if until <= now + 1 {
+                    continue;
+                }
+                windows += 1;
+                // probe the front of the skipped window plus its last cycle
+                let first = now + 1;
+                let mut ts: Vec<Cycle> = (first..until.min(first + 6)).collect();
+                if until - 1 >= first + 6 {
+                    ts.push(until - 1);
+                }
+                for t in ts {
+                    let mut probe = c.clone();
+                    probe.debug_set_oracle(true);
+                    if let Some(cmd) = probe.debug_force_eval(t) {
+                        return Err(format!(
+                            "cycle {now}: fast path sleeps to {until}, \
+                             but the oracle issues {cmd:?} at skipped cycle {t}"
+                        ));
+                    }
+                    probes += 1;
+                }
+            }
+            if windows == 0 {
+                return Err("run produced no sleep windows to probe".into());
+            }
+            Ok(())
+        },
+    )
+}
