@@ -1,0 +1,614 @@
+//! Independent shadow replay of a DRAM command stream against the
+//! declarative rulebook.
+//!
+//! The auditor consumes [`crate::obs::cmdtrace::TraceEvent`]s — either
+//! live off the controller's `issue_cmd` funnel or offline from a trace
+//! CSV — and re-derives bank state from nothing but the events
+//! themselves. It shares *no* code with `ddr4::bank` / `ddr4::device`:
+//! every bound comes from [`Rulebook`], every state transition from this
+//! file. A controller bug therefore has to be mirrored here, in a
+//! second unrelated encoding of JEDEC, to go unreported.
+//!
+//! Recovery model: after reporting a violation the auditor *adopts* the
+//! event's implied state (the ACT opens the row, the early CAS still
+//! reads it) so one bad command yields one violation, not a cascade.
+//!
+//! Truncated streams: when the bounded trace ring dropped events, the
+//! stream has no prefix, so banks start in an `Unknown` state and checks
+//! that need unseen history are skipped (adopt-on-first-sight). A
+//! truncated stream can still *fail* an audit, but it can never be
+//! certified clean — see [`super::report`].
+
+use std::collections::BTreeMap;
+
+use crate::ddr4::timing::TimingParams;
+use crate::ddr4::Cycle;
+use crate::obs::cmdtrace::{TraceCmd, TraceEvent};
+
+use super::rules::{RuleId, Rulebook};
+
+/// How the stream being audited begins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamStart {
+    /// The stream starts at cycle 0 of the run: banks are known closed
+    /// and every rule applies from the first event.
+    Complete,
+    /// The stream lost its prefix (trace-ring overflow): bank state is
+    /// unknown until first sight and prefix-dependent checks are skipped.
+    Truncated,
+}
+
+/// One detected protocol violation.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Which rule was broken.
+    pub rule: RuleId,
+    /// Cycle of the offending command.
+    pub cycle: Cycle,
+    /// Bank group of the offending command (0 for REF).
+    pub bank_group: u32,
+    /// Bank within the group (0 for REF).
+    pub bank: u32,
+    /// Human-readable specifics: observed gap vs required bound.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} @{} bg{} b{}: {}",
+            self.rule.id(),
+            self.cycle,
+            self.bank_group,
+            self.bank,
+            self.detail
+        )
+    }
+}
+
+/// Per-bank shadow row state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RowState {
+    /// Truncated stream, bank not yet observed.
+    Unknown,
+    /// Precharged.
+    Closed,
+    /// Activated with this row.
+    Open(u32),
+}
+
+#[derive(Debug, Clone)]
+struct BankShadow {
+    row: RowState,
+    last_act: Option<Cycle>,
+    last_rd: Option<Cycle>,
+    last_wr: Option<Cycle>,
+    /// When the most recent precharge of this bank *completes* issuing:
+    /// the explicit PRE cycle, or the implicit precharge point of an
+    /// RDA/WRA (which may lie in the future of the CAS).
+    last_pre: Option<Cycle>,
+}
+
+impl BankShadow {
+    fn new(start: StreamStart) -> Self {
+        Self {
+            row: match start {
+                StreamStart::Complete => RowState::Closed,
+                StreamStart::Truncated => RowState::Unknown,
+            },
+            last_act: None,
+            last_rd: None,
+            last_wr: None,
+            last_pre: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct GroupShadow {
+    last_act: Option<Cycle>,
+    last_cas: Option<Cycle>,
+}
+
+/// Violations stored verbatim; beyond this only the per-rule counters
+/// keep counting (a broken stream can violate millions of times).
+pub const MAX_STORED_VIOLATIONS: usize = 64;
+
+/// The shadow state machine. Feed it every [`TraceEvent`] of one channel
+/// in cycle order, then read the verdict.
+#[derive(Debug, Clone)]
+pub struct Auditor {
+    rules: Rulebook,
+    start: StreamStart,
+    banks: BTreeMap<(u32, u32), BankShadow>,
+    groups: BTreeMap<u32, GroupShadow>,
+    /// Cycles of up to the last four ACTs, oldest first (tFAW window).
+    act_window: Vec<Cycle>,
+    last_act_any: Option<Cycle>,
+    last_cas_any: Option<Cycle>,
+    last_rd_cas: Option<Cycle>,
+    /// Most recent WR CAS: (cycle, bank group) — group picks tWTR_S vs _L.
+    last_wr_cas: Option<(Cycle, u32)>,
+    last_ref: Option<Cycle>,
+    first_cycle: Option<Cycle>,
+    last_cycle: Option<Cycle>,
+    events: u64,
+    counts: [u64; RuleId::ALL.len()],
+    total: u64,
+    stored: Vec<Violation>,
+}
+
+impl Auditor {
+    /// Build an auditor for one channel: derive the rulebook from the
+    /// timing table and reset all shadow state.
+    pub fn new(timing: &TimingParams, start: StreamStart) -> Self {
+        Self {
+            rules: Rulebook::from_timing(timing),
+            start,
+            banks: BTreeMap::new(),
+            groups: BTreeMap::new(),
+            act_window: Vec::with_capacity(4),
+            last_act_any: None,
+            last_cas_any: None,
+            last_rd_cas: None,
+            last_wr_cas: None,
+            last_ref: None,
+            first_cycle: None,
+            last_cycle: None,
+            events: 0,
+            counts: [0; RuleId::ALL.len()],
+            total: 0,
+            stored: Vec::new(),
+        }
+    }
+
+    /// The derived rulebook this auditor enforces.
+    pub fn rulebook(&self) -> &Rulebook {
+        &self.rules
+    }
+
+    /// How the stream was assumed to begin.
+    pub fn start(&self) -> StreamStart {
+        self.start
+    }
+
+    /// Events observed so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Total violations detected (including any beyond the storage cap).
+    pub fn total_violations(&self) -> u64 {
+        self.total
+    }
+
+    /// Per-rule violation count, indexed like [`RuleId::ALL`].
+    pub fn counts(&self) -> &[u64; RuleId::ALL.len()] {
+        &self.counts
+    }
+
+    /// Violations for one rule.
+    pub fn count(&self, rule: RuleId) -> u64 {
+        self.counts[rule.index()]
+    }
+
+    /// The first [`MAX_STORED_VIOLATIONS`] violations, verbatim.
+    pub fn violations(&self) -> &[Violation] {
+        &self.stored
+    }
+
+    /// True when no violation has been detected. Note this alone does
+    /// not certify a stream: a truncated stream is never clean — see
+    /// [`super::report::status`].
+    pub fn is_clean(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Rule IDs with at least one violation, in stable order.
+    pub fn violated_rules(&self) -> Vec<RuleId> {
+        RuleId::ALL.iter().copied().filter(|r| self.counts[r.index()] > 0).collect()
+    }
+
+    fn record(&mut self, rule: RuleId, cycle: Cycle, bank_group: u32, bank: u32, detail: String) {
+        self.counts[rule.index()] += 1;
+        self.total += 1;
+        if self.stored.len() < MAX_STORED_VIOLATIONS {
+            self.stored.push(Violation { rule, cycle, bank_group, bank, detail });
+        }
+    }
+
+    /// Check `t >= prev + bound`; on failure record a violation with the
+    /// observed-vs-required gap spelled out.
+    #[allow(clippy::too_many_arguments)]
+    fn min_gap(
+        &mut self,
+        rule: RuleId,
+        t: Cycle,
+        prev: Cycle,
+        bound: Cycle,
+        bg: u32,
+        bank: u32,
+        what: &str,
+    ) {
+        if t < prev + bound {
+            let gap = t.saturating_sub(prev);
+            let detail = format!("{what}: gap {gap} < {} {bound} (prev @{prev})", rule.id());
+            self.record(rule, t, bg, bank, detail);
+        }
+    }
+
+    /// Feed one command. Events must arrive in non-decreasing cycle
+    /// order (the trace ring and the CSV both guarantee it).
+    pub fn observe(&mut self, ev: &TraceEvent) {
+        let t = ev.cycle;
+        self.events += 1;
+        if self.first_cycle.is_none() {
+            self.first_cycle = Some(t);
+        }
+        self.last_cycle = Some(t);
+
+        // tRFC gates every command after a REF.
+        if let Some(r) = self.last_ref {
+            if !matches!(ev.cmd, TraceCmd::Ref) {
+                self.min_gap(RuleId::Trfc, t, r, self.rules.trfc, ev.bank_group, ev.bank, "post-REF");
+            }
+        }
+
+        match ev.cmd {
+            TraceCmd::Act => self.on_act(t, ev.bank_group, ev.bank, ev.row),
+            TraceCmd::Pre => self.on_pre(t, ev.bank_group, ev.bank),
+            TraceCmd::PreAll => self.on_pre_all(t),
+            TraceCmd::Rd => self.on_cas(t, ev.bank_group, ev.bank, ev.row, false, false),
+            TraceCmd::Rda => self.on_cas(t, ev.bank_group, ev.bank, ev.row, false, true),
+            TraceCmd::Wr => self.on_cas(t, ev.bank_group, ev.bank, ev.row, true, false),
+            TraceCmd::Wra => self.on_cas(t, ev.bank_group, ev.bank, ev.row, true, true),
+            TraceCmd::Ref => self.on_ref(t),
+        }
+    }
+
+    fn bank_mut(banks: &mut BTreeMap<(u32, u32), BankShadow>, start: StreamStart, bg: u32, b: u32) -> &mut BankShadow {
+        banks.entry((bg, b)).or_insert_with(|| BankShadow::new(start))
+    }
+
+    fn on_act(&mut self, t: Cycle, bg: u32, b: u32, row: u32) {
+        let start = self.start;
+        let shadow = Self::bank_mut(&mut self.banks, start, bg, b);
+        if let RowState::Open(open) = shadow.row {
+            let detail = format!("row {open} already open, ACT for row {row}");
+            self.record(RuleId::ActOpenBank, t, bg, b, detail);
+        }
+
+        let (last_pre, last_act) = {
+            let s = &self.banks[&(bg, b)];
+            (s.last_pre, s.last_act)
+        };
+        if let Some(p) = last_pre {
+            self.min_gap(RuleId::Trp, t, p, self.rules.trp, bg, b, "PRE->ACT");
+        }
+        if let Some(a) = last_act {
+            self.min_gap(RuleId::Trc, t, a, self.rules.trc, bg, b, "ACT->ACT same bank");
+        }
+        if let Some(a) = self.groups.get(&bg).and_then(|g| g.last_act) {
+            self.min_gap(RuleId::TrrdL, t, a, self.rules.trrd_l, bg, b, "ACT->ACT same group");
+        }
+        if let Some(a) = self.last_act_any {
+            self.min_gap(RuleId::TrrdS, t, a, self.rules.trrd_s, bg, b, "ACT->ACT any bank");
+        }
+        if self.act_window.len() == 4 {
+            let oldest = self.act_window[0];
+            if t < oldest + self.rules.tfaw {
+                let detail = format!(
+                    "5th ACT {} cycles after window start @{oldest} (tFAW {})",
+                    t - oldest,
+                    self.rules.tfaw
+                );
+                self.record(RuleId::Tfaw, t, bg, b, detail);
+            }
+        }
+
+        // Adopt the activate.
+        let shadow = Self::bank_mut(&mut self.banks, start, bg, b);
+        shadow.row = RowState::Open(row);
+        shadow.last_act = Some(t);
+        self.groups.entry(bg).or_default().last_act = Some(t);
+        self.last_act_any = Some(t);
+        if self.act_window.len() == 4 {
+            self.act_window.remove(0);
+        }
+        self.act_window.push(t);
+    }
+
+    /// Precharge checks for one open bank; returns violations as
+    /// (rule, detail) so PREA can reuse them.
+    fn pre_checks(&mut self, t: Cycle, bg: u32, b: u32) {
+        let (last_act, last_rd, last_wr) = {
+            let s = &self.banks[&(bg, b)];
+            (s.last_act, s.last_rd, s.last_wr)
+        };
+        if let Some(a) = last_act {
+            self.min_gap(RuleId::Tras, t, a, self.rules.tras, bg, b, "ACT->PRE");
+        }
+        if let Some(r) = last_rd {
+            self.min_gap(RuleId::Trtp, t, r, self.rules.rd_to_pre, bg, b, "RD->PRE");
+        }
+        if let Some(w) = last_wr {
+            self.min_gap(RuleId::Twr, t, w, self.rules.wr_to_pre, bg, b, "WR->PRE");
+        }
+    }
+
+    fn close_bank(&mut self, bg: u32, b: u32, pre_at: Option<Cycle>) {
+        let start = self.start;
+        let shadow = Self::bank_mut(&mut self.banks, start, bg, b);
+        shadow.row = RowState::Closed;
+        shadow.last_rd = None;
+        shadow.last_wr = None;
+        if pre_at.is_some() {
+            shadow.last_pre = pre_at;
+        }
+    }
+
+    fn on_pre(&mut self, t: Cycle, bg: u32, b: u32) {
+        let start = self.start;
+        let row = Self::bank_mut(&mut self.banks, start, bg, b).row;
+        match row {
+            // PRE to a precharged bank is a JEDEC no-op; unknown banks
+            // (truncated stream) close leniently without starting tRP.
+            RowState::Closed => {}
+            RowState::Unknown => self.close_bank(bg, b, None),
+            RowState::Open(_) => {
+                self.pre_checks(t, bg, b);
+                self.close_bank(bg, b, Some(t));
+            }
+        }
+    }
+
+    fn on_pre_all(&mut self, t: Cycle) {
+        let keys: Vec<(u32, u32)> = self.banks.keys().copied().collect();
+        for (bg, b) in keys {
+            let row = self.banks[&(bg, b)].row;
+            match row {
+                RowState::Closed => {}
+                RowState::Unknown => self.close_bank(bg, b, None),
+                RowState::Open(_) => {
+                    self.pre_checks(t, bg, b);
+                    self.close_bank(bg, b, Some(t));
+                }
+            }
+        }
+    }
+
+    fn on_cas(&mut self, t: Cycle, bg: u32, b: u32, row: u32, is_wr: bool, auto_pre: bool) {
+        let start = self.start;
+        let kind = if is_wr { "WR" } else { "RD" };
+        let shadow_row = Self::bank_mut(&mut self.banks, start, bg, b).row;
+        match shadow_row {
+            RowState::Closed => {
+                let detail = format!("{kind} to precharged bank (row {row})");
+                self.record(RuleId::CasClosedBank, t, bg, b, detail);
+            }
+            RowState::Open(open) if open != row => {
+                let detail = format!("{kind} row {row} but row {open} is open");
+                self.record(RuleId::CasRowMismatch, t, bg, b, detail);
+            }
+            // Unknown: adopt-on-first-sight, no structural claim possible.
+            RowState::Open(_) | RowState::Unknown => {}
+        }
+
+        // tRCD only applies when we saw the opening ACT ourselves.
+        let last_act = self.banks[&(bg, b)].last_act;
+        if matches!(shadow_row, RowState::Open(_)) {
+            if let Some(a) = last_act {
+                self.min_gap(RuleId::Trcd, t, a, self.rules.trcd, bg, b, "ACT->CAS");
+            }
+        }
+
+        if let Some(c) = self.last_cas_any {
+            self.min_gap(RuleId::TccdS, t, c, self.rules.tccd_s, bg, b, "CAS->CAS any group");
+        }
+        if let Some(c) = self.groups.get(&bg).and_then(|g| g.last_cas) {
+            self.min_gap(RuleId::TccdL, t, c, self.rules.tccd_l, bg, b, "CAS->CAS same group");
+        }
+        if is_wr {
+            if let Some(r) = self.last_rd_cas {
+                self.min_gap(RuleId::Trtw, t, r, self.rules.rd_to_wr, bg, b, "RD->WR turnaround");
+            }
+        } else if let Some((w, wg)) = self.last_wr_cas {
+            if wg == bg {
+                self.min_gap(RuleId::TwtrL, t, w, self.rules.wr_to_rd_l, bg, b, "WR->RD same group");
+            } else {
+                self.min_gap(RuleId::TwtrS, t, w, self.rules.wr_to_rd_s, bg, b, "WR->RD cross group");
+            }
+        }
+
+        // Adopt the access.
+        let shadow = Self::bank_mut(&mut self.banks, start, bg, b);
+        shadow.row = RowState::Open(row);
+        if is_wr {
+            shadow.last_wr = Some(t);
+        } else {
+            shadow.last_rd = Some(t);
+        }
+        self.groups.entry(bg).or_default().last_cas = Some(t);
+        self.last_cas_any = Some(t);
+        if is_wr {
+            self.last_wr_cas = Some((t, bg));
+        } else {
+            self.last_rd_cas = Some(t);
+        }
+
+        if auto_pre {
+            // The device completes the implicit precharge only once both
+            // the CAS recovery and tRAS have elapsed; tRP counts from
+            // that completion point.
+            let recovery = if is_wr { self.rules.wr_to_pre } else { self.rules.rd_to_pre };
+            let mut pre_at = t + recovery;
+            if let Some(a) = self.banks[&(bg, b)].last_act {
+                pre_at = pre_at.max(a + self.rules.tras);
+            }
+            self.close_bank(bg, b, Some(pre_at));
+        }
+    }
+
+    fn on_ref(&mut self, t: Cycle) {
+        if let Some(r) = self.last_ref {
+            self.min_gap(RuleId::Trfc, t, r, self.rules.trfc, 0, 0, "REF->REF");
+        }
+        // JEDEC allows postponing up to 8 refreshes: 9 x tREFI max gap.
+        let base = match (self.last_ref, self.start) {
+            (Some(r), _) => Some(r),
+            (None, StreamStart::Complete) => Some(0),
+            // Truncated: refreshes before the window are invisible; the
+            // bound only applies within the observed stream.
+            (None, StreamStart::Truncated) => self.first_cycle,
+        };
+        if let Some(base) = base {
+            if t > base + self.rules.trefi_max {
+                let detail = format!(
+                    "REF gap {} > 9*tREFI {} (prev @{base})",
+                    t - base,
+                    self.rules.trefi_max
+                );
+                self.record(RuleId::TrefiMax, t, 0, 0, detail);
+            }
+        }
+
+        let keys: Vec<(u32, u32)> = self.banks.keys().copied().collect();
+        for (bg, b) in keys {
+            if let RowState::Open(open) = self.banks[&(bg, b)].row {
+                let detail = format!("REF with row {open} open");
+                self.record(RuleId::RefOpenBank, t, bg, b, detail);
+            }
+            // REF leaves every bank precharged regardless.
+            self.close_bank(bg, b, None);
+        }
+        self.last_ref = Some(t);
+    }
+
+    /// Non-mutating end-of-stream check: a run may never leave more than
+    /// 9 x tREFI without a refresh, including its tail. Returns any
+    /// violations found (the stream itself is left untouched so the
+    /// check can be re-run).
+    pub fn end_of_stream_check(&self) -> Vec<Violation> {
+        let Some(end) = self.last_cycle else { return Vec::new() };
+        let base = match (self.last_ref, self.start) {
+            (Some(r), _) => r,
+            (None, StreamStart::Complete) => 0,
+            (None, StreamStart::Truncated) => match self.first_cycle {
+                Some(f) => f,
+                None => return Vec::new(),
+            },
+        };
+        if end > base + self.rules.trefi_max {
+            vec![Violation {
+                rule: RuleId::TrefiMax,
+                cycle: end,
+                bank_group: 0,
+                bank: 0,
+                detail: format!(
+                    "stream ends {} cycles after last REF basis @{base} (9*tREFI {})",
+                    end - base,
+                    self.rules.trefi_max
+                ),
+            }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+
+    fn ev(cycle: Cycle, cmd: TraceCmd, bg: u32, b: u32, row: u32) -> TraceEvent {
+        TraceEvent { cycle, cmd, bank_group: bg, bank: b, row }
+    }
+
+    fn auditor() -> Auditor {
+        Auditor::new(&TimingParams::for_bin(SpeedBin::Ddr4_1600), StreamStart::Complete)
+    }
+
+    #[test]
+    fn legal_open_page_burst_is_clean() {
+        // DDR4-1600: trcd=11, tras=28, rd_to_pre=6, trp=11, tccd_l=5.
+        let mut a = auditor();
+        for e in [
+            ev(1000, TraceCmd::Act, 0, 0, 42),
+            ev(1011, TraceCmd::Rd, 0, 0, 42),
+            ev(1016, TraceCmd::Rd, 0, 0, 42),
+            ev(1030, TraceCmd::Pre, 0, 0, 42),
+            ev(1041, TraceCmd::Act, 0, 0, 7),
+        ] {
+            a.observe(&e);
+        }
+        assert!(a.is_clean(), "unexpected: {:?}", a.violations());
+        assert_eq!(a.events(), 5);
+    }
+
+    #[test]
+    fn early_cas_fires_trcd_once() {
+        let mut a = auditor();
+        a.observe(&ev(1000, TraceCmd::Act, 0, 0, 42));
+        a.observe(&ev(1010, TraceCmd::Rd, 0, 0, 42));
+        assert_eq!(a.total_violations(), 1);
+        assert_eq!(a.count(RuleId::Trcd), 1);
+    }
+
+    #[test]
+    fn auto_precharge_delays_next_act_by_trp_from_completion() {
+        // RDA @1011: pre completes at max(1011+6, 1000+28) = 1028;
+        // next ACT legal at 1039.
+        let mut a = auditor();
+        a.observe(&ev(1000, TraceCmd::Act, 0, 0, 42));
+        a.observe(&ev(1011, TraceCmd::Rda, 0, 0, 42));
+        a.observe(&ev(1038, TraceCmd::Act, 0, 0, 7));
+        assert_eq!(a.count(RuleId::Trp), 1);
+        let mut b = auditor();
+        b.observe(&ev(1000, TraceCmd::Act, 0, 0, 42));
+        b.observe(&ev(1011, TraceCmd::Rda, 0, 0, 42));
+        b.observe(&ev(1039, TraceCmd::Act, 0, 0, 7));
+        assert!(b.is_clean(), "unexpected: {:?}", b.violations());
+    }
+
+    #[test]
+    fn truncated_start_adopts_state_without_false_positives() {
+        // Mid-stream CAS to a never-seen bank: a complete stream flags
+        // it, a truncated one adopts it.
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        let mut complete = Auditor::new(&t, StreamStart::Complete);
+        complete.observe(&ev(500, TraceCmd::Rd, 1, 2, 9));
+        assert_eq!(complete.count(RuleId::CasClosedBank), 1);
+
+        let mut truncated = Auditor::new(&t, StreamStart::Truncated);
+        truncated.observe(&ev(500, TraceCmd::Rd, 1, 2, 9));
+        assert!(truncated.is_clean(), "unexpected: {:?}", truncated.violations());
+    }
+
+    #[test]
+    fn end_of_stream_flags_overdue_refresh() {
+        let mut a = auditor();
+        a.observe(&ev(1000, TraceCmd::Act, 0, 0, 1));
+        a.observe(&ev(60000, TraceCmd::Pre, 0, 0, 1));
+        // 9 * tREFI = 56160 at DDR4-1600; no REF ever seen.
+        let eos = a.end_of_stream_check();
+        assert_eq!(eos.len(), 1);
+        assert_eq!(eos[0].rule, RuleId::TrefiMax);
+        // Non-mutating: counters untouched, re-runnable.
+        assert_eq!(a.count(RuleId::TrefiMax), 0);
+        assert_eq!(a.end_of_stream_check().len(), 1);
+    }
+
+    #[test]
+    fn violation_storage_caps_but_counters_keep_counting() {
+        let mut a = auditor();
+        a.observe(&ev(0, TraceCmd::Act, 0, 0, 1));
+        for i in 0..(MAX_STORED_VIOLATIONS as u64 + 10) {
+            // Same-bank back-to-back ACTs: tRC (and friends) every time.
+            a.observe(&ev(1 + i, TraceCmd::Act, 0, 0, 1));
+        }
+        assert_eq!(a.violations().len(), MAX_STORED_VIOLATIONS);
+        assert!(a.total_violations() > MAX_STORED_VIOLATIONS as u64);
+    }
+}

@@ -1,0 +1,34 @@
+//! Independent JEDEC protocol-legality analysis of the DRAM command
+//! stream.
+//!
+//! The controller and device models enforce timing *prospectively* —
+//! they refuse to schedule an illegal command. This module is the
+//! second opinion: a declarative rulebook ([`rules`]) derived only from
+//! the `ddr4::timing` tables, replayed over the emitted command stream
+//! by an independent shadow state machine ([`auditor`]) that shares no
+//! code with the models it audits. The differential tests prove both
+//! engines agree; the auditor proves what they agree *on* is legal
+//! DDR4 traffic — the distinction "The Memory Controller Wall" shows
+//! matters, since both sides of a differential can be wrong together.
+//!
+//! Auditing is observation-only, like telemetry: arming it never
+//! changes scheduling, timing, or results. Entry points:
+//! - live: `run --audit` / `sweep --audit` tap the controller's
+//!   `issue_cmd` funnel (zero cost when off, like `--cmd-trace`);
+//! - offline: `ddr4bench audit <trace.csv>` replays a captured trace
+//!   ([`offline`]);
+//! - host protocol: `AUDIT <ch>` returns the one-line summary.
+//!
+//! The analyzer itself is proven by mutation ([`mutate`],
+//! `rust/tests/audit_mutation.rs`): corrupt exactly one command of a
+//! legal stream, assert the specific rule ID fires.
+
+pub mod auditor;
+pub mod mutate;
+pub mod offline;
+pub mod report;
+pub mod rules;
+
+pub use auditor::{Auditor, StreamStart, Violation, MAX_STORED_VIOLATIONS};
+pub use report::Status;
+pub use rules::{Rule, RuleId, Rulebook};

@@ -1,0 +1,106 @@
+//! Fault injection for the audit mutation tests: corrupt exactly one
+//! command of a known-legal stream and assert the *specific* rule fires.
+//!
+//! This is how the analyzer itself is proven. A checker that never
+//! fires is indistinguishable from a perfect controller; each mutation
+//! case demonstrates the corresponding rule detects the violation it
+//! claims to cover (see `rust/tests/audit_mutation.rs`).
+
+use crate::obs::cmdtrace::{TraceCmd, TraceEvent};
+
+/// One single-command corruption of a trace.
+#[derive(Debug, Clone)]
+pub enum Mutation {
+    /// Move event `index` to `cycle` (e.g. make an ACT early).
+    ShiftTo {
+        /// Index into the event vector before mutation.
+        index: usize,
+        /// New issue cycle.
+        cycle: u64,
+    },
+    /// Redirect event `index` to another bank.
+    Retarget {
+        /// Index into the event vector before mutation.
+        index: usize,
+        /// New bank group.
+        bank_group: u32,
+        /// New bank within the group.
+        bank: u32,
+    },
+    /// Rewrite the row of event `index` (CAS row mismatch).
+    SetRow {
+        /// Index into the event vector before mutation.
+        index: usize,
+        /// New row.
+        row: u32,
+    },
+    /// Rewrite the command kind of event `index`.
+    SetCmd {
+        /// Index into the event vector before mutation.
+        index: usize,
+        /// New command.
+        cmd: TraceCmd,
+    },
+    /// Insert an extra event (e.g. a fifth ACT inside tFAW).
+    Insert(TraceEvent),
+    /// Delete event `index` (e.g. drop the PRE before a re-ACT).
+    Remove {
+        /// Index into the event vector before mutation.
+        index: usize,
+    },
+}
+
+/// Apply one mutation, then restore cycle order (the auditor consumes
+/// streams in non-decreasing cycle order, as the hardware would emit
+/// them). The sort is stable so equal-cycle events keep their relative
+/// order.
+pub fn apply(events: &mut Vec<TraceEvent>, mutation: Mutation) {
+    match mutation {
+        Mutation::ShiftTo { index, cycle } => events[index].cycle = cycle,
+        Mutation::Retarget { index, bank_group, bank } => {
+            events[index].bank_group = bank_group;
+            events[index].bank = bank;
+        }
+        Mutation::SetRow { index, row } => events[index].row = row,
+        Mutation::SetCmd { index, cmd } => events[index].cmd = cmd,
+        Mutation::Insert(ev) => events.push(ev),
+        Mutation::Remove { index } => {
+            events.remove(index);
+        }
+    }
+    events.sort_by_key(|e| e.cycle);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64) -> TraceEvent {
+        TraceEvent { cycle, cmd: TraceCmd::Act, bank_group: 0, bank: 0, row: 0 }
+    }
+
+    #[test]
+    fn shift_resorts_by_cycle() {
+        let mut evs = vec![ev(10), ev(20), ev(30)];
+        apply(&mut evs, Mutation::ShiftTo { index: 2, cycle: 5 });
+        assert_eq!(evs.iter().map(|e| e.cycle).collect::<Vec<_>>(), vec![5, 10, 20]);
+    }
+
+    #[test]
+    fn insert_and_remove_keep_order() {
+        let mut evs = vec![ev(10), ev(30)];
+        apply(&mut evs, Mutation::Insert(ev(20)));
+        assert_eq!(evs.iter().map(|e| e.cycle).collect::<Vec<_>>(), vec![10, 20, 30]);
+        apply(&mut evs, Mutation::Remove { index: 0 });
+        assert_eq!(evs.iter().map(|e| e.cycle).collect::<Vec<_>>(), vec![20, 30]);
+    }
+
+    #[test]
+    fn set_cmd_and_row_rewrite_in_place() {
+        let mut evs = vec![ev(10)];
+        apply(&mut evs, Mutation::SetCmd { index: 0, cmd: TraceCmd::Ref });
+        apply(&mut evs, Mutation::SetRow { index: 0, row: 99 });
+        assert_eq!(evs[0].cmd, TraceCmd::Ref);
+        assert_eq!(evs[0].row, 99);
+    }
+}

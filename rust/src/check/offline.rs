@@ -1,0 +1,208 @@
+//! Offline trace auditing: parse a `run --cmd-trace` CSV back into
+//! [`TraceEvent`]s and replay each channel through the [`Auditor`].
+//!
+//! Two CSV dialects are accepted:
+//! - the annotated export ([`crate::obs::export::trace_csv_annotated`])
+//!   whose `#` comment lines carry the speed bin and per-channel
+//!   `events=`/`dropped=` counts — a channel with drops is audited as a
+//!   truncated stream (it can fail but never be certified clean);
+//! - the plain header-only export ([`crate::obs::export::trace_csv`]),
+//!   which has no metadata: the stream is assumed complete and the
+//!   speed bin must be supplied by the caller (`audit --speed`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::SpeedBin;
+use crate::ddr4::TimingParams;
+use crate::obs::cmdtrace::{TraceCmd, TraceEvent};
+
+use super::auditor::{Auditor, StreamStart};
+
+/// One channel's slice of a parsed trace.
+#[derive(Debug, Clone, Default)]
+pub struct ChannelTrace {
+    /// Events in cycle order.
+    pub events: Vec<TraceEvent>,
+    /// Ring evictions before capture, from `# channel=.. dropped=..`
+    /// metadata (0 when the CSV carries none).
+    pub dropped: u64,
+}
+
+/// A parsed trace CSV: per-channel event streams plus any metadata the
+/// annotated dialect carried.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedTrace {
+    /// Speed bin from `# speed=..`, if present.
+    pub speed: Option<SpeedBin>,
+    /// Channels in ascending order.
+    pub channels: BTreeMap<usize, ChannelTrace>,
+}
+
+/// Parse a trace CSV (either dialect). Malformed lines are hard errors
+/// with their line number — an auditor fed garbage must not shrug.
+pub fn parse_trace_csv(text: &str) -> Result<ParsedTrace> {
+    let mut parsed = ParsedTrace::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            parse_comment(comment.trim(), &mut parsed)
+                .map_err(|e| anyhow!("trace line {}: {e}", lineno + 1))?;
+            continue;
+        }
+        if line.starts_with("cycle,") {
+            continue; // header
+        }
+        let (ch, ev) = parse_row(line).map_err(|e| anyhow!("trace line {}: {e}", lineno + 1))?;
+        parsed.channels.entry(ch).or_default().events.push(ev);
+    }
+    for trace in parsed.channels.values_mut() {
+        trace.events.sort_by_key(|e| e.cycle);
+    }
+    Ok(parsed)
+}
+
+fn parse_comment(comment: &str, parsed: &mut ParsedTrace) -> Result<()> {
+    if let Some(v) = comment.strip_prefix("speed=") {
+        parsed.speed =
+            Some(SpeedBin::parse(v).ok_or_else(|| anyhow!("unknown speed bin `{v}`"))?);
+        return Ok(());
+    }
+    if comment.strip_prefix("channel=").is_some() {
+        let mut ch: Option<usize> = None;
+        let mut dropped: Option<u64> = None;
+        for tok in comment.split_whitespace() {
+            if let Some(v) = tok.strip_prefix("channel=") {
+                ch = Some(v.parse().map_err(|_| anyhow!("bad channel `{v}`"))?);
+            } else if let Some(v) = tok.strip_prefix("dropped=") {
+                dropped = Some(v.parse().map_err(|_| anyhow!("bad dropped `{v}`"))?);
+            }
+        }
+        let ch = ch.ok_or_else(|| anyhow!("channel metadata without channel id"))?;
+        parsed.channels.entry(ch).or_default().dropped = dropped.unwrap_or(0);
+    }
+    // Unknown comments (e.g. the banner) are ignored.
+    Ok(())
+}
+
+fn parse_row(line: &str) -> Result<(usize, TraceEvent)> {
+    let fields: Vec<&str> = line.split(',').collect();
+    if fields.len() != 6 {
+        bail!("expected 6 fields, got {}", fields.len());
+    }
+    let cycle: u64 = fields[0].parse().map_err(|_| anyhow!("bad cycle `{}`", fields[0]))?;
+    let ch: usize = fields[1].parse().map_err(|_| anyhow!("bad channel `{}`", fields[1]))?;
+    let cmd = TraceCmd::parse(fields[2])
+        .ok_or_else(|| anyhow!("unknown command `{}`", fields[2]))?;
+    let bank_group: u32 =
+        fields[3].parse().map_err(|_| anyhow!("bad bank_group `{}`", fields[3]))?;
+    let bank: u32 = fields[4].parse().map_err(|_| anyhow!("bad bank `{}`", fields[4]))?;
+    let row: u32 = fields[5].parse().map_err(|_| anyhow!("bad row `{}`", fields[5]))?;
+    Ok((ch, TraceEvent { cycle, cmd, bank_group, bank, row }))
+}
+
+/// One audited channel of an offline run.
+#[derive(Debug)]
+pub struct ChannelAudit {
+    /// Channel index from the CSV.
+    pub channel: usize,
+    /// The replayed auditor, ready for [`super::report`] rendering.
+    pub auditor: Auditor,
+    /// Drop count carried over from the CSV metadata.
+    pub dropped: u64,
+}
+
+/// Replay every channel of a parsed trace. `speed_override` wins over
+/// the CSV's own metadata; a trace with neither is an error (auditing
+/// against a guessed rulebook would certify nothing).
+pub fn audit_trace(parsed: &ParsedTrace, speed_override: Option<SpeedBin>) -> Result<Vec<ChannelAudit>> {
+    let speed = speed_override.or(parsed.speed).ok_or_else(|| {
+        anyhow!("trace carries no `# speed=` metadata; pass --speed <bin> explicitly")
+    })?;
+    let timing = TimingParams::for_bin(speed);
+    let mut out = Vec::new();
+    for (&channel, trace) in &parsed.channels {
+        let start =
+            if trace.dropped > 0 { StreamStart::Truncated } else { StreamStart::Complete };
+        let mut auditor = Auditor::new(&timing, start);
+        for ev in &trace.events {
+            auditor.observe(ev);
+        }
+        out.push(ChannelAudit { channel, auditor, dropped: trace.dropped });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::report::{self, Status};
+    use crate::obs::cmdtrace::CmdTrace;
+    use crate::obs::export::{trace_csv, trace_csv_annotated};
+
+    fn ring(events: &[(u64, TraceCmd)]) -> CmdTrace {
+        let mut t = CmdTrace::new(64);
+        for &(cycle, cmd) in events {
+            t.record(TraceEvent { cycle, cmd, bank_group: 0, bank: 0, row: 5 });
+        }
+        t
+    }
+
+    #[test]
+    fn annotated_roundtrip_audits_clean() {
+        let t = ring(&[(1000, TraceCmd::Act), (1011, TraceCmd::Rd), (1030, TraceCmd::Pre)]);
+        let csv = trace_csv_annotated("DDR4-1600", &[(0, &t)]);
+        let parsed = parse_trace_csv(&csv).expect("parse");
+        assert_eq!(parsed.speed, Some(SpeedBin::Ddr4_1600));
+        let audits = audit_trace(&parsed, None).expect("audit");
+        assert_eq!(audits.len(), 1);
+        assert_eq!(audits[0].auditor.events(), 3);
+        assert_eq!(report::status(&audits[0].auditor, audits[0].dropped), Status::Clean);
+    }
+
+    #[test]
+    fn plain_csv_needs_explicit_speed() {
+        let t = ring(&[(1000, TraceCmd::Act)]);
+        let csv = trace_csv(0, &t);
+        let parsed = parse_trace_csv(&csv).expect("parse");
+        assert!(audit_trace(&parsed, None).is_err(), "no metadata and no override");
+        let audits = audit_trace(&parsed, Some(SpeedBin::Ddr4_2400)).expect("audit");
+        assert_eq!(audits[0].auditor.rulebook().trcd, 16, "2400-bin rulebook applied");
+    }
+
+    #[test]
+    fn dropped_metadata_forces_truncated_verdict() {
+        let mut t = CmdTrace::new(2);
+        // Three legal commands through a 2-deep ring: first is evicted.
+        for ev in [
+            TraceEvent { cycle: 1000, cmd: TraceCmd::Act, bank_group: 0, bank: 0, row: 5 },
+            TraceEvent { cycle: 1011, cmd: TraceCmd::Rd, bank_group: 0, bank: 0, row: 5 },
+            TraceEvent { cycle: 1016, cmd: TraceCmd::Rd, bank_group: 0, bank: 0, row: 5 },
+        ] {
+            t.record(ev);
+        }
+        let csv = trace_csv_annotated("DDR4-1600", &[(0, &t)]);
+        let parsed = parse_trace_csv(&csv).expect("parse");
+        let audits = audit_trace(&parsed, None).expect("audit");
+        assert_eq!(audits[0].dropped, 1);
+        assert!(audits[0].auditor.is_clean(), "no violation in the observed tail");
+        assert_eq!(
+            report::status(&audits[0].auditor, audits[0].dropped),
+            Status::Truncated,
+            "a partial stream must not be certified clean"
+        );
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        let err = parse_trace_csv("cycle,channel,cmd,bank_group,bank,row\n10,0,NOP,0,0,0\n")
+            .expect_err("unknown mnemonic");
+        assert!(err.to_string().contains("line 2"), "got: {err}");
+        let err = parse_trace_csv("10,0,ACT,0,0\n").expect_err("short row");
+        assert!(err.to_string().contains("6 fields"), "got: {err}");
+    }
+}

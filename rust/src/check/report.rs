@@ -1,0 +1,159 @@
+//! Rendering of audit verdicts: one-line summaries (CLI, host protocol,
+//! sweep CSV) and full multi-line reports (artifacts, `ddr4bench audit`).
+//!
+//! The verdict model is deliberately conservative: a stream is CLEAN
+//! only when *every* command was observed (no ring drops, complete
+//! prefix) and zero rules fired, end-of-stream checks included. A
+//! truncated stream that shows no violation is reported TRUNCATED, not
+//! CLEAN — the auditor cannot certify commands it never saw.
+
+use super::auditor::{Auditor, StreamStart, Violation};
+
+/// Final verdict for one audited channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Complete stream, zero violations: certified legal.
+    Clean,
+    /// Zero violations, but part of the stream was never observed.
+    Truncated,
+    /// At least one rule fired.
+    Violations,
+}
+
+impl Status {
+    /// Stable token used in summaries and CI logs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Status::Clean => "CLEAN",
+            Status::Truncated => "TRUNCATED",
+            Status::Violations => "VIOLATIONS",
+        }
+    }
+}
+
+impl std::fmt::Display for Status {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Violations including the non-mutating end-of-stream checks.
+pub fn total_violations(auditor: &Auditor) -> u64 {
+    auditor.total_violations() + auditor.end_of_stream_check().len() as u64
+}
+
+/// Compute the verdict for one channel. `dropped` is the trace-ring
+/// drop count for offline audits (0 for live audits, which tap every
+/// command).
+pub fn status(auditor: &Auditor, dropped: u64) -> Status {
+    if total_violations(auditor) > 0 {
+        Status::Violations
+    } else if dropped > 0 || auditor.start() == StreamStart::Truncated {
+        Status::Truncated
+    } else {
+        Status::Clean
+    }
+}
+
+/// One-line machine-greppable summary:
+/// `channel=0 events=1234 dropped=0 violations=0 status=CLEAN`.
+pub fn summary(auditor: &Auditor, channel: usize, dropped: u64) -> String {
+    format!(
+        "channel={channel} events={} dropped={dropped} violations={} status={}",
+        auditor.events(),
+        total_violations(auditor),
+        status(auditor, dropped)
+    )
+}
+
+/// Full multi-line report: summary, per-rule counts with their derived
+/// bounds, and the first stored violations verbatim.
+pub fn render(auditor: &Auditor, channel: usize, dropped: u64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("AUDIT {}\n", summary(auditor, channel, dropped)));
+    let eos = auditor.end_of_stream_check();
+    let rb = auditor.rulebook();
+    for rule in auditor.violated_rules() {
+        let bound = rb
+            .bound_ck(rule)
+            .map(|b| format!(" (bound {b} ck)"))
+            .unwrap_or_default();
+        out.push_str(&format!("  rule {} x{}{bound}\n", rule.id(), auditor.count(rule)));
+    }
+    for v in auditor.violations() {
+        out.push_str(&format!("  {v}\n"));
+    }
+    let stored = auditor.violations().len() as u64;
+    if auditor.total_violations() > stored {
+        out.push_str(&format!(
+            "  ... {} further violations not stored\n",
+            auditor.total_violations() - stored
+        ));
+    }
+    for v in &eos {
+        out.push_str(&format!("  end-of-stream {v}\n"));
+    }
+    if dropped > 0 {
+        out.push_str(&format!(
+            "  note: {dropped} events dropped before capture; stream cannot be certified\n"
+        ));
+    }
+    out
+}
+
+/// Render every violation (stored + end-of-stream) as display lines —
+/// used by CI gates to print why a sweep job failed.
+pub fn violation_lines(auditor: &Auditor) -> Vec<String> {
+    auditor
+        .violations()
+        .iter()
+        .map(Violation::to_string)
+        .chain(auditor.end_of_stream_check().iter().map(|v| format!("end-of-stream {v}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+    use crate::ddr4::TimingParams;
+    use crate::obs::cmdtrace::{TraceCmd, TraceEvent};
+
+    fn ev(cycle: u64, cmd: TraceCmd, bg: u32, b: u32, row: u32) -> TraceEvent {
+        TraceEvent { cycle, cmd, bank_group: bg, bank: b, row }
+    }
+
+    #[test]
+    fn clean_stream_reports_clean() {
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        let mut a = Auditor::new(&t, StreamStart::Complete);
+        a.observe(&ev(100, TraceCmd::Act, 0, 0, 3));
+        a.observe(&ev(111, TraceCmd::Rd, 0, 0, 3));
+        assert_eq!(status(&a, 0), Status::Clean);
+        let line = summary(&a, 2, 0);
+        assert!(line.contains("channel=2"));
+        assert!(line.contains("violations=0"));
+        assert!(line.contains("status=CLEAN"));
+    }
+
+    #[test]
+    fn dropped_events_demote_clean_to_truncated() {
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        let mut a = Auditor::new(&t, StreamStart::Truncated);
+        a.observe(&ev(100, TraceCmd::Act, 0, 0, 3));
+        assert_eq!(status(&a, 7), Status::Truncated);
+        assert!(render(&a, 0, 7).contains("cannot be certified"));
+    }
+
+    #[test]
+    fn violations_render_with_rule_counts() {
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        let mut a = Auditor::new(&t, StreamStart::Complete);
+        a.observe(&ev(100, TraceCmd::Rd, 0, 0, 3));
+        assert_eq!(status(&a, 0), Status::Violations);
+        let rep = render(&a, 0, 0);
+        assert!(rep.contains("CAS_CLOSED_BANK"), "report was: {rep}");
+        assert!(rep.contains("status=VIOLATIONS"));
+        assert_eq!(violation_lines(&a).len(), 1);
+    }
+}

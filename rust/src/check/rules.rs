@@ -1,0 +1,320 @@
+//! The declarative JEDEC rulebook: every protocol-legality rule the
+//! auditor enforces, as *data* derived exclusively from
+//! [`crate::ddr4::timing::TimingParams`].
+//!
+//! The rulebook deliberately knows nothing about the bank/device state
+//! machines it audits ([`crate::ddr4::bank`] / [`crate::ddr4::device`]):
+//! those enforce legality *prospectively* while scheduling, this module
+//! states the same JEDEC bounds *declaratively* so an independent shadow
+//! replay ([`super::auditor`]) can certify an emitted command stream. A
+//! bug that slips through both therefore has to be wrong twice, in two
+//! unrelated encodings of the standard.
+//!
+//! Every rule carries a stable ID string (the `rule_id` surfaced in
+//! violation reports, CI artifacts, and the README's rule table — the
+//! repo lint `scripts/lint_repo.py` keeps the three in sync).
+
+use crate::ddr4::timing::TimingParams;
+use crate::ddr4::Cycle;
+
+/// Stable identifier of one protocol rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RuleId {
+    /// ACT to RD/WR CAS, same bank: >= tRCD.
+    Trcd,
+    /// PRE (explicit or auto-precharge completion) to ACT, same bank: >= tRP.
+    Trp,
+    /// ACT to PRE, same bank: >= tRAS.
+    Tras,
+    /// ACT to ACT, same bank: >= tRC.
+    Trc,
+    /// CAS to CAS, any bank group: >= tCCD_S.
+    TccdS,
+    /// CAS to CAS, same bank group: >= tCCD_L.
+    TccdL,
+    /// ACT to ACT, any bank group: >= tRRD_S.
+    TrrdS,
+    /// ACT to ACT, same bank group: >= tRRD_L.
+    TrrdL,
+    /// At most 4 ACTs in any rolling tFAW window.
+    Tfaw,
+    /// WR CAS to PRE, same bank: >= CWL + BL/2 + tWR (write recovery).
+    Twr,
+    /// RD CAS to PRE, same bank: >= tRTP.
+    Trtp,
+    /// WR CAS to RD CAS, different bank group: >= CWL + BL/2 + tWTR_S.
+    TwtrS,
+    /// WR CAS to RD CAS, same bank group: >= CWL + BL/2 + tWTR_L.
+    TwtrL,
+    /// RD CAS to WR CAS, any bank: >= CL + BL/2 + 2 - CWL (bus turnaround).
+    Trtw,
+    /// REF to any command: >= tRFC.
+    Trfc,
+    /// REF to REF (or end of stream): <= 9 x tREFI (JEDEC allows
+    /// postponing at most 8 refreshes).
+    TrefiMax,
+    /// Structural: ACT to a bank whose row is already open.
+    ActOpenBank,
+    /// Structural: RD/WR to a precharged (closed) bank.
+    CasClosedBank,
+    /// Structural: RD/WR row differs from the row the shadow state has open.
+    CasRowMismatch,
+    /// Structural: REF while any bank is open.
+    RefOpenBank,
+}
+
+impl RuleId {
+    /// Every rule, in the stable rendering order of the rulebook.
+    pub const ALL: [RuleId; 20] = [
+        RuleId::Trcd,
+        RuleId::Trp,
+        RuleId::Tras,
+        RuleId::Trc,
+        RuleId::TccdS,
+        RuleId::TccdL,
+        RuleId::TrrdS,
+        RuleId::TrrdL,
+        RuleId::Tfaw,
+        RuleId::Twr,
+        RuleId::Trtp,
+        RuleId::TwtrS,
+        RuleId::TwtrL,
+        RuleId::Trtw,
+        RuleId::Trfc,
+        RuleId::TrefiMax,
+        RuleId::ActOpenBank,
+        RuleId::CasClosedBank,
+        RuleId::CasRowMismatch,
+        RuleId::RefOpenBank,
+    ];
+
+    /// The stable ID string (violation reports, CI summaries, README
+    /// table; never change an existing string — downstream tooling keys
+    /// on them).
+    pub fn id(self) -> &'static str {
+        match self {
+            RuleId::Trcd => "tRCD",
+            RuleId::Trp => "tRP",
+            RuleId::Tras => "tRAS",
+            RuleId::Trc => "tRC",
+            RuleId::TccdS => "tCCD_S",
+            RuleId::TccdL => "tCCD_L",
+            RuleId::TrrdS => "tRRD_S",
+            RuleId::TrrdL => "tRRD_L",
+            RuleId::Tfaw => "tFAW",
+            RuleId::Twr => "tWR",
+            RuleId::Trtp => "tRTP",
+            RuleId::TwtrS => "tWTR_S",
+            RuleId::TwtrL => "tWTR_L",
+            RuleId::Trtw => "tRTW",
+            RuleId::Trfc => "tRFC",
+            RuleId::TrefiMax => "tREFI_MAX",
+            RuleId::ActOpenBank => "ACT_OPEN_BANK",
+            RuleId::CasClosedBank => "CAS_CLOSED_BANK",
+            RuleId::CasRowMismatch => "CAS_ROW_MISMATCH",
+            RuleId::RefOpenBank => "REF_OPEN_BANK",
+        }
+    }
+
+    /// Index into [`Self::ALL`] (per-rule counters in the auditor).
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|r| *r == self).expect("RuleId::ALL covers every variant")
+    }
+}
+
+impl std::fmt::Display for RuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One rule of the rulebook: its ID, the derived cycle bound (`None` for
+/// purely structural rules), and a one-line description.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    /// Stable rule identifier.
+    pub id: RuleId,
+    /// Minimum spacing in DRAM cycles (maximum, for `tREFI_MAX`); `None`
+    /// for structural rules with no timing component.
+    pub bound_ck: Option<Cycle>,
+    /// What the rule constrains, for reports and docs.
+    pub desc: &'static str,
+}
+
+/// The complete rule set for one speed bin, every bound pre-derived from
+/// the JEDEC timing table (and nothing else).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rulebook {
+    /// ACT -> CAS, same bank.
+    pub trcd: Cycle,
+    /// PRE -> ACT, same bank.
+    pub trp: Cycle,
+    /// ACT -> PRE, same bank.
+    pub tras: Cycle,
+    /// ACT -> ACT, same bank.
+    pub trc: Cycle,
+    /// CAS -> CAS, cross-group.
+    pub tccd_s: Cycle,
+    /// CAS -> CAS, same group.
+    pub tccd_l: Cycle,
+    /// ACT -> ACT, cross-group.
+    pub trrd_s: Cycle,
+    /// ACT -> ACT, same group.
+    pub trrd_l: Cycle,
+    /// Rolling four-activate window.
+    pub tfaw: Cycle,
+    /// WR CAS -> PRE, same bank (CWL + BL/2 + tWR).
+    pub wr_to_pre: Cycle,
+    /// RD CAS -> PRE, same bank (tRTP).
+    pub rd_to_pre: Cycle,
+    /// WR CAS -> RD CAS, cross-group (CWL + BL/2 + tWTR_S).
+    pub wr_to_rd_s: Cycle,
+    /// WR CAS -> RD CAS, same group (CWL + BL/2 + tWTR_L).
+    pub wr_to_rd_l: Cycle,
+    /// RD CAS -> WR CAS (CL + BL/2 + 2 - CWL).
+    pub rd_to_wr: Cycle,
+    /// REF -> any command.
+    pub trfc: Cycle,
+    /// Maximum REF -> REF gap (9 x tREFI: up to 8 postponed refreshes).
+    pub trefi_max: Cycle,
+}
+
+impl Rulebook {
+    /// Derive every bound from a JEDEC timing table. This constructor is
+    /// the *only* place the analyzer touches `ddr4::` — the auditor
+    /// replays streams against these numbers alone.
+    pub fn from_timing(t: &TimingParams) -> Self {
+        Self {
+            trcd: t.trcd as Cycle,
+            trp: t.trp as Cycle,
+            tras: t.tras as Cycle,
+            trc: t.trc as Cycle,
+            tccd_s: t.tccd_s as Cycle,
+            tccd_l: t.tccd_l as Cycle,
+            trrd_s: t.trrd_s as Cycle,
+            trrd_l: t.trrd_l as Cycle,
+            tfaw: t.tfaw as Cycle,
+            wr_to_pre: t.wr_to_pre() as Cycle,
+            rd_to_pre: t.rd_to_pre() as Cycle,
+            wr_to_rd_s: t.wr_to_rd(false) as Cycle,
+            wr_to_rd_l: t.wr_to_rd(true) as Cycle,
+            rd_to_wr: t.rd_to_wr() as Cycle,
+            trfc: t.trfc as Cycle,
+            trefi_max: 9 * t.trefi as Cycle,
+        }
+    }
+
+    /// The data-driven rule table, in stable [`RuleId::ALL`] order.
+    pub fn rules(&self) -> Vec<Rule> {
+        RuleId::ALL
+            .iter()
+            .map(|&id| Rule { id, bound_ck: self.bound_ck(id), desc: Self::describe(id) })
+            .collect()
+    }
+
+    /// The derived cycle bound of `id` (`None` for structural rules).
+    pub fn bound_ck(&self, id: RuleId) -> Option<Cycle> {
+        match id {
+            RuleId::Trcd => Some(self.trcd),
+            RuleId::Trp => Some(self.trp),
+            RuleId::Tras => Some(self.tras),
+            RuleId::Trc => Some(self.trc),
+            RuleId::TccdS => Some(self.tccd_s),
+            RuleId::TccdL => Some(self.tccd_l),
+            RuleId::TrrdS => Some(self.trrd_s),
+            RuleId::TrrdL => Some(self.trrd_l),
+            RuleId::Tfaw => Some(self.tfaw),
+            RuleId::Twr => Some(self.wr_to_pre),
+            RuleId::Trtp => Some(self.rd_to_pre),
+            RuleId::TwtrS => Some(self.wr_to_rd_s),
+            RuleId::TwtrL => Some(self.wr_to_rd_l),
+            RuleId::Trtw => Some(self.rd_to_wr),
+            RuleId::Trfc => Some(self.trfc),
+            RuleId::TrefiMax => Some(self.trefi_max),
+            RuleId::ActOpenBank
+            | RuleId::CasClosedBank
+            | RuleId::CasRowMismatch
+            | RuleId::RefOpenBank => None,
+        }
+    }
+
+    fn describe(id: RuleId) -> &'static str {
+        match id {
+            RuleId::Trcd => "ACT to RD/WR CAS, same bank",
+            RuleId::Trp => "PRE (or auto-precharge completion) to ACT, same bank",
+            RuleId::Tras => "ACT to PRE, same bank",
+            RuleId::Trc => "ACT to ACT, same bank",
+            RuleId::TccdS => "CAS to CAS, different bank group",
+            RuleId::TccdL => "CAS to CAS, same bank group",
+            RuleId::TrrdS => "ACT to ACT, different bank group",
+            RuleId::TrrdL => "ACT to ACT, same bank group",
+            RuleId::Tfaw => "at most 4 ACTs per rolling tFAW window",
+            RuleId::Twr => "WR CAS to PRE, same bank (CWL + BL/2 + tWR)",
+            RuleId::Trtp => "RD CAS to PRE, same bank",
+            RuleId::TwtrS => "WR CAS to RD CAS, different bank group (CWL + BL/2 + tWTR_S)",
+            RuleId::TwtrL => "WR CAS to RD CAS, same bank group (CWL + BL/2 + tWTR_L)",
+            RuleId::Trtw => "RD CAS to WR CAS bus turnaround (CL + BL/2 + 2 - CWL)",
+            RuleId::Trfc => "REF to any command",
+            RuleId::TrefiMax => "REF to REF at most 9 x tREFI (8 postponed refreshes)",
+            RuleId::ActOpenBank => "ACT to a bank with an open row",
+            RuleId::CasClosedBank => "RD/WR to a precharged bank",
+            RuleId::CasRowMismatch => "RD/WR row differs from the open row",
+            RuleId::RefOpenBank => "REF while a bank is open",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpeedBin;
+
+    #[test]
+    fn every_rule_has_a_unique_stable_id() {
+        let mut seen = std::collections::HashSet::new();
+        for id in RuleId::ALL {
+            assert!(seen.insert(id.id()), "duplicate rule id {}", id.id());
+            assert_eq!(RuleId::ALL[id.index()], id);
+        }
+        assert_eq!(seen.len(), RuleId::ALL.len());
+    }
+
+    #[test]
+    fn bounds_derive_from_the_timing_table() {
+        let t = TimingParams::for_bin(SpeedBin::Ddr4_1600);
+        let rb = Rulebook::from_timing(&t);
+        assert_eq!(rb.trcd, 11);
+        assert_eq!(rb.trc, rb.tras + rb.trp);
+        assert_eq!(rb.wr_to_pre, (t.cwl + t.burst_cycles + t.twr) as Cycle);
+        assert_eq!(rb.wr_to_rd_l, t.wr_to_rd(true) as Cycle);
+        assert_eq!(rb.trefi_max, 9 * t.trefi as Cycle);
+    }
+
+    #[test]
+    fn rule_table_is_complete_and_ordered() {
+        let rb = Rulebook::from_timing(&TimingParams::for_bin(SpeedBin::Ddr4_2400));
+        let rules = rb.rules();
+        assert_eq!(rules.len(), RuleId::ALL.len());
+        for (rule, id) in rules.iter().zip(RuleId::ALL) {
+            assert_eq!(rule.id, id);
+            assert!(!rule.desc.is_empty());
+            // timing rules carry their derived bound; structural rules none
+            assert_eq!(rule.bound_ck.is_none(), matches!(
+                id,
+                RuleId::ActOpenBank
+                    | RuleId::CasClosedBank
+                    | RuleId::CasRowMismatch
+                    | RuleId::RefOpenBank
+            ));
+        }
+    }
+
+    #[test]
+    fn bounds_scale_with_speed_bin() {
+        let a = Rulebook::from_timing(&TimingParams::for_bin(SpeedBin::Ddr4_1600));
+        let b = Rulebook::from_timing(&TimingParams::for_bin(SpeedBin::Ddr4_2400));
+        assert!(b.trfc > a.trfc);
+        assert!(b.trefi_max > a.trefi_max);
+        assert!(b.trcd > a.trcd);
+    }
+}

@@ -143,7 +143,7 @@ impl Cli {
         // subcommand = first non-dash token if declared
         if let Some(first) = it.peek() {
             if !first.starts_with('-') && self.commands.iter().any(|(c, _)| *c == first.as_str()) {
-                args.command = Some(it.next().unwrap().clone());
+                args.command = Some(it.next().expect("peeked above").clone());
             }
         }
         while let Some(tok) = it.next() {

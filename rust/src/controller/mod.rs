@@ -49,6 +49,7 @@ pub use sched::{SchedEngine, SchedKind, SchedPolicy};
 
 use std::collections::VecDeque;
 
+use crate::check::{Auditor, StreamStart};
 use crate::config::ControllerParams;
 use crate::ddr4::{Cmd, Cycle, DdrDevice, DramGeometry, TimingParams};
 use crate::obs::{CmdTrace, TraceCmd, TraceEvent};
@@ -121,6 +122,10 @@ pub struct MemController {
     /// enabled at runtime (`--cmd-trace` / host `TRACEDUMP`). `None`
     /// (the default) keeps tracing entirely off the hot path.
     cmd_trace: Option<CmdTrace>,
+    /// Live protocol auditor tapping the same issue funnel when armed
+    /// (`--audit` / host `AUDIT`). Observation-only, like the trace
+    /// ring: `None` (the default) costs one branch per issued command.
+    auditor: Option<Auditor>,
 }
 
 impl MemController {
@@ -146,6 +151,7 @@ impl MemController {
             mode_entered: 0,
             stats: CtrlStats::default(),
             cmd_trace: None,
+            auditor: None,
         }
     }
 
@@ -173,12 +179,36 @@ impl MemController {
         self.cmd_trace.as_ref()
     }
 
-    /// Record `cmd` into the trace ring (when armed), then issue it to
-    /// the device — the single funnel every controller issue point goes
-    /// through, so the trace can never miss a command class.
+    /// Arm the live protocol auditor (replacing any previous one). It
+    /// sees every command from this point on — no ring in between. A
+    /// device that has already issued commands yields a truncated
+    /// stream (violations still detected, but no CLEAN certificate);
+    /// arming before the first batch audits the complete stream.
+    pub fn enable_audit(&mut self) {
+        let s = self.device.stats();
+        let issued = s.acts + s.pres + s.reads + s.writes + s.refreshes;
+        let start =
+            if issued == 0 { StreamStart::Complete } else { StreamStart::Truncated };
+        self.auditor = Some(Auditor::new(self.device.timing(), start));
+    }
+
+    /// The live auditor, when armed. Reading is non-destructive: the
+    /// auditor keeps accumulating across batches until re-armed or the
+    /// controller is rebuilt.
+    pub fn auditor(&self) -> Option<&Auditor> {
+        self.auditor.as_ref()
+    }
+
+    /// Record `cmd` into the trace ring and/or the live auditor (when
+    /// armed), then issue it to the device — the single funnel every
+    /// controller issue point goes through, so neither observer can
+    /// miss a command class.
     fn issue_cmd(&mut self, cmd: Cmd, now: Cycle) -> Cycle {
-        if self.cmd_trace.is_some() {
+        if self.cmd_trace.is_some() || self.auditor.is_some() {
             let ev = self.trace_event(cmd, now);
+            if let Some(auditor) = self.auditor.as_mut() {
+                auditor.observe(&ev);
+            }
             if let Some(trace) = self.cmd_trace.as_mut() {
                 trace.record(ev);
             }
@@ -200,11 +230,13 @@ impl MemController {
             Cmd::Pre { bank } => {
                 (TraceCmd::Pre, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
             }
-            Cmd::Rd { bank, .. } => {
-                (TraceCmd::Rd, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
+            Cmd::Rd { bank, auto_pre, .. } => {
+                let tcmd = if auto_pre { TraceCmd::Rda } else { TraceCmd::Rd };
+                (tcmd, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
             }
-            Cmd::Wr { bank, .. } => {
-                (TraceCmd::Wr, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
+            Cmd::Wr { bank, auto_pre, .. } => {
+                let tcmd = if auto_pre { TraceCmd::Wra } else { TraceCmd::Wr };
+                (tcmd, group_of(bank), bank, self.device.open_row(bank).unwrap_or(0))
             }
             Cmd::PreAll => (TraceCmd::PreAll, 0, 0, 0),
             Cmd::Ref => (TraceCmd::Ref, 0, 0, 0),
@@ -633,9 +665,9 @@ impl MemController {
         let t = self.device.timing();
         let (cl, cwl, burst) = (t.cl, t.cwl, t.burst_cycles);
         let req = if is_write {
-            self.write_q.remove(pick.index).unwrap()
+            self.write_q.remove(pick.index).expect("scheduler pick indexes the write queue")
         } else {
-            self.read_q.remove(pick.index).unwrap()
+            self.read_q.remove(pick.index).expect("scheduler pick indexes the read queue")
         };
         self.index.on_remove(&req, if is_write { &self.write_q } else { &self.read_q });
         let cmd = if is_write {

@@ -5,7 +5,7 @@
 //! ([`super::device::DdrDevice`]) adds the cross-bank constraints
 //! (tRRD/tFAW/tCCD/turnarounds/refresh).
 
-use super::Cycle;
+use super::{invariant, Cycle};
 use crate::ddr4::timing::TimingParams;
 
 /// State of one DRAM bank.
@@ -44,8 +44,12 @@ impl Bank {
 
     /// Record an ACT at `now`.
     pub fn on_act(&mut self, row: u32, now: Cycle, t: &TimingParams) {
-        debug_assert!(self.is_closed(), "ACT to open bank");
-        debug_assert!(now >= self.earliest_act, "ACT violates tRC/tRP");
+        invariant!(self.is_closed(), "ACT_OPEN_BANK: ACT to open bank");
+        invariant!(
+            now >= self.earliest_act,
+            "tRC/tRP: ACT @{now} before bank gate @{}",
+            self.earliest_act
+        );
         self.open_row = Some(row);
         self.last_act = now;
         self.earliest_act = now + t.trc as Cycle;
@@ -56,7 +60,11 @@ impl Bank {
 
     /// Record a PRE at `now`.
     pub fn on_pre(&mut self, now: Cycle, t: &TimingParams) {
-        debug_assert!(now >= self.earliest_pre, "PRE violates tRAS/tRTP/tWR");
+        invariant!(
+            now >= self.earliest_pre,
+            "tRAS/tRTP/tWR: PRE @{now} before bank gate @{}",
+            self.earliest_pre
+        );
         self.open_row = None;
         // next ACT must honour both tRP from this PRE and tRC from last ACT
         self.earliest_act = self.earliest_act.max(now + t.trp as Cycle);
@@ -65,8 +73,12 @@ impl Bank {
     /// Record a read CAS at `now`. With `auto_pre`, the bank self-closes
     /// and the next ACT is gated by tRTP + tRP.
     pub fn on_rd(&mut self, now: Cycle, auto_pre: bool, t: &TimingParams) {
-        debug_assert!(!self.is_closed(), "RD to closed bank");
-        debug_assert!(now >= self.earliest_cas, "RD violates tRCD");
+        invariant!(!self.is_closed(), "CAS_CLOSED_BANK: RD to closed bank");
+        invariant!(
+            now >= self.earliest_cas,
+            "tRCD: RD @{now} before CAS gate @{}",
+            self.earliest_cas
+        );
         // A later PRE must wait tRTP after this read.
         self.earliest_pre = self.earliest_pre.max(now + t.rd_to_pre() as Cycle);
         if auto_pre {
@@ -80,8 +92,12 @@ impl Bank {
 
     /// Record a write CAS at `now` (see [`Self::on_rd`]).
     pub fn on_wr(&mut self, now: Cycle, auto_pre: bool, t: &TimingParams) {
-        debug_assert!(!self.is_closed(), "WR to closed bank");
-        debug_assert!(now >= self.earliest_cas, "WR violates tRCD");
+        invariant!(!self.is_closed(), "CAS_CLOSED_BANK: WR to closed bank");
+        invariant!(
+            now >= self.earliest_cas,
+            "tRCD: WR @{now} before CAS gate @{}",
+            self.earliest_cas
+        );
         self.earliest_pre = self.earliest_pre.max(now + t.wr_to_pre() as Cycle);
         if auto_pre {
             self.open_row = None;
@@ -95,7 +111,7 @@ impl Bank {
     /// Refresh completed at `now` (banks were all precharged before REF):
     /// no ACT until tRFC elapses.
     pub fn on_refresh(&mut self, now: Cycle, t: &TimingParams) {
-        debug_assert!(self.is_closed(), "REF with open bank");
+        invariant!(self.is_closed(), "REF_OPEN_BANK: REF with open bank");
         self.earliest_act = self.earliest_act.max(now + t.trfc as Cycle);
     }
 

@@ -20,7 +20,7 @@ use super::bank::Bank;
 use super::command::Cmd;
 use super::geometry::DramGeometry;
 use super::timing::TimingParams;
-use super::Cycle;
+use super::{invariant, Cycle};
 
 /// Cross-bank device state for one DDR4 channel.
 #[derive(Debug, Clone)]
@@ -96,7 +96,7 @@ impl DdrDevice {
     /// New idle device. The first refresh falls one tREFI after reset.
     pub fn new(t: TimingParams, geo: DramGeometry) -> Self {
         let banks = vec![Bank::default(); geo.banks() as usize];
-        debug_assert!(banks.len() <= 64, "open_mask packs one bit per bank");
+        invariant!(banks.len() <= 64, "OPEN_MASK_WIDTH: open_mask packs one bit per bank");
         let groups = geo.bank_groups as usize;
         Self {
             t,
@@ -247,9 +247,9 @@ impl DdrDevice {
             Cmd::Ref => {
                 // REF needs every bank precharged; PREs must have landed.
                 for b in &self.banks {
-                    debug_assert!(
+                    invariant!(
                         b.is_closed(),
-                        "REF legality queried with open banks; issue PREA first"
+                        "REF_OPEN_BANK: REF legality queried with open banks; issue PREA first"
                     );
                     at = at.max(b.earliest_act.saturating_sub(self.t.trp as Cycle));
                 }
@@ -294,7 +294,7 @@ impl DdrDevice {
     /// the cycle at which the command's data phase completes (reads: last
     /// data beat on the bus; writes: end of the write burst; others: `now`).
     pub fn issue(&mut self, cmd: Cmd, now: Cycle) -> Cycle {
-        debug_assert!(self.can_issue(cmd, now), "illegal {cmd} at {now}");
+        invariant!(self.can_issue(cmd, now), "CMD_LEGALITY: illegal {cmd} at {now}");
         match cmd {
             Cmd::Act { bank, row } => {
                 let g = self.group_of(bank);
@@ -350,7 +350,7 @@ impl DdrDevice {
                 now + (self.t.cwl + self.t.burst_cycles) as Cycle
             }
             Cmd::Ref => {
-                debug_assert_eq!(self.open_mask, 0, "REF requires all banks closed");
+                invariant!(self.open_mask == 0, "REF_OPEN_BANK: REF requires all banks closed");
                 for b in &mut self.banks {
                     b.on_refresh(now, &self.t);
                 }

@@ -181,7 +181,8 @@ impl MappingPolicy {
             seen[f.idx()] = true;
         }
         if xor_hash {
-            let at = |f: Field| order.iter().position(|o| *o == f).unwrap();
+            let at =
+                |f: Field| order.iter().position(|o| *o == f).expect("order holds all four fields");
             if at(Field::Row) > at(Field::Group) || at(Field::Row) > at(Field::Bank) {
                 return None;
             }
@@ -242,7 +243,10 @@ impl MappingPolicy {
         // A 3-token order with a bare `Ba` treats it as the flat bank:
         // the group field slots in directly above the bank field.
         if fields.len() == 3 && fields.contains(&Field::Bank) && !fields.contains(&Field::Group) {
-            let at = fields.iter().position(|f| *f == Field::Bank).unwrap();
+            let at = fields
+                .iter()
+                .position(|f| *f == Field::Bank)
+                .expect("contains(Bank) checked above");
             fields.insert(at, Field::Group);
         }
         if fields.len() != 4 {
@@ -334,7 +338,11 @@ impl MappingPolicy {
     /// the field sizes below `Ro` in the interleave order. The
     /// bank-conflict generator derives its adversarial stride from this.
     pub fn row_step_bursts(&self, s: &FieldSizes) -> u64 {
-        let at = self.order.iter().position(|f| *f == Field::Row).unwrap();
+        let at = self
+            .order
+            .iter()
+            .position(|f| *f == Field::Row)
+            .expect("order holds all four fields");
         self.order[at + 1..].iter().map(|f| f.size(s).max(1)).product()
     }
 
@@ -350,7 +358,9 @@ impl MappingPolicy {
         if self.xor_hash {
             return s.banks();
         }
-        let at = |f: Field| self.order.iter().position(|o| *o == f).unwrap();
+        let at = |f: Field| {
+            self.order.iter().position(|o| *o == f).expect("order holds all four fields")
+        };
         let below = at(Field::Col).max(at(Field::Row));
         self.order[below + 1..]
             .iter()
@@ -366,7 +376,9 @@ impl MappingPolicy {
     /// the pathological row-thrash orders like `CoBaBgRo`. Sets the
     /// amortization window of the analytic model's row-reopen cost.
     pub fn seq_row_visit_bursts(&self, s: &FieldSizes) -> u64 {
-        let at = |f: Field| self.order.iter().position(|o| *o == f).unwrap();
+        let at = |f: Field| {
+            self.order.iter().position(|o| *o == f).expect("order holds all four fields")
+        };
         if at(Field::Col) > at(Field::Row) {
             s.col_bursts.max(1)
         } else {

@@ -23,6 +23,22 @@ pub use geometry::{DramAddr, DramGeometry, BURST_LEN};
 pub use mapping::{DramCoord, Field, FieldSizes, MappingPolicy};
 pub use timing::TimingParams;
 
+/// Named protocol invariant, checked inside the device/bank state
+/// machines. Compiled like `debug_assert!` by default (free in release
+/// builds), but the `strict-invariants` cargo feature — which CI enables
+/// for the test suite — keeps the checks in optimized builds too, so the
+/// model can never silently drift from the JEDEC rules it claims to
+/// enforce. The independent `check::` auditor re-derives the same rules
+/// from `ddr4::timing` alone and never relies on these assertions.
+macro_rules! invariant {
+    ($cond:expr, $($arg:tt)+) => {
+        if cfg!(any(debug_assertions, feature = "strict-invariants")) {
+            assert!($cond, $($arg)+);
+        }
+    };
+}
+pub(crate) use invariant;
+
 /// Simulation time in DRAM clock cycles (tCK units).
 pub type Cycle = u64;
 

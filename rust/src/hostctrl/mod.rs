@@ -46,6 +46,7 @@
 //! STREAM ON|OFF                → OK STREAM ON   (heartbeats on pooled runs)
 //! METRICS <ch>                 → OK METRICS CH=0 WINDOW=.. CLOSED=.. [LAST_START=..]
 //! TRACEDUMP <ch>               → TRACE <cycle> <ch> <cmd> ... lines, then OK TRACEDUMP
+//! AUDIT <ch>                   → OK AUDIT CH=0 EVENTS=.. VIOLATIONS=.. STATUS=CLEAN
 //! HELP                         → OK <command list>
 //! QUIT                         → OK BYE (closes the session)
 //! ```

@@ -59,6 +59,8 @@ pub enum Request {
     Metrics { ch: usize },
     /// `TRACEDUMP <ch>` — arm (first call) / dump the DRAM command trace.
     TraceDump { ch: usize },
+    /// `AUDIT <ch>` — arm (first call) / summarize the JEDEC protocol audit.
+    Audit { ch: usize },
     /// `HELP` — list the commands (derived from [`COMMANDS`]).
     Help,
     /// `QUIT` — end the session.
@@ -83,6 +85,7 @@ impl Request {
             Request::Stream { .. } => "STREAM",
             Request::Metrics { .. } => "METRICS",
             Request::TraceDump { .. } => "TRACEDUMP",
+            Request::Audit { .. } => "AUDIT",
             Request::Help => "HELP",
             Request::Quit => "QUIT",
         }
@@ -161,6 +164,11 @@ pub enum Response {
     /// like heartbeats, data lines precede the reply so clients read
     /// until the `OK`/`ERR` line.
     TraceDump { ch: usize, events: Vec<TraceEvent>, dropped: u64 },
+    /// `OK AUDIT CH=<ch> EVENTS=<n> DROPPED=<n> VIOLATIONS=<n> STATUS=<s>`
+    /// — one-line verdict of the channel's armed JEDEC protocol auditor
+    /// (first call arms it and answers `EVENTS=0 ... STATUS=CLEAN` or
+    /// `STATUS=TRUNCATED` when armed after commands already issued).
+    Audit { ch: usize, events: u64, dropped: u64, violations: u64, status: String },
     /// `OK COMMANDS: ...` (derived from [`COMMANDS`]).
     Help,
     /// `OK BYE`
@@ -293,6 +301,13 @@ pub const COMMANDS: &[CommandInfo] = &[
         errors: "bad/missing channel",
     },
     CommandInfo {
+        name: "AUDIT",
+        syntax: "AUDIT <ch>",
+        reply: "OK AUDIT CH=<ch> EVENTS=<n> DROPPED=<n> VIOLATIONS=<n> STATUS=<CLEAN|TRUNCATED|\
+                VIOLATIONS>  (first call arms the JEDEC protocol auditor; observation-only)",
+        errors: "bad/missing channel",
+    },
+    CommandInfo {
         name: "HELP",
         syntax: "HELP",
         reply: "OK COMMANDS: <command list>",
@@ -353,6 +368,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "RESET" => Ok(Request::Reset { ch: parse_channel_tok(toks.next())? }),
         "METRICS" => Ok(Request::Metrics { ch: parse_channel_tok(toks.next())? }),
         "TRACEDUMP" => Ok(Request::TraceDump { ch: parse_channel_tok(toks.next())? }),
+        "AUDIT" => Ok(Request::Audit { ch: parse_channel_tok(toks.next())? }),
         "STREAM" => match toks.next().map(str::to_ascii_uppercase).as_deref() {
             Some("ON") | Some("1") => Ok(Request::Stream { on: true }),
             Some("OFF") | Some("0") => Ok(Request::Stream { on: false }),
@@ -387,6 +403,7 @@ pub fn render_request(req: &Request) -> String {
         Request::Stream { on } => format!("STREAM {}", if *on { "ON" } else { "OFF" }),
         Request::Metrics { ch } => format!("METRICS {ch}"),
         Request::TraceDump { ch } => format!("TRACEDUMP {ch}"),
+        Request::Audit { ch } => format!("AUDIT {ch}"),
     }
 }
 
@@ -502,6 +519,10 @@ pub fn render_response(resp: &Response) -> String {
             ));
             out
         }
+        Response::Audit { ch, events, dropped, violations, status } => format!(
+            "OK AUDIT CH={ch} EVENTS={events} DROPPED={dropped} VIOLATIONS={violations} \
+             STATUS={status}"
+        ),
         Response::Help => {
             let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
             format!("OK COMMANDS: {}", names.join(" "))
@@ -547,6 +568,7 @@ mod tests {
             Request::Stream { on: true },
             Request::Metrics { ch: 0 },
             Request::TraceDump { ch: 1 },
+            Request::Audit { ch: 0 },
             Request::Help,
             Request::Quit,
         ]
@@ -697,6 +719,21 @@ mod tests {
         // arming call: no events yet, still a well-formed OK line
         let armed = render_response(&Response::TraceDump { ch: 0, events: vec![], dropped: 0 });
         assert_eq!(armed, "OK TRACEDUMP CH=0 EVENTS=0 DROPPED=0");
+    }
+
+    #[test]
+    fn audit_response_renders_one_verdict_line() {
+        let r = Response::Audit {
+            ch: 1,
+            events: 512,
+            dropped: 0,
+            violations: 2,
+            status: "VIOLATIONS".into(),
+        };
+        assert_eq!(
+            render_response(&r),
+            "OK AUDIT CH=1 EVENTS=512 DROPPED=0 VIOLATIONS=2 STATUS=VIOLATIONS"
+        );
     }
 
     #[test]

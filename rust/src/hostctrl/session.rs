@@ -307,6 +307,21 @@ impl Session {
                     dropped: trace.dropped(),
                 })
             }
+            Request::Audit { ch } => {
+                self.check_channel(*ch)?;
+                // first call arms the auditor (observation-only; commands
+                // issued before arming make the verdict TRUNCATED, never a
+                // false CLEAN) — enable_audit is idempotent like the trace
+                self.platform.enable_audit(*ch).map_err(|e| e.to_string())?;
+                let auditor = self.platform.auditor(*ch).expect("auditor armed above");
+                Ok(Response::Audit {
+                    ch: *ch,
+                    events: auditor.events(),
+                    dropped: 0,
+                    violations: crate::check::report::total_violations(auditor),
+                    status: crate::check::report::status(auditor, 0).as_str().to_string(),
+                })
+            }
             Request::Quit => Ok(Response::Bye),
         }
     }
@@ -376,7 +391,7 @@ impl Session {
                         // enrich the heartbeat with the most recently
                         // closed telemetry window, when the run has one
                         let live = pending.live_telemetry().and_then(|shared| {
-                            let snap = shared.lock().unwrap();
+                            let snap = shared.lock().expect("telemetry mutex poisoned");
                             snap.last.as_ref().map(|w| ProgressLive {
                                 bw_gbs: window_bw_gbs(w, axi_ns),
                                 qd: w.queue_depth,
@@ -626,6 +641,29 @@ mod tests {
         assert_eq!(s.handle_line("TRACEDUMP 0"), dump, "dump must be non-destructive");
         assert!(s.handle_line("METRICS 9").starts_with("ERR channel 9 out of range"));
         assert!(s.handle_line("TRACEDUMP 9").starts_with("ERR channel 9 out of range"));
+    }
+
+    #[test]
+    fn audit_flow_certifies_clean_runs_and_flags_mid_session_arming() {
+        let mut s = pooled(2, 1, SessionLimits::UNLIMITED);
+        s.handle_line("CFG 0 OP=R ADDR=SEQ BURST=8 BATCH=256");
+        // arming before any command issues: complete stream, vacuously clean
+        assert_eq!(
+            s.handle_line("AUDIT 0"),
+            "OK AUDIT CH=0 EVENTS=0 DROPPED=0 VIOLATIONS=0 STATUS=CLEAN"
+        );
+        assert!(s.handle_line("RUN 0").starts_with("OK RUN CH=0"));
+        let r = s.handle_line("AUDIT 0");
+        assert!(r.starts_with("OK AUDIT CH=0 EVENTS="), "{r}");
+        assert!(!r.contains("EVENTS=0 "), "{r}");
+        assert!(r.ends_with("VIOLATIONS=0 STATUS=CLEAN"), "{r}");
+        // arming a channel that already issued commands can never certify
+        // clean: the auditor saw a truncated prefix, so it says so
+        s.handle_line("CFG 1 OP=R ADDR=SEQ BURST=8 BATCH=64");
+        assert!(s.handle_line("RUN 1").starts_with("OK RUN CH=1"));
+        let r = s.handle_line("AUDIT 1");
+        assert!(r.ends_with("STATUS=TRUNCATED"), "{r}");
+        assert!(s.handle_line("AUDIT 9").starts_with("ERR channel 9 out of range"));
     }
 
     #[test]

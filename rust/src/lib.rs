@@ -59,6 +59,11 @@
 //! - [`report`] — table / figure-series rendering for the paper artifacts,
 //!   plus [`report::compare`]: cross-sweep delta reports over
 //!   `BENCH_sweep.json` files (`ddr4bench compare`).
+//! - [`check`] — the independent JEDEC protocol-legality analyzer: a
+//!   declarative rulebook derived from `ddr4::timing` replayed over the
+//!   emitted command stream by a shadow state machine that shares no
+//!   code with the controller it audits (`run --audit`,
+//!   `ddr4bench audit`, host `AUDIT`).
 //!
 //! ## Quickstart
 //!
@@ -83,9 +88,12 @@
 //! assert_eq!(outcomes.len(), 12); // 2 speeds x 2 channel counts x 3 patterns
 //! ```
 
+#![forbid(unsafe_code)]
+
 pub mod analytic;
 pub mod axi;
 pub mod benchkit;
+pub mod check;
 pub mod cli;
 pub mod config;
 pub mod controller;

@@ -9,12 +9,15 @@
 //! ddr4bench run --addr chase --engine event          # event-driven time-skip core
 //! ddr4bench run --addr seq --telemetry 4096          # windowed time-series report
 //! ddr4bench run --addr bank --cmd-trace trace.csv    # DRAM command trace dump
+//! ddr4bench run --addr bank --audit                  # live JEDEC protocol audit
+//! ddr4bench audit trace.csv                          # offline audit of a trace CSV
 //! ddr4bench sweep --speeds 1600,2400 --channels 1,2 \
 //!                 --patterns strided,bank,chase --jobs 4 --out sweep-out
 //! ddr4bench sweep --maps row_col_bank,xor_hash --knobs lookahead=1,lookahead=8
 //! ddr4bench sweep --scheds fcfs,frfcfs,frfcfs-cap,closed --patterns seq,bank
 //! ddr4bench sweep --mixes "0:SEQ,BURST=32+1:CHASE,WSET=1m"  # heterogeneous axis
 //! ddr4bench sweep --telemetry 4096 --out sweep-out  # + {stem}_timeline.json artifacts
+//! ddr4bench sweep --scheds fcfs,frfcfs --audit      # legality-gated sweep (CI gate)
 //! ddr4bench run --ch 0:SEQ,BURST=32 --ch 1:CHASE,WSET=1m   # per-channel mix
 //! ddr4bench interference --ch 0:SEQ --ch 1:CHASE --ch 2:BANK # solo-vs-co-run
 //! ddr4bench compare a/BENCH_sweep.json b/BENCH_sweep.json   # cross-sweep deltas
@@ -53,6 +56,7 @@ fn cli() -> Cli {
         .command("sweep", "parallel campaign sweep (speeds x channels x maps x knobs x patterns)")
         .command("interference", "solo-vs-co-run channel-interference matrix for a --ch mix")
         .command("compare", "cross-sweep delta report from two or more BENCH_sweep.json files")
+        .command("audit", "offline JEDEC protocol audit of a `run --cmd-trace` CSV")
         .option("speed", "data rate: 1600|1866|2133|2400 (default 1600)")
         .option("channels", "memory channels 1-3 (default 1); comma list for sweep")
         .option("op", "R|W|M (default R)")
@@ -67,6 +71,8 @@ fn cli() -> Cli {
         .option("telemetry", "telemetry window in AXI cycles: run prints a timeline table, sweep \
                               adds {stem}_timeline.json artifacts")
         .option("cmd-trace", "run: record the DRAM command trace and write it to this CSV path")
+        .flag("audit", "run/sweep: arm the independent JEDEC protocol auditor (a violation \
+                        fails the command); audit: n/a (always on)")
         .multi("ch", "per-channel workload N:TOKENS,.. (repeat per channel; e.g. 0:SEQ,BURST=32)")
         .option("mix-file", "read the per-channel mix from a [channel.N]-sectioned config file")
         .option("burst", "burst length 1-128 (default 32)")
@@ -242,6 +248,9 @@ fn sweep_spec_from_args(args: &ddr4bench::cli::Args) -> Result<sweep::SweepSpec>
         }
         spec.telemetry = Some(w);
     }
+    if args.has_flag("audit") {
+        spec.audit = true;
+    }
     Ok(spec)
 }
 
@@ -331,6 +340,12 @@ fn main() -> Result<()> {
                     platform.enable_cmd_trace(ch, ddr4bench::obs::DEFAULT_TRACE_EVENTS)?;
                 }
             }
+            let audit = args.has_flag("audit");
+            if audit {
+                for ch in 0..platform.channels() {
+                    platform.enable_audit(ch)?;
+                }
+            }
             let results = platform.run_batch_mix_results(&mix)?;
             let mut survivors = Vec::new();
             let mut failed = 0usize;
@@ -377,19 +392,35 @@ fn main() -> Result<()> {
                 println!("aggregate: {:.2} GB/s", agg.total_throughput_gbs());
             }
             if let Some(path) = &trace_path {
-                let mut out = String::new();
-                for ch in 0..platform.channels() {
-                    if let Some(trace) = platform.cmd_trace(ch) {
-                        let csv = ddr4bench::obs::export::trace_csv(ch, trace);
-                        if out.is_empty() {
-                            out.push_str(&csv);
-                        } else if let Some((_, rest)) = csv.split_once('\n') {
-                            out.push_str(rest); // one shared header line
-                        }
-                    }
-                }
+                let speed = platform.design().speed.name();
+                let channels: Vec<(usize, &ddr4bench::obs::CmdTrace)> = (0..platform.channels())
+                    .filter_map(|ch| platform.cmd_trace(ch).map(|t| (ch, t)))
+                    .collect();
+                let out = ddr4bench::obs::export::trace_csv_annotated(speed, &channels);
+                let dropped: u64 = channels.iter().map(|(_, t)| t.dropped()).sum();
                 std::fs::write(path, &out)?;
                 println!("wrote DRAM command trace to {}", path.display());
+                if dropped > 0 {
+                    println!(
+                        "note: {dropped} event(s) dropped by the trace ring; \
+                         an offline audit of this CSV will report TRUNCATED"
+                    );
+                }
+            }
+            if audit {
+                let mut violated = false;
+                for ch in 0..platform.channels() {
+                    if let Some(auditor) = platform.auditor(ch) {
+                        print!("{}", ddr4bench::check::report::render(auditor, ch, 0));
+                        violated |= matches!(
+                            ddr4bench::check::report::status(auditor, 0),
+                            ddr4bench::check::Status::Violations
+                        );
+                    }
+                }
+                if violated {
+                    return Err(anyhow!("protocol audit detected JEDEC timing violations"));
+                }
             }
             if failed > 0 {
                 return Err(anyhow!(
@@ -589,13 +620,58 @@ fn main() -> Result<()> {
                     .iter()
                     .filter(|o| o.per_channel.iter().any(|s| s.telemetry.is_some()))
                     .count();
+                let audits = outcomes.iter().filter(|o| o.audit.is_some()).count();
                 println!(
-                    "wrote {} JSON + {} CSV artifacts ({} timelines) and {}",
+                    "wrote {} JSON + {} CSV artifacts ({} timelines, {} audit certificates) \
+                     and {}",
                     outcomes.len(),
                     outcomes.len(),
                     timelines,
+                    audits,
                     summary.display()
                 );
+            }
+        }
+        Some("audit") => {
+            if args.positional.is_empty() {
+                return Err(anyhow!(
+                    "audit needs a command-trace CSV, e.g. `ddr4bench audit trace.csv` \
+                     (produce one with `ddr4bench run --cmd-trace trace.csv`)"
+                ));
+            }
+            let speed_override = match args.get("speed") {
+                Some(v) => Some(SpeedBin::parse(v).ok_or_else(|| {
+                    anyhow!("--speed: unknown bin `{v}` (expected one of 1600/1866/2133/2400)")
+                })?),
+                None => None,
+            };
+            let mut violated = false;
+            for path in &args.positional {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("audit: cannot read {path}: {e}"))?;
+                let parsed = ddr4bench::check::offline::parse_trace_csv(&text)
+                    .map_err(|e| anyhow!("audit: {path}: {e}"))?;
+                let audits = ddr4bench::check::offline::audit_trace(&parsed, speed_override)
+                    .map_err(|e| anyhow!("audit: {path}: {e}"))?;
+                if audits.is_empty() {
+                    println!("{path}: no command events found");
+                    continue;
+                }
+                let speed = speed_override
+                    .or(parsed.speed)
+                    .map(|s| s.name())
+                    .unwrap_or("?");
+                println!("{path}: {speed}, {} channel(s)", audits.len());
+                for a in &audits {
+                    print!("{}", ddr4bench::check::report::render(&a.auditor, a.channel, a.dropped));
+                    violated |= matches!(
+                        ddr4bench::check::report::status(&a.auditor, a.dropped),
+                        ddr4bench::check::Status::Violations
+                    );
+                }
+            }
+            if violated {
+                return Err(anyhow!("protocol audit detected JEDEC timing violations"));
             }
         }
         Some("compare") => {

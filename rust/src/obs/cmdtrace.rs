@@ -24,8 +24,12 @@ pub enum TraceCmd {
     PreAll,
     /// Column read.
     Rd,
+    /// Column read with auto-precharge.
+    Rda,
     /// Column write.
     Wr,
+    /// Column write with auto-precharge.
+    Wra,
     /// Refresh.
     Ref,
 }
@@ -38,8 +42,25 @@ impl TraceCmd {
             TraceCmd::Pre => "PRE",
             TraceCmd::PreAll => "PREA",
             TraceCmd::Rd => "RD",
+            TraceCmd::Rda => "RDA",
             TraceCmd::Wr => "WR",
+            TraceCmd::Wra => "WRA",
             TraceCmd::Ref => "REF",
+        }
+    }
+
+    /// Parse a compact name back into a command (trace-CSV ingestion).
+    pub fn parse(name: &str) -> Option<TraceCmd> {
+        match name {
+            "ACT" => Some(TraceCmd::Act),
+            "PRE" => Some(TraceCmd::Pre),
+            "PREA" => Some(TraceCmd::PreAll),
+            "RD" => Some(TraceCmd::Rd),
+            "RDA" => Some(TraceCmd::Rda),
+            "WR" => Some(TraceCmd::Wr),
+            "WRA" => Some(TraceCmd::Wra),
+            "REF" => Some(TraceCmd::Ref),
+            _ => None,
         }
     }
 }
@@ -145,18 +166,22 @@ mod tests {
     }
 
     #[test]
-    fn cmd_names_are_compact() {
-        let names: Vec<&str> = [
+    fn cmd_names_are_compact_and_roundtrip() {
+        let all = [
             TraceCmd::Act,
             TraceCmd::Pre,
             TraceCmd::PreAll,
             TraceCmd::Rd,
+            TraceCmd::Rda,
             TraceCmd::Wr,
+            TraceCmd::Wra,
             TraceCmd::Ref,
-        ]
-        .iter()
-        .map(|c| c.name())
-        .collect();
-        assert_eq!(names, vec!["ACT", "PRE", "PREA", "RD", "WR", "REF"]);
+        ];
+        let names: Vec<&str> = all.iter().map(|c| c.name()).collect();
+        assert_eq!(names, vec!["ACT", "PRE", "PREA", "RD", "RDA", "WR", "WRA", "REF"]);
+        for c in all {
+            assert_eq!(TraceCmd::parse(c.name()), Some(c));
+        }
+        assert_eq!(TraceCmd::parse("NOP"), None);
     }
 }

@@ -11,6 +11,40 @@ pub const TIMELINE_SCHEMA: &str = "ddr4bench.timeline.v1";
 /// Header line of the command-trace CSV.
 pub const TRACE_CSV_HEADER: &str = "cycle,channel,cmd,bank_group,bank,row";
 
+/// Render a whole run's command rings as one CSV with `#` metadata
+/// comments carrying what the offline auditor (`ddr4bench audit`) needs
+/// to reconstruct context: the speed bin the bounds derive from, and
+/// each channel's event/drop counts so a ring that overflowed is
+/// audited as a truncated stream instead of being certified clean.
+pub fn trace_csv_annotated(speed: &str, channels: &[(usize, &CmdTrace)]) -> String {
+    let mut out = String::new();
+    out.push_str("# ddr4bench cmd-trace\n");
+    out.push_str(&format!("# speed={speed}\n"));
+    for (ch, trace) in channels {
+        out.push_str(&format!(
+            "# channel={ch} events={} dropped={}\n",
+            trace.len(),
+            trace.dropped()
+        ));
+    }
+    out.push_str(TRACE_CSV_HEADER);
+    out.push('\n');
+    for (ch, trace) in channels {
+        for ev in trace.events() {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                ev.cycle,
+                ch,
+                ev.cmd.name(),
+                ev.bank_group,
+                ev.bank,
+                ev.row
+            ));
+        }
+    }
+    out
+}
+
 /// Render a channel's command ring as compact CSV (header + one line
 /// per event, oldest first). The channel id is stamped at export time —
 /// the ring itself is per-controller and doesn't know its channel.
@@ -126,6 +160,23 @@ mod tests {
         assert_eq!(lines[0], TRACE_CSV_HEADER);
         assert_eq!(lines[1], "10,2,ACT,1,5,42");
         assert_eq!(lines[2], "14,2,RD,1,5,42");
+    }
+
+    #[test]
+    fn annotated_csv_carries_speed_and_drop_metadata() {
+        let mut a = CmdTrace::new(1);
+        a.record(TraceEvent { cycle: 10, cmd: TraceCmd::Act, bank_group: 0, bank: 1, row: 3 });
+        a.record(TraceEvent { cycle: 14, cmd: TraceCmd::Rda, bank_group: 0, bank: 1, row: 3 });
+        let b = CmdTrace::new(4);
+        let csv = trace_csv_annotated("DDR4-1600", &[(0, &a), (1, &b)]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "# ddr4bench cmd-trace");
+        assert_eq!(lines[1], "# speed=DDR4-1600");
+        assert_eq!(lines[2], "# channel=0 events=1 dropped=1");
+        assert_eq!(lines[3], "# channel=1 events=0 dropped=0");
+        assert_eq!(lines[4], TRACE_CSV_HEADER);
+        assert_eq!(lines[5], "14,0,RDA,0,1,3");
+        assert_eq!(lines.len(), 6);
     }
 
     #[test]

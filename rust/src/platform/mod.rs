@@ -41,6 +41,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::check::Auditor;
 use crate::config::{ChannelMix, DesignConfig, EngineKind, PatternConfig};
 use crate::controller::MemController;
 use crate::ddr4::{TimingParams, AXI_RATIO};
@@ -141,6 +142,28 @@ impl Platform {
     /// (non-destructive read).
     pub fn cmd_trace(&self, ch: usize) -> Option<&CmdTrace> {
         self.channels.get(ch).and_then(|c| c.controller.cmd_trace())
+    }
+
+    /// Arm the live protocol auditor on channel `ch`: from now on every
+    /// controller command issue is replayed through the independent
+    /// JEDEC shadow state machine ([`crate::check`]). Observation-only,
+    /// like tracing, and idempotent for the same reason as
+    /// [`Self::enable_cmd_trace`] — a summary request cannot clear what
+    /// an earlier arming accumulated.
+    pub fn enable_audit(&mut self, ch: usize) -> Result<()> {
+        if ch >= self.channels.len() {
+            bail!("channel {ch} out of range (design has {})", self.channels.len());
+        }
+        let controller = &mut self.channels[ch].controller;
+        if controller.auditor().is_none() {
+            controller.enable_audit();
+        }
+        Ok(())
+    }
+
+    /// Channel `ch`'s live auditor, when armed (non-destructive read).
+    pub fn auditor(&self, ch: usize) -> Option<&Auditor> {
+        self.channels.get(ch).and_then(|c| c.controller.auditor())
     }
 
     /// Inject a fault into channel `ch`'s memory (test/debug hook; proves

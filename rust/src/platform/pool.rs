@@ -110,7 +110,7 @@ impl RunPool {
     /// parked worker.
     pub(super) fn submit(&self, job: Job) {
         let idx = self.shared.next.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
-        self.shared.queues[idx].lock().unwrap().push_back(job);
+        self.shared.queues[idx].lock().expect("worker queue mutex poisoned").push_back(job);
         self.shared.wake.notify_all();
     }
 }
@@ -136,8 +136,11 @@ fn worker_loop(shared: &PoolShared, idx: usize) {
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        let guard = shared.idle.lock().unwrap();
-        let _ = shared.wake.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+        let guard = shared.idle.lock().expect("idle mutex poisoned");
+        let _ = shared
+            .wake
+            .wait_timeout(guard, Duration::from_millis(50))
+            .expect("idle mutex poisoned");
     }
 }
 
@@ -146,7 +149,7 @@ fn take_job(shared: &PoolShared, idx: usize) -> Option<Job> {
     let n = shared.queues.len();
     for offset in 0..n {
         let qi = (idx + offset) % n;
-        let mut q = shared.queues[qi].lock().unwrap();
+        let mut q = shared.queues[qi].lock().expect("worker queue mutex poisoned");
         let job = if offset == 0 { q.pop_front() } else { q.pop_back() };
         if job.is_some() {
             return job;

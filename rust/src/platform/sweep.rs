@@ -82,6 +82,13 @@ pub struct SweepSpec {
     /// measurement. When set, each job additionally emits a
     /// `{stem}_timeline.json` per-channel time-series artifact.
     pub telemetry: Option<u64>,
+    /// Arm the independent protocol auditor ([`crate::check`]) on every
+    /// channel of every job (`audit =` spec key / CLI `--audit`). Like
+    /// `telemetry`, not a cartesian axis: auditing is observation-only
+    /// by contract. Any detected violation fails the job (this is the
+    /// CI legality gate); clean jobs attach a `{stem}_audit.txt`
+    /// certificate artifact.
+    pub audit: bool,
 }
 
 /// Named pattern preset, by the names the CLI accepts
@@ -127,6 +134,7 @@ impl SweepSpec {
             mixes: Vec::new(),
             engine: EngineKind::default(),
             telemetry: None,
+            audit: false,
         }
     }
 
@@ -162,13 +170,14 @@ impl SweepSpec {
                 && key != "scheds"
                 && key != "engine"
                 && key != "telemetry"
+                && key != "audit"
                 && !key.starts_with("patterns.")
                 && !key.starts_with("knobs.")
                 && !key.starts_with("mixes.")
             {
                 bail!(
                     "unknown sweep spec key `{key}` (expected `speeds`, `channels`, \
-                     `mappings`, `scheds`, `engine`, `telemetry`, or \
+                     `mappings`, `scheds`, `engine`, `telemetry`, `audit`, or \
                      `[patterns]`/`[knobs]`/`[mixes]` entries)"
                 );
             }
@@ -197,6 +206,13 @@ impl SweepSpec {
                 bail!("telemetry: window must be >= 1 AXI cycle");
             }
             spec.telemetry = Some(w);
+        }
+        if let Some(v) = map.get("audit") {
+            spec.audit = match v.trim().to_ascii_lowercase().as_str() {
+                "true" | "on" | "1" | "yes" => true,
+                "false" | "off" | "0" | "no" => false,
+                other => bail!("audit: expected on/off, got `{other}`"),
+            };
         }
         let knobs: Vec<(String, ControllerParams)> = map
             .iter()
@@ -301,6 +317,7 @@ impl SweepSpec {
                                     sched,
                                     engine: self.engine,
                                     telemetry: self.telemetry,
+                                    audit: self.audit,
                                     label: label.clone(),
                                     cfg: cfg.clone(),
                                     mix: None,
@@ -336,6 +353,7 @@ impl SweepSpec {
                                 sched,
                                 engine: self.engine,
                                 telemetry: self.telemetry,
+                                audit: self.audit,
                                 label: label.clone(),
                                 cfg: mix.get(0).expect("mix covers channel 0").clone(),
                                 mix: Some(mix.clone()),
@@ -515,6 +533,10 @@ pub struct SweepJob {
     /// Telemetry sampling window, AXI cycles (absent from artifact
     /// labels: telemetry is observation-only by contract).
     pub telemetry: Option<u64>,
+    /// Arm the protocol auditor on every channel (absent from artifact
+    /// labels: auditing is observation-only by contract). A violation
+    /// fails the job.
+    pub audit: bool,
     /// Pattern/mix label (artifact naming).
     pub label: String,
     /// The traffic pattern to run (for mix jobs: channel 0's pattern;
@@ -536,6 +558,10 @@ pub struct SweepOutcome {
     pub agg: BatchStats,
     /// Wall-clock job duration in milliseconds.
     pub wall_ms: f64,
+    /// Rendered protocol-audit certificate (every channel CLEAN) when
+    /// the job ran with auditing armed; `None` otherwise. A job with
+    /// violations never produces an outcome — it fails instead.
+    pub audit: Option<String>,
 }
 
 fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
@@ -567,9 +593,53 @@ fn run_job(job: &SweepJob) -> Result<SweepOutcome> {
         Some(mix) => mix.clone(),
         None => ChannelMix::uniform(&job.cfg, job.channels).map_err(|e| anyhow!("{e}"))?,
     };
+    if job.audit {
+        for ch in 0..platform.channels() {
+            platform.enable_audit(ch)?;
+        }
+    }
     let per_channel = platform.run_batch_mix(&mix)?;
     let agg = Platform::aggregate(&per_channel);
-    Ok(SweepOutcome { job, per_channel, agg, wall_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    let audit = if job.audit { Some(audit_verdict(&platform)?) } else { None };
+    Ok(SweepOutcome { job, per_channel, agg, wall_ms: t0.elapsed().as_secs_f64() * 1e3, audit })
+}
+
+/// Collect every channel's audit verdict after an armed job. Any
+/// violation (end-of-stream checks included) fails the job with the
+/// offending rule IDs and the first violations spelled out — this is
+/// what the CI sweep gate trips on. All-clean returns the rendered
+/// per-channel certificate for the `{stem}_audit.txt` artifact.
+fn audit_verdict(platform: &Platform) -> Result<String> {
+    use crate::check::report;
+    let mut rendered = String::new();
+    let mut failures: Vec<String> = Vec::new();
+    for ch in 0..platform.channels() {
+        let auditor = platform
+            .auditor(ch)
+            .ok_or_else(|| anyhow!("audit armed but channel {ch} has no auditor"))?;
+        rendered.push_str(&report::render(auditor, ch, 0));
+        if report::total_violations(auditor) > 0 {
+            let mut rules: Vec<&str> =
+                auditor.violated_rules().iter().map(|r| r.id()).collect();
+            // End-of-stream findings are not in the per-event counters.
+            if !auditor.end_of_stream_check().is_empty()
+                && !rules.contains(&crate::check::RuleId::TrefiMax.id())
+            {
+                rules.push(crate::check::RuleId::TrefiMax.id());
+            }
+            let mut lines = report::violation_lines(auditor);
+            lines.truncate(3);
+            failures.push(format!(
+                "channel {ch} violated [{}]: {}",
+                rules.join(", "),
+                lines.join("; ")
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        bail!("protocol audit failed: {}", failures.join(" | "));
+    }
+    Ok(rendered)
 }
 
 /// Execute `jobs` on a work-stealing pool of `workers` threads. Each
@@ -585,7 +655,7 @@ pub fn run_sweep(jobs: Vec<SweepJob>, workers: usize) -> Result<Vec<SweepOutcome
     let queues: Vec<Mutex<VecDeque<SweepJob>>> =
         (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
     for (i, job) in jobs.into_iter().enumerate() {
-        queues[i % workers].lock().unwrap().push_back(job);
+        queues[i % workers].lock().expect("queue mutex poisoned").push_back(job);
     }
     let results: Mutex<Vec<SweepOutcome>> = Mutex::new(Vec::new());
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
@@ -598,29 +668,31 @@ pub fn run_sweep(jobs: Vec<SweepJob>, workers: usize) -> Result<Vec<SweepOutcome
                 // Take from the own queue first; the guard must drop
                 // before stealing so two stealers can never hold-and-wait
                 // on each other's locks.
-                let own = queues[w].lock().unwrap().pop_front();
+                let own = queues[w].lock().expect("queue mutex poisoned").pop_front();
                 let job = match own {
                     Some(job) => Some(job),
-                    None => (0..queues.len())
-                        .filter(|&q| q != w)
-                        .find_map(|q| queues[q].lock().unwrap().pop_back()),
+                    None => (0..queues.len()).filter(|&q| q != w).find_map(|q| {
+                        queues[q].lock().expect("queue mutex poisoned").pop_back()
+                    }),
                 };
                 let Some(job) = job else { break };
                 match run_job(&job) {
-                    Ok(outcome) => results.lock().unwrap().push(outcome),
+                    Ok(outcome) => {
+                        results.lock().expect("results mutex poisoned").push(outcome)
+                    }
                     Err(e) => errors
                         .lock()
-                        .unwrap()
+                        .expect("errors mutex poisoned")
                         .push(format!("job {} ({}): {e}", job.id, job.label)),
                 }
             });
         }
     });
-    let errors = errors.into_inner().unwrap();
+    let errors = errors.into_inner().expect("errors mutex poisoned");
     if !errors.is_empty() {
         bail!("{} sweep job(s) failed: {}", errors.len(), errors.join("; "));
     }
-    let mut outcomes = results.into_inner().unwrap();
+    let mut outcomes = results.into_inner().expect("results mutex poisoned");
     outcomes.sort_by_key(|o| o.job.id);
     Ok(outcomes)
 }
@@ -838,6 +910,9 @@ pub fn write_artifacts(outcomes: &[SweepOutcome], dir: &Path) -> Result<PathBuf>
         std::fs::write(dir.join(format!("{stem}.csv")), job_csv(o))?;
         if let Some(timeline) = timeline_artifact(o) {
             std::fs::write(dir.join(format!("{stem}_timeline.json")), timeline)?;
+        }
+        if let Some(audit) = &o.audit {
+            std::fs::write(dir.join(format!("{stem}_audit.txt")), audit)?;
         }
     }
     let summary = dir.join("BENCH_sweep.json");

@@ -516,9 +516,11 @@ impl TrafficGen {
                 }
             } else {
                 // Read data: sample for verification, then queue beats.
-                if self.store.is_some() && self.readback.len() < self.readback_cap {
-                    let data = self.store.as_ref().unwrap().read(c.burst_addr);
-                    self.readback.push((c.burst_addr, data));
+                if self.readback.len() < self.readback_cap {
+                    if let Some(store) = self.store.as_ref() {
+                        let data = store.read(c.burst_addr);
+                        self.readback.push((c.burst_addr, data));
+                    }
                 }
                 self.r_queue.push_back(RGroup {
                     txn_id: c.txn_id,

@@ -44,7 +44,7 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>> {
             continue;
         }
         let mut toks = line.split_whitespace();
-        let op = toks.next().unwrap().to_ascii_uppercase();
+        let op = toks.next().expect("line is non-empty after trim").to_ascii_uppercase();
         let is_write = match op.as_str() {
             "R" | "RD" | "READ" => false,
             "W" | "WR" | "WRITE" => true,

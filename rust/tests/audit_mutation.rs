@@ -1,0 +1,430 @@
+//! Mutation proof of the protocol-legality analyzer (`check::`).
+//!
+//! Strategy (ISSUE 10): the auditor is only trustworthy if (a) every
+//! rule in the rulebook actually fires — proven here by corrupting one
+//! command of a legal stream per rule and asserting the *specific* rule
+//! ID reports — and (b) it never cries wolf — proven by arming the live
+//! audit over the full scheduler x engine x mapping grid plus randomized
+//! patterns and asserting zero violations, then checking that a
+//! truncated trace (ring overflow) is reported as TRUNCATED rather than
+//! certified clean.
+//!
+//! All hand-built streams use the DDR4-1600 rulebook (tRCD=tRP=11,
+//! tRAS=28, tRC=39, tCCD_S/L=4/5, tRRD_S/L=5/6, tFAW=28, tWR recovery
+//! 25, tRTP=6, tWTR_S/L recovery 15/19, RD->WR 8, tRFC=208,
+//! 9*tREFI=56160) and the flat-bank convention of the trace: banks 0/1
+//! sit in group 0, bank 4 in group 1.
+
+use ddr4bench::check::mutate::{apply, Mutation};
+use ddr4bench::check::{offline, report, Auditor, RuleId, Rulebook, Status, StreamStart};
+use ddr4bench::config::{parse_pattern_config, DesignConfig, SpeedBin};
+use ddr4bench::ddr4::TimingParams;
+use ddr4bench::obs::cmdtrace::{TraceCmd, TraceEvent};
+use ddr4bench::platform::Platform;
+use ddr4bench::testkit::check;
+
+fn timing() -> TimingParams {
+    TimingParams::for_bin(SpeedBin::Ddr4_1600)
+}
+
+fn ev(cycle: u64, cmd: TraceCmd, bank_group: u32, bank: u32, row: u32) -> TraceEvent {
+    TraceEvent { cycle, cmd, bank_group, bank, row }
+}
+
+fn audit(events: &[TraceEvent]) -> Auditor {
+    let mut a = Auditor::new(&timing(), StreamStart::Complete);
+    for e in events {
+        a.observe(e);
+    }
+    a
+}
+
+/// One mutation case: a legal baseline stream, one corruption, and the
+/// rule that must catch it.
+struct Case {
+    name: &'static str,
+    rule: RuleId,
+    baseline: Vec<TraceEvent>,
+    mutation: Mutation,
+}
+
+use TraceCmd::{Act, Pre, Rd, Ref, Wr};
+
+/// The full matrix: one case per rule in the book.
+fn cases() -> Vec<Case> {
+    vec![
+        Case {
+            name: "early CAS after ACT",
+            rule: RuleId::Trcd,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1020, Rd, 0, 0, 5)],
+            // gap 10 < tRCD 11
+            mutation: Mutation::ShiftTo { index: 1, cycle: 1010 },
+        },
+        Case {
+            name: "re-ACT too soon after PRE",
+            rule: RuleId::Trp,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1048, Pre, 0, 0, 5), ev(1060, Act, 0, 0, 6)],
+            // gap 10 < tRP 11 (tRC from ACT@1000 is long satisfied)
+            mutation: Mutation::ShiftTo { index: 2, cycle: 1058 },
+        },
+        Case {
+            name: "PRE before the row aged tRAS",
+            rule: RuleId::Tras,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1028, Pre, 0, 0, 5)],
+            // gap 27 < tRAS 28
+            mutation: Mutation::ShiftTo { index: 1, cycle: 1027 },
+        },
+        Case {
+            name: "ACT-to-ACT same bank under tRC",
+            rule: RuleId::Trc,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1028, Pre, 0, 0, 5), ev(1039, Act, 0, 0, 6)],
+            // gap 38 < tRC 39 (also trips tRP; the case asserts tRC fired)
+            mutation: Mutation::ShiftTo { index: 2, cycle: 1038 },
+        },
+        Case {
+            name: "CAS-to-CAS cross group under tCCD_S",
+            rule: RuleId::TccdS,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 5),
+                ev(1005, Act, 1, 4, 5),
+                ev(1020, Rd, 0, 0, 5),
+                ev(1024, Rd, 1, 4, 5),
+            ],
+            // gap 3 < tCCD_S 4
+            mutation: Mutation::ShiftTo { index: 3, cycle: 1023 },
+        },
+        Case {
+            name: "CAS-to-CAS same group under tCCD_L",
+            rule: RuleId::TccdL,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 5),
+                ev(1006, Act, 0, 1, 5),
+                ev(1020, Rd, 0, 0, 5),
+                ev(1025, Rd, 0, 1, 5),
+            ],
+            // gap 4: legal for tCCD_S, short of tCCD_L 5
+            mutation: Mutation::ShiftTo { index: 3, cycle: 1024 },
+        },
+        Case {
+            name: "ACT-to-ACT cross group under tRRD_S",
+            rule: RuleId::TrrdS,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1005, Act, 1, 4, 5)],
+            // gap 4 < tRRD_S 5
+            mutation: Mutation::ShiftTo { index: 1, cycle: 1004 },
+        },
+        Case {
+            name: "ACT-to-ACT same group under tRRD_L",
+            rule: RuleId::TrrdL,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1006, Act, 0, 1, 5)],
+            // gap 5: legal for tRRD_S, short of tRRD_L 6
+            mutation: Mutation::ShiftTo { index: 1, cycle: 1005 },
+        },
+        Case {
+            name: "fifth ACT inside the tFAW window",
+            rule: RuleId::Tfaw,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 1),
+                ev(1005, Act, 1, 4, 1),
+                ev(1010, Act, 0, 1, 1),
+                ev(1016, Act, 1, 5, 1),
+                ev(1028, Act, 0, 2, 1),
+            ],
+            // 5th ACT 27 cycles after window start < tFAW 28 (tRRD still legal)
+            mutation: Mutation::ShiftTo { index: 4, cycle: 1027 },
+        },
+        Case {
+            name: "PRE inside write recovery",
+            rule: RuleId::Twr,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1011, Wr, 0, 0, 5), ev(1036, Pre, 0, 0, 5)],
+            // gap 24 < CWL+BL/2+tWR 25 (tRAS long satisfied)
+            mutation: Mutation::ShiftTo { index: 2, cycle: 1035 },
+        },
+        Case {
+            name: "PRE inside read-to-precharge",
+            rule: RuleId::Trtp,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1025, Rd, 0, 0, 5), ev(1031, Pre, 0, 0, 5)],
+            // gap 5 < tRTP 6 (tRAS satisfied: 30 >= 28)
+            mutation: Mutation::ShiftTo { index: 2, cycle: 1030 },
+        },
+        Case {
+            name: "WR-to-RD cross group under tWTR_S",
+            rule: RuleId::TwtrS,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 5),
+                ev(1006, Act, 1, 4, 5),
+                ev(1020, Wr, 0, 0, 5),
+                ev(1035, Rd, 1, 4, 5),
+            ],
+            // gap 14 < CWL+BL/2+tWTR_S 15
+            mutation: Mutation::ShiftTo { index: 3, cycle: 1034 },
+        },
+        Case {
+            name: "WR-to-RD same group under tWTR_L",
+            rule: RuleId::TwtrL,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 5),
+                ev(1006, Act, 0, 1, 5),
+                ev(1020, Wr, 0, 0, 5),
+                ev(1039, Rd, 0, 1, 5),
+            ],
+            // gap 18 < CWL+BL/2+tWTR_L 19
+            mutation: Mutation::ShiftTo { index: 3, cycle: 1038 },
+        },
+        Case {
+            name: "RD-to-WR bus turnaround",
+            rule: RuleId::Trtw,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 5),
+                ev(1005, Act, 1, 4, 5),
+                ev(1016, Rd, 0, 0, 5),
+                ev(1024, Wr, 1, 4, 5),
+            ],
+            // gap 7 < CL+BL/2+2-CWL 8 (tCCD_S still legal)
+            mutation: Mutation::ShiftTo { index: 3, cycle: 1023 },
+        },
+        Case {
+            name: "command inside the tRFC busy window",
+            rule: RuleId::Trfc,
+            baseline: vec![ev(100, Ref, 0, 0, 0), ev(308, Act, 0, 0, 5)],
+            // gap 207 < tRFC 208
+            mutation: Mutation::ShiftTo { index: 1, cycle: 307 },
+        },
+        Case {
+            name: "refresh postponed past 9*tREFI",
+            rule: RuleId::TrefiMax,
+            baseline: vec![ev(100, Ref, 0, 0, 0), ev(400, Ref, 0, 0, 0)],
+            // REF gap 56161 > 9*tREFI 56160
+            mutation: Mutation::ShiftTo { index: 1, cycle: 56261 },
+        },
+        Case {
+            name: "ACT to a bank whose row is open",
+            rule: RuleId::ActOpenBank,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1011, Rd, 0, 0, 5)],
+            mutation: Mutation::Insert(ev(1050, Act, 0, 0, 6)),
+        },
+        Case {
+            name: "CAS to a precharged bank",
+            rule: RuleId::CasClosedBank,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1011, Rd, 0, 0, 5)],
+            // the read lands on a bank that was never activated
+            mutation: Mutation::Retarget { index: 1, bank_group: 1, bank: 4 },
+        },
+        Case {
+            name: "CAS row disagrees with the open row",
+            rule: RuleId::CasRowMismatch,
+            baseline: vec![ev(1000, Act, 0, 0, 5), ev(1011, Rd, 0, 0, 5)],
+            mutation: Mutation::SetRow { index: 1, row: 7 },
+        },
+        Case {
+            name: "REF with a row open",
+            rule: RuleId::RefOpenBank,
+            baseline: vec![
+                ev(1000, Act, 0, 0, 5),
+                ev(1011, Rd, 0, 0, 5),
+                ev(1028, Pre, 0, 0, 5),
+                ev(1100, Ref, 0, 0, 0),
+            ],
+            // drop the precharge: the refresh now hits an open bank
+            mutation: Mutation::Remove { index: 2 },
+        },
+    ]
+}
+
+#[test]
+fn every_rule_fires_on_exactly_its_corruption() {
+    for case in cases() {
+        let clean = audit(&case.baseline);
+        assert!(
+            clean.is_clean() && clean.end_of_stream_check().is_empty(),
+            "[{}] baseline must audit clean, got: {:?}",
+            case.name,
+            clean.violations()
+        );
+
+        let mut mutated = case.baseline.clone();
+        apply(&mut mutated, case.mutation);
+        let aud = audit(&mutated);
+        let eos = aud.end_of_stream_check();
+        let fired = aud.count(case.rule) > 0 || eos.iter().any(|v| v.rule == case.rule);
+        assert!(
+            fired,
+            "[{}] expected {} to fire, saw {:?} (eos {:?})",
+            case.name,
+            case.rule.id(),
+            aud.violated_rules(),
+            eos
+        );
+        assert!(aud.total_violations() > 0, "[{}] mutation went unnoticed", case.name);
+    }
+}
+
+#[test]
+fn the_case_matrix_covers_every_rule_in_the_book() {
+    let mut covered: Vec<RuleId> = cases().iter().map(|c| c.rule).collect();
+    covered.sort();
+    covered.dedup();
+    let missing: Vec<&str> =
+        RuleId::ALL.iter().filter(|r| !covered.contains(*r)).map(|r| r.id()).collect();
+    assert!(missing.is_empty(), "rules without a mutation case: {missing:?}");
+    assert_eq!(covered.len(), RuleId::ALL.len());
+}
+
+#[test]
+fn end_of_stream_check_catches_a_refreshless_tail() {
+    let rb = Rulebook::from_timing(&timing());
+    // a single legal ACT, then silence far beyond the refresh horizon
+    let late = rb.trefi_max + 10_000;
+    let mut a = Auditor::new(&timing(), StreamStart::Complete);
+    a.observe(&ev(late, Act, 0, 0, 1));
+    assert!(a.is_clean(), "no in-stream rule should fire");
+    let eos = a.end_of_stream_check();
+    assert_eq!(eos.len(), 1, "tail must violate tREFI_MAX");
+    assert_eq!(eos[0].rule, RuleId::TrefiMax);
+    assert_eq!(report::status(&a, 0), Status::Violations);
+}
+
+/// The zero-false-positive half: a live-armed audit over the full
+/// scheduler x engine x builtin-mapping grid (patterns rotating through
+/// every address mode and op mix) must certify every run CLEAN.
+#[test]
+fn armed_audit_certifies_the_scheduler_engine_mapping_grid() {
+    let scheds = ["fcfs", "frfcfs", "frfcfs-cap2", "closed", "adaptive"];
+    let engines = ["cycle", "event"];
+    let maps = ["row_col_bank", "row_bank_col", "bank_row_col", "xor_hash"];
+    let patterns = [
+        "ADDR=SEQ OP=R BURST=8 BATCH=256",
+        "ADDR=BANK SEED=3 OP=W BURST=2 BATCH=192",
+        "ADDR=RND SEED=7 OP=M RDPCT=60 BURST=4 BATCH=256",
+        "ADDR=STRIDE STRIDE=64k OP=R BURST=4 BATCH=192",
+        "ADDR=CHASE SEED=1 WSET=256k BURST=1 BATCH=128",
+    ];
+    let mut combo = 0usize;
+    for sched in scheds {
+        for engine in engines {
+            for map in maps {
+                let pattern = patterns[combo % patterns.len()];
+                combo += 1;
+                let tokens: Vec<String> = pattern
+                    .split_whitespace()
+                    .map(str::to_string)
+                    .chain([format!("SCHED={sched}"), format!("ENGINE={engine}"), format!("MAP={map}")])
+                    .collect();
+                let refs: Vec<&str> = tokens.iter().map(String::as_str).collect();
+                let cfg = parse_pattern_config(&refs).expect(pattern);
+                let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+                platform.enable_audit(0).expect("audit arms on a fresh channel");
+                platform.run_batch(0, &cfg).expect(pattern);
+                let auditor = platform.auditor(0).expect("armed above");
+                assert_eq!(
+                    report::status(auditor, 0),
+                    Status::Clean,
+                    "[{sched}/{engine}/{map}] {pattern}: {:?}",
+                    auditor.violations()
+                );
+                assert!(auditor.events() > 0, "[{sched}/{engine}/{map}] audit saw no commands");
+            }
+        }
+    }
+}
+
+/// Randomized half of the same property: random pattern knobs, random
+/// grid point, still zero violations.
+#[test]
+fn prop_armed_audit_is_silent_on_random_legal_traffic() {
+    let scheds = ["fcfs", "frfcfs", "frfcfs-cap2", "closed", "adaptive"];
+    let engines = ["cycle", "event"];
+    let maps = ["row_col_bank", "row_bank_col", "bank_row_col", "xor_hash"];
+    let addrs = ["SEQ", "RND", "BANK", "STRIDE"];
+    check(
+        "armed audit silent on legal traffic",
+        24,
+        |rng| {
+            let addr = addrs[rng.below(addrs.len() as u64) as usize];
+            let mut toks = vec![
+                format!("ADDR={addr}"),
+                format!("SCHED={}", scheds[rng.below(5) as usize]),
+                format!("ENGINE={}", engines[rng.below(2) as usize]),
+                format!("MAP={}", maps[rng.below(4) as usize]),
+                format!("BURST={}", 1 << rng.below(4)),
+                format!("BATCH={}", 64 + rng.below(192)),
+                format!("SEED={}", rng.below(1 << 20)),
+            ];
+            match rng.below(3) {
+                0 => toks.push("OP=R".into()),
+                1 => toks.push("OP=W".into()),
+                _ => toks.push(format!("OP=M RDPCT={}", 10 + rng.below(81))),
+            }
+            if addr == "STRIDE" {
+                toks.push(format!("STRIDE={}", 64 << rng.below(8)));
+            }
+            toks.join(" ")
+        },
+        |spec| {
+            let refs: Vec<&str> = spec.split_whitespace().collect();
+            let cfg = parse_pattern_config(&refs).map_err(|e| format!("{spec}: {e}"))?;
+            let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+            platform.enable_audit(0).map_err(|e| e.to_string())?;
+            platform.run_batch(0, &cfg).map_err(|e| e.to_string())?;
+            let auditor = platform.auditor(0).expect("armed above");
+            if report::status(auditor, 0) != Status::Clean {
+                return Err(format!("violations: {:?}", auditor.violations()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Satellite: ring overflow must surface as TRUNCATED, never as a clean
+/// certificate — end to end through the annotated CSV and the offline
+/// audit path that `ddr4bench audit` drives.
+#[test]
+fn overflowed_trace_audits_as_truncated_not_clean() {
+    let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    // a 32-event ring is far too small for this batch: the prefix drops
+    platform.enable_cmd_trace(0, 32).expect("trace arms");
+    let cfg = parse_pattern_config(&["ADDR=BANK", "SEED=2", "BURST=2", "BATCH=512"]).expect("cfg");
+    platform.run_batch(0, &cfg).expect("run");
+    let trace = platform.cmd_trace(0).expect("armed above");
+    assert!(trace.dropped() > 0, "batch must overflow the tiny ring");
+
+    let speed = SpeedBin::Ddr4_1600.name();
+    let csv = ddr4bench::obs::export::trace_csv_annotated(speed, &[(0, trace)]);
+    assert!(csv.contains("dropped="), "annotated CSV must carry drop metadata: {csv}");
+
+    let parsed = offline::parse_trace_csv(&csv).expect("parses");
+    let audits = offline::audit_trace(&parsed, None).expect("audits with embedded speed");
+    assert_eq!(audits.len(), 1);
+    let a = &audits[0];
+    assert!(a.dropped > 0);
+    assert_eq!(a.auditor.start(), StreamStart::Truncated);
+    let status = report::status(&a.auditor, a.dropped);
+    assert_ne!(status, Status::Clean, "a truncated stream must never certify clean");
+    let summary = report::summary(&a.auditor, a.channel, a.dropped);
+    assert!(summary.contains(&format!("dropped={}", a.dropped)), "{summary}");
+    assert!(summary.contains("status=TRUNCATED") || summary.contains("status=VIOLATIONS"), "{summary}");
+    let rendered = report::render(&a.auditor, a.channel, a.dropped);
+    assert!(rendered.contains("cannot be certified"), "{rendered}");
+}
+
+/// The same run captured without overflow round-trips to a CLEAN offline
+/// verdict — the offline path agrees with the live auditor.
+#[test]
+fn unbroken_trace_round_trips_to_a_clean_offline_verdict() {
+    let mut platform = Platform::new(DesignConfig::single_channel(SpeedBin::Ddr4_1600));
+    platform.enable_cmd_trace(0, ddr4bench::obs::DEFAULT_TRACE_EVENTS).expect("trace arms");
+    platform.enable_audit(0).expect("audit arms");
+    let cfg = parse_pattern_config(&["ADDR=SEQ", "OP=M", "RDPCT=50", "BURST=4", "BATCH=256"])
+        .expect("cfg");
+    platform.run_batch(0, &cfg).expect("run");
+    assert_eq!(report::status(platform.auditor(0).expect("armed"), 0), Status::Clean);
+
+    let trace = platform.cmd_trace(0).expect("armed above");
+    assert_eq!(trace.dropped(), 0);
+    let csv = ddr4bench::obs::export::trace_csv_annotated(SpeedBin::Ddr4_1600.name(), &[(0, trace)]);
+    let parsed = offline::parse_trace_csv(&csv).expect("parses");
+    assert_eq!(parsed.speed, Some(SpeedBin::Ddr4_1600), "speed metadata round-trips");
+    let audits = offline::audit_trace(&parsed, None).expect("audits");
+    assert_eq!(audits.len(), 1);
+    assert_eq!(report::status(&audits[0].auditor, audits[0].dropped), Status::Clean);
+    assert_eq!(audits[0].auditor.events(), trace.len() as u64);
+}

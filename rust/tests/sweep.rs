@@ -295,6 +295,56 @@ fn heterogeneous_mix_sweep_end_to_end() {
 }
 
 #[test]
+fn audited_sweep_certifies_clean_and_writes_audit_artifacts() {
+    // The CI legality gate at test scale: arm the independent protocol
+    // auditor across a grid and require every job to come back CLEAN,
+    // with a per-job certificate artifact.
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1, 2];
+    spec.scheds = parse_sched_list("fcfs,frfcfs,closed").unwrap();
+    spec.patterns = vec![preset("bank").unwrap(), preset("seq").unwrap()];
+    for (_, cfg) in &mut spec.patterns {
+        cfg.batch_len = 64;
+    }
+    spec.audit = true;
+    let outcomes = run_sweep(spec.expand(), 4).unwrap();
+    assert_eq!(outcomes.len(), 2 * 3 * 2);
+    for o in &outcomes {
+        let audit = o.audit.as_ref().expect("audited job carries a certificate");
+        assert!(audit.contains("status=CLEAN"), "job {}: {audit}", o.job.label);
+        assert!(audit.contains("violations=0"), "job {}: {audit}", o.job.label);
+    }
+    let dir = std::env::temp_dir().join(format!("ddr4bench_audit_sweep_{}", std::process::id()));
+    let _summary = write_artifacts(&outcomes, &dir).unwrap();
+    let audits = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().ends_with("_audit.txt")
+        })
+        .count();
+    assert_eq!(audits, outcomes.len(), "one audit certificate per job");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn audit_spec_key_parses_and_unaudited_jobs_carry_no_certificate() {
+    let spec = SweepSpec::parse("speeds = 1600\nchannels = 1\naudit = on\n").unwrap();
+    assert!(spec.audit);
+    let spec = SweepSpec::parse("audit = off\n").unwrap();
+    assert!(!spec.audit);
+    assert!(SweepSpec::parse("audit = maybe\n").is_err());
+
+    let mut spec = small_grid();
+    spec.speeds = vec![SpeedBin::Ddr4_1600];
+    spec.channels = vec![1];
+    spec.patterns = vec![preset("seq").unwrap()];
+    spec.patterns[0].1.batch_len = 32;
+    let outcomes = run_sweep(spec.expand(), 1).unwrap();
+    assert!(outcomes[0].audit.is_none(), "audit off by default");
+}
+
+#[test]
 fn summary_and_job_renderers_agree() {
     let mut spec = small_grid();
     spec.speeds = vec![SpeedBin::Ddr4_1600];

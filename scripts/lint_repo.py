@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Repo structure lints, run as a CI gate (see .github/workflows/ci.yml).
+
+Because the Rust tree lives under rust/ (a non-standard cargo layout),
+cargo does NOT autodiscover integration tests or benches: a test file
+that exists on disk but is missing its [[test]] stanza in Cargo.toml is
+silently never compiled or run. These lints make that class of drift --
+and the analogous docs drift -- a loud CI failure:
+
+  1. every rust/tests/*.rs is declared as a [[test]] in Cargo.toml
+     (and every declared [[test]] path exists);
+  2. every rust/benches/*.rs is declared as a [[bench]] likewise;
+  3. every host-protocol command in hostctrl::proto::COMMANDS has a row
+     in the README's protocol reference table;
+  4. every protocol-audit rule ID in check::rules (RuleId::id) has a row
+     in the README's "Protocol audit" rule table.
+
+Stdlib only; exits nonzero with one line per finding.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def fail(errors):
+    for e in errors:
+        print(f"lint_repo: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+
+
+def declared_targets(cargo_text, kind):
+    """Map name -> path for every [[kind]] stanza in Cargo.toml."""
+    out = {}
+    blocks = re.split(r"^\[", cargo_text, flags=re.M)
+    for block in blocks:
+        if not block.startswith(f"[{kind}]]"):
+            continue
+        name = re.search(r'^name\s*=\s*"([^"]+)"', block, re.M)
+        path = re.search(r'^path\s*=\s*"([^"]+)"', block, re.M)
+        if name and path:
+            out[name.group(1)] = path.group(1)
+    return out
+
+
+def check_target_sync(cargo_text, kind, directory, errors):
+    declared = declared_targets(cargo_text, kind)
+    declared_paths = set(declared.values())
+    on_disk = sorted((ROOT / directory).glob("*.rs"))
+    for f in on_disk:
+        rel = f.relative_to(ROOT).as_posix()
+        if rel not in declared_paths:
+            errors.append(
+                f"{rel} exists but has no [[{kind}]] stanza in Cargo.toml "
+                f"(non-standard layout: cargo will silently skip it)"
+            )
+    for name, path in declared.items():
+        if not (ROOT / path).is_file():
+            errors.append(f"[[{kind}]] {name} points at missing file {path}")
+
+
+def rust_string_list(text, pattern):
+    return re.findall(pattern, text)
+
+
+def readme_table_cells(readme_text):
+    """All first-column `code` cells of markdown table rows."""
+    return set(re.findall(r"^\|\s*`([^`]+)`\s*\|", readme_text, re.M))
+
+
+def main():
+    errors = []
+    cargo = (ROOT / "Cargo.toml").read_text()
+    readme = (ROOT / "README.md").read_text()
+
+    check_target_sync(cargo, "test", "rust/tests", errors)
+    check_target_sync(cargo, "bench", "rust/benches", errors)
+
+    # host-protocol commands: one README table row per COMMANDS entry
+    proto = (ROOT / "rust/src/hostctrl/proto.rs").read_text()
+    commands = rust_string_list(proto, r'name:\s*"([A-Z]+)"')
+    if not commands:
+        errors.append("no COMMANDS entries parsed from rust/src/hostctrl/proto.rs")
+    cells = readme_table_cells(readme)
+    for cmd in commands:
+        if cmd not in cells:
+            errors.append(f"protocol command {cmd} has no README table row (| `{cmd}` | ...)")
+
+    # audit rule IDs: one README table row per RuleId::id() string
+    rules = (ROOT / "rust/src/check/rules.rs").read_text()
+    id_fn = re.search(r"pub fn id\(self\).*?\n    \}", rules, re.S)
+    if not id_fn:
+        errors.append("cannot locate RuleId::id() in rust/src/check/rules.rs")
+        fail(errors)
+    rule_ids = rust_string_list(id_fn.group(0), r'=>\s*"([^"]+)"')
+    if len(rule_ids) < 20:
+        errors.append(f"only {len(rule_ids)} rule IDs parsed from RuleId::id(); expected >= 20")
+    for rid in rule_ids:
+        if rid not in cells:
+            errors.append(f"audit rule {rid} has no README table row (| `{rid}` | ...)")
+
+    fail(errors)
+    print(
+        f"lint_repo: OK ({len(declared_targets(cargo, 'test'))} tests, "
+        f"{len(declared_targets(cargo, 'bench'))} benches, "
+        f"{len(commands)} protocol commands, {len(rule_ids)} audit rules)"
+    )
+
+
+if __name__ == "__main__":
+    main()
